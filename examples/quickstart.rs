@@ -1,0 +1,86 @@
+//! Quickstart: the full Fast-PGM pipeline from Figure 1 on one page.
+//!
+//! 1. take a known network (SURVEY) and draw training data from it,
+//! 2. recover the structure with PC-stable,
+//! 3. fit the parameters with MLE,
+//! 4. answer posterior queries exactly (junction tree) and approximately
+//!    (likelihood weighting),
+//! 5. measure learning quality (SHD) and inference quality (Hellinger).
+//!
+//! SURVEY (Scutari) is the canonical *faithful* learning target; ASIA's
+//! deterministic `either` node violates faithfulness, so PC provably
+//! cannot recover its xray/dysp edges — see `examples/diagnosis.rs` for
+//! the asia-based inference workload.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{ApproxOptions, LikelihoodWeighting};
+use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::InferenceEngine;
+use fastpgm::metrics;
+use fastpgm::network::repository;
+use fastpgm::parameter::{mle, MleOptions};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable_parallel, PcOptions};
+
+fn main() {
+    // -- data ---------------------------------------------------------
+    let truth = repository::survey();
+    let mut rng = Pcg::seed_from(2024);
+    let data = forward_sample_dataset(&truth, 50_000, &mut rng);
+    println!("sampled {} rows from {}", data.n_rows(), truth.name());
+
+    // -- structure learning -------------------------------------------
+    let opts = PcOptions {
+        alpha: 0.05,
+        threads: fastpgm::parallel::default_threads(),
+        ..Default::default()
+    };
+    let learned = pc_stable_parallel(&data, &opts);
+    let shd = metrics::shd_vs_dag_cpdag(&learned.graph, truth.dag());
+    let (prec, rec, f1) = metrics::skeleton_prf(&learned.graph, truth.dag());
+    println!(
+        "PC-stable: {} edges with {} CI tests; SHD vs true CPDAG = {shd}, \
+         skeleton P/R/F1 = {prec:.2}/{rec:.2}/{f1:.2}",
+        learned.n_edges(),
+        learned.n_tests
+    );
+    assert!(rec >= 0.8, "skeleton mostly recovered");
+
+    // -- parameter learning --------------------------------------------
+    let dag = learned
+        .graph
+        .to_dag()
+        .unwrap_or_else(|| truth.dag().clone());
+    let model = mle(&data, &dag, &MleOptions::default());
+    println!("MLE fitted {} parameters", model.n_parameters());
+
+    // -- exact inference ------------------------------------------------
+    let ev = Evidence::new()
+        .with(truth.var_index("age").unwrap(), 0) // young
+        .with(truth.var_index("occ").unwrap(), 0); // employed
+    let jt = JunctionTree::build(&model);
+    let mut exact = jt.engine();
+    let travel = truth.var_index("travel").unwrap();
+    let p_exact = exact.query(travel, &ev);
+    println!("P(travel | age=young, occ=emp)  junction-tree: {p_exact:?}");
+
+    // -- approximate inference -------------------------------------------
+    let mut lw = LikelihoodWeighting::new(
+        &model,
+        ApproxOptions { n_samples: 50_000, ..Default::default() },
+    );
+    let p_lw = lw.query(travel, &ev);
+    let h = metrics::hellinger(&p_exact, &p_lw);
+    println!("P(travel | ...)        likelihood-weighting: {p_lw:?} (Hellinger {h:.4})");
+    assert!(h < 0.05, "sampler agrees with exact engine");
+
+    // -- ground truth check ----------------------------------------------
+    let p_true = truth.brute_force_posterior(travel, &ev);
+    let h_true = metrics::hellinger(&p_exact, &p_true);
+    println!("P(travel | ...)   true network, brute force: {p_true:?} (Hellinger {h_true:.4})");
+    assert!(h_true < 0.05, "learned model close to truth");
+    println!("quickstart OK");
+}

@@ -1,0 +1,93 @@
+"""AOT compile path: lower the L2 classify model to HLO text artifacts.
+
+Run once by `make artifacts` (after the Rust `export` step wrote the
+`.fpgm` + `_meta.txt` bundles). Never imported at runtime — the Rust
+binary loads the HLO text through PJRT directly.
+
+HLO **text** is the interchange format: jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. (See /opt/xla-example/README.md.)
+
+Usage:
+    python -m compile.aot --artifacts ../artifacts [--block 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import fpgm
+from .model import make_classify_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big constant tensors as `{...}`, which would silently strip
+    # the baked CPTs from the artifact.
+    text = comp.as_hlo_text(True)
+    assert "..." not in text, "HLO printer elided a constant"
+    return text
+
+
+def compile_bundle(artifacts_dir: str, name: str, *, block_b: int) -> str:
+    """Lower one network's classify model; returns the HLO path."""
+    net = fpgm.load(os.path.join(artifacts_dir, f"{name}.fpgm"))
+    with open(os.path.join(artifacts_dir, f"{name}_meta.txt")) as f:
+        meta = fpgm.parse_meta(f.read())
+    batch = int(meta["batch"])
+    class_var = int(meta["class_var"])
+    assert int(meta["n_vars"]) == net.n_vars, f"{name}: meta/fpgm mismatch"
+
+    block = min(block_b, batch)
+    while batch % block != 0:
+        block //= 2
+    classify = make_classify_fn(net, class_var, use_pallas=True, block_b=block)
+    spec = jax.ShapeDtypeStruct((batch, net.n_vars), jnp.int32)
+    lowered = jax.jit(classify).lower(spec)
+    text = to_hlo_text(lowered)
+    out_path = os.path.join(artifacts_dir, f"{name}_classify_b{batch}.hlo.txt")
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"  {name}: B={batch} N={net.n_vars} K={net.cards[class_var]} "
+          f"block={block} -> {out_path} ({len(text)} chars)")
+    return out_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts",
+                    help="directory with .fpgm/_meta.txt bundles (from "
+                         "`fastpgm export`)")
+    ap.add_argument("--block", type=int, default=128,
+                    help="pallas batch tile size")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-output mode (unused; kept for "
+                         "Makefile compatibility)")
+    args = ap.parse_args()
+
+    metas = sorted(glob.glob(os.path.join(args.artifacts, "*_meta.txt")))
+    if not metas:
+        print(f"no *_meta.txt bundles in {args.artifacts} — "
+              f"run `cargo run --release -- export` first", file=sys.stderr)
+        sys.exit(1)
+    print(f"AOT-compiling {len(metas)} artifact(s):")
+    for meta_path in metas:
+        name = os.path.basename(meta_path)[: -len("_meta.txt")]
+        compile_bundle(args.artifacts, name, block_b=args.block)
+
+
+if __name__ == "__main__":
+    main()

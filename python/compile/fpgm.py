@@ -1,0 +1,114 @@
+"""Parser for the native `.fpgm` network format.
+
+Mirrors `rust/src/io/fpgm.rs` — the Rust `export` subcommand writes these
+files, and the AOT compile path reads them so both layers operate on the
+bit-identical network. See DESIGN.md §Artifact flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Network:
+    """A discrete Bayesian network in canonical (sorted-parent) layout."""
+
+    name: str
+    var_names: List[str]
+    cards: List[int]                 # cardinality per variable
+    parents: List[List[int]]         # sorted parent ids per variable
+    cpts: List[np.ndarray]           # [n_parent_configs, card] per variable
+
+    @property
+    def n_vars(self) -> int:
+        return len(self.cards)
+
+    def parent_strides(self, v: int) -> List[int]:
+        """Mixed-radix strides (last parent fastest), matching
+        `Cpt::parent_config_from` on the Rust side."""
+        ps = self.parents[v]
+        strides = [1] * len(ps)
+        for i in range(len(ps) - 2, -1, -1):
+            strides[i] = strides[i + 1] * self.cards[ps[i + 1]]
+        return strides
+
+    def log_joint(self, states: np.ndarray) -> float:
+        """Reference log joint probability of one complete assignment
+        (float64 — the test oracle)."""
+        total = 0.0
+        for v in range(self.n_vars):
+            cfg = 0
+            for p, s in zip(self.parents[v], self.parent_strides(v)):
+                cfg += int(states[p]) * s
+            prob = self.cpts[v][cfg, int(states[v])]
+            total += np.log(max(prob, 1e-300))
+        return total
+
+
+def parse(text: str) -> Network:
+    """Parse `.fpgm` text."""
+    lines = [
+        ln.strip()
+        for ln in text.splitlines()
+        if ln.strip() and not ln.strip().startswith("#")
+    ]
+    if not lines or lines[0] != "fpgm 1":
+        raise ValueError(f"unsupported fpgm header: {lines[:1]}")
+    name = "unnamed"
+    var_names: List[str] = []
+    cards: List[int] = []
+    parents: List[List[int]] = []
+    raw_cpts: List[np.ndarray] = []
+    saw_end = False
+    for ln in lines[1:]:
+        tok = ln.split()
+        if tok[0] == "name":
+            name = " ".join(tok[1:])
+        elif tok[0] == "var":
+            var_names.append(tok[1])
+            cards.append(int(tok[2]))
+            parents.append([])
+            raw_cpts.append(None)  # type: ignore[arg-type]
+        elif tok[0] == "parents":
+            v = int(tok[1])
+            ps = sorted(int(t) for t in tok[2:])
+            parents[v] = ps
+        elif tok[0] == "cpt":
+            v = int(tok[1])
+            raw_cpts[v] = np.array([float(t) for t in tok[2:]], dtype=np.float64)
+        elif tok[0] == "end":
+            saw_end = True
+            break
+        else:
+            raise ValueError(f"unknown fpgm directive: {tok[0]!r}")
+    if not saw_end:
+        raise ValueError("fpgm file missing 'end'")
+    cpts = []
+    for v in range(len(cards)):
+        n_cfg = int(np.prod([cards[p] for p in parents[v]])) if parents[v] else 1
+        table = raw_cpts[v]
+        if table is None or table.size != n_cfg * cards[v]:
+            raise ValueError(f"bad cpt for variable {v}")
+        cpts.append(table.reshape(n_cfg, cards[v]))
+    return Network(name, var_names, cards, parents, cpts)
+
+
+def load(path: str) -> Network:
+    with open(path) as f:
+        return parse(f.read())
+
+
+def parse_meta(text: str) -> dict:
+    """Parse a `_meta.txt` sidecar into a dict of ints/strings."""
+    out: dict = {}
+    for ln in text.splitlines():
+        ln = ln.strip()
+        if not ln or ln.startswith("#"):
+            continue
+        k, v = ln.split(None, 1)
+        out[k] = int(v) if v.strip().isdigit() else v.strip()
+    return out

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: batched CPT gather-and-accumulate.
+
+The hot spot of batched Bayesian-network scoring is, per sample and per
+node, fetching `log P(state | parent-config)` from the network's CPTs and
+summing. A scalar implementation is a pure gather — irregular, cache
+hostile (exactly the access pattern Fast-PGM's optimizations (v) and (vii)
+attack on CPUs). The TPU adaptation reorganizes the CPTs into one dense
+padded tensor `cpt_logs[N, P, C]` and converts the gather into two
+contractions that map onto the MXU:
+
+    pconf_onehot[b, n, :]  @  cpt_logs[n, :, :]   ->  sel[b, n, :]
+    sel[b, n, :]           ·  state_onehot[b, n, :]  (reduce)
+
+The batch dimension is tiled by BlockSpec so each grid step holds one
+batch tile plus the whole (small) CPT tensor in VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime executes. See DESIGN.md §Hardware-Adaptation for the VMEM / MXU
+sizing estimates on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _loglik_kernel(pcfg_ref, states_ref, cpt_ref, out_ref):
+    """One batch tile: out[b] = Σ_n cpt[n, pcfg[b,n], states[b,n]]."""
+    pc = pcfg_ref[...]          # i32[bb, N]
+    st = states_ref[...]        # i32[bb, N]
+    cl = cpt_ref[...]           # f32[N, P, C]
+    n_p = cl.shape[1]
+    n_c = cl.shape[2]
+    # One-hot over parent configurations; the contraction with cpt_logs is
+    # a batched (per-node) matmul -> MXU.
+    onehot_p = (pc[:, :, None] == jnp.arange(n_p, dtype=pc.dtype)[None, None, :])
+    onehot_p = onehot_p.astype(cl.dtype)                     # [bb, N, P]
+    sel = jnp.einsum("bnp,npc->bnc", onehot_p, cl)           # [bb, N, C]
+    onehot_c = (st[:, :, None] == jnp.arange(n_c, dtype=st.dtype)[None, None, :])
+    onehot_c = onehot_c.astype(cl.dtype)                     # [bb, N, C]
+    out_ref[...] = jnp.sum(sel * onehot_c, axis=(1, 2))      # [bb]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def batched_loglik(pcfg, states, cpt_logs, *, block_b: int = 128):
+    """Batched log-likelihood via the Pallas kernel.
+
+    Args:
+      pcfg:     i32[B, N] parent-configuration index per (sample, node).
+      states:   i32[B, N] state index per (sample, node).
+      cpt_logs: f32[N, P, C] log-CPTs, padded; entries must be finite
+                (clamp zeros before taking logs — `-inf * 0 = nan` would
+                poison the one-hot contraction).
+      block_b:  batch tile size (must divide B).
+
+    Returns:
+      f32[B] log joint probabilities.
+    """
+    b, n = pcfg.shape
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block {block_b}")
+    _, p, c = cpt_logs.shape
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _loglik_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, p, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), cpt_logs.dtype),
+        interpret=True,
+    )(pcfg, states, cpt_logs)
+
+
+def vmem_estimate_bytes(n: int, p: int, c: int, block_b: int = 128,
+                        dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf):
+    batch tile inputs + CPT tensor + both one-hot intermediates + output."""
+    tile_inputs = 2 * block_b * n * 4           # pcfg + states (i32)
+    cpt = n * p * c * dtype_bytes
+    onehots = block_b * n * (p + 2 * c) * dtype_bytes  # onehot_p, sel, onehot_c
+    out = block_b * dtype_bytes
+    return tile_inputs + cpt + onehots + out

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the L1 kernel: the same batched log-likelihood
+computed with `take_along_axis` gathers instead of one-hot contractions.
+Every kernel test asserts `batched_loglik == loglik_ref` to tight
+tolerance; the AOT model can also be compiled against this path
+(`use_pallas=False`) as an ablation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def loglik_ref(pcfg, states, cpt_logs):
+    """f32[B] log joints from i32[B,N] pcfg/states and f32[N,P,C] CPTs."""
+    # per_node[b, n] = cpt_logs[n, pcfg[b, n], states[b, n]]
+    n = cpt_logs.shape[0]
+    node_idx = jnp.arange(n)[None, :]                       # [1, N]
+    per_node = cpt_logs[node_idx, pcfg, states]             # [B, N]
+    return jnp.sum(per_node, axis=1)
+
+
+def compute_pcfg(states, parent_idx, parent_stride):
+    """i32[B, N] parent-configuration indices.
+
+    `parent_idx`/`parent_stride` are i32[N, Kmax], zero-padded; padded
+    entries contribute 0 because their stride is 0.
+    """
+    gathered = states[:, parent_idx]                        # [B, N, Kmax]
+    return jnp.sum(gathered * parent_stride[None, :, :], axis=2).astype(jnp.int32)

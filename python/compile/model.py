@@ -1,0 +1,152 @@
+"""L2 JAX model: batched class-posterior scoring over a Bayesian network.
+
+Builds, from a parsed `.fpgm` network, the jittable function
+
+    classify(states: i32[B, N]) -> f32[B, K]
+
+returning the **log joint** `log P(x_-c, class=k)` for every class value k
+(the Rust runtime applies the softmax). The network's CPTs, parent lists
+and strides are baked into the computation as constants, so the lowered
+HLO is fully self-contained. The CPT gather hot spot is the L1 Pallas
+kernel (`kernels.loglik`); everything around it (parent-config index
+arithmetic, per-class vmap) is plain JAX that XLA fuses.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .fpgm import Network
+from .kernels.loglik import batched_loglik
+from .kernels.ref import compute_pcfg, loglik_ref
+
+# Probability floor before taking logs: keeps every cpt_logs entry finite
+# (deterministic CPTs contain exact zeros; -inf would poison the one-hot
+# matmul with 0 * -inf = nan).
+PROB_FLOOR = 1e-30
+
+
+def pack_network(net: Network):
+    """Pad the network into the dense tensors the kernel consumes.
+
+    Returns (cpt_logs f32[N,P,C], parent_idx i32[N,Kmax],
+    parent_stride i32[N,Kmax]).
+    """
+    n = net.n_vars
+    max_card = max(net.cards)
+    max_cfg = max(c.shape[0] for c in net.cpts)
+    kmax = max((len(p) for p in net.parents), default=0)
+    kmax = max(kmax, 1)  # keep a real axis even for parentless networks
+
+    cpt_logs = np.zeros((n, max_cfg, max_card), dtype=np.float32)
+    parent_idx = np.zeros((n, kmax), dtype=np.int32)
+    parent_stride = np.zeros((n, kmax), dtype=np.int32)
+    for v in range(n):
+        table = np.log(np.maximum(net.cpts[v], PROB_FLOOR)).astype(np.float32)
+        cfgs, card = table.shape
+        cpt_logs[v, :cfgs, :card] = table
+        for k, (p, s) in enumerate(zip(net.parents[v], net.parent_strides(v))):
+            parent_idx[v, k] = p
+            parent_stride[v, k] = s
+    return jnp.asarray(cpt_logs), jnp.asarray(parent_idx), jnp.asarray(parent_stride)
+
+
+def make_loglik_fn(net: Network, *, use_pallas: bool = True,
+                   block_b: int = 128) -> Callable:
+    """`loglik(states: i32[B, N]) -> f32[B]` for complete assignments."""
+    cpt_logs, parent_idx, parent_stride = pack_network(net)
+
+    def loglik(states):
+        pcfg = compute_pcfg(states, parent_idx, parent_stride)
+        if use_pallas:
+            return batched_loglik(pcfg, states, cpt_logs, block_b=block_b)
+        return loglik_ref(pcfg, states, cpt_logs)
+
+    return loglik
+
+
+def affected_nodes(net: Network, class_var: int) -> list:
+    """Nodes whose family factor depends on the class value: the class
+    variable itself plus its children."""
+    aff = {class_var}
+    for v in range(net.n_vars):
+        if class_var in net.parents[v]:
+            aff.add(v)
+    return sorted(aff)
+
+
+def pack_subnetwork(net: Network, nodes: list):
+    """Pack only `nodes`' families (smaller P/C padding than the full
+    network — the class family sub-tensor is usually tiny)."""
+    max_card = max(net.cards[v] for v in nodes)
+    max_cfg = max(net.cpts[v].shape[0] for v in nodes)
+    kmax = max((len(net.parents[v]) for v in nodes), default=0)
+    kmax = max(kmax, 1)
+    a = len(nodes)
+    cpt_logs = np.zeros((a, max_cfg, max_card), dtype=np.float32)
+    parent_idx = np.zeros((a, kmax), dtype=np.int32)
+    parent_stride = np.zeros((a, kmax), dtype=np.int32)
+    for i, v in enumerate(nodes):
+        table = np.log(np.maximum(net.cpts[v], PROB_FLOOR)).astype(np.float32)
+        cfgs, card = table.shape
+        cpt_logs[i, :cfgs, :card] = table
+        for k, (p, s) in enumerate(zip(net.parents[v], net.parent_strides(v))):
+            parent_idx[i, k] = p
+            parent_stride[i, k] = s
+    return jnp.asarray(cpt_logs), jnp.asarray(parent_idx), jnp.asarray(parent_stride)
+
+
+def make_classify_fn(net: Network, class_var: int, *,
+                     use_pallas: bool = True,
+                     block_b: int = 128,
+                     use_delta: bool = True) -> Callable:
+    """`classify(states: i32[B, N]) -> f32[B, K]` — log joint per class.
+
+    With `use_delta` (the optimized default), the class-invariant part of
+    the joint is computed **once**: only the families of the class
+    variable and its children depend on the class value, so
+
+        score_k = base(class=0) - aff(class=0) + aff(class=k)
+
+    where `aff` runs the kernel over the |affected| ≤ 1 + #children nodes
+    only. Kernel node-work drops from K·N to N + K·A (the L2 "no
+    redundant recomputation" target from DESIGN.md §Perf).
+    """
+    k_classes = net.cards[class_var]
+    loglik = make_loglik_fn(net, use_pallas=use_pallas, block_b=block_b)
+    if not use_delta:
+        def classify_naive(states):
+            def score_class(k):
+                states_k = states.at[:, class_var].set(k)
+                return loglik(states_k)                      # [B]
+            scores = jax.vmap(score_class)(
+                jnp.arange(k_classes, dtype=states.dtype))
+            return (scores.T,)  # 1-tuple: matches the rust to_tuple1 unwrap
+        return classify_naive
+
+    aff = affected_nodes(net, class_var)
+    aff_arr = jnp.asarray(np.array(aff, dtype=np.int32))
+    cpt_aff, pidx_aff, pstride_aff = pack_subnetwork(net, aff)
+
+    def loglik_aff(states):
+        pcfg = compute_pcfg(states, pidx_aff, pstride_aff)   # [B, A]
+        st_local = states[:, aff_arr]                        # [B, A]
+        if use_pallas:
+            return batched_loglik(pcfg, st_local, cpt_aff, block_b=block_b)
+        return loglik_ref(pcfg, st_local, cpt_aff)
+
+    def classify(states):
+        s0 = states.at[:, class_var].set(0)
+        base0 = loglik(s0)                                   # [B]
+        def aff_class(k):
+            return loglik_aff(states.at[:, class_var].set(k))
+        affs = jax.vmap(aff_class)(
+            jnp.arange(k_classes, dtype=states.dtype))       # [K, B]
+        scores = base0[None, :] - affs[0][None, :] + affs    # [K, B]
+        return (scores.T,)
+
+    return classify

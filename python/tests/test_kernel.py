@@ -1,0 +1,103 @@
+"""L1 kernel correctness: Pallas `batched_loglik` vs the pure-jnp oracle,
+including a hypothesis sweep over shapes and contents."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.loglik import batched_loglik, vmem_estimate_bytes
+from compile.kernels.ref import compute_pcfg, loglik_ref
+
+
+def random_case(rng, b, n, p, c):
+    """Random padded inputs with the invariants the model guarantees:
+    pcfg < P, states < C, finite cpt_logs."""
+    pcfg = rng.integers(0, p, size=(b, n)).astype(np.int32)
+    states = rng.integers(0, c, size=(b, n)).astype(np.int32)
+    cpt_logs = np.log(
+        rng.uniform(1e-6, 1.0, size=(n, p, c))
+    ).astype(np.float32)
+    return jnp.asarray(pcfg), jnp.asarray(states), jnp.asarray(cpt_logs)
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    pcfg, states, cpt_logs = random_case(rng, 128, 8, 4, 3)
+    got = batched_loglik(pcfg, states, cpt_logs, block_b=64)
+    want = loglik_ref(pcfg, states, cpt_logs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_single_block():
+    rng = np.random.default_rng(1)
+    pcfg, states, cpt_logs = random_case(rng, 32, 5, 2, 2)
+    got = batched_loglik(pcfg, states, cpt_logs, block_b=32)
+    want = loglik_ref(pcfg, states, cpt_logs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_indivisible_block():
+    rng = np.random.default_rng(2)
+    pcfg, states, cpt_logs = random_case(rng, 100, 4, 2, 2)
+    with pytest.raises(ValueError):
+        batched_loglik(pcfg, states, cpt_logs, block_b=64)
+
+
+def test_handles_floored_zero_probs():
+    # Deterministic CPT entries are floored, not -inf; result stays finite.
+    pcfg = jnp.zeros((16, 2), dtype=jnp.int32)
+    states = jnp.zeros((16, 2), dtype=jnp.int32)
+    cpt_logs = jnp.full((2, 1, 2), np.log(1e-30), dtype=jnp.float32)
+    out = batched_loglik(pcfg, states, cpt_logs, block_b=16)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_blocks=st.integers(1, 3),
+    block=st.sampled_from([8, 16, 32]),
+    n=st.integers(1, 12),
+    p=st.integers(1, 9),
+    c=st.integers(2, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(b_blocks, block, n, p, c, seed):
+    """Kernel == oracle across shapes, block sizes and contents."""
+    rng = np.random.default_rng(seed)
+    b = b_blocks * block
+    pcfg, states, cpt_logs = random_case(rng, b, n, p, c)
+    got = batched_loglik(pcfg, states, cpt_logs, block_b=block)
+    want = loglik_ref(pcfg, states, cpt_logs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pcfg_matches_manual(seed):
+    """compute_pcfg against an explicit python loop."""
+    rng = np.random.default_rng(seed)
+    b, n, kmax = 7, 5, 3
+    cards = rng.integers(2, 4, size=n)
+    states = np.stack([rng.integers(0, cards[v], size=b) for v in range(n)], axis=1)
+    parent_idx = rng.integers(0, n, size=(n, kmax)).astype(np.int32)
+    # zero out some strides (padding)
+    parent_stride = rng.integers(0, 3, size=(n, kmax)).astype(np.int32)
+    got = np.asarray(
+        compute_pcfg(jnp.asarray(states.astype(np.int32)),
+                     jnp.asarray(parent_idx), jnp.asarray(parent_stride))
+    )
+    for bi in range(b):
+        for v in range(n):
+            expect = sum(
+                int(states[bi, parent_idx[v, k]]) * int(parent_stride[v, k])
+                for k in range(kmax)
+            )
+            assert got[bi, v] == expect
+
+
+def test_vmem_estimate_within_budget():
+    """The shipped artifact shapes fit a 16 MiB VMEM budget (DESIGN §Perf)."""
+    # alarm_like worst case: N=37, P<=256, C=4.
+    est = vmem_estimate_bytes(37, 256, 4, block_b=128)
+    assert est < 16 * 1024 * 1024, f"VMEM estimate {est} too large"

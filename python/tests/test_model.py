@@ -1,0 +1,130 @@
+"""L2 model correctness: packed network + classify graph against the
+float64 reference `Network.log_joint`, on the real exported artifacts when
+present and on a hand-built network otherwise."""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import fpgm
+from compile.model import make_classify_fn, make_loglik_fn, pack_network
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def hand_network() -> fpgm.Network:
+    """sprinkler: cloudy -> {sprinkler, rain} -> wet."""
+    return fpgm.Network(
+        name="sprinkler",
+        var_names=["cloudy", "sprinkler", "rain", "wet"],
+        cards=[2, 2, 2, 2],
+        parents=[[], [0], [0], [1, 2]],
+        cpts=[
+            np.array([[0.5, 0.5]]),
+            np.array([[0.5, 0.5], [0.9, 0.1]]),
+            np.array([[0.8, 0.2], [0.2, 0.8]]),
+            np.array([[1.0, 0.0], [0.1, 0.9], [0.1, 0.9], [0.01, 0.99]]),
+        ],
+    )
+
+
+def random_states(net, b, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.integers(0, c, size=b) for c in net.cards]
+    return np.stack(cols, axis=1).astype(np.int32)
+
+
+def test_pack_shapes():
+    net = hand_network()
+    cpt_logs, pidx, pstride = pack_network(net)
+    assert cpt_logs.shape == (4, 4, 2)
+    assert pidx.shape == (4, 2)
+    assert pstride.shape == (4, 2)
+    # wet's parents (1, 2): strides (2, 1)
+    assert list(np.asarray(pidx)[3]) == [1, 2]
+    assert list(np.asarray(pstride)[3]) == [2, 1]
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_loglik_matches_reference(use_pallas):
+    net = hand_network()
+    states = random_states(net, 64, seed=3)
+    fn = make_loglik_fn(net, use_pallas=use_pallas, block_b=32)
+    got = np.asarray(fn(jnp.asarray(states)))
+    want = np.array([net.log_joint(s) for s in states])
+    # float32 kernel vs float64 oracle; deterministic zeros floored.
+    finite = want > np.log(1e-29)
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-4, atol=1e-4)
+
+
+def test_classify_posterior_matches_enumeration():
+    net = hand_network()
+    class_var = 2  # rain
+    states = random_states(net, 32, seed=5)
+    classify = make_classify_fn(net, class_var, use_pallas=True, block_b=32)
+    (scores,) = classify(jnp.asarray(states))
+    scores = np.asarray(scores)  # [B, 2] log joints
+    for b in range(8):
+        # softmax(scores) must equal P(rain | all other vars).
+        joints = []
+        for k in range(2):
+            s = states[b].copy()
+            s[class_var] = k
+            joints.append(np.exp(net.log_joint(s)))
+        want = np.array(joints) / sum(joints)
+        got = np.exp(scores[b] - scores[b].max())
+        got = got / got.sum()
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_pallas_and_ref_models_agree():
+    net = hand_network()
+    states = jnp.asarray(random_states(net, 64, seed=7))
+    f1 = make_classify_fn(net, 3, use_pallas=True, block_b=32)
+    f2 = make_classify_fn(net, 3, use_pallas=False)
+    (a,) = f1(states)
+    (b,) = f2(states)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "asia.fpgm")),
+    reason="artifacts not exported (run `make artifacts`)",
+)
+def test_exported_asia_matches_reference():
+    net = fpgm.load(os.path.join(ARTIFACTS, "asia.fpgm"))
+    with open(os.path.join(ARTIFACTS, "asia_meta.txt")) as f:
+        meta = fpgm.parse_meta(f.read())
+    states = random_states(net, 128, seed=11)
+    fn = make_loglik_fn(net, use_pallas=True, block_b=64)
+    got = np.asarray(fn(jnp.asarray(states)))
+    want = np.array([net.log_joint(s) for s in states])
+    finite = want > np.log(1e-29)
+    assert finite.sum() > 0
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-4, atol=1e-3)
+    assert meta["class_var"] == 4  # bronc
+
+
+def test_fpgm_parser_rejects_bad_input():
+    with pytest.raises(ValueError):
+        fpgm.parse("not a network")
+    with pytest.raises(ValueError):
+        fpgm.parse("fpgm 1\nvar x 2\n")  # no cpt, no end
+
+
+def test_delta_classify_equals_naive():
+    """P3 optimization: delta scoring must be numerically identical to
+    recomputing the full joint per class."""
+    net = hand_network()
+    states = jnp.asarray(random_states(net, 64, seed=13))
+    for class_var in range(4):
+        fd = make_classify_fn(net, class_var, use_pallas=True, block_b=32,
+                              use_delta=True)
+        fn = make_classify_fn(net, class_var, use_pallas=True, block_b=32,
+                              use_delta=False)
+        (a,) = fd(states)
+        (b,) = fn(states)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)

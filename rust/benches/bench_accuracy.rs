@@ -1,0 +1,57 @@
+//! E7 — inference accuracy: mean Hellinger distance to exact (junction
+//! tree) as a function of sample count for every sampling engine, normal
+//! and rare evidence. The paper-shape claim: adaptive importance samplers
+//! (AIS-BN, EPIS-BN) dominate under rare evidence.
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{
+    AisBn, ApproxOptions, EpisBn, LikelihoodWeighting, LogicSampling, SelfImportance,
+};
+use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::InferenceEngine;
+use fastpgm::metrics::mean_hellinger;
+use fastpgm::network::repository;
+
+fn main() {
+    println!("== E7: Hellinger distance vs sample count ==");
+    let net = repository::asia();
+    let jt = JunctionTree::build(&net);
+
+    let scenarios = [
+        (
+            "normal evidence (xray=yes)",
+            Evidence::new().with(net.var_index("xray").unwrap(), 1),
+        ),
+        (
+            "rare evidence (tub=yes, xray=no, P≈3e-4)",
+            Evidence::new()
+                .with(net.var_index("tub").unwrap(), 1)
+                .with(net.var_index("xray").unwrap(), 0),
+        ),
+    ];
+
+    for (label, ev) in &scenarios {
+        let truth = jt.engine().query_all(ev);
+        println!("\n-- asia, {label} --");
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>12} {:>12}",
+            "samples", "pls", "lw", "sis", "ais-bn", "epis-bn"
+        );
+        for n in [1_000usize, 5_000, 20_000, 80_000] {
+            let opts = ApproxOptions { n_samples: n, threads: 4, ..Default::default() };
+            let h = |p: Vec<Vec<f64>>| mean_hellinger(&p, &truth);
+            let pls = h(LogicSampling::new(&net, opts.clone()).query_all(ev));
+            let lw = h(LikelihoodWeighting::new(&net, opts.clone()).query_all(ev));
+            let sis = h(SelfImportance::new(&net, opts.clone()).query_all(ev));
+            let ais = h(AisBn::new(&net, opts.clone()).query_all(ev));
+            let epis = h(EpisBn::new(&net, opts).query_all(ev));
+            println!(
+                "{n:<10} {pls:>12.5} {lw:>12.5} {sis:>12.5} {ais:>12.5} {epis:>12.5}"
+            );
+        }
+    }
+    println!(
+        "\nshape check: columns should decrease top-to-bottom (≈1/√n); under rare \
+         evidence ais/epis < lw < pls."
+    );
+}

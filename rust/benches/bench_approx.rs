@@ -1,0 +1,68 @@
+//! E5 (ATC-style) — approximate-inference speedup: all six algorithms
+//! with sample-level parallelism (opt vi) across thread counts on the
+//! alarm-scale workload.
+
+use fastpgm::benchkit::{bench, report, Measurement};
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{
+    AisBn, ApproxOptions, EpisBn, LikelihoodWeighting, LogicSampling, LoopyBp,
+    LoopyBpOptions, SelfImportance,
+};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::synthetic::SyntheticSpec;
+use fastpgm::rng::Pcg;
+
+fn main() {
+    println!("== E5: approximate inference, sample-level parallelism ==");
+    if fastpgm::parallel::default_threads() <= 1 {
+        println!("NOTE: 1-core testbed; thread rows measure overhead, not speedup.");
+    }
+    let net = SyntheticSpec::alarm_like().generate(1);
+    let mut rng = Pcg::seed_from(5005);
+    let ev: Evidence = rng
+        .choose_k(net.n_vars(), 4)
+        .into_iter()
+        .map(|v| (v, rng.below(net.cardinality(v))))
+        .collect();
+    let n_samples = 50_000;
+
+    let threads_sweep: Vec<usize> = vec![1, 2, 4];
+
+    type Runner<'a> = Box<dyn Fn(usize) -> Vec<Vec<f64>> + 'a>;
+    let engines: Vec<(&str, Runner)> = vec![
+        ("logic-sampling", Box::new(|t| {
+            LogicSampling::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
+                .query_all(&ev)
+        })),
+        ("likelihood-weighting", Box::new(|t| {
+            LikelihoodWeighting::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
+                .query_all(&ev)
+        })),
+        ("self-importance", Box::new(|t| {
+            SelfImportance::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
+                .query_all(&ev)
+        })),
+        ("ais-bn", Box::new(|t| {
+            AisBn::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
+                .query_all(&ev)
+        })),
+        ("epis-bn", Box::new(|t| {
+            EpisBn::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
+                .query_all(&ev)
+        })),
+        ("loopy-bp", Box::new(|t| {
+            LoopyBp::new(&net, LoopyBpOptions { threads: t, ..Default::default() }).query_all(&ev)
+        })),
+    ];
+
+    for (name, run) in &engines {
+        let mut results: Vec<Measurement> = Vec::new();
+        for &t in &threads_sweep {
+            results.push(bench(format!("{name} x{t}"), 1, 3, || run(t)));
+        }
+        report(
+            &format!("{name} on alarm_like ({} vars, {} samples)", net.n_vars(), n_samples),
+            &results,
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! E3 (Fast-BNI-style) — exact-inference speedup: junction-tree
+//! calibration sequential vs inter-clique vs hybrid parallelism across
+//! thread counts and network scales; variable elimination for reference.
+
+use fastpgm::benchkit::{bench, report, Measurement};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{CalibrationMode, JunctionTree, VariableElimination};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::{repository, synthetic::SyntheticSpec, BayesianNetwork};
+use fastpgm::rng::Pcg;
+
+fn random_evidence(net: &BayesianNetwork, k: usize, seed: u64) -> Evidence {
+    let mut rng = Pcg::seed_from(seed);
+    rng.choose_k(net.n_vars(), k)
+        .into_iter()
+        .map(|v| (v, rng.below(net.cardinality(v))))
+        .collect()
+}
+
+fn main() {
+    println!("== E3: junction-tree calibration, parallelism sweep ==");
+    if fastpgm::parallel::default_threads() <= 1 {
+        println!("NOTE: 1-core testbed; thread rows measure overhead, not speedup.");
+    }
+    let nets: Vec<BayesianNetwork> = vec![
+        repository::asia(),
+        SyntheticSpec::child_like().generate(1),
+        SyntheticSpec::insurance_like().generate(1),
+        SyntheticSpec::alarm_like().generate(1),
+        SyntheticSpec::hepar2_like().generate(1),
+        SyntheticSpec::win95pts_like().generate(1),
+    ];
+    for net in &nets {
+        let jt = JunctionTree::build(net);
+        let ev = random_evidence(net, 3, 77);
+        let mut results: Vec<Measurement> = Vec::new();
+
+        let mut seq = jt.engine();
+        results.push(bench(format!("{} JT seq", net.name()), 1, 5, || {
+            seq.calibrate(&Evidence::new());
+            seq.calibrate(&ev);
+            seq.evidence_probability()
+        }));
+        for mode in [CalibrationMode::InterClique, CalibrationMode::Hybrid] {
+            for t in [2usize, 4] {
+                let mut eng = jt.parallel_engine(mode, t);
+                let ev = ev.clone();
+                results.push(bench(
+                    format!("{} JT {mode:?} x{t}", net.name()),
+                    1,
+                    5,
+                    move || {
+                        eng.calibrate(&Evidence::new());
+                        eng.calibrate(&ev.clone());
+                        eng.evidence_probability()
+                    },
+                ));
+            }
+        }
+        // VE reference (single full query_all).
+        if net.n_vars() <= 40 {
+            let ev2 = random_evidence(net, 3, 77);
+            let mut ve = VariableElimination::new(net);
+            results.push(bench(format!("{} VE (reference)", net.name()), 1, 3, move || {
+                ve.query_all(&ev2)
+            }));
+        }
+        report(
+            &format!(
+                "{} ({} vars, {} cliques, width {}, {} states)",
+                net.name(),
+                net.n_vars(),
+                jt.cliques.len(),
+                jt.max_clique_size(),
+                jt.total_states()
+            ),
+            &results,
+        );
+    }
+}

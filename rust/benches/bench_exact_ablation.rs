@@ -1,0 +1,89 @@
+//! E4 — exact-inference ablations:
+//! (a) potential-table reorganization (opt v): odometer index maintenance
+//!     on canonical tables vs per-entry divide/modulo decoding;
+//! (b) root selection (opt iv): critical-path-minimizing root vs default.
+
+use fastpgm::benchkit::{bench, report};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{triangulation::EliminationHeuristic, CalibrationMode, JunctionTree};
+use fastpgm::network::synthetic::SyntheticSpec;
+use fastpgm::potential::ops::IndexMode;
+use fastpgm::potential::PotentialTable;
+use fastpgm::rng::Pcg;
+
+fn random_table(vars: Vec<usize>, cards: Vec<usize>, seed: u64) -> PotentialTable {
+    let mut rng = Pcg::seed_from(seed);
+    let mut t = PotentialTable::zeros(vars, cards);
+    for x in t.data_mut() {
+        *x = rng.next_f64() + 0.01;
+    }
+    t
+}
+
+fn main() {
+    println!("== E4: potential-table + root-selection ablations ==");
+
+    // (a) table-op microbenchmarks on realistic clique sizes.
+    let big = random_table(vec![0, 1, 2, 3, 4, 5], vec![4, 4, 4, 4, 4, 4], 1); // 4096 entries
+    let sep = random_table(vec![1, 3], vec![4, 4], 2);
+    let ops = vec![
+        bench("product naive-decode", 3, 20, || {
+            big.product(&sep, IndexMode::NaiveDecode)
+        }),
+        bench("product odometer (opt v)", 3, 20, || {
+            big.product(&sep, IndexMode::Odometer)
+        }),
+        bench("marginalize naive-decode", 3, 20, || {
+            big.marginalize_keep(&[1, 3], IndexMode::NaiveDecode)
+        }),
+        bench("marginalize odometer (opt v)", 3, 20, || {
+            big.marginalize_keep(&[1, 3], IndexMode::Odometer)
+        }),
+        bench("multiply_subset naive-decode", 3, 20, || {
+            let mut c = big.clone();
+            c.multiply_subset(&sep, IndexMode::NaiveDecode);
+            c
+        }),
+        bench("multiply_subset odometer (opt v)", 3, 20, || {
+            let mut c = big.clone();
+            c.multiply_subset(&sep, IndexMode::Odometer);
+            c
+        }),
+    ];
+    report("potential-table operations (4096-entry clique)", &ops);
+
+    // (a') whole-calibration with each index mode.
+    let net = SyntheticSpec::hepar2_like().generate(1);
+    let jt = JunctionTree::build(&net);
+    let ev = Evidence::new().with(5, 1).with(30, 0);
+    for (label, mode) in [("naive-decode", IndexMode::NaiveDecode), ("odometer", IndexMode::Odometer)] {
+        let mut eng = jt.engine();
+        eng.index_mode = mode;
+        let ev = ev.clone();
+        let r = bench(format!("hepar2_like calibration, {label}"), 1, 5, move || {
+            eng.calibrate(&Evidence::new());
+            eng.calibrate(&ev.clone());
+            eng.evidence_probability()
+        });
+        report(&format!("JT calibration index mode: {label}"), &[r]);
+    }
+
+    // (b) root selection.
+    let net = SyntheticSpec::alarm_like().generate(1);
+    for (label, select) in [("default root", false), ("selected root (opt iv)", true)] {
+        let jt = JunctionTree::build_with(&net, EliminationHeuristic::MinFill, select);
+        println!(
+            "\nalarm_like, {label}: {} levels, widest level {}",
+            jt.levels.len(),
+            jt.levels.iter().map(Vec::len).max().unwrap_or(0)
+        );
+        let ev = Evidence::new().with(7, 1);
+        let mut eng = jt.parallel_engine(CalibrationMode::InterClique, 4);
+        let r = bench(format!("alarm_like inter-clique x4, {label}"), 1, 5, move || {
+            eng.calibrate(&Evidence::new());
+            eng.calibrate(&ev.clone());
+            eng.evidence_probability()
+        });
+        report(label, &[r]);
+    }
+}

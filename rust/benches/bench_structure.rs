@@ -1,0 +1,65 @@
+//! E1 (Fast-BNS-style) — structure-learning speedup: sequential PC-stable
+//! vs CI-level-parallel PC-stable across thread counts and network
+//! scales. The paper-shape claim: near-linear scaling of the CI-test
+//! phase, larger networks benefit more.
+
+use fastpgm::benchkit::{bench, report, Measurement};
+use fastpgm::network::{repository, synthetic::SyntheticSpec, BayesianNetwork};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable, pc_stable_parallel, PcOptions};
+
+fn workload(net: &BayesianNetwork, rows: usize) -> fastpgm::core::Dataset {
+    let mut rng = Pcg::seed_from(1001);
+    forward_sample_dataset(net, rows, &mut rng)
+}
+
+fn main() {
+    println!("== E1: PC-stable structure learning, threads sweep ==");
+    let cores = fastpgm::parallel::default_threads();
+    if cores <= 1 {
+        println!(
+            "NOTE: testbed exposes {cores} core(s); thread rows measure \
+             scheduling overhead, not speedup (see EXPERIMENTS.md §Testbed)."
+        );
+    }
+    let nets: Vec<BayesianNetwork> = vec![
+        repository::survey(),
+        SyntheticSpec::child_like().generate(1),
+        SyntheticSpec::insurance_like().generate(1),
+        SyntheticSpec::alarm_like().generate(1),
+        SyntheticSpec::hepar2_like().generate(1),
+    ];
+    for net in &nets {
+        let rows = 10_000;
+        let data = workload(net, rows);
+        let opts = PcOptions { alpha: 0.05, ..Default::default() };
+        let mut results: Vec<Measurement> = Vec::new();
+        results.push(bench(
+            format!("{} seq", net.name()),
+            1,
+            3,
+            || pc_stable(&data, &opts),
+        ));
+        for t in [2usize, 4, 8] {
+            let popts = PcOptions { threads: t, ..opts.clone() };
+            results.push(bench(
+                format!("{} parallel x{t}", net.name()),
+                1,
+                3,
+                || pc_stable_parallel(&data, &popts),
+            ));
+        }
+        let r = pc_stable(&data, &opts);
+        report(
+            &format!(
+                "{} ({} vars, {} rows, {} CI tests)",
+                net.name(),
+                net.n_vars(),
+                rows,
+                r.n_tests
+            ),
+            &results,
+        );
+    }
+}

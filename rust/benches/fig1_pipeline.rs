@@ -1,0 +1,99 @@
+//! F1 — Figure 1 reproduction: the full Fast-PGM pipeline (data →
+//! structure learning → parameter learning → exact + approximate
+//! inference) with per-stage timings, on the small (survey) and medium
+//! (child_like) workloads, sequential vs parallel.
+
+use fastpgm::benchkit::{bench, fmt_duration, report};
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{ApproxOptions, LikelihoodWeighting};
+use fastpgm::inference::exact::{CalibrationMode, JunctionTree};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::{repository, synthetic::SyntheticSpec, BayesianNetwork};
+use fastpgm::parameter::{mle, MleOptions};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable_parallel, PcOptions};
+
+fn pipeline(net: &BayesianNetwork, n_rows: usize, threads: usize) {
+    println!(
+        "\n-- pipeline on {} ({} vars), {} rows, {} thread(s) --",
+        net.name(),
+        net.n_vars(),
+        n_rows,
+        threads
+    );
+    let mut rng = Pcg::seed_from(31);
+    let t0 = std::time::Instant::now();
+    let data = forward_sample_dataset(net, n_rows, &mut rng);
+    println!("  sample generation   {:>10}", fmt_duration(t0.elapsed()));
+
+    let t0 = std::time::Instant::now();
+    let pc = pc_stable_parallel(
+        &data,
+        &PcOptions { alpha: 0.05, threads, ..Default::default() },
+    );
+    println!(
+        "  structure learning  {:>10}   ({} edges, {} CI tests)",
+        fmt_duration(t0.elapsed()),
+        pc.n_edges(),
+        pc.n_tests
+    );
+
+    let t0 = std::time::Instant::now();
+    let dag = pc.graph.to_dag().unwrap_or_else(|| net.dag().clone());
+    let model = mle(&data, &dag, &MleOptions { threads, ..Default::default() });
+    println!(
+        "  parameter learning  {:>10}   ({} parameters)",
+        fmt_duration(t0.elapsed()),
+        model.n_parameters()
+    );
+
+    let ev = Evidence::new().with(0, 0);
+    let t0 = std::time::Instant::now();
+    let jt = JunctionTree::build(&model);
+    let mode = if threads > 1 { CalibrationMode::Hybrid } else { CalibrationMode::Sequential };
+    let mut engine = jt.parallel_engine(mode, threads);
+    let _ = engine.query_all(&ev);
+    println!(
+        "  exact inference     {:>10}   ({} cliques, width {})",
+        fmt_duration(t0.elapsed()),
+        jt.cliques.len(),
+        jt.max_clique_size()
+    );
+
+    let t0 = std::time::Instant::now();
+    let opts = ApproxOptions { n_samples: 50_000, threads, ..Default::default() };
+    let _ = LikelihoodWeighting::new(&model, opts).query_all(&ev);
+    println!("  approx inference    {:>10}   (50k LW samples)", fmt_duration(t0.elapsed()));
+}
+
+fn main() {
+    println!("== F1: Figure 1 pipeline, per-stage timings ==");
+    let threads = fastpgm::parallel::default_threads().min(8);
+    for net in [repository::survey(), SyntheticSpec::child_like().generate(1)] {
+        pipeline(&net, 20_000, 1);
+        pipeline(&net, 20_000, threads);
+    }
+
+    // End-to-end pipeline as one measured unit (seq vs parallel).
+    let net = SyntheticSpec::child_like().generate(1);
+    let rows: Vec<_> = [1usize, threads]
+        .iter()
+        .map(|&t| {
+            bench(format!("child_like end-to-end, {t} thread(s)"), 0, 3, || {
+                let mut rng = Pcg::seed_from(31);
+                let data = forward_sample_dataset(&net, 10_000, &mut rng);
+                let pc = pc_stable_parallel(
+                    &data,
+                    &PcOptions { alpha: 0.05, threads: t, ..Default::default() },
+                );
+                let dag = pc.graph.to_dag().unwrap_or_else(|| net.dag().clone());
+                let model = mle(&data, &dag, &MleOptions { threads: t, ..Default::default() });
+                let jt = JunctionTree::build(&model);
+                jt.parallel_engine(CalibrationMode::Hybrid, t)
+                    .query_all(&Evidence::new().with(0, 0))
+            })
+        })
+        .collect();
+    report("F1 end-to-end (sequential baseline first)", &rows);
+}

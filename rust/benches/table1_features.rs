@@ -1,0 +1,83 @@
+//! T1 — Table 1 reproduction: the feature matrix.
+//!
+//! The paper's only table is a feature comparison; its Fast-PGM row
+//! claims structure learning, parameter learning, exact inference,
+//! approximate inference, open-source, parallelization. This harness
+//! *executes* every claimed feature end-to-end on ASIA and prints the
+//! verified row (a claim is ✓ only if the corresponding code path ran and
+//! produced a sane result).
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{ApproxOptions, LikelihoodWeighting, LoopyBp, LoopyBpOptions};
+use fastpgm::inference::exact::{JunctionTree, VariableElimination};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::repository;
+use fastpgm::parameter::{mle, MleOptions};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable, pc_stable_parallel, PcOptions};
+use std::time::Instant;
+
+fn check(name: &str, f: impl FnOnce() -> bool) -> bool {
+    let t0 = Instant::now();
+    let ok = f();
+    println!(
+        "  {:<22} {}  ({:.1?})",
+        name,
+        if ok { "\u{2713}" } else { "\u{2717}" },
+        t0.elapsed()
+    );
+    ok
+}
+
+fn main() {
+    println!("== T1: Table 1 feature matrix — executed, not asserted ==");
+    let net = repository::asia();
+    let mut rng = Pcg::seed_from(1);
+    let data = forward_sample_dataset(&net, 10_000, &mut rng);
+    let ev = Evidence::new().with(net.var_index("xray").unwrap(), 1);
+
+    let mut all = true;
+    all &= check("structure learning", || {
+        pc_stable(&data, &PcOptions::default()).n_edges() > 0
+    });
+    all &= check("parameter learning", || {
+        mle(&data, net.dag(), &MleOptions::default()).n_parameters() == net.n_parameters()
+    });
+    all &= check("exact inf. (JT)", || {
+        let p = JunctionTree::build(&net).engine().query(3, &ev);
+        (p.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    });
+    all &= check("exact inf. (VE)", || {
+        let p = VariableElimination::new(&net).query(3, &ev);
+        (p.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    });
+    all &= check("approx inf. (LBP)", || {
+        let p = LoopyBp::new(&net, LoopyBpOptions::default()).query(3, &ev);
+        (p.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    });
+    all &= check("approx inf. (sampling)", || {
+        let opts = ApproxOptions { n_samples: 20_000, ..Default::default() };
+        let p = LikelihoodWeighting::new(&net, opts).query(3, &ev);
+        (p.iter().sum::<f64>() - 1.0).abs() < 1e-9
+    });
+    all &= check("parallelization", || {
+        let seq = pc_stable(&data, &PcOptions::default());
+        let par = pc_stable_parallel(&data, &PcOptions { threads: 4, ..Default::default() });
+        seq.graph == par.graph
+    });
+    all &= check("open-source formats", || {
+        let bif = fastpgm::io::bif::to_string(&net);
+        fastpgm::io::bif::from_str(&bif).is_ok()
+    });
+
+    println!("\nTable 1, Fast-PGM row (this reproduction):");
+    println!(
+        "| Library  | Structure learn. | Param. learn. | Ex. inf. | Appr. inf. | Open-source | Parallel. | Language |"
+    );
+    println!(
+        "| Fast-PGM | {s} | {s} | {s} | {s} | {s} | {s} | Rust+JAX/Pallas |",
+        s = if all { "\u{2713}" } else { "\u{2717}" }
+    );
+    assert!(all, "a claimed feature failed to execute");
+}

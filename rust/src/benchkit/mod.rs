@@ -1,0 +1,117 @@
+//! Minimal benchmark harness (the offline image has no criterion crate).
+//!
+//! Each `benches/*.rs` target is a plain `harness = false` binary built on
+//! this module: warmup runs, then `samples` timed runs, reporting
+//! min/median/p95 wall-clock. Good enough to regenerate the *shape* of the
+//! paper's tables — who wins and by what factor — which is what
+//! EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub label: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().copied().min().unwrap_or_default()
+    }
+
+    pub fn p95(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let i = ((s.len() as f64 * 0.95) as usize).min(s.len() - 1);
+        s[i]
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `samples` measured
+/// runs. The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T>(
+    label: impl Into<String>,
+    warmup: usize,
+    samples: usize,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed());
+    }
+    Measurement { label: label.into(), samples: out }
+}
+
+/// Pretty-print a table of measurements with a speedup column relative to
+/// the first row.
+pub fn report(title: &str, rows: &[Measurement]) {
+    println!("\n== {title} ==");
+    let base = rows.first().map(|m| m.median().as_secs_f64());
+    println!("{:<44} {:>12} {:>12} {:>9}", "case", "median", "min", "speedup");
+    for m in rows {
+        let med = m.median().as_secs_f64();
+        let speedup = base.map(|b| b / med).unwrap_or(1.0);
+        println!(
+            "{:<44} {:>12} {:>12} {:>8.2}x",
+            m.label,
+            fmt_duration(m.median()),
+            fmt_duration(m.min()),
+            speedup
+        );
+    }
+}
+
+/// Human duration formatting (µs → s).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Throughput helper: items per second from a measured median.
+pub fn throughput(items: usize, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let m = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(m.samples.len(), 5);
+        assert!(m.min() <= m.median());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let t = throughput(1000, Duration::from_secs(2));
+        assert!((t - 500.0).abs() < 1e-9);
+    }
+}

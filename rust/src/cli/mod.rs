@@ -1,0 +1,110 @@
+//! Minimal command-line parsing (the offline image has no clap crate).
+//!
+//! Supports `program subcommand [--flag value] [--switch] positional...`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean switch.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn parse_flag<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("learn --alpha 0.05 --threads 4 data.csv");
+        assert_eq!(a.subcommand.as_deref(), Some("learn"));
+        assert_eq!(a.flag("alpha"), Some("0.05"));
+        assert_eq!(a.parse_flag("threads", 1usize), 4);
+        assert_eq!(a.positional, vec!["data.csv"]);
+    }
+
+    #[test]
+    fn eq_style_and_switches() {
+        let a = parse("bench --net=asia --verbose");
+        assert_eq!(a.flag("net"), Some("asia"));
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn missing_flag_defaults() {
+        let a = parse("infer");
+        assert_eq!(a.parse_flag("samples", 100usize), 100);
+        assert_eq!(a.flag_or("engine", "jt"), "jt");
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.switch("help"));
+    }
+}

@@ -1,0 +1,270 @@
+//! Dynamic batching of classification requests onto a [`Scorer`].
+
+use crate::runtime::Scorer;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use super::ServingMetrics;
+
+/// A closure that builds the scorer *on the batcher's worker thread* —
+/// required because PJRT handles are thread-affine (see
+/// [`crate::runtime::Scorer`]).
+pub type ScorerFactory =
+    Box<dyn FnOnce() -> anyhow::Result<Box<dyn Scorer>> + Send + 'static>;
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are queued (clamped to the scorer's
+    /// native batch size).
+    pub max_batch: usize,
+    /// Flush a non-empty queue after this long even if not full.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: usize::MAX, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued request.
+struct Request {
+    row: Vec<u8>,
+    enqueued: Instant,
+    reply: SyncSender<anyhow::Result<Vec<f64>>>,
+}
+
+/// A background batching loop over one scorer.
+pub struct DynamicBatcher {
+    tx: Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    pub metrics: Arc<Mutex<ServingMetrics>>,
+    n_vars: usize,
+    n_classes: usize,
+}
+
+impl DynamicBatcher {
+    /// Spawn the batching thread around a thread-affine scorer factory.
+    /// Blocks until the factory has run (so load errors surface here).
+    pub fn spawn_with(
+        factory: ScorerFactory,
+        config: BatcherConfig,
+    ) -> anyhow::Result<DynamicBatcher> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<anyhow::Result<(usize, usize)>>(1);
+        let worker = {
+            let stop = Arc::clone(&stop);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("fastpgm-batcher".into())
+                .spawn(move || {
+                    let scorer = match factory() {
+                        Ok(s) => {
+                            let _ = ready_tx.send(Ok((s.n_vars(), s.n_classes())));
+                            s
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    Self::run(scorer, config, rx, stop, metrics)
+                })
+                .expect("failed to spawn batcher thread")
+        };
+        let (n_vars, n_classes) = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher thread died during startup"))??;
+        Ok(DynamicBatcher {
+            tx,
+            worker: Some(worker),
+            stop,
+            metrics,
+            n_vars,
+            n_classes,
+        })
+    }
+
+    /// Convenience for scorers that are already `Send` (e.g. the pure-Rust
+    /// [`crate::runtime::ReferenceScorer`]).
+    pub fn spawn<S: Scorer + Send + 'static>(
+        scorer: S,
+        config: BatcherConfig,
+    ) -> DynamicBatcher {
+        Self::spawn_with(Box::new(move || Ok(Box::new(scorer) as Box<dyn Scorer>)), config)
+            .expect("infallible factory")
+    }
+
+    fn run(
+        scorer: Box<dyn Scorer>,
+        config: BatcherConfig,
+        rx: Receiver<Request>,
+        stop: Arc<AtomicBool>,
+        metrics: Arc<Mutex<ServingMetrics>>,
+    ) {
+        let cap = config.max_batch.min(scorer.batch_size()).max(1);
+        let mut queue: Vec<Request> = Vec::with_capacity(cap);
+        loop {
+            // Wait for the first request (with a timeout so shutdown is
+            // prompt).
+            if queue.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }
+            // Accumulate until full or deadline.
+            let deadline = queue[0].enqueued + config.max_wait;
+            while queue.len() < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Execute one batch.
+            let batch: Vec<Request> = queue.drain(..).collect();
+            let rows: Vec<Vec<u8>> = batch.iter().map(|r| r.row.clone()).collect();
+            let t0 = Instant::now();
+            let result = scorer.score(&rows);
+            let exec = t0.elapsed();
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(batch.len(), exec);
+                for r in &batch {
+                    m.record_latency(r.enqueued.elapsed());
+                }
+            }
+            match result {
+                Ok(posts) => {
+                    for (req, post) in batch.into_iter().zip(posts) {
+                        let _ = req.reply.send(Ok(post));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in batch {
+                        let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.n_vars
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Submit one request and block for its posterior.
+    pub fn classify(&self, row: Vec<u8>) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(row.len() == self.n_vars, "row arity mismatch");
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { row, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+
+    /// Submit asynchronously; returns a receiver for the result.
+    pub fn classify_async(
+        &self,
+        row: Vec<u8>,
+    ) -> anyhow::Result<Receiver<anyhow::Result<Vec<f64>>>> {
+        anyhow::ensure!(row.len() == self.n_vars, "row arity mismatch");
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { row, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
+        Ok(reply_rx)
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::runtime::ReferenceScorer;
+
+    fn scorer() -> ReferenceScorer {
+        let net = repository::asia();
+        let class_var = net.var_index("bronc").unwrap();
+        ReferenceScorer::new(net, class_var, 16)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = DynamicBatcher::spawn(scorer(), BatcherConfig::default());
+        let post = b.classify(vec![0, 0, 1, 0, 0, 0, 1, 1]).unwrap();
+        assert_eq!(post.len(), 2);
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_requests_batched() {
+        let b = Arc::new(DynamicBatcher::spawn(
+            scorer(),
+            BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(5) },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..48u8 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                b.classify(vec![i % 2, 0, 1, 0, 0, 0, (i / 2) % 2, 1]).unwrap()
+            }));
+        }
+        for h in handles {
+            let post = h.join().unwrap();
+            assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        let m = b.metrics.lock().unwrap();
+        assert_eq!(m.requests, 48);
+        assert!(m.batches < 48, "batching coalesced requests: {} batches", m.batches);
+        assert!(m.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn async_api() {
+        let b = DynamicBatcher::spawn(scorer(), BatcherConfig::default());
+        let rx1 = b.classify_async(vec![0; 8]).unwrap();
+        let rx2 = b.classify_async(vec![1, 0, 1, 0, 1, 0, 1, 0]).unwrap();
+        assert!(rx1.recv().unwrap().is_ok());
+        assert!(rx2.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn arity_checked() {
+        let b = DynamicBatcher::spawn(scorer(), BatcherConfig::default());
+        assert!(b.classify(vec![0; 3]).is_err());
+    }
+}

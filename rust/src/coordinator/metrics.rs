@@ -1,0 +1,105 @@
+//! Serving metrics: batch sizes, execution time, end-to-end latency.
+
+use std::time::Duration;
+
+/// Aggregated counters for one batcher.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    pub requests: usize,
+    pub batches: usize,
+    pub exec_time_total: Duration,
+    latencies_us: Vec<u64>,
+}
+
+impl ServingMetrics {
+    pub fn record_batch(&mut self, size: usize, exec: Duration) {
+        self.requests += size;
+        self.batches += 1;
+        self.exec_time_total += exec;
+    }
+
+    pub fn record_latency(&mut self, latency: Duration) {
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Latency percentile in microseconds (p in [0, 100]).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 * p / 100.0) as usize).min(v.len() - 1);
+        v[idx]
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+
+    /// Requests per second of pure scorer execution time.
+    pub fn exec_throughput(&self) -> f64 {
+        let secs = self.exec_time_total.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.1} mean_latency={:.0}µs p95={}µs p99={}µs exec_tput={:.0} req/s",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+            self.exec_throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut m = ServingMetrics::default();
+        m.record_batch(4, Duration::from_millis(2));
+        m.record_batch(8, Duration::from_millis(2));
+        for us in [100u64, 200, 300, 400] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.batches, 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert_eq!(m.latency_percentile_us(0.0), 100);
+        assert_eq!(m.latency_percentile_us(100.0), 400);
+        assert!((m.mean_latency_us() - 250.0).abs() < 1e-9);
+        assert!((m.exec_throughput() - 3000.0).abs() < 1.0);
+        assert!(m.summary().contains("requests=12"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.latency_percentile_us(95.0), 0);
+        assert_eq!(m.exec_throughput(), 0.0);
+    }
+}

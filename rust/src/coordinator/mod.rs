@@ -1,0 +1,18 @@
+//! The serving coordinator: request router + dynamic batcher over the
+//! AOT-compiled batch scorer (vLLM-router-style L3 component).
+//!
+//! Clients submit single classification requests; the [`DynamicBatcher`]
+//! accumulates them until the artifact's native batch size is full or a
+//! deadline expires, executes one PJRT call, and distributes the results.
+//! A [`Router`] fronts several batchers (one per loaded model) and keeps
+//! serving metrics. Everything is plain threads + channels — no async
+//! runtime exists in the offline image, and none is needed at these
+//! request rates.
+
+mod batcher;
+mod metrics;
+mod router;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::ServingMetrics;
+pub use router::{Router, RouterStats};

@@ -1,0 +1,144 @@
+//! Request routing across multiple loaded models.
+
+use crate::runtime::Scorer;
+use std::collections::HashMap;
+use super::batcher::ScorerFactory;
+use super::{BatcherConfig, DynamicBatcher, ServingMetrics};
+
+/// Routes classification requests by model name to per-model dynamic
+/// batchers.
+#[derive(Default)]
+pub struct Router {
+    models: HashMap<String, DynamicBatcher>,
+}
+
+/// Snapshot of per-model serving stats.
+#[derive(Clone, Debug)]
+pub struct RouterStats {
+    pub per_model: Vec<(String, ServingMetrics)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a model from a `Send` scorer.
+    pub fn register<S: Scorer + Send + 'static>(
+        &mut self,
+        name: impl Into<String>,
+        scorer: S,
+        config: BatcherConfig,
+    ) {
+        self.models
+            .insert(name.into(), DynamicBatcher::spawn(scorer, config));
+    }
+
+    /// Register a model from a thread-affine scorer factory (the XLA
+    /// path). Fails if the factory fails (e.g. missing artifacts).
+    pub fn register_with(
+        &mut self,
+        name: impl Into<String>,
+        factory: ScorerFactory,
+        config: BatcherConfig,
+    ) -> anyhow::Result<()> {
+        self.models
+            .insert(name.into(), DynamicBatcher::spawn_with(factory, config)?);
+        Ok(())
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// Blocking classify against a named model.
+    pub fn classify(&self, model: &str, row: Vec<u8>) -> anyhow::Result<Vec<f64>> {
+        let b = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        b.classify(row)
+    }
+
+    /// Async classify.
+    pub fn classify_async(
+        &self,
+        model: &str,
+        row: Vec<u8>,
+    ) -> anyhow::Result<std::sync::mpsc::Receiver<anyhow::Result<Vec<f64>>>> {
+        let b = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+        b.classify_async(row)
+    }
+
+    /// Expected row arity for a model.
+    pub fn n_vars(&self, model: &str) -> Option<usize> {
+        self.models.get(model).map(|b| b.n_vars())
+    }
+
+    /// Snapshot all metrics.
+    pub fn stats(&self) -> RouterStats {
+        let mut per_model: Vec<(String, ServingMetrics)> = self
+            .models
+            .iter()
+            .map(|(name, b)| (name.clone(), b.metrics.lock().unwrap().clone()))
+            .collect();
+        per_model.sort_by(|a, b| a.0.cmp(&b.0));
+        RouterStats { per_model }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::runtime::ReferenceScorer;
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        let asia = repository::asia();
+        let cv = asia.var_index("bronc").unwrap();
+        r.register("asia", ReferenceScorer::new(asia, cv, 8), BatcherConfig::default());
+        let cancer = repository::cancer();
+        r.register("cancer", ReferenceScorer::new(cancer, 2, 8), BatcherConfig::default());
+        r
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let r = router();
+        assert_eq!(r.models(), vec!["asia", "cancer"]);
+        let p1 = r.classify("asia", vec![0; 8]).unwrap();
+        let p2 = r.classify("cancer", vec![0; 5]).unwrap();
+        assert_eq!(p1.len(), 2);
+        assert_eq!(p2.len(), 2);
+        assert_eq!(r.n_vars("asia"), Some(8));
+        assert_eq!(r.n_vars("cancer"), Some(5));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let r = router();
+        assert!(r.classify("nope", vec![0; 8]).is_err());
+        assert!(!r.has_model("nope"));
+    }
+
+    #[test]
+    fn stats_collects() {
+        let r = router();
+        for _ in 0..5 {
+            r.classify("asia", vec![1, 0, 1, 0, 0, 0, 1, 1]).unwrap();
+        }
+        let stats = r.stats();
+        let asia = &stats.per_model.iter().find(|(n, _)| n == "asia").unwrap().1;
+        assert_eq!(asia.requests, 5);
+    }
+}

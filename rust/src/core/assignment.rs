@@ -1,0 +1,171 @@
+//! Full assignments and partial evidence over discrete variables.
+
+use super::VarId;
+
+/// A complete instantiation of every variable in a network, stored densely.
+/// Values are state indices (`u8` — all practical discrete BNs have < 256
+/// states per variable, and a compact sample is central to the paper's
+/// data-locality optimizations).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub values: Vec<u8>,
+}
+
+impl Assignment {
+    pub fn zeros(n: usize) -> Self {
+        Assignment { values: vec![0; n] }
+    }
+
+    pub fn from_values(values: Vec<u8>) -> Self {
+        Assignment { values }
+    }
+
+    #[inline]
+    pub fn get(&self, v: VarId) -> usize {
+        self.values[v] as usize
+    }
+
+    #[inline]
+    pub fn set(&mut self, v: VarId, state: usize) {
+        self.values[v] = state as u8;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Partial evidence: observed `(variable, state)` pairs kept sorted by
+/// variable id. Small (a handful of observations in typical queries), so a
+/// sorted vector beats hash maps on both speed and determinism.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Evidence {
+    pairs: Vec<(VarId, usize)>,
+}
+
+impl Evidence {
+    pub fn new() -> Self {
+        Evidence { pairs: Vec::new() }
+    }
+
+    /// Builder-style insertion. Re-observing a variable overwrites the
+    /// previous state.
+    pub fn with(mut self, var: VarId, state: usize) -> Self {
+        self.set(var, state);
+        self
+    }
+
+    pub fn set(&mut self, var: VarId, state: usize) {
+        match self.pairs.binary_search_by_key(&var, |&(v, _)| v) {
+            Ok(i) => self.pairs[i].1 = state,
+            Err(i) => self.pairs.insert(i, (var, state)),
+        }
+    }
+
+    pub fn remove(&mut self, var: VarId) {
+        if let Ok(i) = self.pairs.binary_search_by_key(&var, |&(v, _)| v) {
+            self.pairs.remove(i);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, var: VarId) -> Option<usize> {
+        self.pairs
+            .binary_search_by_key(&var, |&(v, _)| v)
+            .ok()
+            .map(|i| self.pairs[i].1)
+    }
+
+    #[inline]
+    pub fn contains(&self, var: VarId) -> bool {
+        self.get(var).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (VarId, usize)> + '_ {
+        self.pairs.iter().copied()
+    }
+
+    /// Check an assignment for consistency with this evidence.
+    pub fn consistent_with(&self, a: &Assignment) -> bool {
+        self.iter().all(|(v, s)| a.get(v) == s)
+    }
+
+    /// Overlay the evidence onto an assignment.
+    pub fn apply_to(&self, a: &mut Assignment) {
+        for (v, s) in self.iter() {
+            a.set(v, s);
+        }
+    }
+}
+
+impl FromIterator<(VarId, usize)> for Evidence {
+    fn from_iter<T: IntoIterator<Item = (VarId, usize)>>(iter: T) -> Self {
+        let mut e = Evidence::new();
+        for (v, s) in iter {
+            e.set(v, s);
+        }
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evidence_sorted_lookup() {
+        let e = Evidence::new().with(5, 1).with(2, 0).with(9, 2);
+        assert_eq!(e.get(2), Some(0));
+        assert_eq!(e.get(5), Some(1));
+        assert_eq!(e.get(9), Some(2));
+        assert_eq!(e.get(4), None);
+        assert_eq!(e.len(), 3);
+    }
+
+    #[test]
+    fn evidence_overwrite() {
+        let mut e = Evidence::new().with(3, 1);
+        e.set(3, 2);
+        assert_eq!(e.get(3), Some(2));
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn evidence_remove() {
+        let mut e = Evidence::new().with(1, 1).with(2, 0);
+        e.remove(1);
+        assert!(!e.contains(1));
+        assert!(e.contains(2));
+    }
+
+    #[test]
+    fn consistency_and_apply() {
+        let e = Evidence::new().with(0, 1).with(2, 1);
+        let mut a = Assignment::zeros(4);
+        assert!(!e.consistent_with(&a));
+        e.apply_to(&mut a);
+        assert!(e.consistent_with(&a));
+        assert_eq!(a.get(0), 1);
+        assert_eq!(a.get(1), 0);
+        assert_eq!(a.get(2), 1);
+    }
+
+    #[test]
+    fn from_iterator() {
+        let e: Evidence = [(4, 0), (1, 2)].into_iter().collect();
+        assert_eq!(e.get(1), Some(2));
+        assert_eq!(e.get(4), Some(0));
+    }
+}

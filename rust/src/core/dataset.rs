@@ -1,0 +1,193 @@
+//! Discrete datasets with the cache-friendly column-major storage scheme
+//! the paper's optimization (ii) describes.
+//!
+//! Conditional-independence tests and sufficient-statistics counting walk
+//! *columns* (all rows of a small set of variables), so Fast-PGM stores one
+//! contiguous `Vec<u8>` per variable. A contingency count over variables
+//! `{x, y, z}` then streams three dense arrays linearly instead of striding
+//! across row records — the data-locality win measured in bench E2.
+
+use super::{Assignment, VarId, Variable};
+
+/// A fully observed discrete dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    variables: Vec<Variable>,
+    /// `columns[v][r]` = state of variable `v` in row `r`.
+    columns: Vec<Vec<u8>>,
+    n_rows: usize,
+}
+
+impl Dataset {
+    /// Create an empty dataset over the given variables.
+    pub fn new(variables: Vec<Variable>) -> Self {
+        let columns = vec![Vec::new(); variables.len()];
+        Dataset { variables, columns, n_rows: 0 }
+    }
+
+    /// Build from row-major records (each row has one state per variable).
+    pub fn from_rows(variables: Vec<Variable>, rows: &[Vec<u8>]) -> Self {
+        let mut ds = Dataset::new(variables);
+        for row in rows {
+            ds.push_row(row);
+        }
+        ds
+    }
+
+    /// Build directly from column-major data (no copy-transposition).
+    pub fn from_columns(variables: Vec<Variable>, columns: Vec<Vec<u8>>) -> Self {
+        assert_eq!(variables.len(), columns.len());
+        let n_rows = columns.first().map_or(0, Vec::len);
+        assert!(columns.iter().all(|c| c.len() == n_rows), "ragged columns");
+        for (v, col) in variables.iter().zip(&columns) {
+            debug_assert!(
+                col.iter().all(|&s| (s as usize) < v.cardinality),
+                "state out of range for {}",
+                v.name
+            );
+        }
+        Dataset { variables, columns, n_rows }
+    }
+
+    /// Append one row.
+    pub fn push_row(&mut self, row: &[u8]) {
+        assert_eq!(row.len(), self.variables.len(), "row arity mismatch");
+        for (v, (&s, col)) in row.iter().zip(&mut self.columns).enumerate() {
+            assert!(
+                (s as usize) < self.variables[v].cardinality,
+                "state {s} out of range for {}",
+                self.variables[v].name
+            );
+            col.push(s);
+        }
+        self.n_rows += 1;
+    }
+
+    /// Append a full assignment as a row.
+    pub fn push_assignment(&mut self, a: &Assignment) {
+        self.push_row(&a.values);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.variables.len()
+    }
+
+    pub fn variables(&self) -> &[Variable] {
+        &self.variables
+    }
+
+    pub fn variable(&self, v: VarId) -> &Variable {
+        &self.variables[v]
+    }
+
+    pub fn cardinality(&self, v: VarId) -> usize {
+        self.variables[v].cardinality
+    }
+
+    /// Resolve a variable name.
+    pub fn var_index(&self, name: &str) -> Option<VarId> {
+        self.variables.iter().position(|v| v.name == name)
+    }
+
+    /// Contiguous column of a variable — the hot accessor for CI tests.
+    #[inline]
+    pub fn column(&self, v: VarId) -> &[u8] {
+        &self.columns[v]
+    }
+
+    /// State of variable `v` in row `r`.
+    #[inline]
+    pub fn value(&self, r: usize, v: VarId) -> usize {
+        self.columns[v][r] as usize
+    }
+
+    /// Materialize row `r` (test/diagnostic helper; hot paths use columns).
+    pub fn row(&self, r: usize) -> Vec<u8> {
+        self.columns.iter().map(|c| c[r]).collect()
+    }
+
+    /// Split into (train, test) at `train_fraction`, preserving order.
+    pub fn split(&self, train_fraction: f64) -> (Dataset, Dataset) {
+        let cut = ((self.n_rows as f64) * train_fraction).round() as usize;
+        let cut = cut.min(self.n_rows);
+        let take = |lo: usize, hi: usize| {
+            let cols: Vec<Vec<u8>> =
+                self.columns.iter().map(|c| c[lo..hi].to_vec()).collect();
+            Dataset::from_columns(self.variables.clone(), cols)
+        };
+        (take(0, cut), take(cut, self.n_rows))
+    }
+
+    /// Project onto a subset of variables (columns are moved by clone; used
+    /// by the classifier to drop the label column).
+    pub fn project(&self, vars: &[VarId]) -> Dataset {
+        let variables = vars.iter().map(|&v| self.variables[v].clone()).collect();
+        let columns = vars.iter().map(|&v| self.columns[v].clone()).collect();
+        Dataset::from_columns(variables, columns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let vars = vec![Variable::new("a", 2), Variable::new("b", 3)];
+        Dataset::from_rows(vars, &[vec![0, 2], vec![1, 0], vec![1, 1]])
+    }
+
+    #[test]
+    fn row_column_agree() {
+        let ds = toy();
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.column(0), &[0, 1, 1]);
+        assert_eq!(ds.column(1), &[2, 0, 1]);
+        assert_eq!(ds.row(1), vec![1, 0]);
+        assert_eq!(ds.value(0, 1), 2);
+    }
+
+    #[test]
+    fn from_columns_matches_from_rows() {
+        let vars = vec![Variable::new("a", 2), Variable::new("b", 3)];
+        let a = Dataset::from_rows(vars.clone(), &[vec![0, 2], vec![1, 0]]);
+        let b = Dataset::from_columns(vars, vec![vec![0, 1], vec![2, 0]]);
+        assert_eq!(a.column(0), b.column(0));
+        assert_eq!(a.column(1), b.column(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_state_rejected() {
+        let vars = vec![Variable::new("a", 2)];
+        let _ = Dataset::from_rows(vars, &[vec![2]]);
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = toy();
+        let (tr, te) = ds.split(2.0 / 3.0);
+        assert_eq!(tr.n_rows(), 2);
+        assert_eq!(te.n_rows(), 1);
+        assert_eq!(te.row(0), vec![1, 1]);
+    }
+
+    #[test]
+    fn project_selects_columns() {
+        let ds = toy();
+        let p = ds.project(&[1]);
+        assert_eq!(p.n_vars(), 1);
+        assert_eq!(p.variable(0).name, "b");
+        assert_eq!(p.column(0), &[2, 0, 1]);
+    }
+
+    #[test]
+    fn var_index_by_name() {
+        let ds = toy();
+        assert_eq!(ds.var_index("b"), Some(1));
+        assert_eq!(ds.var_index("zz"), None);
+    }
+}

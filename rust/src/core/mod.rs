@@ -1,0 +1,10 @@
+//! Core value types shared across the library: discrete variables,
+//! datasets, assignments and evidence.
+
+mod assignment;
+mod dataset;
+mod variable;
+
+pub use assignment::{Assignment, Evidence};
+pub use dataset::Dataset;
+pub use variable::{VarId, Variable};

@@ -1,0 +1,90 @@
+//! Discrete random variables.
+
+/// Index of a variable within a network or dataset. Variables are always
+/// referred to positionally; names are resolved once at the boundary.
+pub type VarId = usize;
+
+/// A discrete random variable: a name, a cardinality and (optionally)
+/// human-readable state names.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variable {
+    /// Unique name within its network/dataset.
+    pub name: String,
+    /// Number of states; all states are encoded `0..cardinality`.
+    pub cardinality: usize,
+    /// State names; either empty (states are displayed numerically) or
+    /// exactly `cardinality` entries.
+    pub states: Vec<String>,
+}
+
+impl Variable {
+    /// A variable with auto-numbered states.
+    pub fn new(name: impl Into<String>, cardinality: usize) -> Self {
+        assert!(cardinality >= 1, "variable needs at least one state");
+        Variable { name: name.into(), cardinality, states: Vec::new() }
+    }
+
+    /// A variable with explicit state names.
+    pub fn with_states(
+        name: impl Into<String>,
+        states: impl IntoIterator<Item = impl Into<String>>,
+    ) -> Self {
+        let states: Vec<String> = states.into_iter().map(Into::into).collect();
+        assert!(!states.is_empty(), "variable needs at least one state");
+        Variable { name: name.into(), cardinality: states.len(), states }
+    }
+
+    /// A binary variable with states `no`/`yes` (the convention of the
+    /// classic BN repository networks).
+    pub fn binary(name: impl Into<String>) -> Self {
+        Variable::with_states(name, ["no", "yes"])
+    }
+
+    /// Display name of a state.
+    pub fn state_name(&self, s: usize) -> String {
+        debug_assert!(s < self.cardinality);
+        self.states.get(s).cloned().unwrap_or_else(|| format!("s{s}"))
+    }
+
+    /// Resolve a state name to its index.
+    pub fn state_index(&self, name: &str) -> Option<usize> {
+        if let Some(i) = self.states.iter().position(|s| s == name) {
+            return Some(i);
+        }
+        // Numeric fallback for unnamed states.
+        name.strip_prefix('s')
+            .unwrap_or(name)
+            .parse::<usize>()
+            .ok()
+            .filter(|&i| i < self.cardinality)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_states_roundtrip() {
+        let v = Variable::with_states("smoke", ["no", "yes"]);
+        assert_eq!(v.cardinality, 2);
+        assert_eq!(v.state_name(1), "yes");
+        assert_eq!(v.state_index("yes"), Some(1));
+        assert_eq!(v.state_index("maybe"), None);
+    }
+
+    #[test]
+    fn numeric_states() {
+        let v = Variable::new("x", 3);
+        assert_eq!(v.state_name(2), "s2");
+        assert_eq!(v.state_index("s1"), Some(1));
+        assert_eq!(v.state_index("2"), Some(2));
+        assert_eq!(v.state_index("3"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_cardinality_panics() {
+        let _ = Variable::new("bad", 0);
+    }
+}

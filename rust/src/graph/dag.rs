@@ -1,0 +1,262 @@
+//! Directed acyclic graphs over `VarId`s.
+
+use crate::core::VarId;
+
+/// A DAG stored as parent and child adjacency lists (both kept sorted so
+/// iteration order — and therefore every downstream computation — is
+/// deterministic).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Dag {
+    parents: Vec<Vec<VarId>>,
+    children: Vec<Vec<VarId>>,
+}
+
+impl Dag {
+    pub fn new(n: usize) -> Self {
+        Dag { parents: vec![Vec::new(); n], children: vec![Vec::new(); n] }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.parents.iter().map(Vec::len).sum()
+    }
+
+    #[inline]
+    pub fn parents(&self, v: VarId) -> &[VarId] {
+        &self.parents[v]
+    }
+
+    #[inline]
+    pub fn children(&self, v: VarId) -> &[VarId] {
+        &self.children[v]
+    }
+
+    pub fn has_edge(&self, from: VarId, to: VarId) -> bool {
+        self.parents[to].binary_search(&from).is_ok()
+    }
+
+    /// Add edge `from -> to`. Panics if it would create a cycle or a
+    /// duplicate — structure-learning code checks before inserting.
+    pub fn add_edge(&mut self, from: VarId, to: VarId) {
+        assert!(from != to, "self loop");
+        assert!(!self.has_edge(from, to), "duplicate edge {from}->{to}");
+        assert!(
+            !self.has_path(to, from),
+            "edge {from}->{to} would create a cycle"
+        );
+        let i = self.parents[to].binary_search(&from).unwrap_err();
+        self.parents[to].insert(i, from);
+        let i = self.children[from].binary_search(&to).unwrap_err();
+        self.children[from].insert(i, to);
+    }
+
+    /// Add edge without the (O(V+E)) cycle check; callers that build from a
+    /// known-acyclic source (topologically generated synthetic networks,
+    /// file parsers that validate afterwards) use this and then call
+    /// [`Dag::topological_order`] once.
+    pub fn add_edge_unchecked(&mut self, from: VarId, to: VarId) {
+        assert!(from != to, "self loop");
+        if let Err(i) = self.parents[to].binary_search(&from) {
+            self.parents[to].insert(i, from);
+            let j = self.children[from].binary_search(&to).unwrap_err();
+            self.children[from].insert(j, to);
+        }
+    }
+
+    pub fn remove_edge(&mut self, from: VarId, to: VarId) {
+        if let Ok(i) = self.parents[to].binary_search(&from) {
+            self.parents[to].remove(i);
+            let j = self.children[from].binary_search(&to).unwrap();
+            self.children[from].remove(j);
+        }
+    }
+
+    /// DFS reachability `from -> to`.
+    pub fn has_path(&self, from: VarId, to: VarId) -> bool {
+        if from == to {
+            return true;
+        }
+        let mut seen = vec![false; self.n_nodes()];
+        let mut stack = vec![from];
+        seen[from] = true;
+        while let Some(v) = stack.pop() {
+            for &c in &self.children[v] {
+                if c == to {
+                    return true;
+                }
+                if !seen[c] {
+                    seen[c] = true;
+                    stack.push(c);
+                }
+            }
+        }
+        false
+    }
+
+    /// Kahn topological order; `None` if a cycle slipped in via
+    /// `add_edge_unchecked`.
+    pub fn topological_order(&self) -> Option<Vec<VarId>> {
+        let n = self.n_nodes();
+        let mut indeg: Vec<usize> = (0..n).map(|v| self.parents[v].len()).collect();
+        let mut queue: Vec<VarId> =
+            (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            order.push(v);
+            for &c in &self.children[v] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// All edges `(from, to)` in deterministic order.
+    pub fn edges(&self) -> Vec<(VarId, VarId)> {
+        let mut es = Vec::with_capacity(self.n_edges());
+        for to in 0..self.n_nodes() {
+            for &from in &self.parents[to] {
+                es.push((from, to));
+            }
+        }
+        es.sort_unstable();
+        es
+    }
+
+    /// Markov blanket of `v`: parents ∪ children ∪ co-parents.
+    pub fn markov_blanket(&self, v: VarId) -> Vec<VarId> {
+        let mut mb: Vec<VarId> = self.parents[v].to_vec();
+        for &c in &self.children[v] {
+            mb.push(c);
+            for &p in &self.parents[c] {
+                if p != v {
+                    mb.push(p);
+                }
+            }
+        }
+        mb.sort_unstable();
+        mb.dedup();
+        mb
+    }
+
+    /// Undirected skeleton.
+    pub fn skeleton(&self) -> super::UGraph {
+        let mut g = super::UGraph::new(self.n_nodes());
+        for (a, b) in self.edges() {
+            g.add_edge(a, b);
+        }
+        g
+    }
+
+    /// The CPDAG-defining v-structures `a -> c <- b` with `a`,`b`
+    /// non-adjacent, as `(min(a,b), max(a,b), c)` triples.
+    pub fn v_structures(&self) -> Vec<(VarId, VarId, VarId)> {
+        let mut vs = Vec::new();
+        for c in 0..self.n_nodes() {
+            let ps = &self.parents[c];
+            for i in 0..ps.len() {
+                for j in (i + 1)..ps.len() {
+                    let (a, b) = (ps[i], ps[j]);
+                    if !self.has_edge(a, b) && !self.has_edge(b, a) {
+                        vs.push((a, b, c));
+                    }
+                }
+            }
+        }
+        vs.sort_unstable();
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Dag {
+        // 0 -> 1 -> 2
+        let mut d = Dag::new(3);
+        d.add_edge(0, 1);
+        d.add_edge(1, 2);
+        d
+    }
+
+    #[test]
+    fn add_remove_edges() {
+        let mut d = chain();
+        assert!(d.has_edge(0, 1));
+        assert!(!d.has_edge(1, 0));
+        assert_eq!(d.n_edges(), 2);
+        d.remove_edge(0, 1);
+        assert!(!d.has_edge(0, 1));
+        assert_eq!(d.n_edges(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cycle_rejected() {
+        let mut d = chain();
+        d.add_edge(2, 0);
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let mut d = Dag::new(4);
+        d.add_edge(3, 1);
+        d.add_edge(1, 0);
+        d.add_edge(3, 2);
+        let order = d.topological_order().unwrap();
+        let pos: Vec<usize> =
+            (0..4).map(|v| order.iter().position(|&o| o == v).unwrap()).collect();
+        for (f, t) in d.edges() {
+            assert!(pos[f] < pos[t]);
+        }
+    }
+
+    #[test]
+    fn unchecked_cycle_detected_by_topo() {
+        let mut d = Dag::new(2);
+        d.add_edge_unchecked(0, 1);
+        d.add_edge_unchecked(1, 0);
+        assert!(d.topological_order().is_none());
+    }
+
+    #[test]
+    fn markov_blanket_collider() {
+        // 0 -> 2 <- 1, 2 -> 3
+        let mut d = Dag::new(4);
+        d.add_edge(0, 2);
+        d.add_edge(1, 2);
+        d.add_edge(2, 3);
+        assert_eq!(d.markov_blanket(0), vec![1, 2]);
+        assert_eq!(d.markov_blanket(2), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn v_structures_found() {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 2);
+        d.add_edge(1, 2);
+        assert_eq!(d.v_structures(), vec![(0, 1, 2)]);
+        // Marrying the parents removes the v-structure.
+        let mut d2 = d.clone();
+        d2.add_edge(0, 1);
+        assert!(d2.v_structures().is_empty());
+    }
+
+    #[test]
+    fn skeleton_drops_direction() {
+        let d = chain();
+        let s = d.skeleton();
+        assert!(s.has_edge(1, 0));
+        assert!(s.has_edge(2, 1));
+        assert_eq!(s.n_edges(), 2);
+    }
+}

@@ -1,0 +1,159 @@
+//! d-separation queries on DAGs (Pearl 1988) — the graphical criterion
+//! conditional-independence tests estimate from data. Used by the test
+//! suite as the ground truth oracle for PC's recovered independencies and
+//! exposed as a library feature (`fastpgm::graph::d_separated`).
+
+use crate::core::VarId;
+use super::Dag;
+
+/// Is `x` d-separated from `y` given the conditioning set `z`?
+///
+/// Implemented with the reachability formulation (Koller & Friedman,
+/// "Reachable" / Bayes-ball): a path is active while successive triples
+/// are active; colliders are active iff the collider or one of its
+/// descendants is in `z`.
+pub fn d_separated(dag: &Dag, x: VarId, y: VarId, z: &[VarId]) -> bool {
+    if x == y {
+        return false;
+    }
+    let n = dag.n_nodes();
+    let in_z = {
+        let mut b = vec![false; n];
+        for &v in z {
+            b[v] = true;
+        }
+        b
+    };
+    // Ancestors of z (needed for collider activation).
+    let mut z_anc = in_z.clone();
+    {
+        let mut stack: Vec<VarId> = z.to_vec();
+        while let Some(v) = stack.pop() {
+            for &p in dag.parents(v) {
+                if !z_anc[p] {
+                    z_anc[p] = true;
+                    stack.push(p);
+                }
+            }
+        }
+    }
+
+    // Bayes-ball: states are (node, direction) where direction is how we
+    // arrived: `true` = via an edge pointing *into* the node (from a
+    // parent), `false` = via an edge leaving the node (from a child).
+    let mut visited = vec![[false; 2]; n];
+    // Start from x as if we came "from a child" (can go anywhere).
+    let mut stack: Vec<(VarId, bool)> = vec![(x, false)];
+    while let Some((v, from_parent)) = stack.pop() {
+        let dir = usize::from(from_parent);
+        if visited[v][dir] {
+            continue;
+        }
+        visited[v][dir] = true;
+        if v == y {
+            return false; // active path found
+        }
+        if !from_parent {
+            // Arrived from a child (or start): if v not observed, pass to
+            // parents (chain against the edge) and to children.
+            if !in_z[v] {
+                for &p in dag.parents(v) {
+                    stack.push((p, false));
+                }
+                for &c in dag.children(v) {
+                    stack.push((c, true));
+                }
+            }
+        } else {
+            // Arrived from a parent.
+            if !in_z[v] {
+                // Chain: continue to children.
+                for &c in dag.children(v) {
+                    stack.push((c, true));
+                }
+            }
+            if z_anc[v] {
+                // Collider active (v in z or has descendant in z): bounce
+                // back up to parents.
+                for &p in dag.parents(v) {
+                    stack.push((p, false));
+                }
+            }
+        }
+    }
+    true
+}
+
+/// All variables d-connected to `x` given `z` (diagnostic helper).
+pub fn d_connected_set(dag: &Dag, x: VarId, z: &[VarId]) -> Vec<VarId> {
+    (0..dag.n_nodes())
+        .filter(|&y| y != x && !d_separated(dag, x, y, z))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1 -> 2 (chain), 3 -> 1 (extra parent), 1 -> 4.
+    fn chain() -> Dag {
+        let mut d = Dag::new(5);
+        d.add_edge(0, 1);
+        d.add_edge(1, 2);
+        d.add_edge(3, 1);
+        d.add_edge(1, 4);
+        d
+    }
+
+    #[test]
+    fn chain_blocked_by_mediator() {
+        let d = chain();
+        assert!(!d_separated(&d, 0, 2, &[]));
+        assert!(d_separated(&d, 0, 2, &[1]));
+    }
+
+    #[test]
+    fn fork_blocked_by_root() {
+        // 2 <- 1 -> 4: common cause 1.
+        let d = chain();
+        assert!(!d_separated(&d, 2, 4, &[]));
+        assert!(d_separated(&d, 2, 4, &[1]));
+    }
+
+    #[test]
+    fn collider_inverts() {
+        // 0 -> 1 <- 3: marginally independent, dependent given 1 or a
+        // descendant of 1.
+        let d = chain();
+        assert!(d_separated(&d, 0, 3, &[]));
+        assert!(!d_separated(&d, 0, 3, &[1]));
+        assert!(!d_separated(&d, 0, 3, &[2]), "descendant of collider activates");
+        assert!(!d_separated(&d, 0, 3, &[4]));
+    }
+
+    #[test]
+    fn asia_known_independencies() {
+        let net = crate::network::repository::asia();
+        let d = net.dag();
+        let idx = |n: &str| net.var_index(n).unwrap();
+        // asia ⟂ smoke
+        assert!(d_separated(d, idx("asia"), idx("smoke"), &[]));
+        // asia ⟂̸ dysp (path through tub, either)
+        assert!(!d_separated(d, idx("asia"), idx("dysp"), &[]));
+        // asia ⟂ dysp | either, bronc
+        assert!(d_separated(d, idx("asia"), idx("dysp"), &[idx("either"), idx("bronc")]));
+        // tub ⟂ lung, but tub ⟂̸ lung | either (collider)
+        assert!(d_separated(d, idx("tub"), idx("lung"), &[]));
+        assert!(!d_separated(d, idx("tub"), idx("lung"), &[idx("either")]));
+        // xray ⟂ smoke | either... path xray<-either<-lung<-smoke blocked
+        assert!(d_separated(d, idx("xray"), idx("smoke"), &[idx("either")]));
+    }
+
+    #[test]
+    fn d_connected_set_sane() {
+        let d = chain();
+        let conn = d_connected_set(&d, 0, &[]);
+        assert!(conn.contains(&1) && conn.contains(&2) && conn.contains(&4));
+        assert!(!conn.contains(&3));
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrates: DAGs (Bayesian-network structure), partially directed
+//! graphs (PC-stable output), and undirected graphs (skeletons, moral
+//! graphs, triangulation).
+
+mod dag;
+mod dsep;
+mod pdag;
+mod ugraph;
+
+pub use dag::Dag;
+pub use dsep::{d_connected_set, d_separated};
+pub use pdag::{EdgeMark, Pdag};
+pub use ugraph::UGraph;

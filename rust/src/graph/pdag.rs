@@ -1,0 +1,322 @@
+//! Partially directed graphs — the output space of constraint-based
+//! structure learning (CPDAGs) and the working representation during edge
+//! orientation (v-structures + Meek rules).
+
+use crate::core::VarId;
+use super::{Dag, UGraph};
+
+/// Mark of an edge incident to a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeMark {
+    /// `a — b` undirected.
+    Undirected,
+    /// `a -> b` directed out of `a`.
+    Directed,
+}
+
+/// A graph whose edges are each either directed or undirected.
+///
+/// Internally a dense pair-matrix of edge states — PC runs on at most a few
+/// hundred nodes, where O(n²) bytes is trivially small and constant-time
+/// edge updates matter (the orientation phase flips marks frequently).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pdag {
+    n: usize,
+    /// state[a*n+b]: 0 = none, 1 = a->b, 2 = a—b (mirrored as 2 in [b,a]).
+    state: Vec<u8>,
+}
+
+const NONE: u8 = 0;
+const DIR: u8 = 1; // row -> col
+const UND: u8 = 2;
+
+impl Pdag {
+    pub fn new(n: usize) -> Self {
+        Pdag { n, state: vec![NONE; n * n] }
+    }
+
+    /// Start from an undirected skeleton.
+    pub fn from_skeleton(g: &UGraph) -> Self {
+        let mut p = Pdag::new(g.n_nodes());
+        for (a, b) in g.edges() {
+            p.set_undirected(a, b);
+        }
+        p
+    }
+
+    /// View a DAG as a fully directed PDAG.
+    pub fn from_dag(d: &Dag) -> Self {
+        let mut p = Pdag::new(d.n_nodes());
+        for (f, t) in d.edges() {
+            p.orient(f, t);
+        }
+        p
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn idx(&self, a: VarId, b: VarId) -> usize {
+        a * self.n + b
+    }
+
+    pub fn has_directed(&self, from: VarId, to: VarId) -> bool {
+        self.state[self.idx(from, to)] == DIR
+    }
+
+    pub fn has_undirected(&self, a: VarId, b: VarId) -> bool {
+        self.state[self.idx(a, b)] == UND
+    }
+
+    /// Any edge (either mark) between `a` and `b`?
+    pub fn adjacent(&self, a: VarId, b: VarId) -> bool {
+        self.state[self.idx(a, b)] != NONE || self.state[self.idx(b, a)] != NONE
+    }
+
+    pub fn set_undirected(&mut self, a: VarId, b: VarId) {
+        assert!(a != b);
+        let (i, j) = (self.idx(a, b), self.idx(b, a));
+        self.state[i] = UND;
+        self.state[j] = UND;
+    }
+
+    /// Orient (or re-orient) the edge as `from -> to`.
+    pub fn orient(&mut self, from: VarId, to: VarId) {
+        assert!(from != to);
+        let (i, j) = (self.idx(from, to), self.idx(to, from));
+        self.state[i] = DIR;
+        self.state[j] = NONE;
+    }
+
+    pub fn remove_edge(&mut self, a: VarId, b: VarId) {
+        let (i, j) = (self.idx(a, b), self.idx(b, a));
+        self.state[i] = NONE;
+        self.state[j] = NONE;
+    }
+
+    /// All neighbors of `v` regardless of mark.
+    pub fn adjacents(&self, v: VarId) -> Vec<VarId> {
+        (0..self.n).filter(|&w| w != v && self.adjacent(v, w)).collect()
+    }
+
+    /// Nodes `w` with `w -> v`.
+    pub fn directed_parents(&self, v: VarId) -> Vec<VarId> {
+        (0..self.n).filter(|&w| self.has_directed(w, v)).collect()
+    }
+
+    /// Nodes `w` with `v -> w`.
+    pub fn directed_children(&self, v: VarId) -> Vec<VarId> {
+        (0..self.n).filter(|&w| self.has_directed(v, w)).collect()
+    }
+
+    /// Nodes `w` with `v — w`.
+    pub fn undirected_neighbors(&self, v: VarId) -> Vec<VarId> {
+        (0..self.n).filter(|&w| self.has_undirected(v, w)).collect()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        let mut c = 0;
+        for a in 0..self.n {
+            for b in 0..self.n {
+                match self.state[self.idx(a, b)] {
+                    DIR => c += 2,
+                    UND if a < b => c += 2,
+                    _ => {}
+                }
+            }
+        }
+        c / 2
+    }
+
+    /// Directed edges `(from, to)`, sorted.
+    pub fn directed_edges(&self) -> Vec<(VarId, VarId)> {
+        let mut es = Vec::new();
+        for a in 0..self.n {
+            for b in 0..self.n {
+                if self.has_directed(a, b) {
+                    es.push((a, b));
+                }
+            }
+        }
+        es
+    }
+
+    /// Undirected edges `(a, b)` with `a < b`, sorted.
+    pub fn undirected_edges(&self) -> Vec<(VarId, VarId)> {
+        let mut es = Vec::new();
+        for a in 0..self.n {
+            for b in (a + 1)..self.n {
+                if self.has_undirected(a, b) {
+                    es.push((a, b));
+                }
+            }
+        }
+        es
+    }
+
+    /// Underlying skeleton.
+    pub fn skeleton(&self) -> UGraph {
+        let mut g = UGraph::new(self.n);
+        for a in 0..self.n {
+            for b in (a + 1)..self.n {
+                if self.adjacent(a, b) {
+                    g.add_edge(a, b);
+                }
+            }
+        }
+        g
+    }
+
+    /// Is there a *directed* path `from ⇒ to` using only directed edges?
+    pub fn has_directed_path(&self, from: VarId, to: VarId) -> bool {
+        if from == to {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![from];
+        seen[from] = true;
+        while let Some(v) = stack.pop() {
+            for w in 0..self.n {
+                if self.has_directed(v, w) {
+                    if w == to {
+                        return true;
+                    }
+                    if !seen[w] {
+                        seen[w] = true;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Extend to a DAG: orient remaining undirected edges consistently
+    /// (greedy extension; exact for CPDAGs of DAGs in practice). Returns
+    /// `None` if the directed part already has a cycle.
+    pub fn to_dag(&self) -> Option<Dag> {
+        let mut work = self.clone();
+        // Repeatedly orient an undirected edge that does not create a new
+        // v-structure or cycle (Dor & Tarsi-style extension, simplified).
+        loop {
+            let und = work.undirected_edges();
+            if und.is_empty() {
+                break;
+            }
+            let mut progressed = false;
+            for (a, b) in und {
+                // Prefer orientations that don't form a cycle.
+                if !work.has_directed_path(b, a) {
+                    work.orient(a, b);
+                    progressed = true;
+                } else if !work.has_directed_path(a, b) {
+                    work.orient(b, a);
+                    progressed = true;
+                } else {
+                    return None;
+                }
+            }
+            if !progressed {
+                return None;
+            }
+        }
+        let mut dag = Dag::new(self.n);
+        for (f, t) in work.directed_edges() {
+            dag.add_edge_unchecked(f, t);
+        }
+        dag.topological_order().map(|_| dag)
+    }
+
+    /// The v-structures (colliders with non-adjacent parents) of the
+    /// directed part, as `(min(a,b), max(a,b), c)`.
+    pub fn v_structures(&self) -> Vec<(VarId, VarId, VarId)> {
+        let mut vs = Vec::new();
+        for c in 0..self.n {
+            let ps = self.directed_parents(c);
+            for i in 0..ps.len() {
+                for j in (i + 1)..ps.len() {
+                    let (a, b) = (ps[i], ps[j]);
+                    if !self.adjacent(a, b) {
+                        vs.push((a.min(b), a.max(b), c));
+                    }
+                }
+            }
+        }
+        vs.sort_unstable();
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marks_transition() {
+        let mut p = Pdag::new(3);
+        p.set_undirected(0, 1);
+        assert!(p.has_undirected(1, 0));
+        assert!(p.adjacent(0, 1));
+        p.orient(0, 1);
+        assert!(p.has_directed(0, 1));
+        assert!(!p.has_undirected(0, 1));
+        assert!(p.adjacent(1, 0));
+        p.remove_edge(0, 1);
+        assert!(!p.adjacent(0, 1));
+    }
+
+    #[test]
+    fn neighbor_queries() {
+        let mut p = Pdag::new(4);
+        p.orient(0, 2);
+        p.orient(1, 2);
+        p.set_undirected(2, 3);
+        assert_eq!(p.directed_parents(2), vec![0, 1]);
+        assert_eq!(p.directed_children(0), vec![2]);
+        assert_eq!(p.undirected_neighbors(2), vec![3]);
+        assert_eq!(p.adjacents(2), vec![0, 1, 3]);
+        assert_eq!(p.n_edges(), 3);
+    }
+
+    #[test]
+    fn from_dag_roundtrip() {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 1);
+        d.add_edge(1, 2);
+        let p = Pdag::from_dag(&d);
+        assert_eq!(p.directed_edges(), vec![(0, 1), (1, 2)]);
+        let d2 = p.to_dag().unwrap();
+        assert_eq!(d2.edges(), d.edges());
+    }
+
+    #[test]
+    fn to_dag_orients_undirected() {
+        let mut p = Pdag::new(3);
+        p.orient(0, 1);
+        p.set_undirected(1, 2);
+        let d = p.to_dag().unwrap();
+        assert_eq!(d.n_edges(), 2);
+        assert!(d.topological_order().is_some());
+    }
+
+    #[test]
+    fn v_structures_detected() {
+        let mut p = Pdag::new(3);
+        p.orient(0, 2);
+        p.orient(1, 2);
+        assert_eq!(p.v_structures(), vec![(0, 1, 2)]);
+    }
+
+    #[test]
+    fn directed_path() {
+        let mut p = Pdag::new(4);
+        p.orient(0, 1);
+        p.orient(1, 2);
+        p.set_undirected(2, 3);
+        assert!(p.has_directed_path(0, 2));
+        assert!(!p.has_directed_path(0, 3)); // undirected edge doesn't count
+        assert!(!p.has_directed_path(2, 0));
+    }
+}

@@ -1,0 +1,174 @@
+//! Undirected graphs: PC skeletons, moral graphs, triangulated graphs.
+
+use crate::core::VarId;
+
+/// Undirected graph with sorted adjacency lists.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct UGraph {
+    adj: Vec<Vec<VarId>>,
+}
+
+impl UGraph {
+    pub fn new(n: usize) -> Self {
+        UGraph { adj: vec![Vec::new(); n] }
+    }
+
+    /// Complete graph over `n` nodes — the PC algorithm's starting point.
+    pub fn complete(n: usize) -> Self {
+        let mut g = UGraph::new(n);
+        for a in 0..n {
+            g.adj[a] = (0..n).filter(|&b| b != a).collect();
+        }
+        g
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VarId) -> &[VarId] {
+        &self.adj[v]
+    }
+
+    pub fn degree(&self, v: VarId) -> usize {
+        self.adj[v].len()
+    }
+
+    #[inline]
+    pub fn has_edge(&self, a: VarId, b: VarId) -> bool {
+        self.adj[a].binary_search(&b).is_ok()
+    }
+
+    pub fn add_edge(&mut self, a: VarId, b: VarId) {
+        assert!(a != b, "self loop");
+        if let Err(i) = self.adj[a].binary_search(&b) {
+            self.adj[a].insert(i, b);
+            let j = self.adj[b].binary_search(&a).unwrap_err();
+            self.adj[b].insert(j, a);
+        }
+    }
+
+    pub fn remove_edge(&mut self, a: VarId, b: VarId) {
+        if let Ok(i) = self.adj[a].binary_search(&b) {
+            self.adj[a].remove(i);
+            let j = self.adj[b].binary_search(&a).unwrap();
+            self.adj[b].remove(j);
+        }
+    }
+
+    /// Edges as `(a, b)` with `a < b`, sorted.
+    pub fn edges(&self) -> Vec<(VarId, VarId)> {
+        let mut es = Vec::with_capacity(self.n_edges());
+        for a in 0..self.n_nodes() {
+            for &b in &self.adj[a] {
+                if a < b {
+                    es.push((a, b));
+                }
+            }
+        }
+        es
+    }
+
+    /// Do the given nodes form a clique?
+    pub fn is_clique(&self, nodes: &[VarId]) -> bool {
+        for (i, &a) in nodes.iter().enumerate() {
+            for &b in &nodes[i + 1..] {
+                if !self.has_edge(a, b) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Connect every pair in `nodes` (fill-in during triangulation).
+    pub fn make_clique(&mut self, nodes: &[VarId]) {
+        for (i, &a) in nodes.iter().enumerate() {
+            for &b in &nodes[i + 1..] {
+                self.add_edge(a, b);
+            }
+        }
+    }
+
+    /// Connected components, each sorted; components sorted by minimum node.
+    pub fn components(&self) -> Vec<Vec<VarId>> {
+        let n = self.n_nodes();
+        let mut seen = vec![false; n];
+        let mut comps = Vec::new();
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            let mut comp = vec![s];
+            seen[s] = true;
+            let mut stack = vec![s];
+            while let Some(v) = stack.pop() {
+                for &w in &self.adj[v] {
+                    if !seen[w] {
+                        seen[w] = true;
+                        comp.push(w);
+                        stack.push(w);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            comps.push(comp);
+        }
+        comps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_edge_count() {
+        let g = UGraph::complete(5);
+        assert_eq!(g.n_edges(), 10);
+        assert!(g.has_edge(0, 4));
+        assert_eq!(g.degree(2), 4);
+    }
+
+    #[test]
+    fn add_remove_symmetric() {
+        let mut g = UGraph::new(3);
+        g.add_edge(0, 2);
+        assert!(g.has_edge(2, 0));
+        g.add_edge(0, 2); // idempotent
+        assert_eq!(g.n_edges(), 1);
+        g.remove_edge(2, 0);
+        assert_eq!(g.n_edges(), 0);
+    }
+
+    #[test]
+    fn clique_ops() {
+        let mut g = UGraph::new(4);
+        g.make_clique(&[0, 1, 3]);
+        assert!(g.is_clique(&[0, 1, 3]));
+        assert!(!g.is_clique(&[0, 1, 2]));
+        assert_eq!(g.n_edges(), 3);
+    }
+
+    #[test]
+    fn components_found() {
+        let mut g = UGraph::new(5);
+        g.add_edge(0, 1);
+        g.add_edge(3, 4);
+        let comps = g.components();
+        assert_eq!(comps, vec![vec![0, 1], vec![2], vec![3, 4]]);
+    }
+
+    #[test]
+    fn edges_sorted_unique() {
+        let mut g = UGraph::new(4);
+        g.add_edge(2, 1);
+        g.add_edge(0, 3);
+        assert_eq!(g.edges(), vec![(0, 3), (1, 2)]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Gibbs sampling — the MCMC baseline every sampling comparison includes.
+//! Each sweep resamples every unobserved variable from its full
+//! conditional given the current state of its Markov blanket.
+
+use crate::core::{Assignment, Evidence, VarId};
+use crate::inference::{InferenceEngine, Posterior};
+use crate::network::BayesianNetwork;
+use crate::parallel::parallel_map;
+use crate::rng::Pcg;
+use super::{apply_evidence_posteriors, ApproxOptions, PosteriorAccumulator};
+
+pub struct GibbsSampling<'n> {
+    net: &'n BayesianNetwork,
+    pub opts: ApproxOptions,
+    /// Sweeps discarded before collecting statistics.
+    pub burn_in: usize,
+    /// Number of independent chains (chains parallelize; samples within a
+    /// chain are inherently sequential).
+    pub chains: usize,
+}
+
+impl<'n> GibbsSampling<'n> {
+    pub fn new(net: &'n BayesianNetwork, opts: ApproxOptions) -> Self {
+        GibbsSampling { net, opts, burn_in: 200, chains: 4 }
+    }
+
+    /// Full conditional P(v | markov blanket) ∝ P(v | pa(v)) · Π_c P(c | pa(c)).
+    #[inline]
+    fn full_conditional(&self, v: VarId, a: &mut Assignment, buf: &mut Vec<f64>) {
+        let card = self.net.cardinality(v);
+        buf.clear();
+        buf.resize(card, 1.0);
+        let cpt = self.net.cpt(v);
+        let cfg = cpt.parent_config(a);
+        for (s, b) in buf.iter_mut().enumerate() {
+            *b = cpt.prob(cfg, s);
+        }
+        for &c in self.net.dag().children(v) {
+            let ccpt = self.net.cpt(c);
+            let cs = a.get(c);
+            for s in 0..card {
+                a.set(v, s);
+                let ccfg = ccpt.parent_config(a);
+                buf[s] *= ccpt.prob(ccfg, cs);
+            }
+        }
+        let total: f64 = buf.iter().sum();
+        if total > 0.0 {
+            for b in buf.iter_mut() {
+                *b /= total;
+            }
+        } else {
+            for b in buf.iter_mut() {
+                *b = 1.0 / card as f64;
+            }
+        }
+    }
+
+    fn run_chain(
+        &self,
+        mut rng: Pcg,
+        sweeps: usize,
+        evidence: &Evidence,
+    ) -> PosteriorAccumulator {
+        let net = self.net;
+        let mut acc = PosteriorAccumulator::new(net);
+        // Init from a forward sample clamped to evidence (a legal state
+        // with positive probability in most networks).
+        let mut a = crate::sampling::forward_sample(net, &mut rng);
+        evidence.apply_to(&mut a);
+        let unobserved: Vec<VarId> =
+            (0..net.n_vars()).filter(|&v| !evidence.contains(v)).collect();
+        let mut buf = Vec::new();
+        for sweep in 0..(self.burn_in + sweeps) {
+            for &v in &unobserved {
+                self.full_conditional(v, &mut a, &mut buf);
+                let s = rng.categorical(&buf);
+                a.set(v, s);
+            }
+            if sweep >= self.burn_in {
+                acc.add(&a.values, 1.0);
+            }
+        }
+        acc
+    }
+}
+
+impl InferenceEngine for GibbsSampling<'_> {
+    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
+        self.query_all(evidence).swap_remove(var)
+    }
+
+    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior> {
+        let chains = self.chains.max(1);
+        let sweeps_per_chain = self.opts.n_samples.div_ceil(chains);
+        let mut root = Pcg::seed_from(self.opts.seed ^ 0x61BB5);
+        let seeds: Vec<Pcg> = (0..chains).map(|c| root.split(c as u64)).collect();
+        let partials: Vec<PosteriorAccumulator> =
+            parallel_map(chains, self.opts.threads, 1, |c| {
+                self.run_chain(seeds[c].clone(), sweeps_per_chain, evidence)
+            });
+        let mut acc = PosteriorAccumulator::new(self.net);
+        for p in &partials {
+            acc.merge(p);
+        }
+        let mut posts = acc.posteriors(self.net.n_vars());
+        apply_evidence_posteriors(self.net, evidence, &mut posts);
+        posts
+    }
+
+    fn name(&self) -> &'static str {
+        "gibbs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn converges_on_cancer() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(3, 1); // xray positive
+        let mut gibbs = GibbsSampling::new(
+            &net,
+            ApproxOptions { n_samples: 40_000, ..Default::default() },
+        );
+        let posts = gibbs.query_all(&ev);
+        for v in 0..net.n_vars() {
+            let expect = net.brute_force_posterior(v, &ev);
+            assert_close_dist(&posts[v], &expect, 0.05, &format!("var {v}"));
+        }
+    }
+
+    #[test]
+    fn converges_on_sprinkler_loop() {
+        let net = repository::sprinkler();
+        let ev = Evidence::new().with(3, 1);
+        let mut gibbs = GibbsSampling::new(
+            &net,
+            ApproxOptions { n_samples: 60_000, ..Default::default() },
+        );
+        let posts = gibbs.query_all(&ev);
+        for v in 0..net.n_vars() {
+            let expect = net.brute_force_posterior(v, &ev);
+            assert_close_dist(&posts[v], &expect, 0.05, &format!("var {v}"));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let net = repository::earthquake();
+        let ev = Evidence::new().with(2, 1);
+        let run = |threads| {
+            GibbsSampling::new(
+                &net,
+                ApproxOptions { n_samples: 4_000, threads, ..Default::default() },
+            )
+            .query_all(&ev)
+        };
+        assert_eq!(run(1), run(2));
+    }
+
+    #[test]
+    fn full_conditional_is_distribution() {
+        let net = repository::asia();
+        let gibbs = GibbsSampling::new(&net, ApproxOptions::default());
+        let mut rng = Pcg::seed_from(9);
+        let mut a = crate::sampling::forward_sample(&net, &mut rng);
+        let mut buf = Vec::new();
+        for v in 0..net.n_vars() {
+            gibbs.full_conditional(v, &mut a, &mut buf);
+            assert!((buf.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+}

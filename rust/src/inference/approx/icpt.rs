@@ -1,0 +1,225 @@
+//! Importance CPTs (ICPTs): a mutable copy of a network's CPTs used as the
+//! proposal distribution by the adaptive importance samplers (SIS, AIS-BN,
+//! EPIS-BN). Evidence variables are clamped; non-evidence variables are
+//! sampled from the ICPT rows, and each sample is weighted by
+//! `P(sample, e) / Q(sample)`.
+
+use crate::core::{Assignment, Evidence, VarId};
+use crate::network::BayesianNetwork;
+use crate::rng::Pcg;
+
+/// Proposal distribution with the same factorization as the network.
+#[derive(Clone, Debug)]
+pub struct ImportanceCpts {
+    /// `rows[v][cfg * card + state]`, same layout as [`crate::network::Cpt`].
+    rows: Vec<Vec<f64>>,
+    cards: Vec<usize>,
+}
+
+impl ImportanceCpts {
+    /// Initialize as an exact copy of the network's CPTs.
+    pub fn from_network(net: &BayesianNetwork) -> Self {
+        let rows = (0..net.n_vars()).map(|v| net.cpt(v).table.clone()).collect();
+        let cards = (0..net.n_vars()).map(|v| net.cardinality(v)).collect();
+        ImportanceCpts { rows, cards }
+    }
+
+    /// AIS-BN initialization heuristic: flatten the ICPT rows of the
+    /// *parents of evidence variables* toward uniform, which counteracts
+    /// the mismatch between prior and posterior under unlikely evidence
+    /// (Cheng & Druzdzel 2000, heuristic 2).
+    pub fn flatten_evidence_parents(&mut self, net: &BayesianNetwork, ev: &Evidence) {
+        let mut targets: Vec<VarId> = Vec::new();
+        for (v, _) in ev.iter() {
+            for &p in net.parents(v) {
+                if !ev.contains(p) && !targets.contains(&p) {
+                    targets.push(p);
+                }
+            }
+        }
+        for v in targets {
+            let card = self.cards[v];
+            let uniform = 1.0 / card as f64;
+            for x in &mut self.rows[v] {
+                *x = 0.5 * *x + 0.5 * uniform;
+            }
+        }
+    }
+
+    /// Replace variable `v`'s proposal rows with a mixture
+    /// `(1 - eta) * current + eta * target` where `target` is a
+    /// per-state distribution broadcast over all parent configs (used by
+    /// self-importance updating and EPIS initialization).
+    pub fn blend_marginal(&mut self, v: VarId, target: &[f64], eta: f64) {
+        let card = self.cards[v];
+        debug_assert_eq!(target.len(), card);
+        for cfg_row in self.rows[v].chunks_mut(card) {
+            for (s, x) in cfg_row.iter_mut().enumerate() {
+                *x = (1.0 - eta) * *x + eta * target[s];
+            }
+            // Renormalize the row defensively.
+            let t: f64 = cfg_row.iter().sum();
+            if t > 0.0 {
+                for x in cfg_row.iter_mut() {
+                    *x /= t;
+                }
+            }
+        }
+    }
+
+    /// Per-(config,state) learning update toward importance-weighted
+    /// empirical estimates (AIS-BN's ICPT learning step):
+    /// `q' = q + eta * (p_hat - q)` row by row.
+    pub fn learn_rows(&mut self, v: VarId, estimates: &[f64], eta: f64) {
+        debug_assert_eq!(estimates.len(), self.rows[v].len());
+        let card = self.cards[v];
+        for (cfg, row) in self.rows[v].chunks_mut(card).enumerate() {
+            let est = &estimates[cfg * card..(cfg + 1) * card];
+            let est_total: f64 = est.iter().sum();
+            if est_total <= 0.0 {
+                continue; // no data for this config this round
+            }
+            for (s, x) in row.iter_mut().enumerate() {
+                let p_hat = est[s] / est_total;
+                *x += eta * (p_hat - *x);
+                // ε-floor keeps the proposal absolutely continuous wrt P.
+                *x = x.max(1e-4);
+            }
+            let t: f64 = row.iter().sum();
+            for x in row.iter_mut() {
+                *x /= t;
+            }
+        }
+    }
+
+    /// Proposal row for `(v, cfg)`.
+    #[inline]
+    pub fn row(&self, v: VarId, cfg: usize) -> &[f64] {
+        let card = self.cards[v];
+        &self.rows[v][cfg * card..(cfg + 1) * card]
+    }
+
+    #[inline]
+    pub fn prob(&self, v: VarId, cfg: usize, state: usize) -> f64 {
+        self.rows[v][cfg * self.cards[v] + state]
+    }
+
+    pub fn rows_of(&self, v: VarId) -> &[f64] {
+        &self.rows[v]
+    }
+
+    /// Replace all proposal rows of `v` (rows must already be normalized
+    /// per parent configuration).
+    pub fn set_rows(&mut self, v: VarId, rows: Vec<f64>) {
+        assert_eq!(rows.len(), self.rows[v].len(), "row block size mismatch");
+        self.rows[v] = rows;
+    }
+
+    /// Draw one importance sample; returns the weight
+    /// `P(sample, e) / Q(sample)`.
+    #[inline]
+    pub fn sample_into(
+        &self,
+        net: &BayesianNetwork,
+        evidence: &Evidence,
+        rng: &mut Pcg,
+        a: &mut Assignment,
+    ) -> f64 {
+        let mut weight = 1.0f64;
+        for &v in net.topological_order() {
+            let cpt = net.cpt(v);
+            let cfg = cpt.parent_config(a);
+            match evidence.get(v) {
+                Some(s) => {
+                    a.set(v, s);
+                    weight *= cpt.prob(cfg, s);
+                }
+                None => {
+                    let q_row = self.row(v, cfg);
+                    let s = rng.categorical(q_row);
+                    a.set(v, s);
+                    let q = q_row[s];
+                    let p = cpt.prob(cfg, s);
+                    if q > 0.0 {
+                        weight *= p / q;
+                    } else {
+                        return 0.0;
+                    }
+                }
+            }
+        }
+        weight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    #[test]
+    fn from_network_matches_cpts() {
+        let net = repository::cancer();
+        let icpt = ImportanceCpts::from_network(&net);
+        for v in 0..net.n_vars() {
+            assert_eq!(icpt.rows_of(v), net.cpt(v).table.as_slice());
+        }
+    }
+
+    #[test]
+    fn icpt_equal_to_cpt_gives_lw_weights() {
+        // With Q = P, the importance weight reduces to the likelihood of
+        // the evidence (same as likelihood weighting).
+        let net = repository::sprinkler();
+        let icpt = ImportanceCpts::from_network(&net);
+        let ev = Evidence::new().with(3, 1);
+        let mut rng = Pcg::seed_from(1);
+        let mut a = Assignment::zeros(net.n_vars());
+        for _ in 0..100 {
+            let w = icpt.sample_into(&net, &ev, &mut rng, &mut a);
+            let cpt = net.cpt(3);
+            let expect = cpt.prob(cpt.parent_config(&a), 1);
+            assert!((w - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blend_marginal_moves_rows() {
+        let net = repository::cancer();
+        let mut icpt = ImportanceCpts::from_network(&net);
+        icpt.blend_marginal(2, &[0.5, 0.5], 1.0);
+        for cfg in 0..4 {
+            let r = icpt.row(2, cfg);
+            assert!((r[0] - 0.5).abs() < 1e-9 && (r[1] - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn learn_rows_converges_to_estimates() {
+        let net = repository::cancer();
+        let mut icpt = ImportanceCpts::from_network(&net);
+        // Pretend empirical estimates say state 1 dominates everywhere.
+        let est = vec![1.0, 9.0, 2.0, 18.0, 1.0, 9.0, 3.0, 27.0];
+        for _ in 0..50 {
+            icpt.learn_rows(2, &est, 0.4);
+        }
+        for cfg in 0..4 {
+            assert!((icpt.prob(2, cfg, 1) - 0.9).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn rows_stay_normalized() {
+        let net = repository::earthquake();
+        let mut icpt = ImportanceCpts::from_network(&net);
+        let ev = Evidence::new().with(3, 1).with(4, 1);
+        icpt.flatten_evidence_parents(&net, &ev);
+        for v in 0..net.n_vars() {
+            let card = net.cardinality(v);
+            for cfg in 0..net.cpt(v).n_parent_configs() {
+                let s: f64 = icpt.row(v, cfg).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+}

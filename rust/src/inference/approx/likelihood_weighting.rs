@@ -1,0 +1,150 @@
+//! Likelihood weighting (Fung & Chang 1990; Shachter & Peot 1990):
+//! evidence variables are clamped rather than sampled; each sample is
+//! weighted by the likelihood of the evidence given its sampled parents.
+
+use crate::core::{Assignment, Evidence, VarId};
+use crate::inference::{InferenceEngine, Posterior};
+use crate::network::BayesianNetwork;
+use crate::rng::Pcg;
+use super::{apply_evidence_posteriors, run_sampler, ApproxOptions};
+
+pub struct LikelihoodWeighting<'n> {
+    net: &'n BayesianNetwork,
+    pub opts: ApproxOptions,
+}
+
+impl<'n> LikelihoodWeighting<'n> {
+    pub fn new(net: &'n BayesianNetwork, opts: ApproxOptions) -> Self {
+        LikelihoodWeighting { net, opts }
+    }
+}
+
+/// Draw one likelihood-weighted sample; returns its weight.
+#[inline]
+pub(crate) fn lw_sample_into(
+    net: &BayesianNetwork,
+    evidence: &Evidence,
+    rng: &mut Pcg,
+    a: &mut Assignment,
+) -> f64 {
+    let mut w = 1.0;
+    for &v in net.topological_order() {
+        let cpt = net.cpt(v);
+        let cfg = cpt.parent_config(a);
+        match evidence.get(v) {
+            Some(s) => {
+                w *= cpt.prob(cfg, s);
+                a.set(v, s);
+            }
+            None => {
+                let row = cpt.row(cfg);
+                a.set(v, rng.categorical(row));
+            }
+        }
+    }
+    w
+}
+
+impl InferenceEngine for LikelihoodWeighting<'_> {
+    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
+        self.query_all(evidence).swap_remove(var)
+    }
+
+    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior> {
+        let net = self.net;
+        let acc = run_sampler(net, &self.opts, |rng, count, sink| {
+            let mut a = Assignment::zeros(net.n_vars());
+            for _ in 0..count {
+                let w = lw_sample_into(net, evidence, rng, &mut a);
+                if w > 0.0 {
+                    sink.push(&a.values, w);
+                }
+            }
+        });
+        let mut posts = acc.posteriors(net.n_vars());
+        apply_evidence_posteriors(net, evidence, &mut posts);
+        posts
+    }
+
+    fn name(&self) -> &'static str {
+        "likelihood-weighting"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn matches_exact_on_asia() {
+        let net = repository::asia();
+        let ev = Evidence::new()
+            .with(net.var_index("xray").unwrap(), 1)
+            .with(net.var_index("dysp").unwrap(), 1);
+        let mut lw = LikelihoodWeighting::new(
+            &net,
+            ApproxOptions { n_samples: 120_000, ..Default::default() },
+        );
+        let posts = lw.query_all(&ev);
+        for v in 0..net.n_vars() {
+            let expect = net.brute_force_posterior(v, &ev);
+            assert_close_dist(&posts[v], &expect, 0.03, &format!("var {v}"));
+        }
+    }
+
+    #[test]
+    fn handles_rare_evidence_better_than_rejection() {
+        // Evidence P(tub=yes) ≈ 0.0104: rejection keeps ~1% of samples;
+        // LW keeps all of them (weighted).
+        let net = repository::asia();
+        let tub = net.var_index("tub").unwrap();
+        let ev = Evidence::new().with(tub, 1);
+        let mut lw = LikelihoodWeighting::new(
+            &net,
+            ApproxOptions { n_samples: 30_000, ..Default::default() },
+        );
+        let posts = lw.query_all(&ev);
+        let asia = net.var_index("asia").unwrap();
+        let expect = net.brute_force_posterior(asia, &ev);
+        assert_close_dist(&posts[asia], &expect, 0.03, "asia | tub");
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let net = repository::survey();
+        let ev = Evidence::new().with(5, 2);
+        let run = |threads| {
+            LikelihoodWeighting::new(
+                &net,
+                ApproxOptions { n_samples: 20_000, threads, ..Default::default() },
+            )
+            .query_all(&ev)
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn zero_weight_samples_skipped() {
+        // Impossible evidence (either=no given tub=yes forced upstream
+        // can't happen here, so use evidence with positive prob): check
+        // total behaves. Deterministic node: either=yes & lung=no & tub=no
+        // has zero probability.
+        let net = repository::asia();
+        let ev = Evidence::new()
+            .with(net.var_index("either").unwrap(), 1)
+            .with(net.var_index("tub").unwrap(), 0)
+            .with(net.var_index("lung").unwrap(), 0);
+        let mut lw = LikelihoodWeighting::new(
+            &net,
+            ApproxOptions { n_samples: 5_000, ..Default::default() },
+        );
+        let posts = lw.query_all(&ev);
+        // Unqueryable (zero-probability) evidence: engine falls back to
+        // uniform for unobserved variables rather than NaN.
+        for v in 0..net.n_vars() {
+            assert!(posts[v].iter().all(|p| p.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Approximate inference: loopy belief propagation plus the five sampling
+//! algorithms the paper lists (probabilistic logic sampling, likelihood
+//! weighting, self-importance sampling, AIS-BN, EPIS-BN), with
+//! sample-level parallelism (optimization vi) and the data-fusion /
+//! data-reordering locality optimizations (optimization vii).
+
+mod ais_bn;
+mod epis_bn;
+mod gibbs;
+mod icpt;
+mod likelihood_weighting;
+mod logic_sampling;
+mod loopy_bp;
+mod self_importance;
+
+pub use ais_bn::AisBn;
+pub use epis_bn::EpisBn;
+pub use gibbs::GibbsSampling;
+pub use icpt::ImportanceCpts;
+pub use likelihood_weighting::LikelihoodWeighting;
+pub use logic_sampling::LogicSampling;
+pub use loopy_bp::{LoopyBp, LoopyBpOptions};
+pub use self_importance::SelfImportance;
+
+use crate::core::{Evidence, VarId};
+use crate::network::BayesianNetwork;
+use crate::parallel::parallel_map;
+use crate::rng::Pcg;
+
+/// Shared configuration for the sampling engines.
+#[derive(Clone, Debug)]
+pub struct ApproxOptions {
+    /// Total number of samples to draw.
+    pub n_samples: usize,
+    /// Worker threads (sample-level parallelism, opt vi).
+    pub threads: usize,
+    /// RNG seed; every engine is deterministic given (seed, n_samples) —
+    /// including under parallelism, because chunks pre-split RNG streams.
+    pub seed: u64,
+    /// Data fusion + reordering (opt vii): accumulate posteriors inline
+    /// into one flat locality-friendly buffer. `false` materializes all
+    /// samples first and accumulates in a second pass (ablation baseline
+    /// for bench E6).
+    pub fusion: bool,
+    /// Samples per work-pool chunk.
+    pub chunk: usize,
+}
+
+impl Default for ApproxOptions {
+    fn default() -> Self {
+        ApproxOptions {
+            n_samples: 20_000,
+            threads: 1,
+            seed: 0x5EED,
+            fusion: true,
+            chunk: 2048,
+        }
+    }
+}
+
+/// Flat weighted-count accumulator over all `(variable, state)` pairs —
+/// the "fused" data layout: one contiguous buffer, variable offsets
+/// precomputed, written in topological order exactly as samples are
+/// generated (data reordering).
+#[derive(Clone, Debug)]
+pub struct PosteriorAccumulator {
+    offsets: Vec<usize>,
+    acc: Vec<f64>,
+    pub total_weight: f64,
+    pub n_samples: usize,
+}
+
+impl PosteriorAccumulator {
+    pub fn new(net: &BayesianNetwork) -> Self {
+        let mut offsets = Vec::with_capacity(net.n_vars() + 1);
+        let mut off = 0usize;
+        for v in 0..net.n_vars() {
+            offsets.push(off);
+            off += net.cardinality(v);
+        }
+        offsets.push(off);
+        PosteriorAccumulator {
+            offsets,
+            acc: vec![0.0; off],
+            total_weight: 0.0,
+            n_samples: 0,
+        }
+    }
+
+    /// Add one weighted sample (states indexed per variable).
+    #[inline]
+    pub fn add(&mut self, states: &[u8], weight: f64) {
+        for (v, &s) in states.iter().enumerate() {
+            self.acc[self.offsets[v] + s as usize] += weight;
+        }
+        self.total_weight += weight;
+        self.n_samples += 1;
+    }
+
+    /// Merge a partial accumulator (parallel reduction).
+    pub fn merge(&mut self, other: &PosteriorAccumulator) {
+        for (a, b) in self.acc.iter_mut().zip(&other.acc) {
+            *a += b;
+        }
+        self.total_weight += other.total_weight;
+        self.n_samples += other.n_samples;
+    }
+
+    /// Normalized posterior of one variable (uniform if no mass).
+    pub fn posterior(&self, v: VarId) -> Vec<f64> {
+        let slice = &self.acc[self.offsets[v]..self.offsets[v + 1]];
+        let s: f64 = slice.iter().sum();
+        if s > 0.0 {
+            slice.iter().map(|&x| x / s).collect()
+        } else {
+            vec![1.0 / slice.len() as f64; slice.len()]
+        }
+    }
+
+    pub fn posteriors(&self, n_vars: usize) -> Vec<Vec<f64>> {
+        (0..n_vars).map(|v| self.posterior(v)).collect()
+    }
+}
+
+/// Run a sampling kernel over all chunks with sample-level parallelism.
+///
+/// `kernel(rng, count, acc)` draws `count` samples into the accumulator.
+/// With `fusion = false` the kernel is asked to materialize `(sample,
+/// weight)` rows instead, and accumulation happens in a second pass — the
+/// locality ablation.
+pub(crate) fn run_sampler<K>(
+    net: &BayesianNetwork,
+    opts: &ApproxOptions,
+    kernel: K,
+) -> PosteriorAccumulator
+where
+    K: Fn(&mut Pcg, usize, &mut SampleSink) + Sync,
+{
+    let n_chunks = opts.n_samples.div_ceil(opts.chunk.max(1));
+    let mut root = Pcg::seed_from(opts.seed);
+    let seeds: Vec<Pcg> = (0..n_chunks).map(|i| root.split(i as u64)).collect();
+    let partials: Vec<PosteriorAccumulator> =
+        parallel_map(n_chunks, opts.threads, 1, |c| {
+            let mut rng = seeds[c].clone();
+            let count = opts.chunk.min(opts.n_samples - c * opts.chunk);
+            let mut sink = if opts.fusion {
+                SampleSink::fused(net)
+            } else {
+                SampleSink::materialized(net, count)
+            };
+            kernel(&mut rng, count, &mut sink);
+            sink.finish(net)
+        });
+    let mut acc = PosteriorAccumulator::new(net);
+    for p in &partials {
+        acc.merge(p);
+    }
+    acc
+}
+
+/// Destination for generated samples — fused (inline accumulation) or
+/// materialized (two-pass; the E6 ablation baseline).
+pub(crate) enum SampleSink {
+    Fused(PosteriorAccumulator),
+    Materialized {
+        rows: Vec<u8>,
+        weights: Vec<f64>,
+        n_vars: usize,
+    },
+}
+
+impl SampleSink {
+    fn fused(net: &BayesianNetwork) -> Self {
+        SampleSink::Fused(PosteriorAccumulator::new(net))
+    }
+
+    fn materialized(net: &BayesianNetwork, expect: usize) -> Self {
+        SampleSink::Materialized {
+            rows: Vec::with_capacity(expect * net.n_vars()),
+            weights: Vec::with_capacity(expect),
+            n_vars: net.n_vars(),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, states: &[u8], weight: f64) {
+        match self {
+            SampleSink::Fused(acc) => acc.add(states, weight),
+            SampleSink::Materialized { rows, weights, .. } => {
+                rows.extend_from_slice(states);
+                weights.push(weight);
+            }
+        }
+    }
+
+    fn finish(self, net: &BayesianNetwork) -> PosteriorAccumulator {
+        match self {
+            SampleSink::Fused(acc) => acc,
+            SampleSink::Materialized { rows, weights, n_vars } => {
+                let mut acc = PosteriorAccumulator::new(net);
+                for (i, &w) in weights.iter().enumerate() {
+                    acc.add(&rows[i * n_vars..(i + 1) * n_vars], w);
+                }
+                acc
+            }
+        }
+    }
+}
+
+/// Overlay point-mass posteriors for evidence variables (all sampling
+/// engines report exact point masses for observed variables).
+pub(crate) fn apply_evidence_posteriors(
+    net: &BayesianNetwork,
+    ev: &Evidence,
+    posteriors: &mut [Vec<f64>],
+) {
+    for (v, s) in ev.iter() {
+        let mut p = vec![0.0; net.cardinality(v)];
+        p[s] = 1.0;
+        posteriors[v] = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    #[test]
+    fn accumulator_normalizes() {
+        let net = repository::sprinkler();
+        let mut acc = PosteriorAccumulator::new(&net);
+        acc.add(&[0, 1, 0, 1], 2.0);
+        acc.add(&[1, 1, 0, 0], 1.0);
+        let p = acc.posterior(0);
+        assert!((p[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((p[1] - 1.0 / 3.0).abs() < 1e-12);
+        let p1 = acc.posterior(1);
+        assert_eq!(p1, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn accumulator_uniform_when_empty() {
+        let net = repository::sprinkler();
+        let acc = PosteriorAccumulator::new(&net);
+        assert_eq!(acc.posterior(2), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let net = repository::sprinkler();
+        let mut a = PosteriorAccumulator::new(&net);
+        let mut b = PosteriorAccumulator::new(&net);
+        a.add(&[0, 0, 0, 0], 1.0);
+        b.add(&[1, 1, 1, 1], 3.0);
+        a.merge(&b);
+        assert_eq!(a.n_samples, 2);
+        assert!((a.total_weight - 4.0).abs() < 1e-12);
+        assert!((a.posterior(0)[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sinks_agree() {
+        let net = repository::cancer();
+        let mut fused = SampleSink::fused(&net);
+        let mut mat = SampleSink::materialized(&net, 3);
+        for (row, w) in [([0u8, 1, 0, 1, 0], 1.5), ([1, 0, 1, 0, 1], 0.5)] {
+            fused.push(&row, w);
+            mat.push(&row, w);
+        }
+        let fa = fused.finish(&net);
+        let ma = mat.finish(&net);
+        for v in 0..net.n_vars() {
+            assert_eq!(fa.posterior(v), ma.posterior(v));
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Variable elimination (Zhang & Poole 1994).
+
+use crate::core::{Evidence, VarId};
+use crate::inference::{normalize_in_place, point_mass, InferenceEngine, Posterior};
+use crate::network::BayesianNetwork;
+use crate::potential::ops::IndexMode;
+use crate::potential::PotentialTable;
+
+pub use super::triangulation::EliminationHeuristic as EliminationOrderHeuristic;
+
+/// A variable-elimination engine bound to one network.
+///
+/// Each query builds the family factors, absorbs evidence, and sums out
+/// every non-query variable following a greedy heuristic order computed on
+/// the *remaining* factor scopes (min-degree / min-fill / min-weight on the
+/// induced interaction graph).
+pub struct VariableElimination<'n> {
+    net: &'n BayesianNetwork,
+    pub heuristic: EliminationOrderHeuristic,
+    pub index_mode: IndexMode,
+}
+
+impl<'n> VariableElimination<'n> {
+    pub fn new(net: &'n BayesianNetwork) -> Self {
+        VariableElimination {
+            net,
+            heuristic: EliminationOrderHeuristic::MinWeight,
+            index_mode: IndexMode::Odometer,
+        }
+    }
+
+    /// Run one elimination pass, returning the unnormalized posterior
+    /// factor over `var` (whose mass is P(evidence)).
+    fn eliminate(&self, var: VarId, ev: &Evidence) -> PotentialTable {
+        let mut factors: Vec<PotentialTable> = (0..self.net.n_vars())
+            .map(|v| {
+                let mut f = self.net.family_potential(v);
+                f.reduce_evidence(ev);
+                f
+            })
+            .collect();
+
+        // Variables to eliminate: everything but the query. (Evidence
+        // variables are summed out too — their factors are zero except at
+        // the observed state, so this is exact.)
+        let mut to_eliminate: Vec<VarId> =
+            (0..self.net.n_vars()).filter(|&v| v != var).collect();
+
+        while !to_eliminate.is_empty() {
+            // Greedy next variable by heuristic over current factor scopes.
+            let next = self.pick_next(&to_eliminate, &factors);
+            to_eliminate.retain(|&v| v != next);
+
+            // Multiply all factors mentioning `next`, then sum it out.
+            let (mentioning, rest): (Vec<PotentialTable>, Vec<PotentialTable>) =
+                factors.into_iter().partition(|f| f.contains_var(next));
+            factors = rest;
+            if mentioning.is_empty() {
+                continue;
+            }
+            let mut prod = mentioning[0].clone();
+            for f in &mentioning[1..] {
+                prod = prod.product(f, self.index_mode);
+            }
+            factors.push(prod.marginalize_out(next, self.index_mode));
+        }
+
+        // Multiply the survivors (all scoped over {var} or {}).
+        let mut result = PotentialTable::unit(
+            vec![var],
+            vec![self.net.cardinality(var)],
+        );
+        for f in &factors {
+            result = result.product(f, self.index_mode);
+        }
+        result
+    }
+
+    fn pick_next(&self, candidates: &[VarId], factors: &[PotentialTable]) -> VarId {
+        let mut best = (u64::MAX, u64::MAX, usize::MAX);
+        let mut best_v = candidates[0];
+        for &v in candidates {
+            // Scope of the factor that eliminating v would create.
+            let mut scope: Vec<VarId> = Vec::new();
+            for f in factors.iter().filter(|f| f.contains_var(v)) {
+                for &u in f.vars() {
+                    if u != v && !scope.contains(&u) {
+                        scope.push(u);
+                    }
+                }
+            }
+            let weight: u64 = scope
+                .iter()
+                .map(|&u| self.net.cardinality(u) as u64)
+                .product();
+            let degree = scope.len() as u64;
+            let key = match self.heuristic {
+                EliminationOrderHeuristic::MinWeight => (weight, degree, v),
+                EliminationOrderHeuristic::MinDegree => (degree, weight, v),
+                // For on-the-fly VE, min-fill is priced like min-degree
+                // (exact fill requires the interaction graph; degree is the
+                // standard proxy here).
+                EliminationOrderHeuristic::MinFill => (degree, weight, v),
+            };
+            if key < best {
+                best = key;
+                best_v = v;
+            }
+        }
+        best_v
+    }
+
+    /// Probability of the evidence itself, P(e).
+    pub fn evidence_probability(&self, ev: &Evidence) -> f64 {
+        if ev.is_empty() {
+            return 1.0;
+        }
+        // Eliminate everything except an arbitrary non-evidence variable
+        // (or the first variable if all are observed) and sum.
+        let var = (0..self.net.n_vars())
+            .find(|&v| !ev.contains(v))
+            .unwrap_or(0);
+        self.eliminate(var, ev).sum()
+    }
+}
+
+impl InferenceEngine for VariableElimination<'_> {
+    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
+        if let Some(s) = evidence.get(var) {
+            return point_mass(self.net.cardinality(var), s);
+        }
+        let f = self.eliminate(var, evidence);
+        let mut p = f.data().to_vec();
+        normalize_in_place(&mut p);
+        p
+    }
+
+    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior> {
+        (0..self.net.n_vars())
+            .map(|v| self.query(v, evidence))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "variable-elimination"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn matches_brute_force_no_evidence() {
+        for net in [repository::asia(), repository::survey()] {
+            let mut ve = VariableElimination::new(&net);
+            for v in 0..net.n_vars() {
+                let expect = net.brute_force_posterior(v, &Evidence::new());
+                let got = ve.query(v, &Evidence::new());
+                assert_close_dist(&got, &expect, 1e-9, &format!("{} var {v}", net.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_with_evidence() {
+        let net = repository::asia();
+        let ev = Evidence::new()
+            .with(net.var_index("xray").unwrap(), 1)
+            .with(net.var_index("smoke").unwrap(), 0);
+        let mut ve = VariableElimination::new(&net);
+        for v in 0..net.n_vars() {
+            let expect = net.brute_force_posterior(v, &ev);
+            let got = ve.query(v, &ev);
+            assert_close_dist(&got, &expect, 1e-9, &format!("var {v}"));
+        }
+    }
+
+    #[test]
+    fn query_on_evidence_var_is_point_mass() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(1, 1);
+        let mut ve = VariableElimination::new(&net);
+        assert_eq!(ve.query(1, &ev), vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn heuristics_agree() {
+        let net = repository::asia();
+        let ev = Evidence::new().with(0, 1);
+        for h in [
+            EliminationOrderHeuristic::MinWeight,
+            EliminationOrderHeuristic::MinDegree,
+            EliminationOrderHeuristic::MinFill,
+        ] {
+            let mut ve = VariableElimination::new(&net);
+            ve.heuristic = h;
+            let p = ve.query(7, &ev);
+            let expect = net.brute_force_posterior(7, &ev);
+            assert_close_dist(&p, &expect, 1e-9, &format!("{h:?}"));
+        }
+    }
+
+    #[test]
+    fn evidence_probability_sane() {
+        let net = repository::earthquake();
+        let ve = VariableElimination::new(&net);
+        assert!((ve.evidence_probability(&Evidence::new()) - 1.0).abs() < 1e-9);
+        let ev = Evidence::new().with(net.var_index("alarm").unwrap(), 1);
+        let p = ve.evidence_probability(&ev);
+        // P(alarm=yes) ≈ 0.0063 + tiny terms ≈ 0.0072 for these CPTs...
+        // compute via brute force instead of hardcoding:
+        let mut total = 0.0;
+        let post = net.brute_force_posterior(net.var_index("alarm").unwrap(), &Evidence::new());
+        total += post[1];
+        assert!((p - total).abs() < 1e-9, "P(e) = {p}, brute = {total}");
+    }
+}

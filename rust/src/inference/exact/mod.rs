@@ -1,0 +1,11 @@
+//! Exact inference: junction tree (Lauritzen–Spiegelhalter) and variable
+//! elimination.
+
+mod elimination;
+mod junction_tree;
+mod map_query;
+pub mod triangulation;
+
+pub use elimination::{EliminationOrderHeuristic, VariableElimination};
+pub use junction_tree::{CalibrationMode, JtEngine, JunctionTree};
+pub use map_query::{most_probable_explanation, MapResult};

@@ -1,0 +1,285 @@
+//! Moralization, triangulation and clique extraction — the graph-side
+//! pipeline that turns a Bayesian network into a junction tree.
+
+use crate::core::VarId;
+use crate::graph::{Dag, UGraph};
+
+/// Moral graph: connect co-parents, drop directions.
+pub fn moralize(dag: &Dag) -> UGraph {
+    let mut g = dag.skeleton();
+    for v in 0..dag.n_nodes() {
+        let ps = dag.parents(v);
+        for i in 0..ps.len() {
+            for j in (i + 1)..ps.len() {
+                g.add_edge(ps[i], ps[j]);
+            }
+        }
+    }
+    g
+}
+
+/// Heuristic for the elimination order used in triangulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EliminationHeuristic {
+    /// Eliminate the node whose neighborhood needs the fewest fill-in
+    /// edges (min-fill — the standard quality/speed sweet spot).
+    #[default]
+    MinFill,
+    /// Eliminate the node with the smallest resulting clique weight
+    /// (product of cardinalities) — better for skewed cardinalities.
+    MinWeight,
+    /// Eliminate the lowest-degree node.
+    MinDegree,
+}
+
+/// Triangulate (by simulated elimination) and return the elimination order
+/// plus the triangulated graph.
+pub fn triangulate(
+    moral: &UGraph,
+    cards: &[usize],
+    heuristic: EliminationHeuristic,
+) -> (Vec<VarId>, UGraph) {
+    let n = moral.n_nodes();
+    let mut g = moral.clone();
+    let mut work = moral.clone(); // shrinking working copy
+    let mut eliminated = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+
+    let cost = |work: &UGraph, v: VarId, eliminated: &[bool]| -> (u64, u64) {
+        let nb: Vec<VarId> = work
+            .neighbors(v)
+            .iter()
+            .copied()
+            .filter(|&u| !eliminated[u])
+            .collect();
+        let mut fill = 0u64;
+        for i in 0..nb.len() {
+            for j in (i + 1)..nb.len() {
+                if !work.has_edge(nb[i], nb[j]) {
+                    fill += 1;
+                }
+            }
+        }
+        let weight: u64 = nb
+            .iter()
+            .map(|&u| cards[u] as u64)
+            .product::<u64>()
+            .saturating_mul(cards[v] as u64);
+        (fill, weight)
+    };
+
+    for _ in 0..n {
+        // Pick the best remaining node under the heuristic (ties broken by
+        // id for determinism).
+        let mut best: Option<(VarId, (u64, u64, u64))> = None;
+        for v in 0..n {
+            if eliminated[v] {
+                continue;
+            }
+            let (fill, weight) = cost(&work, v, &eliminated);
+            let deg = work
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| !eliminated[u])
+                .count() as u64;
+            let key = match heuristic {
+                EliminationHeuristic::MinFill => (fill, weight, deg),
+                EliminationHeuristic::MinWeight => (weight, fill, deg),
+                EliminationHeuristic::MinDegree => (deg, fill, weight),
+            };
+            if best.as_ref().is_none_or(|&(_, bk)| key < bk) {
+                best = Some((v, key));
+            }
+        }
+        let (v, _) = best.unwrap();
+        // Connect v's remaining neighborhood in both graphs (fill-in).
+        let nb: Vec<VarId> = work
+            .neighbors(v)
+            .iter()
+            .copied()
+            .filter(|&u| !eliminated[u])
+            .collect();
+        for i in 0..nb.len() {
+            for j in (i + 1)..nb.len() {
+                g.add_edge(nb[i], nb[j]);
+                work.add_edge(nb[i], nb[j]);
+            }
+        }
+        eliminated[v] = true;
+        order.push(v);
+    }
+    (order, g)
+}
+
+/// Extract the maximal cliques induced by an elimination order on a
+/// triangulated graph (each node's "elimination clique", deduplicated by
+/// subset containment).
+pub fn elimination_cliques(
+    triangulated: &UGraph,
+    order: &[VarId],
+) -> Vec<Vec<VarId>> {
+    let n = triangulated.n_nodes();
+    let mut pos = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let mut cliques: Vec<Vec<VarId>> = Vec::new();
+    for &v in order {
+        let mut c: Vec<VarId> = triangulated
+            .neighbors(v)
+            .iter()
+            .copied()
+            .filter(|&u| pos[u] > pos[v])
+            .collect();
+        c.push(v);
+        c.sort_unstable();
+        // Keep only maximal cliques.
+        if !cliques.iter().any(|existing| is_subset(&c, existing)) {
+            cliques.retain(|existing| !is_subset(existing, &c));
+            cliques.push(c);
+        }
+    }
+    cliques.sort();
+    cliques
+}
+
+/// Is `a ⊆ b`? Both sorted.
+pub fn is_subset(a: &[VarId], b: &[VarId]) -> bool {
+    let mut j = 0;
+    for &x in a {
+        loop {
+            if j >= b.len() {
+                return false;
+            }
+            if b[j] == x {
+                j += 1;
+                break;
+            }
+            if b[j] > x {
+                return false;
+            }
+            j += 1;
+        }
+    }
+    true
+}
+
+/// Sorted intersection of two sorted slices.
+pub fn intersect(a: &[VarId], b: &[VarId]) -> Vec<VarId> {
+    let (mut i, mut j) = (0, 0);
+    let mut out = Vec::new();
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Maximum-spanning-tree join of cliques by separator size (Prim's
+/// algorithm over pairwise intersections) — guarantees the running-
+/// intersection property on triangulated inputs. Returns, for each clique
+/// `i > 0`'s tree edge, `(i, parent, separator)`. Clique 0 is the root.
+pub fn join_cliques(cliques: &[Vec<VarId>]) -> Vec<(usize, usize, Vec<VarId>)> {
+    let k = cliques.len();
+    if k <= 1 {
+        return Vec::new();
+    }
+    let mut in_tree = vec![false; k];
+    in_tree[0] = true;
+    let mut edges = Vec::with_capacity(k - 1);
+    for _ in 1..k {
+        let mut best: Option<(usize, usize, usize)> = None; // (sep, i, parent)
+        for i in 0..k {
+            if in_tree[i] {
+                continue;
+            }
+            for p in 0..k {
+                if !in_tree[p] {
+                    continue;
+                }
+                let sep = intersect(&cliques[i], &cliques[p]).len();
+                let key = (sep, usize::MAX - i, usize::MAX - p);
+                if best.is_none_or(|(bs, bi, bp)| key > (bs, usize::MAX - bi, usize::MAX - bp)) {
+                    best = Some((sep, i, p));
+                }
+            }
+        }
+        let (_, i, p) = best.unwrap();
+        in_tree[i] = true;
+        edges.push((i, p, intersect(&cliques[i], &cliques[p])));
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moralize_marries_parents() {
+        // 0 -> 2 <- 1
+        let mut d = Dag::new(3);
+        d.add_edge(0, 2);
+        d.add_edge(1, 2);
+        let m = moralize(&d);
+        assert!(m.has_edge(0, 1), "co-parents married");
+        assert_eq!(m.n_edges(), 3);
+    }
+
+    #[test]
+    fn triangulate_cycle() {
+        // 4-cycle needs one chord.
+        let mut g = UGraph::new(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        g.add_edge(3, 0);
+        let cards = vec![2; 4];
+        let (order, t) = triangulate(&g, &cards, EliminationHeuristic::MinFill);
+        assert_eq!(order.len(), 4);
+        assert_eq!(t.n_edges(), 5, "exactly one chord added");
+    }
+
+    #[test]
+    fn cliques_of_triangulated_cycle() {
+        let mut g = UGraph::new(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(2, 3);
+        g.add_edge(3, 0);
+        let (order, t) = triangulate(&g, &[2; 4], EliminationHeuristic::MinFill);
+        let cliques = elimination_cliques(&t, &order);
+        assert_eq!(cliques.len(), 2);
+        assert!(cliques.iter().all(|c| c.len() == 3));
+    }
+
+    #[test]
+    fn subset_and_intersect() {
+        assert!(is_subset(&[1, 3], &[0, 1, 2, 3]));
+        assert!(!is_subset(&[1, 4], &[0, 1, 2, 3]));
+        assert!(is_subset(&[], &[1]));
+        assert_eq!(intersect(&[0, 2, 4], &[1, 2, 3, 4]), vec![2, 4]);
+    }
+
+    #[test]
+    fn join_tree_connects_all() {
+        let cliques = vec![vec![0, 1], vec![1, 2], vec![2, 3]];
+        let edges = join_cliques(&cliques);
+        assert_eq!(edges.len(), 2);
+        for (_, _, sep) in &edges {
+            assert_eq!(sep.len(), 1, "chain separators are single nodes");
+        }
+    }
+
+    #[test]
+    fn join_single_clique_empty() {
+        assert!(join_cliques(&[vec![0, 1, 2]]).is_empty());
+    }
+}

@@ -1,0 +1,48 @@
+//! Inference engines over Bayesian networks.
+//!
+//! Exact engines live in [`exact`] (junction tree, variable elimination),
+//! approximate engines in [`approx`] (loopy BP plus five sampling
+//! algorithms). All engines answer the same query — the posterior
+//! distribution of a variable given evidence — through the
+//! [`InferenceEngine`] trait, so the accuracy benchmarks (E7) and the
+//! classifier are engine-agnostic.
+
+pub mod approx;
+pub mod exact;
+
+use crate::core::{Evidence, VarId};
+
+/// A posterior distribution over one variable's states.
+pub type Posterior = Vec<f64>;
+
+/// Common query interface for all inference engines.
+pub trait InferenceEngine {
+    /// Posterior P(var | evidence), normalized.
+    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior;
+
+    /// Posterior of every non-evidence variable given the evidence —
+    /// "calculate the posterior distribution of all the unknown variables"
+    /// (paper §2). Evidence variables get a point-mass on their observed
+    /// state for uniformity.
+    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior>;
+
+    /// Engine name for reports and benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Normalize a vector in place to sum to 1 (no-op when mass is zero).
+pub(crate) fn normalize_in_place(p: &mut [f64]) {
+    let s: f64 = p.iter().sum();
+    if s > 0.0 {
+        for x in p {
+            *x /= s;
+        }
+    }
+}
+
+/// Point-mass distribution helper for observed variables.
+pub(crate) fn point_mass(card: usize, state: usize) -> Posterior {
+    let mut p = vec![0.0; card];
+    p[state] = 1.0;
+    p
+}

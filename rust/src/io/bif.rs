@@ -1,0 +1,422 @@
+//! BIF (Bayesian Interchange Format) parser and writer — the format the
+//! bnlearn repository distributes networks in. Together with
+//! [`super::fpgm`] this provides the paper's "format transformation across
+//! network representations" feature.
+//!
+//! Supported subset: `network`, `variable` blocks with
+//! `type discrete [k] { s1, s2 ... }`, and `probability` blocks in both
+//! root form (`table p1, p2;`) and conditional form
+//! (`(s_p1, s_p2) p1, p2;` rows). This covers the repository networks.
+
+use crate::core::Variable;
+use crate::graph::Dag;
+use crate::network::{BayesianNetwork, Cpt};
+use anyhow::{bail, Context, Result};
+
+/// Serialize a network to BIF text.
+pub fn to_string(net: &BayesianNetwork) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("network {} {{\n}}\n", sanitize(net.name())));
+    for v in net.variables() {
+        out.push_str(&format!(
+            "variable {} {{\n  type discrete [ {} ] {{ ",
+            sanitize(&v.name),
+            v.cardinality
+        ));
+        let names: Vec<String> =
+            (0..v.cardinality).map(|s| sanitize(&v.state_name(s))).collect();
+        out.push_str(&names.join(", "));
+        out.push_str(" };\n}\n");
+    }
+    for v in 0..net.n_vars() {
+        let cpt = net.cpt(v);
+        let vname = sanitize(&net.variable(v).name);
+        if cpt.parents.is_empty() {
+            let probs: Vec<String> =
+                cpt.table.iter().map(|p| format!("{p}")).collect();
+            out.push_str(&format!(
+                "probability ( {vname} ) {{\n  table {};\n}}\n",
+                probs.join(", ")
+            ));
+        } else {
+            let pnames: Vec<String> = cpt
+                .parents
+                .iter()
+                .map(|&p| sanitize(&net.variable(p).name))
+                .collect();
+            out.push_str(&format!(
+                "probability ( {vname} | {} ) {{\n",
+                pnames.join(", ")
+            ));
+            let mut digits = vec![0usize; cpt.parents.len()];
+            for cfg in 0..cpt.n_parent_configs() {
+                let states: Vec<String> = digits
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &d)| sanitize(&net.variable(cpt.parents[k]).state_name(d)))
+                    .collect();
+                let probs: Vec<String> =
+                    cpt.row(cfg).iter().map(|p| format!("{p}")).collect();
+                out.push_str(&format!(
+                    "  ( {} ) {};\n",
+                    states.join(", "),
+                    probs.join(", ")
+                ));
+                // advance mixed radix, last fastest
+                for k in (0..digits.len()).rev() {
+                    digits[k] += 1;
+                    if digits[k] < cpt.parent_cards[k] {
+                        break;
+                    }
+                    digits[k] = 0;
+                }
+            }
+            out.push_str("}\n");
+        }
+    }
+    out
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+        .collect()
+}
+
+/// Tokenizer: BIF is brace/paren/comma/semicolon punctuated.
+fn tokenize(text: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut cur = String::new();
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '/' if chars.peek() == Some(&'/') => {
+                // line comment
+                for c2 in chars.by_ref() {
+                    if c2 == '\n' {
+                        break;
+                    }
+                }
+            }
+            '{' | '}' | '(' | ')' | ',' | ';' | '|' | '[' | ']' => {
+                if !cur.is_empty() {
+                    tokens.push(std::mem::take(&mut cur));
+                }
+                tokens.push(c.to_string());
+            }
+            c if c.is_whitespace() => {
+                if !cur.is_empty() {
+                    tokens.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        tokens.push(cur);
+    }
+    tokens
+}
+
+struct Parser {
+    tokens: Vec<String>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&str> {
+        self.tokens.get(self.pos).map(String::as_str)
+    }
+
+    fn next(&mut self) -> Result<&str> {
+        let t = self.tokens.get(self.pos).context("unexpected end of BIF")?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &str) -> Result<()> {
+        let t = self.next()?;
+        if t != want {
+            bail!("expected {want:?}, found {t:?}");
+        }
+        Ok(())
+    }
+
+    fn skip_block(&mut self) -> Result<()> {
+        self.expect("{")?;
+        let mut depth = 1;
+        while depth > 0 {
+            match self.next()? {
+                "{" => depth += 1,
+                "}" => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse BIF text into a network.
+pub fn from_str(text: &str) -> Result<BayesianNetwork> {
+    let mut p = Parser { tokens: tokenize(text), pos: 0 };
+    let mut name = String::from("bif");
+    let mut variables: Vec<Variable> = Vec::new();
+    // (child name, parent names, rows [(parent states, probs)])
+    type ProbBlock = (String, Vec<String>, Vec<(Vec<String>, Vec<f64>)>);
+    let mut prob_blocks: Vec<ProbBlock> = Vec::new();
+
+    while let Some(tok) = p.peek() {
+        match tok {
+            "network" => {
+                p.next()?;
+                name = p.next()?.to_string();
+                p.skip_block()?;
+            }
+            "variable" => {
+                p.next()?;
+                let vname = p.next()?.to_string();
+                p.expect("{")?;
+                let mut states: Vec<String> = Vec::new();
+                while p.peek() != Some("}") {
+                    if p.peek() == Some("type") {
+                        p.next()?; // type
+                        p.expect("discrete")?;
+                        p.expect("[")?;
+                        let _card: usize = p.next()?.parse()?;
+                        p.expect("]")?;
+                        p.expect("{")?;
+                        loop {
+                            let t = p.next()?;
+                            match t {
+                                "}" => break,
+                                "," => {}
+                                s => states.push(s.to_string()),
+                            }
+                        }
+                        p.expect(";")?;
+                    } else {
+                        // skip unknown property up to ';'
+                        while p.next()? != ";" {}
+                    }
+                }
+                p.expect("}")?;
+                if states.is_empty() {
+                    bail!("variable {vname} has no states");
+                }
+                variables.push(Variable::with_states(vname, states));
+            }
+            "probability" => {
+                p.next()?;
+                p.expect("(")?;
+                let child = p.next()?.to_string();
+                let mut parents: Vec<String> = Vec::new();
+                if p.peek() == Some("|") {
+                    p.next()?;
+                    loop {
+                        match p.next()? {
+                            ")" => break,
+                            "," => {}
+                            s => parents.push(s.to_string()),
+                        }
+                    }
+                } else {
+                    p.expect(")")?;
+                }
+                p.expect("{")?;
+                let mut rows: Vec<(Vec<String>, Vec<f64>)> = Vec::new();
+                while p.peek() != Some("}") {
+                    match p.peek() {
+                        Some("table") => {
+                            p.next()?;
+                            let mut probs = Vec::new();
+                            loop {
+                                match p.next()? {
+                                    ";" => break,
+                                    "," => {}
+                                    t => probs.push(t.parse::<f64>()?),
+                                }
+                            }
+                            rows.push((Vec::new(), probs));
+                        }
+                        Some("(") => {
+                            p.next()?;
+                            let mut states = Vec::new();
+                            loop {
+                                match p.next()? {
+                                    ")" => break,
+                                    "," => {}
+                                    s => states.push(s.to_string()),
+                                }
+                            }
+                            let mut probs = Vec::new();
+                            loop {
+                                match p.next()? {
+                                    ";" => break,
+                                    "," => {}
+                                    t => probs.push(t.parse::<f64>()?),
+                                }
+                            }
+                            rows.push((states, probs));
+                        }
+                        other => bail!("unexpected token in probability block: {other:?}"),
+                    }
+                }
+                p.expect("}")?;
+                prob_blocks.push((child, parents, rows));
+            }
+            other => bail!("unexpected top-level token: {other:?}"),
+        }
+    }
+
+    // Assemble. Parent order in BIF may differ from sorted-VarId order;
+    // rows are re-indexed into the canonical layout.
+    let var_index = |n: &str| -> Result<usize> {
+        variables
+            .iter()
+            .position(|v| v.name == n)
+            .with_context(|| format!("unknown variable {n}"))
+    };
+    let n = variables.len();
+    let mut dag = Dag::new(n);
+    let mut cpt_slots: Vec<Option<Cpt>> = vec![None; n];
+    for (child, parents, rows) in &prob_blocks {
+        let c = var_index(child)?;
+        let bif_parents: Vec<usize> =
+            parents.iter().map(|s| var_index(s)).collect::<Result<_>>()?;
+        for &pp in &bif_parents {
+            dag.add_edge_unchecked(pp, c);
+        }
+        let mut sorted_parents = bif_parents.clone();
+        sorted_parents.sort_unstable();
+        let parent_cards: Vec<usize> = sorted_parents
+            .iter()
+            .map(|&pp| variables[pp].cardinality)
+            .collect();
+        let card = variables[c].cardinality;
+        let n_cfg: usize = parent_cards.iter().product();
+        let mut table = vec![f64::NAN; n_cfg * card];
+        for (states, probs) in rows {
+            if probs.len() != card {
+                bail!("probability row for {child} has {} entries, expected {card}", probs.len());
+            }
+            let cfg = if states.is_empty() {
+                0
+            } else {
+                if states.len() != bif_parents.len() {
+                    bail!("row state count mismatch for {child}");
+                }
+                // Map BIF parent order -> canonical sorted order.
+                let mut cfg = 0usize;
+                for &sp in &sorted_parents {
+                    let k = bif_parents.iter().position(|&q| q == sp).unwrap();
+                    let st = variables[sp]
+                        .state_index(&states[k])
+                        .with_context(|| format!("bad state {:?} for {}", states[k], variables[sp].name))?;
+                    cfg = cfg * variables[sp].cardinality + st;
+                }
+                cfg
+            };
+            for (s, &pv) in probs.iter().enumerate() {
+                table[cfg * card + s] = pv;
+            }
+        }
+        if table.iter().any(|x| x.is_nan()) {
+            bail!("probability table for {child} has unspecified rows");
+        }
+        cpt_slots[c] = Some(Cpt::new(c, sorted_parents, parent_cards, card, table));
+    }
+    if dag.topological_order().is_none() {
+        bail!("BIF structure is cyclic");
+    }
+    let cpts: Vec<Cpt> = cpt_slots
+        .into_iter()
+        .enumerate()
+        .map(|(v, c)| c.with_context(|| format!("missing probability block for variable {v}")))
+        .collect::<Result<_>>()?;
+    Ok(BayesianNetwork::new(name, variables, dag, cpts))
+}
+
+/// Load a `.bif` file.
+pub fn load(path: &std::path::Path) -> Result<BayesianNetwork> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_str(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Save a `.bif` file.
+pub fn save(net: &BayesianNetwork, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, to_string(net))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    #[test]
+    fn roundtrip_builtins() {
+        for name in repository::BUILTIN_NAMES {
+            let net = repository::by_name(name).unwrap();
+            let text = to_string(&net);
+            let back = from_str(&text).unwrap_or_else(|e| panic!("{name}: {e:?}"));
+            assert_eq!(back.n_vars(), net.n_vars());
+            assert_eq!(back.dag().edges(), net.dag().edges(), "{name}");
+            for v in 0..net.n_vars() {
+                for (a, b) in back.cpt(v).table.iter().zip(&net.cpt(v).table) {
+                    assert!((a - b).abs() < 1e-12, "{name} var {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parses_handwritten_bif() {
+        let text = r#"
+network test {
+}
+variable rain {
+  type discrete [ 2 ] { no, yes };
+}
+variable grass {
+  type discrete [ 2 ] { dry, wet };
+}
+probability ( rain ) {
+  table 0.8, 0.2;
+}
+probability ( grass | rain ) {
+  ( no ) 0.9, 0.1;
+  ( yes ) 0.2, 0.8;
+}
+"#;
+        let net = from_str(text).unwrap();
+        assert_eq!(net.n_vars(), 2);
+        let rain = net.var_index("rain").unwrap();
+        let grass = net.var_index("grass").unwrap();
+        assert!(net.dag().has_edge(rain, grass));
+        assert!((net.cpt(grass).prob(1, 1) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parser_handles_comments() {
+        let text = "network t {\n}\n// comment line\nvariable x {\n type discrete [ 2 ] { a, b };\n}\nprobability ( x ) {\n table 0.5, 0.5;\n}\n";
+        assert!(from_str(text).is_ok());
+    }
+
+    #[test]
+    fn rejects_missing_probability() {
+        let text = "network t {\n}\nvariable x {\n type discrete [ 2 ] { a, b };\n}\n";
+        assert!(from_str(text).is_err());
+    }
+
+    #[test]
+    fn bif_to_fpgm_transform() {
+        // The format-transformation path: BIF -> network -> fpgm -> network.
+        let net = repository::asia();
+        let bif = to_string(&net);
+        let via_bif = from_str(&bif).unwrap();
+        let fpgm_text = crate::io::fpgm::to_string(&via_bif);
+        let back = crate::io::fpgm::from_str(&fpgm_text).unwrap();
+        assert_eq!(back.dag().edges(), net.dag().edges());
+    }
+}

@@ -1,0 +1,240 @@
+//! The native `.fpgm` network format.
+//!
+//! A deliberately trivial line-based text format so the Rust runtime and
+//! the Python compile path (`python/compile/networks.py`) can share one
+//! parser-friendly artifact without a JSON dependency:
+//!
+//! ```text
+//! fpgm 1
+//! name <network-name>
+//! var <name> <card> [state names...]
+//! ...
+//! parents <var-index> [parent indices...]
+//! ...
+//! cpt <var-index> <p0> <p1> ...      # row-major, last parent fastest
+//! ...
+//! end
+//! ```
+//!
+//! Every `var` line precedes all `parents` lines, which precede all `cpt`
+//! lines. Indices refer to `var` declaration order.
+
+use crate::core::Variable;
+use crate::graph::Dag;
+use crate::network::{BayesianNetwork, Cpt};
+use anyhow::{bail, Context, Result};
+
+/// Serialize a network to `.fpgm` text.
+pub fn to_string(net: &BayesianNetwork) -> String {
+    let mut out = String::new();
+    out.push_str("fpgm 1\n");
+    out.push_str(&format!("name {}\n", net.name()));
+    for v in net.variables() {
+        out.push_str(&format!("var {} {}", v.name, v.cardinality));
+        for s in &v.states {
+            out.push(' ');
+            out.push_str(s);
+        }
+        out.push('\n');
+    }
+    for v in 0..net.n_vars() {
+        out.push_str(&format!("parents {}", v));
+        for &p in net.parents(v) {
+            out.push_str(&format!(" {p}"));
+        }
+        out.push('\n');
+    }
+    for v in 0..net.n_vars() {
+        out.push_str(&format!("cpt {}", v));
+        for p in &net.cpt(v).table {
+            out.push_str(&format!(" {p:.17}"));
+        }
+        out.push('\n');
+    }
+    out.push_str("end\n");
+    out
+}
+
+/// Parse `.fpgm` text into a network.
+pub fn from_str(text: &str) -> Result<BayesianNetwork> {
+    let mut lines = text.lines().map(str::trim).filter(|l| {
+        !l.is_empty() && !l.starts_with('#')
+    });
+    let header = lines.next().context("empty fpgm file")?;
+    if header != "fpgm 1" {
+        bail!("unsupported fpgm header: {header:?}");
+    }
+    let mut name = String::from("unnamed");
+    let mut variables: Vec<Variable> = Vec::new();
+    let mut parents: Vec<Vec<usize>> = Vec::new();
+    let mut cpts: Vec<Option<Vec<f64>>> = Vec::new();
+    let mut saw_end = false;
+
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("name") => {
+                name = it.collect::<Vec<_>>().join(" ");
+            }
+            Some("var") => {
+                let vname = it.next().context("var line missing name")?;
+                let card: usize = it
+                    .next()
+                    .context("var line missing cardinality")?
+                    .parse()
+                    .context("bad cardinality")?;
+                let states: Vec<String> = it.map(String::from).collect();
+                if !states.is_empty() && states.len() != card {
+                    bail!("var {vname}: {} state names for cardinality {card}", states.len());
+                }
+                let mut v = Variable::new(vname, card);
+                v.states = states;
+                variables.push(v);
+                parents.push(Vec::new());
+                cpts.push(None);
+            }
+            Some("parents") => {
+                let v: usize = it.next().context("parents line missing index")?.parse()?;
+                if v >= variables.len() {
+                    bail!("parents line: variable index {v} out of range");
+                }
+                let ps: Vec<usize> = it
+                    .map(|t| t.parse::<usize>().context("bad parent index"))
+                    .collect::<Result<_>>()?;
+                for &p in &ps {
+                    if p >= variables.len() {
+                        bail!("parent index {p} out of range");
+                    }
+                }
+                parents[v] = ps;
+            }
+            Some("cpt") => {
+                let v: usize = it.next().context("cpt line missing index")?.parse()?;
+                if v >= variables.len() {
+                    bail!("cpt line: variable index {v} out of range");
+                }
+                let vals: Vec<f64> = it
+                    .map(|t| t.parse::<f64>().context("bad probability"))
+                    .collect::<Result<_>>()?;
+                cpts[v] = Some(vals);
+            }
+            Some("end") => {
+                saw_end = true;
+                break;
+            }
+            Some(other) => bail!("unknown fpgm directive: {other:?}"),
+            None => unreachable!(),
+        }
+    }
+    if !saw_end {
+        bail!("fpgm file missing 'end'");
+    }
+
+    let n = variables.len();
+    let mut dag = Dag::new(n);
+    for (v, ps) in parents.iter().enumerate() {
+        for &p in ps {
+            dag.add_edge_unchecked(p, v);
+        }
+    }
+    if dag.topological_order().is_none() {
+        bail!("fpgm structure is cyclic");
+    }
+    let cpts: Vec<Cpt> = (0..n)
+        .map(|v| {
+            let table = cpts[v]
+                .take()
+                .with_context(|| format!("missing cpt for variable {v}"))?;
+            let ps = dag.parents(v).to_vec();
+            let pcards: Vec<usize> =
+                ps.iter().map(|&p| variables[p].cardinality).collect();
+            let expect: usize =
+                pcards.iter().product::<usize>() * variables[v].cardinality;
+            if table.len() != expect {
+                bail!("cpt for variable {v}: expected {expect} entries, got {}", table.len());
+            }
+            Ok(Cpt::new(v, ps, pcards, variables[v].cardinality, table))
+        })
+        .collect::<Result<_>>()?;
+    Ok(BayesianNetwork::new(name, variables, dag, cpts))
+}
+
+/// Write a network to a `.fpgm` file.
+pub fn save(net: &BayesianNetwork, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, to_string(net))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load a network from a `.fpgm` file.
+pub fn load(path: &std::path::Path) -> Result<BayesianNetwork> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_str(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+    use crate::network::repository;
+
+    #[test]
+    fn roundtrip_all_builtins() {
+        for name in repository::BUILTIN_NAMES {
+            let net = repository::by_name(name).unwrap();
+            let text = to_string(&net);
+            let back = from_str(&text).unwrap();
+            assert_eq!(back.name(), net.name());
+            assert_eq!(back.n_vars(), net.n_vars());
+            assert_eq!(back.dag().edges(), net.dag().edges());
+            for v in 0..net.n_vars() {
+                assert_eq!(back.cpt(v).table, net.cpt(v).table, "{name} var {v}");
+                assert_eq!(back.variable(v).states, net.variable(v).states);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_inference() {
+        let net = repository::asia();
+        let back = from_str(&to_string(&net)).unwrap();
+        let ev = Evidence::new().with(0, 1);
+        for v in 0..net.n_vars() {
+            let a = net.brute_force_posterior(v, &ev);
+            let b = back.brute_force_posterior(v, &ev);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_str("").is_err());
+        assert!(from_str("fpgm 2\nend\n").is_err());
+        assert!(from_str("fpgm 1\nvar x 2\nend\n").is_err()); // missing cpt
+        assert!(from_str("fpgm 1\nbogus\nend\n").is_err());
+        assert!(from_str("fpgm 1\nvar x 2\ncpt 0 0.5 0.5\n").is_err()); // no end
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let text = "fpgm 1\nname c\nvar a 2\nvar b 2\nparents 0 1\nparents 1 0\ncpt 0 0.5 0.5 0.5 0.5\ncpt 1 0.5 0.5 0.5 0.5\nend\n";
+        assert!(from_str(text).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_cpt_size() {
+        let text = "fpgm 1\nvar a 2\nparents 0\ncpt 0 1.0\nend\n";
+        assert!(from_str(text).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let net = repository::sprinkler();
+        let mut text = String::from("# header comment\n\n");
+        text.push_str(&to_string(&net));
+        let back = from_str(&text).unwrap();
+        assert_eq!(back.n_vars(), 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Serialization and format transformation (paper §2, auxiliary
+//! features): the native `.fpgm` text format (shared with the Python
+//! compile path — both sides of the AOT bridge parse it), the standard
+//! BIF format, and CSV datasets.
+
+pub mod bif;
+pub mod csv;
+pub mod fpgm;

@@ -1,0 +1,60 @@
+//! # Fast-PGM — fast probabilistic graphical model learning and inference
+//!
+//! A Rust reproduction of *Fast-PGM: Fast Probabilistic Graphical Model
+//! Learning and Inference* (Jiang et al., 2024), built as the L3 layer of a
+//! three-layer Rust + JAX + Pallas stack (see `DESIGN.md`).
+//!
+//! The library covers every task the paper claims:
+//!
+//! * **Structure learning** — the PC-stable algorithm with conditional-
+//!   independence-level parallelism driven by a dynamic work pool
+//!   ([`structure`]).
+//! * **Parameter learning** — maximum-likelihood estimation with Laplace
+//!   smoothing and cache-friendly sufficient-statistics counting
+//!   ([`parameter`]).
+//! * **Exact inference** — junction tree (Lauritzen–Spiegelhalter) with
+//!   hybrid inter-/intra-clique parallelism and variable elimination
+//!   ([`inference::exact`]).
+//! * **Approximate inference** — loopy belief propagation, probabilistic
+//!   logic sampling, likelihood weighting, self-importance sampling, AIS-BN
+//!   and EPIS-BN, all with sample-level parallelism
+//!   ([`inference::approx`]).
+//! * **Auxiliary tooling** — sample-set generation ([`sampling`]), format
+//!   transformation (BIF ⇄ native `.fpgm`, [`io`]), structural Hamming
+//!   distance and Hellinger distance metrics ([`metrics`]), and a complete
+//!   classification pipeline ([`classify`]).
+//!
+//! On top of the library sits a serving-style coordinator ([`coordinator`])
+//! that batches posterior queries onto an AOT-compiled XLA artifact
+//! (authored in JAX + Pallas at build time, executed through PJRT by
+//! [`runtime`]) — Python is never on the request path.
+
+pub mod benchkit;
+pub mod classify;
+pub mod cli;
+pub mod coordinator;
+pub mod core;
+pub mod graph;
+pub mod inference;
+pub mod io;
+pub mod metrics;
+pub mod mrf;
+pub mod network;
+pub mod parallel;
+pub mod parameter;
+pub mod potential;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod structure;
+pub mod testkit;
+
+/// Commonly used types, re-exported for convenience.
+pub mod prelude {
+    pub use crate::core::{Assignment, Dataset, Evidence, VarId, Variable};
+    pub use crate::graph::{Dag, Pdag, UGraph};
+    pub use crate::inference::{InferenceEngine, Posterior};
+    pub use crate::network::BayesianNetwork;
+    pub use crate::potential::PotentialTable;
+    pub use crate::rng::Pcg;
+}

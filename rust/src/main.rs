@@ -1,0 +1,403 @@
+//! `fastpgm` — command-line front end for the Fast-PGM library.
+//!
+//! Subcommands:
+//!
+//! * `list` — show built-in and synthetic networks and loaded artifacts
+//! * `sample` — generate a CSV dataset from a network
+//! * `learn` — PC-stable structure learning (+ MLE) from a CSV
+//! * `infer` — posterior query with any engine
+//! * `classify` — train/evaluate a BN classifier on a CSV
+//! * `transform` — convert between BIF and fpgm formats
+//! * `export` — write artifact-network bundles (`.fpgm` + `_meta.txt`)
+//!   for the Python AOT compile path (`make artifacts`)
+//! * `serve` — run the coordinator demo loop over an AOT artifact
+
+use fastpgm::cli::Args;
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{
+    AisBn, ApproxOptions, EpisBn, GibbsSampling, LikelihoodWeighting, LogicSampling,
+    LoopyBp, LoopyBpOptions, SelfImportance,
+};
+use fastpgm::inference::exact::{
+    most_probable_explanation, JunctionTree, VariableElimination,
+};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::io::{bif, csv, fpgm};
+use fastpgm::network::{repository, synthetic::SyntheticSpec, BayesianNetwork};
+use fastpgm::parameter::MleOptions;
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable_parallel, PcOptions};
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("list") => cmd_list(),
+        Some("sample") => cmd_sample(&args),
+        Some("learn") => cmd_learn(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("map") => cmd_map(&args),
+        Some("classify") => cmd_classify(&args),
+        Some("transform") => cmd_transform(&args),
+        Some("export") => cmd_export(&args),
+        Some("serve") => cmd_serve(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fastpgm — fast probabilistic graphical model learning and inference
+
+USAGE: fastpgm <subcommand> [flags]
+
+  list                                 list available networks/artifacts
+  sample   --net <name> --n <rows> --out data.csv [--seed S]
+  learn    --data data.csv [--alpha A] [--threads T] [--out net.fpgm]
+  infer    --net <name|file.fpgm> --engine <jt|ve|lbp|pls|lw|sis|ais|epis|gibbs>
+           [--evidence var=state,var=state] [--query var] [--samples N]
+  map      --net <name|file.fpgm> [--evidence var=state,...]   MPE query
+  classify --data data.csv --class <var> [--structure naive|learn]
+  transform --in net.bif --out net.fpgm   (or fpgm -> bif)
+  export   --out artifacts/ [--batch B]   write AOT artifact networks
+  serve    --artifacts artifacts/ --net <name> [--requests N]"
+    );
+}
+
+/// Resolve a network by repository name, synthetic preset, or file path.
+fn load_net(spec: &str) -> anyhow::Result<BayesianNetwork> {
+    if let Some(net) = repository::by_name(spec) {
+        return Ok(net);
+    }
+    match spec {
+        "child_like" => return Ok(SyntheticSpec::child_like().generate(1)),
+        "insurance_like" => return Ok(SyntheticSpec::insurance_like().generate(1)),
+        "alarm_like" => return Ok(SyntheticSpec::alarm_like().generate(1)),
+        "hepar2_like" => return Ok(SyntheticSpec::hepar2_like().generate(1)),
+        "win95pts_like" => return Ok(SyntheticSpec::win95pts_like().generate(1)),
+        _ => {}
+    }
+    let path = Path::new(spec);
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("bif") => bif::load(path),
+        _ => fpgm::load(path),
+    }
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("built-in networks:");
+    for name in repository::BUILTIN_NAMES {
+        let net = repository::by_name(name).unwrap();
+        println!(
+            "  {name:<12} {} vars, {} edges, {} parameters",
+            net.n_vars(),
+            net.dag().n_edges(),
+            net.n_parameters()
+        );
+    }
+    println!("synthetic presets: child_like insurance_like alarm_like hepar2_like win95pts_like");
+    let artifacts = fastpgm::runtime::ArtifactBundle::discover(Path::new("artifacts"))?;
+    if artifacts.is_empty() {
+        println!("artifacts: none (run `make artifacts`)");
+    } else {
+        println!("artifacts:");
+        for b in artifacts {
+            let m = b.read_meta()?;
+            println!(
+                "  {:<12} batch={} n_vars={} class_var={} n_classes={}",
+                b.name, m.batch, m.n_vars, m.class_var, m.n_classes
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sample(args: &Args) -> anyhow::Result<()> {
+    let net = load_net(args.flag_or("net", "asia"))?;
+    let n = args.parse_flag("n", 10_000usize);
+    let seed = args.parse_flag("seed", 42u64);
+    let out = PathBuf::from(args.flag_or("out", "samples.csv"));
+    let mut rng = Pcg::seed_from(seed);
+    let ds = forward_sample_dataset(&net, n, &mut rng);
+    csv::save(&ds, &out)?;
+    println!("wrote {n} samples of {} to {}", net.name(), out.display());
+    Ok(())
+}
+
+fn cmd_learn(args: &Args) -> anyhow::Result<()> {
+    let data_path = PathBuf::from(
+        args.flag("data").ok_or_else(|| anyhow::anyhow!("--data required"))?,
+    );
+    let data = csv::load(&data_path, None)?;
+    if args.flag_or("algo", "pc") == "hc" {
+        // Score-based baseline: greedy hill climbing over BIC.
+        let t0 = std::time::Instant::now();
+        let hc = fastpgm::structure::hill_climb(
+            &data,
+            &fastpgm::structure::HcOptions::default(),
+        );
+        println!(
+            "hill-climbing (BIC): {} edges, score {:.1}, {} moves, {:.1?}",
+            hc.dag.n_edges(),
+            hc.score,
+            hc.moves,
+            t0.elapsed()
+        );
+        for (f, t) in hc.dag.edges() {
+            println!("  {} -> {}", data.variable(f).name, data.variable(t).name);
+        }
+        if let Some(out) = args.flag("out") {
+            let net = fastpgm::parameter::mle(&data, &hc.dag, &MleOptions::default());
+            fpgm::save(&net, Path::new(out))?;
+            println!("wrote learned network to {out}");
+        }
+        return Ok(());
+    }
+    let opts = PcOptions {
+        alpha: args.parse_flag("alpha", 0.01f64),
+        threads: args.parse_flag("threads", fastpgm::parallel::default_threads()),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = pc_stable_parallel(&data, &opts);
+    println!(
+        "PC-stable: {} edges, {} CI tests, {:.1?}",
+        result.n_edges(),
+        result.n_tests,
+        t0.elapsed()
+    );
+    for (a, b) in result.graph.directed_edges() {
+        println!("  {} -> {}", data.variable(a).name, data.variable(b).name);
+    }
+    for (a, b) in result.graph.undirected_edges() {
+        println!("  {} -- {}", data.variable(a).name, data.variable(b).name);
+    }
+    if let Some(out) = args.flag("out") {
+        let dag = result
+            .graph
+            .to_dag()
+            .ok_or_else(|| anyhow::anyhow!("CPDAG could not be extended to a DAG"))?;
+        let net = fastpgm::parameter::mle(&data, &dag, &MleOptions::default());
+        fpgm::save(&net, Path::new(out))?;
+        println!("wrote learned network to {out}");
+    }
+    Ok(())
+}
+
+fn parse_evidence(net: &BayesianNetwork, spec: Option<&str>) -> anyhow::Result<Evidence> {
+    let mut ev = Evidence::new();
+    if let Some(s) = spec {
+        for pair in s.split(',').filter(|p| !p.is_empty()) {
+            let (var, state) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad evidence item {pair:?}"))?;
+            let v = net
+                .var_index(var)
+                .ok_or_else(|| anyhow::anyhow!("unknown variable {var:?}"))?;
+            let s_idx = net
+                .variable(v)
+                .state_index(state)
+                .ok_or_else(|| anyhow::anyhow!("unknown state {state:?} for {var}"))?;
+            ev.set(v, s_idx);
+        }
+    }
+    Ok(ev)
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let net = load_net(args.flag_or("net", "asia"))?;
+    let ev = parse_evidence(&net, args.flag("evidence"))?;
+    let engine = args.flag_or("engine", "jt");
+    let samples = args.parse_flag("samples", 50_000usize);
+    let threads = args.parse_flag("threads", 1usize);
+    let approx = ApproxOptions { n_samples: samples, threads, ..Default::default() };
+
+    let t0 = std::time::Instant::now();
+    let posts = match engine {
+        "jt" => {
+            let jt = JunctionTree::build(&net);
+            let mut e = jt.engine();
+            e.query_all(&ev)
+        }
+        "ve" => VariableElimination::new(&net).query_all(&ev),
+        "lbp" => LoopyBp::new(&net, LoopyBpOptions::default()).query_all(&ev),
+        "pls" => LogicSampling::new(&net, approx).query_all(&ev),
+        "lw" => LikelihoodWeighting::new(&net, approx).query_all(&ev),
+        "sis" => SelfImportance::new(&net, approx).query_all(&ev),
+        "ais" => AisBn::new(&net, approx).query_all(&ev),
+        "epis" => EpisBn::new(&net, approx).query_all(&ev),
+        "gibbs" => GibbsSampling::new(&net, approx).query_all(&ev),
+        other => anyhow::bail!("unknown engine {other:?}"),
+    };
+    let elapsed = t0.elapsed();
+
+    let show = |v: usize| {
+        let states: Vec<String> = posts[v]
+            .iter()
+            .enumerate()
+            .map(|(s, p)| format!("{}={:.4}", net.variable(v).state_name(s), p))
+            .collect();
+        println!("  {:<12} {}", net.variable(v).name, states.join(" "));
+    };
+    match args.flag("query") {
+        Some(q) => {
+            let v = net
+                .var_index(q)
+                .ok_or_else(|| anyhow::anyhow!("unknown variable {q:?}"))?;
+            show(v);
+        }
+        None => (0..net.n_vars()).for_each(show),
+    }
+    println!("engine={engine} time={elapsed:.1?}");
+    Ok(())
+}
+
+fn cmd_map(args: &Args) -> anyhow::Result<()> {
+    let net = load_net(args.flag_or("net", "asia"))?;
+    let ev = parse_evidence(&net, args.flag("evidence"))?;
+    let t0 = std::time::Instant::now();
+    let result = most_probable_explanation(&net, &ev);
+    println!("most probable explanation (P = {:.6e}):", result.probability);
+    for v in 0..net.n_vars() {
+        let tag = if ev.contains(v) { " [evidence]" } else { "" };
+        println!(
+            "  {:<12} = {}{tag}",
+            net.variable(v).name,
+            net.variable(v).state_name(result.assignment.get(v))
+        );
+    }
+    println!("time={:.1?}", t0.elapsed());
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> anyhow::Result<()> {
+    use fastpgm::classify::{BnClassifier, StructureSource};
+    let data_path = PathBuf::from(
+        args.flag("data").ok_or_else(|| anyhow::anyhow!("--data required"))?,
+    );
+    let data = csv::load(&data_path, None)?;
+    let class_name =
+        args.flag("class").ok_or_else(|| anyhow::anyhow!("--class required"))?;
+    let class_var = data
+        .var_index(class_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown class variable {class_name:?}"))?;
+    let source = match args.flag_or("structure", "naive") {
+        "naive" => StructureSource::NaiveBayes,
+        "learn" => StructureSource::Learn(PcOptions::default()),
+        other => anyhow::bail!("unknown structure source {other:?}"),
+    };
+    let (train, test) = data.split(args.parse_flag("train-fraction", 0.8f64));
+    let clf = BnClassifier::train(&train, class_var, source, &MleOptions::default());
+    let acc = clf.evaluate(&test);
+    println!(
+        "trained on {} rows, accuracy on {} held-out rows: {:.3}",
+        train.n_rows(),
+        test.n_rows(),
+        acc
+    );
+    Ok(())
+}
+
+fn cmd_transform(args: &Args) -> anyhow::Result<()> {
+    let input =
+        PathBuf::from(args.flag("in").ok_or_else(|| anyhow::anyhow!("--in required"))?);
+    let output =
+        PathBuf::from(args.flag("out").ok_or_else(|| anyhow::anyhow!("--out required"))?);
+    let net = load_net(input.to_str().unwrap())?;
+    match output.extension().and_then(|e| e.to_str()) {
+        Some("bif") => bif::save(&net, &output)?,
+        _ => fpgm::save(&net, &output)?,
+    }
+    println!("transformed {} -> {}", input.display(), output.display());
+    Ok(())
+}
+
+/// Artifact networks and their class variables. The class variable is what
+/// the AOT serving path computes posteriors over.
+fn artifact_specs() -> Vec<(&'static str, fn(&BayesianNetwork) -> usize)> {
+    vec![
+        ("asia", |net| net.var_index("bronc").unwrap()),
+        // For synthetic networks: the last node in topological order
+        // (a sink — plays the "diagnosis" role).
+        ("child_like", |net| *net.topological_order().last().unwrap()),
+        ("alarm_like", |net| *net.topological_order().last().unwrap()),
+    ]
+}
+
+fn cmd_export(args: &Args) -> anyhow::Result<()> {
+    let out_dir = PathBuf::from(args.flag_or("out", "artifacts"));
+    let batch = args.parse_flag("batch", 256usize);
+    std::fs::create_dir_all(&out_dir)?;
+    for (name, class_of) in artifact_specs() {
+        let net = load_net(name)?;
+        let class_var = class_of(&net);
+        fpgm::save(&net, &out_dir.join(format!("{name}.fpgm")))?;
+        let meta = format!(
+            "network {name}\nbatch {batch}\nn_vars {}\nclass_var {}\nn_classes {}\n",
+            net.n_vars(),
+            class_var,
+            net.cardinality(class_var)
+        );
+        std::fs::write(out_dir.join(format!("{name}_meta.txt")), meta)?;
+        println!(
+            "exported {name}: {} vars, class={} ({})",
+            net.n_vars(),
+            class_var,
+            net.variable(class_var).name
+        );
+    }
+    println!("now run the python compile step (make artifacts does both)");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use fastpgm::coordinator::{BatcherConfig, Router};
+    use fastpgm::runtime::{ArtifactBundle, BatchScorer};
+    let dir = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let name = args.flag_or("net", "asia").to_string();
+    let requests = args.parse_flag("requests", 1024usize);
+    let bundle = ArtifactBundle::locate(&dir, &name)?;
+    let net = fpgm::load(&bundle.fpgm)?;
+    let meta = bundle.read_meta()?;
+
+    let mut router = Router::new();
+    let bundle2 = bundle.clone();
+    router.register_with(
+        name.clone(),
+        Box::new(move || Ok(Box::new(BatchScorer::load(&bundle2)?) as _)),
+        BatcherConfig::default(),
+    )?;
+    println!("loaded artifact {name} (batch={})", meta.batch);
+
+    // Drive a synthetic request stream from forward samples.
+    let mut rng = Pcg::seed_from(7);
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    for _ in 0..requests {
+        let a = fastpgm::sampling::forward_sample(&net, &mut rng);
+        let truth = a.get(meta.class_var);
+        let post = router.classify(&name, a.values.clone())?;
+        if fastpgm::classify::argmax(&post) == truth {
+            correct += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let stats = router.stats();
+    println!(
+        "served {requests} requests in {elapsed:.2?} ({:.0} req/s), accuracy vs sampled truth {:.3}",
+        requests as f64 / elapsed.as_secs_f64(),
+        correct as f64 / requests as f64
+    );
+    for (model, m) in stats.per_model {
+        println!("  {model}: {}", m.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Evaluation metrics (paper §2, auxiliary features): structural Hamming
+//! distance for learning, Hellinger distance for inference, plus KL
+//! divergence, total variation and classification accuracy.
+
+use crate::core::VarId;
+use crate::graph::{Dag, Pdag};
+
+/// Structural Hamming distance between two PDAGs/CPDAGs (Acid & de Campos
+/// 2003; Tsamardinos et al. 2006 convention): number of edge insertions,
+/// deletions and re-orientations needed to turn `learned` into `truth`.
+///
+/// * missing or extra adjacency → 1
+/// * shared adjacency with different mark (direction flip, or directed vs
+///   undirected) → 1
+pub fn shd(learned: &Pdag, truth: &Pdag) -> usize {
+    assert_eq!(learned.n_nodes(), truth.n_nodes());
+    let n = learned.n_nodes();
+    let mut dist = 0;
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let la = learned.adjacent(a, b);
+            let ta = truth.adjacent(a, b);
+            match (la, ta) {
+                (false, false) => {}
+                (true, false) | (false, true) => dist += 1,
+                (true, true) => {
+                    let same = (learned.has_undirected(a, b) && truth.has_undirected(a, b))
+                        || (learned.has_directed(a, b) && truth.has_directed(a, b))
+                        || (learned.has_directed(b, a) && truth.has_directed(b, a));
+                    if !same {
+                        dist += 1;
+                    }
+                }
+            }
+        }
+    }
+    dist
+}
+
+/// SHD against the *CPDAG* of a ground-truth DAG — the fair comparison for
+/// constraint-based learners, which can only identify structure up to its
+/// Markov equivalence class.
+pub fn shd_vs_dag_cpdag(learned: &Pdag, truth_dag: &Dag) -> usize {
+    shd(learned, &cpdag_of(truth_dag))
+}
+
+/// The CPDAG (Markov-equivalence-class representative) of a DAG: keep
+/// v-structure edges directed, then close under Meek's rules; everything
+/// else is undirected.
+pub fn cpdag_of(dag: &Dag) -> Pdag {
+    let mut p = Pdag::from_skeleton(&dag.skeleton());
+    for (a, b, c) in dag.v_structures() {
+        p.orient(a, c);
+        p.orient(b, c);
+    }
+    crate::structure::orientation::apply_meek_rules(&mut p);
+    p
+}
+
+/// Hellinger distance between two discrete distributions:
+/// `H(p,q) = sqrt(1/2 * sum_i (sqrt(p_i) - sqrt(q_i))^2)`, in `[0, 1]`.
+pub fn hellinger(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let s: f64 = p
+        .iter()
+        .zip(q)
+        .map(|(&a, &b)| {
+            let d = a.max(0.0).sqrt() - b.max(0.0).sqrt();
+            d * d
+        })
+        .sum();
+    (s / 2.0).sqrt()
+}
+
+/// Mean Hellinger distance across per-variable posteriors — the aggregate
+/// inference-accuracy number benches E7 report.
+pub fn mean_hellinger(ps: &[Vec<f64>], qs: &[Vec<f64>]) -> f64 {
+    assert_eq!(ps.len(), qs.len());
+    if ps.is_empty() {
+        return 0.0;
+    }
+    ps.iter().zip(qs).map(|(p, q)| hellinger(p, q)).sum::<f64>() / ps.len() as f64
+}
+
+/// KL divergence `KL(p || q)` with absolute-continuity guard
+/// (`0 log 0/q = 0`; `p>0, q=0` contributes `inf` clamped to a large
+/// finite value so aggregates stay usable).
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    p.iter()
+        .zip(q)
+        .map(|(&a, &b)| {
+            if a <= 0.0 {
+                0.0
+            } else if b <= 0.0 {
+                1e9
+            } else {
+                a * (a / b).ln()
+            }
+        })
+        .sum()
+}
+
+/// Total variation distance `1/2 * sum |p_i - q_i|`.
+pub fn total_variation(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    p.iter().zip(q).map(|(&a, &b)| (a - b).abs()).sum::<f64>() / 2.0
+}
+
+/// Classification accuracy from (predicted, actual) state pairs.
+pub fn accuracy(pairs: &[(usize, usize)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().filter(|(p, a)| p == a).count() as f64 / pairs.len() as f64
+}
+
+/// Confusion matrix `m[actual][predicted]` for a `card`-state variable.
+pub fn confusion_matrix(pairs: &[(usize, usize)], card: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; card]; card];
+    for &(pred, actual) in pairs {
+        m[actual][pred] += 1;
+    }
+    m
+}
+
+/// Skeleton precision/recall/F1 of a learned PDAG against a true DAG's
+/// skeleton — the secondary learning-quality numbers in bench E8.
+pub fn skeleton_prf(learned: &Pdag, truth: &Dag) -> (f64, f64, f64) {
+    let n = truth.n_nodes();
+    let t = truth.skeleton();
+    let (mut tp, mut fp, mut fn_) = (0usize, 0usize, 0usize);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            match (learned.adjacent(a, b), t.has_edge(a, b)) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fn_ += 1,
+                _ => {}
+            }
+        }
+    }
+    let prec = if tp + fp == 0 { 1.0 } else { tp as f64 / (tp + fp) as f64 };
+    let rec = if tp + fn_ == 0 { 1.0 } else { tp as f64 / (tp + fn_) as f64 };
+    let f1 = if prec + rec == 0.0 { 0.0 } else { 2.0 * prec * rec / (prec + rec) };
+    (prec, rec, f1)
+}
+
+/// Edge-difference report between two DAGs (extra, missing, reversed) —
+/// used by the format-transform CLI for human-readable diffs.
+pub fn dag_diff(a: &Dag, b: &Dag) -> (Vec<(VarId, VarId)>, Vec<(VarId, VarId)>, Vec<(VarId, VarId)>) {
+    let mut extra = Vec::new();
+    let mut missing = Vec::new();
+    let mut reversed = Vec::new();
+    for (f, t) in a.edges() {
+        if b.has_edge(f, t) {
+        } else if b.has_edge(t, f) {
+            if f < t {
+                reversed.push((f, t));
+            }
+        } else {
+            extra.push((f, t));
+        }
+    }
+    for (f, t) in b.edges() {
+        if !a.has_edge(f, t) && !a.has_edge(t, f) {
+            missing.push((f, t));
+        }
+    }
+    (extra, missing, reversed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hellinger_bounds() {
+        assert_eq!(hellinger(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert!((hellinger(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        let h = hellinger(&[0.5, 0.5], &[0.9, 0.1]);
+        assert!(h > 0.0 && h < 1.0);
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        assert!(kl_divergence(&[0.3, 0.7], &[0.3, 0.7]).abs() < 1e-12);
+        assert!(kl_divergence(&[0.3, 0.7], &[0.7, 0.3]) > 0.0);
+    }
+
+    #[test]
+    fn tv_symmetric() {
+        let (p, q) = ([0.2, 0.8], [0.6, 0.4]);
+        assert!((total_variation(&p, &q) - total_variation(&q, &p)).abs() < 1e-12);
+        assert!((total_variation(&p, &q) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shd_identical_zero() {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 1);
+        d.add_edge(1, 2);
+        let p = Pdag::from_dag(&d);
+        assert_eq!(shd(&p, &p.clone()), 0);
+    }
+
+    #[test]
+    fn shd_counts_each_difference() {
+        let mut t = Dag::new(4);
+        t.add_edge(0, 1);
+        t.add_edge(2, 3);
+        let truth = Pdag::from_dag(&t);
+        // learned: 0->1 reversed, 2-3 missing, extra 1-2 undirected
+        let mut l = Pdag::new(4);
+        l.orient(1, 0);
+        l.set_undirected(1, 2);
+        assert_eq!(shd(&l, &truth), 3);
+    }
+
+    #[test]
+    fn accuracy_and_confusion() {
+        let pairs = [(0, 0), (1, 1), (0, 1), (1, 1)];
+        assert!((accuracy(&pairs) - 0.75).abs() < 1e-12);
+        let m = confusion_matrix(&pairs, 2);
+        assert_eq!(m[1][0], 1); // one actual-1 predicted-0
+        assert_eq!(m[1][1], 2);
+    }
+
+    #[test]
+    fn skeleton_prf_perfect() {
+        let mut d = Dag::new(3);
+        d.add_edge(0, 2);
+        let p = Pdag::from_dag(&d);
+        let (prec, rec, f1) = skeleton_prf(&p, &d);
+        assert_eq!((prec, rec, f1), (1.0, 1.0, 1.0));
+    }
+}

@@ -1,0 +1,263 @@
+//! Markov random fields / factor graphs.
+//!
+//! The paper positions Fast-PGM as a *PGM* library and motivates it with
+//! Markov-network applications (vision, protein interaction). This module
+//! supplies the undirected side: a [`FactorGraph`] over discrete
+//! variables with arbitrary potential-table factors, builders for the
+//! common cases (pairwise grids, conversion from a Bayesian network), and
+//! approximate inference via loopy BP ([`lbp`]) and Gibbs sampling
+//! ([`gibbs`]).
+
+pub mod gibbs;
+pub mod lbp;
+
+use crate::core::{Assignment, Evidence, VarId, Variable};
+use crate::network::BayesianNetwork;
+use crate::potential::ops::IndexMode;
+use crate::potential::PotentialTable;
+
+/// A discrete factor graph: variables + non-negative factors over subsets.
+#[derive(Clone, Debug)]
+pub struct FactorGraph {
+    variables: Vec<Variable>,
+    factors: Vec<PotentialTable>,
+}
+
+impl FactorGraph {
+    pub fn new(variables: Vec<Variable>) -> Self {
+        FactorGraph { variables, factors: Vec::new() }
+    }
+
+    /// Add a factor; its scope must reference declared variables with
+    /// matching cardinalities.
+    pub fn add_factor(&mut self, factor: PotentialTable) {
+        for (&v, &c) in factor.vars().iter().zip(factor.cards()) {
+            assert!(v < self.variables.len(), "factor scope out of range");
+            assert_eq!(
+                c, self.variables[v].cardinality,
+                "cardinality mismatch for variable {v}"
+            );
+        }
+        assert!(factor.data().iter().all(|&x| x >= 0.0), "negative potential");
+        self.factors.push(factor);
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.variables.len()
+    }
+
+    pub fn variables(&self) -> &[Variable] {
+        &self.variables
+    }
+
+    pub fn cardinality(&self, v: VarId) -> usize {
+        self.variables[v].cardinality
+    }
+
+    pub fn factors(&self) -> &[PotentialTable] {
+        &self.factors
+    }
+
+    /// Unnormalized measure of a complete assignment.
+    pub fn unnormalized_prob(&self, a: &Assignment) -> f64 {
+        self.factors
+            .iter()
+            .map(|f| {
+                let digits: Vec<usize> =
+                    f.vars().iter().map(|&v| a.get(v)).collect();
+                f.value_at(&digits)
+            })
+            .product()
+    }
+
+    /// Exact partition function by enumeration (tiny graphs only — the
+    /// test oracle).
+    pub fn partition_function(&self) -> f64 {
+        let cards: Vec<usize> =
+            self.variables.iter().map(|v| v.cardinality).collect();
+        let total: usize = cards.iter().product();
+        let mut digits = vec![0usize; cards.len()];
+        let mut z = 0.0;
+        let mut a = Assignment::zeros(cards.len());
+        for _ in 0..total {
+            for (v, &d) in digits.iter().enumerate() {
+                a.set(v, d);
+            }
+            z += self.unnormalized_prob(&a);
+            PotentialTable::advance(&mut digits, &cards);
+        }
+        z
+    }
+
+    /// Exact marginal by enumeration (test oracle).
+    pub fn brute_force_marginal(&self, v: VarId, ev: &Evidence) -> Vec<f64> {
+        let cards: Vec<usize> =
+            self.variables.iter().map(|x| x.cardinality).collect();
+        let total: usize = cards.iter().product();
+        let mut digits = vec![0usize; cards.len()];
+        let mut post = vec![0.0; self.cardinality(v)];
+        let mut a = Assignment::zeros(cards.len());
+        for _ in 0..total {
+            for (u, &d) in digits.iter().enumerate() {
+                a.set(u, d);
+            }
+            if ev.consistent_with(&a) {
+                post[a.get(v)] += self.unnormalized_prob(&a);
+            }
+            PotentialTable::advance(&mut digits, &cards);
+        }
+        let s: f64 = post.iter().sum();
+        if s > 0.0 {
+            for p in &mut post {
+                *p /= s;
+            }
+        }
+        post
+    }
+
+    /// Convert a Bayesian network into its factor-graph representation
+    /// (one factor per family; the joint is identical).
+    pub fn from_bayesian_network(net: &BayesianNetwork) -> Self {
+        let mut fg = FactorGraph::new(net.variables().to_vec());
+        for v in 0..net.n_vars() {
+            fg.add_factor(net.family_potential(v));
+        }
+        fg
+    }
+
+    /// Pairwise 4-connected grid MRF (the vision workhorse): `rows × cols`
+    /// variables with `states` states each, one unary factor per node from
+    /// `unary(r, c)` and one Potts-style pairwise factor per edge:
+    /// `exp(coupling)` on the diagonal, 1 off it.
+    pub fn grid(
+        rows: usize,
+        cols: usize,
+        states: usize,
+        coupling: f64,
+        mut unary: impl FnMut(usize, usize) -> Vec<f64>,
+    ) -> Self {
+        let variables: Vec<Variable> = (0..rows * cols)
+            .map(|i| Variable::new(format!("x{}_{}", i / cols, i % cols), states))
+            .collect();
+        let mut fg = FactorGraph::new(variables);
+        let id = |r: usize, c: usize| r * cols + c;
+        for r in 0..rows {
+            for c in 0..cols {
+                let u = unary(r, c);
+                assert_eq!(u.len(), states);
+                fg.add_factor(PotentialTable::from_data(
+                    vec![id(r, c)],
+                    vec![states],
+                    u,
+                ));
+            }
+        }
+        let same = coupling.exp();
+        let mut pairwise = vec![1.0; states * states];
+        for s in 0..states {
+            pairwise[s * states + s] = same;
+        }
+        for r in 0..rows {
+            for c in 0..cols {
+                if c + 1 < cols {
+                    let (a, b) = (id(r, c), id(r, c + 1));
+                    fg.add_factor(PotentialTable::from_data(
+                        vec![a.min(b), a.max(b)],
+                        vec![states, states],
+                        pairwise.clone(),
+                    ));
+                }
+                if r + 1 < rows {
+                    let (a, b) = (id(r, c), id(r + 1, c));
+                    fg.add_factor(PotentialTable::from_data(
+                        vec![a.min(b), a.max(b)],
+                        vec![states, states],
+                        pairwise.clone(),
+                    ));
+                }
+            }
+        }
+        fg
+    }
+
+    /// Absorb evidence by reducing every factor (returns a new graph).
+    pub fn condition(&self, ev: &Evidence) -> FactorGraph {
+        let mut fg = FactorGraph::new(self.variables.clone());
+        for f in &self.factors {
+            let mut g = f.clone();
+            g.reduce_evidence(ev);
+            fg.factors.push(g);
+        }
+        fg
+    }
+
+    /// Pointwise product of all factors marginalized to `v` — exact only
+    /// for trivial graphs; kept for diagnostics.
+    pub fn naive_marginal(&self, v: VarId) -> Vec<f64> {
+        let mut joint = PotentialTable::scalar(1.0);
+        for f in &self.factors {
+            joint = joint.product(f, IndexMode::Odometer);
+        }
+        let m = joint.marginalize_keep(&[v], IndexMode::Odometer);
+        let mut p = m.data().to_vec();
+        let s: f64 = p.iter().sum();
+        if s > 0.0 {
+            for x in &mut p {
+                *x /= s;
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    #[test]
+    fn from_bn_preserves_joint() {
+        let net = repository::cancer();
+        let fg = FactorGraph::from_bayesian_network(&net);
+        let mut a = Assignment::zeros(net.n_vars());
+        a.set(0, 1);
+        a.set(2, 1);
+        assert!((fg.unnormalized_prob(&a) - net.joint_prob(&a)).abs() < 1e-12);
+        assert!((fg.partition_function() - 1.0).abs() < 1e-9, "BN sums to 1");
+    }
+
+    #[test]
+    fn grid_construction() {
+        let fg = FactorGraph::grid(3, 4, 2, 0.5, |_, _| vec![1.0, 1.0]);
+        assert_eq!(fg.n_vars(), 12);
+        // 12 unary + 3*3 + 2*4 pairwise = 12 + 17.
+        assert_eq!(fg.factors().len(), 12 + 17);
+    }
+
+    #[test]
+    fn grid_coupling_favors_agreement() {
+        let fg = FactorGraph::grid(1, 2, 2, 1.0, |_, _| vec![1.0, 1.0]);
+        let mut same = Assignment::zeros(2);
+        let mut diff = Assignment::zeros(2);
+        diff.set(1, 1);
+        assert!(fg.unnormalized_prob(&same) > fg.unnormalized_prob(&diff));
+        let _ = &mut same;
+    }
+
+    #[test]
+    fn brute_marginal_normalized() {
+        let fg = FactorGraph::grid(2, 2, 2, 0.7, |r, c| {
+            if (r + c) % 2 == 0 { vec![2.0, 1.0] } else { vec![1.0, 2.0] }
+        });
+        let m = fg.brute_force_marginal(0, &Evidence::new());
+        assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(m[0] > 0.5, "unary prior pulls state 0: {m:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_cardinality_rejected() {
+        let mut fg = FactorGraph::new(vec![Variable::new("a", 2)]);
+        fg.add_factor(PotentialTable::unit(vec![0], vec![3]));
+    }
+}

@@ -1,0 +1,153 @@
+//! Conditional probability tables.
+
+use crate::core::{Assignment, VarId, Variable};
+
+/// The CPT of one variable: `table[pcfg * card + state] = P(state | pcfg)`.
+///
+/// Parent configurations are mixed-radix indices over the (sorted) parent
+/// list with the **last parent fastest** — the same row-major convention
+/// [`crate::potential::PotentialTable`] uses, so family potentials and the
+/// AOT artifact layout agree byte-for-byte with this table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cpt {
+    /// The child variable.
+    pub var: VarId,
+    /// Parents, sorted ascending.
+    pub parents: Vec<VarId>,
+    /// Cardinalities of the parents (aligned with `parents`).
+    pub parent_cards: Vec<usize>,
+    /// Cardinality of the child.
+    pub card: usize,
+    /// `n_parent_configs * card` probabilities.
+    pub table: Vec<f64>,
+}
+
+impl Cpt {
+    pub fn new(
+        var: VarId,
+        parents: Vec<VarId>,
+        parent_cards: Vec<usize>,
+        card: usize,
+        table: Vec<f64>,
+    ) -> Self {
+        assert_eq!(parents.len(), parent_cards.len());
+        assert!(
+            parents.windows(2).all(|w| w[0] < w[1]),
+            "parents must be sorted: {parents:?}"
+        );
+        let n_cfg: usize = parent_cards.iter().product();
+        assert_eq!(
+            table.len(),
+            n_cfg * card,
+            "CPT for var {var}: expected {} entries, got {}",
+            n_cfg * card,
+            table.len()
+        );
+        Cpt { var, parents, parent_cards, card, table }
+    }
+
+    /// A root CPT (no parents) from a prior distribution.
+    pub fn root(var: VarId, prior: Vec<f64>) -> Self {
+        let card = prior.len();
+        Cpt::new(var, Vec::new(), Vec::new(), card, prior)
+    }
+
+    pub fn n_parent_configs(&self) -> usize {
+        self.parent_cards.iter().product()
+    }
+
+    /// Check every row is a probability distribution.
+    pub fn validate(&self, variables: &[Variable]) {
+        assert_eq!(self.card, variables[self.var].cardinality);
+        for (k, &p) in self.parents.iter().enumerate() {
+            assert_eq!(self.parent_cards[k], variables[p].cardinality);
+        }
+        for cfg in 0..self.n_parent_configs() {
+            let row = &self.table[cfg * self.card..(cfg + 1) * self.card];
+            assert!(
+                row.iter().all(|&p| (0.0..=1.0 + 1e-9).contains(&p)),
+                "CPT row out of range for var {}: {row:?}",
+                self.var
+            );
+            let s: f64 = row.iter().sum();
+            assert!(
+                (s - 1.0).abs() < 1e-6,
+                "CPT row for var {} cfg {cfg} sums to {s}",
+                self.var
+            );
+        }
+    }
+
+    /// Mixed-radix parent-configuration index, reading parent states via a
+    /// callback (`k` = position in the parent list).
+    #[inline]
+    pub fn parent_config_from(&self, state_of: impl Fn(usize) -> usize) -> usize {
+        let mut cfg = 0;
+        for k in 0..self.parents.len() {
+            cfg = cfg * self.parent_cards[k] + state_of(k);
+        }
+        cfg
+    }
+
+    /// Parent-configuration index under a full assignment.
+    #[inline]
+    pub fn parent_config(&self, a: &Assignment) -> usize {
+        self.parent_config_from(|k| a.get(self.parents[k]))
+    }
+
+    /// P(state | cfg).
+    #[inline]
+    pub fn prob(&self, cfg: usize, state: usize) -> f64 {
+        self.table[cfg * self.card + state]
+    }
+
+    /// The distribution row for a configuration.
+    #[inline]
+    pub fn row(&self, cfg: usize) -> &[f64] {
+        &self.table[cfg * self.card..(cfg + 1) * self.card]
+    }
+
+    /// P(state | parents as assigned in `a`).
+    #[inline]
+    pub fn prob_given(&self, state: usize, a: &Assignment) -> f64 {
+        self.prob(self.parent_config(a), state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_cpt() {
+        let c = Cpt::root(0, vec![0.25, 0.75]);
+        assert_eq!(c.n_parent_configs(), 1);
+        assert_eq!(c.prob(0, 1), 0.75);
+        assert_eq!(c.row(0), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn parent_config_last_fastest() {
+        // parents (1, 2) with cards (2, 3): cfg = s1 * 3 + s2
+        let table: Vec<f64> = (0..6).flat_map(|_| [0.4, 0.6]).collect();
+        let c = Cpt::new(3, vec![1, 2], vec![2, 3], 2, table);
+        let mut a = Assignment::zeros(4);
+        a.set(1, 1);
+        a.set(2, 2);
+        assert_eq!(c.parent_config(&a), 5);
+        assert_eq!(c.prob_given(1, &a), 0.6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_size_table_rejected() {
+        let _ = Cpt::new(0, vec![], vec![], 2, vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_distribution_row_fails_validate() {
+        let c = Cpt::root(0, vec![0.5, 0.2]);
+        c.validate(&[Variable::binary("x")]);
+    }
+}

@@ -1,0 +1,329 @@
+//! Bayesian networks: structure (a [`Dag`]) plus one conditional
+//! probability table per variable.
+
+mod cpt;
+pub mod repository;
+pub mod synthetic;
+
+pub use cpt::Cpt;
+
+use crate::core::{Assignment, Evidence, VarId, Variable};
+use crate::graph::Dag;
+use crate::potential::PotentialTable;
+
+/// A discrete Bayesian network.
+///
+/// Invariants (enforced by [`BayesianNetwork::new`] and the builder):
+/// * the graph is acyclic;
+/// * `cpts[v].var == v`, its parent list equals `dag.parents(v)` (sorted);
+/// * every CPT row is a distribution (non-negative, sums to 1 within 1e-6).
+#[derive(Clone, Debug)]
+pub struct BayesianNetwork {
+    name: String,
+    variables: Vec<Variable>,
+    dag: Dag,
+    cpts: Vec<Cpt>,
+    /// Cached topological order.
+    topo: Vec<VarId>,
+}
+
+impl BayesianNetwork {
+    /// Assemble and validate a network.
+    pub fn new(
+        name: impl Into<String>,
+        variables: Vec<Variable>,
+        dag: Dag,
+        cpts: Vec<Cpt>,
+    ) -> Self {
+        let n = variables.len();
+        assert_eq!(dag.n_nodes(), n, "graph / variable count mismatch");
+        assert_eq!(cpts.len(), n, "need one CPT per variable");
+        let topo = dag
+            .topological_order()
+            .expect("Bayesian network structure must be acyclic");
+        for (v, cpt) in cpts.iter().enumerate() {
+            assert_eq!(cpt.var, v, "CPT {v} attached to wrong variable");
+            assert_eq!(
+                cpt.parents,
+                dag.parents(v),
+                "CPT parent set for {} disagrees with the graph",
+                variables[v].name
+            );
+            cpt.validate(&variables);
+        }
+        BayesianNetwork { name: name.into(), variables, dag, cpts, topo }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.variables.len()
+    }
+
+    /// Total number of independent parameters (CPT entries minus one per
+    /// row) — the "size" figure papers quote for networks.
+    pub fn n_parameters(&self) -> usize {
+        self.cpts
+            .iter()
+            .enumerate()
+            .map(|(v, c)| c.n_parent_configs() * (self.variables[v].cardinality - 1))
+            .sum()
+    }
+
+    pub fn variables(&self) -> &[Variable] {
+        &self.variables
+    }
+
+    pub fn variable(&self, v: VarId) -> &Variable {
+        &self.variables[v]
+    }
+
+    pub fn cardinality(&self, v: VarId) -> usize {
+        self.variables[v].cardinality
+    }
+
+    pub fn var_index(&self, name: &str) -> Option<VarId> {
+        self.variables.iter().position(|v| v.name == name)
+    }
+
+    pub fn dag(&self) -> &Dag {
+        &self.dag
+    }
+
+    pub fn parents(&self, v: VarId) -> &[VarId] {
+        self.dag.parents(v)
+    }
+
+    pub fn cpt(&self, v: VarId) -> &Cpt {
+        &self.cpts[v]
+    }
+
+    pub fn cpts(&self) -> &[Cpt] {
+        &self.cpts
+    }
+
+    /// Topological order (cached at construction).
+    pub fn topological_order(&self) -> &[VarId] {
+        &self.topo
+    }
+
+    /// P(var = state | parents as in `a`).
+    #[inline]
+    pub fn prob(&self, v: VarId, state: usize, a: &Assignment) -> f64 {
+        self.cpts[v].prob_given(state, a)
+    }
+
+    /// Joint probability of a complete assignment.
+    pub fn joint_prob(&self, a: &Assignment) -> f64 {
+        self.cpts
+            .iter()
+            .map(|c| c.prob_given(a.get(c.var), a))
+            .product()
+    }
+
+    /// Joint log-probability of a complete assignment (the quantity the
+    /// AOT-compiled batch scorer computes for evidence batches).
+    pub fn joint_log_prob(&self, a: &Assignment) -> f64 {
+        self.cpts
+            .iter()
+            .map(|c| c.prob_given(a.get(c.var), a).max(f64::MIN_POSITIVE).ln())
+            .sum()
+    }
+
+    /// The family factor P(v | parents) as a canonical potential table over
+    /// `{v} ∪ parents(v)` — the starting point of both junction-tree and
+    /// variable-elimination inference.
+    pub fn family_potential(&self, v: VarId) -> PotentialTable {
+        let cpt = &self.cpts[v];
+        let mut scope: Vec<VarId> = cpt.parents.clone();
+        scope.push(v);
+        scope.sort_unstable();
+        let scope_cards: Vec<usize> =
+            scope.iter().map(|&u| self.cardinality(u)).collect();
+        let mut table = PotentialTable::zeros(scope.clone(), scope_cards.clone());
+        let pos_of = |u: VarId| scope.binary_search(&u).unwrap();
+        let v_pos = pos_of(v);
+        let parent_pos: Vec<usize> =
+            cpt.parents.iter().map(|&p| pos_of(p)).collect();
+        let mut digits = vec![0usize; scope.len()];
+        for i in 0..table.len() {
+            let state = digits[v_pos];
+            let pcfg = cpt.parent_config_from(|k| digits[parent_pos[k]]);
+            table.data_mut()[i] = cpt.prob(pcfg, state);
+            PotentialTable::advance(&mut digits, &scope_cards);
+        }
+        table
+    }
+
+    /// Brute-force exact posterior P(v | evidence) by enumerating the full
+    /// joint — exponential, only viable for tiny nets; the ground-truth
+    /// oracle the test suite checks every inference engine against.
+    pub fn brute_force_posterior(&self, v: VarId, ev: &Evidence) -> Vec<f64> {
+        let n = self.n_vars();
+        let card = self.cardinality(v);
+        let mut post = vec![0.0; card];
+        let cards: Vec<usize> = (0..n).map(|u| self.cardinality(u)).collect();
+        let mut a = Assignment::zeros(n);
+        let total: usize = cards.iter().product();
+        let mut digits = vec![0usize; n];
+        for _ in 0..total {
+            for (u, &d) in digits.iter().enumerate() {
+                a.set(u, d);
+            }
+            if ev.consistent_with(&a) {
+                post[a.get(v)] += net_joint(self, &a);
+            }
+            PotentialTable::advance(&mut digits, &cards);
+        }
+        let s: f64 = post.iter().sum();
+        if s > 0.0 {
+            for p in &mut post {
+                *p /= s;
+            }
+        }
+        post
+    }
+}
+
+#[inline]
+fn net_joint(net: &BayesianNetwork, a: &Assignment) -> f64 {
+    net.joint_prob(a)
+}
+
+/// Incremental construction of a [`BayesianNetwork`].
+#[derive(Default)]
+pub struct NetworkBuilder {
+    name: String,
+    variables: Vec<Variable>,
+    edges: Vec<(String, String)>,
+    cpts: Vec<(String, Vec<f64>)>,
+}
+
+impl NetworkBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        NetworkBuilder { name: name.into(), ..Default::default() }
+    }
+
+    pub fn variable(mut self, v: Variable) -> Self {
+        assert!(
+            !self.variables.iter().any(|w| w.name == v.name),
+            "duplicate variable {}",
+            v.name
+        );
+        self.variables.push(v);
+        self
+    }
+
+    pub fn edge(mut self, from: &str, to: &str) -> Self {
+        self.edges.push((from.into(), to.into()));
+        self
+    }
+
+    /// Provide the CPT for `var` as rows over parent configurations
+    /// (parents in *sorted VarId order*, last parent fastest), each row
+    /// listing P(state | config).
+    pub fn cpt(mut self, var: &str, table: Vec<f64>) -> Self {
+        self.cpts.push((var.into(), table));
+        self
+    }
+
+    pub fn build(self) -> BayesianNetwork {
+        let index = |name: &str| -> VarId {
+            self.variables
+                .iter()
+                .position(|v| v.name == name)
+                .unwrap_or_else(|| panic!("unknown variable {name}"))
+        };
+        let mut dag = Dag::new(self.variables.len());
+        for (f, t) in &self.edges {
+            dag.add_edge(index(f), index(t));
+        }
+        let mut cpts: Vec<Option<Cpt>> = vec![None; self.variables.len()];
+        for (name, data) in self.cpts {
+            let v = index(&name);
+            let parents = dag.parents(v).to_vec();
+            let parent_cards: Vec<usize> =
+                parents.iter().map(|&p| self.variables[p].cardinality).collect();
+            cpts[v] = Some(Cpt::new(
+                v,
+                parents,
+                parent_cards,
+                self.variables[v].cardinality,
+                data,
+            ));
+        }
+        let cpts: Vec<Cpt> = cpts
+            .into_iter()
+            .enumerate()
+            .map(|(v, c)| {
+                c.unwrap_or_else(|| panic!("missing CPT for {}", self.variables[v].name))
+            })
+            .collect();
+        BayesianNetwork::new(self.name, self.variables, dag, cpts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_node() -> BayesianNetwork {
+        NetworkBuilder::new("two")
+            .variable(Variable::binary("a"))
+            .variable(Variable::binary("b"))
+            .edge("a", "b")
+            .cpt("a", vec![0.7, 0.3])
+            .cpt("b", vec![0.9, 0.1, 0.2, 0.8])
+            .build()
+    }
+
+    #[test]
+    fn builder_assembles() {
+        let net = two_node();
+        assert_eq!(net.n_vars(), 2);
+        assert_eq!(net.parents(1), &[0]);
+        assert_eq!(net.n_parameters(), 1 + 2);
+        assert_eq!(net.topological_order(), &[0, 1]);
+    }
+
+    #[test]
+    fn joint_prob_factorizes() {
+        let net = two_node();
+        let mut a = Assignment::zeros(2);
+        a.set(0, 1);
+        a.set(1, 1);
+        assert!((net.joint_prob(&a) - 0.3 * 0.8).abs() < 1e-12);
+        assert!((net.joint_log_prob(&a) - (0.3f64 * 0.8).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn family_potential_matches_cpt() {
+        let net = two_node();
+        let f = net.family_potential(1);
+        assert_eq!(f.vars(), &[0, 1]);
+        assert!((f.value_at(&[0, 0]) - 0.9).abs() < 1e-12);
+        assert!((f.value_at(&[1, 1]) - 0.8).abs() < 1e-12);
+        assert!((f.value_at(&[1, 0]) + f.value_at(&[1, 1]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn brute_force_posterior_bayes_rule() {
+        let net = two_node();
+        // P(a=1 | b=1) = 0.3*0.8 / (0.7*0.1 + 0.3*0.8)
+        let ev = Evidence::new().with(1, 1);
+        let post = net.brute_force_posterior(0, &ev);
+        let expect = 0.24 / (0.07 + 0.24);
+        assert!((post[1] - expect).abs() < 1e-12);
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn missing_cpt_panics() {
+        let _ = NetworkBuilder::new("bad")
+            .variable(Variable::binary("a"))
+            .build();
+    }
+}

@@ -1,0 +1,277 @@
+//! Built-in classic Bayesian networks.
+//!
+//! The small standards (sprinkler, cancer, earthquake, asia, survey) are
+//! embedded with their published CPTs; they are the correctness anchors of
+//! the test suite (small enough for the brute-force oracle) and the small
+//! end of every benchmark sweep. Larger repository networks (CHILD,
+//! INSURANCE, ALARM, HEPAR2) are *not* redistributable as exact tables
+//! here; [`super::synthetic`] generates structurally matched stand-ins
+//! (see DESIGN.md §Substitutions).
+//!
+//! State convention: binary variables use `[no, yes]` (index 0 = no).
+
+use super::{BayesianNetwork, NetworkBuilder};
+use crate::core::Variable;
+
+/// Names of all built-in networks, for CLI listings.
+pub const BUILTIN_NAMES: [&str; 5] =
+    ["sprinkler", "cancer", "earthquake", "asia", "survey"];
+
+/// Load a built-in network by name.
+pub fn by_name(name: &str) -> Option<BayesianNetwork> {
+    match name {
+        "sprinkler" => Some(sprinkler()),
+        "cancer" => Some(cancer()),
+        "earthquake" => Some(earthquake()),
+        "asia" => Some(asia()),
+        "survey" => Some(survey()),
+        _ => None,
+    }
+}
+
+/// The 4-node sprinkler network (Russell & Norvig / Murphy's BNT example).
+///
+/// `cloudy -> sprinkler`, `cloudy -> rain`, `sprinkler -> wet`, `rain -> wet`.
+pub fn sprinkler() -> BayesianNetwork {
+    NetworkBuilder::new("sprinkler")
+        .variable(Variable::binary("cloudy"))    // 0
+        .variable(Variable::binary("sprinkler")) // 1
+        .variable(Variable::binary("rain"))      // 2
+        .variable(Variable::binary("wet"))       // 3
+        .edge("cloudy", "sprinkler")
+        .edge("cloudy", "rain")
+        .edge("sprinkler", "wet")
+        .edge("rain", "wet")
+        .cpt("cloudy", vec![0.5, 0.5])
+        // P(sprinkler | cloudy): cloudy=no -> 0.5 on, cloudy=yes -> 0.1 on
+        .cpt("sprinkler", vec![0.5, 0.5, 0.9, 0.1])
+        // P(rain | cloudy): no -> 0.2, yes -> 0.8
+        .cpt("rain", vec![0.8, 0.2, 0.2, 0.8])
+        // P(wet | sprinkler, rain) rows over (s, r) with r fastest:
+        // (no,no)=0.0, (no,yes)=0.9, (yes,no)=0.9, (yes,yes)=0.99
+        .cpt("wet", vec![
+            1.0, 0.0,
+            0.1, 0.9,
+            0.1, 0.9,
+            0.01, 0.99,
+        ])
+        .build()
+}
+
+/// The 5-node CANCER network (Korb & Nicholson).
+pub fn cancer() -> BayesianNetwork {
+    NetworkBuilder::new("cancer")
+        .variable(Variable::with_states("pollution", ["low", "high"])) // 0
+        .variable(Variable::binary("smoker"))                          // 1
+        .variable(Variable::binary("cancer"))                          // 2
+        .variable(Variable::binary("xray"))                            // 3
+        .variable(Variable::binary("dyspnoea"))                        // 4
+        .edge("pollution", "cancer")
+        .edge("smoker", "cancer")
+        .edge("cancer", "xray")
+        .edge("cancer", "dyspnoea")
+        .cpt("pollution", vec![0.9, 0.1])
+        .cpt("smoker", vec![0.7, 0.3])
+        // P(cancer=yes | pollution, smoker), smoker fastest:
+        // (low,no)=0.001 (low,yes)=0.03 (high,no)=0.02 (high,yes)=0.05
+        .cpt("cancer", vec![
+            0.999, 0.001,
+            0.97, 0.03,
+            0.98, 0.02,
+            0.95, 0.05,
+        ])
+        // P(xray=pos | cancer): no -> 0.2, yes -> 0.9
+        .cpt("xray", vec![0.8, 0.2, 0.1, 0.9])
+        // P(dyspnoea=yes | cancer): no -> 0.3, yes -> 0.65
+        .cpt("dyspnoea", vec![0.7, 0.3, 0.35, 0.65])
+        .build()
+}
+
+/// The 5-node EARTHQUAKE network (Pearl's burglar alarm).
+pub fn earthquake() -> BayesianNetwork {
+    NetworkBuilder::new("earthquake")
+        .variable(Variable::binary("burglary"))   // 0
+        .variable(Variable::binary("earthquake")) // 1
+        .variable(Variable::binary("alarm"))      // 2
+        .variable(Variable::binary("johncalls"))  // 3
+        .variable(Variable::binary("marycalls"))  // 4
+        .edge("burglary", "alarm")
+        .edge("earthquake", "alarm")
+        .edge("alarm", "johncalls")
+        .edge("alarm", "marycalls")
+        .cpt("burglary", vec![0.999, 0.001])
+        .cpt("earthquake", vec![0.998, 0.002])
+        // P(alarm=yes | burglary, earthquake), earthquake fastest:
+        // (no,no)=0.001 (no,yes)=0.29 (yes,no)=0.94 (yes,yes)=0.95
+        .cpt("alarm", vec![
+            0.999, 0.001,
+            0.71, 0.29,
+            0.06, 0.94,
+            0.05, 0.95,
+        ])
+        .cpt("johncalls", vec![0.95, 0.05, 0.10, 0.90])
+        .cpt("marycalls", vec![0.99, 0.01, 0.30, 0.70])
+        .build()
+}
+
+/// The 8-node ASIA network (Lauritzen & Spiegelhalter 1988) — the original
+/// junction-tree paper's example and the canonical small benchmark.
+pub fn asia() -> BayesianNetwork {
+    NetworkBuilder::new("asia")
+        .variable(Variable::binary("asia"))   // 0 visit to Asia
+        .variable(Variable::binary("tub"))    // 1 tuberculosis
+        .variable(Variable::binary("smoke"))  // 2 smoking
+        .variable(Variable::binary("lung"))   // 3 lung cancer
+        .variable(Variable::binary("bronc"))  // 4 bronchitis
+        .variable(Variable::binary("either")) // 5 tub or lung
+        .variable(Variable::binary("xray"))   // 6 positive x-ray
+        .variable(Variable::binary("dysp"))   // 7 dyspnoea
+        .edge("asia", "tub")
+        .edge("smoke", "lung")
+        .edge("smoke", "bronc")
+        .edge("tub", "either")
+        .edge("lung", "either")
+        .edge("either", "xray")
+        .edge("bronc", "dysp")
+        .edge("either", "dysp")
+        .cpt("asia", vec![0.99, 0.01])
+        // P(tub=yes | asia): no -> 0.01, yes -> 0.05
+        .cpt("tub", vec![0.99, 0.01, 0.95, 0.05])
+        .cpt("smoke", vec![0.5, 0.5])
+        // P(lung=yes | smoke): no -> 0.01, yes -> 0.1
+        .cpt("lung", vec![0.99, 0.01, 0.9, 0.1])
+        // P(bronc=yes | smoke): no -> 0.3, yes -> 0.6
+        .cpt("bronc", vec![0.7, 0.3, 0.4, 0.6])
+        // either = tub OR lung (deterministic); parents sorted (tub=1, lung=3),
+        // lung fastest: (t=no,l=no) (no,yes) (yes,no) (yes,yes)
+        .cpt("either", vec![
+            1.0, 0.0,
+            0.0, 1.0,
+            0.0, 1.0,
+            0.0, 1.0,
+        ])
+        // P(xray=yes | either): no -> 0.05, yes -> 0.98
+        .cpt("xray", vec![0.95, 0.05, 0.02, 0.98])
+        // P(dysp=yes | bronc, either) parents sorted (bronc=4, either=5),
+        // either fastest: (b=no,e=no)=0.1 (no,yes)=0.7 (yes,no)=0.8 (yes,yes)=0.9
+        .cpt("dysp", vec![
+            0.9, 0.1,
+            0.3, 0.7,
+            0.2, 0.8,
+            0.1, 0.9,
+        ])
+        .build()
+}
+
+/// The 6-node SURVEY network (Scutari's bnlearn tutorial network) —
+/// includes a ternary variable, exercising non-binary cardinalities.
+pub fn survey() -> BayesianNetwork {
+    NetworkBuilder::new("survey")
+        .variable(Variable::with_states("age", ["young", "adult", "old"])) // 0
+        .variable(Variable::with_states("sex", ["m", "f"]))                // 1
+        .variable(Variable::with_states("edu", ["high", "uni"]))           // 2
+        .variable(Variable::with_states("occ", ["emp", "self"]))           // 3
+        .variable(Variable::with_states("res", ["small", "big"]))          // 4
+        .variable(Variable::with_states("travel", ["car", "train", "other"])) // 5
+        .edge("age", "edu")
+        .edge("sex", "edu")
+        .edge("edu", "occ")
+        .edge("edu", "res")
+        .edge("occ", "travel")
+        .edge("res", "travel")
+        .cpt("age", vec![0.3, 0.5, 0.2])
+        .cpt("sex", vec![0.6, 0.4])
+        // P(edu | age, sex), sex fastest; rows (age,sex):
+        // (y,m) (y,f) (a,m) (a,f) (o,m) (o,f)
+        .cpt("edu", vec![
+            0.75, 0.25,
+            0.64, 0.36,
+            0.72, 0.28,
+            0.70, 0.30,
+            0.88, 0.12,
+            0.90, 0.10,
+        ])
+        // P(occ | edu): high -> emp 0.96, uni -> emp 0.92
+        .cpt("occ", vec![0.96, 0.04, 0.92, 0.08])
+        // P(res | edu): high -> small 0.25, uni -> small 0.20
+        .cpt("res", vec![0.25, 0.75, 0.20, 0.80])
+        // P(travel | occ, res), res fastest; rows (occ,res):
+        // (emp,small) (emp,big) (self,small) (self,big)
+        .cpt("travel", vec![
+            0.48, 0.42, 0.10,
+            0.58, 0.24, 0.18,
+            0.56, 0.36, 0.08,
+            0.70, 0.21, 0.09,
+        ])
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+
+    #[test]
+    fn all_builtins_load() {
+        for name in BUILTIN_NAMES {
+            let net = by_name(name).unwrap();
+            assert_eq!(net.name(), name);
+            assert!(net.n_vars() >= 4);
+            assert!(net.topological_order().len() == net.n_vars());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn asia_shape() {
+        let net = asia();
+        assert_eq!(net.n_vars(), 8);
+        assert_eq!(net.dag().n_edges(), 8);
+        // The famous v-structure tub -> either <- lung.
+        let either = net.var_index("either").unwrap();
+        assert_eq!(net.parents(either).len(), 2);
+    }
+
+    #[test]
+    fn asia_marginals_match_literature() {
+        // Unconditional P(dysp=yes) ≈ 0.436 (Lauritzen & Spiegelhalter).
+        let net = asia();
+        let dysp = net.var_index("dysp").unwrap();
+        let p = net.brute_force_posterior(dysp, &Evidence::new());
+        assert!((p[1] - 0.4360).abs() < 1e-3, "P(dysp=yes) = {}", p[1]);
+        // P(tub=yes) = 0.99*0.01 + 0.01*0.05 = 0.0104
+        let tub = net.var_index("tub").unwrap();
+        let p = net.brute_force_posterior(tub, &Evidence::new());
+        assert!((p[1] - 0.0104).abs() < 1e-9);
+    }
+
+    #[test]
+    fn earthquake_alarm_posterior() {
+        // P(burglary=yes | john=yes, mary=yes) ≈ 0.284 with these CPTs.
+        let net = earthquake();
+        let ev = Evidence::new()
+            .with(net.var_index("johncalls").unwrap(), 1)
+            .with(net.var_index("marycalls").unwrap(), 1);
+        let p = net.brute_force_posterior(net.var_index("burglary").unwrap(), &ev);
+        assert!((p[1] - 0.284).abs() < 0.01, "got {}", p[1]);
+    }
+
+    #[test]
+    fn sprinkler_wet_grass() {
+        // P(rain=yes | wet=yes) ≈ 0.708 (BNT's classic number).
+        let net = sprinkler();
+        let ev = Evidence::new().with(net.var_index("wet").unwrap(), 1);
+        let p = net.brute_force_posterior(net.var_index("rain").unwrap(), &ev);
+        assert!((p[1] - 0.7079).abs() < 1e-3, "got {}", p[1]);
+    }
+
+    #[test]
+    fn survey_has_ternary() {
+        let net = survey();
+        assert_eq!(net.cardinality(net.var_index("age").unwrap()), 3);
+        assert_eq!(net.cardinality(net.var_index("travel").unwrap()), 3);
+        let p = net.brute_force_posterior(net.var_index("travel").unwrap(), &Evidence::new());
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p[0] > p[1] && p[1] > p[2], "car > train > other: {p:?}");
+    }
+}

@@ -1,0 +1,200 @@
+//! Parallel execution substrate — the paper's optimization (i).
+//!
+//! The original Fast-PGM parallelizes with OpenMP; its contribution is the
+//! *scheduling policy*: a **dynamic work pool** in which workers pull the
+//! next unit of work (a CI test, a clique update, a chunk of samples) as
+//! soon as they finish the previous one, so irregular task costs — the norm
+//! in PGM workloads — never leave cores idle.
+//!
+//! The offline build image carries no `rayon`/`tokio`, so the pool is
+//! implemented directly on `std::thread`:
+//!
+//! * [`parallel_for_dynamic`] — scoped fork-join over an index range with an
+//!   atomic cursor (equivalent to `omp parallel for schedule(dynamic,
+//!   chunk)`); this powers CI-level, clique-level and sample-level
+//!   parallelism.
+//! * [`WorkPool`] — a persistent pool with a shared FIFO queue for
+//!   long-lived components (the serving coordinator).
+
+mod pool;
+
+pub use pool::WorkPool;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to default to (physical parallelism of the
+/// container, capped to keep benches stable).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Dynamic-scheduling parallel for: `body(i)` is called exactly once for
+/// every `i in 0..n`, from `threads` workers that claim `chunk`-sized spans
+/// off a shared atomic cursor. `body` must be `Sync` (it is shared by
+/// reference) — use interior mutability or per-index output slots.
+///
+/// With `threads <= 1` the loop runs inline, which keeps sequential
+/// baselines honest (no pool overhead in the "1 thread" bench rows).
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, chunk: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let chunk = chunk.max(1);
+    if threads <= 1 || n <= chunk {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let workers = threads.min(n.div_ceil(chunk));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `0..n` in parallel into a `Vec<T>`, preserving index order.
+/// Implemented over [`parallel_for_dynamic`] with per-slot writes.
+pub fn parallel_map<T, F>(n: usize, threads: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::cell::UnsafeCell;
+    struct Slots<T>(UnsafeCell<Vec<Option<T>>>);
+    // SAFETY: each index is written by exactly one worker (disjoint spans
+    // claimed from the atomic cursor) and read only after the scope joins.
+    unsafe impl<T: Send> Sync for Slots<T> {}
+
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let slots = Slots(UnsafeCell::new(out));
+    let slots_ref = &slots; // capture the Sync wrapper, not its field
+    parallel_for_dynamic(n, threads, chunk, move |i| {
+        let v = f(i);
+        unsafe {
+            let vec: &mut Vec<Option<T>> = &mut *slots_ref.0.get();
+            vec[i] = Some(v);
+        }
+    });
+    slots
+        .0
+        .into_inner()
+        .into_iter()
+        .map(|x| x.expect("parallel_map slot unfilled"))
+        .collect()
+}
+
+/// Split `n` items into per-thread spans and reduce each span with `map`,
+/// then fold the partials with `reduce`. Static partition — used when the
+/// per-item cost is uniform (e.g. streaming dataset columns) and chunk
+/// claiming overhead would dominate.
+pub fn parallel_reduce<T, M, R>(n: usize, threads: usize, map: M, reduce: R) -> Option<T>
+where
+    T: Send,
+    M: Fn(std::ops::Range<usize>) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    if n == 0 {
+        return None;
+    }
+    if threads <= 1 {
+        return Some(map(0..n));
+    }
+    let workers = threads.min(n);
+    let span = n.div_ceil(workers);
+    let partials: Vec<T> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let map = &map;
+                let lo = w * span;
+                let hi = ((w + 1) * span).min(n);
+                scope.spawn(move || map(lo..hi))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    partials.into_iter().reduce(reduce)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn for_dynamic_covers_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_dynamic(n, 4, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn for_dynamic_single_thread_inline() {
+        let sum = AtomicU64::new(0);
+        parallel_for_dynamic(100, 1, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(257, 4, 16, |i| i * i);
+        assert_eq!(out.len(), 257);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_zero_len() {
+        let out: Vec<usize> = parallel_map(0, 4, 16, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let total =
+            parallel_reduce(10_000, 4, |r| r.map(|i| i as u64).sum::<u64>(), |a, b| a + b);
+        assert_eq!(total, Some(49_995_000));
+        assert_eq!(
+            parallel_reduce(10_000, 1, |r| r.map(|i| i as u64).sum::<u64>(), |a, b| a + b),
+            Some(49_995_000)
+        );
+    }
+
+    #[test]
+    fn reduce_empty_none() {
+        assert_eq!(parallel_reduce::<u64, _, _>(0, 4, |_| 0, |a, b| a + b), None);
+    }
+
+    #[test]
+    fn irregular_workload_balanced() {
+        // Tasks with wildly different costs still all complete.
+        let done = AtomicUsize::new(0);
+        parallel_for_dynamic(64, 4, 1, |i| {
+            let mut x = 0u64;
+            for k in 0..(i as u64 * 1000) {
+                x = x.wrapping_add(k);
+            }
+            std::hint::black_box(x);
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 64);
+    }
+}

@@ -1,0 +1,190 @@
+//! Persistent dynamic work pool.
+//!
+//! Long-lived components (the serving coordinator, background bench
+//! drivers) need a pool that outlives any one scope. `WorkPool` keeps `N`
+//! workers parked on a condvar over a FIFO of boxed jobs and exposes
+//! `execute` + `wait_idle`. The *dynamic* part is inherent: workers pull
+//! jobs as they free up, so heterogeneous job costs balance automatically —
+//! the behaviour the paper's "dynamic work pool [to] monitor processing and
+//! schedule workloads" describes.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    /// Signals workers that a job arrived or shutdown began.
+    work_cv: Condvar,
+    /// Signals waiters that the pool may have drained.
+    idle_cv: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    in_flight: usize,
+    shutdown: bool,
+}
+
+/// Fixed-size thread pool with a shared dynamic queue.
+pub struct WorkPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkPool {
+    /// Spawn a pool with `threads` workers (at least 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State {
+                jobs: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fastpgm-pool-{w}"))
+                    .spawn(move || Self::worker_loop(&shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkPool { shared, workers }
+    }
+
+    fn worker_loop(shared: &Shared) {
+        loop {
+            let job = {
+                let mut st = shared.queue.lock().unwrap();
+                loop {
+                    if let Some(job) = st.jobs.pop_front() {
+                        st.in_flight += 1;
+                        break job;
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = shared.work_cv.wait(st).unwrap();
+                }
+            };
+            job();
+            let mut st = shared.queue.lock().unwrap();
+            st.in_flight -= 1;
+            if st.in_flight == 0 && st.jobs.is_empty() {
+                shared.idle_cv.notify_all();
+            }
+        }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job; it runs as soon as a worker is free.
+    pub fn execute<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute after shutdown");
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.work_cv.notify_one();
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        while st.in_flight > 0 || !st.jobs.is_empty() {
+            st = self.shared.idle_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Pending + running job count (approximate, for metrics).
+    pub fn load(&self) -> usize {
+        let st = self.shared.queue.lock().unwrap();
+        st.jobs.len() + st.in_flight
+    }
+}
+
+impl Drop for WorkPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = WorkPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn jobs_drain_on_drop() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkPool::new(2);
+            for _ in 0..16 {
+                let c = Arc::clone(&count);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_idle();
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn uneven_jobs_all_complete() {
+        let pool = WorkPool::new(3);
+        let total = Arc::new(AtomicUsize::new(0));
+        for i in 0..32 {
+            let t = Arc::clone(&total);
+            pool.execute(move || {
+                if i % 7 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                t.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(total.load(Ordering::Relaxed), (0..32).sum::<usize>());
+        assert_eq!(pool.load(), 0);
+    }
+}

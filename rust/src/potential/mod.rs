@@ -1,0 +1,299 @@
+//! Potential tables — "a crucial underlying data structure in PGMs"
+//! (paper §3, optimization (v)).
+//!
+//! A [`PotentialTable`] is a non-negative real-valued function over the
+//! joint states of an ordered set of discrete variables, stored as a dense
+//! row-major array (last variable fastest). Fast-PGM keeps every table
+//! *canonical* — variables sorted ascending by `VarId` — which is the
+//! reproduction of the paper's potential-table **reorganization**: when all
+//! tables share one global variable order, the index map between a table
+//! and any sub-table is monotone, so products, marginalizations and
+//! divisions become single linear *odometer* scans with incremental index
+//! maintenance instead of per-entry divide/modulo decoding. The naive
+//! decode path is kept (see [`ops`]) as the ablation baseline for bench E4.
+
+pub mod ops;
+
+use crate::core::{Evidence, VarId};
+
+/// Dense potential over a sorted set of discrete variables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PotentialTable {
+    /// Scope, strictly increasing.
+    vars: Vec<VarId>,
+    /// Cardinality of each scope variable.
+    cards: Vec<usize>,
+    /// Row-major strides (last variable has stride 1).
+    strides: Vec<usize>,
+    /// `data.len() == cards.iter().product()`.
+    data: Vec<f64>,
+}
+
+impl PotentialTable {
+    /// A table of ones (multiplicative identity) over the given scope.
+    /// `vars` must be strictly increasing; `cards[i]` is the cardinality of
+    /// `vars[i]`.
+    pub fn unit(vars: Vec<VarId>, cards: Vec<usize>) -> Self {
+        Self::filled(vars, cards, 1.0)
+    }
+
+    /// A table of zeros (additive identity) over the given scope.
+    pub fn zeros(vars: Vec<VarId>, cards: Vec<usize>) -> Self {
+        Self::filled(vars, cards, 0.0)
+    }
+
+    /// A constant table.
+    pub fn filled(vars: Vec<VarId>, cards: Vec<usize>, value: f64) -> Self {
+        assert_eq!(vars.len(), cards.len());
+        assert!(vars.windows(2).all(|w| w[0] < w[1]), "scope must be sorted: {vars:?}");
+        assert!(cards.iter().all(|&c| c >= 1));
+        let size: usize = cards.iter().product();
+        let strides = Self::compute_strides(&cards);
+        PotentialTable { vars, cards, strides, data: vec![value; size] }
+    }
+
+    /// Build from explicit data laid out row-major over `vars` (sorted).
+    pub fn from_data(vars: Vec<VarId>, cards: Vec<usize>, data: Vec<f64>) -> Self {
+        let mut t = Self::zeros(vars, cards);
+        assert_eq!(t.data.len(), data.len(), "data size mismatch");
+        t.data = data;
+        t
+    }
+
+    /// The empty-scope scalar table.
+    pub fn scalar(value: f64) -> Self {
+        PotentialTable {
+            vars: Vec::new(),
+            cards: Vec::new(),
+            strides: Vec::new(),
+            data: vec![value],
+        }
+    }
+
+    fn compute_strides(cards: &[usize]) -> Vec<usize> {
+        let mut strides = vec![1; cards.len()];
+        for i in (0..cards.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * cards[i + 1];
+        }
+        strides
+    }
+
+    pub fn vars(&self) -> &[VarId] {
+        &self.vars
+    }
+
+    pub fn cards(&self) -> &[usize] {
+        &self.cards
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Does the scope contain `v`?
+    pub fn contains_var(&self, v: VarId) -> bool {
+        self.vars.binary_search(&v).is_ok()
+    }
+
+    /// Position of `v` within the scope.
+    pub fn var_position(&self, v: VarId) -> Option<usize> {
+        self.vars.binary_search(&v).ok()
+    }
+
+    /// Cardinality of scope variable `v`.
+    pub fn card_of(&self, v: VarId) -> Option<usize> {
+        self.var_position(v).map(|i| self.cards[i])
+    }
+
+    /// Flat index of a scope assignment (`digits[i]` is the state of
+    /// `vars[i]`).
+    #[inline]
+    pub fn index_of(&self, digits: &[usize]) -> usize {
+        debug_assert_eq!(digits.len(), self.vars.len());
+        digits
+            .iter()
+            .zip(&self.strides)
+            .map(|(&d, &s)| d * s)
+            .sum()
+    }
+
+    /// Decode a flat index into scope digits (naive-path helper).
+    pub fn digits_of(&self, mut index: usize, out: &mut [usize]) {
+        for (i, &s) in self.strides.iter().enumerate() {
+            out[i] = index / s;
+            index %= s;
+        }
+    }
+
+    /// Value at a scope assignment.
+    pub fn value_at(&self, digits: &[usize]) -> f64 {
+        self.data[self.index_of(digits)]
+    }
+
+    pub fn set_at(&mut self, digits: &[usize], value: f64) {
+        let i = self.index_of(digits);
+        self.data[i] = value;
+    }
+
+    /// Sum of all entries.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Scale so entries sum to 1. Returns the pre-normalization mass
+    /// (useful as P(evidence) after absorption). A zero table is left
+    /// untouched.
+    pub fn normalize(&mut self) -> f64 {
+        let s = self.sum();
+        if s > 0.0 {
+            let inv = 1.0 / s;
+            for x in &mut self.data {
+                *x *= inv;
+            }
+        }
+        s
+    }
+
+    /// Zero out every entry inconsistent with the evidence (standard
+    /// junction-tree evidence absorption). Evidence variables outside the
+    /// scope are ignored.
+    pub fn reduce_evidence(&mut self, ev: &Evidence) {
+        // Collect (position, state) pairs inside the scope.
+        let obs: Vec<(usize, usize)> = ev
+            .iter()
+            .filter_map(|(v, s)| self.var_position(v).map(|p| (p, s)))
+            .collect();
+        if obs.is_empty() {
+            return;
+        }
+        let mut digits = vec![0usize; self.vars.len()];
+        for i in 0..self.data.len() {
+            // Odometer instead of decode: digits track i.
+            if obs.iter().any(|&(p, s)| digits[p] != s) {
+                self.data[i] = 0.0;
+            }
+            Self::advance(&mut digits, &self.cards);
+        }
+    }
+
+    /// Advance mixed-radix digits by one (odometer). Wraps to all-zero at
+    /// the end.
+    #[inline]
+    pub fn advance(digits: &mut [usize], cards: &[usize]) {
+        for i in (0..digits.len()).rev() {
+            digits[i] += 1;
+            if digits[i] < cards[i] {
+                return;
+            }
+            digits[i] = 0;
+        }
+    }
+
+    /// Largest entry (diagnostics / MAP-ish queries).
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Multiply every entry by a scalar.
+    pub fn scale(&mut self, k: f64) {
+        for x in &mut self.data {
+            *x *= k;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let t = PotentialTable::unit(vec![0, 2, 5], vec![2, 3, 4]);
+        assert_eq!(t.strides(), &[12, 4, 1]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.index_of(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn digits_roundtrip() {
+        let t = PotentialTable::unit(vec![1, 3], vec![3, 4]);
+        let mut d = [0usize; 2];
+        for i in 0..t.len() {
+            t.digits_of(i, &mut d);
+            assert_eq!(t.index_of(&d), i);
+        }
+    }
+
+    #[test]
+    fn odometer_matches_decode() {
+        let t = PotentialTable::unit(vec![0, 1, 2], vec![2, 3, 2]);
+        let mut odo = vec![0usize; 3];
+        let mut dec = vec![0usize; 3];
+        for i in 0..t.len() {
+            t.digits_of(i, &mut dec);
+            assert_eq!(odo, dec, "at {i}");
+            PotentialTable::advance(&mut odo, t.cards());
+        }
+        assert_eq!(odo, vec![0, 0, 0], "wraps at end");
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_scope_rejected() {
+        let _ = PotentialTable::unit(vec![2, 0], vec![2, 2]);
+    }
+
+    #[test]
+    fn normalize_returns_mass() {
+        let mut t =
+            PotentialTable::from_data(vec![0], vec![4], vec![1.0, 3.0, 0.0, 4.0]);
+        let mass = t.normalize();
+        assert!((mass - 8.0).abs() < 1e-12);
+        assert!((t.sum() - 1.0).abs() < 1e-12);
+        assert!((t.value_at(&[3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zero_table_noop() {
+        let mut t = PotentialTable::zeros(vec![0], vec![3]);
+        assert_eq!(t.normalize(), 0.0);
+        assert_eq!(t.sum(), 0.0);
+    }
+
+    #[test]
+    fn reduce_evidence_zeroes_inconsistent() {
+        let mut t = PotentialTable::unit(vec![0, 1], vec![2, 3]);
+        let ev = Evidence::new().with(1, 2).with(9, 0); // 9 not in scope
+        t.reduce_evidence(&ev);
+        for a in 0..2 {
+            for b in 0..3 {
+                let expect = if b == 2 { 1.0 } else { 0.0 };
+                assert_eq!(t.value_at(&[a, b]), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_table() {
+        let t = PotentialTable::scalar(3.5);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.sum(), 3.5);
+        assert!(t.vars().is_empty());
+    }
+}

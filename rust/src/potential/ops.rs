@@ -1,0 +1,498 @@
+//! Potential-table algebra: product, marginalization, division.
+//!
+//! Every operation exists in two index strategies:
+//!
+//! * [`IndexMode::Odometer`] — the optimized path enabled by canonical
+//!   (sorted-scope) tables: one linear pass over the largest table,
+//!   maintaining the flat index of every other table incrementally as
+//!   mixed-radix digits advance. No divide/modulo in the loop; memory
+//!   access over the big table is perfectly sequential. This is the
+//!   reproduction of the paper's potential-table reorganization (opt v).
+//! * [`IndexMode::NaiveDecode`] — the ablation baseline: decode each flat
+//!   index with divide/modulo and re-encode per operand, the way a
+//!   scope-order-agnostic implementation must.
+//!
+//! Bench E4 (`benches/bench_exact_ablation.rs`) measures the gap.
+
+use super::PotentialTable;
+use crate::core::VarId;
+
+/// Index-mapping strategy for table operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IndexMode {
+    /// Incremental odometer index maintenance (optimized, default).
+    #[default]
+    Odometer,
+    /// Per-entry divide/modulo decoding (ablation baseline).
+    NaiveDecode,
+}
+
+/// Union of two sorted scopes, with per-scope cardinalities.
+fn union_scope(
+    a: &PotentialTable,
+    b: &PotentialTable,
+) -> (Vec<VarId>, Vec<usize>) {
+    let (av, bv) = (a.vars(), b.vars());
+    let mut vars = Vec::with_capacity(av.len() + bv.len());
+    let mut cards = Vec::with_capacity(av.len() + bv.len());
+    let (mut i, mut j) = (0, 0);
+    while i < av.len() || j < bv.len() {
+        if j >= bv.len() || (i < av.len() && av[i] < bv[j]) {
+            vars.push(av[i]);
+            cards.push(a.cards()[i]);
+            i += 1;
+        } else if i >= av.len() || bv[j] < av[i] {
+            vars.push(bv[j]);
+            cards.push(b.cards()[j]);
+            j += 1;
+        } else {
+            assert_eq!(
+                a.cards()[i],
+                b.cards()[j],
+                "cardinality mismatch for shared variable {}",
+                av[i]
+            );
+            vars.push(av[i]);
+            cards.push(a.cards()[i]);
+            i += 1;
+            j += 1;
+        }
+    }
+    (vars, cards)
+}
+
+/// For each variable of `scope`, the stride it has in `t` (0 when absent).
+fn mapped_strides(scope: &[VarId], t: &PotentialTable) -> Vec<usize> {
+    scope
+        .iter()
+        .map(|&v| t.var_position(v).map_or(0, |p| t.strides()[p]))
+        .collect()
+}
+
+/// Advance mixed-radix `digits` by one and incrementally update each mapped
+/// flat index in `idxs` (one per strides slice in `maps`).
+#[inline]
+fn advance_mapped(
+    digits: &mut [usize],
+    cards: &[usize],
+    maps: &[&[usize]],
+    idxs: &mut [usize],
+) {
+    for pos in (0..digits.len()).rev() {
+        digits[pos] += 1;
+        if digits[pos] < cards[pos] {
+            for (k, m) in maps.iter().enumerate() {
+                idxs[k] += m[pos];
+            }
+            return;
+        }
+        digits[pos] = 0;
+        for (k, m) in maps.iter().enumerate() {
+            idxs[k] -= m[pos] * (cards[pos] - 1);
+        }
+    }
+}
+
+/// Drive a scan over all entries of a table with shape `cards`, split into
+/// `outer` odometer steps × a contiguous `inner` run over the last axis.
+///
+/// `run(i, idxs)` processes entries `i .. i + inner` (contiguous in the
+/// driving table); `idxs` holds the mapped flat index of each auxiliary
+/// table *at the start of the run*, and the per-entry step of auxiliary
+/// `k` within the run is `maps[k][last]`. Hoisting the last axis out of
+/// the digit bookkeeping removes the branchy advance from the hot loop —
+/// the main lever of the paper's optimization (v) beyond canonical order.
+#[inline]
+fn scan_outer_inner(
+    cards: &[usize],
+    total: usize,
+    maps: &[&[usize]],
+    mut run: impl FnMut(usize, &[usize]),
+) {
+    let k = cards.len();
+    if k == 0 {
+        run(0, &vec![0usize; maps.len()]);
+        return;
+    }
+    let inner = cards[k - 1];
+    let outer = total / inner;
+    let outer_cards = &cards[..k - 1];
+    let mut digits = vec![0usize; k.saturating_sub(1)];
+    let mut idxs = vec![0usize; maps.len()];
+    let mut i = 0usize;
+    for _ in 0..outer {
+        run(i, &idxs);
+        i += inner;
+        // Advance the outer digits only.
+        for pos in (0..outer_cards.len()).rev() {
+            digits[pos] += 1;
+            if digits[pos] < outer_cards[pos] {
+                for (m, idx) in maps.iter().zip(idxs.iter_mut()) {
+                    *idx += m[pos];
+                }
+                break;
+            }
+            digits[pos] = 0;
+            for (m, idx) in maps.iter().zip(idxs.iter_mut()) {
+                *idx -= m[pos] * (outer_cards[pos] - 1);
+            }
+        }
+    }
+}
+
+impl PotentialTable {
+    /// Pointwise product over the union scope.
+    pub fn product(&self, other: &PotentialTable, mode: IndexMode) -> PotentialTable {
+        let (vars, cards) = union_scope(self, other);
+        let mut out = PotentialTable::zeros(vars, cards);
+        let ma = mapped_strides(out.vars(), self);
+        let mb = mapped_strides(out.vars(), other);
+        match mode {
+            IndexMode::Odometer => {
+                let n = out.len();
+                let cards = out.cards().to_vec();
+                let last = cards.len().saturating_sub(1);
+                let (sa, sb) = if cards.is_empty() {
+                    (0, 0)
+                } else {
+                    (ma[last], mb[last])
+                };
+                let a_data = self.data();
+                let b_data = other.data();
+                // SAFETY of indexing: scan_outer_inner enumerates exactly
+                // the mixed-radix index space of `out`.
+                let out_data = out.data_mut();
+                scan_outer_inner(&cards, n, &[&ma, &mb], |i, idxs| {
+                    let (mut ia, mut ib) = (idxs[0], idxs[1]);
+                    let inner = if cards.is_empty() { 1 } else { cards[last] };
+                    for slot in &mut out_data[i..i + inner] {
+                        *slot = a_data[ia] * b_data[ib];
+                        ia += sa;
+                        ib += sb;
+                    }
+                });
+            }
+            IndexMode::NaiveDecode => {
+                let mut digits = vec![0usize; out.vars().len()];
+                for i in 0..out.len() {
+                    out.digits_of(i, &mut digits);
+                    let ia: usize =
+                        digits.iter().zip(&ma).map(|(&d, &s)| d * s).sum();
+                    let ib: usize =
+                        digits.iter().zip(&mb).map(|(&d, &s)| d * s).sum();
+                    out.data_mut()[i] = self.data()[ia] * other.data()[ib];
+                }
+            }
+        }
+        out
+    }
+
+    /// Marginalize down to `keep ∩ scope` (sum out everything else).
+    /// `keep` must be sorted.
+    pub fn marginalize_keep(&self, keep: &[VarId], mode: IndexMode) -> PotentialTable {
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]));
+        let (vars, cards): (Vec<VarId>, Vec<usize>) = self
+            .vars()
+            .iter()
+            .zip(self.cards())
+            .filter(|(v, _)| keep.binary_search(v).is_ok())
+            .map(|(&v, &c)| (v, c))
+            .unzip();
+        let mut out = PotentialTable::zeros(vars, cards);
+        let mo = mapped_strides(self.vars(), &out);
+        match mode {
+            IndexMode::Odometer => {
+                let cards = self.cards().to_vec();
+                let last = cards.len().saturating_sub(1);
+                let so = if cards.is_empty() { 0 } else { mo[last] };
+                let inner = if cards.is_empty() { 1 } else { cards[last] };
+                let src = self.data();
+                let out_data = out.data_mut();
+                scan_outer_inner(&cards, src.len(), &[&mo], |i, idxs| {
+                    let mut io = idxs[0];
+                    if so == 0 {
+                        // Last axis is summed out: accumulate the run into
+                        // one output cell (tight reduction loop).
+                        let mut acc = 0.0;
+                        for &x in &src[i..i + inner] {
+                            acc += x;
+                        }
+                        out_data[io] += acc;
+                    } else {
+                        for &x in &src[i..i + inner] {
+                            out_data[io] += x;
+                            io += so;
+                        }
+                    }
+                });
+            }
+            IndexMode::NaiveDecode => {
+                let mut digits = vec![0usize; self.vars().len()];
+                for i in 0..self.len() {
+                    self.digits_of(i, &mut digits);
+                    let io: usize =
+                        digits.iter().zip(&mo).map(|(&d, &s)| d * s).sum();
+                    out.data_mut()[io] += self.data()[i];
+                }
+            }
+        }
+        out
+    }
+
+    /// Sum out a single variable.
+    pub fn marginalize_out(&self, var: VarId, mode: IndexMode) -> PotentialTable {
+        let keep: Vec<VarId> =
+            self.vars().iter().copied().filter(|&v| v != var).collect();
+        self.marginalize_keep(&keep, mode)
+    }
+
+    /// In-place multiply by a table whose scope is a subset of ours
+    /// (the junction-tree "absorb" hot path).
+    pub fn multiply_subset(&mut self, sub: &PotentialTable, mode: IndexMode) {
+        debug_assert!(sub.vars().iter().all(|&v| self.contains_var(v)));
+        let ms = mapped_strides(self.vars(), sub);
+        match mode {
+            IndexMode::Odometer => {
+                let cards = self.cards().to_vec();
+                let last = cards.len().saturating_sub(1);
+                let ss = if cards.is_empty() { 0 } else { ms[last] };
+                let inner = if cards.is_empty() { 1 } else { cards[last] };
+                let n = self.len();
+                let sub_data = sub.data().to_vec(); // tiny; avoids aliasing
+                let data = self.data_mut();
+                scan_outer_inner(&cards, n, &[&ms], |i, idxs| {
+                    let mut is = idxs[0];
+                    if ss == 0 {
+                        // Subset doesn't span the last axis: one multiplier
+                        // for the whole contiguous run.
+                        let v = sub_data[is];
+                        for x in &mut data[i..i + inner] {
+                            *x *= v;
+                        }
+                    } else {
+                        for x in &mut data[i..i + inner] {
+                            *x *= sub_data[is];
+                            is += ss;
+                        }
+                    }
+                });
+            }
+            IndexMode::NaiveDecode => {
+                let mut digits = vec![0usize; self.vars().len()];
+                for i in 0..self.len() {
+                    self.digits_of(i, &mut digits);
+                    let is: usize =
+                        digits.iter().zip(&ms).map(|(&d, &s)| d * s).sum();
+                    self.data_mut()[i] *= sub.data()[is];
+                }
+            }
+        }
+    }
+
+    /// In-place divide by a subset-scope table, with the junction-tree
+    /// convention `0 / 0 = 0`.
+    pub fn divide_subset(&mut self, sub: &PotentialTable, mode: IndexMode) {
+        debug_assert!(sub.vars().iter().all(|&v| self.contains_var(v)));
+        let ms = mapped_strides(self.vars(), sub);
+        let div = |num: f64, den: f64| if den == 0.0 { 0.0 } else { num / den };
+        match mode {
+            IndexMode::Odometer => {
+                let cards = self.cards().to_vec();
+                let last = cards.len().saturating_sub(1);
+                let ss = if cards.is_empty() { 0 } else { ms[last] };
+                let inner = if cards.is_empty() { 1 } else { cards[last] };
+                let n = self.len();
+                let sub_data = sub.data().to_vec();
+                let data = self.data_mut();
+                scan_outer_inner(&cards, n, &[&ms], |i, idxs| {
+                    let mut is = idxs[0];
+                    if ss == 0 {
+                        let den = sub_data[is];
+                        if den == 0.0 {
+                            for x in &mut data[i..i + inner] {
+                                *x = 0.0;
+                            }
+                        } else {
+                            let inv = 1.0 / den;
+                            for x in &mut data[i..i + inner] {
+                                *x *= inv;
+                            }
+                        }
+                    } else {
+                        for x in &mut data[i..i + inner] {
+                            *x = div(*x, sub_data[is]);
+                            is += ss;
+                        }
+                    }
+                });
+            }
+            IndexMode::NaiveDecode => {
+                let mut digits = vec![0usize; self.vars().len()];
+                for i in 0..self.len() {
+                    self.digits_of(i, &mut digits);
+                    let is: usize =
+                        digits.iter().zip(&ms).map(|(&d, &s)| d * s).sum();
+                    self.data_mut()[i] = div(self.data()[i], sub.data()[is]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(vars: Vec<VarId>, cards: Vec<usize>, seed: u64) -> PotentialTable {
+        // Deterministic pseudo-random positive entries.
+        let mut t = PotentialTable::zeros(vars, cards);
+        let mut s = seed;
+        for x in t.data_mut() {
+            *x = (crate::rng::splitmix64(&mut s) % 1000) as f64 / 100.0 + 0.01;
+        }
+        t
+    }
+
+    #[test]
+    fn product_disjoint_scopes() {
+        let a = PotentialTable::from_data(vec![0], vec![2], vec![2.0, 3.0]);
+        let b = PotentialTable::from_data(vec![1], vec![2], vec![5.0, 7.0]);
+        let p = a.product(&b, IndexMode::Odometer);
+        assert_eq!(p.vars(), &[0, 1]);
+        assert_eq!(p.data(), &[10.0, 14.0, 15.0, 21.0]);
+    }
+
+    #[test]
+    fn product_shared_var() {
+        let a = PotentialTable::from_data(vec![0, 1], vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = PotentialTable::from_data(vec![1], vec![2], vec![10.0, 100.0]);
+        let p = a.product(&b, IndexMode::Odometer);
+        assert_eq!(p.vars(), &[0, 1]);
+        assert_eq!(p.data(), &[10.0, 200.0, 30.0, 400.0]);
+    }
+
+    #[test]
+    fn product_modes_agree() {
+        let a = table(vec![0, 2, 5], vec![2, 3, 2], 1);
+        let b = table(vec![1, 2], vec![4, 3], 2);
+        let p1 = a.product(&b, IndexMode::Odometer);
+        let p2 = a.product(&b, IndexMode::NaiveDecode);
+        assert_eq!(p1.vars(), &[0, 1, 2, 5]);
+        for (x, y) in p1.data().iter().zip(p2.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn product_commutes() {
+        let a = table(vec![0, 3], vec![3, 2], 3);
+        let b = table(vec![1, 3], vec![2, 2], 4);
+        let p1 = a.product(&b, IndexMode::Odometer);
+        let p2 = b.product(&a, IndexMode::Odometer);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn marginalize_matches_manual() {
+        let a = PotentialTable::from_data(vec![0, 1], vec![2, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = a.marginalize_keep(&[0], IndexMode::Odometer);
+        assert_eq!(m.vars(), &[0]);
+        assert_eq!(m.data(), &[6.0, 15.0]);
+        let m1 = a.marginalize_keep(&[1], IndexMode::Odometer);
+        assert_eq!(m1.data(), &[5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn marginalize_modes_agree() {
+        let a = table(vec![1, 4, 6, 7], vec![2, 3, 2, 2], 5);
+        let k = vec![1, 6];
+        let m1 = a.marginalize_keep(&k, IndexMode::Odometer);
+        let m2 = a.marginalize_keep(&k, IndexMode::NaiveDecode);
+        for (x, y) in m1.data().iter().zip(m2.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn marginalize_preserves_mass() {
+        let a = table(vec![0, 1, 2], vec![3, 2, 4], 6);
+        let m = a.marginalize_keep(&[1], IndexMode::Odometer);
+        assert!((m.sum() - a.sum()).abs() < 1e-9);
+        let empty = a.marginalize_keep(&[], IndexMode::Odometer);
+        assert_eq!(empty.len(), 1);
+        assert!((empty.sum() - a.sum()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn marginalize_out_then_product_roundtrip_shape() {
+        let a = table(vec![0, 1], vec![2, 2], 7);
+        let m = a.marginalize_out(1, IndexMode::Odometer);
+        assert_eq!(m.vars(), &[0]);
+    }
+
+    #[test]
+    fn multiply_subset_matches_product() {
+        let mut a = table(vec![0, 1, 2], vec![2, 2, 3], 8);
+        let sub = table(vec![1], vec![2], 9);
+        let expect = a.product(&sub, IndexMode::Odometer);
+        a.multiply_subset(&sub, IndexMode::Odometer);
+        for (x, y) in a.data().iter().zip(expect.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn multiply_subset_modes_agree() {
+        let base = table(vec![0, 2, 3], vec![2, 3, 2], 10);
+        let sub = table(vec![0, 3], vec![2, 2], 11);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        a.multiply_subset(&sub, IndexMode::Odometer);
+        b.multiply_subset(&sub, IndexMode::NaiveDecode);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn divide_inverts_multiply() {
+        let mut a = table(vec![0, 1], vec![2, 3], 12);
+        let orig = a.clone();
+        let sub = table(vec![1], vec![3], 13);
+        a.multiply_subset(&sub, IndexMode::Odometer);
+        a.divide_subset(&sub, IndexMode::Odometer);
+        for (x, y) in a.data().iter().zip(orig.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn divide_zero_by_zero_is_zero() {
+        let mut a = PotentialTable::from_data(vec![0], vec![2], vec![0.0, 4.0]);
+        let sub = PotentialTable::from_data(vec![0], vec![2], vec![0.0, 2.0]);
+        a.divide_subset(&sub, IndexMode::Odometer);
+        assert_eq!(a.data(), &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn product_with_scalar_identity() {
+        let a = table(vec![2, 4], vec![2, 2], 14);
+        let one = PotentialTable::scalar(1.0);
+        let p = a.product(&one, IndexMode::Odometer);
+        assert_eq!(p, a);
+    }
+
+    #[test]
+    fn product_associative() {
+        let a = table(vec![0], vec![2], 20);
+        let b = table(vec![1], vec![3], 21);
+        let c = table(vec![0, 2], vec![2, 2], 22);
+        let p1 = a.product(&b, IndexMode::Odometer).product(&c, IndexMode::Odometer);
+        let p2 = a.product(&b.product(&c, IndexMode::Odometer), IndexMode::Odometer);
+        assert_eq!(p1.vars(), p2.vars());
+        for (x, y) in p1.data().iter().zip(p2.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

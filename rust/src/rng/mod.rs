@@ -1,0 +1,329 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment ships no `rand` crate, so Fast-PGM carries
+//! its own small, well-tested generator: a PCG-XSH-RR 64/32 core (O'Neill,
+//! 2014) seeded through SplitMix64. Every stochastic component of the
+//! library (sampling-based inference, synthetic network generation, dataset
+//! generation, property tests) threads a [`Pcg`] explicitly, which makes
+//! every experiment in `EXPERIMENTS.md` bit-reproducible.
+
+/// SplitMix64 step — used to expand user seeds into full generator state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit output with random rotation.
+///
+/// Small (16 bytes), fast, and statistically solid for simulation work —
+/// the same family many scientific libraries default to.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg {
+    /// Create a generator from a user seed. Two rounds of SplitMix64
+    /// decorrelate nearby seeds.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let s1 = splitmix64(&mut sm);
+        let mut pcg = Pcg { state: 0, inc: (s1 << 1) | 1 };
+        pcg.state = pcg.state.wrapping_mul(PCG_MULT).wrapping_add(pcg.inc);
+        pcg.state = pcg.state.wrapping_add(s0);
+        pcg.state = pcg.state.wrapping_mul(PCG_MULT).wrapping_add(pcg.inc);
+        pcg
+    }
+
+    /// Derive an independent stream (for per-thread RNGs in sample-level
+    /// parallelism). Streams differ in the LCG increment, so they never
+    /// collide regardless of how many numbers each draws.
+    pub fn split(&mut self, stream: u64) -> Pcg {
+        let s = self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F);
+        Pcg::seed_from(s)
+    }
+
+    /// Next 32 random bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 random bits (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (bound as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Sample an index from an (unnormalized, non-negative) weight slice.
+    /// Returns `None` when all weights are zero.
+    pub fn weighted(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return Some(i);
+            }
+        }
+        // Floating-point slack: fall back to the last positive weight.
+        weights.iter().rposition(|&w| w > 0.0)
+    }
+
+    /// Sample an index from a *normalized* distribution; tolerant of tiny
+    /// normalization error. Unlike [`Pcg::weighted`] this skips the
+    /// total-mass pass (rows of a CPT already sum to 1), which halves the
+    /// per-draw work in the ancestral-sampling hot loop (§Perf P5).
+    #[inline]
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let mut u = self.next_f64();
+        // Binary case dominates real networks; branch once.
+        if probs.len() == 2 {
+            return usize::from(u >= probs[0]);
+        }
+        for (i, &p) in probs.iter().enumerate() {
+            u -= p;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        // Normalization slack: last positive-probability state.
+        probs.iter().rposition(|&p| p > 0.0).unwrap_or(0)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Standard normal via Box–Muller (used by the synthetic-network
+    /// generator for Dirichlet-ish CPT noise).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; used to draw Dirichlet CPTs.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            return g * self.next_f64().max(1e-300).powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, ..., alpha) over `k` categories.
+    pub fn dirichlet(&mut self, k: usize, alpha: f64) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let s: f64 = v.iter().sum();
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Pcg::seed_from(42);
+        let mut b = Pcg::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg::seed_from(1);
+        let mut b = Pcg::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 1, "streams should be decorrelated, got {same} collisions");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg::seed_from(7);
+        let mut s0 = root.split(0);
+        let mut s1 = root.split(1);
+        let same = (0..64).filter(|_| s0.next_u32() == s1.next_u32()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::seed_from(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Pcg::seed_from(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean = {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_roughly() {
+        let mut r = Pcg::seed_from(11);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts = {counts:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Pcg::seed_from(13);
+        let w = [1.0, 3.0, 0.0, 4.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..80_000 {
+            counts[r.weighted(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[2], 0);
+        let total = 80_000f64;
+        assert!((counts[0] as f64 / total - 0.125).abs() < 0.01);
+        assert!((counts[1] as f64 / total - 0.375).abs() < 0.01);
+        assert!((counts[3] as f64 / total - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn weighted_zero_total_is_none() {
+        let mut r = Pcg::seed_from(5);
+        assert_eq!(r.weighted(&[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::seed_from(17);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Pcg::seed_from(19);
+        let picks = r.choose_k(100, 10);
+        assert_eq!(picks.len(), 10);
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg::seed_from(23);
+        for k in [2usize, 3, 7] {
+            let d = r.dirichlet(k, 0.8);
+            assert_eq!(d.len(), k);
+            assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Pcg::seed_from(29);
+        let shape = 2.5;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+        assert!((mean - shape).abs() < 0.05, "mean = {mean}");
+    }
+}

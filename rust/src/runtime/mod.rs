@@ -1,0 +1,151 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers the L2 JAX classification model — whose hot spot is
+//! the L1 Pallas batched log-likelihood kernel — to **HLO text** (the
+//! interchange format xla_extension 0.5.1 accepts; serialized protos from
+//! jax ≥ 0.5 are rejected, see DESIGN.md). This module compiles that text
+//! on the PJRT CPU client and executes it from the Rust request path:
+//! Python is never loaded at runtime.
+//!
+//! Artifact bundle on disk (per network):
+//! * `<name>.fpgm`        — the network (shared parser with Python)
+//! * `<name>_meta.txt`    — key/value lines: `batch`, `n_vars`,
+//!   `class_var`, `n_classes`
+//! * `<name>_classify_b<batch>.hlo.txt` — HLO: `i32[B,N] -> f32[B,K]`
+//!   (log-joint per class; rows = evidence with the class column ignored)
+
+mod scorer;
+
+pub use scorer::{BatchScorer, ReferenceScorer, Scorer};
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `_meta.txt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub network: String,
+    pub batch: usize,
+    pub n_vars: usize,
+    pub class_var: usize,
+    pub n_classes: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(char::is_whitespace)
+                .with_context(|| format!("bad meta line {line:?}"))?;
+            kv.insert(k.to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("meta missing key {k:?}"))
+        };
+        Ok(ArtifactMeta {
+            network: get("network")?.clone(),
+            batch: get("batch")?.parse().context("batch")?,
+            n_vars: get("n_vars")?.parse().context("n_vars")?,
+            class_var: get("class_var")?.parse().context("class_var")?,
+            n_classes: get("n_classes")?.parse().context("n_classes")?,
+        })
+    }
+}
+
+/// Paths of one artifact bundle.
+#[derive(Clone, Debug)]
+pub struct ArtifactBundle {
+    pub name: String,
+    pub fpgm: PathBuf,
+    pub meta: PathBuf,
+    pub hlo: PathBuf,
+}
+
+impl ArtifactBundle {
+    /// Locate the bundle for `name` under `dir` (default `artifacts/`).
+    pub fn locate(dir: &Path, name: &str) -> Result<ArtifactBundle> {
+        let fpgm = dir.join(format!("{name}.fpgm"));
+        let meta = dir.join(format!("{name}_meta.txt"));
+        if !meta.exists() {
+            bail!(
+                "artifact meta {} not found — run `make artifacts` first",
+                meta.display()
+            );
+        }
+        let meta_parsed =
+            ArtifactMeta::parse(&std::fs::read_to_string(&meta)?)?;
+        let hlo = dir.join(format!(
+            "{name}_classify_b{}.hlo.txt",
+            meta_parsed.batch
+        ));
+        if !fpgm.exists() || !hlo.exists() {
+            bail!("incomplete artifact bundle for {name} in {}", dir.display());
+        }
+        Ok(ArtifactBundle { name: name.to_string(), fpgm, meta, hlo })
+    }
+
+    /// All bundles in a directory (by scanning `_meta.txt` files).
+    pub fn discover(dir: &Path) -> Result<Vec<ArtifactBundle>> {
+        let mut out = Vec::new();
+        if !dir.exists() {
+            return Ok(out);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if let Some(fname) = path.file_name().and_then(|s| s.to_str()) {
+                if let Some(name) = fname.strip_suffix("_meta.txt") {
+                    if let Ok(b) = ArtifactBundle::locate(dir, name) {
+                        out.push(b);
+                    }
+                }
+            }
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(out)
+    }
+
+    pub fn read_meta(&self) -> Result<ArtifactMeta> {
+        ArtifactMeta::parse(&std::fs::read_to_string(&self.meta)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::parse(
+            "# comment\nnetwork asia\nbatch 256\nn_vars 8\nclass_var 7\nn_classes 2\n",
+        )
+        .unwrap();
+        assert_eq!(m.network, "asia");
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.class_var, 7);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        assert!(ArtifactMeta::parse("network x\nbatch 4\n").is_err());
+        assert!(ArtifactMeta::parse("garbage-without-space\n").is_err());
+    }
+
+    #[test]
+    fn locate_missing_dir_errors() {
+        let r = ArtifactBundle::locate(Path::new("/nonexistent"), "foo");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn discover_empty_dir_ok() {
+        let out = ArtifactBundle::discover(Path::new("/nonexistent")).unwrap();
+        assert!(out.is_empty());
+    }
+}

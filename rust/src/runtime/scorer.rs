@@ -1,0 +1,218 @@
+//! Batched class-posterior scoring.
+//!
+//! [`Scorer`] abstracts the batched "evidence rows → class posteriors"
+//! operation so the coordinator can run against either the real
+//! XLA-compiled artifact ([`BatchScorer`]) or the pure-Rust reference
+//! ([`ReferenceScorer`], also the oracle the integration tests compare
+//! the XLA path against).
+
+use crate::network::BayesianNetwork;
+use anyhow::{Context, Result};
+use super::{ArtifactBundle, ArtifactMeta};
+
+/// Batched classification scoring.
+///
+/// Deliberately **not** `Send`/`Sync`: the PJRT client and executable are
+/// thread-affine (`Rc` internals), so [`BatchScorer`] must live on the
+/// thread that created it. The coordinator's [`crate::coordinator::DynamicBatcher`]
+/// therefore takes a *factory* and constructs the scorer on its worker
+/// thread.
+pub trait Scorer {
+    /// Native batch size (requests are padded up to it).
+    fn batch_size(&self) -> usize;
+    fn n_classes(&self) -> usize;
+    fn n_vars(&self) -> usize;
+    fn class_var(&self) -> usize;
+    /// Posterior over classes for each row. `rows.len() <= batch_size()`;
+    /// each row has `n_vars()` state indices (the class column is
+    /// ignored).
+    fn score(&self, rows: &[Vec<u8>]) -> Result<Vec<Vec<f64>>>;
+}
+
+/// The real thing: PJRT CPU client executing the AOT HLO.
+pub struct BatchScorer {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// The network the artifact was compiled from (for cross-checks).
+    pub net: BayesianNetwork,
+}
+
+impl BatchScorer {
+    /// Load an artifact bundle: parse the network, read + compile the HLO.
+    pub fn load(bundle: &ArtifactBundle) -> Result<BatchScorer> {
+        let meta = bundle.read_meta()?;
+        let net = crate::io::fpgm::load(&bundle.fpgm)?;
+        anyhow::ensure!(
+            net.n_vars() == meta.n_vars,
+            "fpgm/meta disagree on variable count"
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            bundle.hlo.to_str().context("non-utf8 path")?,
+        )
+        .context("parsing HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(BatchScorer { exe, meta, net })
+    }
+
+    /// Convert log-joint scores to normalized posteriors (stable softmax).
+    fn softmax_rows(logits: &[f32], n: usize, k: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|b| {
+                let row = &logits[b * k..(b + 1) * k];
+                let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f64> =
+                    row.iter().map(|&x| ((x - m) as f64).exp()).collect();
+                let s: f64 = exps.iter().sum();
+                exps.into_iter().map(|e| e / s).collect()
+            })
+            .collect()
+    }
+}
+
+impl Scorer for BatchScorer {
+    fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn n_classes(&self) -> usize {
+        self.meta.n_classes
+    }
+
+    fn n_vars(&self) -> usize {
+        self.meta.n_vars
+    }
+
+    fn class_var(&self) -> usize {
+        self.meta.class_var
+    }
+
+    fn score(&self, rows: &[Vec<u8>]) -> Result<Vec<Vec<f64>>> {
+        let b = self.meta.batch;
+        let n = self.meta.n_vars;
+        let k = self.meta.n_classes;
+        anyhow::ensure!(rows.len() <= b, "batch overflow: {} > {b}", rows.len());
+        // Pack + pad to the artifact's static batch shape.
+        let mut states = vec![0i32; b * n];
+        for (i, row) in rows.iter().enumerate() {
+            anyhow::ensure!(row.len() == n, "row arity mismatch");
+            for (j, &s) in row.iter().enumerate() {
+                states[i * n + j] = s as i32;
+            }
+        }
+        let input = xla::Literal::vec1(&states).reshape(&[b as i64, n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let logits = out.to_vec::<f32>()?;
+        anyhow::ensure!(logits.len() == b * k, "unexpected output size");
+        Ok(Self::softmax_rows(&logits, rows.len(), k))
+    }
+}
+
+/// Pure-Rust reference scorer: same contract, computed from the network's
+/// CPTs directly. Used as the test oracle for the XLA path and as the
+/// baseline in bench E9.
+pub struct ReferenceScorer {
+    pub net: BayesianNetwork,
+    pub class_var: usize,
+    batch: usize,
+}
+
+impl ReferenceScorer {
+    pub fn new(net: BayesianNetwork, class_var: usize, batch: usize) -> Self {
+        ReferenceScorer { net, class_var, batch }
+    }
+
+    /// Log-joint of a complete row.
+    fn log_joint(&self, row: &[u8]) -> f64 {
+        let mut a = crate::core::Assignment::from_values(row.to_vec());
+        // (Assignment is over all vars; row already complete.)
+        let mut ll = 0.0;
+        for v in 0..self.net.n_vars() {
+            let cpt = self.net.cpt(v);
+            let cfg = cpt.parent_config(&a);
+            ll += cpt.prob(cfg, a.get(v)).max(1e-30).ln();
+        }
+        // keep the borrow checker happy about `a` mutation pattern
+        let _ = &mut a;
+        ll
+    }
+}
+
+impl Scorer for ReferenceScorer {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn n_classes(&self) -> usize {
+        self.net.cardinality(self.class_var)
+    }
+
+    fn n_vars(&self) -> usize {
+        self.net.n_vars()
+    }
+
+    fn class_var(&self) -> usize {
+        self.class_var
+    }
+
+    fn score(&self, rows: &[Vec<u8>]) -> Result<Vec<Vec<f64>>> {
+        let k = self.n_classes();
+        Ok(rows
+            .iter()
+            .map(|row| {
+                let mut scores = Vec::with_capacity(k);
+                let mut work = row.clone();
+                for c in 0..k {
+                    work[self.class_var] = c as u8;
+                    scores.push(self.log_joint(&work));
+                }
+                let m = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = scores.iter().map(|&s| (s - m).exp()).collect();
+                let t: f64 = exps.iter().sum();
+                exps.into_iter().map(|e| e / t).collect()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+    use crate::network::repository;
+
+    #[test]
+    fn reference_scorer_matches_brute_force() {
+        let net = repository::asia();
+        let class_var = net.var_index("bronc").unwrap();
+        let scorer = ReferenceScorer::new(net.clone(), class_var, 8);
+        let row = vec![0u8, 0, 1, 0, 0, 0, 1, 1];
+        let post = scorer.score(&[row.clone()]).unwrap().pop().unwrap();
+        // Compare against brute force with all other vars as evidence.
+        let ev: Evidence = (0..net.n_vars())
+            .filter(|&v| v != class_var)
+            .map(|v| (v, row[v] as usize))
+            .collect();
+        let expect = net.brute_force_posterior(class_var, &ev);
+        for (a, b) in post.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-9, "{post:?} vs {expect:?}");
+        }
+    }
+
+    #[test]
+    fn reference_scorer_batch() {
+        let net = repository::cancer();
+        let scorer = ReferenceScorer::new(net, 2, 16);
+        let rows: Vec<Vec<u8>> =
+            (0..5).map(|i| vec![i % 2, (i / 2) % 2, 0, 1, 0]).collect();
+        let posts = scorer.score(&rows).unwrap();
+        assert_eq!(posts.len(), 5);
+        for p in posts {
+            assert_eq!(p.len(), 2);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,477 @@
+//! Conditional-independence tests on discrete data.
+//!
+//! The hot core of constraint-based structure learning. A test of
+//! `X ⟂ Y | Z` builds the contingency table `n(x, y, z)` in one streaming
+//! pass over the dataset's columns (cache-friendly storage, paper opt ii),
+//! derives the marginals from the joint instead of recounting (computation
+//! grouping, paper opt iii), and evaluates either the G² likelihood-ratio
+//! statistic or Pearson's χ² against the chi-square distribution.
+
+use crate::core::{Dataset, VarId};
+
+/// Which independence statistic to compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CiTest {
+    /// G² likelihood-ratio test (the PC-stable default in the paper's
+    /// lineage: Fast-BNS uses G²).
+    #[default]
+    GSquare,
+    /// Pearson's χ².
+    ChiSquare,
+}
+
+/// Counting strategy — the ablation knob for bench E2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CountStrategy {
+    /// One pass builds `n(x,y,z)`; marginals are summed out of the joint
+    /// (grouped computations, optimization iii).
+    #[default]
+    Grouped,
+    /// Four independent passes over the data re-count `n_xyz`, `n_xz`,
+    /// `n_yz` and `n_z` — what an implementation without grouping does.
+    Naive,
+}
+
+/// Outcome of one CI test.
+#[derive(Clone, Copy, Debug)]
+pub struct CiOutcome {
+    pub statistic: f64,
+    pub dof: usize,
+    pub p_value: f64,
+}
+
+impl CiOutcome {
+    /// Independence is *accepted* (edge removable) when p ≥ alpha.
+    pub fn independent(&self, alpha: f64) -> bool {
+        self.p_value >= alpha
+    }
+}
+
+/// A reusable tester bound to one dataset. Holds scratch buffers so
+/// repeated tests allocate nothing beyond the (query-sized) count tables.
+#[derive(Clone)]
+pub struct CiTester<'d> {
+    data: &'d Dataset,
+    pub test: CiTest,
+    pub strategy: CountStrategy,
+}
+
+impl<'d> CiTester<'d> {
+    pub fn new(data: &'d Dataset) -> Self {
+        CiTester { data, test: CiTest::default(), strategy: CountStrategy::default() }
+    }
+
+    pub fn with(data: &'d Dataset, test: CiTest, strategy: CountStrategy) -> Self {
+        CiTester { data, test, strategy }
+    }
+
+    /// Number of cells a test of `x ⟂ y | z` would need; PC skips tests
+    /// whose tables the data cannot populate (heuristic guard also used by
+    /// the original PC implementations).
+    pub fn table_size(&self, x: VarId, y: VarId, z: &[VarId]) -> usize {
+        let cz: usize = z.iter().map(|&v| self.data.cardinality(v)).product();
+        self.data.cardinality(x) * self.data.cardinality(y) * cz
+    }
+
+    /// Test `x ⟂ y | z`.
+    pub fn test(&self, x: VarId, y: VarId, z: &[VarId]) -> CiOutcome {
+        debug_assert!(x != y && !z.contains(&x) && !z.contains(&y));
+        let cx = self.data.cardinality(x);
+        let cy = self.data.cardinality(y);
+        let cz: usize = z.iter().map(|&v| self.data.cardinality(v)).product();
+        match self.strategy {
+            CountStrategy::Grouped => self.test_grouped(x, y, z, cx, cy, cz),
+            CountStrategy::Naive => self.test_naive(x, y, z, cx, cy, cz),
+        }
+    }
+
+    /// One pass: joint counts, marginals by summation.
+    fn test_grouped(
+        &self,
+        x: VarId,
+        y: VarId,
+        z: &[VarId],
+        cx: usize,
+        cy: usize,
+        cz: usize,
+    ) -> CiOutcome {
+        // n_xyz indexed as (zcfg * cx + xs) * cy + ys: y fastest so the
+        // inner marginalization loops are contiguous.
+        let mut n_xyz = vec![0u32; cx * cy * cz];
+        let col_x = self.data.column(x);
+        let col_y = self.data.column(y);
+        match z.len() {
+            0 => {
+                for r in 0..self.data.n_rows() {
+                    let (xs, ys) = (col_x[r] as usize, col_y[r] as usize);
+                    n_xyz[xs * cy + ys] += 1;
+                }
+            }
+            1 => {
+                let col_z = self.data.column(z[0]);
+                for r in 0..self.data.n_rows() {
+                    let idx = ((col_z[r] as usize) * cx + col_x[r] as usize) * cy
+                        + col_y[r] as usize;
+                    n_xyz[idx] += 1;
+                }
+            }
+            2 => {
+                // Level-2 is the hottest deep level in PC runs — a
+                // dedicated two-column path avoids the per-row inner loop
+                // (§Perf P6).
+                let col_z0 = self.data.column(z[0]);
+                let col_z1 = self.data.column(z[1]);
+                let cz1 = self.data.cardinality(z[1]);
+                for r in 0..self.data.n_rows() {
+                    let zc = col_z0[r] as usize * cz1 + col_z1[r] as usize;
+                    let idx = (zc * cx + col_x[r] as usize) * cy + col_y[r] as usize;
+                    n_xyz[idx] += 1;
+                }
+            }
+            _ => {
+                // Mixed-radix z configuration built per row; columns are
+                // pre-fetched once to keep the loop branch-free.
+                let cols_z: Vec<&[u8]> =
+                    z.iter().map(|&v| self.data.column(v)).collect();
+                let cards_z: Vec<usize> =
+                    z.iter().map(|&v| self.data.cardinality(v)).collect();
+                for r in 0..self.data.n_rows() {
+                    let mut zc = 0usize;
+                    for (c, col) in cols_z.iter().enumerate() {
+                        zc = zc * cards_z[c] + col[r] as usize;
+                    }
+                    let idx = (zc * cx + col_x[r] as usize) * cy + col_y[r] as usize;
+                    n_xyz[idx] += 1;
+                }
+            }
+        }
+        // Marginals out of the joint — no second data pass (opt iii).
+        let mut n_xz = vec![0u64; cx * cz];
+        let mut n_yz = vec![0u64; cy * cz];
+        let mut n_z = vec![0u64; cz];
+        for zc in 0..cz {
+            for xs in 0..cx {
+                let base = (zc * cx + xs) * cy;
+                let mut row_total = 0u64;
+                for ys in 0..cy {
+                    let c = n_xyz[base + ys] as u64;
+                    row_total += c;
+                    n_yz[zc * cy + ys] += c;
+                }
+                n_xz[zc * cx + xs] = row_total;
+                n_z[zc] += row_total;
+            }
+        }
+        self.statistic(&n_xyz, &n_xz, &n_yz, &n_z, cx, cy, cz)
+    }
+
+    /// Four passes: what a non-grouped implementation does. Identical
+    /// output, ~4x the memory traffic (ablation baseline, bench E2).
+    fn test_naive(
+        &self,
+        x: VarId,
+        y: VarId,
+        z: &[VarId],
+        cx: usize,
+        cy: usize,
+        cz: usize,
+    ) -> CiOutcome {
+        let zcfg = |r: usize| {
+            let mut zc = 0usize;
+            for &v in z {
+                zc = zc * self.data.cardinality(v) + self.data.value(r, v);
+            }
+            zc
+        };
+        let n = self.data.n_rows();
+        let mut n_xyz = vec![0u32; cx * cy * cz];
+        for r in 0..n {
+            let idx =
+                (zcfg(r) * cx + self.data.value(r, x)) * cy + self.data.value(r, y);
+            n_xyz[idx] += 1;
+        }
+        let mut n_xz = vec![0u64; cx * cz];
+        for r in 0..n {
+            n_xz[zcfg(r) * cx + self.data.value(r, x)] += 1;
+        }
+        let mut n_yz = vec![0u64; cy * cz];
+        for r in 0..n {
+            n_yz[zcfg(r) * cy + self.data.value(r, y)] += 1;
+        }
+        let mut n_z = vec![0u64; cz];
+        for r in 0..n {
+            n_z[zcfg(r)] += 1;
+        }
+        self.statistic(&n_xyz, &n_xz, &n_yz, &n_z, cx, cy, cz)
+    }
+
+    fn statistic(
+        &self,
+        n_xyz: &[u32],
+        n_xz: &[u64],
+        n_yz: &[u64],
+        n_z: &[u64],
+        cx: usize,
+        cy: usize,
+        cz: usize,
+    ) -> CiOutcome {
+        let mut stat = 0.0f64;
+        for zc in 0..cz {
+            let nz = n_z[zc] as f64;
+            if nz == 0.0 {
+                continue;
+            }
+            for xs in 0..cx {
+                let nxz = n_xz[zc * cx + xs] as f64;
+                if nxz == 0.0 {
+                    continue;
+                }
+                let base = (zc * cx + xs) * cy;
+                for ys in 0..cy {
+                    let nyz = n_yz[zc * cy + ys] as f64;
+                    if nyz == 0.0 {
+                        continue;
+                    }
+                    let obs = n_xyz[base + ys] as f64;
+                    let exp = nxz * nyz / nz;
+                    match self.test {
+                        CiTest::GSquare => {
+                            if obs > 0.0 {
+                                stat += 2.0 * obs * (obs / exp).ln();
+                            }
+                        }
+                        CiTest::ChiSquare => {
+                            let d = obs - exp;
+                            stat += d * d / exp;
+                        }
+                    }
+                }
+            }
+        }
+        let dof = ((cx - 1) * (cy - 1) * cz).max(1);
+        let p_value = chi_square_sf(stat.max(0.0), dof);
+        CiOutcome { statistic: stat.max(0.0), dof, p_value }
+    }
+}
+
+/// Survival function of the chi-square distribution with `dof` degrees of
+/// freedom: `P(X >= x) = Q(dof/2, x/2)` (regularized upper incomplete
+/// gamma, Numerical-Recipes-style series / continued fraction).
+pub fn chi_square_sf(x: f64, dof: usize) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    gamma_q(dof as f64 / 2.0, x / 2.0)
+}
+
+/// Regularized upper incomplete gamma Q(a, x).
+fn gamma_q(a: f64, x: f64) -> f64 {
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_contfrac(a, x)
+    }
+}
+
+/// ln Γ(a) — Lanczos approximation (g=7, n=9), |err| < 1e-13 over the
+/// domain used here.
+pub fn ln_gamma(a: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if a < 0.5 {
+        // Reflection.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * a).sin()).ln() - ln_gamma(1.0 - a);
+    }
+    let a = a - 1.0;
+    let mut sum = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        sum += c / (a + i as f64);
+    }
+    let t = a + 7.5;
+    0.5 * (std::f64::consts::TAU).ln() + (a + 0.5) * t.ln() - t + sum.ln()
+}
+
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    (sum * (-x + a * x.ln() - ln_gamma(a)).exp()).clamp(0.0, 1.0)
+}
+
+fn gamma_q_contfrac(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = d * c;
+        h *= delta;
+        if (delta - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    ((-x + a * x.ln() - ln_gamma(a)).exp() * h).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Variable;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-12);
+        assert!((ln_gamma(2.0)).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn chi_square_sf_known_values() {
+        // Standard chi-square critical values: P(X >= 3.841 | dof=1) = 0.05.
+        assert!((chi_square_sf(3.841, 1) - 0.05).abs() < 1e-3);
+        assert!((chi_square_sf(5.991, 2) - 0.05).abs() < 1e-3);
+        assert!((chi_square_sf(0.0, 3) - 1.0).abs() < 1e-12);
+        assert!(chi_square_sf(100.0, 1) < 1e-10);
+        // Monotone decreasing in x.
+        assert!(chi_square_sf(1.0, 4) > chi_square_sf(2.0, 4));
+    }
+
+    fn dataset_independent(n: usize, seed: u64) -> Dataset {
+        // x, y independent fair-ish coins; z random ternary.
+        let mut rng = Pcg::seed_from(seed);
+        let vars = vec![
+            Variable::new("x", 2),
+            Variable::new("y", 2),
+            Variable::new("z", 3),
+        ];
+        let mut ds = Dataset::new(vars);
+        for _ in 0..n {
+            ds.push_row(&[rng.below(2) as u8, rng.below(2) as u8, rng.below(3) as u8]);
+        }
+        ds
+    }
+
+    fn dataset_dependent(n: usize, seed: u64) -> Dataset {
+        // y = x with noise; z independent.
+        let mut rng = Pcg::seed_from(seed);
+        let vars = vec![
+            Variable::new("x", 2),
+            Variable::new("y", 2),
+            Variable::new("z", 3),
+        ];
+        let mut ds = Dataset::new(vars);
+        for _ in 0..n {
+            let x = rng.below(2) as u8;
+            let y = if rng.bool_with(0.9) { x } else { 1 - x };
+            ds.push_row(&[x, y, rng.below(3) as u8]);
+        }
+        ds
+    }
+
+    fn dataset_cond_independent(n: usize, seed: u64) -> Dataset {
+        // x <- z -> y: dependent marginally, independent given z.
+        let mut rng = Pcg::seed_from(seed);
+        let vars = vec![
+            Variable::new("x", 2),
+            Variable::new("y", 2),
+            Variable::new("z", 2),
+        ];
+        let mut ds = Dataset::new(vars);
+        for _ in 0..n {
+            let z = rng.below(2) as u8;
+            let p = if z == 0 { 0.2 } else { 0.8 };
+            let x = rng.bool_with(p) as u8;
+            let y = rng.bool_with(p) as u8;
+            ds.push_row(&[x, y, z]);
+        }
+        ds
+    }
+
+    #[test]
+    fn accepts_independence() {
+        let ds = dataset_independent(5000, 1);
+        let t = CiTester::new(&ds);
+        let out = t.test(0, 1, &[]);
+        assert!(out.independent(0.01), "p = {}", out.p_value);
+    }
+
+    #[test]
+    fn rejects_dependence() {
+        let ds = dataset_dependent(5000, 2);
+        let t = CiTester::new(&ds);
+        let out = t.test(0, 1, &[]);
+        assert!(!out.independent(0.05), "p = {}", out.p_value);
+        // Conditioning on an irrelevant z doesn't rescue independence.
+        let out = t.test(0, 1, &[2]);
+        assert!(!out.independent(0.05));
+    }
+
+    #[test]
+    fn detects_conditional_independence() {
+        let ds = dataset_cond_independent(20_000, 3);
+        let t = CiTester::new(&ds);
+        let marginal = t.test(0, 1, &[]);
+        assert!(!marginal.independent(0.05), "marginally dependent");
+        let conditional = t.test(0, 1, &[2]);
+        assert!(conditional.independent(0.01), "p = {}", conditional.p_value);
+    }
+
+    #[test]
+    fn grouped_and_naive_agree() {
+        let ds = dataset_dependent(3000, 4);
+        for test in [CiTest::GSquare, CiTest::ChiSquare] {
+            let g = CiTester::with(&ds, test, CountStrategy::Grouped).test(0, 1, &[2]);
+            let n = CiTester::with(&ds, test, CountStrategy::Naive).test(0, 1, &[2]);
+            assert!((g.statistic - n.statistic).abs() < 1e-9);
+            assert_eq!(g.dof, n.dof);
+            assert!((g.p_value - n.p_value).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn chi2_and_g2_agree_qualitatively() {
+        let ds = dataset_dependent(5000, 5);
+        let g = CiTester::with(&ds, CiTest::GSquare, CountStrategy::Grouped).test(0, 1, &[]);
+        let c = CiTester::with(&ds, CiTest::ChiSquare, CountStrategy::Grouped).test(0, 1, &[]);
+        assert!(!g.independent(0.05) && !c.independent(0.05));
+    }
+
+    #[test]
+    fn table_size_product() {
+        let ds = dataset_independent(10, 6);
+        let t = CiTester::new(&ds);
+        assert_eq!(t.table_size(0, 1, &[2]), 2 * 2 * 3);
+    }
+}

@@ -1,0 +1,28 @@
+//! Structure learning: the PC-stable algorithm (Spirtes & Glymour 1991;
+//! Colombo & Maathuis' order-independent variant) with the paper's
+//! optimizations:
+//!
+//! * **(i) CI-level parallelism with a dynamic work pool** — within each
+//!   level of PC-stable every edge's conditional-independence tests are
+//!   independent (the "stable" variant freezes adjacency sets per level),
+//!   so edges are distributed over workers that pull from a shared cursor
+//!   ([`pc_parallel`]).
+//! * **(ii) cache-friendly data storage** — contingency counting streams
+//!   column-major data ([`crate::core::Dataset`]) into one dense count
+//!   array ([`ci_tests`]).
+//! * **(iii) computation grouping** — marginal counts (`n_xz`, `n_yz`,
+//!   `n_z`) are derived from the joint `n_xyz` table instead of recounted,
+//!   collapsing four dataset passes into one ([`ci_tests::CountStrategy`]).
+
+pub mod ci_tests;
+mod hill_climbing;
+pub mod orientation;
+mod pc;
+pub mod score;
+mod sepset;
+
+pub use ci_tests::{CiTest, CiTester, CountStrategy};
+pub use hill_climbing::{hill_climb, HcOptions, HcResult};
+pub use pc::{pc_stable, pc_stable_parallel, PcOptions, PcResult};
+pub use score::{ScoreKind, Scorer};
+pub use sepset::SepsetMap;

@@ -1,0 +1,340 @@
+//! The PC-stable algorithm, sequential and parallel.
+//!
+//! PC-stable (Colombo & Maathuis 2014 variant of Spirtes & Glymour's PC)
+//! freezes adjacency sets at the start of every level, which makes the
+//! output order-independent — and, as the paper's optimization (i)
+//! exploits, makes every edge's tests within a level *embarrassingly
+//! parallel*. [`pc_stable_parallel`] distributes edges over the dynamic
+//! work pool; results are bit-identical to [`pc_stable`] for any thread
+//! count (asserted by the integration suite).
+
+use crate::core::{Dataset, VarId};
+use crate::graph::{Pdag, UGraph};
+use crate::parallel::parallel_map;
+use super::ci_tests::{CiTest, CiTester, CountStrategy};
+use super::orientation;
+use super::SepsetMap;
+
+/// Tuning knobs for PC-stable.
+#[derive(Clone, Debug)]
+pub struct PcOptions {
+    /// Significance level; independence accepted when p ≥ alpha.
+    pub alpha: f64,
+    /// Test statistic.
+    pub test: CiTest,
+    /// Counting strategy (ablation knob, see bench E2).
+    pub strategy: CountStrategy,
+    /// Largest conditioning-set size to try.
+    pub max_cond_size: usize,
+    /// Worker threads for the parallel variant.
+    pub threads: usize,
+    /// Edges claimed per work-pool pull (dynamic scheduling granularity).
+    pub chunk: usize,
+    /// Skip tests whose contingency table exceeds `n_rows / min_rows_per_cell`
+    /// cells (standard reliability guard; 0 disables).
+    pub min_rows_per_cell: usize,
+}
+
+impl Default for PcOptions {
+    fn default() -> Self {
+        PcOptions {
+            alpha: 0.01,
+            test: CiTest::GSquare,
+            strategy: CountStrategy::Grouped,
+            max_cond_size: 3,
+            threads: 1,
+            chunk: 4,
+            min_rows_per_cell: 10,
+        }
+    }
+}
+
+/// Output of structure learning.
+#[derive(Clone, Debug)]
+pub struct PcResult {
+    /// Maximally oriented CPDAG.
+    pub graph: Pdag,
+    /// Separation sets found.
+    pub sepsets: SepsetMap,
+    /// Number of CI tests executed.
+    pub n_tests: usize,
+    /// Number of levels (max conditioning size reached + 1).
+    pub levels: usize,
+}
+
+impl PcResult {
+    pub fn n_edges(&self) -> usize {
+        self.graph.n_edges()
+    }
+}
+
+/// Decision for one edge at one level.
+struct EdgeDecision {
+    x: VarId,
+    y: VarId,
+    sepset: Option<Vec<VarId>>,
+    tests: usize,
+}
+
+/// Test one edge at one level against all candidate conditioning sets from
+/// the *frozen* adjacencies. Returns the first separating set found.
+fn test_edge(
+    tester: &CiTester,
+    x: VarId,
+    y: VarId,
+    frozen_adj: &[Vec<VarId>],
+    level: usize,
+    opts: &PcOptions,
+    n_rows: usize,
+) -> EdgeDecision {
+    let mut tests = 0usize;
+    // Candidate pools: adj(x) \ {y} then adj(y) \ {x} (PC-stable tests
+    // both sides).
+    for (anchor, other) in [(x, y), (y, x)] {
+        let pool: Vec<VarId> = frozen_adj[anchor]
+            .iter()
+            .copied()
+            .filter(|&v| v != other)
+            .collect();
+        if pool.len() < level {
+            continue;
+        }
+        let mut comb = Combinations::new(pool.len(), level);
+        let mut subset = vec![0 as VarId; level];
+        while comb.next_into(|slot, idx| subset[slot] = pool[idx]) {
+            // Reliability guard: skip unpopulatable tables.
+            if opts.min_rows_per_cell > 0 {
+                let cells = tester.table_size(x, y, &subset);
+                if cells * opts.min_rows_per_cell > n_rows.max(1) * 10 {
+                    // Matches the usual heuristic n >= 10 * cells / 10.
+                    continue;
+                }
+            }
+            tests += 1;
+            if tester.test(x, y, &subset).independent(opts.alpha) {
+                return EdgeDecision { x, y, sepset: Some(subset), tests };
+            }
+        }
+        // Avoid re-testing identical sets from the other side at level 0.
+        if level == 0 {
+            break;
+        }
+    }
+    EdgeDecision { x, y, sepset: None, tests }
+}
+
+/// Iterative k-combinations of `0..n` in lexicographic order.
+struct Combinations {
+    n: usize,
+    k: usize,
+    idx: Vec<usize>,
+    started: bool,
+}
+
+impl Combinations {
+    fn new(n: usize, k: usize) -> Self {
+        Combinations { n, k, idx: (0..k).collect(), started: false }
+    }
+
+    /// Produce the next combination by writing each chosen index through
+    /// `write(slot, index)`. Returns false when exhausted.
+    fn next_into(&mut self, mut write: impl FnMut(usize, usize)) -> bool {
+        if self.k > self.n {
+            return false;
+        }
+        if !self.started {
+            self.started = true;
+            for (s, &i) in self.idx.iter().enumerate() {
+                write(s, i);
+            }
+            return true;
+        }
+        if self.k == 0 {
+            return false;
+        }
+        // Advance from the rightmost position that can move.
+        let mut pos = self.k;
+        while pos > 0 {
+            pos -= 1;
+            if self.idx[pos] < self.n - (self.k - pos) {
+                self.idx[pos] += 1;
+                for p in (pos + 1)..self.k {
+                    self.idx[p] = self.idx[p - 1] + 1;
+                }
+                for (s, &i) in self.idx.iter().enumerate() {
+                    write(s, i);
+                }
+                return true;
+            }
+        }
+        false
+    }
+}
+
+fn run_pc(data: &Dataset, opts: &PcOptions, parallel: bool) -> PcResult {
+    let n = data.n_vars();
+    let tester = CiTester::with(data, opts.test, opts.strategy);
+    let mut skeleton = UGraph::complete(n);
+    let mut sepsets = SepsetMap::new();
+    let mut n_tests = 0usize;
+    let mut level = 0usize;
+
+    loop {
+        // Freeze adjacency sets (the "stable" part).
+        let frozen: Vec<Vec<VarId>> =
+            (0..n).map(|v| skeleton.neighbors(v).to_vec()).collect();
+        // Edges with enough neighbors to supply a level-sized sepset.
+        let edges: Vec<(VarId, VarId)> = skeleton
+            .edges()
+            .into_iter()
+            .filter(|&(x, y)| {
+                frozen[x].len().saturating_sub(1) >= level
+                    || frozen[y].len().saturating_sub(1) >= level
+            })
+            .collect();
+        if edges.is_empty() {
+            break;
+        }
+
+        let decisions: Vec<EdgeDecision> = if parallel && opts.threads > 1 {
+            parallel_map(edges.len(), opts.threads, opts.chunk, |i| {
+                let (x, y) = edges[i];
+                test_edge(&tester, x, y, &frozen, level, opts, data.n_rows())
+            })
+        } else {
+            edges
+                .iter()
+                .map(|&(x, y)| {
+                    test_edge(&tester, x, y, &frozen, level, opts, data.n_rows())
+                })
+                .collect()
+        };
+
+        // Deferred removal keeps the level order-independent.
+        for d in decisions {
+            n_tests += d.tests;
+            if let Some(s) = d.sepset {
+                skeleton.remove_edge(d.x, d.y);
+                sepsets.insert(d.x, d.y, s);
+            }
+        }
+
+        level += 1;
+        if level > opts.max_cond_size {
+            break;
+        }
+    }
+
+    let mut graph = Pdag::from_skeleton(&skeleton);
+    orientation::orient_v_structures(&mut graph, &sepsets);
+    orientation::apply_meek_rules(&mut graph);
+    PcResult { graph, sepsets, n_tests, levels: level }
+}
+
+/// Sequential PC-stable.
+pub fn pc_stable(data: &Dataset, opts: &PcOptions) -> PcResult {
+    run_pc(data, opts, false)
+}
+
+/// PC-stable with CI-level parallelism over the dynamic work pool
+/// (paper optimization (i)). Produces the same graph as [`pc_stable`]
+/// for every thread count.
+pub fn pc_stable_parallel(data: &Dataset, opts: &PcOptions) -> PcResult {
+    run_pc(data, opts, true)
+}
+
+/// Default implementation of EdgeDecision parallel-map slots.
+impl Default for EdgeDecision {
+    fn default() -> Self {
+        EdgeDecision { x: 0, y: 0, sepset: None, tests: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::rng::Pcg;
+    use crate::sampling::forward_sample_dataset;
+
+    #[test]
+    fn combinations_enumerate() {
+        let mut c = Combinations::new(4, 2);
+        let mut all = Vec::new();
+        let mut buf = [0usize; 2];
+        while c.next_into(|s, i| buf[s] = i) {
+            all.push(buf);
+        }
+        assert_eq!(all, vec![[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]]);
+    }
+
+    #[test]
+    fn combinations_k0_once() {
+        let mut c = Combinations::new(3, 0);
+        assert!(c.next_into(|_, _| unreachable!()));
+        assert!(!c.next_into(|_, _| unreachable!()));
+    }
+
+    #[test]
+    fn combinations_k_gt_n_empty() {
+        let mut c = Combinations::new(2, 3);
+        assert!(!c.next_into(|_, _| ()));
+    }
+
+    #[test]
+    fn recovers_sprinkler_skeleton() {
+        let net = repository::sprinkler();
+        let mut rng = Pcg::seed_from(11);
+        let data = forward_sample_dataset(&net, 20_000, &mut rng);
+        let opts = PcOptions { alpha: 0.01, ..Default::default() };
+        let result = pc_stable(&data, &opts);
+        let learned = result.graph.skeleton();
+        let truth = net.dag().skeleton();
+        assert_eq!(learned.edges(), truth.edges(), "skeleton mismatch");
+    }
+
+    #[test]
+    fn recovers_cancer_collider() {
+        let net = repository::cancer();
+        let mut rng = Pcg::seed_from(13);
+        let data = forward_sample_dataset(&net, 50_000, &mut rng);
+        let result = pc_stable(&data, &PcOptions::default());
+        // pollution -> cancer <- smoker is a v-structure and must be
+        // oriented.
+        let (p, s, c) = (0, 1, 2);
+        assert!(result.graph.has_directed(p, c), "pollution -> cancer");
+        assert!(result.graph.has_directed(s, c), "smoker -> cancer");
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let net = repository::asia();
+        let mut rng = Pcg::seed_from(17);
+        let data = forward_sample_dataset(&net, 10_000, &mut rng);
+        let seq = pc_stable(&data, &PcOptions::default());
+        for threads in [2, 4, 8] {
+            let par = pc_stable_parallel(
+                &data,
+                &PcOptions { threads, ..Default::default() },
+            );
+            assert_eq!(
+                seq.graph, par.graph,
+                "graph differs at {threads} threads"
+            );
+            assert_eq!(seq.n_tests, par.n_tests);
+        }
+    }
+
+    #[test]
+    fn counting_strategies_same_graph() {
+        let net = repository::asia();
+        let mut rng = Pcg::seed_from(19);
+        let data = forward_sample_dataset(&net, 8_000, &mut rng);
+        let g = pc_stable(&data, &PcOptions::default());
+        let n = pc_stable(
+            &data,
+            &PcOptions { strategy: CountStrategy::Naive, ..Default::default() },
+        );
+        assert_eq!(g.graph, n.graph);
+    }
+}

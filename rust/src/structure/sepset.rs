@@ -1,0 +1,77 @@
+//! Separation-set bookkeeping for PC-stable.
+
+use crate::core::VarId;
+use std::collections::HashMap;
+
+/// Map from unordered pairs to the conditioning set that separated them.
+/// Needed by the orientation phase: `x - z - y` becomes the collider
+/// `x -> z <- y` iff `z` is *not* in sepset(x, y).
+#[derive(Clone, Debug, Default)]
+pub struct SepsetMap {
+    map: HashMap<(VarId, VarId), Vec<VarId>>,
+}
+
+impl SepsetMap {
+    pub fn new() -> Self {
+        SepsetMap::default()
+    }
+
+    fn key(a: VarId, b: VarId) -> (VarId, VarId) {
+        (a.min(b), a.max(b))
+    }
+
+    pub fn insert(&mut self, a: VarId, b: VarId, sepset: Vec<VarId>) {
+        self.map.insert(Self::key(a, b), sepset);
+    }
+
+    pub fn get(&self, a: VarId, b: VarId) -> Option<&[VarId]> {
+        self.map.get(&Self::key(a, b)).map(Vec::as_slice)
+    }
+
+    /// Does the recorded sepset of (a, b) contain `z`?
+    pub fn separates_with(&self, a: VarId, b: VarId, z: VarId) -> bool {
+        self.get(a, b).is_some_and(|s| s.contains(&z))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Merge another map (used to combine per-worker results).
+    pub fn merge(&mut self, other: SepsetMap) {
+        self.map.extend(other.map);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unordered_keys() {
+        let mut s = SepsetMap::new();
+        s.insert(3, 1, vec![2]);
+        assert_eq!(s.get(1, 3), Some(&[2][..]));
+        assert_eq!(s.get(3, 1), Some(&[2][..]));
+        assert!(s.separates_with(1, 3, 2));
+        assert!(!s.separates_with(1, 3, 4));
+        assert_eq!(s.get(0, 1), None);
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = SepsetMap::new();
+        a.insert(0, 1, vec![5]);
+        let mut b = SepsetMap::new();
+        b.insert(0, 1, vec![6]);
+        b.insert(2, 3, vec![]);
+        a.merge(b);
+        assert_eq!(a.get(0, 1), Some(&[6][..]));
+        assert_eq!(a.get(2, 3), Some(&[][..]));
+        assert_eq!(a.len(), 2);
+    }
+}

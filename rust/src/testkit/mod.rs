@@ -1,0 +1,188 @@
+//! In-repo property-based testing (the offline image has no proptest).
+//!
+//! [`property`] runs a closure over many deterministically generated cases
+//! from a seeded [`Pcg`]; on failure it reports the case index and seed so
+//! the exact case replays. Generators for the library's domain types live
+//! here too (random canonical potentials, random DAGs, random evidence),
+//! shared by unit tests, integration tests and the fuzz-ish invariant
+//! suites in `rust/tests/`.
+
+use crate::core::{Evidence, VarId};
+use crate::graph::Dag;
+use crate::network::{BayesianNetwork, synthetic::SyntheticSpec};
+use crate::potential::PotentialTable;
+use crate::rng::Pcg;
+
+/// Run `cases` generated test cases. The closure receives a per-case RNG
+/// (derived from `seed` + case index, so failures replay independently of
+/// how many draws earlier cases made) and should panic on violation.
+pub fn property(name: &str, seed: u64, cases: usize, mut body: impl FnMut(&mut Pcg)) {
+    for i in 0..cases {
+        let mut rng = Pcg::seed_from(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {i} (seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random sorted scope of `k` variables drawn from `0..universe`, with
+/// cardinalities in `2..=max_card`.
+pub fn gen_scope(
+    rng: &mut Pcg,
+    universe: usize,
+    k: usize,
+    max_card: usize,
+) -> (Vec<VarId>, Vec<usize>) {
+    let mut vars = rng.choose_k(universe, k);
+    vars.sort_unstable();
+    let cards = vars.iter().map(|_| rng.range(2, max_card + 1)).collect();
+    (vars, cards)
+}
+
+/// Random potential table with entries in `(0, 10)`.
+pub fn gen_potential(
+    rng: &mut Pcg,
+    universe: usize,
+    max_vars: usize,
+    max_card: usize,
+) -> PotentialTable {
+    let k = rng.range(0, max_vars + 1);
+    let (vars, cards) = gen_scope(rng, universe, k, max_card);
+    let mut t = PotentialTable::zeros(vars, cards);
+    for x in t.data_mut() {
+        *x = rng.next_f64() * 10.0 + 1e-3;
+    }
+    t
+}
+
+/// Pair of random potentials guaranteed to agree on shared cardinalities
+/// (drawn over a common universe with shared cardinality table).
+pub fn gen_potential_pair(
+    rng: &mut Pcg,
+    universe: usize,
+    max_vars: usize,
+    max_card: usize,
+) -> (PotentialTable, PotentialTable) {
+    let cards_of: Vec<usize> =
+        (0..universe).map(|_| rng.range(2, max_card + 1)).collect();
+    let draw = |rng: &mut Pcg| {
+        let k = rng.range(1, max_vars + 1);
+        let mut vars = rng.choose_k(universe, k);
+        vars.sort_unstable();
+        let cards: Vec<usize> = vars.iter().map(|&v| cards_of[v]).collect();
+        let mut t = PotentialTable::zeros(vars, cards);
+        for x in t.data_mut() {
+            *x = rng.next_f64() * 10.0 + 1e-3;
+        }
+        t
+    };
+    let a = draw(rng);
+    let b = draw(rng);
+    (a, b)
+}
+
+/// Random DAG over `n` nodes with max in-degree `max_parents`.
+pub fn gen_dag(rng: &mut Pcg, n: usize, max_parents: usize) -> Dag {
+    let mut d = Dag::new(n);
+    for v in 1..n {
+        let k = rng.range(0, max_parents.min(v) + 1);
+        for p in rng.choose_k(v, k) {
+            d.add_edge_unchecked(p, v);
+        }
+    }
+    d
+}
+
+/// Random small Bayesian network (for engine cross-checks).
+pub fn gen_network(rng: &mut Pcg, n: usize) -> BayesianNetwork {
+    let mut spec = SyntheticSpec::new("prop", n);
+    spec.card_range = (2, 3);
+    spec.max_in_degree = 3;
+    spec.generate(rng.next_u64())
+}
+
+/// Random evidence over `k` distinct variables of a network.
+pub fn gen_evidence(rng: &mut Pcg, net: &BayesianNetwork, k: usize) -> Evidence {
+    let vars = rng.choose_k(net.n_vars(), k);
+    vars.into_iter()
+        .map(|v| (v, rng.below(net.cardinality(v))))
+        .collect()
+}
+
+/// Assert two distributions are close in total variation.
+pub fn assert_close_dist(p: &[f64], q: &[f64], tol: f64, context: &str) {
+    let tv = crate::metrics::total_variation(p, q);
+    assert!(
+        tv <= tol,
+        "{context}: distributions differ (TV {tv:.5} > {tol}): {p:?} vs {q:?}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("counting", 1, 25, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_reports_failure() {
+        property("fails", 2, 10, |rng| {
+            assert!(rng.next_f64() < 0.5, "half the cases fail");
+        });
+    }
+
+    #[test]
+    fn generated_potentials_valid() {
+        let mut rng = Pcg::seed_from(3);
+        for _ in 0..50 {
+            let t = gen_potential(&mut rng, 8, 4, 4);
+            assert_eq!(t.len(), t.cards().iter().product::<usize>().max(1));
+            assert!(t.data().iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn generated_pairs_share_cards() {
+        let mut rng = Pcg::seed_from(4);
+        for _ in 0..50 {
+            let (a, b) = gen_potential_pair(&mut rng, 6, 3, 4);
+            for &v in a.vars() {
+                if let (Some(ca), Some(cb)) = (a.card_of(v), b.card_of(v)) {
+                    assert_eq!(ca, cb);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generated_dags_acyclic() {
+        let mut rng = Pcg::seed_from(5);
+        for _ in 0..20 {
+            let d = gen_dag(&mut rng, 12, 3);
+            assert!(d.topological_order().is_some());
+        }
+    }
+
+    #[test]
+    fn generated_evidence_in_range() {
+        let mut rng = Pcg::seed_from(6);
+        let net = gen_network(&mut rng, 10);
+        let ev = gen_evidence(&mut rng, &net, 3);
+        assert_eq!(ev.len(), 3);
+        for (v, s) in ev.iter() {
+            assert!(s < net.cardinality(v));
+        }
+    }
+}

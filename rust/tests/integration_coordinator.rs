@@ -1,0 +1,129 @@
+//! Coordinator under load: batching correctness, fairness, failure
+//! surfaces, and the full router over the real XLA artifact when present.
+
+use fastpgm::coordinator::{BatcherConfig, DynamicBatcher, Router};
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn batched_results_equal_unbatched() {
+    let net = repository::asia();
+    let class_var = net.var_index("bronc").unwrap();
+    let direct = ReferenceScorer::new(net.clone(), class_var, 32);
+    let batcher = DynamicBatcher::spawn(
+        ReferenceScorer::new(net.clone(), class_var, 32),
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(3) },
+    );
+
+    let mut rng = Pcg::seed_from(1);
+    let rows: Vec<Vec<u8>> = (0..64)
+        .map(|_| fastpgm::sampling::forward_sample(&net, &mut rng).values)
+        .collect();
+    // Fire all requests concurrently so they actually coalesce.
+    let receivers: Vec<_> = rows
+        .iter()
+        .map(|r| batcher.classify_async(r.clone()).unwrap())
+        .collect();
+    let batched: Vec<Vec<f64>> =
+        receivers.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    let unbatched = direct.score(&rows).unwrap();
+    for (i, (a, b)) in batched.iter().zip(&unbatched).enumerate() {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-12, "row {i}");
+        }
+    }
+    // Coalescing actually happened.
+    let m = batcher.metrics.lock().unwrap();
+    assert!(m.batches < 64, "expected coalescing, got {} batches", m.batches);
+}
+
+#[test]
+fn heavy_concurrency_no_loss() {
+    let net = repository::cancer();
+    let batcher = Arc::new(DynamicBatcher::spawn(
+        ReferenceScorer::new(net, 2, 64),
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(500) },
+    ));
+    let handles: Vec<_> = (0..16)
+        .map(|t| {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || {
+                let mut rng = Pcg::seed_from(t);
+                for _ in 0..100 {
+                    let row: Vec<u8> = (0..5).map(|_| rng.below(2) as u8).collect();
+                    let post = b.classify(row).unwrap();
+                    assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = batcher.metrics.lock().unwrap();
+    assert_eq!(m.requests, 1600);
+}
+
+#[test]
+fn router_isolates_models() {
+    let mut router = Router::new();
+    let asia = repository::asia();
+    let cv = asia.var_index("bronc").unwrap();
+    router.register("a", ReferenceScorer::new(asia, cv, 8), BatcherConfig::default());
+    router.register(
+        "b",
+        ReferenceScorer::new(repository::cancer(), 2, 8),
+        BatcherConfig::default(),
+    );
+    // Wrong-arity request to the right model fails; right-arity succeeds.
+    assert!(router.classify("a", vec![0; 5]).is_err());
+    assert!(router.classify("a", vec![0; 8]).is_ok());
+    assert!(router.classify("b", vec![0; 5]).is_ok());
+    let stats = router.stats();
+    assert_eq!(stats.per_model.len(), 2);
+}
+
+#[test]
+fn failed_factory_surfaces_error() {
+    let mut router = Router::new();
+    let result = router.register_with(
+        "broken",
+        Box::new(|| anyhow::bail!("artifact missing")),
+        BatcherConfig::default(),
+    );
+    assert!(result.is_err());
+    assert!(!router.has_model("broken"));
+}
+
+#[test]
+fn router_over_real_artifact() {
+    let Ok(bundle) = ArtifactBundle::locate(std::path::Path::new("artifacts"), "asia")
+    else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    };
+    let net = fastpgm::io::fpgm::load(&bundle.fpgm).unwrap();
+    let meta = bundle.read_meta().unwrap();
+    let mut router = Router::new();
+    router
+        .register_with(
+            "asia",
+            Box::new(move || Ok(Box::new(BatchScorer::load(&bundle)?) as _)),
+            BatcherConfig { max_batch: meta.batch, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+
+    let reference = ReferenceScorer::new(net.clone(), meta.class_var, meta.batch);
+    let mut rng = Pcg::seed_from(3);
+    for _ in 0..32 {
+        let row = fastpgm::sampling::forward_sample(&net, &mut rng).values;
+        let got = router.classify("asia", row.clone()).unwrap();
+        let want = &reference.score(&[row]).unwrap()[0];
+        for (x, y) in got.iter().zip(want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

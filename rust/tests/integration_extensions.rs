@@ -1,0 +1,161 @@
+//! Cross-subsystem integration for the extension features: d-separation
+//! against data-driven CI tests, MRF inference against the BN engines,
+//! MPE against posteriors, and score-based against constraint-based
+//! learning.
+
+use fastpgm::core::Evidence;
+use fastpgm::graph::d_separated;
+use fastpgm::inference::exact::{most_probable_explanation, JunctionTree};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::metrics::cpdag_of;
+use fastpgm::mrf::lbp::{run_lbp, MrfLbpOptions};
+use fastpgm::mrf::FactorGraph;
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{hill_climb, pc_stable, CiTester, HcOptions, PcOptions};
+use fastpgm::testkit::assert_close_dist;
+
+#[test]
+fn d_separation_predicts_ci_test_outcomes() {
+    // The graphical criterion and the statistical test must agree on
+    // sampled data (faithful networks, strong sample size).
+    let net = repository::survey();
+    let mut rng = Pcg::seed_from(41);
+    let data = forward_sample_dataset(&net, 40_000, &mut rng);
+    let tester = CiTester::new(&data);
+    let checks: &[(&str, &str, &[&str])] = &[
+        // (x, y, z): d-separated pairs…
+        ("age", "sex", &[]),
+        ("age", "occ", &["edu"]),
+        ("sex", "travel", &["edu"]),
+        ("age", "res", &["edu"]),
+        // …and d-connected ones (direct edges / collider opening; the
+        // indirect edu→travel dependence is too weak at α=0.001 for a
+        // 40k-row test — a finite-sample fact, not a d-sep bug).
+        ("age", "edu", &[]),
+        ("res", "travel", &[]),
+        ("age", "sex", &["edu"]), // collider opens
+    ];
+    for &(x, y, z) in checks {
+        let xi = net.var_index(x).unwrap();
+        let yi = net.var_index(y).unwrap();
+        let zi: Vec<usize> =
+            z.iter().map(|n| net.var_index(n).unwrap()).collect();
+        let dsep = d_separated(net.dag(), xi, yi, &zi);
+        let outcome = tester.test(xi, yi, &zi);
+        assert_eq!(
+            dsep,
+            outcome.independent(0.001),
+            "{x} ⟂ {y} | {z:?}: d-sep={dsep}, p={:.4}",
+            outcome.p_value
+        );
+    }
+}
+
+#[test]
+fn mrf_from_bn_matches_junction_tree() {
+    for name in ["cancer", "earthquake", "survey"] {
+        let net = repository::by_name(name).unwrap();
+        let fg = FactorGraph::from_bayesian_network(&net);
+        let ev = Evidence::new().with(2, 1);
+        let jt = JunctionTree::build(&net);
+        let exact = jt.engine().query_all(&ev);
+        let lbp = run_lbp(&fg, &ev, &MrfLbpOptions::default());
+        for v in 0..net.n_vars() {
+            if ev.contains(v) {
+                continue;
+            }
+            // Polytrees exact; survey's tree also exact.
+            assert_close_dist(&lbp.beliefs[v], &exact[v], 1e-3, &format!("{name} var {v}"));
+        }
+    }
+}
+
+#[test]
+fn mpe_assignment_has_maximal_probability_locally() {
+    // The MPE must not be improvable by any single-variable flip.
+    let net = repository::asia();
+    let ev = Evidence::new().with(net.var_index("xray").unwrap(), 1);
+    let result = most_probable_explanation(&net, &ev);
+    let base = net.joint_prob(&result.assignment);
+    assert!((base - result.probability).abs() < 1e-12);
+    for v in 0..net.n_vars() {
+        if ev.contains(v) {
+            continue;
+        }
+        for s in 0..net.cardinality(v) {
+            let mut alt = result.assignment.clone();
+            alt.set(v, s);
+            assert!(
+                net.joint_prob(&alt) <= base + 1e-12,
+                "flip of var {v} to {s} improves MPE"
+            );
+        }
+    }
+}
+
+#[test]
+fn hc_and_pc_agree_on_survey_skeleton() {
+    let net = repository::survey();
+    let mut rng = Pcg::seed_from(43);
+    let data = forward_sample_dataset(&net, 30_000, &mut rng);
+    let pc = pc_stable(&data, &PcOptions { alpha: 0.05, ..Default::default() });
+    let hc = hill_climb(&data, &HcOptions::default());
+    let hc_cpdag = cpdag_of(&hc.dag);
+    let pc_skel = pc.graph.skeleton();
+    let hc_skel = hc_cpdag.skeleton();
+    // The two paradigms agree on most edges of a faithful network.
+    let common = pc_skel
+        .edges()
+        .iter()
+        .filter(|&&(a, b)| hc_skel.has_edge(a, b))
+        .count();
+    assert!(
+        common >= pc_skel.n_edges().saturating_sub(1),
+        "PC {:?} vs HC {:?}",
+        pc_skel.edges(),
+        hc_skel.edges()
+    );
+}
+
+#[test]
+fn gibbs_agrees_with_jt_on_survey() {
+    use fastpgm::inference::approx::{ApproxOptions, GibbsSampling};
+    let net = repository::survey();
+    let ev = Evidence::new().with(net.var_index("travel").unwrap(), 0);
+    let jt = JunctionTree::build(&net);
+    let exact = jt.engine().query_all(&ev);
+    let mut gibbs = GibbsSampling::new(
+        &net,
+        ApproxOptions { n_samples: 40_000, threads: 2, ..Default::default() },
+    );
+    let got = gibbs.query_all(&ev);
+    for v in 0..net.n_vars() {
+        assert_close_dist(&got[v], &exact[v], 0.05, &format!("var {v}"));
+    }
+}
+
+#[test]
+fn map_cli_level_consistency() {
+    // With all-but-one variable observed, MPE of the free variable equals
+    // the argmax of its posterior.
+    let net = repository::cancer();
+    let free = 2usize; // cancer
+    let mut rng = Pcg::seed_from(47);
+    for _ in 0..10 {
+        let a = fastpgm::sampling::forward_sample(&net, &mut rng);
+        let ev: Evidence = (0..net.n_vars())
+            .filter(|&v| v != free)
+            .map(|v| (v, a.get(v)))
+            .collect();
+        let mpe = most_probable_explanation(&net, &ev);
+        let jt = JunctionTree::build(&net);
+        let post = jt.engine().query(free, &ev);
+        assert_eq!(
+            mpe.assignment.get(free),
+            fastpgm::classify::argmax(&post),
+            "MPE vs posterior argmax"
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-engine integration tests: every inference engine against the
+//! brute-force oracle and against each other, on built-in and random
+//! networks, with and without evidence, across thread counts.
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::{
+    AisBn, ApproxOptions, EpisBn, LikelihoodWeighting, LogicSampling, LoopyBp,
+    LoopyBpOptions, SelfImportance,
+};
+use fastpgm::inference::exact::{
+    CalibrationMode, JunctionTree, VariableElimination,
+};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::metrics::mean_hellinger;
+use fastpgm::network::repository;
+use fastpgm::testkit::{assert_close_dist, gen_evidence, gen_network, property};
+
+#[test]
+fn exact_engines_agree_on_random_networks() {
+    property("JT == VE == brute force", 201, 12, |rng| {
+        let net = gen_network(rng, 8);
+        let k = rng.below(3);
+        let ev = gen_evidence(rng, &net, k);
+        let jt = JunctionTree::build(&net);
+        let mut jte = jt.engine();
+        let mut ve = VariableElimination::new(&net);
+        for v in 0..net.n_vars() {
+            let truth = net.brute_force_posterior(v, &ev);
+            if truth.iter().sum::<f64>() == 0.0 {
+                continue; // inconsistent (zero-probability) evidence
+            }
+            assert_close_dist(&jte.query(v, &ev), &truth, 1e-7, "JT");
+            assert_close_dist(&ve.query(v, &ev), &truth, 1e-7, "VE");
+        }
+    });
+}
+
+#[test]
+fn jt_parallel_modes_agree_on_random_networks() {
+    property("JT parallel == sequential", 202, 8, |rng| {
+        let net = gen_network(rng, 12);
+        let ev = gen_evidence(rng, &net, 2);
+        let jt = JunctionTree::build(&net);
+        let expect = jt.engine().query_all(&ev);
+        for mode in [CalibrationMode::InterClique, CalibrationMode::Hybrid] {
+            let got = jt.parallel_engine(mode, 4).query_all(&ev);
+            for (e, g) in expect.iter().zip(&got) {
+                assert_close_dist(g, e, 1e-9, &format!("{mode:?}"));
+            }
+        }
+    });
+}
+
+#[test]
+fn all_samplers_converge_on_builtins() {
+    // Every sampling engine within Hellinger 0.05 of exact on every
+    // built-in network, moderate evidence.
+    for name in ["sprinkler", "cancer", "earthquake", "asia", "survey"] {
+        let net = repository::by_name(name).unwrap();
+        let ev = Evidence::new().with(0, 0);
+        let jt = JunctionTree::build(&net);
+        let truth = jt.engine().query_all(&ev);
+        let opts = ApproxOptions { n_samples: 60_000, threads: 4, ..Default::default() };
+
+        let posts: Vec<(&str, Vec<Vec<f64>>)> = vec![
+            ("pls", LogicSampling::new(&net, opts.clone()).query_all(&ev)),
+            ("lw", LikelihoodWeighting::new(&net, opts.clone()).query_all(&ev)),
+            ("sis", SelfImportance::new(&net, opts.clone()).query_all(&ev)),
+            ("ais", AisBn::new(&net, opts.clone()).query_all(&ev)),
+            ("epis", EpisBn::new(&net, opts.clone()).query_all(&ev)),
+        ];
+        for (engine, p) in posts {
+            let h = mean_hellinger(&p, &truth);
+            assert!(h < 0.05, "{engine} on {name}: mean Hellinger {h}");
+        }
+    }
+}
+
+#[test]
+fn lbp_exact_on_polytrees() {
+    // cancer and earthquake are polytrees: LBP must converge to exact.
+    for name in ["cancer", "earthquake"] {
+        let net = repository::by_name(name).unwrap();
+        let ev = Evidence::new().with(3, 1);
+        let jt = JunctionTree::build(&net);
+        let truth = jt.engine().query_all(&ev);
+        let mut bp = LoopyBp::new(&net, LoopyBpOptions::default());
+        let posts = bp.query_all(&ev);
+        assert!(bp.converged, "{name}: LBP did not converge");
+        for (p, t) in posts.iter().zip(&truth) {
+            assert_close_dist(p, t, 1e-4, name);
+        }
+    }
+}
+
+#[test]
+fn samplers_deterministic_across_thread_counts() {
+    let net = repository::asia();
+    let ev = Evidence::new().with(6, 1);
+    let run = |threads: usize| -> Vec<Vec<Vec<f64>>> {
+        let opts = ApproxOptions { n_samples: 12_000, threads, ..Default::default() };
+        vec![
+            LogicSampling::new(&net, opts.clone()).query_all(&ev),
+            LikelihoodWeighting::new(&net, opts.clone()).query_all(&ev),
+            SelfImportance::new(&net, opts.clone()).query_all(&ev),
+            AisBn::new(&net, opts.clone()).query_all(&ev),
+            EpisBn::new(&net, opts).query_all(&ev),
+        ]
+    };
+    assert_eq!(run(1), run(4), "thread count changed sampling results");
+}
+
+#[test]
+fn importance_samplers_beat_rejection_on_rare_evidence() {
+    // P(tub=yes, xray=no) ≈ 0.0003: rejection collapses, importance
+    // sampling survives. This is the headline property of AIS/EPIS.
+    let net = repository::asia();
+    let ev = Evidence::new()
+        .with(net.var_index("tub").unwrap(), 1)
+        .with(net.var_index("xray").unwrap(), 0);
+    let jt = JunctionTree::build(&net);
+    let truth = jt.engine().query_all(&ev);
+    let opts = ApproxOptions { n_samples: 50_000, ..Default::default() };
+
+    let h_pls =
+        mean_hellinger(&LogicSampling::new(&net, opts.clone()).query_all(&ev), &truth);
+    let h_ais = mean_hellinger(&AisBn::new(&net, opts.clone()).query_all(&ev), &truth);
+    let h_epis = mean_hellinger(&EpisBn::new(&net, opts).query_all(&ev), &truth);
+    assert!(
+        h_ais < h_pls && h_epis < h_pls,
+        "adaptive samplers must beat rejection: pls={h_pls:.4} ais={h_ais:.4} epis={h_epis:.4}"
+    );
+    assert!(h_ais < 0.05, "AIS-BN accurate on rare evidence: {h_ais:.4}");
+}
+
+#[test]
+fn query_all_consistent_with_query() {
+    let net = repository::survey();
+    let ev = Evidence::new().with(1, 0);
+    let jt = JunctionTree::build(&net);
+    let mut e = jt.engine();
+    let all = e.query_all(&ev);
+    for v in 0..net.n_vars() {
+        assert_close_dist(&e.query(v, &ev), &all[v], 1e-12, "query vs query_all");
+    }
+}
+
+#[test]
+fn evidence_probability_chain_rule() {
+    // P(e1, e2) = P(e1) * P(e2 | e1) via two calibrations.
+    let net = repository::asia();
+    let (smoke, xray) = (2usize, 6usize);
+    let jt = JunctionTree::build(&net);
+    let mut e = jt.engine();
+
+    e.calibrate(&Evidence::new().with(smoke, 1));
+    let p1 = e.evidence_probability();
+    let p2_given = e.query(xray, &Evidence::new().with(smoke, 1))[1];
+    e.calibrate(&Evidence::new().with(smoke, 1).with(xray, 1));
+    let joint = e.evidence_probability();
+    assert!((joint - p1 * p2_given).abs() < 1e-9);
+}
+
+#[test]
+fn larger_synthetic_network_jt_vs_ve() {
+    // alarm-scale network: too big for brute force; JT and VE must agree
+    // with each other.
+    let net = fastpgm::network::synthetic::SyntheticSpec::alarm_like().generate(5);
+    let ev = Evidence::new().with(3, 0).with(20, 1);
+    let jt = JunctionTree::build(&net);
+    let mut jte = jt.engine();
+    let mut ve = VariableElimination::new(&net);
+    for v in (0..net.n_vars()).step_by(5) {
+        let a = jte.query(v, &ev);
+        let b = ve.query(v, &ev);
+        assert_close_dist(&a, &b, 1e-7, &format!("var {v}"));
+    }
+}

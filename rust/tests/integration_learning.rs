@@ -1,0 +1,137 @@
+//! Structure + parameter learning integration: recovery quality scales
+//! with data, parallelism is exact, the full learn→infer pipeline closes.
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::InferenceEngine;
+use fastpgm::metrics::{shd_vs_dag_cpdag, skeleton_prf};
+use fastpgm::network::{repository, synthetic::SyntheticSpec};
+use fastpgm::parameter::{log_likelihood, mle, MleOptions};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{pc_stable, pc_stable_parallel, CountStrategy, PcOptions};
+
+#[test]
+fn shd_decreases_with_sample_size() {
+    let net = repository::survey();
+    let mut rng = Pcg::seed_from(42);
+    let big = forward_sample_dataset(&net, 50_000, &mut rng);
+    let opts = PcOptions { alpha: 0.05, ..Default::default() };
+
+    let mut shds = Vec::new();
+    for n in [500usize, 5_000, 50_000] {
+        let (sub, _) = big.split(n as f64 / 50_000.0);
+        let r = pc_stable(&sub, &opts);
+        shds.push(shd_vs_dag_cpdag(&r.graph, net.dag()));
+    }
+    assert!(
+        shds[2] <= shds[0],
+        "SHD should not grow with more data: {shds:?}"
+    );
+    assert_eq!(shds[2], 0, "survey fully recovered at 50k: {shds:?}");
+}
+
+#[test]
+fn parallel_pc_identical_across_thread_counts_and_networks() {
+    let mut rng = Pcg::seed_from(7);
+    for net in [repository::survey(), SyntheticSpec::child_like().generate(3)] {
+        let data = forward_sample_dataset(&net, 8_000, &mut rng);
+        let seq = pc_stable(&data, &PcOptions::default());
+        for threads in [2, 4, 8] {
+            let par = pc_stable_parallel(
+                &data,
+                &PcOptions { threads, chunk: 2, ..Default::default() },
+            );
+            assert_eq!(seq.graph, par.graph, "{}: t={threads}", net.name());
+            assert_eq!(seq.n_tests, par.n_tests);
+        }
+    }
+}
+
+#[test]
+fn counting_strategies_identical_results() {
+    let net = SyntheticSpec::child_like().generate(9);
+    let mut rng = Pcg::seed_from(11);
+    let data = forward_sample_dataset(&net, 6_000, &mut rng);
+    let grouped = pc_stable(&data, &PcOptions::default());
+    let naive = pc_stable(
+        &data,
+        &PcOptions { strategy: CountStrategy::Naive, ..Default::default() },
+    );
+    assert_eq!(grouped.graph, naive.graph);
+    assert_eq!(grouped.n_tests, naive.n_tests);
+}
+
+#[test]
+fn skeleton_recovery_scales_to_larger_networks() {
+    // alarm-scale synthetic: skeleton F1 >= 0.75 at 20k samples.
+    let net = SyntheticSpec::alarm_like().generate(2);
+    let mut rng = Pcg::seed_from(13);
+    let data = forward_sample_dataset(&net, 20_000, &mut rng);
+    let r = pc_stable_parallel(
+        &data,
+        &PcOptions { alpha: 0.05, threads: 4, ..Default::default() },
+    );
+    let (prec, rec, f1) = skeleton_prf(&r.graph, net.dag());
+    assert!(
+        f1 >= 0.75,
+        "alarm-scale skeleton F1 {f1:.3} (P {prec:.3} R {rec:.3})"
+    );
+}
+
+#[test]
+fn mle_likelihood_improves_with_data() {
+    let net = repository::asia();
+    let mut rng = Pcg::seed_from(17);
+    let test = forward_sample_dataset(&net, 10_000, &mut rng);
+    let mut prev = f64::NEG_INFINITY;
+    for n in [100usize, 1_000, 50_000] {
+        let train = forward_sample_dataset(&net, n, &mut rng);
+        let model = mle(&train, net.dag(), &MleOptions::default());
+        let ll = log_likelihood(&model, &test);
+        assert!(
+            ll >= prev - 50.0,
+            "held-out LL degraded with more data at n={n}: {ll} < {prev}"
+        );
+        prev = ll;
+    }
+    // And it approaches the generator's own likelihood.
+    let ll_truth = log_likelihood(&net, &test);
+    assert!((prev - ll_truth).abs() / ll_truth.abs() < 0.01);
+}
+
+#[test]
+fn full_pipeline_learn_then_infer() {
+    // learn structure + params on survey, then posterior matches the
+    // true network's posterior closely.
+    let truth = repository::survey();
+    let mut rng = Pcg::seed_from(19);
+    let data = forward_sample_dataset(&truth, 40_000, &mut rng);
+    let r = pc_stable_parallel(
+        &data,
+        &PcOptions { alpha: 0.05, threads: 4, ..Default::default() },
+    );
+    let dag = r.graph.to_dag().expect("extendable CPDAG");
+    let model = mle(&data, &dag, &MleOptions::default());
+
+    let jt = JunctionTree::build(&model);
+    let mut engine = jt.engine();
+    let ev = Evidence::new().with(0, 2); // age = old
+    for v in 0..truth.n_vars() {
+        let got = engine.query(v, &ev);
+        let want = truth.brute_force_posterior(v, &ev);
+        let h = fastpgm::metrics::hellinger(&got, &want);
+        assert!(h < 0.05, "var {v}: Hellinger {h:.4}");
+    }
+}
+
+#[test]
+fn ci_test_counts_are_reported() {
+    let net = repository::sprinkler();
+    let mut rng = Pcg::seed_from(23);
+    let data = forward_sample_dataset(&net, 5_000, &mut rng);
+    let r = pc_stable(&data, &PcOptions::default());
+    // Level 0 alone tests all 6 pairs.
+    assert!(r.n_tests >= 6);
+    assert!(r.levels >= 1);
+}

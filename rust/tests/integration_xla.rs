@@ -1,0 +1,120 @@
+//! The AOT bridge, end to end: artifacts compiled by the Python layer are
+//! loaded through PJRT and must agree numerically with (a) the pure-Rust
+//! reference scorer and (b) exact junction-tree inference.
+//!
+//! These tests require `make artifacts`; they are skipped (with a loud
+//! message) when the artifacts are missing so plain `cargo test` still
+//! passes in a fresh checkout.
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::InferenceEngine;
+use fastpgm::io::fpgm;
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn bundle_or_skip(name: &str) -> Option<ArtifactBundle> {
+    match ArtifactBundle::locate(artifacts_dir(), name) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn exported_fpgm_matches_builtin_network() {
+    let Some(bundle) = bundle_or_skip("asia") else { return };
+    let exported = fpgm::load(&bundle.fpgm).unwrap();
+    let builtin = repository::asia();
+    assert_eq!(exported.dag().edges(), builtin.dag().edges());
+    for v in 0..builtin.n_vars() {
+        assert_eq!(exported.cpt(v).table, builtin.cpt(v).table);
+    }
+}
+
+#[test]
+fn xla_scorer_matches_reference_scorer() {
+    for name in ["asia", "child_like", "alarm_like"] {
+        let Some(bundle) = bundle_or_skip(name) else { return };
+        let meta = bundle.read_meta().unwrap();
+        let scorer = BatchScorer::load(&bundle).unwrap();
+        let reference =
+            ReferenceScorer::new(scorer.net.clone(), meta.class_var, meta.batch);
+
+        let mut rng = Pcg::seed_from(99);
+        let rows: Vec<Vec<u8>> = (0..meta.batch.min(100))
+            .map(|_| {
+                fastpgm::sampling::forward_sample(&scorer.net, &mut rng).values
+            })
+            .collect();
+        let xla = scorer.score(&rows).unwrap();
+        let refp = reference.score(&rows).unwrap();
+        for (i, (a, b)) in xla.iter().zip(&refp).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{name} row {i}: XLA {a:?} vs reference {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_scorer_matches_exact_inference() {
+    let Some(bundle) = bundle_or_skip("asia") else { return };
+    let meta = bundle.read_meta().unwrap();
+    let scorer = BatchScorer::load(&bundle).unwrap();
+    let net = scorer.net.clone();
+    let jt = JunctionTree::build(&net);
+    let mut engine = jt.engine();
+
+    let mut rng = Pcg::seed_from(101);
+    for _ in 0..20 {
+        let a = fastpgm::sampling::forward_sample(&net, &mut rng);
+        let post = scorer.score(&[a.values.clone()]).unwrap().pop().unwrap();
+        let ev: Evidence = (0..net.n_vars())
+            .filter(|&v| v != meta.class_var)
+            .map(|v| (v, a.get(v)))
+            .collect();
+        let exact = engine.query(meta.class_var, &ev);
+        for (x, e) in post.iter().zip(&exact) {
+            assert!((x - e).abs() < 1e-4, "XLA {post:?} vs exact {exact:?}");
+        }
+    }
+}
+
+#[test]
+fn partial_batches_padded_correctly() {
+    let Some(bundle) = bundle_or_skip("asia") else { return };
+    let scorer = BatchScorer::load(&bundle).unwrap();
+    let mut rng = Pcg::seed_from(103);
+    let row = fastpgm::sampling::forward_sample(&scorer.net, &mut rng).values;
+    // 1-row and 3-row submissions must give the same posterior for the
+    // shared row (padding can't leak).
+    let single = scorer.score(std::slice::from_ref(&row)).unwrap();
+    let triple = scorer
+        .score(&[row.clone(), row.clone(), row.clone()])
+        .unwrap();
+    for k in 0..single[0].len() {
+        assert!((single[0][k] - triple[0][k]).abs() < 1e-9);
+        assert!((triple[1][k] - triple[2][k]).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let Some(bundle) = bundle_or_skip("asia") else { return };
+    let meta = bundle.read_meta().unwrap();
+    let scorer = BatchScorer::load(&bundle).unwrap();
+    let rows = vec![vec![0u8; meta.n_vars]; meta.batch + 1];
+    assert!(scorer.score(&rows).is_err());
+}

@@ -1,0 +1,195 @@
+//! Property-based invariant suites over the core algebra (via the in-repo
+//! `testkit` property harness — see DESIGN.md on the proptest
+//! substitution).
+
+use fastpgm::core::Evidence;
+use fastpgm::potential::ops::IndexMode;
+use fastpgm::potential::PotentialTable;
+use fastpgm::testkit::*;
+
+#[test]
+fn prop_product_commutative() {
+    property("product commutes", 101, 120, |rng| {
+        let (a, b) = gen_potential_pair(rng, 7, 3, 4);
+        let p1 = a.product(&b, IndexMode::Odometer);
+        let p2 = b.product(&a, IndexMode::Odometer);
+        assert_eq!(p1.vars(), p2.vars());
+        for (x, y) in p1.data().iter().zip(p2.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_product_modes_agree() {
+    property("odometer == naive decode (product)", 102, 120, |rng| {
+        let (a, b) = gen_potential_pair(rng, 7, 3, 4);
+        let p1 = a.product(&b, IndexMode::Odometer);
+        let p2 = a.product(&b, IndexMode::NaiveDecode);
+        for (x, y) in p1.data().iter().zip(p2.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_marginalize_modes_agree_and_preserve_mass() {
+    property("marginalize invariants", 103, 120, |rng| {
+        let t = gen_potential(rng, 8, 4, 4);
+        if t.vars().is_empty() {
+            return;
+        }
+        let keep: Vec<_> = t
+            .vars()
+            .iter()
+            .copied()
+            .filter(|_| rng.bool_with(0.5))
+            .collect();
+        let m1 = t.marginalize_keep(&keep, IndexMode::Odometer);
+        let m2 = t.marginalize_keep(&keep, IndexMode::NaiveDecode);
+        assert!((m1.sum() - t.sum()).abs() < 1e-6 * t.sum().max(1.0));
+        for (x, y) in m1.data().iter().zip(m2.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_marginalization_order_irrelevant() {
+    property("sum-out order irrelevant", 104, 80, |rng| {
+        let t = gen_potential(rng, 6, 3, 3);
+        if t.vars().len() < 2 {
+            return;
+        }
+        let v1 = t.vars()[0];
+        let v2 = t.vars()[1];
+        let a = t
+            .marginalize_out(v1, IndexMode::Odometer)
+            .marginalize_out(v2, IndexMode::Odometer);
+        let b = t
+            .marginalize_out(v2, IndexMode::Odometer)
+            .marginalize_out(v1, IndexMode::Odometer);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_multiply_then_divide_identity() {
+    property("x * s / s == x", 105, 100, |rng| {
+        let t = gen_potential(rng, 6, 3, 3);
+        if t.vars().is_empty() {
+            return;
+        }
+        // Build a strictly positive subset-scope table.
+        let keep: Vec<_> = t.vars().iter().copied().take(2).collect();
+        let mut sub = t.marginalize_keep(&keep, IndexMode::Odometer);
+        for x in sub.data_mut() {
+            *x += 0.1;
+        }
+        let mut w = t.clone();
+        w.multiply_subset(&sub, IndexMode::Odometer);
+        w.divide_subset(&sub, IndexMode::Odometer);
+        for (x, y) in w.data().iter().zip(t.data()) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    });
+}
+
+#[test]
+fn prop_evidence_reduction_idempotent() {
+    property("evidence reduction idempotent", 106, 100, |rng| {
+        let mut t = gen_potential(rng, 6, 3, 3);
+        if t.vars().is_empty() {
+            return;
+        }
+        let v = t.vars()[rng.below(t.vars().len())];
+        let s = rng.below(t.card_of(v).unwrap());
+        let ev = Evidence::new().with(v, s);
+        t.reduce_evidence(&ev);
+        let once = t.clone();
+        t.reduce_evidence(&ev);
+        assert_eq!(t, once);
+    });
+}
+
+#[test]
+fn prop_joint_probabilities_sum_to_one() {
+    property("Σ_x P(x) == 1", 107, 30, |rng| {
+        let net = gen_network(rng, 7);
+        // Sum the joint over all assignments via the scalar marginal.
+        let total = net.brute_force_posterior(0, &Evidence::new());
+        assert!((total.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // And the joint really factorizes: forward samples have positive
+        // probability.
+        let mut r2 = rng.clone();
+        let a = fastpgm::sampling::forward_sample(&net, &mut r2);
+        assert!(net.joint_prob(&a) > 0.0);
+    });
+}
+
+#[test]
+fn prop_dag_cpdag_shd_zero() {
+    property("SHD(cpdag(G), cpdag(G)) == 0", 108, 50, |rng| {
+        let d = gen_dag(rng, 10, 3);
+        let c = fastpgm::metrics::cpdag_of(&d);
+        assert_eq!(fastpgm::metrics::shd(&c, &c.clone()), 0);
+    });
+}
+
+#[test]
+fn prop_topo_order_respects_edges() {
+    property("topological order", 109, 80, |rng| {
+        let d = gen_dag(rng, 12, 4);
+        let order = d.topological_order().expect("generated DAGs are acyclic");
+        let mut pos = vec![0; 12];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v] = i;
+        }
+        for (f, t) in d.edges() {
+            assert!(pos[f] < pos[t]);
+        }
+    });
+}
+
+#[test]
+fn prop_family_potential_rows_normalized() {
+    property("family potentials are CPDs", 110, 30, |rng| {
+        let net = gen_network(rng, 8);
+        for v in 0..net.n_vars() {
+            let f = net.family_potential(v);
+            // Summing out the child gives the all-ones table over parents.
+            let m = f.marginalize_out(v, IndexMode::Odometer);
+            for &x in m.data() {
+                assert!((x - 1.0).abs() < 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_evidence_api() {
+    property("evidence set/get/remove", 111, 100, |rng| {
+        let mut ev = Evidence::new();
+        let mut model = std::collections::BTreeMap::new();
+        for _ in 0..20 {
+            let v = rng.below(10);
+            match rng.below(3) {
+                0 | 1 => {
+                    let s = rng.below(4);
+                    ev.set(v, s);
+                    model.insert(v, s);
+                }
+                _ => {
+                    ev.remove(v);
+                    model.remove(&v);
+                }
+            }
+        }
+        assert_eq!(ev.len(), model.len());
+        for (&v, &s) in &model {
+            assert_eq!(ev.get(v), Some(s));
+        }
+    });
+}
