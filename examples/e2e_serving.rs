@@ -1,171 +1,302 @@
-//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//! END-TO-END DRIVER: the serving stack on real workloads.
 //!
-//! Loads the AOT-compiled XLA artifact (L1 Pallas kernel inside the L2
-//! JAX classify graph, lowered at build time), serves a concurrent stream
-//! of classification requests through the L3 coordinator (router + dynamic
-//! batcher + PJRT executor), and cross-checks every returned posterior
-//! against both the pure-Rust scorer and exact junction-tree inference.
-//! Reports latency/throughput and writes the numbers EXPERIMENTS.md §E2E
-//! records.
+//! Two serving paths run here:
 //!
-//! Requires `make artifacts`. Run:
-//! `cargo run --release --example e2e_serving [-- --requests 4096 --clients 8]`
+//! 1. **Posterior-query serving (pure Rust, always available)** — a
+//!    [`QueryRouter`] over compiled junction trees with an LRU calibration
+//!    cache, hammered by concurrent clients whose evidence repeats (the
+//!    shape of production traffic). Every sampled response is cross-checked
+//!    against a freshly built junction tree at 1e-12.
+//! 2. **Classification serving (requires `--features xla-runtime` + `make
+//!    artifacts`)** — the original three-layer path: L1 Pallas kernel in
+//!    the L2 JAX classify graph, AOT-lowered and executed through PJRT by
+//!    the L3 coordinator, cross-checked against the pure-Rust scorer and
+//!    exact inference.
+//!
+//! Run: `cargo run --release --example e2e_serving [-- --requests 4096 --clients 8]`
 
 use fastpgm::cli::Args;
-use fastpgm::classify::argmax;
-use fastpgm::coordinator::{BatcherConfig, Router};
+use fastpgm::coordinator::{BatcherConfig, QueryRequest, QueryRouter};
 use fastpgm::core::Evidence;
-use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::exact::{JunctionTree, QueryEngineConfig};
 use fastpgm::inference::InferenceEngine;
-use fastpgm::io::fpgm;
+use fastpgm::network::repository;
 use fastpgm::rng::Pcg;
-use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
-use std::path::Path;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let requests = args.parse_flag("requests", 4096usize);
-    let clients = args.parse_flag("clients", 8usize);
-    let artifacts = Path::new("artifacts");
+    query_serving_demo(&args)?;
 
-    let mut report = String::new();
-    for name in ["asia", "child_like", "alarm_like"] {
-        let bundle = match ArtifactBundle::locate(artifacts, name) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("skipping {name}: {e} (run `make artifacts`)");
-                continue;
-            }
-        };
-        let meta = bundle.read_meta()?;
-        let net = fpgm::load(&bundle.fpgm)?;
-        println!(
-            "\n=== {name}: {} vars, class={} ({} states), batch={} ===",
-            meta.n_vars,
-            net.variable(meta.class_var).name,
-            meta.n_classes,
-            meta.batch
-        );
+    #[cfg(feature = "xla-runtime")]
+    xla_demo::run(&args)?;
+    #[cfg(not(feature = "xla-runtime"))]
+    eprintln!(
+        "\n(xla classify section skipped: rebuild with --features xla-runtime \
+         and run `make artifacts` to exercise the PJRT path)"
+    );
 
-        // -- L3 coordinator over the L1/L2 XLA artifact ------------------
-        let mut router = Router::new();
-        let b2 = bundle.clone();
-        router.register_with(
-            name,
-            Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
-            BatcherConfig { max_batch: meta.batch, max_wait: Duration::from_millis(1) },
-        )?;
-
-        // -- concurrent request stream ----------------------------------
-        let router = Arc::new(router);
-        let net_arc = Arc::new(net.clone());
-        let t0 = Instant::now();
-        let per_client = requests / clients;
-        let handles: Vec<_> = (0..clients)
-            .map(|c| {
-                let router = Arc::clone(&router);
-                let net = Arc::clone(&net_arc);
-                let name = name.to_string();
-                std::thread::spawn(move || {
-                    let mut rng = Pcg::seed_from(1000 + c as u64);
-                    let mut correct = 0usize;
-                    let mut posts = Vec::with_capacity(per_client);
-                    for _ in 0..per_client {
-                        let a = fastpgm::sampling::forward_sample(&net, &mut rng);
-                        let post = router.classify(&name, a.values.clone()).unwrap();
-                        if argmax(&post) == a.get(net.var_index_class()) {
-                            correct += 1;
-                        }
-                        posts.push((a, post));
-                    }
-                    (correct, posts)
-                })
-            })
-            .collect();
-        let mut correct = 0usize;
-        let mut all: Vec<(fastpgm::core::Assignment, Vec<f64>)> = Vec::new();
-        for h in handles {
-            let (c, posts) = h.join().unwrap();
-            correct += c;
-            all.extend(posts);
-        }
-        let elapsed = t0.elapsed();
-        let served = per_client * clients;
-        let stats = router.stats();
-        let m = &stats.per_model[0].1;
-        println!(
-            "served {served} requests from {clients} clients in {elapsed:.2?} \
-             -> {:.0} req/s end-to-end",
-            served as f64 / elapsed.as_secs_f64()
-        );
-        println!("  {}", m.summary());
-        println!(
-            "  argmax accuracy vs sampled ground truth: {:.3}",
-            correct as f64 / served as f64
-        );
-
-        // -- numerical cross-checks --------------------------------------
-        // (a) XLA posterior == pure-Rust scorer posterior.
-        let reference = ReferenceScorer::new(net.clone(), meta.class_var, meta.batch);
-        let sample_rows: Vec<Vec<u8>> =
-            all.iter().take(64).map(|(a, _)| a.values.clone()).collect();
-        let ref_posts = reference.score(&sample_rows)?;
-        let mut max_dev: f64 = 0.0;
-        for ((_, xla_post), ref_post) in all.iter().take(64).zip(&ref_posts) {
-            for (x, r) in xla_post.iter().zip(ref_post) {
-                max_dev = max_dev.max((x - r).abs());
-            }
-        }
-        println!("  max |XLA - rust-reference| over 64 posteriors: {max_dev:.2e}");
-        assert!(max_dev < 1e-4, "XLA scorer deviates from reference");
-
-        // (b) Scorer posterior == exact junction-tree posterior (full
-        //     evidence makes them mathematically identical).
-        let jt = JunctionTree::build(&net);
-        let mut engine = jt.engine();
-        let mut max_dev_jt: f64 = 0.0;
-        for (a, xla_post) in all.iter().take(16) {
-            let ev: Evidence = (0..net.n_vars())
-                .filter(|&v| v != meta.class_var)
-                .map(|v| (v, a.get(v)))
-                .collect();
-            let exact = engine.query(meta.class_var, &ev);
-            for (x, e) in xla_post.iter().zip(&exact) {
-                max_dev_jt = max_dev_jt.max((x - e).abs());
-            }
-        }
-        println!("  max |XLA - junction tree| over 16 posteriors: {max_dev_jt:.2e}");
-        assert!(max_dev_jt < 1e-3, "XLA scorer deviates from exact inference");
-
-        report.push_str(&format!(
-            "{name}: {:.0} req/s e2e, exec {:.0} req/s, p95 {}µs, acc {:.3}, dev(ref) {max_dev:.1e}, dev(jt) {max_dev_jt:.1e}\n",
-            served as f64 / elapsed.as_secs_f64(),
-            m.exec_throughput(),
-            m.latency_percentile_us(95.0),
-            correct as f64 / served as f64,
-        ));
-    }
-    println!("\n== summary ==\n{report}");
-    println!("e2e_serving OK");
+    println!("\ne2e_serving OK");
     Ok(())
 }
 
-/// Helper trait so the closure above can fetch the class var without
-/// capturing meta.
-trait ClassVarExt {
-    fn var_index_class(&self) -> usize;
+/// Concurrent posterior-query serving over the query router, with repeated
+/// evidence (cache-friendly traffic) and exact cross-checks.
+fn query_serving_demo(args: &Args) -> anyhow::Result<()> {
+    let requests = args.parse_flag("requests", 4096usize);
+    let clients = args.parse_flag("clients", 8usize).max(1);
+    let pool_size = args.parse_flag("evidence-pool", 24usize).max(1);
+
+    println!("=== posterior-query serving (compiled trees + calibration cache) ===");
+    let mut router = QueryRouter::new(fastpgm::parallel::default_threads());
+    let mut models = Vec::new();
+    for name in ["asia", "child_like", "alarm_like"] {
+        let net = repository::by_name_extended(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?;
+        router.register(
+            name,
+            &net,
+            QueryEngineConfig { cache_capacity: 128, ..Default::default() },
+            BatcherConfig::default(),
+        );
+        models.push((name.to_string(), net));
+    }
+
+    // Bounded per-model evidence pools: serving traffic repeats itself.
+    let mut rng = Pcg::seed_from(42);
+    let pools: Vec<Vec<Evidence>> = models
+        .iter()
+        .map(|(_, net)| fastpgm::testkit::gen_evidence_pool(&mut rng, net, pool_size, 2))
+        .collect();
+
+    let router = Arc::new(router);
+    let models = Arc::new(models);
+    let pools = Arc::new(pools);
+    let per_client = requests / clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let router = Arc::clone(&router);
+            let models = Arc::clone(&models);
+            let pools = Arc::clone(&pools);
+            std::thread::spawn(move || -> anyhow::Result<Vec<(usize, Evidence, usize, Vec<f64>)>> {
+                let mut rng = Pcg::seed_from(7_000 + c as u64);
+                let mut sampled = Vec::new();
+                for i in 0..per_client {
+                    let m = (c + i) % models.len();
+                    let (name, net) = &models[m];
+                    let ev = pools[m][rng.below(pools[m].len())].clone();
+                    let var = fastpgm::testkit::gen_query_var(&mut rng, net, &ev);
+                    let p = router
+                        .query(name, QueryRequest::marginal(var, ev.clone()))?
+                        .into_marginal()
+                        .ok_or_else(|| anyhow::anyhow!("wrong reply variant"))?;
+                    // Keep a sparse sample for the exactness cross-check.
+                    if i % 97 == 0 {
+                        sampled.push((m, ev, var, p));
+                    }
+                }
+                Ok(sampled)
+            })
+        })
+        .collect();
+    let mut sampled = Vec::new();
+    for h in handles {
+        sampled.extend(h.join().expect("client thread panicked")?);
+    }
+    let elapsed = t0.elapsed();
+    let served = per_client * clients;
+    println!(
+        "served {served} posterior queries from {clients} clients in {elapsed:.2?} \
+         -> {:.0} queries/s end-to-end",
+        served as f64 / elapsed.as_secs_f64()
+    );
+    for (model, stats) in router.stats() {
+        println!(
+            "  {model}: {} | cache hit_rate={:.3} (hits={} misses={} evictions={})",
+            stats.serving.summary(),
+            stats.cache.hit_rate(),
+            stats.cache.hits,
+            stats.cache.misses,
+            stats.cache.evictions
+        );
+    }
+
+    // Cross-check: served posteriors == freshly built junction tree, to
+    // within 1e-12 (the cache must be bit-compatible with cold inference).
+    let mut max_dev: f64 = 0.0;
+    let fresh: Vec<_> = models
+        .iter()
+        .map(|(_, net)| JunctionTree::build(net))
+        .collect();
+    let mut engines: Vec<_> = fresh.iter().map(|jt| jt.engine()).collect();
+    for (m, ev, var, p) in &sampled {
+        let expect = engines[*m].query(*var, ev);
+        for (x, y) in p.iter().zip(&expect) {
+            max_dev = max_dev.max((x - y).abs());
+        }
+    }
+    println!(
+        "  max |served - fresh junction tree| over {} sampled posteriors: {max_dev:.2e}",
+        sampled.len()
+    );
+    anyhow::ensure!(max_dev <= 1e-12, "cached serving deviates from cold inference");
+    Ok(())
 }
 
-impl ClassVarExt for fastpgm::network::BayesianNetwork {
-    fn var_index_class(&self) -> usize {
-        // The exported artifacts use bronc for asia and the last topo node
-        // for synthetic networks; recompute the same rule.
-        if let Some(v) = self.var_index("bronc") {
+/// The original XLA classify path, gated on the `xla-runtime` feature.
+#[cfg(feature = "xla-runtime")]
+mod xla_demo {
+    use fastpgm::cli::Args;
+    use fastpgm::classify::argmax;
+    use fastpgm::coordinator::{BatcherConfig, Router};
+    use fastpgm::core::Evidence;
+    use fastpgm::inference::exact::JunctionTree;
+    use fastpgm::inference::InferenceEngine;
+    use fastpgm::io::fpgm;
+    use fastpgm::rng::Pcg;
+    use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
+    use std::path::Path;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    pub fn run(args: &Args) -> anyhow::Result<()> {
+        let requests = args.parse_flag("requests", 4096usize);
+        let clients = args.parse_flag("clients", 8usize).max(1);
+        let artifacts = Path::new("artifacts");
+
+        let mut report = String::new();
+        for name in ["asia", "child_like", "alarm_like"] {
+            let bundle = match ArtifactBundle::locate(artifacts, name) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("skipping {name}: {e} (run `make artifacts`)");
+                    continue;
+                }
+            };
+            let meta = bundle.read_meta()?;
+            let net = fpgm::load(&bundle.fpgm)?;
+            println!(
+                "\n=== {name}: {} vars, class={} ({} states), batch={} ===",
+                meta.n_vars,
+                net.variable(meta.class_var).name,
+                meta.n_classes,
+                meta.batch
+            );
+
+            // -- L3 coordinator over the L1/L2 XLA artifact ------------------
+            let mut router = Router::new();
+            let b2 = bundle.clone();
+            router.register_with(
+                name,
+                Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
+                BatcherConfig {
+                    max_batch: meta.batch,
+                    max_wait: Duration::from_millis(1),
+                },
+            )?;
+
+            // -- concurrent request stream ----------------------------------
+            let router = Arc::new(router);
+            let net_arc = Arc::new(net.clone());
+            let t0 = Instant::now();
+            let per_client = requests / clients;
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let router = Arc::clone(&router);
+                    let net = Arc::clone(&net_arc);
+                    let name = name.to_string();
+                    std::thread::spawn(move || {
+                        let mut rng = Pcg::seed_from(1000 + c as u64);
+                        let mut correct = 0usize;
+                        let mut posts = Vec::with_capacity(per_client);
+                        for _ in 0..per_client {
+                            let a = fastpgm::sampling::forward_sample(&net, &mut rng);
+                            let post = router.classify(&name, a.values.clone()).unwrap();
+                            if argmax(&post) == a.get(class_var_of(&net)) {
+                                correct += 1;
+                            }
+                            posts.push((a, post));
+                        }
+                        (correct, posts)
+                    })
+                })
+                .collect();
+            let mut correct = 0usize;
+            let mut all: Vec<(fastpgm::core::Assignment, Vec<f64>)> = Vec::new();
+            for h in handles {
+                let (c, posts) = h.join().unwrap();
+                correct += c;
+                all.extend(posts);
+            }
+            let elapsed = t0.elapsed();
+            let served = per_client * clients;
+            let stats = router.stats();
+            let m = &stats.per_model[0].1;
+            println!(
+                "served {served} requests from {clients} clients in {elapsed:.2?} \
+                 -> {:.0} req/s end-to-end",
+                served as f64 / elapsed.as_secs_f64()
+            );
+            println!("  {}", m.summary());
+            println!(
+                "  argmax accuracy vs sampled ground truth: {:.3}",
+                correct as f64 / served as f64
+            );
+
+            // -- numerical cross-checks --------------------------------------
+            // (a) XLA posterior == pure-Rust scorer posterior.
+            let reference = ReferenceScorer::new(net.clone(), meta.class_var, meta.batch);
+            let sample_rows: Vec<Vec<u8>> =
+                all.iter().take(64).map(|(a, _)| a.values.clone()).collect();
+            let ref_posts = reference.score(&sample_rows)?;
+            let mut max_dev: f64 = 0.0;
+            for ((_, xla_post), ref_post) in all.iter().take(64).zip(&ref_posts) {
+                for (x, r) in xla_post.iter().zip(ref_post) {
+                    max_dev = max_dev.max((x - r).abs());
+                }
+            }
+            println!("  max |XLA - rust-reference| over 64 posteriors: {max_dev:.2e}");
+            assert!(max_dev < 1e-4, "XLA scorer deviates from reference");
+
+            // (b) Scorer posterior == exact junction-tree posterior (full
+            //     evidence makes them mathematically identical).
+            let jt = JunctionTree::build(&net);
+            let mut engine = jt.engine();
+            let mut max_dev_jt: f64 = 0.0;
+            for (a, xla_post) in all.iter().take(16) {
+                let ev: Evidence = (0..net.n_vars())
+                    .filter(|&v| v != meta.class_var)
+                    .map(|v| (v, a.get(v)))
+                    .collect();
+                let exact = engine.query(meta.class_var, &ev);
+                for (x, e) in xla_post.iter().zip(&exact) {
+                    max_dev_jt = max_dev_jt.max((x - e).abs());
+                }
+            }
+            println!("  max |XLA - junction tree| over 16 posteriors: {max_dev_jt:.2e}");
+            assert!(max_dev_jt < 1e-3, "XLA scorer deviates from exact inference");
+
+            report.push_str(&format!(
+                "{name}: {:.0} req/s e2e, exec {:.0} req/s, p95 {}µs, acc {:.3}, dev(ref) {max_dev:.1e}, dev(jt) {max_dev_jt:.1e}\n",
+                served as f64 / elapsed.as_secs_f64(),
+                m.exec_throughput(),
+                m.latency_percentile_us(95.0),
+                correct as f64 / served as f64,
+            ));
+        }
+        println!("\n== xla classify summary ==\n{report}");
+        Ok(())
+    }
+
+    /// The exported artifacts use bronc for asia and the last topo node
+    /// for synthetic networks; recompute the same rule.
+    fn class_var_of(net: &fastpgm::network::BayesianNetwork) -> usize {
+        if let Some(v) = net.var_index("bronc") {
             v
         } else {
-            *self.topological_order().last().unwrap()
+            *net.topological_order().last().unwrap()
         }
     }
 }

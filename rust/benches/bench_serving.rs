@@ -1,0 +1,188 @@
+//! Serving-path bench — posterior-query throughput through the three
+//! serving strategies, writing the perf trajectory to `BENCH_serving.json`:
+//!
+//! * `rebuild`   — what the seed's serving layer did for general queries:
+//!   build the junction tree from scratch (moralize + triangulate +
+//!   assign) for *every* request, then calibrate and read the marginal.
+//! * `compiled`  — the compile-vs-query split: one [`CompiledTree`] per
+//!   network, one calibration per request (no cache).
+//! * `cached`    — the full [`QueryEngine`]: compiled tree + LRU
+//!   calibration cache keyed on the evidence signature.
+//!
+//! Traffic model: a bounded pool of distinct evidence sets cycled across
+//! requests (serving traffic repeats itself), rotating query targets.
+//! The cached mode's results are cross-checked against per-query rebuilds
+//! at 1e-12 — the cache must be bit-compatible with cold inference.
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, report, Measurement};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{
+    CompiledTree, JunctionTree, QueryEngine, QueryEngineConfig,
+};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::{repository, BayesianNetwork};
+use fastpgm::rng::Pcg;
+use fastpgm::testkit;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const QUERIES: usize = 256;
+const EVIDENCE_POOL: usize = 16;
+const CACHE_CAPACITY: usize = 64;
+
+/// The request stream: (evidence, query var) pairs with pool reuse,
+/// drawn from the shared serving-traffic model in `testkit`.
+fn workload(net: &BayesianNetwork, seed: u64) -> Vec<(Evidence, usize)> {
+    let mut rng = Pcg::seed_from(seed);
+    let pool = testkit::gen_evidence_pool(&mut rng, net, EVIDENCE_POOL, 2);
+    (0..QUERIES)
+        .map(|i| {
+            let ev = pool[i % pool.len()].clone();
+            let var = testkit::gen_query_var(&mut rng, net, &ev);
+            (ev, var)
+        })
+        .collect()
+}
+
+/// Run one strategy over the stream, returning per-query posteriors and
+/// latencies.
+fn drive(
+    stream: &[(Evidence, usize)],
+    mut answer: impl FnMut(&Evidence, usize) -> Vec<f64>,
+) -> (Vec<Vec<f64>>, Vec<Duration>) {
+    let mut posts = Vec::with_capacity(stream.len());
+    let mut latencies = Vec::with_capacity(stream.len());
+    for (ev, var) in stream {
+        let t0 = Instant::now();
+        let p = answer(ev, *var);
+        latencies.push(t0.elapsed());
+        posts.push(p);
+    }
+    (posts, latencies)
+}
+
+fn scenario_json(
+    net: &str,
+    mode: &str,
+    latencies: &[Duration],
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let total: f64 = latencies.iter().map(Duration::as_secs_f64).sum();
+    let m = Measurement { label: mode.to_string(), samples: latencies.to_vec() };
+    let mut pairs = vec![
+        ("net", Json::str(net)),
+        ("mode", Json::str(mode)),
+        ("queries", Json::num(latencies.len() as f64)),
+        ("throughput_qps", Json::num(latencies.len() as f64 / total.max(1e-12))),
+        ("p50_us", Json::num(m.percentile(50.0).as_secs_f64() * 1e6)),
+        ("p99_us", Json::num(m.percentile(99.0).as_secs_f64() * 1e6)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn main() {
+    println!("== serving: posterior-query throughput (rebuild vs compiled vs cached) ==");
+    let mut scenarios: Vec<Json> = Vec::new();
+    for name in ["asia", "child_like", "alarm_like"] {
+        let net = repository::by_name_extended(name).expect("known network");
+        let stream = workload(&net, 0xBEEF ^ name.len() as u64);
+
+        // 1. Per-query tree rebuild (the pre-split serving cost).
+        let (rebuild_posts, rebuild_lat) = drive(&stream, |ev, var| {
+            let jt = JunctionTree::build(&net);
+            let mut engine = jt.engine();
+            engine.query(var, ev)
+        });
+
+        // 2. Compiled once, calibrated per query (no cache).
+        let compiled = CompiledTree::compile(&net);
+        let (compiled_posts, compiled_lat) =
+            drive(&stream, |ev, var| compiled.calibrate(ev).posterior(var));
+
+        // 3. Compiled + LRU calibration cache (the QueryEngine).
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { cache_capacity: CACHE_CAPACITY, ..Default::default() },
+        );
+        let (cached_posts, cached_lat) =
+            drive(&stream, |ev, var| engine.posterior(var, ev));
+        let cache_stats = engine.stats();
+
+        // Bit-compatibility: cached and compiled paths must reproduce the
+        // cold rebuild to within 1e-12.
+        let mut dev_cached: f64 = 0.0;
+        let mut dev_compiled: f64 = 0.0;
+        for ((a, b), c) in rebuild_posts.iter().zip(&cached_posts).zip(&compiled_posts) {
+            for ((x, y), z) in a.iter().zip(b).zip(c) {
+                dev_cached = dev_cached.max((x - y).abs());
+                dev_compiled = dev_compiled.max((x - z).abs());
+            }
+        }
+        assert!(
+            dev_cached <= 1e-12 && dev_compiled <= 1e-12,
+            "{name}: serving deviates from cold inference \
+             (cached {dev_cached:.2e}, compiled {dev_compiled:.2e})"
+        );
+
+        let total = |lat: &[Duration]| -> f64 {
+            lat.iter().map(Duration::as_secs_f64).sum()
+        };
+        let speedup_compiled = total(&rebuild_lat) / total(&compiled_lat).max(1e-12);
+        let speedup_cached = total(&rebuild_lat) / total(&cached_lat).max(1e-12);
+
+        report(
+            &format!("{name} ({} vars, {QUERIES} queries, pool={EVIDENCE_POOL})", net.n_vars()),
+            &[
+                Measurement { label: format!("{name} rebuild/query"), samples: rebuild_lat.clone() },
+                Measurement { label: format!("{name} compiled tree"), samples: compiled_lat.clone() },
+                Measurement { label: format!("{name} cached (QueryEngine)"), samples: cached_lat.clone() },
+            ],
+        );
+        println!(
+            "  speedup vs rebuild: compiled {speedup_compiled:.1}x, cached {speedup_cached:.1}x \
+             (cache hit rate {:.3}); max dev cached {dev_cached:.1e}",
+            cache_stats.hit_rate()
+        );
+        if speedup_cached < 2.0 {
+            println!("  WARNING: cached speedup below the 2x serving target");
+        }
+
+        scenarios.push(scenario_json(name, "rebuild", &rebuild_lat, vec![]));
+        scenarios.push(scenario_json(
+            name,
+            "compiled",
+            &compiled_lat,
+            vec![("speedup_vs_rebuild", Json::num(speedup_compiled))],
+        ));
+        scenarios.push(scenario_json(
+            name,
+            "cached",
+            &cached_lat,
+            vec![
+                ("speedup_vs_rebuild", Json::num(speedup_cached)),
+                ("cache_hit_rate", Json::num(cache_stats.hit_rate())),
+                ("cache_hits", Json::num(cache_stats.hits as f64)),
+                ("cache_misses", Json::num(cache_stats.misses as f64)),
+                ("max_abs_dev_vs_rebuild", Json::num(dev_cached)),
+            ],
+        ));
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("serving")),
+        (
+            "config",
+            Json::obj([
+                ("queries", Json::num(QUERIES as f64)),
+                ("evidence_pool", Json::num(EVIDENCE_POOL as f64)),
+                ("cache_capacity", Json::num(CACHE_CAPACITY as f64)),
+            ]),
+        ),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    let path = Path::new("BENCH_serving.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_serving.json");
+    println!("\nwrote {}", path.display());
+}

@@ -3,110 +3,138 @@
 //! junction-tree inference, across batch fills. Also measures the
 //! coordinator's end-to-end overhead (batcher + channels) on top of raw
 //! executor calls.
+//!
+//! Requires the `xla-runtime` feature *and* `make artifacts`; without the
+//! feature this target compiles to a loud no-op so plain CI builds stay
+//! green.
 
-use fastpgm::benchkit::{bench, report, throughput, Measurement};
-use fastpgm::coordinator::{BatcherConfig, Router};
-use fastpgm::core::Evidence;
-use fastpgm::inference::exact::JunctionTree;
-use fastpgm::inference::InferenceEngine;
-use fastpgm::rng::Pcg;
-use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
-use std::path::Path;
-use std::time::Duration;
-
+#[cfg(not(feature = "xla-runtime"))]
 fn main() {
-    println!("== E9: batched XLA scorer vs rust baselines ==");
-    for name in ["asia", "child_like", "alarm_like"] {
-        let Ok(bundle) = ArtifactBundle::locate(Path::new("artifacts"), name) else {
-            println!("SKIP {name}: artifacts missing (run `make artifacts`)");
-            continue;
-        };
-        let meta = bundle.read_meta().unwrap();
-        let scorer = match BatchScorer::load(&bundle) {
-            Ok(s) => s,
-            Err(e) => {
-                println!("SKIP {name}: {e:#}");
+    println!("SKIP bench_xla_scorer: built without the xla-runtime feature");
+}
+
+#[cfg(feature = "xla-runtime")]
+fn main() {
+    xla_bench::run();
+}
+
+#[cfg(feature = "xla-runtime")]
+mod xla_bench {
+    use fastpgm::benchkit::{bench, report, throughput, Measurement};
+    use fastpgm::coordinator::{BatcherConfig, Router};
+    use fastpgm::core::Evidence;
+    use fastpgm::inference::exact::JunctionTree;
+    use fastpgm::inference::InferenceEngine;
+    use fastpgm::rng::Pcg;
+    use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
+    use std::path::Path;
+    use std::time::Duration;
+
+    pub fn run() {
+        println!("== E9: batched XLA scorer vs rust baselines ==");
+        for name in ["asia", "child_like", "alarm_like"] {
+            let Ok(bundle) = ArtifactBundle::locate(Path::new("artifacts"), name) else {
+                println!("SKIP {name}: artifacts missing (run `make artifacts`)");
                 continue;
+            };
+            let meta = bundle.read_meta().unwrap();
+            let scorer = match BatchScorer::load(&bundle) {
+                Ok(s) => s,
+                Err(e) => {
+                    println!("SKIP {name}: {e:#}");
+                    continue;
+                }
+            };
+            let net = scorer.net.clone();
+            let reference = ReferenceScorer::new(net.clone(), meta.class_var, meta.batch);
+
+            let mut rng = Pcg::seed_from(909);
+            let rows: Vec<Vec<u8>> = (0..meta.batch)
+                .map(|_| fastpgm::sampling::forward_sample(&net, &mut rng).values)
+                .collect();
+
+            let mut results: Vec<Measurement> = Vec::new();
+            for fill in [meta.batch / 4, meta.batch] {
+                let chunk = &rows[..fill];
+                results.push(bench(
+                    format!("{name} rust reference, {fill} rows"),
+                    1,
+                    5,
+                    || reference.score(chunk).unwrap(),
+                ));
+                results.push(bench(
+                    format!("{name} XLA artifact, {fill} rows"),
+                    1,
+                    5,
+                    || scorer.score(chunk).unwrap(),
+                ));
             }
-        };
-        let net = scorer.net.clone();
-        let reference = ReferenceScorer::new(net.clone(), meta.class_var, meta.batch);
-
-        let mut rng = Pcg::seed_from(909);
-        let rows: Vec<Vec<u8>> = (0..meta.batch)
-            .map(|_| fastpgm::sampling::forward_sample(&net, &mut rng).values)
-            .collect();
-
-        let mut results: Vec<Measurement> = Vec::new();
-        for fill in [meta.batch / 4, meta.batch] {
-            let chunk = &rows[..fill];
+            // Per-query junction tree (what a non-batched exact server does).
+            let jt = JunctionTree::build(&net);
+            let mut engine = jt.engine();
+            let q_rows = &rows[..16.min(rows.len())];
             results.push(bench(
-                format!("{name} rust reference, {fill} rows"),
-                1,
-                5,
-                || reference.score(chunk).unwrap(),
+                format!("{name} per-query junction tree, 16 rows"),
+                0,
+                3,
+                || {
+                    q_rows
+                        .iter()
+                        .map(|row| {
+                            let ev: Evidence = (0..net.n_vars())
+                                .filter(|&v| v != meta.class_var)
+                                .map(|v| (v, row[v] as usize))
+                                .collect();
+                            engine.query(meta.class_var, &ev)
+                        })
+                        .collect::<Vec<_>>()
+                },
             ));
-            results.push(bench(
-                format!("{name} XLA artifact, {fill} rows"),
+            report(
+                &format!("{name} (batch={}, K={})", meta.batch, meta.n_classes),
+                &results,
+            );
+            // Throughput summary for the full-batch XLA row.
+            if let Some(m) = results.iter().find(|m| {
+                m.label.contains("XLA") && m.label.contains(&format!("{} rows", meta.batch))
+            }) {
+                println!(
+                    "  XLA full-batch throughput: {:.0} posteriors/s",
+                    throughput(meta.batch, m.median())
+                );
+            }
+
+            // Coordinator overhead: batched pipeline end-to-end.
+            let mut router = Router::new();
+            let b2 = bundle.clone();
+            router
+                .register_with(
+                    name,
+                    Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
+                    BatcherConfig {
+                        max_batch: meta.batch,
+                        max_wait: Duration::from_micros(500),
+                    },
+                )
+                .unwrap();
+            let n_requests = rows.len();
+            let m = bench(
+                format!("{name} coordinator e2e, {n_requests} async requests"),
                 1,
-                5,
-                || scorer.score(chunk).unwrap(),
-            ));
-        }
-        // Per-query junction tree (what a non-batched exact server does).
-        let jt = JunctionTree::build(&net);
-        let mut engine = jt.engine();
-        let q_rows = &rows[..16.min(rows.len())];
-        results.push(bench(
-            format!("{name} per-query junction tree, 16 rows"),
-            0,
-            3,
-            || {
-                q_rows
-                    .iter()
-                    .map(|row| {
-                        let ev: Evidence = (0..net.n_vars())
-                            .filter(|&v| v != meta.class_var)
-                            .map(|v| (v, row[v] as usize))
-                            .collect();
-                        engine.query(meta.class_var, &ev)
-                    })
-                    .collect::<Vec<_>>()
-            },
-        ));
-        report(
-            &format!("{name} (batch={}, K={})", meta.batch, meta.n_classes),
-            &results,
-        );
-        // Throughput summary for the full-batch XLA row.
-        if let Some(m) = results.iter().find(|m| m.label.contains("XLA") && m.label.contains(&format!("{} rows", meta.batch))) {
+                3,
+                || {
+                    let rxs: Vec<_> = rows
+                        .iter()
+                        .map(|r| router.classify_async(name, r.clone()).unwrap())
+                        .collect();
+                    rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect::<Vec<_>>()
+                },
+            );
             println!(
-                "  XLA full-batch throughput: {:.0} posteriors/s",
-                throughput(meta.batch, m.median())
+                "  coordinator e2e: {} median for {n_requests} requests ({:.0} req/s)",
+                fastpgm::benchkit::fmt_duration(m.median()),
+                throughput(n_requests, m.median())
             );
         }
-
-        // Coordinator overhead: batched pipeline end-to-end.
-        let mut router = Router::new();
-        let b2 = bundle.clone();
-        router
-            .register_with(
-                name,
-                Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
-                BatcherConfig { max_batch: meta.batch, max_wait: Duration::from_micros(500) },
-            )
-            .unwrap();
-        let m = bench(format!("{name} coordinator e2e, 256 async requests"), 1, 3, || {
-            let rxs: Vec<_> = rows
-                .iter()
-                .map(|r| router.classify_async(name, r.clone()).unwrap())
-                .collect();
-            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect::<Vec<_>>()
-        });
-        println!(
-            "  coordinator e2e: {} median for 256 requests ({:.0} req/s)",
-            fastpgm::benchkit::fmt_duration(m.median()),
-            throughput(256, m.median())
-        );
     }
 }

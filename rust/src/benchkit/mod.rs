@@ -27,9 +27,17 @@ impl Measurement {
     }
 
     pub fn p95(&self) -> Duration {
+        self.percentile(95.0)
+    }
+
+    /// Arbitrary percentile (p in [0, 100]) over the samples.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
         let mut s = self.samples.clone();
         s.sort_unstable();
-        let i = ((s.len() as f64 * 0.95) as usize).min(s.len() - 1);
+        let i = ((s.len() as f64 * p / 100.0) as usize).min(s.len() - 1);
         s[i]
     }
 }
@@ -89,6 +97,136 @@ pub fn fmt_duration(d: Duration) -> String {
 /// Throughput helper: items per second from a measured median.
 pub fn throughput(items: usize, d: Duration) -> f64 {
     items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+/// Minimal JSON emission for the `BENCH_*.json` perf-trajectory files (the
+/// offline image carries no serde). Values are built as trees of
+/// [`json::Json`] and serialized with [`json::write`]; numbers that are
+/// not finite serialize as `null` so downstream tooling never sees `NaN`.
+pub mod json {
+    use std::fmt;
+    use std::io::Write as _;
+    use std::path::Path;
+
+    /// A JSON value.
+    #[derive(Clone, Debug)]
+    pub enum Json {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Json>),
+        /// Insertion-ordered object.
+        Obj(Vec<(String, Json)>),
+    }
+
+    impl Json {
+        pub fn num(x: f64) -> Json {
+            Json::Num(x)
+        }
+
+        pub fn str(s: impl Into<String>) -> Json {
+            Json::Str(s.into())
+        }
+
+        pub fn obj<I, K>(pairs: I) -> Json
+        where
+            I: IntoIterator<Item = (K, Json)>,
+            K: Into<String>,
+        {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+        }
+    }
+
+    fn escape(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("\"")?;
+        for c in s.chars() {
+            match c {
+                '"' => f.write_str("\\\"")?,
+                '\\' => f.write_str("\\\\")?,
+                '\n' => f.write_str("\\n")?,
+                '\t' => f.write_str("\\t")?,
+                '\r' => f.write_str("\\r")?,
+                c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+                c => write!(f, "{c}")?,
+            }
+        }
+        f.write_str("\"")
+    }
+
+    impl fmt::Display for Json {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                Json::Null => f.write_str("null"),
+                Json::Bool(b) => write!(f, "{b}"),
+                Json::Num(x) if x.is_finite() => write!(f, "{x}"),
+                Json::Num(_) => f.write_str("null"),
+                Json::Str(s) => escape(s, f),
+                Json::Arr(items) => {
+                    f.write_str("[")?;
+                    for (i, v) in items.iter().enumerate() {
+                        if i > 0 {
+                            f.write_str(",")?;
+                        }
+                        write!(f, "{v}")?;
+                    }
+                    f.write_str("]")
+                }
+                Json::Obj(pairs) => {
+                    f.write_str("{")?;
+                    for (i, (k, v)) in pairs.iter().enumerate() {
+                        if i > 0 {
+                            f.write_str(",")?;
+                        }
+                        escape(k, f)?;
+                        f.write_str(":")?;
+                        write!(f, "{v}")?;
+                    }
+                    f.write_str("}")
+                }
+            }
+        }
+    }
+
+    /// Write a value to `path` with a trailing newline.
+    pub fn write(path: &Path, value: &Json) -> std::io::Result<()> {
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{value}")
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn serializes_nested() {
+            let v = Json::obj([
+                ("name", Json::str("serving")),
+                ("qps", Json::num(1234.5)),
+                ("nan", Json::num(f64::NAN)),
+                ("rows", Json::Arr(vec![Json::num(1.0), Json::Bool(true), Json::Null])),
+            ]);
+            assert_eq!(
+                v.to_string(),
+                r#"{"name":"serving","qps":1234.5,"nan":null,"rows":[1,true,null]}"#
+            );
+        }
+
+        #[test]
+        fn escapes_strings() {
+            let v = Json::str("a\"b\\c\nd");
+            assert_eq!(v.to_string(), "\"a\\\"b\\\\c\\nd\"");
+        }
+
+        #[test]
+        fn writes_file() {
+            let path = std::env::temp_dir().join("fastpgm_benchkit_json_test.json");
+            write(&path, &Json::obj([("ok", Json::Bool(true))])).unwrap();
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(text.trim(), r#"{"ok":true}"#);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,18 +1,44 @@
-//! The serving coordinator: request router + dynamic batcher over the
-//! AOT-compiled batch scorer (vLLM-router-style L3 component).
+//! The serving coordinator: request routing + dynamic batching for both
+//! serving workloads (vLLM-router-style L3 component).
 //!
-//! Clients submit single classification requests; the [`DynamicBatcher`]
-//! accumulates them until the artifact's native batch size is full or a
-//! deadline expires, executes one PJRT call, and distributes the results.
-//! A [`Router`] fronts several batchers (one per loaded model) and keeps
-//! serving metrics. Everything is plain threads + channels — no async
-//! runtime exists in the offline image, and none is needed at these
-//! request rates.
+//! * **Classify path** — clients submit single classification requests;
+//!   the [`DynamicBatcher`] accumulates them until the artifact's native
+//!   batch size is full or a deadline expires, executes one scorer call,
+//!   and distributes the results. A [`Router`] fronts several batchers
+//!   (one per loaded model).
+//! * **Query path** — arbitrary posterior/MAP queries go through a
+//!   [`QueryRouter`]: each flush is grouped by evidence signature so one
+//!   (usually cached) calibration answers every query in the group, and
+//!   groups fan out over a shared [`crate::parallel::WorkPool`].
+//!
+//! Everything is plain threads + channels — no async runtime exists in
+//! the offline image, and none is needed at these request rates.
 
 mod batcher;
 mod metrics;
+mod query_router;
 mod router;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::ServingMetrics;
+pub use query_router::{
+    QueryModelStats, QueryReply, QueryRequest, QueryRouter, QueryService, QueryTarget,
+};
 pub use router::{Router, RouterStats};
+
+/// Shared registration bookkeeping for both routers: insert under `name`,
+/// warn on stderr when an existing registration was replaced (its `what` —
+/// batcher or query service — is dropped, aborting in-flight work), and
+/// report the replacement to the caller.
+pub(crate) fn register_model<T>(
+    models: &mut std::collections::HashMap<String, T>,
+    name: String,
+    value: T,
+    what: &str,
+) -> bool {
+    let replaced = models.insert(name.clone(), value).is_some();
+    if replaced {
+        eprintln!("coordinator: model {name:?} re-registered; previous {what} replaced");
+    }
+    replaced
+}

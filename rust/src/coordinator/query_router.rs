@@ -1,0 +1,444 @@
+//! General posterior-query serving: router + evidence-grouping dynamic
+//! batcher over the shared [`WorkPool`].
+//!
+//! This is the second serving path next to the classify path
+//! ([`super::Router`]): arbitrary `P(var | evidence)` / `P(evidence)` /
+//! all-marginals queries against any registered network, answered by a
+//! cached [`QueryEngine`]. The batcher exploits the shape of serving
+//! traffic twice over:
+//!
+//! 1. **Dynamic batching** — requests accumulate briefly (like the
+//!    classify batcher), so bursts are handled per flush, not per request.
+//! 2. **Evidence grouping** — each flush is grouped by evidence signature;
+//!    one calibration (usually a cache hit) answers every query in the
+//!    group. Groups fan out over the coordinator-wide [`WorkPool`], so
+//!    distinct evidence sets calibrate concurrently.
+
+use crate::core::{Evidence, VarId};
+use crate::inference::exact::{QueryEngine, QueryEngineConfig, QueryEngineStats};
+use crate::inference::Posterior;
+use crate::network::BayesianNetwork;
+use crate::parallel::WorkPool;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+use super::{BatcherConfig, ServingMetrics};
+
+/// What a query asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryTarget {
+    /// Posterior of one variable.
+    Marginal(VarId),
+    /// Posteriors of every variable.
+    All,
+    /// The probability of the evidence itself.
+    EvidenceProbability,
+}
+
+/// One posterior query.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    pub evidence: Evidence,
+    pub target: QueryTarget,
+}
+
+impl QueryRequest {
+    /// Single-variable marginal query.
+    pub fn marginal(var: VarId, evidence: Evidence) -> QueryRequest {
+        QueryRequest { evidence, target: QueryTarget::Marginal(var) }
+    }
+
+    /// All-marginals query.
+    pub fn all(evidence: Evidence) -> QueryRequest {
+        QueryRequest { evidence, target: QueryTarget::All }
+    }
+}
+
+/// Answer to a [`QueryRequest`] (variant matches the target).
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryReply {
+    Marginal(Posterior),
+    All(Vec<Posterior>),
+    EvidenceProbability(f64),
+}
+
+impl QueryReply {
+    /// The single marginal, if this was a [`QueryTarget::Marginal`] query.
+    pub fn into_marginal(self) -> Option<Posterior> {
+        match self {
+            QueryReply::Marginal(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+struct PendingQuery {
+    request: QueryRequest,
+    enqueued: Instant,
+    reply: SyncSender<QueryReply>,
+}
+
+/// Per-model serving loop: dynamic batching + evidence grouping over one
+/// [`QueryEngine`]. Spawned and owned by a [`QueryRouter`] (use the router
+/// unless embedding a single model).
+pub struct QueryService {
+    tx: Sender<PendingQuery>,
+    worker: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    engine: Arc<QueryEngine>,
+    pub metrics: Arc<Mutex<ServingMetrics>>,
+    n_vars: usize,
+    cards: Vec<usize>,
+}
+
+impl QueryService {
+    /// Spawn the batching thread. Calibration work is executed on `pool`.
+    pub fn spawn(
+        engine: Arc<QueryEngine>,
+        pool: Arc<WorkPool>,
+        config: BatcherConfig,
+    ) -> QueryService {
+        let net = engine.network();
+        let n_vars = net.n_vars();
+        let cards: Vec<usize> = (0..n_vars).map(|v| net.cardinality(v)).collect();
+        let (tx, rx) = mpsc::channel::<PendingQuery>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let worker = {
+            let engine = Arc::clone(&engine);
+            let stop = Arc::clone(&stop);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("fastpgm-query-batcher".into())
+                .spawn(move || Self::run(engine, pool, config, rx, stop, metrics))
+                .expect("failed to spawn query batcher thread")
+        };
+        QueryService { tx, worker: Some(worker), stop, engine, metrics, n_vars, cards }
+    }
+
+    fn run(
+        engine: Arc<QueryEngine>,
+        pool: Arc<WorkPool>,
+        config: BatcherConfig,
+        rx: Receiver<PendingQuery>,
+        stop: Arc<AtomicBool>,
+        metrics: Arc<Mutex<ServingMetrics>>,
+    ) {
+        let cap = config.max_batch.max(1);
+        let mut queue: Vec<PendingQuery> = Vec::new();
+        loop {
+            if queue.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }
+            let deadline = queue[0].enqueued + config.max_wait;
+            while queue.len() < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Group the flush by evidence signature: one calibration (and
+            // usually one cache lookup) per distinct evidence set.
+            let mut groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
+            for p in queue.drain(..) {
+                groups.entry(p.request.evidence.clone()).or_default().push(p);
+            }
+            for (evidence, members) in groups {
+                let engine = Arc::clone(&engine);
+                let metrics = Arc::clone(&metrics);
+                pool.execute(move || {
+                    // Time the whole unit of work — calibration (or cache
+                    // hit) plus every member's marginalization — so the
+                    // reported exec/latency match what clients waited for.
+                    let t0 = Instant::now();
+                    let calibrated = engine.calibrated(&evidence);
+                    let answers: Vec<QueryReply> = members
+                        .iter()
+                        .map(|p| match p.request.target {
+                            QueryTarget::Marginal(v) => {
+                                QueryReply::Marginal(calibrated.posterior(v))
+                            }
+                            QueryTarget::All => QueryReply::All(calibrated.posterior_all()),
+                            QueryTarget::EvidenceProbability => {
+                                QueryReply::EvidenceProbability(
+                                    calibrated.evidence_probability(),
+                                )
+                            }
+                        })
+                        .collect();
+                    let exec = t0.elapsed();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.record_batch(members.len(), exec);
+                        for p in &members {
+                            m.record_latency(p.enqueued.elapsed());
+                        }
+                    }
+                    for (p, answer) in members.into_iter().zip(answers) {
+                        let _ = p.reply.send(answer);
+                    }
+                });
+            }
+        }
+    }
+
+    fn validate(&self, request: &QueryRequest) -> anyhow::Result<()> {
+        if let QueryTarget::Marginal(v) = request.target {
+            anyhow::ensure!(v < self.n_vars, "query variable {v} out of range");
+        }
+        for (v, s) in request.evidence.iter() {
+            anyhow::ensure!(v < self.n_vars, "evidence variable {v} out of range");
+            anyhow::ensure!(
+                s < self.cards[v],
+                "evidence state {s} out of range for variable {v}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Submit one query and block for the reply.
+    pub fn query(&self, request: QueryRequest) -> anyhow::Result<QueryReply> {
+        let rx = self.query_async(request)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("query batcher dropped request"))
+    }
+
+    /// Submit asynchronously; returns a receiver for the reply.
+    pub fn query_async(
+        &self,
+        request: QueryRequest,
+    ) -> anyhow::Result<Receiver<QueryReply>> {
+        self.validate(&request)?;
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(PendingQuery { request, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("query batcher stopped"))?;
+        Ok(reply_rx)
+    }
+
+    /// The engine backing this service (cache stats, direct access).
+    pub fn engine(&self) -> &Arc<QueryEngine> {
+        &self.engine
+    }
+}
+
+impl Drop for QueryService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Snapshot of one model's query-serving state.
+#[derive(Clone, Debug)]
+pub struct QueryModelStats {
+    pub serving: ServingMetrics,
+    pub cache: QueryEngineStats,
+}
+
+/// Routes posterior queries by model name to per-model [`QueryService`]s,
+/// all sharing one calibration [`WorkPool`].
+pub struct QueryRouter {
+    // Field order matters for drop: services stop accepting + join their
+    // batcher threads first, then the pool drains and joins its workers.
+    models: HashMap<String, QueryService>,
+    pool: Arc<WorkPool>,
+}
+
+impl QueryRouter {
+    /// Create a router whose calibrations run on `threads` pool workers.
+    pub fn new(threads: usize) -> QueryRouter {
+        QueryRouter { models: HashMap::new(), pool: Arc::new(WorkPool::new(threads)) }
+    }
+
+    /// Register (or replace) a model. Returns `true` when an existing
+    /// registration under this name was replaced — same contract as
+    /// [`super::Router::register`].
+    pub fn register(
+        &mut self,
+        name: impl Into<String>,
+        net: &BayesianNetwork,
+        engine_config: QueryEngineConfig,
+        batcher_config: BatcherConfig,
+    ) -> bool {
+        let engine = Arc::new(QueryEngine::with_config(net, engine_config));
+        let service = QueryService::spawn(engine, Arc::clone(&self.pool), batcher_config);
+        super::register_model(&mut self.models, name.into(), service, "query service")
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    fn service(&self, model: &str) -> anyhow::Result<&QueryService> {
+        self.models
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))
+    }
+
+    /// Blocking query against a named model.
+    pub fn query(&self, model: &str, request: QueryRequest) -> anyhow::Result<QueryReply> {
+        self.service(model)?.query(request)
+    }
+
+    /// Async query against a named model.
+    pub fn query_async(
+        &self,
+        model: &str,
+        request: QueryRequest,
+    ) -> anyhow::Result<Receiver<QueryReply>> {
+        self.service(model)?.query_async(request)
+    }
+
+    /// Convenience: blocking single-variable posterior.
+    pub fn posterior(
+        &self,
+        model: &str,
+        var: VarId,
+        evidence: Evidence,
+    ) -> anyhow::Result<Posterior> {
+        match self.query(model, QueryRequest::marginal(var, evidence))? {
+            QueryReply::Marginal(p) => Ok(p),
+            other => anyhow::bail!("unexpected reply variant {other:?}"),
+        }
+    }
+
+    /// Per-model serving + cache stats, sorted by model name.
+    pub fn stats(&self) -> Vec<(String, QueryModelStats)> {
+        let mut out: Vec<(String, QueryModelStats)> = self
+            .models
+            .iter()
+            .map(|(name, s)| {
+                (
+                    name.clone(),
+                    QueryModelStats {
+                        serving: s.metrics.lock().unwrap().clone(),
+                        cache: s.engine().stats(),
+                    },
+                )
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    fn router() -> QueryRouter {
+        let mut r = QueryRouter::new(2);
+        r.register(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        r.register(
+            "cancer",
+            &repository::cancer(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        r
+    }
+
+    #[test]
+    fn routes_and_answers() {
+        let r = router();
+        assert_eq!(r.models(), vec!["asia", "cancer"]);
+        let ev = Evidence::new().with(0, 1);
+        let p = r.posterior("asia", 5, ev.clone()).unwrap();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let reply = r.query("cancer", QueryRequest::all(ev)).unwrap();
+        match reply {
+            QueryReply::All(ps) => assert_eq!(ps.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_model_and_bad_requests_error() {
+        let r = router();
+        assert!(r.posterior("nope", 0, Evidence::new()).is_err());
+        // Out-of-range query variable.
+        assert!(r.posterior("asia", 99, Evidence::new()).is_err());
+        // Out-of-range evidence state.
+        let bad = Evidence::new().with(0, 7);
+        assert!(r.posterior("asia", 1, bad).is_err());
+    }
+
+    #[test]
+    fn register_reports_replacement() {
+        let mut r = QueryRouter::new(1);
+        let replaced = r.register(
+            "m",
+            &repository::sprinkler(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        assert!(!replaced);
+        let replaced = r.register(
+            "m",
+            &repository::cancer(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        assert!(replaced);
+        assert_eq!(r.models(), vec!["m"]);
+        // The replacement actually serves the new network (5 vars).
+        let reply = r.query("m", QueryRequest::all(Evidence::new())).unwrap();
+        match reply {
+            QueryReply::All(ps) => assert_eq!(ps.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn evidence_probability_target() {
+        let r = router();
+        let net = repository::asia();
+        let xray = net.var_index("xray").unwrap();
+        let ev = Evidence::new().with(xray, 1);
+        let reply = r
+            .query(
+                "asia",
+                QueryRequest { evidence: ev.clone(), target: QueryTarget::EvidenceProbability },
+            )
+            .unwrap();
+        let p_marg = net.brute_force_posterior(xray, &Evidence::new())[1];
+        match reply {
+            QueryReply::EvidenceProbability(p) => {
+                assert!((p - p_marg).abs() < 1e-9, "{p} vs {p_marg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -23,28 +23,35 @@ impl Router {
         Router::default()
     }
 
-    /// Register a model from a `Send` scorer.
+    /// Register a model from a `Send` scorer. Returns `true` when an
+    /// existing registration under this name was replaced (its batcher is
+    /// stopped and dropped) — callers that expect a fresh name should
+    /// treat `true` as a configuration error worth surfacing.
     pub fn register<S: Scorer + Send + 'static>(
         &mut self,
         name: impl Into<String>,
         scorer: S,
         config: BatcherConfig,
-    ) {
-        self.models
-            .insert(name.into(), DynamicBatcher::spawn(scorer, config));
+    ) -> bool {
+        super::register_model(
+            &mut self.models,
+            name.into(),
+            DynamicBatcher::spawn(scorer, config),
+            "batcher",
+        )
     }
 
     /// Register a model from a thread-affine scorer factory (the XLA
-    /// path). Fails if the factory fails (e.g. missing artifacts).
+    /// path). Fails if the factory fails (e.g. missing artifacts); on
+    /// success returns `true` when an existing registration was replaced.
     pub fn register_with(
         &mut self,
         name: impl Into<String>,
         factory: ScorerFactory,
         config: BatcherConfig,
-    ) -> anyhow::Result<()> {
-        self.models
-            .insert(name.into(), DynamicBatcher::spawn_with(factory, config)?);
-        Ok(())
+    ) -> anyhow::Result<bool> {
+        let batcher = DynamicBatcher::spawn_with(factory, config)?;
+        Ok(super::register_model(&mut self.models, name.into(), batcher, "batcher"))
     }
 
     pub fn models(&self) -> Vec<&str> {
@@ -122,6 +129,29 @@ mod tests {
         assert_eq!(p2.len(), 2);
         assert_eq!(r.n_vars("asia"), Some(8));
         assert_eq!(r.n_vars("cancer"), Some(5));
+    }
+
+    #[test]
+    fn register_reports_replacement() {
+        let mut r = Router::new();
+        let asia = repository::asia();
+        let cv = asia.var_index("bronc").unwrap();
+        let first = r.register(
+            "m",
+            ReferenceScorer::new(asia.clone(), cv, 8),
+            BatcherConfig::default(),
+        );
+        assert!(!first, "first registration must not report replacement");
+        let second = r.register(
+            "m",
+            ReferenceScorer::new(repository::cancer(), 2, 8),
+            BatcherConfig::default(),
+        );
+        assert!(second, "re-registration must report replacement");
+        assert_eq!(r.models(), vec!["m"]);
+        // The replacement actually serves the new model (5-var cancer).
+        assert_eq!(r.n_vars("m"), Some(5));
+        assert!(r.classify("m", vec![0; 5]).is_ok());
     }
 
     #[test]

@@ -41,8 +41,10 @@ impl Assignment {
 
 /// Partial evidence: observed `(variable, state)` pairs kept sorted by
 /// variable id. Small (a handful of observations in typical queries), so a
-/// sorted vector beats hash maps on both speed and determinism.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// sorted vector beats hash maps on both speed and determinism. The sorted
+/// representation is canonical, so derived equality/hashing give a stable
+/// *evidence signature* — the serving layer keys calibration caches on it.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
 pub struct Evidence {
     pairs: Vec<(VarId, usize)>,
 }

@@ -1,0 +1,200 @@
+//! The compile-vs-query split for serving exact inference.
+//!
+//! [`JunctionTree::build`] is the expensive part of junction-tree
+//! inference: moralization, triangulation, clique assignment and root
+//! selection. None of it depends on the evidence, so a serving system
+//! should pay it **once per network**, not once per query. This module
+//! packages that split (the OpenGM "reusable inference engine" / PGMax
+//! "build once, run many" pattern):
+//!
+//! * [`CompiledTree`] — an `Arc`-shared, cheaply cloneable compiled
+//!   artifact. Thread-safe: any number of threads can calibrate against it
+//!   concurrently.
+//! * [`CalibratedTree`] — an immutable snapshot of the calibrated clique
+//!   potentials for one evidence set. Queries against it are pure reads
+//!   (a single small marginalization), so a snapshot can be cached and
+//!   shared across requests — see [`super::QueryEngine`].
+
+use std::sync::Arc;
+
+use crate::core::{Evidence, VarId};
+use crate::inference::{normalize_in_place, point_mass, Posterior};
+use crate::network::BayesianNetwork;
+use crate::potential::ops::IndexMode;
+use crate::potential::PotentialTable;
+use super::junction_tree::{CalibrationMode, JunctionTree};
+use super::triangulation::EliminationHeuristic;
+
+/// A junction tree compiled once per network, shareable across threads and
+/// across the per-evidence [`CalibratedTree`] snapshots it produces.
+#[derive(Clone)]
+pub struct CompiledTree {
+    tree: Arc<JunctionTree>,
+    mode: CalibrationMode,
+    threads: usize,
+}
+
+impl CompiledTree {
+    /// Compile with the default heuristic (min-fill) and sequential
+    /// calibration.
+    pub fn compile(net: &BayesianNetwork) -> Self {
+        Self::compile_with(
+            net,
+            EliminationHeuristic::MinFill,
+            CalibrationMode::Sequential,
+            1,
+        )
+    }
+
+    /// Compile with explicit triangulation heuristic and calibration
+    /// schedule (the schedule applies to every subsequent
+    /// [`CompiledTree::calibrate`] call).
+    pub fn compile_with(
+        net: &BayesianNetwork,
+        heuristic: EliminationHeuristic,
+        mode: CalibrationMode,
+        threads: usize,
+    ) -> Self {
+        CompiledTree {
+            tree: Arc::new(JunctionTree::build_with(net, heuristic, true)),
+            mode,
+            threads: threads.max(1),
+        }
+    }
+
+    /// The underlying compiled structure.
+    pub fn tree(&self) -> &JunctionTree {
+        &self.tree
+    }
+
+    /// Number of network variables.
+    pub fn n_vars(&self) -> usize {
+        self.tree.n_vars()
+    }
+
+    /// Run message passing for one evidence set, producing an immutable
+    /// query snapshot. This is the *only* per-query cost of the serving
+    /// path; the tree structure and initial potentials are reused.
+    pub fn calibrate(&self, evidence: &Evidence) -> CalibratedTree {
+        let mut engine = self.tree.parallel_engine(self.mode, self.threads);
+        engine.calibrate(evidence);
+        let (potentials, evidence_prob) = engine.into_calibrated();
+        CalibratedTree {
+            tree: Arc::clone(&self.tree),
+            potentials,
+            evidence: evidence.clone(),
+            evidence_prob,
+        }
+    }
+}
+
+/// An immutable calibrated junction tree: every clique holds the joint
+/// restricted to its scope, conditioned on [`CalibratedTree::evidence`].
+/// All queries are cheap pure reads, so snapshots are `Send + Sync` and
+/// safe to share behind an `Arc`.
+pub struct CalibratedTree {
+    tree: Arc<JunctionTree>,
+    potentials: Vec<PotentialTable>,
+    evidence: Evidence,
+    evidence_prob: f64,
+}
+
+impl CalibratedTree {
+    /// The evidence this snapshot was calibrated for.
+    pub fn evidence(&self) -> &Evidence {
+        &self.evidence
+    }
+
+    /// P(evidence) under the network.
+    pub fn evidence_probability(&self) -> f64 {
+        self.evidence_prob
+    }
+
+    /// Number of network variables.
+    pub fn n_vars(&self) -> usize {
+        self.tree.n_vars()
+    }
+
+    /// Posterior P(var | evidence). Evidence variables get a point mass on
+    /// their observed state (same contract as
+    /// [`crate::inference::InferenceEngine::query`]).
+    pub fn posterior(&self, var: VarId) -> Posterior {
+        if let Some(s) = self.evidence.get(var) {
+            return point_mass(self.tree.cardinality(var), s);
+        }
+        let clique = self.tree.home_clique_of(var);
+        let m = self.potentials[clique].marginalize_keep(&[var], IndexMode::Odometer);
+        let mut p = m.data().to_vec();
+        normalize_in_place(&mut p);
+        p
+    }
+
+    /// Posteriors of every variable given the evidence.
+    pub fn posterior_all(&self) -> Vec<Posterior> {
+        (0..self.tree.n_vars()).map(|v| self.posterior(v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn compiled_calibrate_matches_engine() {
+        for net in [repository::asia(), repository::survey()] {
+            let compiled = CompiledTree::compile(&net);
+            let ev = Evidence::new().with(1, 1);
+            let cal = compiled.calibrate(&ev);
+            let jt = JunctionTree::build(&net);
+            let mut eng = jt.engine();
+            use crate::inference::InferenceEngine;
+            let expect = eng.query_all(&ev);
+            let got = cal.posterior_all();
+            assert_eq!(got.len(), expect.len());
+            for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_close_dist(g, e, 1e-12, &format!("{} var {v}", net.name()));
+            }
+            assert!((cal.evidence_probability() - eng.evidence_probability()).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn snapshots_are_independent() {
+        let net = repository::cancer();
+        let compiled = CompiledTree::compile(&net);
+        let a = compiled.calibrate(&Evidence::new().with(3, 1));
+        let b = compiled.calibrate(&Evidence::new().with(3, 0));
+        // Positive xray raises P(cancer=yes); the two snapshots coexist.
+        assert!(a.posterior(2)[1] > b.posterior(2)[1]);
+        assert_eq!(a.evidence().get(3), Some(1));
+        assert_eq!(b.evidence().get(3), Some(0));
+    }
+
+    #[test]
+    fn parallel_compile_modes_match() {
+        let net = repository::asia();
+        let ev = Evidence::new().with(2, 1).with(6, 1);
+        let base = CompiledTree::compile(&net).calibrate(&ev).posterior_all();
+        for mode in [CalibrationMode::InterClique, CalibrationMode::Hybrid] {
+            let compiled = CompiledTree::compile_with(
+                &net,
+                EliminationHeuristic::MinFill,
+                mode,
+                2,
+            );
+            let got = compiled.calibrate(&ev).posterior_all();
+            for (v, (g, e)) in got.iter().zip(&base).enumerate() {
+                assert_close_dist(g, e, 1e-9, &format!("{mode:?} var {v}"));
+            }
+        }
+    }
+
+    #[test]
+    fn evidence_var_is_point_mass() {
+        let net = repository::sprinkler();
+        let cal = CompiledTree::compile(&net).calibrate(&Evidence::new().with(0, 1));
+        assert_eq!(cal.posterior(0), vec![0.0, 1.0]);
+    }
+}

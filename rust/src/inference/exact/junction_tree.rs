@@ -181,6 +181,21 @@ impl JunctionTree {
         self.cliques.iter().map(Vec::len).max().unwrap_or(0)
     }
 
+    /// Number of network variables the tree was compiled for.
+    pub fn n_vars(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Cardinality of network variable `v`.
+    pub fn cardinality(&self, v: VarId) -> usize {
+        self.cards[v]
+    }
+
+    /// The smallest clique containing `v` (where marginals are read).
+    pub fn home_clique_of(&self, v: VarId) -> usize {
+        self.home_clique[v]
+    }
+
     /// Total state count across cliques (memory proxy).
     pub fn total_states(&self) -> u64 {
         self.cliques
@@ -493,6 +508,13 @@ impl JtEngine<'_> {
     /// P(evidence) from the last calibration.
     pub fn evidence_probability(&self) -> f64 {
         self.evidence_prob
+    }
+
+    /// Consume the engine, yielding the calibrated (normalized) clique
+    /// potentials and P(evidence) — the raw material of a
+    /// [`super::CalibratedTree`] snapshot.
+    pub(crate) fn into_calibrated(self) -> (Vec<PotentialTable>, f64) {
+        (self.potentials, self.evidence_prob)
     }
 
     /// Marginal of `var` from its home clique (requires calibration).

@@ -1,11 +1,18 @@
 //! Exact inference: junction tree (Lauritzen–Spiegelhalter) and variable
-//! elimination.
+//! elimination, plus the serving-oriented compile-vs-query split —
+//! [`CompiledTree`] (built once per network) → [`CalibratedTree`]
+//! (one cheap snapshot per evidence set) → [`QueryEngine`] (LRU-cached
+//! snapshots, thread-safe, arbitrary posterior/MAP queries).
 
+mod compiled;
 mod elimination;
 mod junction_tree;
 mod map_query;
+mod query_engine;
 pub mod triangulation;
 
+pub use compiled::{CalibratedTree, CompiledTree};
 pub use elimination::{EliminationOrderHeuristic, VariableElimination};
 pub use junction_tree::{CalibrationMode, JtEngine, JunctionTree};
 pub use map_query::{most_probable_explanation, MapResult};
+pub use query_engine::{QueryEngine, QueryEngineConfig, QueryEngineStats};

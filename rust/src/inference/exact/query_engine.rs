@@ -1,0 +1,327 @@
+//! High-throughput posterior/MAP query serving over a compiled junction
+//! tree, with an LRU calibration cache.
+//!
+//! Serving traffic repeats itself: the same few evidence sets (dashboard
+//! panels, diagnostic presets, hot user cohorts) arrive over and over. The
+//! [`QueryEngine`] therefore memoizes [`CalibratedTree`] snapshots keyed by
+//! the *evidence signature* (the canonical sorted `(var, state)` pairs —
+//! [`Evidence`] hashes and compares structurally). A cache hit answers an
+//! arbitrary posterior query with a single clique marginalization; only
+//! misses pay message passing, and nothing ever re-triangulates.
+//!
+//! The engine is `Sync`: one instance serves any number of threads (the
+//! coordinator fans calibrations out over its `WorkPool`). The cache lock
+//! is held only for bookkeeping — calibration itself runs outside the
+//! lock, so concurrent misses on *different* evidence never serialize.
+//! Concurrent misses on the *same* evidence may calibrate twice; both
+//! results are identical and the last insert wins, which is harmless and
+//! keeps the fast path lock-free of condvars.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Evidence, VarId};
+use crate::inference::Posterior;
+use crate::network::BayesianNetwork;
+use super::compiled::{CalibratedTree, CompiledTree};
+use super::junction_tree::CalibrationMode;
+use super::map_query::{most_probable_explanation, MapResult};
+use super::triangulation::EliminationHeuristic;
+
+/// Tuning knobs for a [`QueryEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct QueryEngineConfig {
+    /// Maximum number of cached calibrations (0 disables caching).
+    pub cache_capacity: usize,
+    /// Message-passing schedule used on cache misses.
+    pub mode: CalibrationMode,
+    /// Intra-calibration worker threads (only used by parallel modes).
+    pub threads: usize,
+    /// Triangulation heuristic used at compile time.
+    pub heuristic: EliminationHeuristic,
+}
+
+impl Default for QueryEngineConfig {
+    fn default() -> Self {
+        QueryEngineConfig {
+            cache_capacity: 256,
+            mode: CalibrationMode::Sequential,
+            threads: 1,
+            heuristic: EliminationHeuristic::MinFill,
+        }
+    }
+}
+
+/// Counters describing cache effectiveness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryEngineStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Snapshots currently resident.
+    pub entries: usize,
+}
+
+impl QueryEngineStats {
+    /// Fraction of calibration lookups served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct CacheEntry {
+    value: Arc<CalibratedTree>,
+    last_used: u64,
+}
+
+struct CacheState {
+    map: HashMap<Evidence, CacheEntry>,
+    capacity: usize,
+    /// Monotonic recency clock.
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl CacheState {
+    /// Evict the least-recently-used entry. Linear scan: capacities are
+    /// small (hundreds) and eviction only runs on misses that already paid
+    /// a full calibration, so O(capacity) is noise.
+    fn evict_lru(&mut self) {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone());
+        if let Some(k) = victim {
+            self.map.remove(&k);
+            self.evictions += 1;
+        }
+    }
+}
+
+/// A reusable, thread-safe query service over one Bayesian network:
+/// compiled junction tree + LRU calibration cache.
+pub struct QueryEngine {
+    net: BayesianNetwork,
+    compiled: CompiledTree,
+    cache: Mutex<CacheState>,
+}
+
+impl QueryEngine {
+    /// Build with default configuration.
+    pub fn new(net: &BayesianNetwork) -> Self {
+        Self::with_config(net, QueryEngineConfig::default())
+    }
+
+    /// Build with explicit configuration.
+    pub fn with_config(net: &BayesianNetwork, config: QueryEngineConfig) -> Self {
+        let compiled =
+            CompiledTree::compile_with(net, config.heuristic, config.mode, config.threads);
+        QueryEngine {
+            net: net.clone(),
+            compiled,
+            cache: Mutex::new(CacheState {
+                map: HashMap::new(),
+                capacity: config.cache_capacity,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// The served network.
+    pub fn network(&self) -> &BayesianNetwork {
+        &self.net
+    }
+
+    /// The compiled artifact (shared, reusable).
+    pub fn compiled(&self) -> &CompiledTree {
+        &self.compiled
+    }
+
+    /// The calibrated snapshot for `evidence` — from cache when possible,
+    /// calibrating (outside the lock) on a miss.
+    pub fn calibrated(&self, evidence: &Evidence) -> Arc<CalibratedTree> {
+        {
+            let mut cache = self.cache.lock().unwrap();
+            cache.tick += 1;
+            let now = cache.tick;
+            if let Some(entry) = cache.map.get_mut(evidence) {
+                entry.last_used = now;
+                let value = Arc::clone(&entry.value);
+                cache.hits += 1;
+                return value;
+            }
+            cache.misses += 1;
+        }
+
+        let calibrated = Arc::new(self.compiled.calibrate(evidence));
+
+        let mut cache = self.cache.lock().unwrap();
+        if cache.capacity > 0 {
+            if !cache.map.contains_key(evidence) && cache.map.len() >= cache.capacity {
+                cache.evict_lru();
+            }
+            cache.tick += 1;
+            let now = cache.tick;
+            cache.map.insert(
+                evidence.clone(),
+                CacheEntry { value: Arc::clone(&calibrated), last_used: now },
+            );
+        }
+        calibrated
+    }
+
+    /// Posterior P(var | evidence).
+    pub fn posterior(&self, var: VarId, evidence: &Evidence) -> Posterior {
+        self.calibrated(evidence).posterior(var)
+    }
+
+    /// Posteriors of all variables given the evidence.
+    pub fn posterior_all(&self, evidence: &Evidence) -> Vec<Posterior> {
+        self.calibrated(evidence).posterior_all()
+    }
+
+    /// P(evidence).
+    pub fn evidence_probability(&self, evidence: &Evidence) -> f64 {
+        self.calibrated(evidence).evidence_probability()
+    }
+
+    /// Most probable explanation given the evidence (max-product VE; not
+    /// cached — MPE traffic is rare relative to marginals).
+    pub fn mpe(&self, evidence: &Evidence) -> MapResult {
+        most_probable_explanation(&self.net, evidence)
+    }
+
+    /// Current cache counters.
+    pub fn stats(&self) -> QueryEngineStats {
+        let cache = self.cache.lock().unwrap();
+        QueryEngineStats {
+            hits: cache.hits,
+            misses: cache.misses,
+            evictions: cache.evictions,
+            entries: cache.map.len(),
+        }
+    }
+
+    /// Drop all cached calibrations (counters are kept).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::exact::JunctionTree;
+    use crate::inference::InferenceEngine;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn hit_and_miss_paths_agree_with_fresh_engine() {
+        let net = repository::asia();
+        let engine = QueryEngine::new(&net);
+        let jt = JunctionTree::build(&net);
+        let mut fresh = jt.engine();
+        let ev = Evidence::new().with(0, 1).with(4, 1);
+        for round in 0..2 {
+            // round 0 = miss, round 1 = hit.
+            let got = engine.posterior_all(&ev);
+            let expect = fresh.query_all(&ev);
+            for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_close_dist(g, e, 1e-12, &format!("round {round} var {v}"));
+            }
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.entries, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let net = repository::sprinkler();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { cache_capacity: 2, ..Default::default() },
+        );
+        let e0 = Evidence::new().with(0, 0);
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = Evidence::new().with(1, 0);
+        engine.posterior(3, &e0); // miss, cache {e0}
+        engine.posterior(3, &e1); // miss, cache {e0, e1}
+        engine.posterior(3, &e0); // hit (e0 now most recent)
+        engine.posterior(3, &e2); // miss, evicts e1
+        engine.posterior(3, &e1); // miss again
+        let stats = engine.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.evictions, 2);
+        assert_eq!(stats.entries, 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let net = repository::sprinkler();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { cache_capacity: 0, ..Default::default() },
+        );
+        let ev = Evidence::new().with(0, 1);
+        engine.posterior(3, &ev);
+        engine.posterior(3, &ev);
+        let stats = engine.stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.entries, 0);
+    }
+
+    #[test]
+    fn cached_snapshot_is_shared() {
+        let net = repository::cancer();
+        let engine = QueryEngine::new(&net);
+        let ev = Evidence::new().with(3, 1);
+        let a = engine.calibrated(&ev);
+        let b = engine.calibrated(&ev);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the same snapshot");
+    }
+
+    #[test]
+    fn concurrent_queries_consistent() {
+        let net = repository::asia();
+        let engine = Arc::new(QueryEngine::new(&net));
+        let ev = Evidence::new().with(2, 1);
+        let expect = engine.posterior(5, &ev);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                let ev = ev.clone();
+                std::thread::spawn(move || engine.posterior(5, &ev))
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, expect, "identical floats expected on every path");
+        }
+    }
+
+    #[test]
+    fn mpe_delegates() {
+        let net = repository::sprinkler();
+        let engine = QueryEngine::new(&net);
+        let ev = Evidence::new().with(3, 1);
+        let mpe = engine.mpe(&ev);
+        assert!(mpe.probability > 0.0);
+        assert_eq!(mpe.assignment.get(3), 1);
+    }
+}

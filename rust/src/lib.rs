@@ -25,9 +25,18 @@
 //!   classification pipeline ([`classify`]).
 //!
 //! On top of the library sits a serving-style coordinator ([`coordinator`])
-//! that batches posterior queries onto an AOT-compiled XLA artifact
-//! (authored in JAX + Pallas at build time, executed through PJRT by
-//! [`runtime`]) — Python is never on the request path.
+//! with two request paths:
+//!
+//! * **Classify** — batches classification requests onto an AOT-compiled
+//!   XLA artifact (authored in JAX + Pallas at build time, executed
+//!   through PJRT by [`runtime`]; `xla-runtime` feature) — Python is never
+//!   on the request path.
+//! * **Query** — serves arbitrary posterior/MAP queries through the
+//!   compile-vs-query split ([`inference::exact::CompiledTree`] built once
+//!   per network, [`inference::exact::CalibratedTree`] snapshots per
+//!   evidence set, LRU-cached by [`inference::exact::QueryEngine`]), with
+//!   evidence-grouped dynamic batching over the shared work pool
+//!   ([`coordinator::QueryRouter`]).
 
 pub mod benchkit;
 pub mod classify;

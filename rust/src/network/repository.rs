@@ -10,6 +10,7 @@
 //!
 //! State convention: binary variables use `[no, yes]` (index 0 = no).
 
+use super::synthetic::SyntheticSpec;
 use super::{BayesianNetwork, NetworkBuilder};
 use crate::core::Variable;
 
@@ -27,6 +28,31 @@ pub fn by_name(name: &str) -> Option<BayesianNetwork> {
         "survey" => Some(survey()),
         _ => None,
     }
+}
+
+/// Synthetic stand-in presets (see [`super::synthetic`]): name →
+/// constructor, the single source of truth for both name listings and
+/// [`by_name_extended`] resolution. Generated with a fixed seed so every
+/// resolver call yields the same parameters.
+pub const SYNTHETIC_PRESETS: [(&str, fn() -> BayesianNetwork); 5] = [
+    ("child_like", || SyntheticSpec::child_like().generate(1)),
+    ("insurance_like", || SyntheticSpec::insurance_like().generate(1)),
+    ("alarm_like", || SyntheticSpec::alarm_like().generate(1)),
+    ("hepar2_like", || SyntheticSpec::hepar2_like().generate(1)),
+    ("win95pts_like", || SyntheticSpec::win95pts_like().generate(1)),
+];
+
+/// Resolve a built-in network *or* a synthetic preset by name — the full
+/// set of networks the serving layer (CLI `serve-query`, benches, the
+/// e2e example) can host without any on-disk artifacts.
+pub fn by_name_extended(name: &str) -> Option<BayesianNetwork> {
+    if let Some(net) = by_name(name) {
+        return Some(net);
+    }
+    SYNTHETIC_PRESETS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, generate)| generate())
 }
 
 /// The 4-node sprinkler network (Russell & Norvig / Murphy's BNT example).
@@ -263,6 +289,23 @@ mod tests {
         let ev = Evidence::new().with(net.var_index("wet").unwrap(), 1);
         let p = net.brute_force_posterior(net.var_index("rain").unwrap(), &ev);
         assert!((p[1] - 0.7079).abs() < 1e-3, "got {}", p[1]);
+    }
+
+    #[test]
+    fn extended_resolver_covers_builtins_and_synthetics() {
+        for name in BUILTIN_NAMES {
+            assert!(by_name_extended(name).is_some(), "builtin {name}");
+        }
+        for (name, _) in SYNTHETIC_PRESETS {
+            let a = by_name_extended(name).expect(name);
+            let b = by_name_extended(name).expect(name);
+            // Fixed seed: repeated resolution yields identical parameters.
+            assert_eq!(a.n_vars(), b.n_vars());
+            for v in 0..a.n_vars() {
+                assert_eq!(a.cpt(v).table, b.cpt(v).table, "{name} var {v}");
+            }
+        }
+        assert!(by_name_extended("nope").is_none());
     }
 
     #[test]

@@ -17,7 +17,9 @@
 
 mod scorer;
 
-pub use scorer::{BatchScorer, ReferenceScorer, Scorer};
+#[cfg(feature = "xla-runtime")]
+pub use scorer::BatchScorer;
+pub use scorer::{ReferenceScorer, Scorer};
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;

@@ -7,8 +7,13 @@
 //! the XLA path against).
 
 use crate::network::BayesianNetwork;
-use anyhow::{Context, Result};
-use super::{ArtifactBundle, ArtifactMeta};
+use anyhow::Result;
+#[cfg(feature = "xla-runtime")]
+use anyhow::Context;
+#[cfg(feature = "xla-runtime")]
+use super::ArtifactBundle;
+#[cfg(feature = "xla-runtime")]
+use super::ArtifactMeta;
 
 /// Batched classification scoring.
 ///
@@ -29,7 +34,11 @@ pub trait Scorer {
     fn score(&self, rows: &[Vec<u8>]) -> Result<Vec<Vec<f64>>>;
 }
 
-/// The real thing: PJRT CPU client executing the AOT HLO.
+/// The real thing: PJRT CPU client executing the AOT HLO. Only built with
+/// the `xla-runtime` feature — the default build has no PJRT dependency
+/// (CI runners carry no artifacts), and the vendored `xla` stub keeps this
+/// code compiling everywhere the feature is enabled.
+#[cfg(feature = "xla-runtime")]
 pub struct BatchScorer {
     exe: xla::PjRtLoadedExecutable,
     meta: ArtifactMeta,
@@ -37,6 +46,7 @@ pub struct BatchScorer {
     pub net: BayesianNetwork,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl BatchScorer {
     /// Load an artifact bundle: parse the network, read + compile the HLO.
     pub fn load(bundle: &ArtifactBundle) -> Result<BatchScorer> {
@@ -71,6 +81,7 @@ impl BatchScorer {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 impl Scorer for BatchScorer {
     fn batch_size(&self) -> usize {
         self.meta.batch

@@ -113,6 +113,32 @@ pub fn gen_evidence(rng: &mut Pcg, net: &BayesianNetwork, k: usize) -> Evidence 
         .collect()
 }
 
+/// Bounded pool of random evidence sets over `k` variables each — the
+/// shared serving-traffic model (serving traffic repeats itself, which is
+/// what the calibration cache exploits). Used by the `serve-query` CLI,
+/// the e2e serving example and the serving bench so the three drivers
+/// stay in sync.
+pub fn gen_evidence_pool(
+    rng: &mut Pcg,
+    net: &BayesianNetwork,
+    size: usize,
+    k: usize,
+) -> Vec<Evidence> {
+    (0..size)
+        .map(|_| gen_evidence(rng, net, k.min(net.n_vars())))
+        .collect()
+}
+
+/// A query target outside the evidence, when one can be found in a few
+/// draws (falls back to variable 0 — serving layers answer evidence
+/// variables with a point mass, so the fallback stays well-defined).
+pub fn gen_query_var(rng: &mut Pcg, net: &BayesianNetwork, ev: &Evidence) -> VarId {
+    (0..16)
+        .map(|_| rng.below(net.n_vars()))
+        .find(|&v| ev.get(v).is_none())
+        .unwrap_or(0)
+}
+
 /// Assert two distributions are close in total variation.
 pub fn assert_close_dist(p: &[f64], q: &[f64], tol: f64, context: &str) {
     let tv = crate::metrics::total_variation(p, q);

@@ -4,7 +4,7 @@
 use fastpgm::coordinator::{BatcherConfig, DynamicBatcher, Router};
 use fastpgm::network::repository;
 use fastpgm::rng::Pcg;
-use fastpgm::runtime::{ArtifactBundle, BatchScorer, ReferenceScorer, Scorer};
+use fastpgm::runtime::{ReferenceScorer, Scorer};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -98,8 +98,10 @@ fn failed_factory_surfaces_error() {
     assert!(!router.has_model("broken"));
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn router_over_real_artifact() {
+    use fastpgm::runtime::{ArtifactBundle, BatchScorer};
     let Ok(bundle) = ArtifactBundle::locate(std::path::Path::new("artifacts"), "asia")
     else {
         eprintln!("SKIP: artifacts missing (run `make artifacts`)");

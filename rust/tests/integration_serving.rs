@@ -1,0 +1,214 @@
+//! The posterior-query serving path under load: evidence-grouped dynamic
+//! batching, cache behaviour across concurrent clients, router semantics,
+//! and exactness of everything served.
+
+use fastpgm::coordinator::{
+    BatcherConfig, QueryReply, QueryRequest, QueryRouter, QueryTarget,
+};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{JunctionTree, QueryEngineConfig};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn asia_router(cache: usize) -> QueryRouter {
+    let mut r = QueryRouter::new(2);
+    r.register(
+        "asia",
+        &repository::asia(),
+        QueryEngineConfig { cache_capacity: cache, ..Default::default() },
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+    );
+    r
+}
+
+#[test]
+fn served_posteriors_match_fresh_engine_exactly() {
+    let router = asia_router(32);
+    let net = repository::asia();
+    let jt = JunctionTree::build(&net);
+    let mut fresh = jt.engine();
+    let mut rng = Pcg::seed_from(5);
+    for _ in 0..40 {
+        let ev: Evidence = rng
+            .choose_k(net.n_vars(), 2)
+            .into_iter()
+            .map(|v| (v, rng.below(net.cardinality(v))))
+            .collect();
+        for var in 0..net.n_vars() {
+            let served = router.posterior("asia", var, ev.clone()).unwrap();
+            let expect = fresh.query(var, &ev);
+            for (a, b) in served.iter().zip(&expect) {
+                assert!((a - b).abs() <= 1e-12, "var {var}: {served:?} vs {expect:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn same_evidence_requests_share_one_calibration() {
+    // A long flush window makes the coalescing assertion robust: all 48
+    // submissions land well inside the first deadline even on a loaded
+    // runner (a flake would need 47 consecutive >100ms send stalls).
+    let mut r = QueryRouter::new(2);
+    r.register(
+        "asia",
+        &repository::asia(),
+        QueryEngineConfig { cache_capacity: 32, ..Default::default() },
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(100) },
+    );
+    let router = Arc::new(r);
+    let ev = Evidence::new().with(0, 1).with(3, 1);
+    // Fire a burst of async queries with identical evidence but different
+    // targets; the batcher groups them, so the engine sees few lookups.
+    let receivers: Vec<_> = (0..48)
+        .map(|i| {
+            router
+                .query_async("asia", QueryRequest::marginal(i % 8, ev.clone()))
+                .unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        let reply = rx.recv().unwrap();
+        let p = reply.into_marginal().unwrap();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+    let stats = router.stats();
+    let (name, m) = &stats[0];
+    assert_eq!(name, "asia");
+    assert_eq!(m.serving.requests, 48);
+    assert!(
+        m.serving.batches < 48,
+        "evidence grouping should coalesce: {} calibration groups",
+        m.serving.batches
+    );
+    // The evidence is cached after the first group's calibration; only
+    // groups running concurrently before that insert can also miss, and
+    // the router's pool has 2 workers, so at most 2 misses are possible
+    // however the flushes fall.
+    assert!(m.cache.misses >= 1 && m.cache.misses <= 2, "{:?}", m.cache);
+}
+
+#[test]
+fn concurrent_clients_heavy_traffic_no_loss() {
+    let router = Arc::new(asia_router(16));
+    let net = repository::asia();
+    let expect_vars = net.n_vars();
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                let mut rng = Pcg::seed_from(t);
+                for _ in 0..50 {
+                    // Small evidence pool => heavy reuse across threads.
+                    let v = rng.below(4);
+                    let ev = Evidence::new().with(v, rng.below(2));
+                    let reply = router
+                        .query("asia", QueryRequest::all(ev))
+                        .unwrap();
+                    match reply {
+                        QueryReply::All(ps) => {
+                            assert_eq!(ps.len(), expect_vars);
+                            for p in ps {
+                                assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                            }
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = router.stats();
+    assert_eq!(stats[0].1.serving.requests, 400);
+    // 8 possible evidence sets, 400 requests: the cache must be doing
+    // nearly all the work.
+    let cache = &stats[0].1.cache;
+    assert!(cache.hits > cache.misses, "{cache:?}");
+}
+
+#[test]
+fn evidence_probability_and_mpe_paths() {
+    let router = asia_router(8);
+    let net = repository::asia();
+    let xray = net.var_index("xray").unwrap();
+    let ev = Evidence::new().with(xray, 1);
+    let reply = router
+        .query(
+            "asia",
+            QueryRequest { evidence: ev.clone(), target: QueryTarget::EvidenceProbability },
+        )
+        .unwrap();
+    let jt = JunctionTree::build(&net);
+    let mut engine = jt.engine();
+    engine.calibrate(&ev);
+    match reply {
+        QueryReply::EvidenceProbability(p) => {
+            assert!((p - engine.evidence_probability()).abs() <= 1e-12);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn router_replacement_and_unknown_models() {
+    let mut router = QueryRouter::new(1);
+    let replaced = router.register(
+        "model",
+        &repository::sprinkler(),
+        QueryEngineConfig::default(),
+        BatcherConfig::default(),
+    );
+    assert!(!replaced);
+    assert!(router.has_model("model"));
+    assert!(!router.has_model("other"));
+    assert!(router.posterior("other", 0, Evidence::new()).is_err());
+
+    let replaced = router.register(
+        "model",
+        &repository::asia(),
+        QueryEngineConfig::default(),
+        BatcherConfig::default(),
+    );
+    assert!(replaced, "second registration under the same name must report replacement");
+    // New network (8 vars) is live.
+    let reply = router.query("model", QueryRequest::all(Evidence::new())).unwrap();
+    match reply {
+        QueryReply::All(ps) => assert_eq!(ps.len(), 8),
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn validation_rejects_malformed_queries() {
+    let router = asia_router(8);
+    // Query variable out of range.
+    assert!(router.posterior("asia", 100, Evidence::new()).is_err());
+    // Evidence variable out of range.
+    assert!(router
+        .posterior("asia", 0, Evidence::new().with(99, 0))
+        .is_err());
+    // Evidence state out of range (asia vars are binary).
+    assert!(router
+        .posterior("asia", 0, Evidence::new().with(1, 5))
+        .is_err());
+}
+
+#[test]
+fn query_engine_cache_is_shared_across_batches() {
+    // Sequential blocking queries (each its own flush) still hit the cache.
+    let router = asia_router(8);
+    let ev = Evidence::new().with(2, 1);
+    for _ in 0..5 {
+        router.posterior("asia", 5, ev.clone()).unwrap();
+    }
+    let stats = router.stats();
+    let cache = &stats[0].1.cache;
+    assert_eq!(cache.misses, 1, "{cache:?}");
+    assert_eq!(cache.hits, 4, "{cache:?}");
+}

@@ -4,7 +4,10 @@
 //!
 //! These tests require `make artifacts`; they are skipped (with a loud
 //! message) when the artifacts are missing so plain `cargo test` still
-//! passes in a fresh checkout.
+//! passes in a fresh checkout. The whole suite is additionally gated on
+//! the `xla-runtime` feature — the default build carries no PJRT bindings.
+
+#![cfg(feature = "xla-runtime")]
 
 use fastpgm::core::Evidence;
 use fastpgm::inference::exact::JunctionTree;

@@ -3,6 +3,10 @@
 //! substitution).
 
 use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{
+    CalibrationMode, JunctionTree, QueryEngine, QueryEngineConfig,
+};
+use fastpgm::inference::InferenceEngine;
 use fastpgm::potential::ops::IndexMode;
 use fastpgm::potential::PotentialTable;
 use fastpgm::testkit::*;
@@ -165,6 +169,83 @@ fn prop_family_potential_rows_normalized() {
                 assert!((x - 1.0).abs() < 1e-6);
             }
         }
+    });
+}
+
+/// Cache-correctness invariant for the serving path: posteriors served
+/// through a [`QueryEngine`] — miss path (first sight of the evidence) and
+/// hit path (repeat) alike, under every [`CalibrationMode`] — must agree
+/// with a freshly built junction-tree engine in the same mode to within
+/// 1e-12, over random networks and random evidence.
+#[test]
+fn prop_query_engine_matches_fresh_engine_all_modes() {
+    for (mode, threads) in [
+        (CalibrationMode::Sequential, 1usize),
+        (CalibrationMode::InterClique, 2),
+        (CalibrationMode::Hybrid, 2),
+    ] {
+        property(&format!("QueryEngine == fresh JT ({mode:?})"), 130, 12, |rng| {
+            let net = gen_network(rng, 8);
+            let engine = QueryEngine::with_config(
+                &net,
+                QueryEngineConfig {
+                    cache_capacity: 4,
+                    mode,
+                    threads,
+                    ..Default::default()
+                },
+            );
+            let jt = JunctionTree::build(&net);
+            let mut fresh = jt.parallel_engine(mode, threads);
+            let evidence: Vec<Evidence> = (0..3)
+                .map(|k| gen_evidence(rng, &net, k))
+                .collect();
+            // Two passes: pass 0 exercises the miss path, pass 1 the hit
+            // path (the pool of 3 fits in the capacity-4 cache).
+            for pass in 0..2 {
+                for ev in &evidence {
+                    let served = engine.posterior_all(ev);
+                    let expect = fresh.query_all(ev);
+                    for (v, (s, e)) in served.iter().zip(&expect).enumerate() {
+                        for (a, b) in s.iter().zip(e) {
+                            assert!(
+                                (a - b).abs() <= 1e-12,
+                                "{mode:?} pass {pass} var {v}: {s:?} vs {e:?}"
+                            );
+                        }
+                    }
+                }
+            }
+            let stats = engine.stats();
+            assert!(stats.hits >= 3, "hit path untested: {stats:?}");
+            assert!(stats.misses <= 3, "unexpected extra misses: {stats:?}");
+        });
+    }
+}
+
+/// Evicted-and-recalibrated snapshots must also be bit-stable: cycling
+/// more evidence sets than the cache holds keeps every answer identical
+/// to the first time it was computed.
+#[test]
+fn prop_eviction_recalibration_stable() {
+    property("eviction -> recalibration is reproducible", 131, 10, |rng| {
+        let net = gen_network(rng, 7);
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { cache_capacity: 2, ..Default::default() },
+        );
+        let evidence: Vec<Evidence> =
+            (0..5).map(|_| gen_evidence(rng, &net, 2)).collect();
+        let first: Vec<_> =
+            evidence.iter().map(|ev| engine.posterior_all(ev)).collect();
+        // Cycle twice more: every set is repeatedly evicted and rebuilt.
+        for _ in 0..2 {
+            for (ev, expect) in evidence.iter().zip(&first) {
+                let again = engine.posterior_all(ev);
+                assert_eq!(&again, expect, "recalibration changed the answer");
+            }
+        }
+        assert!(engine.stats().evictions > 0, "eviction path untested");
     });
 }
 

@@ -1,0 +1,221 @@
+//! Minimal, API-compatible shim of the `anyhow` crate.
+//!
+//! The offline build image has no crates.io registry, so this vendored
+//! path crate provides the subset of `anyhow` the workspace actually uses:
+//!
+//! * [`Error`] — a context-chain error type (`{e}` prints the top message,
+//!   `{e:#}` the full `top: cause: cause` chain, like upstream anyhow)
+//! * [`Result<T>`] — alias with [`Error`] as the default error type
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//! * blanket `From<E: std::error::Error>` so `?` converts std errors
+//!
+//! Swap in the real crate by deleting this directory and pointing the
+//! workspace manifest at crates.io; no call sites need to change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error carrying a chain of context messages, newest first.
+///
+/// Like upstream anyhow, this type deliberately does **not** implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion coherent.
+pub struct Error {
+    /// `chain[0]` is the most recent context; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_digit(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("parsing digit")?;
+        ensure!(n < 10, "{n} is not a single digit");
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = parse_digit("x").unwrap_err();
+        assert_eq!(format!("{e}"), "parsing digit");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("parsing digit: "), "{alt}");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(parse_digit("7").unwrap(), 7);
+        let e = parse_digit("42").unwrap_err();
+        assert_eq!(format!("{e}"), "42 is not a single digit");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn from_std_error_keeps_cause_chain() {
+        let io = std::fs::read_to_string("/definitely/not/a/path");
+        let e = io.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(e.chain().count() >= 2);
+        assert!(!e.root_cause().is_empty());
+    }
+
+    #[test]
+    fn anyhow_macro_accepts_values() {
+        let msg = String::from("plain message");
+        let e = anyhow!(msg.clone());
+        assert_eq!(format!("{e}"), "plain message");
+        let e2 = anyhow!("formatted {}", 3);
+        assert_eq!(format!("{e2}"), "formatted 3");
+    }
+}

@@ -1,0 +1,116 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real serving path compiles AOT HLO artifacts through a PJRT CPU
+//! client (see `rust/src/runtime/`). The build image used for CI carries
+//! neither the `xla_extension` C library nor its Rust bindings, so this
+//! crate mirrors the small API surface `fastpgm` uses and fails **at
+//! runtime** with a clear message instead of failing the build. Deployments
+//! with real PJRT replace this path dependency (e.g. via `[patch]`) — no
+//! call sites change.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?`/`context`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "XLA/PJRT runtime unavailable: built against the offline stub \
+         (replace third_party/xla-stub with real xla bindings to serve \
+         compiled artifacts)"
+            .to_string(),
+    )
+}
+
+/// Stub of the PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT CPU plugin to load.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of an XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Stub of a loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_at_runtime() {
+        let err = PjRtClient::cpu().map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+}
