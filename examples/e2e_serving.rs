@@ -28,6 +28,7 @@ use std::time::Instant;
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     query_serving_demo(&args)?;
+    approx_serving_demo(&args)?;
 
     #[cfg(feature = "xla-runtime")]
     xla_demo::run(&args)?;
@@ -142,6 +143,96 @@ fn query_serving_demo(args: &Args) -> anyhow::Result<()> {
         sampled.len()
     );
     anyhow::ensure!(max_dev <= 1e-12, "cached serving deviates from cold inference");
+    Ok(())
+}
+
+/// The approximate serving tier under induced queue pressure: an
+/// auto-routed model sheds batch-priority queries to chunked likelihood
+/// weighting over the shared pool, interactive queries stay exact, and
+/// every shed answer is cross-checked loosely against the exact engine.
+fn approx_serving_demo(args: &Args) -> anyhow::Result<()> {
+    use fastpgm::coordinator::{AnswerTier, ApproxConfig};
+    use fastpgm::inference::approx::ApproxOptions;
+    use fastpgm::inference::engine::EngineChoice;
+    use fastpgm::inference::exact::QueryEngine;
+    use std::time::Duration;
+
+    let requests = args.parse_flag("approx-requests", 384usize).max(32);
+    println!("\n=== approximate serving tier (auto shed under pressure) ===");
+    let net = repository::asia();
+    let mut router = QueryRouter::new(fastpgm::parallel::default_threads());
+    router.register_with_approx(
+        "asia",
+        &net,
+        QueryEngineConfig { cache_capacity: 64, ..Default::default() },
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(20) },
+        ApproxConfig {
+            engine: EngineChoice::Auto,
+            opts: ApproxOptions { n_samples: 20_000, ..Default::default() },
+            error_budget: 0.01,
+            shed_queue_depth: 2,
+            ..Default::default()
+        },
+    );
+
+    // Bounded evidence pool, restricted to evidence with non-negligible
+    // probability so the loose accuracy cross-check below is meaningful.
+    let exact = QueryEngine::new(&net);
+    let mut rng = Pcg::seed_from(9);
+    let mut pool = fastpgm::testkit::gen_evidence_pool(&mut rng, &net, 12, 2);
+    pool.retain(|ev| exact.evidence_probability(ev) > 1e-3);
+    anyhow::ensure!(!pool.is_empty(), "evidence pool filtered to nothing");
+
+    // Bursts of async queries induce queue depth; every other query is
+    // batch priority (sheddable), the rest interactive.
+    let mut exact_served = 0usize;
+    let mut approx_served = 0usize;
+    let mut max_l1: f64 = 0.0;
+    let waves = requests / 32;
+    for wave in 0..waves {
+        let receivers: Vec<_> = (0..32)
+            .map(|i| {
+                let ev = pool[(wave + i) % pool.len()].clone();
+                let var = fastpgm::testkit::gen_query_var(&mut rng, &net, &ev);
+                let mut request = QueryRequest::marginal(var, ev.clone());
+                let batch = i % 2 == 0;
+                if batch {
+                    request = request.batch_priority();
+                }
+                (var, ev, batch, router.query_async("asia", request).unwrap())
+            })
+            .collect();
+        for (var, ev, batch, rx) in receivers {
+            let routed = rx.recv()?;
+            if !batch {
+                anyhow::ensure!(
+                    routed.tier == AnswerTier::Exact,
+                    "interactive query answered on the approx tier"
+                );
+            }
+            match routed.tier {
+                AnswerTier::Exact => exact_served += 1,
+                AnswerTier::Approx => approx_served += 1,
+            }
+            let p = routed
+                .into_marginal()
+                .ok_or_else(|| anyhow::anyhow!("wrong reply variant"))?;
+            let expect = exact.posterior(var, &ev);
+            let l1: f64 = p.iter().zip(&expect).map(|(a, b)| (a - b).abs()).sum();
+            max_l1 = max_l1.max(l1);
+        }
+    }
+    let served = waves * 32;
+    println!(
+        "served {served} queries: exact tier={exact_served}, approx tier={approx_served} \
+         (batch-priority under backlog sheds to chunked likelihood weighting)"
+    );
+    for (model, stats) in router.stats() {
+        println!("  {model}: {}", stats.serving.summary());
+    }
+    println!("  max L1(served, exact) over every answer: {max_l1:.4}");
+    anyhow::ensure!(approx_served > 0, "no query was shed to the approximate tier");
+    anyhow::ensure!(max_l1 < 0.1, "approximate tier drifted from exact: L1 {max_l1}");
     Ok(())
 }
 

@@ -35,8 +35,8 @@ fn main() {
                 .query_all(&ev)
         })),
         ("likelihood-weighting", Box::new(|t| {
-            LikelihoodWeighting::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })
-                .query_all(&ev)
+            let opts = ApproxOptions { n_samples, threads: t, ..Default::default() };
+            LikelihoodWeighting::new(&net, opts).query_all(&ev)
         })),
         ("self-importance", Box::new(|t| {
             SelfImportance::new(&net, ApproxOptions { n_samples, threads: t, ..Default::default() })

@@ -1,0 +1,160 @@
+//! Approximate-serving bench, writing `BENCH_approx_serving.json`:
+//!
+//! * **scaling** — chunked likelihood-weighting samples/sec as the shared
+//!   [`WorkPool`] grows (1, 2, 4, ... workers), on a mid-size synthetic
+//!   network. The chunk RNG streams make every row bit-identical, so the
+//!   sweep measures pure scheduling, not estimator drift.
+//! * **tradeoff** — exact (compiled junction tree) vs each wrapped
+//!   sampler: latency of one all-marginals answer and its mean L1 error
+//!   against the exact posteriors, at a fixed sample budget.
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, fmt_duration};
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::ApproxOptions;
+use fastpgm::inference::engine::{ApproxEngine, SamplerKind};
+use fastpgm::inference::exact::QueryEngine;
+use fastpgm::network::repository;
+use fastpgm::parallel::WorkPool;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SCALING_SAMPLES: usize = 200_000;
+const TRADEOFF_SAMPLES: usize = 40_000;
+
+fn mean_l1(posts: &[Vec<f64>], reference: &[Vec<f64>]) -> f64 {
+    let total: f64 = posts
+        .iter()
+        .zip(reference)
+        .map(|(p, q)| p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum::<f64>())
+        .sum();
+    total / posts.len() as f64
+}
+
+fn main() {
+    let mut scaling = Vec::new();
+
+    // -- Part 1: samples/sec vs worker count ------------------------------
+    let net = repository::by_name_extended("child_like").expect("known preset");
+    let ev = Evidence::new().with(0, 1);
+    let max_threads = fastpgm::parallel::default_threads().max(1);
+    let mut counts: Vec<usize> = [1usize, 2, 4]
+        .into_iter()
+        .filter(|&c| c <= max_threads)
+        .collect();
+    if max_threads > 4 {
+        counts.push(max_threads);
+    }
+    if counts.len() < 2 {
+        counts = vec![1, 2];
+    }
+    println!(
+        "== approx serving: chunked likelihood weighting on {} ({} vars, {} samples) ==",
+        net.name(),
+        net.n_vars(),
+        SCALING_SAMPLES
+    );
+    let mut base_sps = 0.0f64;
+    for &workers in &counts {
+        let engine = ApproxEngine::new(
+            &net,
+            SamplerKind::LikelihoodWeighting,
+            ApproxOptions { n_samples: SCALING_SAMPLES, ..Default::default() },
+        )
+        .with_pool(Arc::new(WorkPool::new(workers)));
+        std::hint::black_box(engine.run(&ev)); // warmup
+        let t0 = Instant::now();
+        let run = engine.run(&ev);
+        let secs = t0.elapsed().as_secs_f64().max(1e-12);
+        let sps = run.samples_drawn as f64 / secs;
+        if base_sps == 0.0 {
+            base_sps = sps;
+        }
+        println!(
+            "  workers={workers:<2} {:>12.0} samples/s  speedup {:.2}x",
+            sps,
+            sps / base_sps
+        );
+        scaling.push(Json::obj([
+            ("workers", Json::num(workers as f64)),
+            ("samples", Json::num(run.samples_drawn as f64)),
+            ("samples_per_sec", Json::num(sps)),
+            ("speedup_vs_1", Json::num(sps / base_sps)),
+        ]));
+    }
+
+    // -- Part 2: exact vs approx latency/accuracy -------------------------
+    let net = repository::asia();
+    let exact = QueryEngine::new(&net);
+    let ev = Evidence::new()
+        .with(net.var_index("xray").unwrap(), 1)
+        .with(net.var_index("smoke").unwrap(), 1);
+    let reference = exact.posterior_all(&ev);
+    let mut tradeoff = Vec::new();
+
+    println!("\n== exact vs approx: all-marginals on asia ==");
+    // Exact row: cold calibration per answer (clearing the cache keeps the
+    // comparison honest — a cache hit would be near-free).
+    let m = benchkit::bench("exact cold calibration", 5, 200, || {
+        exact.clear_cache();
+        exact.posterior_all(&ev)
+    });
+    let exact_latency = m.mean();
+    println!("  {:<22} latency {:>10}  mean L1 0", "exact", fmt_duration(exact_latency));
+    tradeoff.push(Json::obj([
+        ("engine", Json::str("exact")),
+        ("latency_us", Json::num(exact_latency.as_secs_f64() * 1e6)),
+        ("mean_l1_error", Json::num(0.0)),
+        ("samples", Json::num(0.0)),
+    ]));
+
+    let pool = Arc::new(WorkPool::new(max_threads));
+    let kinds = [
+        SamplerKind::LikelihoodWeighting,
+        SamplerKind::AisBn,
+        SamplerKind::EpisBn,
+        SamplerKind::Gibbs,
+    ];
+    for kind in kinds {
+        let engine = ApproxEngine::new(
+            &net,
+            kind,
+            ApproxOptions { n_samples: TRADEOFF_SAMPLES, ..Default::default() },
+        )
+        .with_pool(Arc::clone(&pool));
+        std::hint::black_box(engine.run(&ev)); // warmup
+        let t0 = Instant::now();
+        let run = engine.run(&ev);
+        let latency = t0.elapsed();
+        let l1 = mean_l1(&run.posteriors, &reference);
+        println!(
+            "  {:<22} latency {:>10}  mean L1 {l1:.4}",
+            kind.name(),
+            fmt_duration(latency)
+        );
+        tradeoff.push(Json::obj([
+            ("engine", Json::str(kind.name())),
+            ("latency_us", Json::num(latency.as_secs_f64() * 1e6)),
+            ("mean_l1_error", Json::num(l1)),
+            ("samples", Json::num(run.samples_drawn as f64)),
+        ]));
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("approx_serving")),
+        (
+            "config",
+            Json::obj([
+                ("scaling_samples", Json::num(SCALING_SAMPLES as f64)),
+                ("tradeoff_samples", Json::num(TRADEOFF_SAMPLES as f64)),
+                ("max_threads", Json::num(max_threads as f64)),
+            ]),
+        ),
+        ("scaling", Json::Arr(scaling)),
+        ("tradeoff", Json::Arr(tradeoff)),
+    ]);
+    let path = Path::new("BENCH_approx_serving.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_approx_serving.json");
+    println!("\nwrote {}", path.display());
+}

@@ -56,7 +56,8 @@ fn main() {
     let net = SyntheticSpec::hepar2_like().generate(1);
     let jt = JunctionTree::build(&net);
     let ev = Evidence::new().with(5, 1).with(30, 0);
-    for (label, mode) in [("naive-decode", IndexMode::NaiveDecode), ("odometer", IndexMode::Odometer)] {
+    let modes = [("naive-decode", IndexMode::NaiveDecode), ("odometer", IndexMode::Odometer)];
+    for (label, mode) in modes {
         let mut eng = jt.engine();
         eng.index_mode = mode;
         let ev = ev.clone();

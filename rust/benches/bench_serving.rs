@@ -132,13 +132,18 @@ fn main() {
         let speedup_compiled = total(&rebuild_lat) / total(&compiled_lat).max(1e-12);
         let speedup_cached = total(&rebuild_lat) / total(&cached_lat).max(1e-12);
 
+        let rows = [
+            ("rebuild/query", rebuild_lat.clone()),
+            ("compiled tree", compiled_lat.clone()),
+            ("cached (QueryEngine)", cached_lat.clone()),
+        ]
+        .map(|(label, samples)| Measurement { label: format!("{name} {label}"), samples });
         report(
-            &format!("{name} ({} vars, {QUERIES} queries, pool={EVIDENCE_POOL})", net.n_vars()),
-            &[
-                Measurement { label: format!("{name} rebuild/query"), samples: rebuild_lat.clone() },
-                Measurement { label: format!("{name} compiled tree"), samples: compiled_lat.clone() },
-                Measurement { label: format!("{name} cached (QueryEngine)"), samples: cached_lat.clone() },
-            ],
+            &format!(
+                "{name} ({} vars, {QUERIES} queries, pool={EVIDENCE_POOL})",
+                net.n_vars()
+            ),
+            &rows,
         );
         println!(
             "  speedup vs rebuild: compiled {speedup_compiled:.1}x, cached {speedup_cached:.1}x \

@@ -26,6 +26,14 @@ impl Measurement {
         self.samples.iter().copied().min().unwrap_or_default()
     }
 
+    /// Arithmetic mean of the samples (zero when empty).
+    pub fn mean(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples.iter().sum::<Duration>() / self.samples.len() as u32
+    }
+
     pub fn p95(&self) -> Duration {
         self.percentile(95.0)
     }
@@ -238,6 +246,9 @@ mod tests {
         let m = bench("noop", 1, 5, || 1 + 1);
         assert_eq!(m.samples.len(), 5);
         assert!(m.min() <= m.median());
+        assert!(m.min() <= m.mean());
+        let empty = Measurement { label: "e".into(), samples: Vec::new() };
+        assert_eq!(empty.mean(), Duration::ZERO);
     }
 
     #[test]

@@ -199,6 +199,15 @@ impl DynamicBatcher {
             .map_err(|_| anyhow::anyhow!("batcher stopped"))?;
         Ok(reply_rx)
     }
+
+    /// Stop accepting new requests, flush every pending one, and join the
+    /// worker. Used for hot-reload: a re-registered model drains its old
+    /// batcher before the replacement is swapped in, so no in-flight
+    /// request is dropped and no caller waits out a batching window
+    /// against a dead batcher (see [`super::drain_worker`]).
+    pub fn drain(mut self) {
+        super::drain_worker(&mut self.tx, &mut self.worker);
+    }
 }
 
 impl Drop for DynamicBatcher {

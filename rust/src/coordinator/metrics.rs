@@ -8,6 +8,11 @@ pub struct ServingMetrics {
     pub requests: usize,
     pub batches: usize,
     pub exec_time_total: Duration,
+    /// Requests answered by the exact tier (query path only; the classify
+    /// path leaves both tier counters at zero).
+    pub exact_requests: usize,
+    /// Requests shed to the approximate (sampling) tier.
+    pub approx_requests: usize,
     latencies_us: Vec<u64>,
 }
 
@@ -60,7 +65,7 @@ impl ServingMetrics {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} mean_batch={:.1} mean_latency={:.0}µs p95={}µs p99={}µs exec_tput={:.0} req/s",
             self.requests,
             self.batches,
@@ -69,7 +74,14 @@ impl ServingMetrics {
             self.latency_percentile_us(95.0),
             self.latency_percentile_us(99.0),
             self.exec_throughput(),
-        )
+        );
+        if self.exact_requests + self.approx_requests > 0 {
+            s.push_str(&format!(
+                " tier[exact={} approx={}]",
+                self.exact_requests, self.approx_requests
+            ));
+        }
+        s
     }
 }
 
@@ -93,6 +105,11 @@ mod tests {
         assert!((m.mean_latency_us() - 250.0).abs() < 1e-9);
         assert!((m.exec_throughput() - 3000.0).abs() < 1.0);
         assert!(m.summary().contains("requests=12"));
+        // Tier counters default to zero and stay out of the summary.
+        assert!(!m.summary().contains("tier["));
+        m.exact_requests = 10;
+        m.approx_requests = 2;
+        assert!(m.summary().contains("tier[exact=10 approx=2]"));
     }
 
     #[test]

@@ -22,23 +22,52 @@ mod router;
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::ServingMetrics;
 pub use query_router::{
-    QueryModelStats, QueryReply, QueryRequest, QueryRouter, QueryService, QueryTarget,
+    AnswerTier, ApproxConfig, QueryModelStats, QueryPriority, QueryQos, QueryReply,
+    QueryRequest, QueryRouter, QueryService, QueryTarget, RoutedReply,
 };
 pub use router::{Router, RouterStats};
 
 /// Shared registration bookkeeping for both routers: insert under `name`,
-/// warn on stderr when an existing registration was replaced (its `what` —
-/// batcher or query service — is dropped, aborting in-flight work), and
-/// report the replacement to the caller.
+/// warn on stderr when an existing registration was replaced, and report
+/// the replacement to the caller. A replaced registration is handed to
+/// `drain` *before* the new one takes the name, so the old batcher/service
+/// stops accepting, flushes its pending requests and joins — hot-reload
+/// never drops in-flight work.
 pub(crate) fn register_model<T>(
     models: &mut std::collections::HashMap<String, T>,
     name: String,
     value: T,
     what: &str,
+    drain: impl FnOnce(T),
 ) -> bool {
-    let replaced = models.insert(name.clone(), value).is_some();
-    if replaced {
-        eprintln!("coordinator: model {name:?} re-registered; previous {what} replaced");
-    }
+    let replaced = match models.remove(&name) {
+        Some(old) => {
+            eprintln!(
+                "coordinator: model {name:?} re-registered; draining previous {what}"
+            );
+            drain(old);
+            true
+        }
+        None => false,
+    };
+    models.insert(name, value);
     replaced
+}
+
+/// Shared drain step for batcher-style workers ([`DynamicBatcher`],
+/// [`QueryService`]): swap the request sender for one whose receiver is
+/// already closed — so new submissions fail fast — and drop the real
+/// sender, which lets the worker loop drain every buffered request, flush
+/// it, and exit on the channel disconnect; then join the worker. Closing
+/// the channel (rather than setting the stop flag) is what makes the
+/// flush immediate instead of waiting out a batching window.
+pub(crate) fn drain_worker<T>(
+    tx: &mut std::sync::mpsc::Sender<T>,
+    worker: &mut Option<std::thread::JoinHandle<()>>,
+) {
+    let (closed, _) = std::sync::mpsc::channel();
+    drop(std::mem::replace(tx, closed));
+    if let Some(w) = worker.take() {
+        let _ = w.join();
+    }
 }

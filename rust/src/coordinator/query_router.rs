@@ -1,5 +1,6 @@
 //! General posterior-query serving: router + evidence-grouping dynamic
-//! batcher over the shared [`WorkPool`].
+//! batcher over the shared [`WorkPool`], with a load-adaptive approximate
+//! tier.
 //!
 //! This is the second serving path next to the classify path
 //! ([`super::Router`]): arbitrary `P(var | evidence)` / `P(evidence)` /
@@ -11,16 +12,29 @@
 //!    classify batcher), so bursts are handled per flush, not per request.
 //! 2. **Evidence grouping** — each flush is grouped by evidence signature;
 //!    one calibration (usually a cache hit) answers every query in the
-//!    group. Groups fan out over the coordinator-wide [`WorkPool`], so
-//!    distinct evidence sets calibrate concurrently.
+//!    group — including a single shared `posterior_all` pass for every
+//!    all-marginals request in it. Groups fan out over the
+//!    coordinator-wide [`WorkPool`], so distinct evidence sets calibrate
+//!    concurrently.
+//!
+//! On top of that sits **load-adaptive routing** ([`ApproxConfig`]): each
+//! request carries a QoS hint ([`QueryQos`]), and when the flush backlog
+//! or the calibration-cache miss pressure crosses the configured
+//! thresholds, eligible (batch-priority) queries are shed to an
+//! approximate tier — an [`ApproxEngine`] sampling adapter fanning chunked
+//! sample budgets over the same pool. Every reply records which tier and
+//! engine answered ([`RoutedReply`]), and [`ServingMetrics`] counts
+//! per-tier traffic.
 
 use crate::core::{Evidence, VarId};
+use crate::inference::approx::ApproxOptions;
+use crate::inference::engine::{ApproxEngine, EngineChoice, SamplerKind};
 use crate::inference::exact::{QueryEngine, QueryEngineConfig, QueryEngineStats};
 use crate::inference::Posterior;
 use crate::network::BayesianNetwork;
 use crate::parallel::WorkPool;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -38,22 +52,74 @@ pub enum QueryTarget {
     EvidenceProbability,
 }
 
+/// Priority class of a query — the routing policy's main QoS signal.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueryPriority {
+    /// Latency-sensitive traffic; always answered by the exact tier.
+    #[default]
+    Interactive,
+    /// Throughput traffic; may be shed to the approximate tier under load.
+    Batch,
+}
+
+/// QoS hint attached to a [`QueryRequest`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryQos {
+    pub priority: QueryPriority,
+    /// Soft latency target. Batch queries with a deadline tighter than
+    /// [`ApproxConfig::tight_deadline`] are kept on the exact tier (a
+    /// cached calibration is faster than any sampling run).
+    pub deadline: Option<Duration>,
+}
+
 /// One posterior query.
 #[derive(Clone, Debug)]
 pub struct QueryRequest {
     pub evidence: Evidence,
     pub target: QueryTarget,
+    pub qos: QueryQos,
 }
 
 impl QueryRequest {
-    /// Single-variable marginal query.
+    /// Single-variable marginal query (interactive priority).
     pub fn marginal(var: VarId, evidence: Evidence) -> QueryRequest {
-        QueryRequest { evidence, target: QueryTarget::Marginal(var) }
+        QueryRequest {
+            evidence,
+            target: QueryTarget::Marginal(var),
+            qos: QueryQos::default(),
+        }
     }
 
-    /// All-marginals query.
+    /// All-marginals query (interactive priority).
     pub fn all(evidence: Evidence) -> QueryRequest {
-        QueryRequest { evidence, target: QueryTarget::All }
+        QueryRequest { evidence, target: QueryTarget::All, qos: QueryQos::default() }
+    }
+
+    /// P(evidence) query (interactive priority).
+    pub fn evidence_probability(evidence: Evidence) -> QueryRequest {
+        QueryRequest {
+            evidence,
+            target: QueryTarget::EvidenceProbability,
+            qos: QueryQos::default(),
+        }
+    }
+
+    /// Replace the QoS hint.
+    pub fn with_qos(mut self, qos: QueryQos) -> QueryRequest {
+        self.qos = qos;
+        self
+    }
+
+    /// Mark as batch-priority (sheddable to the approximate tier).
+    pub fn batch_priority(mut self) -> QueryRequest {
+        self.qos.priority = QueryPriority::Batch;
+        self
+    }
+
+    /// Attach a soft deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> QueryRequest {
+        self.qos.deadline = Some(deadline);
+        self
     }
 }
 
@@ -75,127 +141,170 @@ impl QueryReply {
     }
 }
 
+/// Which tier answered a query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnswerTier {
+    /// Compiled junction tree + calibration cache.
+    Exact,
+    /// Sampling adapter ([`ApproxEngine`]).
+    Approx,
+}
+
+/// A reply plus the tier/engine that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutedReply {
+    pub reply: QueryReply,
+    pub tier: AnswerTier,
+    /// Name of the engine that answered (e.g. `exact`, `ais-bn`).
+    pub engine: &'static str,
+}
+
+impl RoutedReply {
+    /// The single marginal, if this was a marginal query.
+    pub fn into_marginal(self) -> Option<Posterior> {
+        self.reply.into_marginal()
+    }
+}
+
+/// Configuration of the approximate tier and the shedding policy.
+#[derive(Clone, Debug)]
+pub struct ApproxConfig {
+    /// Which tier(s) answer queries. The default, [`EngineChoice::Exact`],
+    /// preserves the pre-existing exact-only behaviour.
+    pub engine: EngineChoice,
+    /// Sampler the `Auto` policy sheds to.
+    pub kind: SamplerKind,
+    /// Sampling budget / chunk size / seed for the approximate tier.
+    pub opts: ApproxOptions,
+    /// Adaptive-stopping target for the chunked controller (0 disables;
+    /// see [`crate::inference::engine::ChunkedConfig::error_budget`]).
+    pub error_budget: f64,
+    /// `Auto` policy: shed batch queries when the flush backlog (requests
+    /// in this flush + in-flight pool jobs) reaches this depth...
+    pub shed_queue_depth: usize,
+    /// ...or when the calibration-cache miss rate over the window since
+    /// the previous flush reaches this fraction.
+    pub shed_miss_rate: f64,
+    /// Batch queries with a deadline tighter than this stay exact.
+    pub tight_deadline: Duration,
+    /// Cap on concurrently running dedicated approx-tier threads per
+    /// service. Groups beyond the cap are answered inline on the batcher
+    /// thread — bounded head-of-line blocking under extreme shed load
+    /// instead of unbounded thread growth.
+    pub max_inflight_runs: usize,
+}
+
+impl Default for ApproxConfig {
+    fn default() -> Self {
+        ApproxConfig {
+            engine: EngineChoice::Exact,
+            kind: SamplerKind::LikelihoodWeighting,
+            opts: ApproxOptions { n_samples: 20_000, ..Default::default() },
+            error_budget: 0.0,
+            shed_queue_depth: 8,
+            shed_miss_rate: 0.75,
+            tight_deadline: Duration::from_millis(2),
+            max_inflight_runs: 2,
+        }
+    }
+}
+
 struct PendingQuery {
     request: QueryRequest,
     enqueued: Instant,
-    reply: SyncSender<QueryReply>,
+    reply: SyncSender<RoutedReply>,
 }
 
 /// Per-model serving loop: dynamic batching + evidence grouping over one
-/// [`QueryEngine`]. Spawned and owned by a [`QueryRouter`] (use the router
-/// unless embedding a single model).
+/// [`QueryEngine`], with optional shedding to an [`ApproxEngine`]. Spawned
+/// and owned by a [`QueryRouter`] (use the router unless embedding a
+/// single model).
 pub struct QueryService {
     tx: Sender<PendingQuery>,
     worker: Option<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     engine: Arc<QueryEngine>,
+    approx_engine: Option<Arc<ApproxEngine>>,
     pub metrics: Arc<Mutex<ServingMetrics>>,
     n_vars: usize,
     cards: Vec<usize>,
 }
 
+/// Everything the batcher thread needs — bundled so the run loop stays a
+/// single-argument call.
+struct ServiceCore {
+    engine: Arc<QueryEngine>,
+    approx_engine: Option<Arc<ApproxEngine>>,
+    approx: ApproxConfig,
+    pool: Arc<WorkPool>,
+    config: BatcherConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    /// Dedicated approx-tier threads currently running (incremented only
+    /// by the batcher thread, decremented by the threads themselves).
+    approx_inflight: Arc<AtomicUsize>,
+}
+
 impl QueryService {
-    /// Spawn the batching thread. Calibration work is executed on `pool`.
+    /// Spawn the batching thread with the exact tier only. Calibration
+    /// work is executed on `pool`.
     pub fn spawn(
         engine: Arc<QueryEngine>,
         pool: Arc<WorkPool>,
         config: BatcherConfig,
     ) -> QueryService {
-        let net = engine.network();
-        let n_vars = net.n_vars();
-        let cards: Vec<usize> = (0..n_vars).map(|v| net.cardinality(v)).collect();
-        let (tx, rx) = mpsc::channel::<PendingQuery>();
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
-        let worker = {
-            let engine = Arc::clone(&engine);
-            let stop = Arc::clone(&stop);
-            let metrics = Arc::clone(&metrics);
-            std::thread::Builder::new()
-                .name("fastpgm-query-batcher".into())
-                .spawn(move || Self::run(engine, pool, config, rx, stop, metrics))
-                .expect("failed to spawn query batcher thread")
-        };
-        QueryService { tx, worker: Some(worker), stop, engine, metrics, n_vars, cards }
+        Self::spawn_with_approx(engine, pool, config, ApproxConfig::default())
     }
 
-    fn run(
+    /// Spawn with an approximate tier per `approx` (exact-only when
+    /// `approx.engine` is [`EngineChoice::Exact`]).
+    pub fn spawn_with_approx(
         engine: Arc<QueryEngine>,
         pool: Arc<WorkPool>,
         config: BatcherConfig,
-        rx: Receiver<PendingQuery>,
-        stop: Arc<AtomicBool>,
-        metrics: Arc<Mutex<ServingMetrics>>,
-    ) {
-        let cap = config.max_batch.max(1);
-        let mut queue: Vec<PendingQuery> = Vec::new();
-        loop {
-            if queue.is_empty() {
-                match rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(r) => queue.push(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if stop.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        continue;
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                }
-            }
-            let deadline = queue[0].enqueued + config.max_wait;
-            while queue.len() < cap {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => queue.push(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
-            }
-            // Group the flush by evidence signature: one calibration (and
-            // usually one cache lookup) per distinct evidence set.
-            let mut groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
-            for p in queue.drain(..) {
-                groups.entry(p.request.evidence.clone()).or_default().push(p);
-            }
-            for (evidence, members) in groups {
-                let engine = Arc::clone(&engine);
-                let metrics = Arc::clone(&metrics);
-                pool.execute(move || {
-                    // Time the whole unit of work — calibration (or cache
-                    // hit) plus every member's marginalization — so the
-                    // reported exec/latency match what clients waited for.
-                    let t0 = Instant::now();
-                    let calibrated = engine.calibrated(&evidence);
-                    let answers: Vec<QueryReply> = members
-                        .iter()
-                        .map(|p| match p.request.target {
-                            QueryTarget::Marginal(v) => {
-                                QueryReply::Marginal(calibrated.posterior(v))
-                            }
-                            QueryTarget::All => QueryReply::All(calibrated.posterior_all()),
-                            QueryTarget::EvidenceProbability => {
-                                QueryReply::EvidenceProbability(
-                                    calibrated.evidence_probability(),
-                                )
-                            }
-                        })
-                        .collect();
-                    let exec = t0.elapsed();
-                    {
-                        let mut m = metrics.lock().unwrap();
-                        m.record_batch(members.len(), exec);
-                        for p in &members {
-                            m.record_latency(p.enqueued.elapsed());
-                        }
-                    }
-                    for (p, answer) in members.into_iter().zip(answers) {
-                        let _ = p.reply.send(answer);
-                    }
-                });
-            }
+        approx: ApproxConfig,
+    ) -> QueryService {
+        let net = engine.network();
+        let n_vars = net.n_vars();
+        let cards: Vec<usize> = (0..n_vars).map(|v| net.cardinality(v)).collect();
+        let approx_kind = match approx.engine {
+            EngineChoice::Exact => None,
+            EngineChoice::Auto => Some(approx.kind),
+            EngineChoice::Force(kind) => Some(kind),
+        };
+        let approx_engine = approx_kind.map(|kind| {
+            Arc::new(
+                ApproxEngine::new(net, kind, approx.opts.clone())
+                    .with_error_budget(approx.error_budget)
+                    .with_pool(Arc::clone(&pool)),
+            )
+        });
+        let (tx, rx) = mpsc::channel::<PendingQuery>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let core = ServiceCore {
+            engine: Arc::clone(&engine),
+            approx_engine: approx_engine.clone(),
+            approx,
+            pool,
+            config,
+            stop: Arc::clone(&stop),
+            metrics: Arc::clone(&metrics),
+            approx_inflight: Arc::new(AtomicUsize::new(0)),
+        };
+        let worker = std::thread::Builder::new()
+            .name("fastpgm-query-batcher".into())
+            .spawn(move || core.run(rx))
+            .expect("failed to spawn query batcher thread");
+        QueryService {
+            tx,
+            worker: Some(worker),
+            stop,
+            engine,
+            approx_engine,
+            metrics,
+            n_vars,
+            cards,
         }
     }
 
@@ -215,15 +324,20 @@ impl QueryService {
 
     /// Submit one query and block for the reply.
     pub fn query(&self, request: QueryRequest) -> anyhow::Result<QueryReply> {
+        Ok(self.query_routed(request)?.reply)
+    }
+
+    /// Submit one query and block for the reply plus its answer tier.
+    pub fn query_routed(&self, request: QueryRequest) -> anyhow::Result<RoutedReply> {
         let rx = self.query_async(request)?;
         rx.recv().map_err(|_| anyhow::anyhow!("query batcher dropped request"))
     }
 
-    /// Submit asynchronously; returns a receiver for the reply.
+    /// Submit asynchronously; returns a receiver for the routed reply.
     pub fn query_async(
         &self,
         request: QueryRequest,
-    ) -> anyhow::Result<Receiver<QueryReply>> {
+    ) -> anyhow::Result<Receiver<RoutedReply>> {
         self.validate(&request)?;
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
@@ -232,9 +346,265 @@ impl QueryService {
         Ok(reply_rx)
     }
 
-    /// The engine backing this service (cache stats, direct access).
+    /// The exact engine backing this service (cache stats, direct access).
     pub fn engine(&self) -> &Arc<QueryEngine> {
         &self.engine
+    }
+
+    /// The approximate tier, when one is configured.
+    pub fn approx_engine(&self) -> Option<&Arc<ApproxEngine>> {
+        self.approx_engine.as_ref()
+    }
+
+    /// Stop accepting new queries, flush every pending one, and join the
+    /// batcher thread. Used for hot-reload: a re-registered model drains
+    /// its old service before the replacement is swapped in, so no
+    /// in-flight query is dropped (see [`super::drain_worker`]).
+    pub fn drain(mut self) {
+        super::drain_worker(&mut self.tx, &mut self.worker);
+    }
+}
+
+impl ServiceCore {
+    fn run(self, rx: Receiver<PendingQuery>) {
+        let cap = self.config.max_batch.max(1);
+        let mut queue: Vec<PendingQuery> = Vec::new();
+        // Cache counters at the previous flush — the shedding policy works
+        // on the miss rate of the window in between.
+        let mut last_hits = 0u64;
+        let mut last_misses = 0u64;
+        loop {
+            if queue.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if self.stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            }
+            let deadline = queue[0].enqueued + self.config.max_wait;
+            while queue.len() < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => queue.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+
+            // Load signals for the shedding policy.
+            let stats = self.engine.stats();
+            let window_hits = stats.hits - last_hits;
+            let window_misses = stats.misses - last_misses;
+            last_hits = stats.hits;
+            last_misses = stats.misses;
+            let lookups = window_hits + window_misses;
+            let recent_miss_rate = if lookups == 0 {
+                0.0
+            } else {
+                window_misses as f64 / lookups as f64
+            };
+            let backlog = queue.len() + self.pool.load();
+            let under_pressure = backlog >= self.approx.shed_queue_depth
+                || recent_miss_rate >= self.approx.shed_miss_rate;
+
+            // Partition the flush across tiers, then group each tier's
+            // members by evidence signature: one calibration (or one
+            // sampling run) per distinct evidence set.
+            let mut exact_groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
+            let mut approx_groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
+            for p in queue.drain(..) {
+                let to_approx = match (&self.approx_engine, self.approx.engine) {
+                    (Some(ae), EngineChoice::Force(_)) => {
+                        approx_can_answer(ae, &p.request, &self.approx.opts)
+                    }
+                    (Some(ae), EngineChoice::Auto) => {
+                        under_pressure
+                            && sheddable(&p.request, self.approx.tight_deadline)
+                            && approx_can_answer(ae, &p.request, &self.approx.opts)
+                    }
+                    _ => false,
+                };
+                let groups = if to_approx {
+                    &mut approx_groups
+                } else {
+                    &mut exact_groups
+                };
+                groups.entry(p.request.evidence.clone()).or_default().push(p);
+            }
+
+            // Exact tier: groups fan out over the pool.
+            for (evidence, members) in exact_groups {
+                let engine = Arc::clone(&self.engine);
+                let metrics = Arc::clone(&self.metrics);
+                self.pool.execute(move || {
+                    // Time the whole unit of work — calibration (or cache
+                    // hit) plus every member's marginalization — so the
+                    // reported exec/latency match what clients waited for.
+                    let t0 = Instant::now();
+                    let calibrated = engine.calibrated(&evidence);
+                    // Cross-request batching: one shared posterior_all
+                    // pass answers every all-marginals request in the
+                    // group.
+                    let mut shared_all: Option<Vec<Posterior>> = None;
+                    let answers: Vec<QueryReply> = members
+                        .iter()
+                        .map(|p| match p.request.target {
+                            QueryTarget::Marginal(v) => {
+                                QueryReply::Marginal(calibrated.posterior(v))
+                            }
+                            QueryTarget::All => QueryReply::All(
+                                shared_all
+                                    .get_or_insert_with(|| calibrated.posterior_all())
+                                    .clone(),
+                            ),
+                            QueryTarget::EvidenceProbability => {
+                                QueryReply::EvidenceProbability(
+                                    calibrated.evidence_probability(),
+                                )
+                            }
+                        })
+                        .collect();
+                    let exec = t0.elapsed();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.record_batch(members.len(), exec);
+                        m.exact_requests += members.len();
+                        for p in &members {
+                            m.record_latency(p.enqueued.elapsed());
+                        }
+                    }
+                    for (p, reply) in members.into_iter().zip(answers) {
+                        let _ = p.reply.send(RoutedReply {
+                            reply,
+                            tier: AnswerTier::Exact,
+                            engine: "exact",
+                        });
+                    }
+                });
+            }
+
+            // Approximate tier: up to `max_inflight_runs` groups run on
+            // dedicated detached threads, which block on the chunked
+            // sampler while the chunks themselves execute as pool jobs.
+            // Blocking off the batcher thread keeps interactive traffic
+            // flowing during a sampling run; blocking off the pool keeps
+            // the pool deadlock-free; the bound keeps sustained shed load
+            // from growing threads without limit (overflow groups are
+            // answered inline here — bounded head-of-line blocking, never
+            // a dead service). The engine's `Arc<WorkPool>` keeps the
+            // pool alive until the last group finishes, even across a
+            // router drop.
+            for (evidence, members) in approx_groups {
+                let ae = Arc::clone(
+                    self.approx_engine
+                        .as_ref()
+                        .expect("approx group without an approx engine"),
+                );
+                if self.approx_inflight.load(Ordering::Relaxed)
+                    < self.approx.max_inflight_runs
+                {
+                    self.approx_inflight.fetch_add(1, Ordering::Relaxed);
+                    let metrics = Arc::clone(&self.metrics);
+                    let inflight = Arc::clone(&self.approx_inflight);
+                    let spawned = std::thread::Builder::new()
+                        .name("fastpgm-approx-tier".into())
+                        .spawn(move || {
+                            answer_approx_group(&ae, &metrics, &evidence, members);
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    if let Err(e) = spawned {
+                        // The group moved into the failed spawn; its reply
+                        // channels close, so clients get an error rather
+                        // than a hang, and the service itself survives.
+                        // The inflight bound makes this path all but
+                        // unreachable.
+                        self.approx_inflight.fetch_sub(1, Ordering::Relaxed);
+                        eprintln!("coordinator: approx-tier thread spawn failed: {e}");
+                    }
+                } else {
+                    answer_approx_group(&ae, &self.metrics, &evidence, members);
+                }
+            }
+        }
+    }
+}
+
+/// Answer one evidence group on the approximate tier: one sampling run
+/// serves every member, replies are tagged with the approx tier and the
+/// engine name, and per-tier metrics are recorded. Called from a
+/// dedicated approx-tier thread, or inline on the batcher thread once the
+/// in-flight bound is reached.
+fn answer_approx_group(
+    ae: &ApproxEngine,
+    metrics: &Mutex<ServingMetrics>,
+    evidence: &Evidence,
+    members: Vec<PendingQuery>,
+) {
+    let t0 = Instant::now();
+    let run = ae.run(evidence);
+    let answers: Vec<QueryReply> = members
+        .iter()
+        .map(|p| match p.request.target {
+            QueryTarget::Marginal(v) => QueryReply::Marginal(run.posteriors[v].clone()),
+            QueryTarget::All => QueryReply::All(run.posteriors.clone()),
+            QueryTarget::EvidenceProbability => {
+                QueryReply::EvidenceProbability(run.evidence_probability.unwrap_or(0.0))
+            }
+        })
+        .collect();
+    let exec = t0.elapsed();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.record_batch(members.len(), exec);
+        m.approx_requests += members.len();
+        for p in &members {
+            m.record_latency(p.enqueued.elapsed());
+        }
+    }
+    for (p, reply) in members.into_iter().zip(answers) {
+        let _ = p.reply.send(RoutedReply {
+            reply,
+            tier: AnswerTier::Approx,
+            engine: ae.kind().name(),
+        });
+    }
+}
+
+/// Is this request eligible for the approximate tier under `Auto`?
+fn sheddable(request: &QueryRequest, tight_deadline: Duration) -> bool {
+    if request.qos.priority != QueryPriority::Batch {
+        return false;
+    }
+    match request.qos.deadline {
+        Some(d) => d >= tight_deadline,
+        None => true,
+    }
+}
+
+/// Can this approximate engine answer the request's target at all?
+fn approx_can_answer(
+    engine: &ApproxEngine,
+    request: &QueryRequest,
+    opts: &ApproxOptions,
+) -> bool {
+    // A zero sample budget answers nothing meaningfully — every target
+    // stays exact (loopy BP excepted: it draws no samples at all).
+    if opts.n_samples == 0 && engine.kind() != SamplerKind::LoopyBp {
+        return false;
+    }
+    match request.target {
+        QueryTarget::EvidenceProbability => {
+            engine.kind().estimates_evidence_probability()
+        }
+        _ => true,
     }
 }
 
@@ -269,9 +639,11 @@ impl QueryRouter {
         QueryRouter { models: HashMap::new(), pool: Arc::new(WorkPool::new(threads)) }
     }
 
-    /// Register (or replace) a model. Returns `true` when an existing
-    /// registration under this name was replaced — same contract as
-    /// [`super::Router::register`].
+    /// Register (or replace) an exact-only model. Returns `true` when an
+    /// existing registration under this name was replaced — same contract
+    /// as [`super::Router::register`]. A replaced service is drained
+    /// first: it stops accepting, flushes its pending queries, then the
+    /// new service takes the name.
     pub fn register(
         &mut self,
         name: impl Into<String>,
@@ -279,9 +651,39 @@ impl QueryRouter {
         engine_config: QueryEngineConfig,
         batcher_config: BatcherConfig,
     ) -> bool {
+        self.register_with_approx(
+            name,
+            net,
+            engine_config,
+            batcher_config,
+            ApproxConfig::default(),
+        )
+    }
+
+    /// Register (or replace, after draining) a model with an approximate
+    /// tier.
+    pub fn register_with_approx(
+        &mut self,
+        name: impl Into<String>,
+        net: &BayesianNetwork,
+        engine_config: QueryEngineConfig,
+        batcher_config: BatcherConfig,
+        approx: ApproxConfig,
+    ) -> bool {
         let engine = Arc::new(QueryEngine::with_config(net, engine_config));
-        let service = QueryService::spawn(engine, Arc::clone(&self.pool), batcher_config);
-        super::register_model(&mut self.models, name.into(), service, "query service")
+        let service = QueryService::spawn_with_approx(
+            engine,
+            Arc::clone(&self.pool),
+            batcher_config,
+            approx,
+        );
+        super::register_model(
+            &mut self.models,
+            name.into(),
+            service,
+            "query service",
+            QueryService::drain,
+        )
     }
 
     /// Registered model names, sorted.
@@ -306,12 +708,21 @@ impl QueryRouter {
         self.service(model)?.query(request)
     }
 
+    /// Blocking query returning the reply plus its answer tier.
+    pub fn query_routed(
+        &self,
+        model: &str,
+        request: QueryRequest,
+    ) -> anyhow::Result<RoutedReply> {
+        self.service(model)?.query_routed(request)
+    }
+
     /// Async query against a named model.
     pub fn query_async(
         &self,
         model: &str,
         request: QueryRequest,
-    ) -> anyhow::Result<Receiver<QueryReply>> {
+    ) -> anyhow::Result<Receiver<RoutedReply>> {
         self.service(model)?.query_async(request)
     }
 
@@ -422,16 +833,52 @@ mod tests {
     }
 
     #[test]
+    fn reregister_drains_pending_queries() {
+        let mut r = QueryRouter::new(1);
+        r.register(
+            "m",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            // A long flush window: the pending queries below would sit in
+            // the old batcher for 200ms if draining did not flush them.
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(200) },
+        );
+        let ev = Evidence::new().with(0, 1);
+        let pending: Vec<_> = (0..8)
+            .map(|i| {
+                r.query_async("m", QueryRequest::marginal(i % 8, ev.clone())).unwrap()
+            })
+            .collect();
+        let t0 = Instant::now();
+        let replaced = r.register(
+            "m",
+            &repository::cancer(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        assert!(replaced);
+        for rx in pending {
+            let routed = rx.recv().expect("drained service dropped a pending query");
+            let p = routed.into_marginal().unwrap();
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // Draining flushes immediately instead of waiting out the 200ms
+        // batching window.
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "drain did not flush promptly: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
     fn evidence_probability_target() {
         let r = router();
         let net = repository::asia();
         let xray = net.var_index("xray").unwrap();
         let ev = Evidence::new().with(xray, 1);
         let reply = r
-            .query(
-                "asia",
-                QueryRequest { evidence: ev.clone(), target: QueryTarget::EvidenceProbability },
-            )
+            .query("asia", QueryRequest::evidence_probability(ev.clone()))
             .unwrap();
         let p_marg = net.brute_force_posterior(xray, &Evidence::new())[1];
         match reply {
@@ -440,5 +887,91 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn default_routing_stays_exact_and_is_tagged() {
+        let r = router();
+        let routed = r
+            .query_routed("asia", QueryRequest::marginal(5, Evidence::new().with(0, 1)))
+            .unwrap();
+        assert_eq!(routed.tier, AnswerTier::Exact);
+        assert_eq!(routed.engine, "exact");
+        let stats = r.stats();
+        let m = &stats.iter().find(|(n, _)| n == "asia").unwrap().1.serving;
+        assert_eq!(m.exact_requests, 1);
+        assert_eq!(m.approx_requests, 0);
+    }
+
+    #[test]
+    fn forced_engine_answers_on_approx_tier() {
+        let mut r = QueryRouter::new(2);
+        r.register_with_approx(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+            ApproxConfig {
+                engine: EngineChoice::Force(SamplerKind::LikelihoodWeighting),
+                opts: ApproxOptions { n_samples: 4_000, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let ev = Evidence::new().with(0, 1);
+        let routed = r.query_routed("asia", QueryRequest::marginal(5, ev)).unwrap();
+        assert_eq!(routed.tier, AnswerTier::Approx);
+        assert_eq!(routed.engine, "likelihood-weighting");
+        let p = routed.into_marginal().unwrap();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let stats = r.stats();
+        assert_eq!(stats[0].1.serving.approx_requests, 1);
+    }
+
+    #[test]
+    fn unanswerable_targets_fall_back_to_exact() {
+        // Gibbs cannot estimate P(e); even when forced, the router answers
+        // evidence-probability queries on the exact tier.
+        let mut r = QueryRouter::new(2);
+        r.register_with_approx(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+            ApproxConfig {
+                engine: EngineChoice::Force(SamplerKind::Gibbs),
+                opts: ApproxOptions { n_samples: 2_000, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let net = repository::asia();
+        let xray = net.var_index("xray").unwrap();
+        let ev = Evidence::new().with(xray, 1);
+        let routed =
+            r.query_routed("asia", QueryRequest::evidence_probability(ev)).unwrap();
+        assert_eq!(routed.tier, AnswerTier::Exact);
+        let expect = net.brute_force_posterior(xray, &Evidence::new())[1];
+        match routed.reply {
+            QueryReply::EvidenceProbability(p) => {
+                assert!((p - expect).abs() < 1e-9);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn qos_builders() {
+        let req = QueryRequest::marginal(0, Evidence::new());
+        assert_eq!(req.qos.priority, QueryPriority::Interactive);
+        assert_eq!(req.qos.deadline, None);
+        let req = req.batch_priority().with_deadline(Duration::from_millis(50));
+        assert_eq!(req.qos.priority, QueryPriority::Batch);
+        assert_eq!(req.qos.deadline, Some(Duration::from_millis(50)));
+        assert!(sheddable(&req, Duration::from_millis(2)));
+        let tight = QueryRequest::marginal(0, Evidence::new())
+            .batch_priority()
+            .with_deadline(Duration::from_micros(100));
+        assert!(!sheddable(&tight, Duration::from_millis(2)));
+        let interactive = QueryRequest::marginal(0, Evidence::new());
+        assert!(!sheddable(&interactive, Duration::from_millis(2)));
     }
 }

@@ -25,8 +25,9 @@ impl Router {
 
     /// Register a model from a `Send` scorer. Returns `true` when an
     /// existing registration under this name was replaced (its batcher is
-    /// stopped and dropped) — callers that expect a fresh name should
-    /// treat `true` as a configuration error worth surfacing.
+    /// drained first — pending requests flush, nothing is dropped) —
+    /// callers that expect a fresh name should treat `true` as a
+    /// configuration error worth surfacing.
     pub fn register<S: Scorer + Send + 'static>(
         &mut self,
         name: impl Into<String>,
@@ -38,12 +39,14 @@ impl Router {
             name.into(),
             DynamicBatcher::spawn(scorer, config),
             "batcher",
+            DynamicBatcher::drain,
         )
     }
 
     /// Register a model from a thread-affine scorer factory (the XLA
     /// path). Fails if the factory fails (e.g. missing artifacts); on
-    /// success returns `true` when an existing registration was replaced.
+    /// success returns `true` when an existing registration was replaced
+    /// (after draining, as in [`Router::register`]).
     pub fn register_with(
         &mut self,
         name: impl Into<String>,
@@ -51,7 +54,13 @@ impl Router {
         config: BatcherConfig,
     ) -> anyhow::Result<bool> {
         let batcher = DynamicBatcher::spawn_with(factory, config)?;
-        Ok(super::register_model(&mut self.models, name.into(), batcher, "batcher"))
+        Ok(super::register_model(
+            &mut self.models,
+            name.into(),
+            batcher,
+            "batcher",
+            DynamicBatcher::drain,
+        ))
     }
 
     pub fn models(&self) -> Vec<&str> {
@@ -152,6 +161,46 @@ mod tests {
         // The replacement actually serves the new model (5-var cancer).
         assert_eq!(r.n_vars("m"), Some(5));
         assert!(r.classify("m", vec![0; 5]).is_ok());
+    }
+
+    #[test]
+    fn reregister_drains_pending_requests() {
+        use std::time::{Duration, Instant};
+        let mut r = Router::new();
+        let asia = repository::asia();
+        let cv = asia.var_index("bronc").unwrap();
+        r.register(
+            "m",
+            ReferenceScorer::new(asia, cv, 64),
+            // A long batching window: without draining, the 8 pending
+            // requests below would sit in the old batcher for 200ms (or be
+            // dropped) while the replacement takes the name.
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(200) },
+        );
+        let pending: Vec<_> =
+            (0..8).map(|_| r.classify_async("m", vec![0; 8]).unwrap()).collect();
+        let t0 = Instant::now();
+        let replaced = r.register(
+            "m",
+            ReferenceScorer::new(repository::cancer(), 2, 8),
+            BatcherConfig::default(),
+        );
+        assert!(replaced);
+        for rx in pending {
+            let post = rx
+                .recv()
+                .expect("drained batcher dropped a pending request")
+                .expect("pending request failed");
+            assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+        // Draining flushes immediately instead of waiting out the window.
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "drain did not flush promptly: {:?}",
+            t0.elapsed()
+        );
+        // The replacement serves the new model.
+        assert_eq!(r.n_vars("m"), Some(5));
     }
 
     #[test]

@@ -84,12 +84,22 @@ impl<'n> AisBn<'n> {
     }
 }
 
-impl InferenceEngine for AisBn<'_> {
-    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
-        self.query_all(evidence).swap_remove(var)
-    }
+/// Outcome of the AIS-BN learning phase: the frozen learned proposal, the
+/// posterior mass accumulated by the learning samples (they still count
+/// toward the weighted-average estimator), how many samples the phase drew
+/// and the seed the frozen-proposal sampling phase should continue from.
+pub struct LearnedProposal {
+    pub icpt: ImportanceCpts,
+    pub acc: PosteriorAccumulator,
+    pub drawn: usize,
+    pub next_seed: u64,
+}
 
-    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior> {
+impl AisBn<'_> {
+    /// Phase 1 of AIS-BN: learning rounds with decaying eta. Split out so
+    /// the serving tier ([`crate::inference::engine`]) can learn once and
+    /// fan the frozen-proposal sampling phase over the work pool.
+    pub fn learn_proposal(&self, evidence: &Evidence) -> LearnedProposal {
         let net = self.net;
         let mut icpt = ImportanceCpts::from_network(net);
         // Heuristic initialization (Cheng & Druzdzel §4.2).
@@ -100,8 +110,8 @@ impl InferenceEngine for AisBn<'_> {
         let per_round = learn_total.div_ceil(self.rounds.max(1));
         let mut root = Pcg::seed_from(self.opts.seed ^ 0xA15);
         let mut global = PosteriorAccumulator::new(net);
+        let mut drawn = 0usize;
 
-        // Phase 1: learning rounds with decaying eta.
         for k in 0..self.rounds {
             if per_round == 0 {
                 break;
@@ -111,6 +121,7 @@ impl InferenceEngine for AisBn<'_> {
                     .powf(k as f64 / self.rounds.max(1) as f64);
             let (acc, fam) =
                 self.learning_round(&icpt, evidence, root.next_u64(), per_round);
+            drawn += per_round;
             // Samples from early (poor) proposals still contribute, per the
             // paper's weighted-average estimator.
             global.merge(&acc);
@@ -121,13 +132,27 @@ impl InferenceEngine for AisBn<'_> {
                 icpt.learn_rows(v, &fam[v], eta);
             }
         }
+        LearnedProposal { icpt, acc: global, drawn, next_seed: root.next_u64() }
+    }
+}
+
+impl InferenceEngine for AisBn<'_> {
+    fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
+        self.query_all(evidence).swap_remove(var)
+    }
+
+    fn query_all(&mut self, evidence: &Evidence) -> Vec<Posterior> {
+        let net = self.net;
+        let learned = self.learn_proposal(evidence);
+        let icpt = learned.icpt;
+        let mut global = learned.acc;
 
         // Phase 2: sampling with the frozen learned proposal.
-        let remaining = self.opts.n_samples.saturating_sub(per_round * self.rounds);
+        let remaining = self.opts.n_samples.saturating_sub(learned.drawn);
         if remaining > 0 {
             let opts = ApproxOptions {
                 n_samples: remaining,
-                seed: root.next_u64(),
+                seed: learned.next_seed,
                 ..self.opts.clone()
             };
             let icpt_ref = &icpt;

@@ -35,8 +35,10 @@ impl<'n> EpisBn<'n> {
         }
     }
 
-    /// Build the importance function from two LBP passes.
-    fn build_proposal(&self, evidence: &Evidence) -> ImportanceCpts {
+    /// Build the importance function from two LBP passes. Public so the
+    /// serving tier ([`crate::inference::engine`]) can build the proposal
+    /// once and fan the sampling phase over the work pool.
+    pub fn build_proposal(&self, evidence: &Evidence) -> ImportanceCpts {
         let net = self.net;
         let mut bp_post = LoopyBp::new(net, self.bp_opts.clone());
         let posterior = bp_post.beliefs(evidence);

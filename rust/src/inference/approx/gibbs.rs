@@ -56,7 +56,10 @@ impl<'n> GibbsSampling<'n> {
         }
     }
 
-    fn run_chain(
+    /// Run one chain for `sweeps` collected sweeps (after burn-in).
+    /// `pub(crate)` so the serving tier can schedule chains as work-pool
+    /// chunks.
+    pub(crate) fn run_chain(
         &self,
         mut rng: Pcg,
         sweeps: usize,

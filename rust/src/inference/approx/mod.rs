@@ -13,8 +13,9 @@ mod logic_sampling;
 mod loopy_bp;
 mod self_importance;
 
-pub use ais_bn::AisBn;
+pub use ais_bn::{AisBn, LearnedProposal};
 pub use epis_bn::EpisBn;
+pub(crate) use likelihood_weighting::lw_sample_into;
 pub use gibbs::GibbsSampling;
 pub use icpt::ImportanceCpts;
 pub use likelihood_weighting::LikelihoodWeighting;

@@ -1,0 +1,343 @@
+//! Parallel chunked sampling over the shared [`WorkPool`] — the paper's
+//! sample-level parallelism applied to the serving runtime.
+//!
+//! A sampling engine's budget is split into fixed-size chunks; each chunk
+//! draws from its own pre-split RNG stream ([`Pcg::stream`]), so the merged
+//! result is bit-identical for any worker count — including fully inline
+//! execution with no pool at all. Chunks are scheduled in *rounds*: after
+//! each round the controller measures the inter-chunk variance of the
+//! marginal estimates and stops early once the estimated standard error of
+//! the mean falls under the caller's error budget. That adaptive stopping
+//! is what lets the serving tier spend samples proportional to query
+//! difficulty instead of a fixed worst-case budget.
+//!
+//! Deadlock note: [`run_chunked`] blocks the calling thread until its
+//! chunks finish, so it must not itself run *on* the pool it fans out to.
+//! The coordinator calls it from the batcher thread, never from a pool
+//! worker.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::inference::approx::PosteriorAccumulator;
+use crate::network::BayesianNetwork;
+use crate::parallel::WorkPool;
+use crate::rng::Pcg;
+
+/// A sampling kernel: draw `count` samples with `rng`, accumulating
+/// weighted samples into `acc`.
+pub type ChunkKernel = dyn Fn(&mut Pcg, usize, &mut PosteriorAccumulator) + Send + Sync;
+
+/// Tuning for one chunked run.
+#[derive(Clone, Debug)]
+pub struct ChunkedConfig {
+    /// Total sample budget (upper bound; adaptive stopping may use less).
+    pub max_samples: usize,
+    /// Samples per chunk (one pool job per chunk).
+    pub chunk: usize,
+    /// Chunks scheduled per round when adaptive stopping is enabled; the
+    /// stopping rule runs at the barrier between rounds, so this also
+    /// caps in-flight chunks — size it to at least the pool width. With
+    /// `error_budget == 0.0` there is no rule to consult and every chunk
+    /// is fanned out in a single round (no barriers).
+    pub round_chunks: usize,
+    /// Target standard error of the mean, measured across chunk-level
+    /// marginal estimates (max over all variable states; only chunks that
+    /// accepted at least one sample count). `0.0` disables adaptive
+    /// stopping and the full budget is always spent.
+    pub error_budget: f64,
+    /// Rounds to complete before the stopping rule is first consulted.
+    pub min_rounds: usize,
+    /// Minimum total accepted samples before the stopping rule may fire —
+    /// sparse rejection-sampling chunks whose few (often identical)
+    /// accepted samples would otherwise produce a spuriously tiny
+    /// inter-chunk variance.
+    pub min_accepted: usize,
+    /// Root seed for the per-chunk RNG streams.
+    pub seed: u64,
+}
+
+impl Default for ChunkedConfig {
+    fn default() -> Self {
+        ChunkedConfig {
+            max_samples: 20_000,
+            chunk: 2048,
+            round_chunks: 8,
+            error_budget: 0.0,
+            min_rounds: 2,
+            min_accepted: 1_000,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Outcome of a chunked run.
+#[derive(Clone, Debug)]
+pub struct ChunkedRun {
+    /// Merged accumulator over every completed chunk (merge order is the
+    /// chunk index order, so results are worker-count invariant).
+    pub acc: PosteriorAccumulator,
+    /// Samples actually drawn (incl. rejected/zero-weight ones).
+    pub samples_drawn: usize,
+    /// Chunks completed.
+    pub chunks: usize,
+    /// Rounds completed.
+    pub rounds: usize,
+    /// Did the controller stop early within the error budget?
+    pub converged: bool,
+    /// Last measured max standard error (0.0 if never measured).
+    pub max_sem: f64,
+}
+
+/// Max (over variable states) standard error of the mean across per-chunk
+/// marginal estimates.
+fn max_standard_error(estimates: &[Vec<f64>]) -> f64 {
+    let k = estimates.len();
+    if k < 2 {
+        return f64::INFINITY;
+    }
+    let dims = estimates[0].len();
+    let mut worst = 0.0f64;
+    for d in 0..dims {
+        let mean = estimates.iter().map(|e| e[d]).sum::<f64>() / k as f64;
+        let var =
+            estimates.iter().map(|e| (e[d] - mean).powi(2)).sum::<f64>() / (k - 1) as f64;
+        worst = worst.max((var / k as f64).sqrt());
+    }
+    worst
+}
+
+/// Run `kernel` over the chunked sample budget, fanning chunks over `pool`
+/// when one is given (inline otherwise), merging partial accumulators in
+/// chunk-index order and applying the adaptive stopping rule between
+/// rounds. The result is deterministic in `config.seed` and independent of
+/// the pool's worker count.
+///
+/// The stopping rule only measures chunks that accepted at least one
+/// sample: under rejection-style kernels with rare evidence, empty chunks
+/// all report the same uniform-fallback posterior, and counting them
+/// would drive the inter-chunk variance to zero — a false convergence on
+/// exactly the queries that need the most samples.
+pub fn run_chunked(
+    net: &Arc<BayesianNetwork>,
+    config: &ChunkedConfig,
+    pool: Option<&WorkPool>,
+    kernel: Arc<ChunkKernel>,
+) -> ChunkedRun {
+    let chunk = config.chunk.max(1);
+    let total_chunks = config.max_samples.div_ceil(chunk).max(1);
+    // Rounds exist only to serve the stopping rule; without one, a single
+    // full fan-out keeps every pool worker busy with no barriers. The
+    // round size never depends on the pool, so stopping points — and
+    // therefore results — stay worker-count invariant.
+    let round_chunks = if config.error_budget > 0.0 {
+        config.round_chunks.max(1)
+    } else {
+        total_chunks
+    };
+    let count_of = |i: usize| chunk.min(config.max_samples.saturating_sub(i * chunk));
+
+    let states_total: usize = (0..net.n_vars()).map(|v| net.cardinality(v)).sum();
+    let mut global = PosteriorAccumulator::new(net);
+    let mut chunk_marginals: Vec<Vec<f64>> = Vec::new();
+    let mut drawn = 0usize;
+    let mut chunks_done = 0usize;
+    let mut rounds = 0usize;
+    let mut converged = false;
+    let mut max_sem = 0.0f64;
+
+    let mut next = 0usize;
+    while next < total_chunks {
+        let end = (next + round_chunks).min(total_chunks);
+        let partials: Vec<PosteriorAccumulator> = match pool {
+            Some(pool) if pool.threads() > 1 => {
+                let (tx, rx) = mpsc::channel::<(usize, PosteriorAccumulator)>();
+                for i in next..end {
+                    let tx = tx.clone();
+                    let kernel = Arc::clone(&kernel);
+                    let net = Arc::clone(net);
+                    let count = count_of(i);
+                    let seed = config.seed;
+                    pool.execute(move || {
+                        let mut rng = Pcg::stream(seed, i as u64);
+                        let mut acc = PosteriorAccumulator::new(&net);
+                        (*kernel)(&mut rng, count, &mut acc);
+                        let _ = tx.send((i, acc));
+                    });
+                }
+                drop(tx);
+                let mut slots: Vec<Option<PosteriorAccumulator>> =
+                    (next..end).map(|_| None).collect();
+                for _ in next..end {
+                    let (i, acc) = rx.recv().expect("chunk worker dropped its result");
+                    slots[i - next] = Some(acc);
+                }
+                slots.into_iter().map(|s| s.expect("chunk result missing")).collect()
+            }
+            _ => (next..end)
+                .map(|i| {
+                    let mut rng = Pcg::stream(config.seed, i as u64);
+                    let mut acc = PosteriorAccumulator::new(net);
+                    (*kernel)(&mut rng, count_of(i), &mut acc);
+                    acc
+                })
+                .collect(),
+        };
+        for (off, acc) in partials.iter().enumerate() {
+            drawn += count_of(next + off);
+            if acc.n_samples > 0 {
+                let mut flat = Vec::with_capacity(states_total);
+                for v in 0..net.n_vars() {
+                    flat.extend(acc.posterior(v));
+                }
+                chunk_marginals.push(flat);
+            }
+            global.merge(acc);
+            chunks_done += 1;
+        }
+        rounds += 1;
+        next = end;
+        if config.error_budget > 0.0
+            && rounds >= config.min_rounds.max(1)
+            && chunk_marginals.len() >= 2
+            && global.n_samples >= config.min_accepted
+        {
+            max_sem = max_standard_error(&chunk_marginals);
+            if max_sem <= config.error_budget {
+                converged = true;
+                break;
+            }
+        }
+    }
+    ChunkedRun {
+        acc: global,
+        samples_drawn: drawn,
+        chunks: chunks_done,
+        rounds,
+        converged,
+        max_sem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Assignment;
+    use crate::network::repository;
+    use crate::sampling::forward_sample_into;
+
+    fn forward_kernel(net: &BayesianNetwork) -> Arc<ChunkKernel> {
+        let net = net.clone();
+        Arc::new(move |rng, count, acc| {
+            let mut a = Assignment::zeros(net.n_vars());
+            for _ in 0..count {
+                forward_sample_into(&net, rng, &mut a);
+                acc.add(&a.values, 1.0);
+            }
+        })
+    }
+
+    #[test]
+    fn worker_count_invariant() {
+        let net = Arc::new(repository::sprinkler());
+        let config = ChunkedConfig { max_samples: 8192, chunk: 512, ..Default::default() };
+        let inline = run_chunked(&net, &config, None, forward_kernel(&net));
+        for threads in [1usize, 2, 4] {
+            let pool = WorkPool::new(threads);
+            let pooled = run_chunked(&net, &config, Some(&pool), forward_kernel(&net));
+            assert_eq!(pooled.samples_drawn, inline.samples_drawn);
+            for v in 0..net.n_vars() {
+                assert_eq!(
+                    pooled.acc.posterior(v),
+                    inline.acc.posterior(v),
+                    "threads={threads} var={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_budget_without_error_budget() {
+        let net = Arc::new(repository::cancer());
+        let config = ChunkedConfig {
+            max_samples: 5000,
+            chunk: 2048,
+            error_budget: 0.0,
+            ..Default::default()
+        };
+        let run = run_chunked(&net, &config, None, forward_kernel(&net));
+        assert_eq!(run.samples_drawn, 5000);
+        assert_eq!(run.chunks, 3);
+        assert!(!run.converged);
+    }
+
+    #[test]
+    fn adaptive_stop_spends_less_on_easy_targets() {
+        let net = Arc::new(repository::sprinkler());
+        let config = ChunkedConfig {
+            max_samples: 400_000,
+            chunk: 1024,
+            round_chunks: 2,
+            error_budget: 0.02,
+            min_rounds: 2,
+            ..Default::default()
+        };
+        let run = run_chunked(&net, &config, None, forward_kernel(&net));
+        assert!(run.converged, "max_sem {} never hit budget", run.max_sem);
+        assert!(run.samples_drawn < 400_000, "drew the full budget");
+        assert!(run.max_sem <= 0.02);
+    }
+
+    #[test]
+    fn empty_chunks_do_not_fake_convergence() {
+        // A kernel that never accepts a sample (rejection sampling under
+        // near-impossible evidence) must not trip the stopping rule via
+        // identical uniform-fallback chunk posteriors.
+        let net = Arc::new(repository::sprinkler());
+        let config = ChunkedConfig {
+            max_samples: 16_384,
+            chunk: 1024,
+            round_chunks: 2,
+            error_budget: 0.05,
+            min_rounds: 2,
+            ..Default::default()
+        };
+        let kernel: Arc<ChunkKernel> = Arc::new(|_rng, _count, _acc| {});
+        let run = run_chunked(&net, &config, None, kernel);
+        assert!(!run.converged, "all-empty chunks must not report convergence");
+        assert_eq!(run.samples_drawn, 16_384, "the full budget must be spent");
+    }
+
+    #[test]
+    fn sparse_chunks_do_not_fake_convergence() {
+        // Rejection sampling under rare evidence: chunks that accept only
+        // one (identical) sample each have zero inter-chunk variance, but
+        // the `min_accepted` floor keeps the stopping rule from trusting
+        // that signal.
+        let net = Arc::new(repository::sprinkler());
+        let config = ChunkedConfig {
+            max_samples: 32_768,
+            chunk: 1024,
+            round_chunks: 2,
+            error_budget: 0.01,
+            min_rounds: 2,
+            ..Default::default()
+        };
+        let kernel: Arc<ChunkKernel> = Arc::new(|_rng, _count, acc| {
+            acc.add(&[0, 0, 0, 0], 1.0);
+        });
+        let run = run_chunked(&net, &config, None, kernel);
+        assert!(!run.converged, "sparse identical chunks must not report convergence");
+        assert_eq!(run.samples_drawn, 32_768, "the full budget must be spent");
+    }
+
+    #[test]
+    fn zero_budget_is_safe() {
+        let net = Arc::new(repository::sprinkler());
+        let config = ChunkedConfig { max_samples: 0, ..Default::default() };
+        let run = run_chunked(&net, &config, None, forward_kernel(&net));
+        assert_eq!(run.samples_drawn, 0);
+        // Uniform fallback posteriors from an empty accumulator.
+        assert_eq!(run.acc.posterior(0), vec![0.5, 0.5]);
+    }
+}

@@ -1,0 +1,147 @@
+//! The serving-tier engine abstraction: one uniform query interface over
+//! heterogeneous inference engines.
+//!
+//! OpenGM and PGMax both show that a PGM library grows solvers cleanly
+//! only when callers program against one engine interface. This module is
+//! that layer for the serving stack:
+//!
+//! * [`InferenceEngine`] — the shared-reference, thread-safe query trait
+//!   (posterior marginal / all marginals / evidence probability). Distinct
+//!   from the one-shot [`crate::inference::InferenceEngine`] experiment
+//!   trait, which takes `&mut self` and borrows its network.
+//! * The exact tier — [`crate::inference::exact::QueryEngine`] implements
+//!   the trait over its compiled junction tree + calibration cache.
+//! * The approximate tier — [`ApproxEngine`] wraps the samplers
+//!   (likelihood weighting, AIS-BN, EPIS-BN, Gibbs, logic sampling,
+//!   self-importance, loopy BP) behind the same trait, fanning chunked
+//!   sample budgets over the shared [`crate::parallel::WorkPool`] with
+//!   per-chunk RNG streams and an adaptive-stopping controller
+//!   ([`run_chunked`]).
+//!
+//! The coordinator's query router composes both tiers: exact by default,
+//! shedding eligible traffic to the approximate tier under load (see
+//! [`crate::coordinator::ApproxConfig`]).
+
+mod chunked;
+mod samplers;
+
+pub use chunked::{run_chunked, ChunkKernel, ChunkedConfig, ChunkedRun};
+pub use samplers::{ApproxEngine, EngineRun, SamplerKind};
+
+use crate::core::{Evidence, VarId};
+use crate::inference::exact::QueryEngine;
+use crate::inference::Posterior;
+
+/// Uniform serving-side query interface over all inference engines.
+///
+/// Implementations are shared across threads (`&self`, `Send + Sync`), so
+/// one engine instance can back a whole serving tier.
+pub trait InferenceEngine: Send + Sync {
+    /// Engine name for replies, metrics and benches.
+    fn name(&self) -> &'static str;
+
+    /// Whether answers are exact (junction tree) rather than estimates.
+    fn is_exact(&self) -> bool;
+
+    /// Posterior P(var | evidence), normalized.
+    fn posterior(&self, var: VarId, evidence: &Evidence) -> Posterior;
+
+    /// Posterior of every variable given the evidence (point mass on
+    /// evidence variables).
+    fn posterior_all(&self, evidence: &Evidence) -> Vec<Posterior>;
+
+    /// P(evidence), when this engine can estimate it (`None` otherwise —
+    /// e.g. Gibbs chains and loopy BP).
+    fn evidence_probability(&self, evidence: &Evidence) -> Option<f64>;
+}
+
+impl InferenceEngine for QueryEngine {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn is_exact(&self) -> bool {
+        true
+    }
+
+    fn posterior(&self, var: VarId, evidence: &Evidence) -> Posterior {
+        QueryEngine::posterior(self, var, evidence)
+    }
+
+    fn posterior_all(&self, evidence: &Evidence) -> Vec<Posterior> {
+        QueryEngine::posterior_all(self, evidence)
+    }
+
+    fn evidence_probability(&self, evidence: &Evidence) -> Option<f64> {
+        Some(QueryEngine::evidence_probability(self, evidence))
+    }
+}
+
+/// Which tier a serving component answers queries with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Every query through the exact tier (the pre-existing behaviour).
+    Exact,
+    /// Exact by default; shed eligible queries to the approximate tier
+    /// when load crosses the configured thresholds.
+    Auto,
+    /// Every answerable query through the given sampler.
+    Force(SamplerKind),
+}
+
+impl EngineChoice {
+    /// Parse a CLI flag value: `exact`, `auto`, or any
+    /// [`SamplerKind::parse`] flag (`lw`, `aisbn`, `epis`, `gibbs`, ...).
+    pub fn parse(s: &str) -> Option<EngineChoice> {
+        match s {
+            "exact" | "jt" => Some(EngineChoice::Exact),
+            "auto" => Some(EngineChoice::Auto),
+            other => SamplerKind::parse(other).map(EngineChoice::Force),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::approx::ApproxOptions;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn engine_choice_parses() {
+        assert_eq!(EngineChoice::parse("exact"), Some(EngineChoice::Exact));
+        assert_eq!(EngineChoice::parse("auto"), Some(EngineChoice::Auto));
+        assert_eq!(
+            EngineChoice::parse("aisbn"),
+            Some(EngineChoice::Force(SamplerKind::AisBn))
+        );
+        assert_eq!(EngineChoice::parse("bogus"), None);
+    }
+
+    #[test]
+    fn exact_and_approx_share_one_interface() {
+        let net = repository::sprinkler();
+        let exact = QueryEngine::new(&net);
+        let approx = ApproxEngine::new(
+            &net,
+            SamplerKind::LikelihoodWeighting,
+            ApproxOptions { n_samples: 60_000, ..Default::default() },
+        );
+        let engines: [&dyn InferenceEngine; 2] = [&exact, &approx];
+        let ev = Evidence::new().with(3, 1);
+        let reference = InferenceEngine::posterior_all(&exact, &ev);
+        for engine in engines {
+            assert_eq!(engine.is_exact(), engine.name() == "exact");
+            let posts = engine.posterior_all(&ev);
+            for v in 0..net.n_vars() {
+                assert_close_dist(&posts[v], &reference[v], 0.02, engine.name());
+            }
+            let p = engine.posterior(2, &ev);
+            assert_close_dist(&p, &reference[2], 0.02, engine.name());
+            let pe = engine.evidence_probability(&ev).expect("both estimate P(e)");
+            let exact_pe = QueryEngine::evidence_probability(&exact, &ev);
+            assert!((pe - exact_pe).abs() < 0.01, "{} P(e): {pe} vs {exact_pe}", engine.name());
+        }
+    }
+}

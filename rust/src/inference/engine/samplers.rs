@@ -1,0 +1,451 @@
+//! Owned, thread-safe adapters wrapping the approximate engines for the
+//! serving tier.
+//!
+//! The engines under [`crate::inference::approx`] borrow a network and take
+//! `&mut self` — the right shape for one-shot experiments, the wrong one
+//! for a router that shares engines across threads. [`ApproxEngine`] owns
+//! its network and configuration, is `Send + Sync`, and answers every
+//! query through the serving [`InferenceEngine`](super::InferenceEngine)
+//! trait. The sampling kinds run through the chunked work-pool fan-out
+//! ([`super::run_chunked`]) with per-chunk RNG streams, so answers are
+//! deterministic in the seed and invariant to worker count.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::core::{Assignment, Evidence, VarId};
+use crate::inference::approx::{
+    apply_evidence_posteriors, lw_sample_into, AisBn, ApproxOptions, EpisBn,
+    GibbsSampling, ImportanceCpts, LoopyBp, LoopyBpOptions, PosteriorAccumulator,
+    SelfImportance,
+};
+use crate::inference::{InferenceEngine as OneShotEngine, Posterior};
+use crate::network::BayesianNetwork;
+use crate::parallel::WorkPool;
+use crate::sampling::forward_sample_into;
+use super::chunked::{run_chunked, ChunkKernel, ChunkedConfig};
+use super::InferenceEngine;
+
+/// Which approximate algorithm an [`ApproxEngine`] wraps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    LikelihoodWeighting,
+    AisBn,
+    EpisBn,
+    Gibbs,
+    LogicSampling,
+    SelfImportance,
+    LoopyBp,
+}
+
+impl SamplerKind {
+    /// Every wrapped kind, in CLI-listing order.
+    pub const ALL: [SamplerKind; 7] = [
+        SamplerKind::LikelihoodWeighting,
+        SamplerKind::AisBn,
+        SamplerKind::EpisBn,
+        SamplerKind::Gibbs,
+        SamplerKind::LogicSampling,
+        SamplerKind::SelfImportance,
+        SamplerKind::LoopyBp,
+    ];
+
+    /// Parse a CLI flag value (`lw`, `aisbn`/`ais`, `epis`, `gibbs`,
+    /// `pls`, `sis`, `lbp`).
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "lw" => Some(SamplerKind::LikelihoodWeighting),
+            "ais" | "aisbn" => Some(SamplerKind::AisBn),
+            "epis" => Some(SamplerKind::EpisBn),
+            "gibbs" => Some(SamplerKind::Gibbs),
+            "pls" => Some(SamplerKind::LogicSampling),
+            "sis" => Some(SamplerKind::SelfImportance),
+            "lbp" => Some(SamplerKind::LoopyBp),
+            _ => None,
+        }
+    }
+
+    /// Engine name, matching the wrapped engine's legacy `name()`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SamplerKind::LikelihoodWeighting => "likelihood-weighting",
+            SamplerKind::AisBn => "ais-bn",
+            SamplerKind::EpisBn => "epis-bn",
+            SamplerKind::Gibbs => "gibbs",
+            SamplerKind::LogicSampling => "logic-sampling",
+            SamplerKind::SelfImportance => "self-importance",
+            SamplerKind::LoopyBp => "loopy-bp",
+        }
+    }
+
+    /// Short CLI flag value for this kind.
+    pub fn flag(self) -> &'static str {
+        match self {
+            SamplerKind::LikelihoodWeighting => "lw",
+            SamplerKind::AisBn => "aisbn",
+            SamplerKind::EpisBn => "epis",
+            SamplerKind::Gibbs => "gibbs",
+            SamplerKind::LogicSampling => "pls",
+            SamplerKind::SelfImportance => "sis",
+            SamplerKind::LoopyBp => "lbp",
+        }
+    }
+
+    /// Whether the mean importance weight of this kind is an unbiased
+    /// estimator of P(evidence). Gibbs chains and loopy BP carry no such
+    /// estimate; the router answers those queries on the exact tier.
+    pub fn estimates_evidence_probability(self) -> bool {
+        matches!(
+            self,
+            SamplerKind::LikelihoodWeighting
+                | SamplerKind::AisBn
+                | SamplerKind::EpisBn
+                | SamplerKind::LogicSampling
+        )
+    }
+}
+
+/// Everything one approximate answer carries beyond the posteriors.
+#[derive(Clone, Debug)]
+pub struct EngineRun {
+    /// Posterior of every variable (point mass on evidence variables).
+    pub posteriors: Vec<Posterior>,
+    /// Unbiased P(evidence) estimate when the kind supports one.
+    pub evidence_probability: Option<f64>,
+    /// Samples drawn (0 for the deterministic loopy-BP kind).
+    pub samples_drawn: usize,
+    /// Did the adaptive-stopping controller finish under budget?
+    pub converged: bool,
+    /// Last measured inter-chunk standard error (0.0 when not measured).
+    pub max_sem: f64,
+    /// Wall-clock of the run.
+    pub elapsed: std::time::Duration,
+}
+
+/// Owned serving adapter around one approximate algorithm.
+pub struct ApproxEngine {
+    /// `Arc`-held so per-query kernels capture a pointer clone, not a
+    /// deep copy of the network.
+    net: Arc<BayesianNetwork>,
+    kind: SamplerKind,
+    opts: ApproxOptions,
+    chunked: ChunkedConfig,
+    pool: Option<Arc<WorkPool>>,
+}
+
+impl ApproxEngine {
+    /// Wrap `kind` over a clone of `net`. The chunked-run budget, chunk
+    /// size and seed follow `opts`; chunks run inline until a pool is
+    /// attached with [`ApproxEngine::with_pool`].
+    pub fn new(net: &BayesianNetwork, kind: SamplerKind, opts: ApproxOptions) -> ApproxEngine {
+        let chunked = ChunkedConfig {
+            max_samples: opts.n_samples,
+            chunk: opts.chunk,
+            seed: opts.seed,
+            ..ChunkedConfig::default()
+        };
+        ApproxEngine { net: Arc::new(net.clone()), kind, opts, chunked, pool: None }
+    }
+
+    /// Fan sampling chunks over `pool` (answers stay identical — chunk RNG
+    /// streams and merge order are worker-count invariant).
+    pub fn with_pool(mut self, pool: Arc<WorkPool>) -> ApproxEngine {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Enable the adaptive-stopping controller with this target standard
+    /// error (see [`ChunkedConfig::error_budget`]).
+    pub fn with_error_budget(mut self, budget: f64) -> ApproxEngine {
+        self.chunked.error_budget = budget;
+        self
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    pub fn network(&self) -> &BayesianNetwork {
+        &self.net
+    }
+
+    /// One full approximate answer for `evidence`.
+    pub fn run(&self, evidence: &Evidence) -> EngineRun {
+        let t0 = Instant::now();
+        let mut run = match self.kind {
+            SamplerKind::LikelihoodWeighting => self.run_lw(evidence),
+            SamplerKind::LogicSampling => self.run_pls(evidence),
+            SamplerKind::AisBn => self.run_ais(evidence),
+            SamplerKind::EpisBn => self.run_epis(evidence),
+            SamplerKind::Gibbs => self.run_gibbs(evidence),
+            SamplerKind::SelfImportance => self.run_sis(evidence),
+            SamplerKind::LoopyBp => self.run_lbp(evidence),
+        };
+        run.elapsed = t0.elapsed();
+        run
+    }
+
+    /// Merge a chunked run (plus optional pre-accumulated phase) into the
+    /// final [`EngineRun`].
+    fn finish(
+        &self,
+        evidence: &Evidence,
+        acc: PosteriorAccumulator,
+        drawn: usize,
+        converged: bool,
+        max_sem: f64,
+    ) -> EngineRun {
+        let mut posteriors = acc.posteriors(self.net.n_vars());
+        apply_evidence_posteriors(&self.net, evidence, &mut posteriors);
+        let weighted = self.kind.estimates_evidence_probability();
+        let evidence_probability = if weighted && drawn > 0 {
+            Some(acc.total_weight / drawn as f64)
+        } else {
+            None
+        };
+        EngineRun {
+            posteriors,
+            evidence_probability,
+            samples_drawn: drawn,
+            converged,
+            max_sem,
+            elapsed: std::time::Duration::ZERO,
+        }
+    }
+
+    fn run_kernel(&self, evidence: &Evidence, kernel: Arc<ChunkKernel>) -> EngineRun {
+        let run = run_chunked(&self.net, &self.chunked, self.pool.as_deref(), kernel);
+        self.finish(evidence, run.acc, run.samples_drawn, run.converged, run.max_sem)
+    }
+
+    fn run_lw(&self, evidence: &Evidence) -> EngineRun {
+        let net = Arc::clone(&self.net);
+        let ev = evidence.clone();
+        let kernel: Arc<ChunkKernel> = Arc::new(move |rng, count, acc| {
+            let mut a = Assignment::zeros(net.n_vars());
+            for _ in 0..count {
+                let w = lw_sample_into(&net, &ev, rng, &mut a);
+                if w > 0.0 {
+                    acc.add(&a.values, w);
+                }
+            }
+        });
+        self.run_kernel(evidence, kernel)
+    }
+
+    fn run_pls(&self, evidence: &Evidence) -> EngineRun {
+        let net = Arc::clone(&self.net);
+        let ev = evidence.clone();
+        let kernel: Arc<ChunkKernel> = Arc::new(move |rng, count, acc| {
+            let mut a = Assignment::zeros(net.n_vars());
+            for _ in 0..count {
+                forward_sample_into(&net, rng, &mut a);
+                if ev.consistent_with(&a) {
+                    acc.add(&a.values, 1.0);
+                }
+            }
+        });
+        self.run_kernel(evidence, kernel)
+    }
+
+    /// Shared chunked phase for the ICPT-proposal kinds (AIS-BN phase 2,
+    /// EPIS-BN).
+    fn run_icpt(
+        &self,
+        evidence: &Evidence,
+        icpt: ImportanceCpts,
+        config: ChunkedConfig,
+        prior: Option<(PosteriorAccumulator, usize)>,
+    ) -> EngineRun {
+        let net = Arc::clone(&self.net);
+        let ev = evidence.clone();
+        let kernel: Arc<ChunkKernel> = Arc::new(move |rng, count, acc| {
+            let mut a = Assignment::zeros(net.n_vars());
+            for _ in 0..count {
+                let w = icpt.sample_into(&net, &ev, rng, &mut a);
+                if w > 0.0 {
+                    acc.add(&a.values, w);
+                }
+            }
+        });
+        let run = run_chunked(&self.net, &config, self.pool.as_deref(), kernel);
+        let mut acc = run.acc;
+        let mut drawn = run.samples_drawn;
+        if let Some((phase_acc, phase_drawn)) = prior {
+            acc.merge(&phase_acc);
+            drawn += phase_drawn;
+        }
+        self.finish(evidence, acc, drawn, run.converged, run.max_sem)
+    }
+
+    fn run_ais(&self, evidence: &Evidence) -> EngineRun {
+        // Learning phase stays sequential (rounds depend on each other);
+        // the frozen-proposal phase fans over the pool.
+        let ais = AisBn::new(&self.net, self.opts.clone());
+        let learned = ais.learn_proposal(evidence);
+        let config = ChunkedConfig {
+            max_samples: self.opts.n_samples.saturating_sub(learned.drawn),
+            seed: learned.next_seed,
+            ..self.chunked.clone()
+        };
+        self.run_icpt(evidence, learned.icpt, config, Some((learned.acc, learned.drawn)))
+    }
+
+    fn run_epis(&self, evidence: &Evidence) -> EngineRun {
+        let epis = EpisBn::new(&self.net, self.opts.clone());
+        let icpt = epis.build_proposal(evidence);
+        self.run_icpt(evidence, icpt, self.chunked.clone(), None)
+    }
+
+    fn run_gibbs(&self, evidence: &Evidence) -> EngineRun {
+        // Chains are inherently sequential; each chunk runs one chain of
+        // `count` collected sweeps, so chains are what fan over the pool.
+        let net = Arc::clone(&self.net);
+        let ev = evidence.clone();
+        let opts = self.opts.clone();
+        let kernel: Arc<ChunkKernel> = Arc::new(move |rng, count, acc| {
+            if count == 0 {
+                return;
+            }
+            let gibbs = GibbsSampling::new(&net, opts.clone());
+            let chain = gibbs.run_chain(rng.clone(), count, &ev);
+            acc.merge(&chain);
+        });
+        self.run_kernel(evidence, kernel)
+    }
+
+    fn run_sis(&self, evidence: &Evidence) -> EngineRun {
+        // Self-importance revises its proposal from the running estimate,
+        // which is sequentially dependent — answer through the legacy
+        // engine (it parallelizes internally via `opts.threads`).
+        let mut sis = SelfImportance::new(&self.net, self.opts.clone());
+        let posteriors = sis.query_all(evidence);
+        EngineRun {
+            posteriors,
+            evidence_probability: None,
+            samples_drawn: self.opts.n_samples,
+            converged: false,
+            max_sem: 0.0,
+            elapsed: std::time::Duration::ZERO,
+        }
+    }
+
+    fn run_lbp(&self, evidence: &Evidence) -> EngineRun {
+        let bp_opts = LoopyBpOptions { threads: self.opts.threads, ..Default::default() };
+        let mut bp = LoopyBp::new(&self.net, bp_opts);
+        let posteriors = bp.query_all(evidence);
+        EngineRun {
+            posteriors,
+            evidence_probability: None,
+            samples_drawn: 0,
+            converged: bp.converged,
+            max_sem: 0.0,
+            elapsed: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl InferenceEngine for ApproxEngine {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn is_exact(&self) -> bool {
+        false
+    }
+
+    fn posterior(&self, var: VarId, evidence: &Evidence) -> Posterior {
+        let mut run = self.run(evidence);
+        run.posteriors.swap_remove(var)
+    }
+
+    fn posterior_all(&self, evidence: &Evidence) -> Vec<Posterior> {
+        self.run(evidence).posteriors
+    }
+
+    fn evidence_probability(&self, evidence: &Evidence) -> Option<f64> {
+        self.run(evidence).evidence_probability
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+    use crate::testkit::assert_close_dist;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in SamplerKind::ALL {
+            assert_eq!(SamplerKind::parse(kind.flag()), Some(kind), "{}", kind.name());
+        }
+        assert_eq!(SamplerKind::parse("ais"), Some(SamplerKind::AisBn));
+        assert_eq!(SamplerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn lw_adapter_estimates_evidence_probability() {
+        let net = repository::asia();
+        let xray = net.var_index("xray").unwrap();
+        let ev = Evidence::new().with(xray, 1);
+        let engine = ApproxEngine::new(
+            &net,
+            SamplerKind::LikelihoodWeighting,
+            ApproxOptions { n_samples: 60_000, ..Default::default() },
+        );
+        let run = engine.run(&ev);
+        let expect = net.brute_force_posterior(xray, &Evidence::new())[1];
+        let got = run.evidence_probability.expect("lw estimates P(e)");
+        assert!((got - expect).abs() < 0.01, "{got} vs {expect}");
+        assert_eq!(run.samples_drawn, 60_000);
+    }
+
+    #[test]
+    fn gibbs_adapter_has_no_evidence_probability() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(3, 1);
+        let engine = ApproxEngine::new(
+            &net,
+            SamplerKind::Gibbs,
+            ApproxOptions { n_samples: 4_000, ..Default::default() },
+        );
+        assert!(engine.run(&ev).evidence_probability.is_none());
+    }
+
+    #[test]
+    fn pool_does_not_change_answers() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(3, 1);
+        let opts = ApproxOptions { n_samples: 16_000, ..Default::default() };
+        for kind in [SamplerKind::LikelihoodWeighting, SamplerKind::Gibbs] {
+            let inline = ApproxEngine::new(&net, kind, opts.clone()).run(&ev);
+            let pooled = ApproxEngine::new(&net, kind, opts.clone())
+                .with_pool(Arc::new(WorkPool::new(4)))
+                .run(&ev);
+            assert_eq!(
+                inline.posteriors,
+                pooled.posteriors,
+                "{} must be worker-count invariant",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn adapters_converge_loosely() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(3, 1);
+        for kind in [SamplerKind::LikelihoodWeighting, SamplerKind::EpisBn] {
+            let engine = ApproxEngine::new(
+                &net,
+                kind,
+                ApproxOptions { n_samples: 50_000, ..Default::default() },
+            );
+            let posts = engine.posterior_all(&ev);
+            for v in 0..net.n_vars() {
+                let expect = net.brute_force_posterior(v, &ev);
+                assert_close_dist(&posts[v], &expect, 0.03, kind.name());
+            }
+        }
+    }
+}

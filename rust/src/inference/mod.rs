@@ -6,8 +6,15 @@
 //! distribution of a variable given evidence — through the
 //! [`InferenceEngine`] trait, so the accuracy benchmarks (E7) and the
 //! classifier are engine-agnostic.
+//!
+//! The serving stack uses a second, shared-reference abstraction in
+//! [`engine`]: a thread-safe [`engine::InferenceEngine`] trait implemented
+//! by the exact [`exact::QueryEngine`] and by the [`engine::ApproxEngine`]
+//! sampler adapters, with work-pool chunked sampling and adaptive
+//! stopping.
 
 pub mod approx;
+pub mod engine;
 pub mod exact;
 
 use crate::core::{Evidence, VarId};

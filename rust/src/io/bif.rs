@@ -309,9 +309,9 @@ pub fn from_str(text: &str) -> Result<BayesianNetwork> {
                 let mut cfg = 0usize;
                 for &sp in &sorted_parents {
                     let k = bif_parents.iter().position(|&q| q == sp).unwrap();
-                    let st = variables[sp]
-                        .state_index(&states[k])
-                        .with_context(|| format!("bad state {:?} for {}", states[k], variables[sp].name))?;
+                    let st = variables[sp].state_index(&states[k]).with_context(|| {
+                        format!("bad state {:?} for {}", states[k], variables[sp].name)
+                    })?;
                     cfg = cfg * variables[sp].cardinality + st;
                 }
                 cfg

@@ -36,7 +36,11 @@
 //!   per network, [`inference::exact::CalibratedTree`] snapshots per
 //!   evidence set, LRU-cached by [`inference::exact::QueryEngine`]), with
 //!   evidence-grouped dynamic batching over the shared work pool
-//!   ([`coordinator::QueryRouter`]).
+//!   ([`coordinator::QueryRouter`]). Under load, batch-priority queries
+//!   shed to an approximate tier: the samplers wrapped behind the serving
+//!   [`inference::engine::InferenceEngine`] trait, fanning chunked sample
+//!   budgets over the same pool with per-chunk RNG streams and adaptive
+//!   stopping ([`inference::engine::ApproxEngine`]).
 
 pub mod benchkit;
 pub mod classify;

@@ -76,7 +76,12 @@ USAGE: fastpgm <subcommand> [flags]
            (classify serving; needs the xla-runtime feature + artifacts)
   serve-query --nets <n1,n2,..> [--requests N] [--clients C] [--cache K]
            [--evidence-pool E] [--threads T]   posterior-query serving demo
-           (pure Rust: compiled junction trees + LRU calibration cache)"
+           (pure Rust: compiled junction trees + LRU calibration cache)
+           [--engine exact|auto|lw|aisbn|epis|gibbs|pls|sis|lbp]
+           [--approx-sampler lw|aisbn|epis|gibbs|pls|sis|lbp]
+           [--approx-samples N] [--shed-queue D] [--batch-fraction F]
+           auto = exact tier by default, shedding batch-priority queries
+           to the --approx-sampler tier under queue/cache pressure"
     );
 }
 
@@ -415,9 +420,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// Drive the general posterior-query serving path: a [`QueryRouter`] over
 /// one or more built-in networks, hammered by concurrent clients drawing
 /// evidence from a bounded pool (serving traffic repeats itself — that is
-/// what the calibration cache exploits).
+/// what the calibration cache exploits). With `--engine auto` a fraction
+/// of the traffic is marked batch-priority and sheds to the approximate
+/// sampling tier under load; with a sampler name every query goes through
+/// that engine.
 fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
-    use fastpgm::coordinator::{BatcherConfig, QueryRequest, QueryRouter};
+    use fastpgm::coordinator::{
+        AnswerTier, ApproxConfig, BatcherConfig, QueryRequest, QueryRouter,
+    };
+    use fastpgm::inference::approx::ApproxOptions;
+    use fastpgm::inference::engine::{EngineChoice, SamplerKind};
     use fastpgm::inference::exact::QueryEngineConfig;
     use std::sync::Arc;
 
@@ -428,18 +440,47 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     let pool_size = args.parse_flag("evidence-pool", 32usize).max(1);
     let threads = args.parse_flag("threads", fastpgm::parallel::default_threads());
 
+    let engine_spec = args.flag_or("engine", "exact").to_string();
+    let choice = EngineChoice::parse(&engine_spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown engine {engine_spec:?} (exact|auto|lw|aisbn|epis|gibbs|pls|sis|lbp)"
+        )
+    })?;
+    let shed_kind = match choice {
+        EngineChoice::Force(kind) => kind,
+        _ => {
+            let spec = args.flag_or("approx-sampler", "lw");
+            SamplerKind::parse(spec)
+                .ok_or_else(|| anyhow::anyhow!("unknown --approx-sampler {spec:?}"))?
+        }
+    };
+    let approx = ApproxConfig {
+        engine: choice,
+        kind: shed_kind,
+        opts: ApproxOptions {
+            n_samples: args.parse_flag("approx-samples", 20_000usize),
+            ..Default::default()
+        },
+        shed_queue_depth: args.parse_flag("shed-queue", 8usize),
+        ..Default::default()
+    };
+    let batch_fraction = args.parse_flag("batch-fraction", 0.5f64).clamp(0.0, 1.0);
+    let mark_batch = matches!(choice, EngineChoice::Auto);
+
     let mut router = QueryRouter::new(threads);
     let mut models: Vec<(String, BayesianNetwork)> = Vec::new();
     for name in nets_spec.split(',').filter(|n| !n.is_empty()) {
         let net = load_net(name)?;
-        router.register(
+        router.register_with_approx(
             name,
             &net,
             QueryEngineConfig { cache_capacity: cache, ..Default::default() },
             BatcherConfig::default(),
+            approx.clone(),
         );
         println!(
-            "registered {name}: {} vars, junction tree compiled once, cache={cache}",
+            "registered {name}: {} vars, junction tree compiled once, cache={cache}, \
+             engine={engine_spec}",
             net.n_vars()
         );
         models.push((name.to_string(), net));
@@ -464,16 +505,25 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             let router = Arc::clone(&router);
             let models = Arc::clone(&models);
             let pools = Arc::clone(&pools);
-            std::thread::spawn(move || -> anyhow::Result<()> {
+            std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
                 let mut rng = Pcg::seed_from(100 + c as u64);
+                let mut exact_served = 0usize;
+                let mut approx_served = 0usize;
                 for i in 0..per_client {
                     let m = (c + i) % models.len();
                     let (name, net) = &models[m];
                     let ev = pools[m][rng.below(pools[m].len())].clone();
                     let var = fastpgm::testkit::gen_query_var(&mut rng, net, &ev);
-                    let reply =
-                        router.query(name, QueryRequest::marginal(var, ev))?;
-                    let p = reply
+                    let mut request = QueryRequest::marginal(var, ev);
+                    if mark_batch && rng.bool_with(batch_fraction) {
+                        request = request.batch_priority();
+                    }
+                    let routed = router.query_routed(name, request)?;
+                    match routed.tier {
+                        AnswerTier::Exact => exact_served += 1,
+                        AnswerTier::Approx => approx_served += 1,
+                    }
+                    let p = routed
                         .into_marginal()
                         .ok_or_else(|| anyhow::anyhow!("wrong reply variant"))?;
                     let mass: f64 = p.iter().sum();
@@ -482,19 +532,23 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
                         "posterior not normalized: {mass}"
                     );
                 }
-                Ok(())
+                Ok((exact_served, approx_served))
             })
         })
         .collect();
+    let mut exact_total = 0usize;
+    let mut approx_total = 0usize;
     for h in handles {
-        h.join().expect("client thread panicked")?;
+        let (e, a) = h.join().expect("client thread panicked")?;
+        exact_total += e;
+        approx_total += a;
     }
     let elapsed = t0.elapsed();
     let served = per_client * clients;
 
     println!(
         "served {served} posterior queries from {clients} clients in {elapsed:.2?} \
-         -> {:.0} queries/s end-to-end",
+         -> {:.0} queries/s end-to-end (tiers: exact={exact_total} approx={approx_total})",
         served as f64 / elapsed.as_secs_f64()
     );
     for (model, stats) in router.stats() {

@@ -148,7 +148,10 @@ pub fn skeleton_prf(learned: &Pdag, truth: &Dag) -> (f64, f64, f64) {
 
 /// Edge-difference report between two DAGs (extra, missing, reversed) —
 /// used by the format-transform CLI for human-readable diffs.
-pub fn dag_diff(a: &Dag, b: &Dag) -> (Vec<(VarId, VarId)>, Vec<(VarId, VarId)>, Vec<(VarId, VarId)>) {
+pub fn dag_diff(
+    a: &Dag,
+    b: &Dag,
+) -> (Vec<(VarId, VarId)>, Vec<(VarId, VarId)>, Vec<(VarId, VarId)>) {
     let mut extra = Vec::new();
     let mut missing = Vec::new();
     let mut reversed = Vec::new();

@@ -228,7 +228,9 @@ mod tests {
 
     #[test]
     fn parallel_matches_sequential() {
-        let fg = FactorGraph::grid(4, 4, 2, 0.4, |r, c| vec![1.0 + r as f64 * 0.1, 1.0 + c as f64 * 0.1]);
+        let fg = FactorGraph::grid(4, 4, 2, 0.4, |r, c| {
+            vec![1.0 + r as f64 * 0.1, 1.0 + c as f64 * 0.1]
+        });
         let a = run_lbp(&fg, &Evidence::new(), &MrfLbpOptions { threads: 1, ..Default::default() });
         let b = run_lbp(&fg, &Evidence::new(), &MrfLbpOptions { threads: 4, ..Default::default() });
         for (x, y) in a.beliefs.iter().zip(&b.beliefs) {

@@ -51,6 +51,17 @@ impl Pcg {
         Pcg::seed_from(s)
     }
 
+    /// The `index`-th independent stream of `seed`, as a pure function of
+    /// `(seed, index)`. Unlike [`Pcg::split`] this advances no generator
+    /// state, so workers can derive their chunk's stream concurrently and
+    /// in any order — the property the chunked-parallel serving samplers
+    /// rely on for worker-count-invariant results.
+    pub fn stream(seed: u64, index: u64) -> Pcg {
+        let mut s = seed ^ index.wrapping_mul(0xA076_1D64_78BD_642F);
+        let expanded = splitmix64(&mut s);
+        Pcg::seed_from(expanded)
+    }
+
     /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
@@ -233,6 +244,23 @@ mod tests {
         let mut s1 = root.split(1);
         let same = (0..64).filter(|_| s0.next_u32() == s1.next_u32()).count();
         assert!(same <= 1);
+    }
+
+    #[test]
+    fn stateless_streams_deterministic_and_distinct() {
+        let mut a = Pcg::stream(42, 3);
+        let mut b = Pcg::stream(42, 3);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg::stream(42, 4);
+        let mut d = Pcg::stream(43, 3);
+        let mut a = Pcg::stream(42, 3);
+        let same_idx = (0..64).filter(|_| a.next_u32() == c.next_u32()).count();
+        assert!(same_idx <= 1, "{same_idx} collisions across indices");
+        let mut a = Pcg::stream(42, 3);
+        let same_seed = (0..64).filter(|_| a.next_u32() == d.next_u32()).count();
+        assert!(same_seed <= 1, "{same_seed} collisions across seeds");
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! The approximate serving tier end to end: wrapped-sampler convergence
+//! against the exact `QueryEngine` (seeded, property-style), chunked-merge
+//! determinism across worker counts, adaptive stopping, and load-adaptive
+//! routing under induced queue pressure.
+
+use fastpgm::coordinator::{
+    AnswerTier, ApproxConfig, BatcherConfig, QueryRequest, QueryRouter,
+};
+use fastpgm::core::Evidence;
+use fastpgm::inference::approx::ApproxOptions;
+use fastpgm::inference::engine::{ApproxEngine, EngineChoice, SamplerKind};
+use fastpgm::inference::exact::{QueryEngine, QueryEngineConfig};
+use fastpgm::network::{repository, BayesianNetwork};
+use fastpgm::parallel::WorkPool;
+use fastpgm::rng::Pcg;
+use fastpgm::testkit;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn l1(p: &[f64], q: &[f64]) -> f64 {
+    p.iter().zip(q).map(|(a, b)| (a - b).abs()).sum()
+}
+
+/// Random single-variable evidence whose probability is not tiny — the
+/// convergence tolerances below assume a healthy effective sample size;
+/// rare-evidence behaviour is covered by the samplers' own unit tests.
+fn likely_evidence(rng: &mut Pcg, net: &BayesianNetwork, exact: &QueryEngine) -> Evidence {
+    loop {
+        let ev = testkit::gen_evidence(rng, net, 1);
+        if exact.evidence_probability(&ev) >= 0.1 {
+            return ev;
+        }
+    }
+}
+
+#[test]
+fn wrapped_samplers_match_exact_within_tolerance() {
+    // Property-style: every wrapped sampling engine vs the exact
+    // QueryEngine over seeded random evidence, loose L1 tolerance at a
+    // high fixed-seed sample budget.
+    let sampler_kinds = [
+        SamplerKind::LikelihoodWeighting,
+        SamplerKind::LogicSampling,
+        SamplerKind::SelfImportance,
+        SamplerKind::AisBn,
+        SamplerKind::EpisBn,
+    ];
+    for net in [repository::cancer(), repository::sprinkler()] {
+        let exact = QueryEngine::new(&net);
+        testkit::property(&format!("samplers-vs-exact-{}", net.name()), 0xA11CE, 3, |rng| {
+            let ev = likely_evidence(rng, &net, &exact);
+            let reference = exact.posterior_all(&ev);
+            for kind in sampler_kinds {
+                let engine = ApproxEngine::new(
+                    &net,
+                    kind,
+                    ApproxOptions { n_samples: 100_000, seed: 0xFEED, ..Default::default() },
+                );
+                let run = engine.run(&ev);
+                for v in 0..net.n_vars() {
+                    let d = l1(&run.posteriors[v], &reference[v]);
+                    assert!(
+                        d < 0.05,
+                        "{} on {} var {v}: L1 {d:.4} (ev {ev:?})",
+                        kind.name(),
+                        net.name()
+                    );
+                }
+            }
+            // Gibbs mixes more slowly (autocorrelated chains): same check,
+            // looser tolerance.
+            let gibbs = ApproxEngine::new(
+                &net,
+                SamplerKind::Gibbs,
+                ApproxOptions { n_samples: 100_000, seed: 0xFEED, ..Default::default() },
+            );
+            let run = gibbs.run(&ev);
+            for v in 0..net.n_vars() {
+                let d = l1(&run.posteriors[v], &reference[v]);
+                assert!(d < 0.08, "gibbs on {} var {v}: L1 {d:.4}", net.name());
+            }
+        });
+    }
+}
+
+#[test]
+fn loopy_bp_engine_exact_on_polytree() {
+    // CANCER is a polytree, where loopy BP is exact — the deterministic
+    // engine goes through the same serving trait with a tight tolerance.
+    let net = repository::cancer();
+    let exact = QueryEngine::new(&net);
+    let ev = Evidence::new().with(3, 1);
+    let engine = ApproxEngine::new(&net, SamplerKind::LoopyBp, ApproxOptions::default());
+    let run = engine.run(&ev);
+    let reference = exact.posterior_all(&ev);
+    for v in 0..net.n_vars() {
+        assert!(
+            l1(&run.posteriors[v], &reference[v]) < 1e-4,
+            "lbp var {v}: {:?} vs {:?}",
+            run.posteriors[v],
+            reference[v]
+        );
+    }
+    assert!(run.evidence_probability.is_none());
+}
+
+#[test]
+fn chunked_merge_identical_for_1_and_n_workers() {
+    // Deterministic-seed regression: per-chunk RNG streams make the
+    // chunked-parallel merge independent of the worker count (inline, one
+    // worker, many workers — all bit-identical).
+    let net = repository::asia();
+    let ev = Evidence::new().with(6, 1);
+    for kind in [
+        SamplerKind::LikelihoodWeighting,
+        SamplerKind::AisBn,
+        SamplerKind::EpisBn,
+        SamplerKind::Gibbs,
+    ] {
+        let opts = ApproxOptions { n_samples: 20_000, seed: 77, ..Default::default() };
+        let inline = ApproxEngine::new(&net, kind, opts.clone()).run(&ev);
+        let single = ApproxEngine::new(&net, kind, opts.clone())
+            .with_pool(Arc::new(WorkPool::new(1)))
+            .run(&ev);
+        let wide = ApproxEngine::new(&net, kind, opts)
+            .with_pool(Arc::new(WorkPool::new(4)))
+            .run(&ev);
+        assert_eq!(inline.posteriors, single.posteriors, "{} inline vs 1", kind.name());
+        assert_eq!(inline.posteriors, wide.posteriors, "{} inline vs 4", kind.name());
+        assert_eq!(
+            inline.evidence_probability, wide.evidence_probability,
+            "{} P(e) must not depend on workers",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn auto_routing_sheds_batch_queries_under_pressure() {
+    let mut router = QueryRouter::new(2);
+    router.register_with_approx(
+        "asia",
+        &repository::asia(),
+        QueryEngineConfig::default(),
+        // A generous flush window so the whole burst lands in one flush.
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(100) },
+        ApproxConfig {
+            engine: EngineChoice::Auto,
+            opts: ApproxOptions { n_samples: 4_000, ..Default::default() },
+            shed_queue_depth: 4,
+            ..Default::default()
+        },
+    );
+    let ev = Evidence::new().with(0, 1);
+    // Burst of 32 async queries: 16 batch-priority (sheddable), 16
+    // interactive. The backlog (32 >= 4) trips the shedding policy.
+    let mut batch_rx = Vec::new();
+    let mut interactive_rx = Vec::new();
+    for i in 0..32usize {
+        let request = QueryRequest::marginal(i % 8, ev.clone());
+        if i % 2 == 0 {
+            batch_rx.push(router.query_async("asia", request.batch_priority()).unwrap());
+        } else {
+            interactive_rx.push(router.query_async("asia", request).unwrap());
+        }
+    }
+    for rx in interactive_rx {
+        let routed = rx.recv().unwrap();
+        assert_eq!(
+            routed.tier,
+            AnswerTier::Exact,
+            "interactive queries must never shed"
+        );
+    }
+    let mut shed = 0usize;
+    for rx in batch_rx {
+        let routed = rx.recv().unwrap();
+        if routed.tier == AnswerTier::Approx {
+            shed += 1;
+        }
+        let p = routed.into_marginal().unwrap();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+    let stats = router.stats();
+    let serving = &stats[0].1.serving;
+    assert_eq!(serving.requests, 32);
+    assert!(shed > 0, "no batch query was shed under pressure: {serving:?}");
+    assert_eq!(serving.approx_requests, shed);
+    assert_eq!(serving.exact_requests + serving.approx_requests, 32);
+}
+
+#[test]
+fn forced_sampler_tier_answers_everything_loosely() {
+    let mut router = QueryRouter::new(2);
+    router.register_with_approx(
+        "cancer",
+        &repository::cancer(),
+        QueryEngineConfig::default(),
+        BatcherConfig::default(),
+        ApproxConfig {
+            engine: EngineChoice::Force(SamplerKind::LikelihoodWeighting),
+            opts: ApproxOptions { n_samples: 60_000, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let net = repository::cancer();
+    let exact = QueryEngine::new(&net);
+    let ev = Evidence::new().with(3, 1);
+
+    let routed = router
+        .query_routed("cancer", QueryRequest::marginal(2, ev.clone()))
+        .unwrap();
+    assert_eq!(routed.tier, AnswerTier::Approx);
+    assert_eq!(routed.engine, "likelihood-weighting");
+    let p = routed.into_marginal().unwrap();
+    assert!(l1(&p, &exact.posterior(2, &ev)) < 0.05);
+
+    // P(e) through the sampling tier, loosely matching exact.
+    let routed = router
+        .query_routed("cancer", QueryRequest::evidence_probability(ev.clone()))
+        .unwrap();
+    assert_eq!(routed.tier, AnswerTier::Approx);
+    match routed.reply {
+        fastpgm::coordinator::QueryReply::EvidenceProbability(pe) => {
+            let expect = exact.evidence_probability(&ev);
+            assert!((pe - expect).abs() < 0.02, "{pe} vs {expect}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+#[test]
+fn adaptive_error_budget_reduces_spend_per_query() {
+    // The serving tier's adaptive controller: with a generous error budget
+    // the same engine answers with far fewer samples.
+    let net = repository::asia();
+    let ev = Evidence::new().with(6, 1);
+    let opts = ApproxOptions { n_samples: 400_000, ..Default::default() };
+    let fixed = ApproxEngine::new(&net, SamplerKind::LikelihoodWeighting, opts.clone());
+    let adaptive = ApproxEngine::new(&net, SamplerKind::LikelihoodWeighting, opts)
+        .with_error_budget(0.02);
+    let full = fixed.run(&ev);
+    let early = adaptive.run(&ev);
+    assert_eq!(full.samples_drawn, 400_000);
+    assert!(early.converged, "budget 0.02 not reached: max_sem {}", early.max_sem);
+    assert!(
+        early.samples_drawn < full.samples_drawn / 2,
+        "adaptive stop drew {} of {}",
+        early.samples_drawn,
+        full.samples_drawn
+    );
+}

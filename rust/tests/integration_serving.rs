@@ -3,7 +3,7 @@
 //! and exactness of everything served.
 
 use fastpgm::coordinator::{
-    BatcherConfig, QueryReply, QueryRequest, QueryRouter, QueryTarget,
+    BatcherConfig, QueryReply, QueryRequest, QueryRouter,
 };
 use fastpgm::core::Evidence;
 use fastpgm::inference::exact::{JunctionTree, QueryEngineConfig};
@@ -139,10 +139,7 @@ fn evidence_probability_and_mpe_paths() {
     let xray = net.var_index("xray").unwrap();
     let ev = Evidence::new().with(xray, 1);
     let reply = router
-        .query(
-            "asia",
-            QueryRequest { evidence: ev.clone(), target: QueryTarget::EvidenceProbability },
-        )
+        .query("asia", QueryRequest::evidence_probability(ev.clone()))
         .unwrap();
     let jt = JunctionTree::build(&net);
     let mut engine = jt.engine();
