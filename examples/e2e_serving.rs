@@ -115,11 +115,13 @@ fn query_serving_demo(args: &Args) -> anyhow::Result<()> {
     );
     for (model, stats) in router.stats() {
         println!(
-            "  {model}: {} | cache hit_rate={:.3} (hits={} misses={} evictions={})",
+            "  {model}: {} | cache hit_rate={:.3} (hits={} warm_starts={} \
+             cold_misses={} evictions={})",
             stats.serving.summary(),
             stats.cache.hit_rate(),
             stats.cache.hits,
-            stats.cache.misses,
+            stats.cache.warm_starts,
+            stats.cache.cold_misses,
             stats.cache.evictions
         );
     }

@@ -169,7 +169,8 @@ fn main() {
                 ("speedup_vs_rebuild", Json::num(speedup_cached)),
                 ("cache_hit_rate", Json::num(cache_stats.hit_rate())),
                 ("cache_hits", Json::num(cache_stats.hits as f64)),
-                ("cache_misses", Json::num(cache_stats.misses as f64)),
+                ("cache_misses", Json::num(cache_stats.misses() as f64)),
+                ("cache_warm_starts", Json::num(cache_stats.warm_starts as f64)),
                 ("max_abs_dev_vs_rebuild", Json::num(dev_cached)),
             ],
         ));

@@ -1,0 +1,195 @@
+//! Warm-start recalibration bench — the perf trajectory of the
+//! evidence-delta serving path, written to `BENCH_warm_start.json`:
+//!
+//! * **cold vs warm latency vs delta size** — on networks with well over 8
+//!   cliques, calibrate evidence `E = E' ∪ D` from scratch vs
+//!   [`CompiledTree::recalibrate_from`] a base snapshot for `E'`, for
+//!   `|D| ∈ {1, 2, 4}`. Warm recalibration skips the reset-and-absorb and
+//!   the unchanged half of the collect pass, so it must beat cold on small
+//!   deltas (the dashboard-panel case).
+//! * **prefix-heavy trace** — a shuffled stream of nested evidence chains
+//!   through the [`QueryEngine`] with warm starts on vs off: end-to-end
+//!   time and the warm-start rate of the subset-aware cache.
+//!
+//! Every warm answer is cross-checked against cold calibration at 1e-12 —
+//! the warm path must be numerically indistinguishable.
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, bench, fmt_duration, report};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{CompiledTree, QueryEngine, QueryEngineConfig};
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+use fastpgm::testkit;
+use std::path::Path;
+use std::time::Instant;
+
+const DELTAS: [usize; 3] = [1, 2, 4];
+const BASE_OBS: usize = 3;
+const WARMUP: usize = 3;
+const SAMPLES: usize = 25;
+const TRACE_CHAINS: usize = 8;
+const TRACE_DEPTH: usize = 4;
+const TRACE_QUERIES: usize = 512;
+
+fn main() {
+    println!("== warm-start recalibration: evidence-delta message passing ==");
+    let mut scenarios: Vec<Json> = Vec::new();
+
+    for (net_idx, name) in ["child_like", "alarm_like"].into_iter().enumerate() {
+        let net_idx = net_idx as u64;
+        let net = repository::by_name_extended(name).expect("known network");
+        let compiled = CompiledTree::compile(&net);
+        let n_cliques = compiled.tree().cliques.len();
+        println!(
+            "\n-- {name}: {} vars, {n_cliques} cliques, treewidth+1 = {} --",
+            net.n_vars(),
+            compiled.tree().max_clique_size()
+        );
+        assert!(n_cliques >= 8, "{name} too small for the delta sweep");
+
+        // Draw evidence from one forward sample so every subset of it has
+        // positive probability (warm and cold both do real work).
+        let mut rng = Pcg::seed_from(0xA11CE + net_idx);
+        let assignment = fastpgm::sampling::forward_sample(&net, &mut rng);
+        let vars = rng.choose_k(net.n_vars(), BASE_OBS + DELTAS[DELTAS.len() - 1]);
+        let base_ev: Evidence =
+            vars[..BASE_OBS].iter().map(|&v| (v, assignment.get(v))).collect();
+        let base_cal = compiled.calibrate(&base_ev);
+        assert!(base_cal.evidence_probability() > 0.0, "degenerate base evidence");
+
+        for &delta in &DELTAS {
+            let full_ev: Evidence = vars[..BASE_OBS + delta]
+                .iter()
+                .map(|&v| (v, assignment.get(v)))
+                .collect();
+
+            // Correctness gate before timing anything.
+            let warm_cal = compiled.recalibrate_from(&base_cal, &full_ev);
+            let cold_cal = compiled.calibrate(&full_ev);
+            let mut dev: f64 = 0.0;
+            for (w, c) in warm_cal.posterior_all().iter().zip(&cold_cal.posterior_all())
+            {
+                for (a, b) in w.iter().zip(c) {
+                    dev = dev.max((a - b).abs());
+                }
+            }
+            assert!(
+                dev <= 1e-12,
+                "{name} delta {delta}: warm deviates from cold by {dev:.2e}"
+            );
+
+            let cold = bench(format!("{name} cold |D|={delta}"), WARMUP, SAMPLES, || {
+                compiled.calibrate(&full_ev)
+            });
+            let warm = bench(format!("{name} warm |D|={delta}"), WARMUP, SAMPLES, || {
+                compiled.recalibrate_from(&base_cal, &full_ev)
+            });
+            let speedup =
+                cold.median().as_secs_f64() / warm.median().as_secs_f64().max(1e-12);
+            report(
+                &format!("{name}: base |E'|={BASE_OBS}, delta |D|={delta}"),
+                &[cold.clone(), warm.clone()],
+            );
+            if speedup < 1.0 {
+                println!("  WARNING: warm start slower than cold at |D|={delta}");
+            }
+            scenarios.push(Json::obj([
+                ("net", Json::str(name)),
+                ("mode", Json::str("delta_sweep")),
+                ("n_cliques", Json::num(n_cliques as f64)),
+                ("base_obs", Json::num(BASE_OBS as f64)),
+                ("delta_obs", Json::num(delta as f64)),
+                ("cold_median_us", Json::num(cold.median().as_secs_f64() * 1e6)),
+                ("warm_median_us", Json::num(warm.median().as_secs_f64() * 1e6)),
+                ("warm_speedup_vs_cold", Json::num(speedup)),
+                ("max_abs_dev_vs_cold", Json::num(dev)),
+            ]));
+        }
+
+        // Prefix-heavy trace through the QueryEngine: nested chains,
+        // shuffled, repeated — the cache sees exact repeats (hits),
+        // one-observation extensions (warm starts) and chain heads (cold).
+        let mut rng = Pcg::seed_from(0xC0FFEE + net_idx);
+        let pool =
+            testkit::gen_evidence_chain_pool(&mut rng, &net, TRACE_CHAINS, TRACE_DEPTH);
+        let trace: Vec<(Evidence, usize)> = (0..TRACE_QUERIES)
+            .map(|_| {
+                let ev = pool[rng.below(pool.len())].clone();
+                let var = testkit::gen_query_var(&mut rng, &net, &ev);
+                (ev, var)
+            })
+            .collect();
+        let mut results: Vec<(bool, f64, f64, f64)> = Vec::new();
+        let mut answers: Vec<Vec<Vec<f64>>> = Vec::new();
+        for warm_start in [false, true] {
+            let engine = QueryEngine::with_config(
+                &net,
+                QueryEngineConfig { warm_start, cache_capacity: 64, ..Default::default() },
+            );
+            let t0 = Instant::now();
+            let posts: Vec<Vec<f64>> =
+                trace.iter().map(|(ev, var)| engine.posterior(*var, ev)).collect();
+            let elapsed = t0.elapsed();
+            let stats = engine.stats();
+            println!(
+                "  trace warm_start={warm_start}: {} for {TRACE_QUERIES} queries \
+                 (hit_rate={:.3}, warm_rate={:.3}, hits={} warm={} cold={})",
+                fmt_duration(elapsed),
+                stats.hit_rate(),
+                stats.warm_start_rate(),
+                stats.hits,
+                stats.warm_starts,
+                stats.cold_misses
+            );
+            results.push((
+                warm_start,
+                elapsed.as_secs_f64(),
+                stats.hit_rate(),
+                stats.warm_start_rate(),
+            ));
+            answers.push(posts);
+        }
+        // Warm and cold serving must answer the whole trace identically.
+        let mut trace_dev: f64 = 0.0;
+        for (a, b) in answers[0].iter().zip(&answers[1]) {
+            for (x, y) in a.iter().zip(b) {
+                trace_dev = trace_dev.max((x - y).abs());
+            }
+        }
+        assert!(trace_dev <= 1e-12, "{name}: trace deviates by {trace_dev:.2e}");
+        let cold_s = results[0].1;
+        let warm_s = results[1].1;
+        scenarios.push(Json::obj([
+            ("net", Json::str(name)),
+            ("mode", Json::str("prefix_trace")),
+            ("queries", Json::num(TRACE_QUERIES as f64)),
+            ("pool", Json::num(pool.len() as f64)),
+            ("cold_total_s", Json::num(cold_s)),
+            ("warm_total_s", Json::num(warm_s)),
+            ("trace_speedup", Json::num(cold_s / warm_s.max(1e-12))),
+            ("warm_start_rate", Json::num(results[1].3)),
+            ("hit_rate", Json::num(results[1].2)),
+            ("max_abs_dev", Json::num(trace_dev)),
+        ]));
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("warm_start")),
+        (
+            "config",
+            Json::obj([
+                ("deltas", Json::Arr(DELTAS.iter().map(|&d| Json::num(d as f64)).collect())),
+                ("base_obs", Json::num(BASE_OBS as f64)),
+                ("samples", Json::num(SAMPLES as f64)),
+                ("trace_queries", Json::num(TRACE_QUERIES as f64)),
+                ("trace_chains", Json::num(TRACE_CHAINS as f64)),
+                ("trace_depth", Json::num(TRACE_DEPTH as f64)),
+            ]),
+        ),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    let path = Path::new("BENCH_warm_start.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_warm_start.json");
+    println!("\nwrote {}", path.display());
+}

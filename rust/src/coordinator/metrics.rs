@@ -13,6 +13,16 @@ pub struct ServingMetrics {
     pub exact_requests: usize,
     /// Requests shed to the approximate (sampling) tier.
     pub approx_requests: usize,
+    /// Calibration-cache misses answered by warm-start recalibration from
+    /// a cached subset snapshot (query path only). Populated at read time
+    /// by `QueryRouter::stats()` from the engine's authoritative
+    /// [`QueryEngineStats`](crate::inference::exact::QueryEngineStats)
+    /// counters, so both views in one stats row always agree; a metrics
+    /// struct read outside the router leaves it zero.
+    pub warm_starts: usize,
+    /// Calibration-cache misses paying a prior-based or fully cold
+    /// calibration (same accounting as `warm_starts`).
+    pub cold_misses: usize,
     latencies_us: Vec<u64>,
 }
 
@@ -81,6 +91,12 @@ impl ServingMetrics {
                 self.exact_requests, self.approx_requests
             ));
         }
+        if self.warm_starts + self.cold_misses > 0 {
+            s.push_str(&format!(
+                " calib[warm={} cold={}]",
+                self.warm_starts, self.cold_misses
+            ));
+        }
         s
     }
 }
@@ -110,6 +126,11 @@ mod tests {
         m.exact_requests = 10;
         m.approx_requests = 2;
         assert!(m.summary().contains("tier[exact=10 approx=2]"));
+        // Same for the calibration warm-start counters.
+        assert!(!m.summary().contains("calib["));
+        m.warm_starts = 3;
+        m.cold_misses = 1;
+        assert!(m.summary().contains("calib[warm=3 cold=1]"));
     }
 
     #[test]

@@ -370,7 +370,9 @@ impl ServiceCore {
         let cap = self.config.max_batch.max(1);
         let mut queue: Vec<PendingQuery> = Vec::new();
         // Cache counters at the previous flush — the shedding policy works
-        // on the miss rate of the window in between.
+        // on the miss rate of the window in between. (Warm/cold counters
+        // are not tracked here: `QueryRouter::stats` reconciles the
+        // serving metrics against the engine's totals at read time.)
         let mut last_hits = 0u64;
         let mut last_misses = 0u64;
         loop {
@@ -402,9 +404,9 @@ impl ServiceCore {
             // Load signals for the shedding policy.
             let stats = self.engine.stats();
             let window_hits = stats.hits - last_hits;
-            let window_misses = stats.misses - last_misses;
+            let window_misses = stats.misses() - last_misses;
             last_hits = stats.hits;
-            last_misses = stats.misses;
+            last_misses = stats.misses();
             let lookups = window_hits + window_misses;
             let recent_miss_rate = if lookups == 0 {
                 0.0
@@ -440,7 +442,19 @@ impl ServiceCore {
                 groups.entry(p.request.evidence.clone()).or_default().push(p);
             }
 
-            // Exact tier: groups fan out over the pool.
+            // Exact tier: groups fan out over the pool, submitted in
+            // prefix-aware order — subsets before supersets (ascending
+            // evidence size, then the lexicographic signature order, which
+            // puts shared prefixes next to each other). A subset's
+            // calibration thus tends to be cached by the time its
+            // supersets run, so they warm-start from it instead of from
+            // the prior; with several pool workers the ordering is
+            // best-effort, never a correctness requirement.
+            let mut exact_groups: Vec<(Evidence, Vec<PendingQuery>)> =
+                exact_groups.into_iter().collect();
+            exact_groups.sort_by(|a, b| {
+                a.0.len().cmp(&b.0.len()).then_with(|| a.0.cmp(&b.0))
+            });
             for (evidence, members) in exact_groups {
                 let engine = Arc::clone(&self.engine);
                 let metrics = Arc::clone(&self.metrics);
@@ -745,13 +759,16 @@ impl QueryRouter {
             .models
             .iter()
             .map(|(name, s)| {
-                (
-                    name.clone(),
-                    QueryModelStats {
-                        serving: s.metrics.lock().unwrap().clone(),
-                        cache: s.engine().stats(),
-                    },
-                )
+                let cache = s.engine().stats();
+                let mut serving = s.metrics.lock().unwrap().clone();
+                // Warm/cold counters live in the engine (calibrations run
+                // on pool jobs the batcher never observes synchronously);
+                // populate the serving view from those authoritative
+                // totals at read time so both views in one
+                // QueryModelStats always agree.
+                serving.warm_starts = cache.warm_starts as usize;
+                serving.cold_misses = cache.cold_misses as usize;
+                (name.clone(), QueryModelStats { serving, cache })
             })
             .collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));

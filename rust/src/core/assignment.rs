@@ -43,8 +43,11 @@ impl Assignment {
 /// variable id. Small (a handful of observations in typical queries), so a
 /// sorted vector beats hash maps on both speed and determinism. The sorted
 /// representation is canonical, so derived equality/hashing give a stable
-/// *evidence signature* — the serving layer keys calibration caches on it.
-#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+/// *evidence signature* — the serving layer keys calibration caches on it,
+/// and the derived lexicographic order puts signatures sharing a prefix
+/// next to each other (the coordinator sorts flush groups by it so nested
+/// evidence sets calibrate consecutively).
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Evidence {
     pairs: Vec<(VarId, usize)>,
 }
@@ -97,6 +100,15 @@ impl Evidence {
 
     pub fn iter(&self) -> impl Iterator<Item = (VarId, usize)> + '_ {
         self.pairs.iter().copied()
+    }
+
+    /// Is every observation of `self` present in `other` with the same
+    /// state? (`∅` is a subset of everything; equal evidence sets are
+    /// subsets of each other.) The serving layer's warm-start path uses
+    /// this to find cached calibrations that can be incrementally extended
+    /// with the missing observations.
+    pub fn is_subset_of(&self, other: &Evidence) -> bool {
+        self.iter().all(|(v, s)| other.get(v) == Some(s))
     }
 
     /// Check an assignment for consistency with this evidence.
@@ -162,6 +174,31 @@ mod tests {
         assert_eq!(a.get(0), 1);
         assert_eq!(a.get(1), 0);
         assert_eq!(a.get(2), 1);
+    }
+
+    #[test]
+    fn subset_relation() {
+        let empty = Evidence::new();
+        let small = Evidence::new().with(1, 0).with(4, 2);
+        let big = Evidence::new().with(1, 0).with(2, 1).with(4, 2);
+        assert!(empty.is_subset_of(&empty));
+        assert!(empty.is_subset_of(&small));
+        assert!(small.is_subset_of(&small));
+        assert!(small.is_subset_of(&big));
+        assert!(!big.is_subset_of(&small));
+        // Same variable, different state: not a subset.
+        let conflicting = Evidence::new().with(1, 1);
+        assert!(!conflicting.is_subset_of(&big));
+    }
+
+    #[test]
+    fn order_groups_shared_prefixes() {
+        let a = Evidence::new().with(1, 0);
+        let b = Evidence::new().with(1, 0).with(2, 1);
+        let c = Evidence::new().with(3, 0);
+        let mut v = vec![c.clone(), b.clone(), a.clone()];
+        v.sort();
+        assert_eq!(v, vec![a, b, c]);
     }
 
     #[test]

@@ -9,20 +9,25 @@
 //!
 //! * [`CompiledTree`] — an `Arc`-shared, cheaply cloneable compiled
 //!   artifact. Thread-safe: any number of threads can calibrate against it
-//!   concurrently.
+//!   concurrently. It also owns the **prior** snapshot — one evidence-free
+//!   calibration, built lazily on first use and retained as the universal
+//!   warm-start base (`∅` is a subset of every evidence set).
 //! * [`CalibratedTree`] — an immutable snapshot of the calibrated clique
-//!   potentials for one evidence set. Queries against it are pure reads
-//!   (a single small marginalization), so a snapshot can be cached and
-//!   shared across requests — see [`super::QueryEngine`].
+//!   potentials *and sepset messages* for one evidence set. Queries
+//!   against it are pure reads (a single small marginalization), so a
+//!   snapshot can be cached and shared across requests — see
+//!   [`super::QueryEngine`] — and the retained messages make any snapshot
+//!   a warm-start base for superset evidence via
+//!   [`CompiledTree::recalibrate_from`].
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, Posterior};
 use crate::network::BayesianNetwork;
 use crate::potential::ops::IndexMode;
 use crate::potential::PotentialTable;
-use super::junction_tree::{CalibrationMode, JunctionTree};
+use super::junction_tree::{CalibrationMode, JtEngine, JunctionTree};
 use super::triangulation::EliminationHeuristic;
 
 /// A junction tree compiled once per network, shareable across threads and
@@ -32,6 +37,12 @@ pub struct CompiledTree {
     tree: Arc<JunctionTree>,
     mode: CalibrationMode,
     threads: usize,
+    /// The evidence-free calibration — the fallback warm-start base when
+    /// no better (cached subset) snapshot exists for a query's evidence.
+    /// Built once per compiled tree, lazily on first use, so serving
+    /// configurations that never warm-start (`--no-warm-start`) skip the
+    /// cost entirely.
+    prior: OnceLock<Arc<CalibratedTree>>,
 }
 
 impl CompiledTree {
@@ -59,6 +70,7 @@ impl CompiledTree {
             tree: Arc::new(JunctionTree::build_with(net, heuristic, true)),
             mode,
             threads: threads.max(1),
+            prior: OnceLock::new(),
         }
     }
 
@@ -72,29 +84,94 @@ impl CompiledTree {
         self.tree.n_vars()
     }
 
+    /// The evidence-free calibration — a valid warm-start base for *any*
+    /// evidence set. Built on first use and reused thereafter.
+    pub fn prior(&self) -> &Arc<CalibratedTree> {
+        self.prior.get_or_init(|| {
+            Arc::new(calibrate_tree(&self.tree, self.mode, self.threads, &Evidence::new()))
+        })
+    }
+
     /// Run message passing for one evidence set, producing an immutable
     /// query snapshot. This is the *only* per-query cost of the serving
     /// path; the tree structure and initial potentials are reused.
     pub fn calibrate(&self, evidence: &Evidence) -> CalibratedTree {
-        let mut engine = self.tree.parallel_engine(self.mode, self.threads);
-        engine.calibrate(evidence);
-        let (potentials, evidence_prob) = engine.into_calibrated();
-        CalibratedTree {
-            tree: Arc::clone(&self.tree),
-            potentials,
-            evidence: evidence.clone(),
-            evidence_prob,
+        calibrate_tree(&self.tree, self.mode, self.threads, evidence)
+    }
+
+    /// Warm-start calibration: extend `base` (a snapshot for a *subset* of
+    /// `evidence`, e.g. the [`CompiledTree::prior`] or a cached entry) to
+    /// the full evidence by delta message passing
+    /// ([`crate::inference::exact::JtEngine::recalibrate`]), re-running
+    /// collect only over the dirty subtree and reusing the base's retained
+    /// sepset messages everywhere else. Falls back to a cold
+    /// [`CompiledTree::calibrate`] when `base.evidence()` is not a subset
+    /// of `evidence`, so the result is always a valid snapshot for
+    /// `evidence`; the worst case costs one cold calibration.
+    pub fn recalibrate_from(
+        &self,
+        base: &CalibratedTree,
+        evidence: &Evidence,
+    ) -> CalibratedTree {
+        assert!(
+            Arc::ptr_eq(&base.tree, &self.tree),
+            "warm-start base was calibrated on a different compiled tree"
+        );
+        if !base.evidence.is_subset_of(evidence) {
+            return self.calibrate(evidence);
         }
+        let mut engine = self.tree.parallel_engine(self.mode, self.threads);
+        engine.load_state(
+            &base.potentials,
+            &base.sep_potentials,
+            base.evidence.clone(),
+            base.evidence_prob,
+        );
+        engine.recalibrate(evidence);
+        snapshot(&self.tree, engine)
+    }
+}
+
+/// One cold calibration against a shared tree (the common constructor of
+/// [`CompiledTree::calibrate`] and the lazily built prior).
+fn calibrate_tree(
+    tree: &Arc<JunctionTree>,
+    mode: CalibrationMode,
+    threads: usize,
+    evidence: &Evidence,
+) -> CalibratedTree {
+    let mut engine = tree.parallel_engine(mode, threads);
+    engine.calibrate(evidence);
+    snapshot(tree, engine)
+}
+
+/// Freeze a calibrated engine into an immutable snapshot — the single
+/// assembly site shared by the cold and warm calibration paths.
+fn snapshot(tree: &Arc<JunctionTree>, engine: JtEngine<'_>) -> CalibratedTree {
+    let evidence = engine
+        .calibrated_evidence()
+        .expect("snapshot requires a calibrated engine")
+        .clone();
+    let (potentials, sep_potentials, evidence_prob) = engine.into_calibrated();
+    CalibratedTree {
+        tree: Arc::clone(tree),
+        potentials,
+        sep_potentials,
+        evidence,
+        evidence_prob,
     }
 }
 
 /// An immutable calibrated junction tree: every clique holds the joint
-/// restricted to its scope, conditioned on [`CalibratedTree::evidence`].
-/// All queries are cheap pure reads, so snapshots are `Send + Sync` and
-/// safe to share behind an `Arc`.
+/// restricted to its scope, conditioned on [`CalibratedTree::evidence`],
+/// and every sepset holds the matching normalized message (retained so the
+/// snapshot doubles as a warm-start base — see
+/// [`CompiledTree::recalibrate_from`]). All queries are cheap pure reads,
+/// so snapshots are `Send + Sync` and safe to share behind an `Arc`.
 pub struct CalibratedTree {
     tree: Arc<JunctionTree>,
     potentials: Vec<PotentialTable>,
+    sep_potentials: Vec<PotentialTable>,
     evidence: Evidence,
     evidence_prob: f64,
 }
@@ -188,6 +265,69 @@ mod tests {
             for (v, (g, e)) in got.iter().zip(&base).enumerate() {
                 assert_close_dist(g, e, 1e-9, &format!("{mode:?} var {v}"));
             }
+        }
+    }
+
+    #[test]
+    fn prior_matches_evidence_free_calibration() {
+        let net = repository::asia();
+        let compiled = CompiledTree::compile(&net);
+        let cold = compiled.calibrate(&Evidence::new());
+        let prior = compiled.prior();
+        assert!(prior.evidence().is_empty());
+        for (v, (p, c)) in prior
+            .posterior_all()
+            .iter()
+            .zip(&cold.posterior_all())
+            .enumerate()
+        {
+            for (a, b) in p.iter().zip(c) {
+                assert!((a - b).abs() <= 1e-12, "var {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn recalibrate_from_matches_cold_chain() {
+        let net = repository::asia();
+        let compiled = CompiledTree::compile(&net);
+        // ∅ ⊂ {0} ⊂ {0,4} ⊂ {0,4,6}: each step warm-starts from the last.
+        let chain = [
+            Evidence::new().with(0, 1),
+            Evidence::new().with(0, 1).with(4, 1),
+            Evidence::new().with(0, 1).with(4, 1).with(6, 0),
+        ];
+        let mut warm = Arc::clone(compiled.prior());
+        for ev in &chain {
+            warm = Arc::new(compiled.recalibrate_from(&warm, ev));
+            let cold = compiled.calibrate(ev);
+            assert!(
+                (warm.evidence_probability() - cold.evidence_probability()).abs()
+                    <= 1e-12
+            );
+            for (v, (w, c)) in
+                warm.posterior_all().iter().zip(&cold.posterior_all()).enumerate()
+            {
+                for (a, b) in w.iter().zip(c) {
+                    assert!((a - b).abs() <= 1e-12, "var {v}: {w:?} vs {c:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recalibrate_from_non_subset_falls_back_cold() {
+        let net = repository::cancer();
+        let compiled = CompiledTree::compile(&net);
+        let base = compiled.calibrate(&Evidence::new().with(3, 1));
+        // Conflicting state on var 3: warm start impossible, must still be
+        // an exact snapshot for the requested evidence.
+        let ev = Evidence::new().with(3, 0);
+        let got = compiled.recalibrate_from(&base, &ev);
+        assert_eq!(got.evidence(), &ev);
+        let expect = compiled.calibrate(&ev);
+        for (g, e) in got.posterior_all().iter().zip(&expect.posterior_all()) {
+            assert_eq!(g, e);
         }
     }
 

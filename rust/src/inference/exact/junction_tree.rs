@@ -12,6 +12,16 @@
 //! * **root selection**: the calibration critical path is the heaviest
 //!   root-to-leaf chain of clique weights; we pick the root minimizing it,
 //!   which maximizes the width of each level (ablation knob for bench E4).
+//! * **warm-start recalibration**: a calibrated state (clique *and*
+//!   sepset potentials, kept on a consistent normalized scale) can absorb
+//!   *delta* evidence `D = E \ E'` incrementally ([`JtEngine::recalibrate`])
+//!   instead of recomputing from the initial potentials: the delta is
+//!   reduced into its home cliques, the collect pass recomputes messages
+//!   only on the paths from those cliques to the root (every other upward
+//!   message would be a ratio of 1), and the distribute pass refreshes the
+//!   downstream messages. Worst case it degrades to a cold calibration's
+//!   message count; with small deltas it skips most of the collect phase
+//!   plus the full reset-and-absorb of the cold path.
 
 use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, InferenceEngine, Posterior};
@@ -213,6 +223,7 @@ impl JunctionTree {
             threads: 1,
             potentials: Vec::new(),
             sep_potentials: Vec::new(),
+            changed: Vec::new(),
             calibrated_for: None,
             evidence_prob: 1.0,
         }
@@ -251,6 +262,10 @@ pub struct JtEngine<'t> {
     pub threads: usize,
     potentials: Vec<PotentialTable>,
     sep_potentials: Vec<PotentialTable>,
+    /// Per-clique "potential differs from the warm-start base" flags,
+    /// driving the incremental message schedule of
+    /// [`JtEngine::recalibrate`] (unused by cold calibration).
+    changed: Vec<bool>,
     calibrated_for: Option<Evidence>,
     evidence_prob: f64,
 }
@@ -295,39 +310,155 @@ impl JtEngine<'_> {
         let n_levels = self.jt.levels.len();
         for d in (0..n_levels.saturating_sub(1)).rev() {
             // Parents at level d absorb from their children at level d+1.
-            self.run_level(d, true);
+            self.run_level(d, true, false);
         }
         for d in 0..n_levels.saturating_sub(1) {
-            self.run_level(d, false);
+            self.run_level(d, false, false);
         }
+        self.finish_calibration(ev, 1.0);
+    }
 
-        // P(e) = mass of the root clique.
-        self.evidence_prob = self.potentials[self.jt.root].sum();
+    /// Shared epilogue of cold and warm calibration: read P(e) off the
+    /// root, normalize every clique, and rescale the sepset messages so
+    /// the retained state is *consistent* — clique `C` holds `P(C | e)`
+    /// and separator `S` holds `P(S | e)`, i.e. every clique marginalizes
+    /// onto its parent separator exactly. That consistency is what makes
+    /// the state a valid warm-start base for [`JtEngine::recalibrate`].
+    /// `base_prob` is 1 for cold runs and the base calibration's P(e) for
+    /// warm runs (root mass is then P(delta | base), so P(e) compounds).
+    fn finish_calibration(&mut self, ev: &Evidence, base_prob: f64) {
+        let mass = self.potentials[self.jt.root].sum();
+        self.evidence_prob = base_prob * mass;
         // Normalize every clique so queries are plain marginalizations.
         for p in &mut self.potentials {
             p.normalize();
         }
+        // After propagation each sepset holds the unnormalized marginal
+        // with the same mass as the cliques; dividing by the root mass
+        // brings it onto the cliques' normalized scale. A zero-probability
+        // evidence set leaves everything zero — already consistent.
+        if mass > 0.0 {
+            let inv = 1.0 / mass;
+            for (c, sep) in self.sep_potentials.iter_mut().enumerate() {
+                if c != self.jt.root {
+                    sep.scale(inv);
+                }
+            }
+        }
         self.calibrated_for = Some(ev.clone());
     }
 
+    /// Adopt a previously calibrated, consistent state (normalized clique
+    /// and sepset potentials for `evidence`, plus its P(e)) as this
+    /// engine's working state — the warm-start entry point used by
+    /// [`super::CompiledTree::recalibrate_from`], which always calls it on
+    /// a freshly created engine (so the state is cloned, not copied into
+    /// reused buffers).
+    pub(crate) fn load_state(
+        &mut self,
+        potentials: &[PotentialTable],
+        sep_potentials: &[PotentialTable],
+        evidence: Evidence,
+        evidence_prob: f64,
+    ) {
+        debug_assert_eq!(potentials.len(), self.jt.cliques.len());
+        debug_assert_eq!(sep_potentials.len(), self.jt.cliques.len());
+        self.potentials = potentials.to_vec();
+        self.sep_potentials = sep_potentials.to_vec();
+        self.calibrated_for = Some(evidence);
+        self.evidence_prob = evidence_prob;
+    }
+
+    /// Warm-start recalibration: extend the current calibrated state to
+    /// `ev`, re-running message passing only where the *delta* evidence
+    /// `D = ev \ base` invalidates it. Falls back to a full
+    /// [`JtEngine::calibrate`] when the engine is not calibrated or its
+    /// evidence is not a subset of `ev` (e.g. a state changed).
+    ///
+    /// Schedule: the delta is absorbed into its home cliques, which are
+    /// marked changed. The collect pass recomputes a child→parent message
+    /// only when the child's subtree changed (anywhere else the message
+    /// ratio is exactly 1), marking the parent changed in turn; the
+    /// distribute pass then refreshes parent→child messages below every
+    /// changed clique — evidence shifts posteriors globally, so this
+    /// reaches the whole tree, but the collect half and the cold path's
+    /// reset-and-absorb are skipped. Message updates divide by the
+    /// retained sepset (Hugin absorption); support only ever shrinks when
+    /// evidence is added, so the `0/0 = 0` division convention keeps
+    /// zero-probability deltas exact.
+    pub fn recalibrate(&mut self, ev: &Evidence) {
+        let base = match &self.calibrated_for {
+            Some(b) if b.is_subset_of(ev) => b.clone(),
+            _ => {
+                self.calibrate(ev);
+                return;
+            }
+        };
+        if &base == ev {
+            return;
+        }
+        let k = self.jt.cliques.len();
+        self.changed.clear();
+        self.changed.resize(k, false);
+        // Absorb only the delta observations.
+        for (v, s) in ev.iter() {
+            if base.get(v).is_some() {
+                continue;
+            }
+            let home = self.jt.home_clique[v];
+            let single = Evidence::new().with(v, s);
+            self.potentials[home].reduce_evidence(&single);
+            self.changed[home] = true;
+        }
+
+        let base_prob = self.evidence_prob;
+        let n_levels = self.jt.levels.len();
+        for d in (0..n_levels.saturating_sub(1)).rev() {
+            self.run_level(d, true, true);
+        }
+        for d in 0..n_levels.saturating_sub(1) {
+            self.run_level(d, false, true);
+        }
+        self.finish_calibration(ev, base_prob);
+    }
+
     /// Process one level: `collect` = children → parents at level d;
-    /// else parents at level d → children.
-    fn run_level(&mut self, d: usize, collect: bool) {
-        let parents: Vec<usize> = self.jt.levels[d].clone();
+    /// else parents at level d → children. With `incremental`, messages
+    /// are exchanged only where the `changed` flags require it (the
+    /// warm-start schedule of [`JtEngine::recalibrate`]).
+    fn run_level(&mut self, d: usize, collect: bool, incremental: bool) {
+        let mut parents: Vec<usize> = self.jt.levels[d].clone();
+        if incremental {
+            // Keep only parents with messages to exchange, so a small
+            // delta neither fans idle tasks over the pool nor pays the
+            // per-level dispatch the warm-start path exists to avoid.
+            if collect {
+                parents.retain(|&p| {
+                    self.jt.children[p].iter().any(|&c| self.changed[c])
+                });
+            } else {
+                parents.retain(|&p| self.changed[p] && !self.jt.children[p].is_empty());
+            }
+            if parents.is_empty() {
+                return;
+            }
+        }
         let use_parallel =
             self.mode != CalibrationMode::Sequential && self.threads > 1 && parents.len() > 1;
         let intra = self.mode == CalibrationMode::Hybrid;
 
         if !use_parallel {
             for &p in &parents {
-                self.pass_messages(p, collect, intra);
+                self.pass_messages(p, collect, intra, incremental);
             }
             return;
         }
 
-        // SAFETY: each task touches only clique `p`, its children, and
-        // their separator slots; tasks at one level have disjoint
-        // child sets and distinct parents, so all writes are disjoint.
+        // SAFETY: each task touches only clique `p`, its children, their
+        // separator slots and their `changed` flags; tasks at one level
+        // have disjoint child sets and distinct parents, so all writes are
+        // disjoint. (`changed` reads at this level are of flags written by
+        // *earlier* levels or the delta-absorption prologue.)
         struct Share<'a, 'b>(std::cell::UnsafeCell<&'a mut JtEngine<'b>>);
         unsafe impl Sync for Share<'_, '_> {}
         let threads = self.threads;
@@ -335,28 +466,43 @@ impl JtEngine<'_> {
         let share_ref = &share; // capture the Sync wrapper, not its field
         parallel_for_dynamic(parents.len(), threads, 1, move |i| {
             let eng: &mut JtEngine = unsafe { &mut **share_ref.0.get() };
-            eng.pass_messages(parents[i], collect, intra);
+            eng.pass_messages(parents[i], collect, intra, incremental);
         });
     }
 
-    /// Exchange messages between clique `p` and all its children.
-    fn pass_messages(&mut self, p: usize, collect: bool, intra: bool) {
+    /// Exchange messages between clique `p` and all its children. With
+    /// `incremental`, a collect message is sent only from a changed child
+    /// (elsewhere it would be identical to the retained sepset, a ratio of
+    /// exactly 1) and a distribute message only from a changed parent.
+    fn pass_messages(&mut self, p: usize, collect: bool, intra: bool, incremental: bool) {
         let children = self.jt.children[p].clone();
         for c in children {
             if collect {
+                if incremental && !self.changed[c] {
+                    continue;
+                }
                 // child -> parent: sep_new = marg(child); parent *= new/old.
                 let msg = self.marginalize_clique(c, intra);
                 let mut ratio = msg.clone();
                 ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
                 self.multiply_clique(p, &ratio, intra);
                 self.sep_potentials[c] = msg;
+                if incremental {
+                    self.changed[p] = true;
+                }
             } else {
+                if incremental && !self.changed[p] {
+                    continue;
+                }
                 // parent -> child.
                 let msg = self.marginalize_parent_to_sep(p, c, intra);
                 let mut ratio = msg.clone();
                 ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
                 self.multiply_clique(c, &ratio, intra);
                 self.sep_potentials[c] = msg;
+                if incremental {
+                    self.changed[c] = true;
+                }
             }
         }
     }
@@ -510,11 +656,17 @@ impl JtEngine<'_> {
         self.evidence_prob
     }
 
+    /// The evidence the engine is currently calibrated for, if any.
+    pub fn calibrated_evidence(&self) -> Option<&Evidence> {
+        self.calibrated_for.as_ref()
+    }
+
     /// Consume the engine, yielding the calibrated (normalized) clique
-    /// potentials and P(evidence) — the raw material of a
+    /// potentials, the retained sepset messages (same scale — see
+    /// [`JtEngine::recalibrate`]) and P(evidence) — the raw material of a
     /// [`super::CalibratedTree`] snapshot.
-    pub(crate) fn into_calibrated(self) -> (Vec<PotentialTable>, f64) {
-        (self.potentials, self.evidence_prob)
+    pub(crate) fn into_calibrated(self) -> (Vec<PotentialTable>, Vec<PotentialTable>, f64) {
+        (self.potentials, self.sep_potentials, self.evidence_prob)
     }
 
     /// Marginal of `var` from its home clique (requires calibration).
@@ -670,6 +822,93 @@ mod tests {
         assert_eq!(with.cliques, without.cliques);
         // Selected root's level count never exceeds the default's.
         assert!(with.levels.len() <= without.levels.len() + 1);
+    }
+
+    #[test]
+    fn warm_recalibrate_matches_cold_all_modes() {
+        let net = repository::asia();
+        let jt = JunctionTree::build(&net);
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = e1.clone().with(4, 1);
+        let e3 = e2.clone().with(6, 0);
+        for (mode, threads) in [
+            (CalibrationMode::Sequential, 1usize),
+            (CalibrationMode::InterClique, 2),
+            (CalibrationMode::Hybrid, 2),
+        ] {
+            let mut warm = jt.parallel_engine(mode, threads);
+            warm.calibrate(&e1);
+            for ev in [&e2, &e3] {
+                warm.recalibrate(ev);
+                let mut cold = jt.parallel_engine(mode, threads);
+                cold.calibrate(ev);
+                assert!(
+                    (warm.evidence_probability() - cold.evidence_probability()).abs()
+                        <= 1e-12,
+                    "{mode:?}: P(e) {} vs {}",
+                    warm.evidence_probability(),
+                    cold.evidence_probability()
+                );
+                for v in 0..net.n_vars() {
+                    if ev.contains(v) {
+                        continue;
+                    }
+                    let w = warm.marginal(v);
+                    let c = cold.marginal(v);
+                    for (a, b) in w.iter().zip(&c) {
+                        assert!(
+                            (a - b).abs() <= 1e-12,
+                            "{mode:?} var {v}: {w:?} vs {c:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_recalibrate_falls_back_when_not_a_superset() {
+        let net = repository::cancer();
+        let jt = JunctionTree::build(&net);
+        let mut eng = jt.engine();
+        eng.calibrate(&Evidence::new().with(3, 1));
+        // State changed for var 3: not a superset — must fall back to a
+        // cold calibration and still be exact.
+        let ev = Evidence::new().with(3, 0).with(1, 1);
+        eng.recalibrate(&ev);
+        for v in 0..net.n_vars() {
+            if ev.contains(v) {
+                continue;
+            }
+            let got = eng.marginal(v);
+            let expect = net.brute_force_posterior(v, &ev);
+            assert_close_dist(&got, &expect, 1e-9, &format!("var {v}"));
+        }
+    }
+
+    #[test]
+    fn warm_recalibrate_zero_probability_delta() {
+        // sprinkler: P(wet=yes | sprinkler=no, rain=no) = 0 exactly, so
+        // the delta {wet=yes} onto base {sprinkler=no, rain=no} has zero
+        // probability. Warm and cold must agree (all-zero cliques, P=0).
+        let net = repository::sprinkler();
+        let jt = JunctionTree::build(&net);
+        let base = Evidence::new().with(1, 0).with(2, 0);
+        let full = base.clone().with(3, 1);
+        let mut warm = jt.engine();
+        warm.calibrate(&base);
+        assert!(warm.evidence_probability() > 0.0);
+        warm.recalibrate(&full);
+        let mut cold = jt.engine();
+        cold.calibrate(&full);
+        assert_eq!(warm.evidence_probability(), 0.0);
+        assert_eq!(cold.evidence_probability(), 0.0);
+        for v in 0..net.n_vars() {
+            if full.contains(v) {
+                continue;
+            }
+            assert_eq!(warm.marginal(v), cold.marginal(v), "var {v}");
+        }
     }
 
     #[test]

@@ -1,24 +1,38 @@
 //! High-throughput posterior/MAP query serving over a compiled junction
-//! tree, with an LRU calibration cache.
+//! tree, with a subset-aware LRU calibration cache and warm-start
+//! recalibration.
 //!
 //! Serving traffic repeats itself: the same few evidence sets (dashboard
-//! panels, diagnostic presets, hot user cohorts) arrive over and over. The
-//! [`QueryEngine`] therefore memoizes [`CalibratedTree`] snapshots keyed by
-//! the *evidence signature* (the canonical sorted `(var, state)` pairs —
-//! [`Evidence`] hashes and compares structurally). A cache hit answers an
-//! arbitrary posterior query with a single clique marginalization; only
-//! misses pay message passing, and nothing ever re-triangulates.
+//! panels, diagnostic presets, hot user cohorts) arrive over and over, and
+//! the sets that are *not* identical usually differ by one or two
+//! observations. The [`QueryEngine`] exploits both shapes:
 //!
-//! The engine is `Sync`: one instance serves any number of threads (the
-//! coordinator fans calibrations out over its `WorkPool`). The cache lock
-//! is held only for bookkeeping — calibration itself runs outside the
-//! lock, so concurrent misses on *different* evidence never serialize.
-//! Concurrent misses on the *same* evidence may calibrate twice; both
-//! results are identical and the last insert wins, which is harmless and
-//! keeps the fast path lock-free of condvars.
+//! * **Exact hits** — [`CalibratedTree`] snapshots are memoized keyed by
+//!   the *evidence signature* (the canonical sorted `(var, state)` pairs —
+//!   [`Evidence`] hashes and compares structurally). A hit answers an
+//!   arbitrary posterior query with a single clique marginalization.
+//! * **Warm starts** — on a miss, a secondary index over the cached
+//!   signatures finds the entry whose evidence is the *largest subset* of
+//!   the incoming one; the snapshot (which retains its sepset messages) is
+//!   extended to the full evidence by delta message passing
+//!   ([`CompiledTree::recalibrate_from`]) instead of calibrating from
+//!   scratch. With no usable cached subset, the compiled tree's prior
+//!   (`E = ∅`, built once on first use) is the universal base;
+//!   [`QueryEngineConfig::warm_start`] `= false` forces fully cold
+//!   calibrations instead.
+//! * **In-flight dedup** — concurrent misses on the *same* evidence join a
+//!   single calibration (leader/follower flights), so N threads pay one
+//!   message-passing run, not N.
+//!
+//! Nothing ever re-triangulates. The engine is `Sync`: one instance serves
+//! any number of threads (the coordinator fans calibrations out over its
+//! `WorkPool`). The cache lock is held only for bookkeeping — calibration
+//! itself runs outside the lock, so concurrent misses on *different*
+//! evidence never serialize. Eviction is O(1) via an intrusive recency
+//! list (no scans on the hot path).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::core::{Evidence, VarId};
 use crate::inference::Posterior;
@@ -39,6 +53,12 @@ pub struct QueryEngineConfig {
     pub threads: usize,
     /// Triangulation heuristic used at compile time.
     pub heuristic: EliminationHeuristic,
+    /// Warm-start incremental recalibration on cache misses: extend the
+    /// best cached subset snapshot (or the compile-time prior) by delta
+    /// message passing instead of calibrating from scratch. Disable for
+    /// fully cold miss calibrations (the serve-query `--no-warm-start`
+    /// escape hatch).
+    pub warm_start: bool,
 }
 
 impl Default for QueryEngineConfig {
@@ -48,70 +68,343 @@ impl Default for QueryEngineConfig {
             mode: CalibrationMode::Sequential,
             threads: 1,
             heuristic: EliminationHeuristic::MinFill,
+            warm_start: true,
         }
     }
 }
 
-/// Counters describing cache effectiveness.
+/// Counters describing cache effectiveness. Every [`QueryEngine::calibrated`]
+/// call is counted exactly once: a `hit` (served an existing snapshot,
+/// including joins of an in-flight calibration), a `warm_start` (miss
+/// answered by extending a cached subset snapshot), or a `cold_miss` (miss
+/// with no usable cached base — calibrated from the prior, or fully cold
+/// when warm starts are disabled).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueryEngineStats {
     pub hits: u64,
-    pub misses: u64,
+    pub warm_starts: u64,
+    pub cold_misses: u64,
     pub evictions: u64,
     /// Snapshots currently resident.
     pub entries: usize,
 }
 
 impl QueryEngineStats {
+    /// Total misses (warm-started + cold).
+    pub fn misses(&self) -> u64 {
+        self.warm_starts + self.cold_misses
+    }
+
     /// Fraction of calibration lookups served from cache.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.hits + self.misses();
         if total == 0 {
             0.0
         } else {
             self.hits as f64 / total as f64
         }
     }
-}
 
-struct CacheEntry {
-    value: Arc<CalibratedTree>,
-    last_used: u64,
-}
-
-struct CacheState {
-    map: HashMap<Evidence, CacheEntry>,
-    capacity: usize,
-    /// Monotonic recency clock.
-    tick: u64,
-    hits: u64,
-    misses: u64,
-    evictions: u64,
-}
-
-impl CacheState {
-    /// Evict the least-recently-used entry. Linear scan: capacities are
-    /// small (hundreds) and eviction only runs on misses that already paid
-    /// a full calibration, so O(capacity) is noise.
-    fn evict_lru(&mut self) {
-        let victim = self
-            .map
-            .iter()
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(k, _)| k.clone());
-        if let Some(k) = victim {
-            self.map.remove(&k);
-            self.evictions += 1;
+    /// Fraction of misses answered by warm-start recalibration.
+    pub fn warm_start_rate(&self) -> f64 {
+        let misses = self.misses();
+        if misses == 0 {
+            0.0
+        } else {
+            self.warm_starts as f64 / misses as f64
         }
     }
 }
 
+const NIL: usize = usize::MAX;
+
+/// Intrusive doubly-linked recency list over cache slots: O(1) touch,
+/// push-front and pop-back. Replaces the old O(capacity) eviction scan
+/// (which also cloned the victim's key) and provides the recency tie-break
+/// for the subset index.
+struct LruList {
+    prev: Vec<usize>,
+    next: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl LruList {
+    fn new() -> Self {
+        LruList { prev: Vec::new(), next: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    fn grow_to(&mut self, n: usize) {
+        self.prev.resize(n, NIL);
+        self.next.resize(n, NIL);
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.prev[i] = NIL;
+        self.next[i] = self.head;
+        if self.head != NIL {
+            self.prev[self.head] = i;
+        } else {
+            self.tail = i;
+        }
+        self.head = i;
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p != NIL {
+            self.next[p] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n] = p;
+        } else {
+            self.tail = p;
+        }
+        self.prev[i] = NIL;
+        self.next[i] = NIL;
+    }
+
+    fn touch(&mut self, i: usize) {
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+    }
+
+    fn pop_back(&mut self) -> Option<usize> {
+        if self.tail == NIL {
+            None
+        } else {
+            let t = self.tail;
+            self.unlink(t);
+            Some(t)
+        }
+    }
+
+    fn clear(&mut self) {
+        self.head = NIL;
+        self.tail = NIL;
+        self.prev.fill(NIL);
+        self.next.fill(NIL);
+    }
+}
+
+struct CacheEntry {
+    evidence: Evidence,
+    value: Arc<CalibratedTree>,
+    /// Monotonic recency stamp — only a tie-break for the subset index
+    /// (eviction order lives in the [`LruList`]).
+    last_used: u64,
+}
+
+struct CacheState {
+    /// Evidence signature → slot.
+    map: HashMap<Evidence, usize>,
+    /// Slot-addressed entries (`None` = free slot).
+    entries: Vec<Option<CacheEntry>>,
+    free: Vec<usize>,
+    lru: LruList,
+    /// Inverted subset index: `(var, state)` → slots whose evidence
+    /// contains that observation. A cached signature is a subset of an
+    /// incoming one iff *every* one of its pairs hits, so candidates are
+    /// found by counting bucket hits over the incoming pairs — no scan of
+    /// the whole cache.
+    pair_index: HashMap<(VarId, usize), Vec<usize>>,
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    warm_starts: u64,
+    cold_misses: u64,
+    evictions: u64,
+}
+
+impl CacheState {
+    fn new(capacity: usize) -> Self {
+        CacheState {
+            map: HashMap::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            lru: LruList::new(),
+            pair_index: HashMap::new(),
+            capacity,
+            tick: 0,
+            hits: 0,
+            warm_starts: 0,
+            cold_misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Exact lookup; refreshes recency on a hit. (Counter updates are the
+    /// caller's job — the same lookup backs hit and dedup paths.)
+    fn lookup_touch(&mut self, ev: &Evidence) -> Option<Arc<CalibratedTree>> {
+        let &slot = self.map.get(ev)?;
+        self.tick += 1;
+        let entry = self.entries[slot].as_mut().expect("mapped slot must be live");
+        entry.last_used = self.tick;
+        let value = Arc::clone(&entry.value);
+        self.lru.touch(slot);
+        Some(value)
+    }
+
+    /// Best warm-start base for `ev`: the cached entry whose evidence is
+    /// the largest strict subset of `ev` (most recently used wins ties).
+    /// The chosen base's recency is refreshed — a base repeatedly extended
+    /// by one-shot supersets is the most valuable entry in the cache and
+    /// must not be evicted before the snapshots derived from it. `None`
+    /// when nothing usable is cached — the caller falls back to the
+    /// compiled prior.
+    fn best_subset_base(&mut self, ev: &Evidence) -> Option<Arc<CalibratedTree>> {
+        let mut counts: HashMap<usize, usize> = HashMap::new();
+        for pair in ev.iter() {
+            if let Some(slots) = self.pair_index.get(&pair) {
+                for &slot in slots {
+                    *counts.entry(slot).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut best: Option<(usize, u64, usize)> = None; // (len, recency, slot)
+        for (&slot, &hits) in &counts {
+            let entry = self.entries[slot].as_ref().expect("indexed slot must be live");
+            let len = entry.evidence.len();
+            if hits == len && len < ev.len() {
+                let cand = (len, entry.last_used, slot);
+                let better = match best {
+                    Some(b) => (cand.0, cand.1) > (b.0, b.1),
+                    None => true,
+                };
+                if better {
+                    best = Some(cand);
+                }
+            }
+        }
+        best.map(|(_, _, slot)| {
+            self.tick += 1;
+            let entry = self.entries[slot].as_mut().expect("chosen slot must be live");
+            entry.last_used = self.tick;
+            let value = Arc::clone(&entry.value);
+            self.lru.touch(slot);
+            value
+        })
+    }
+
+    /// Insert (or refresh) a snapshot, evicting the LRU entry when full.
+    fn insert(&mut self, ev: &Evidence, value: Arc<CalibratedTree>) {
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&slot) = self.map.get(ev) {
+            // Duplicate calibration lost a race: keep the newer snapshot.
+            self.tick += 1;
+            let entry = self.entries[slot].as_mut().expect("mapped slot must be live");
+            entry.value = value;
+            entry.last_used = self.tick;
+            self.lru.touch(slot);
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            self.evict_lru();
+        }
+        let slot = match self.free.pop() {
+            Some(slot) => slot,
+            None => {
+                self.entries.push(None);
+                self.lru.grow_to(self.entries.len());
+                self.entries.len() - 1
+            }
+        };
+        for pair in ev.iter() {
+            self.pair_index.entry(pair).or_default().push(slot);
+        }
+        self.tick += 1;
+        self.entries[slot] = Some(CacheEntry {
+            evidence: ev.clone(),
+            value,
+            last_used: self.tick,
+        });
+        self.map.insert(ev.clone(), slot);
+        self.lru.push_front(slot);
+    }
+
+    /// Evict the least-recently-used entry: O(1) list pop plus removal
+    /// from the two indexes. (Evicted snapshots stay alive while any
+    /// in-flight warm start still holds their `Arc`.)
+    fn evict_lru(&mut self) {
+        if let Some(slot) = self.lru.pop_back() {
+            let entry = self.entries[slot].take().expect("lru slot must be live");
+            self.map.remove(&entry.evidence);
+            for pair in entry.evidence.iter() {
+                if let Some(bucket) = self.pair_index.get_mut(&pair) {
+                    bucket.retain(|&s| s != slot);
+                    if bucket.is_empty() {
+                        self.pair_index.remove(&pair);
+                    }
+                }
+            }
+            self.free.push(slot);
+            self.evictions += 1;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.pair_index.clear();
+        self.lru.clear();
+        self.free.clear();
+        for (slot, entry) in self.entries.iter_mut().enumerate() {
+            *entry = None;
+            self.free.push(slot);
+        }
+    }
+}
+
+/// One in-flight calibration: the leader publishes the snapshot and flips
+/// `done`; followers wait on the condvar instead of duplicating the work.
+#[derive(Default)]
+struct Flight {
+    state: Mutex<FlightState>,
+    ready: Condvar,
+}
+
+#[derive(Default)]
+struct FlightState {
+    done: bool,
+    result: Option<Arc<CalibratedTree>>,
+}
+
+/// Marks the leader's flight finished and unregisters it — via `Drop`, so
+/// followers are released even if the calibration panics (they observe
+/// `done` with no result and calibrate for themselves).
+struct FlightGuard<'a> {
+    engine: &'a QueryEngine,
+    evidence: &'a Evidence,
+    flight: Arc<Flight>,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        {
+            let mut st = self.flight.state.lock().unwrap();
+            st.done = true;
+        }
+        self.flight.ready.notify_all();
+        self.engine.inflight.lock().unwrap().remove(self.evidence);
+    }
+}
+
 /// A reusable, thread-safe query service over one Bayesian network:
-/// compiled junction tree + LRU calibration cache.
+/// compiled junction tree + subset-aware LRU calibration cache with
+/// warm-start recalibration and in-flight miss deduplication.
 pub struct QueryEngine {
     net: BayesianNetwork,
     compiled: CompiledTree,
     cache: Mutex<CacheState>,
+    /// Evidence signatures currently being calibrated (leader/follower
+    /// dedup). Locked strictly after `cache` is released — never both.
+    inflight: Mutex<HashMap<Evidence, Arc<Flight>>>,
+    warm_start: bool,
 }
 
 impl QueryEngine {
@@ -127,14 +420,9 @@ impl QueryEngine {
         QueryEngine {
             net: net.clone(),
             compiled,
-            cache: Mutex::new(CacheState {
-                map: HashMap::new(),
-                capacity: config.cache_capacity,
-                tick: 0,
-                hits: 0,
-                misses: 0,
-                evictions: 0,
-            }),
+            cache: Mutex::new(CacheState::new(config.cache_capacity)),
+            inflight: Mutex::new(HashMap::new()),
+            warm_start: config.warm_start,
         }
     }
 
@@ -149,36 +437,110 @@ impl QueryEngine {
     }
 
     /// The calibrated snapshot for `evidence` — from cache when possible,
-    /// calibrating (outside the lock) on a miss.
+    /// warm-starting from the best cached subset (or joining an in-flight
+    /// calibration of the same evidence) on a miss. Calibration always
+    /// runs outside the cache lock.
     pub fn calibrated(&self, evidence: &Evidence) -> Arc<CalibratedTree> {
         {
             let mut cache = self.cache.lock().unwrap();
-            cache.tick += 1;
-            let now = cache.tick;
-            if let Some(entry) = cache.map.get_mut(evidence) {
-                entry.last_used = now;
-                let value = Arc::clone(&entry.value);
+            if let Some(value) = cache.lookup_touch(evidence) {
                 cache.hits += 1;
                 return value;
             }
-            cache.misses += 1;
         }
 
-        let calibrated = Arc::new(self.compiled.calibrate(evidence));
-
-        let mut cache = self.cache.lock().unwrap();
-        if cache.capacity > 0 {
-            if !cache.map.contains_key(evidence) && cache.map.len() >= cache.capacity {
-                cache.evict_lru();
+        // Miss: join an in-flight calibration of this evidence, or lead
+        // one. (The `inflight` lock is only ever taken with `cache`
+        // released.)
+        let (flight, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            match inflight.get(evidence) {
+                Some(f) => (Arc::clone(f), false),
+                None => {
+                    let f = Arc::new(Flight::default());
+                    inflight.insert(evidence.clone(), Arc::clone(&f));
+                    (f, true)
+                }
             }
-            cache.tick += 1;
-            let now = cache.tick;
-            cache.map.insert(
-                evidence.clone(),
-                CacheEntry { value: Arc::clone(&calibrated), last_used: now },
-            );
+        };
+        if !leader {
+            let mut st = flight.state.lock().unwrap();
+            while !st.done {
+                st = flight.ready.wait(st).unwrap();
+            }
+            if let Some(value) = st.result.clone() {
+                drop(st);
+                // Served without calibrating: counts as a hit.
+                self.cache.lock().unwrap().hits += 1;
+                return value;
+            }
+            // The leader died before publishing — fall through and
+            // calibrate here (no flight of our own; rare crash path).
         }
-        calibrated
+        let _guard = leader.then(|| FlightGuard {
+            engine: self,
+            evidence,
+            flight: Arc::clone(&flight),
+        });
+
+        // Decide the plan under the cache lock. The exact re-check first:
+        // a thread can only become a *duplicate* leader after the previous
+        // leader unregistered its flight, which happens after its snapshot
+        // was inserted — so duplicates resolve to a hit here instead of
+        // repeating the calibration.
+        enum Plan {
+            Ready(Arc<CalibratedTree>),
+            Warm(Arc<CalibratedTree>),
+            Cold,
+        }
+        let plan = {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(value) = cache.lookup_touch(evidence) {
+                cache.hits += 1;
+                Plan::Ready(value)
+            } else if self.warm_start {
+                match cache.best_subset_base(evidence) {
+                    Some(base) => {
+                        cache.warm_starts += 1;
+                        Plan::Warm(base)
+                    }
+                    None => {
+                        cache.cold_misses += 1;
+                        Plan::Cold
+                    }
+                }
+            } else {
+                cache.cold_misses += 1;
+                Plan::Cold
+            }
+        };
+
+        let (value, fresh) = match plan {
+            Plan::Ready(value) => (value, false),
+            Plan::Warm(base) => (
+                Arc::new(self.compiled.recalibrate_from(&base, evidence)),
+                true,
+            ),
+            Plan::Cold => {
+                let snapshot = if self.warm_start {
+                    // No cached subset: the tree's prior (E = ∅) is the
+                    // universal warm-start base.
+                    self.compiled.recalibrate_from(self.compiled.prior(), evidence)
+                } else {
+                    self.compiled.calibrate(evidence)
+                };
+                (Arc::new(snapshot), true)
+            }
+        };
+        if fresh {
+            self.cache.lock().unwrap().insert(evidence, Arc::clone(&value));
+        }
+        if leader {
+            let mut st = flight.state.lock().unwrap();
+            st.result = Some(Arc::clone(&value));
+            // `_guard` flips `done`, notifies and unregisters on drop.
+        }
+        value
     }
 
     /// Posterior P(var | evidence).
@@ -207,7 +569,8 @@ impl QueryEngine {
         let cache = self.cache.lock().unwrap();
         QueryEngineStats {
             hits: cache.hits,
-            misses: cache.misses,
+            warm_starts: cache.warm_starts,
+            cold_misses: cache.cold_misses,
             evictions: cache.evictions,
             entries: cache.map.len(),
         }
@@ -215,7 +578,7 @@ impl QueryEngine {
 
     /// Drop all cached calibrations (counters are kept).
     pub fn clear_cache(&self) {
-        self.cache.lock().unwrap().map.clear();
+        self.cache.lock().unwrap().clear();
     }
 }
 
@@ -243,7 +606,7 @@ mod tests {
             }
         }
         let stats = engine.stats();
-        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.misses(), 1);
         assert_eq!(stats.hits, 1);
         assert_eq!(stats.entries, 1);
     }
@@ -265,9 +628,13 @@ mod tests {
         engine.posterior(3, &e1); // miss again
         let stats = engine.stats();
         assert_eq!(stats.hits, 1);
-        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.misses(), 4);
         assert_eq!(stats.evictions, 2);
         assert_eq!(stats.entries, 2);
+        // Single-variable evidence sets have no strict subsets to warm-
+        // start from (the prior path counts as cold).
+        assert_eq!(stats.warm_starts, 0);
+        assert_eq!(stats.cold_misses, 4);
     }
 
     #[test]
@@ -282,7 +649,7 @@ mod tests {
         engine.posterior(3, &ev);
         let stats = engine.stats();
         assert_eq!(stats.hits, 0);
-        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.misses(), 2);
         assert_eq!(stats.entries, 0);
     }
 
@@ -294,6 +661,92 @@ mod tests {
         let a = engine.calibrated(&ev);
         let b = engine.calibrated(&ev);
         assert!(Arc::ptr_eq(&a, &b), "hit must return the same snapshot");
+    }
+
+    #[test]
+    fn warm_start_uses_largest_cached_subset() {
+        let net = repository::asia();
+        let engine = QueryEngine::new(&net);
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = e1.clone().with(4, 1);
+        let e3 = e2.clone().with(6, 0);
+        engine.calibrated(&e1); // cold (prior base)
+        engine.calibrated(&e2); // warm from e1
+        engine.calibrated(&e3); // warm from e2 (largest subset wins)
+        let stats = engine.stats();
+        assert_eq!(stats.cold_misses, 1, "{stats:?}");
+        assert_eq!(stats.warm_starts, 2, "{stats:?}");
+        assert!((stats.warm_start_rate() - 2.0 / 3.0).abs() < 1e-12);
+        // Warm-started snapshots must still be exact.
+        let jt = JunctionTree::build(&net);
+        let mut fresh = jt.engine();
+        for ev in [&e1, &e2, &e3] {
+            let got = engine.posterior_all(ev);
+            let expect = fresh.query_all(ev);
+            for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_close_dist(g, e, 1e-12, &format!("var {v}"));
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_base_survives_eviction_pressure() {
+        // One hot base extended by many one-shot supersets: picking the
+        // base as a warm-start source must refresh its recency, so the
+        // derived snapshots (never reused) are evicted instead of it.
+        let net = repository::asia();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { cache_capacity: 3, ..Default::default() },
+        );
+        let base = Evidence::new().with(0, 1);
+        engine.calibrated(&base);
+        for v in 1..6 {
+            engine.calibrated(&base.clone().with(v, 0));
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.cold_misses, 1, "{stats:?}");
+        assert_eq!(stats.warm_starts, 5, "base was evicted mid-chain: {stats:?}");
+        assert_eq!(stats.evictions, 3, "{stats:?}");
+    }
+
+    #[test]
+    fn no_warm_start_escape_hatch() {
+        let net = repository::asia();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { warm_start: false, ..Default::default() },
+        );
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = e1.clone().with(4, 1);
+        engine.calibrated(&e1);
+        engine.calibrated(&e2);
+        let stats = engine.stats();
+        assert_eq!(stats.warm_starts, 0);
+        assert_eq!(stats.cold_misses, 2);
+    }
+
+    #[test]
+    fn concurrent_same_evidence_misses_dedup() {
+        let net = repository::asia();
+        let engine = Arc::new(QueryEngine::new(&net));
+        let ev = Evidence::new().with(2, 1).with(5, 0);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let engine = Arc::clone(&engine);
+                let ev = ev.clone();
+                std::thread::spawn(move || engine.posterior_all(&ev))
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert_eq!(r, &results[0], "all threads must see one snapshot's answers");
+        }
+        let stats = engine.stats();
+        // The in-flight map guarantees a single calibration: one leader
+        // pays the miss, everyone else hits (cached or joined).
+        assert_eq!(stats.misses(), 1, "{stats:?}");
+        assert_eq!(stats.hits, 7, "{stats:?}");
     }
 
     #[test]
@@ -313,6 +766,24 @@ mod tests {
             let got = h.join().unwrap();
             assert_eq!(got, expect, "identical floats expected on every path");
         }
+    }
+
+    #[test]
+    fn clear_cache_resets_entries_and_subset_index() {
+        let net = repository::asia();
+        let engine = QueryEngine::new(&net);
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = e1.clone().with(4, 1);
+        engine.calibrated(&e1);
+        engine.clear_cache();
+        assert_eq!(engine.stats().entries, 0);
+        // e1 is gone: e2 can only cold-start (prior base), and reinserting
+        // afterwards works against the recycled slots.
+        engine.calibrated(&e2);
+        let stats = engine.stats();
+        assert_eq!(stats.cold_misses, 2, "{stats:?}");
+        assert_eq!(stats.warm_starts, 0, "{stats:?}");
+        assert_eq!(stats.entries, 1);
     }
 
     #[test]

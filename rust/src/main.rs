@@ -81,7 +81,10 @@ USAGE: fastpgm <subcommand> [flags]
            [--approx-sampler lw|aisbn|epis|gibbs|pls|sis|lbp]
            [--approx-samples N] [--shed-queue D] [--batch-fraction F]
            auto = exact tier by default, shedding batch-priority queries
-           to the --approx-sampler tier under queue/cache pressure"
+           to the --approx-sampler tier under queue/cache pressure
+           [--prefix-pool] draw evidence as nested chains (prefix-heavy
+           traffic: cache misses warm-start from cached subsets)
+           [--no-warm-start] force fully cold calibrations on every miss"
     );
 }
 
@@ -466,6 +469,8 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     };
     let batch_fraction = args.parse_flag("batch-fraction", 0.5f64).clamp(0.0, 1.0);
     let mark_batch = matches!(choice, EngineChoice::Auto);
+    let warm_start = !args.switch("no-warm-start");
+    let prefix_pool = args.switch("prefix-pool");
 
     let mut router = QueryRouter::new(threads);
     let mut models: Vec<(String, BayesianNetwork)> = Vec::new();
@@ -474,13 +479,17 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         router.register_with_approx(
             name,
             &net,
-            QueryEngineConfig { cache_capacity: cache, ..Default::default() },
+            QueryEngineConfig {
+                cache_capacity: cache,
+                warm_start,
+                ..Default::default()
+            },
             BatcherConfig::default(),
             approx.clone(),
         );
         println!(
             "registered {name}: {} vars, junction tree compiled once, cache={cache}, \
-             engine={engine_spec}",
+             engine={engine_spec}, warm_start={warm_start}",
             net.n_vars()
         );
         models.push((name.to_string(), net));
@@ -489,10 +498,20 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
 
     // Pre-draw a bounded evidence pool per model (the shared
     // serving-traffic model: bounded reuse is what the cache exploits).
+    // --prefix-pool draws nested chains instead — the prefix-heavy shape
+    // (panels differing by one or two observations) that exercises the
+    // warm-start path on every non-exact hit.
     let mut rng = Pcg::seed_from(11);
     let pools: Vec<Vec<Evidence>> = models
         .iter()
-        .map(|(_, net)| fastpgm::testkit::gen_evidence_pool(&mut rng, net, pool_size, 2))
+        .map(|(_, net)| {
+            if prefix_pool {
+                let chains = (pool_size / 4).max(1);
+                fastpgm::testkit::gen_evidence_chain_pool(&mut rng, net, chains, 4)
+            } else {
+                fastpgm::testkit::gen_evidence_pool(&mut rng, net, pool_size, 2)
+            }
+        })
         .collect();
 
     let router = Arc::new(router);
@@ -553,12 +572,15 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     );
     for (model, stats) in router.stats() {
         println!(
-            "  {model}: {} | cache hits={} misses={} evictions={} hit_rate={:.3}",
+            "  {model}: {} | cache hits={} warm_starts={} cold_misses={} \
+             evictions={} hit_rate={:.3} warm_rate={:.3}",
             stats.serving.summary(),
             stats.cache.hits,
-            stats.cache.misses,
+            stats.cache.warm_starts,
+            stats.cache.cold_misses,
             stats.cache.evictions,
-            stats.cache.hit_rate()
+            stats.cache.hit_rate(),
+            stats.cache.warm_start_rate()
         );
     }
     Ok(())

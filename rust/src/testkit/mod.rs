@@ -129,6 +129,29 @@ pub fn gen_evidence_pool(
         .collect()
 }
 
+/// Pool of evidence sets arranged as nested chains `E1 ⊂ E2 ⊂ … ⊂ Ek`
+/// (`chains` chains of `depth` sets each) — the *prefix-heavy* traffic
+/// shape (dashboard panels and diagnostic presets differing by one or two
+/// observations) that the warm-start calibration cache exploits: a miss on
+/// `E_{i+1}` finds `E_i` cached and recalibrates incrementally. Shared by
+/// the `serve-query --prefix-pool` demo and the warm-start bench.
+pub fn gen_evidence_chain_pool(
+    rng: &mut Pcg,
+    net: &BayesianNetwork,
+    chains: usize,
+    depth: usize,
+) -> Vec<Evidence> {
+    let mut out = Vec::with_capacity(chains * depth);
+    for _ in 0..chains {
+        let mut ev = Evidence::new();
+        for v in rng.choose_k(net.n_vars(), depth.min(net.n_vars())) {
+            ev.set(v, rng.below(net.cardinality(v)));
+            out.push(ev.clone());
+        }
+    }
+    out
+}
+
 /// A query target outside the evidence, when one can be found in a few
 /// draws (falls back to variable 0 — serving layers answer evidence
 /// variables with a point mass, so the fallback stays well-defined).
@@ -198,6 +221,20 @@ mod tests {
         for _ in 0..20 {
             let d = gen_dag(&mut rng, 12, 3);
             assert!(d.topological_order().is_some());
+        }
+    }
+
+    #[test]
+    fn chain_pool_is_nested() {
+        let mut rng = Pcg::seed_from(7);
+        let net = gen_network(&mut rng, 10);
+        let pool = gen_evidence_chain_pool(&mut rng, &net, 3, 4);
+        assert_eq!(pool.len(), 12);
+        for chain in pool.chunks(4) {
+            for w in chain.windows(2) {
+                assert!(w[0].is_subset_of(&w[1]), "chain must be nested");
+                assert_eq!(w[0].len() + 1, w[1].len());
+            }
         }
     }
 

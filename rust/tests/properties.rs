@@ -4,12 +4,14 @@
 
 use fastpgm::core::Evidence;
 use fastpgm::inference::exact::{
-    CalibrationMode, JunctionTree, QueryEngine, QueryEngineConfig,
+    CalibrationMode, CompiledTree, JunctionTree, QueryEngine, QueryEngineConfig,
 };
+use fastpgm::inference::exact::triangulation::EliminationHeuristic;
 use fastpgm::inference::InferenceEngine;
 use fastpgm::potential::ops::IndexMode;
 use fastpgm::potential::PotentialTable;
 use fastpgm::testkit::*;
+use std::sync::Arc;
 
 #[test]
 fn prop_product_commutative() {
@@ -218,7 +220,7 @@ fn prop_query_engine_matches_fresh_engine_all_modes() {
             }
             let stats = engine.stats();
             assert!(stats.hits >= 3, "hit path untested: {stats:?}");
-            assert!(stats.misses <= 3, "unexpected extra misses: {stats:?}");
+            assert!(stats.misses() <= 3, "unexpected extra misses: {stats:?}");
         });
     }
 }
@@ -246,6 +248,148 @@ fn prop_eviction_recalibration_stable() {
             }
         }
         assert!(engine.stats().evictions > 0, "eviction path untested");
+    });
+}
+
+/// Strided evidence reduction (slice-fill runs) must match the reference
+/// odometer scan bit-for-bit, over random tables and random evidence —
+/// including out-of-scope variables and multi-variable observations.
+#[test]
+fn prop_reduce_evidence_strided_matches_scan() {
+    property("strided reduce_evidence == odometer scan", 140, 120, |rng| {
+        let base = gen_potential(rng, 8, 4, 4);
+        if base.vars().is_empty() {
+            return;
+        }
+        // Evidence over 1..=3 variables, about half inside the scope.
+        let mut ev = Evidence::new();
+        for _ in 0..rng.range(1, 4) {
+            let v = rng.below(10);
+            let card = base.card_of(v).unwrap_or(3);
+            ev.set(v, rng.below(card));
+        }
+        let mut fast = base.clone();
+        let mut slow = base;
+        fast.reduce_evidence(&ev);
+        slow.reduce_evidence_scan(&ev);
+        assert_eq!(fast, slow, "evidence {ev:?}");
+    });
+}
+
+/// Warm-start chain invariant: for random evidence chains
+/// `∅ ⊂ E1 ⊂ E2 ⊂ E3`, recalibrating incrementally along the chain must
+/// match a fresh cold calibration of each step to 1e-12, for every
+/// [`CalibrationMode`] — posteriors and P(e) alike.
+#[test]
+fn prop_warm_start_chain_matches_cold_all_modes() {
+    for (mode, threads) in [
+        (CalibrationMode::Sequential, 1usize),
+        (CalibrationMode::InterClique, 2),
+        (CalibrationMode::Hybrid, 2),
+    ] {
+        property(&format!("warm chain == cold ({mode:?})"), 141, 10, |rng| {
+            let net = gen_network(rng, 8);
+            let compiled = CompiledTree::compile_with(
+                &net,
+                EliminationHeuristic::MinFill,
+                mode,
+                threads,
+            );
+            let mut ev = Evidence::new();
+            let mut warm = Arc::clone(compiled.prior());
+            let vars = rng.choose_k(net.n_vars(), 3);
+            for v in vars {
+                ev.set(v, rng.below(net.cardinality(v)));
+                warm = Arc::new(compiled.recalibrate_from(&warm, &ev));
+                let cold = compiled.calibrate(&ev);
+                let dp =
+                    (warm.evidence_probability() - cold.evidence_probability()).abs();
+                assert!(
+                    dp <= 1e-12,
+                    "{mode:?} P(e): {} vs {}",
+                    warm.evidence_probability(),
+                    cold.evidence_probability()
+                );
+                for (v, (w, c)) in
+                    warm.posterior_all().iter().zip(&cold.posterior_all()).enumerate()
+                {
+                    for (a, b) in w.iter().zip(c) {
+                        assert!(
+                            (a - b).abs() <= 1e-12,
+                            "{mode:?} var {v}: {w:?} vs {c:?}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Zero-probability deltas along a chain: warm-started recalibration onto
+/// impossible evidence must agree with the cold path exactly (all-zero
+/// marginals for unknowns, P(e) = 0) for every calibration mode —
+/// sprinkler's deterministic `P(wet=yes | sprinkler=no, rain=no) = 0` row
+/// provides the exact zero.
+#[test]
+fn warm_start_zero_probability_delta_all_modes() {
+    let net = fastpgm::network::repository::sprinkler();
+    let base_ev = Evidence::new().with(1, 0).with(2, 0);
+    let full_ev = base_ev.clone().with(3, 1);
+    for (mode, threads) in [
+        (CalibrationMode::Sequential, 1usize),
+        (CalibrationMode::InterClique, 2),
+        (CalibrationMode::Hybrid, 2),
+    ] {
+        let compiled = CompiledTree::compile_with(
+            &net,
+            EliminationHeuristic::MinFill,
+            mode,
+            threads,
+        );
+        let base = compiled.calibrate(&base_ev);
+        assert!(base.evidence_probability() > 0.0);
+        let warm = compiled.recalibrate_from(&base, &full_ev);
+        let cold = compiled.calibrate(&full_ev);
+        assert_eq!(warm.evidence_probability(), 0.0, "{mode:?}");
+        assert_eq!(cold.evidence_probability(), 0.0, "{mode:?}");
+        for (v, (w, c)) in
+            warm.posterior_all().iter().zip(&cold.posterior_all()).enumerate()
+        {
+            assert_eq!(w, c, "{mode:?} var {v}");
+        }
+    }
+}
+
+/// The warm-start path through the [`QueryEngine`] (subset index + prior
+/// fallback) must be indistinguishable from cold serving: same posteriors
+/// to 1e-12 with warm starts on and off, over random networks and nested
+/// evidence chains, and the stats must attribute the chain misses to the
+/// warm-start counter.
+#[test]
+fn prop_query_engine_warm_start_matches_cold_serving() {
+    property("warm-start serving == cold serving", 142, 10, |rng| {
+        let net = gen_network(rng, 8);
+        let warm_engine = QueryEngine::new(&net);
+        let cold_engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig { warm_start: false, ..Default::default() },
+        );
+        let mut ev = Evidence::new();
+        for v in rng.choose_k(net.n_vars(), 3) {
+            ev.set(v, rng.below(net.cardinality(v)));
+            let warm = warm_engine.posterior_all(&ev);
+            let cold = cold_engine.posterior_all(&ev);
+            for (v, (w, c)) in warm.iter().zip(&cold).enumerate() {
+                for (a, b) in w.iter().zip(c) {
+                    assert!((a - b).abs() <= 1e-12, "var {v}: {w:?} vs {c:?}");
+                }
+            }
+        }
+        let warm_stats = warm_engine.stats();
+        assert_eq!(warm_stats.cold_misses, 1, "{warm_stats:?}");
+        assert_eq!(warm_stats.warm_starts, 2, "{warm_stats:?}");
+        let cold_stats = cold_engine.stats();
+        assert_eq!(cold_stats.warm_starts, 0, "{cold_stats:?}");
     });
 }
 
