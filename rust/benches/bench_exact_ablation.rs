@@ -59,6 +59,11 @@ fn main() {
     let modes = [("naive-decode", IndexMode::NaiveDecode), ("odometer", IndexMode::Odometer)];
     for (label, mode) in modes {
         let mut eng = jt.engine();
+        // Pin the classic three-op path: this ablation isolates the index
+        // strategy of the generic table ops, and the fused kernels (the
+        // default, measured separately in bench_kernels) only exist for
+        // the odometer strategy.
+        eng.kernel = fastpgm::inference::exact::KernelMode::Classic;
         eng.index_mode = mode;
         let ev = ev.clone();
         let r = bench(format!("hepar2_like calibration, {label}"), 1, 5, move || {

@@ -1,0 +1,291 @@
+//! Compiled message kernels bench — fused plans vs the classic three-op
+//! path, written to `BENCH_kernels.json`:
+//!
+//! * **cold calibration latency** — a reused `JtEngine` alternating
+//!   between two evidence sets (so every call really re-runs message
+//!   passing), fused vs classic, sequential and hybrid schedules.
+//! * **warm-start latency** — `CompiledTree::recalibrate_from` a base
+//!   snapshot, fused vs classic (the serving warm path).
+//! * **allocation counts** — a counting global allocator measures heap
+//!   allocations per steady-state calibration; with `messages = 2(k-1)`
+//!   per calibration this gives the per-message allocation count. The
+//!   fused path is asserted to allocate **zero per message** (its only
+//!   steady-state allocation is the per-calibration evidence signature
+//!   clone), and the engine's arena counter is asserted not to move.
+//!
+//! Fused and classic answers are cross-checked at 1e-12 before anything
+//! is timed. `FASTPGM_BENCH_QUICK=1` shrinks sample counts for CI smoke
+//! runs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, bench, report};
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::{
+    CalibrationMode, CompiledTree, JunctionTree, KernelMode,
+};
+use fastpgm::inference::InferenceEngine;
+use fastpgm::network::repository;
+use fastpgm::rng::Pcg;
+
+/// Counts every heap allocation of the process — the ground truth behind
+/// the "zero per-message allocations" claim (the arena counter is the
+/// in-library view; this is the allocator's).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const WARMUP: usize = 3;
+const BASE_OBS: usize = 3;
+const DELTA_OBS: usize = 2;
+
+fn main() {
+    println!("== compiled message kernels: fused vs classic ==");
+    let samples = benchkit::scaled(25, 4);
+    let alloc_iters = benchkit::scaled(50, 5);
+    let threads = fastpgm::parallel::default_threads().max(2);
+    let mut scenarios: Vec<Json> = Vec::new();
+
+    for (net_idx, name) in ["child_like", "alarm_like"].into_iter().enumerate() {
+        let net = repository::by_name_extended(name).expect("known network");
+        let jt = JunctionTree::build(&net);
+        let n_cliques = jt.cliques.len();
+        let messages_per_cal = 2 * (n_cliques - 1);
+        println!(
+            "\n-- {name}: {} vars, {n_cliques} cliques, {messages_per_cal} messages \
+             per calibration --",
+            net.n_vars()
+        );
+
+        // Evidence from one forward sample so P(e) > 0 for every subset;
+        // two disjoint-prefix sets force real recalibrations when a
+        // reused engine alternates between them.
+        let mut rng = Pcg::seed_from(0xBEEF + net_idx as u64);
+        let assignment = fastpgm::sampling::forward_sample(&net, &mut rng);
+        let vars = rng.choose_k(net.n_vars(), 2 * BASE_OBS + DELTA_OBS);
+        let ev_a: Evidence =
+            vars[..BASE_OBS].iter().map(|&v| (v, assignment.get(v))).collect();
+        let ev_b: Evidence = vars[BASE_OBS..2 * BASE_OBS]
+            .iter()
+            .map(|&v| (v, assignment.get(v)))
+            .collect();
+        let full: Evidence = vars[..BASE_OBS + DELTA_OBS]
+            .iter()
+            .map(|&v| (v, assignment.get(v)))
+            .collect();
+
+        // Correctness gate before timing anything: fused == classic.
+        let mut dev: f64 = 0.0;
+        for ev in [&ev_a, &ev_b, &full] {
+            let mut fused = jt.engine();
+            let mut classic = jt.engine();
+            classic.kernel = KernelMode::Classic;
+            for (f, c) in fused.query_all(ev).iter().zip(&classic.query_all(ev)) {
+                for (a, b) in f.iter().zip(c) {
+                    dev = dev.max((a - b).abs());
+                }
+            }
+            assert!(
+                (fused.evidence_probability() - classic.evidence_probability()).abs()
+                    <= 1e-12,
+                "{name}: P(e) diverges between kernels"
+            );
+        }
+        assert!(dev <= 1e-12, "{name}: fused deviates from classic by {dev:.2e}");
+        println!("  correctness: max |fused - classic| = {dev:.2e}");
+
+        // Cold-calibration latency, engine reused, evidence alternating.
+        for (mode, mode_threads, mode_label) in [
+            (CalibrationMode::Sequential, 1usize, "sequential"),
+            (CalibrationMode::Hybrid, threads, "hybrid"),
+        ] {
+            let mut rows = Vec::new();
+            let mut medians = [0.0f64; 2];
+            for (slot, kernel) in [KernelMode::Fused, KernelMode::Classic]
+                .into_iter()
+                .enumerate()
+            {
+                let mut eng = jt.parallel_engine(mode, mode_threads);
+                eng.kernel = kernel;
+                let mut flip = false;
+                let m = bench(
+                    format!("{name} cold {} {mode_label}", kernel.label()),
+                    WARMUP,
+                    samples,
+                    || {
+                        flip = !flip;
+                        eng.calibrate(if flip { &ev_a } else { &ev_b });
+                        eng.evidence_probability()
+                    },
+                );
+                medians[slot] = m.median().as_secs_f64();
+                rows.push(m);
+            }
+            report(&format!("{name} cold calibration ({mode_label})"), &rows);
+            scenarios.push(Json::obj([
+                ("net", Json::str(name)),
+                ("mode", Json::str("cold")),
+                ("schedule", Json::str(mode_label)),
+                ("n_cliques", Json::num(n_cliques as f64)),
+                ("fused_median_us", Json::num(medians[0] * 1e6)),
+                ("classic_median_us", Json::num(medians[1] * 1e6)),
+                ("fused_speedup", Json::num(medians[1] / medians[0].max(1e-12))),
+            ]));
+        }
+
+        // Warm-start latency through the serving path.
+        let fused_ct = CompiledTree::compile(&net);
+        let classic_ct = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        let base_f = fused_ct.calibrate(&ev_a);
+        let base_c = classic_ct.calibrate(&ev_a);
+        let warm_full: Evidence = {
+            // Extend ev_a so the warm path has a real delta to absorb.
+            let mut e = ev_a.clone();
+            for &v in &vars[2 * BASE_OBS..] {
+                e.set(v, assignment.get(v));
+            }
+            e
+        };
+        let wf = fused_ct.recalibrate_from(&base_f, &warm_full);
+        let wc = classic_ct.recalibrate_from(&base_c, &warm_full);
+        let mut wdev: f64 = 0.0;
+        for (a, b) in wf.posterior_all().iter().zip(&wc.posterior_all()) {
+            for (x, y) in a.iter().zip(b) {
+                wdev = wdev.max((x - y).abs());
+            }
+        }
+        assert!(wdev <= 1e-12, "{name}: warm fused deviates by {wdev:.2e}");
+        let warm_fused = bench(format!("{name} warm fused"), WARMUP, samples, || {
+            fused_ct.recalibrate_from(&base_f, &warm_full)
+        });
+        let warm_classic = bench(format!("{name} warm classic"), WARMUP, samples, || {
+            classic_ct.recalibrate_from(&base_c, &warm_full)
+        });
+        report(
+            &format!("{name} warm-start recalibration"),
+            &[warm_fused.clone(), warm_classic.clone()],
+        );
+        scenarios.push(Json::obj([
+            ("net", Json::str(name)),
+            ("mode", Json::str("warm")),
+            ("delta_obs", Json::num(DELTA_OBS as f64)),
+            ("fused_median_us", Json::num(warm_fused.median().as_secs_f64() * 1e6)),
+            (
+                "classic_median_us",
+                Json::num(warm_classic.median().as_secs_f64() * 1e6),
+            ),
+            (
+                "fused_speedup",
+                Json::num(
+                    warm_classic.median().as_secs_f64()
+                        / warm_fused.median().as_secs_f64().max(1e-12),
+                ),
+            ),
+            ("max_abs_dev", Json::num(wdev)),
+        ]));
+
+        // Steady-state allocation counts (sequential, reused engine).
+        let mut per_cal = [0.0f64; 2];
+        for (slot, kernel) in
+            [KernelMode::Fused, KernelMode::Classic].into_iter().enumerate()
+        {
+            let mut eng = jt.engine();
+            eng.kernel = kernel;
+            eng.calibrate(&ev_a);
+            eng.calibrate(&ev_b); // buffers + arena now warm
+            let arena_before = eng.arena_allocations();
+            let a0 = ALLOCS.load(Ordering::Relaxed);
+            for _ in 0..alloc_iters {
+                eng.calibrate(&ev_a);
+                eng.calibrate(&ev_b);
+            }
+            let delta = ALLOCS.load(Ordering::Relaxed) - a0;
+            per_cal[slot] = delta as f64 / (2 * alloc_iters) as f64;
+            if kernel == KernelMode::Fused {
+                assert_eq!(
+                    eng.arena_allocations(),
+                    arena_before,
+                    "{name}: arena grew during steady-state fused calibration"
+                );
+                // The only steady-state allocation is the per-calibration
+                // evidence-signature clone — nothing per message.
+                assert!(
+                    per_cal[slot] < messages_per_cal as f64,
+                    "{name}: fused path allocates per message ({} per cal, {} msgs)",
+                    per_cal[slot],
+                    messages_per_cal
+                );
+                assert!(
+                    per_cal[slot] <= 2.0,
+                    "{name}: unexpected steady-state fused allocations: {}",
+                    per_cal[slot]
+                );
+            }
+        }
+        let per_msg =
+            |cal: f64| (cal / messages_per_cal as f64 * 1000.0).round() / 1000.0;
+        println!(
+            "  allocations/calibration: fused {:.1} (= {:.3}/msg), classic {:.1} \
+             (= {:.3}/msg)",
+            per_cal[0],
+            per_msg(per_cal[0]),
+            per_cal[1],
+            per_msg(per_cal[1])
+        );
+        scenarios.push(Json::obj([
+            ("net", Json::str(name)),
+            ("mode", Json::str("allocs")),
+            ("messages_per_calibration", Json::num(messages_per_cal as f64)),
+            ("fused_allocs_per_calibration", Json::num(per_cal[0])),
+            ("classic_allocs_per_calibration", Json::num(per_cal[1])),
+            ("fused_allocs_per_message", Json::num(per_msg(per_cal[0]))),
+            ("classic_allocs_per_message", Json::num(per_msg(per_cal[1]))),
+        ]));
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("kernels")),
+        (
+            "config",
+            Json::obj([
+                ("samples", Json::num(samples as f64)),
+                ("alloc_iters", Json::num(alloc_iters as f64)),
+                ("base_obs", Json::num(BASE_OBS as f64)),
+                ("delta_obs", Json::num(DELTA_OBS as f64)),
+                ("threads", Json::num(threads as f64)),
+                ("quick", Json::num(if benchkit::quick() { 1.0 } else { 0.0 })),
+            ]),
+        ),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    let path = Path::new("BENCH_kernels.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_kernels.json");
+    println!("\nwrote {}", path.display());
+}

@@ -27,13 +27,15 @@ use std::time::Instant;
 const DELTAS: [usize; 3] = [1, 2, 4];
 const BASE_OBS: usize = 3;
 const WARMUP: usize = 3;
-const SAMPLES: usize = 25;
 const TRACE_CHAINS: usize = 8;
 const TRACE_DEPTH: usize = 4;
-const TRACE_QUERIES: usize = 512;
 
 fn main() {
     println!("== warm-start recalibration: evidence-delta message passing ==");
+    // CI smoke-runs set FASTPGM_BENCH_QUICK=1: exercise every scenario and
+    // correctness gate, emit the JSON artifact, skip the long sampling.
+    let samples = benchkit::scaled(25, 3);
+    let trace_queries = benchkit::scaled(512, 64);
     let mut scenarios: Vec<Json> = Vec::new();
 
     for (net_idx, name) in ["child_like", "alarm_like"].into_iter().enumerate() {
@@ -79,10 +81,10 @@ fn main() {
                 "{name} delta {delta}: warm deviates from cold by {dev:.2e}"
             );
 
-            let cold = bench(format!("{name} cold |D|={delta}"), WARMUP, SAMPLES, || {
+            let cold = bench(format!("{name} cold |D|={delta}"), WARMUP, samples, || {
                 compiled.calibrate(&full_ev)
             });
-            let warm = bench(format!("{name} warm |D|={delta}"), WARMUP, SAMPLES, || {
+            let warm = bench(format!("{name} warm |D|={delta}"), WARMUP, samples, || {
                 compiled.recalibrate_from(&base_cal, &full_ev)
             });
             let speedup =
@@ -113,7 +115,7 @@ fn main() {
         let mut rng = Pcg::seed_from(0xC0FFEE + net_idx);
         let pool =
             testkit::gen_evidence_chain_pool(&mut rng, &net, TRACE_CHAINS, TRACE_DEPTH);
-        let trace: Vec<(Evidence, usize)> = (0..TRACE_QUERIES)
+        let trace: Vec<(Evidence, usize)> = (0..trace_queries)
             .map(|_| {
                 let ev = pool[rng.below(pool.len())].clone();
                 let var = testkit::gen_query_var(&mut rng, &net, &ev);
@@ -133,7 +135,7 @@ fn main() {
             let elapsed = t0.elapsed();
             let stats = engine.stats();
             println!(
-                "  trace warm_start={warm_start}: {} for {TRACE_QUERIES} queries \
+                "  trace warm_start={warm_start}: {} for {trace_queries} queries \
                  (hit_rate={:.3}, warm_rate={:.3}, hits={} warm={} cold={})",
                 fmt_duration(elapsed),
                 stats.hit_rate(),
@@ -163,7 +165,7 @@ fn main() {
         scenarios.push(Json::obj([
             ("net", Json::str(name)),
             ("mode", Json::str("prefix_trace")),
-            ("queries", Json::num(TRACE_QUERIES as f64)),
+            ("queries", Json::num(trace_queries as f64)),
             ("pool", Json::num(pool.len() as f64)),
             ("cold_total_s", Json::num(cold_s)),
             ("warm_total_s", Json::num(warm_s)),
@@ -181,8 +183,8 @@ fn main() {
             Json::obj([
                 ("deltas", Json::Arr(DELTAS.iter().map(|&d| Json::num(d as f64)).collect())),
                 ("base_obs", Json::num(BASE_OBS as f64)),
-                ("samples", Json::num(SAMPLES as f64)),
-                ("trace_queries", Json::num(TRACE_QUERIES as f64)),
+                ("samples", Json::num(samples as f64)),
+                ("trace_queries", Json::num(trace_queries as f64)),
                 ("trace_chains", Json::num(TRACE_CHAINS as f64)),
                 ("trace_depth", Json::num(TRACE_DEPTH as f64)),
             ]),

@@ -8,6 +8,24 @@
 
 use std::time::{Duration, Instant};
 
+/// Quick mode: set `FASTPGM_BENCH_QUICK=1` (any non-empty value except
+/// `0`) to make bench binaries shrink their sample counts and workloads —
+/// the CI smoke-run setting, where the point is to exercise the bench and
+/// emit its `BENCH_*.json` artifact, not to produce stable medians.
+pub fn quick() -> bool {
+    std::env::var("FASTPGM_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// `full` normally, `quick` under [`quick`] mode — for scaling workload
+/// constants in one expression.
+pub fn scaled(full: usize, quick_value: usize) -> usize {
+    if quick() {
+        quick_value
+    } else {
+        full
+    }
+}
+
 /// One measured series.
 #[derive(Clone, Debug)]
 pub struct Measurement {

@@ -23,6 +23,10 @@ pub struct ServingMetrics {
     /// Calibration-cache misses paying a prior-based or fully cold
     /// calibration (same accounting as `warm_starts`).
     pub cold_misses: usize,
+    /// Message-kernel label of the serving engine (`"fused"`/`"classic"`)
+    /// — populated at read time by `QueryRouter::stats()` like the
+    /// warm-start counters; empty outside the router.
+    pub kernel: &'static str,
     latencies_us: Vec<u64>,
 }
 
@@ -97,6 +101,9 @@ impl ServingMetrics {
                 self.warm_starts, self.cold_misses
             ));
         }
+        if !self.kernel.is_empty() {
+            s.push_str(&format!(" kernel={}", self.kernel));
+        }
         s
     }
 }
@@ -131,6 +138,10 @@ mod tests {
         m.warm_starts = 3;
         m.cold_misses = 1;
         assert!(m.summary().contains("calib[warm=3 cold=1]"));
+        // And the kernel label (router-populated; empty by default).
+        assert!(!m.summary().contains("kernel="));
+        m.kernel = "fused";
+        assert!(m.summary().contains("kernel=fused"));
     }
 
     #[test]

@@ -768,6 +768,7 @@ impl QueryRouter {
                 // QueryModelStats always agree.
                 serving.warm_starts = cache.warm_starts as usize;
                 serving.cold_misses = cache.cold_misses as usize;
+                serving.kernel = s.engine().kernel_mode().label();
                 (name.clone(), QueryModelStats { serving, cache })
             })
             .collect();

@@ -25,6 +25,7 @@ use std::sync::{Arc, OnceLock};
 use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, Posterior};
 use crate::network::BayesianNetwork;
+use crate::potential::kernel::KernelMode;
 use crate::potential::ops::IndexMode;
 use crate::potential::PotentialTable;
 use super::junction_tree::{CalibrationMode, JtEngine, JunctionTree};
@@ -36,6 +37,7 @@ use super::triangulation::EliminationHeuristic;
 pub struct CompiledTree {
     tree: Arc<JunctionTree>,
     mode: CalibrationMode,
+    kernel: KernelMode,
     threads: usize,
     /// The evidence-free calibration — the fallback warm-start base when
     /// no better (cached subset) snapshot exists for a query's evidence.
@@ -69,9 +71,23 @@ impl CompiledTree {
         CompiledTree {
             tree: Arc::new(JunctionTree::build_with(net, heuristic, true)),
             mode,
+            kernel: KernelMode::default(),
             threads: threads.max(1),
             prior: OnceLock::new(),
         }
+    }
+
+    /// Select the message-kernel implementation used by every calibration
+    /// of this compiled tree (fused plans by default; classic is the
+    /// oracle/ablation path — the serve-query `--kernel` knob).
+    pub fn with_kernel(mut self, kernel: KernelMode) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The message-kernel implementation calibrations run with.
+    pub fn kernel(&self) -> KernelMode {
+        self.kernel
     }
 
     /// The underlying compiled structure.
@@ -88,15 +104,22 @@ impl CompiledTree {
     /// evidence set. Built on first use and reused thereafter.
     pub fn prior(&self) -> &Arc<CalibratedTree> {
         self.prior.get_or_init(|| {
-            Arc::new(calibrate_tree(&self.tree, self.mode, self.threads, &Evidence::new()))
+            Arc::new(calibrate_tree(
+                &self.tree,
+                self.mode,
+                self.kernel,
+                self.threads,
+                &Evidence::new(),
+            ))
         })
     }
 
     /// Run message passing for one evidence set, producing an immutable
     /// query snapshot. This is the *only* per-query cost of the serving
-    /// path; the tree structure and initial potentials are reused.
+    /// path; the tree structure, the initial potentials and the compiled
+    /// message plans are reused.
     pub fn calibrate(&self, evidence: &Evidence) -> CalibratedTree {
-        calibrate_tree(&self.tree, self.mode, self.threads, evidence)
+        calibrate_tree(&self.tree, self.mode, self.kernel, self.threads, evidence)
     }
 
     /// Warm-start calibration: extend `base` (a snapshot for a *subset* of
@@ -121,6 +144,7 @@ impl CompiledTree {
             return self.calibrate(evidence);
         }
         let mut engine = self.tree.parallel_engine(self.mode, self.threads);
+        engine.kernel = self.kernel;
         engine.load_state(
             &base.potentials,
             &base.sep_potentials,
@@ -137,10 +161,12 @@ impl CompiledTree {
 fn calibrate_tree(
     tree: &Arc<JunctionTree>,
     mode: CalibrationMode,
+    kernel: KernelMode,
     threads: usize,
     evidence: &Evidence,
 ) -> CalibratedTree {
     let mut engine = tree.parallel_engine(mode, threads);
+    engine.kernel = kernel;
     engine.calibrate(evidence);
     snapshot(tree, engine)
 }
@@ -264,6 +290,34 @@ mod tests {
             let got = compiled.calibrate(&ev).posterior_all();
             for (v, (g, e)) in got.iter().zip(&base).enumerate() {
                 assert_close_dist(g, e, 1e-9, &format!("{mode:?} var {v}"));
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_modes_produce_identical_snapshots() {
+        let net = repository::asia();
+        let ev = Evidence::new().with(2, 1).with(6, 1);
+        let fused = CompiledTree::compile(&net);
+        assert_eq!(fused.kernel(), KernelMode::Fused);
+        let classic = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        let a = fused.calibrate(&ev);
+        let b = classic.calibrate(&ev);
+        for (x, y) in a.posterior_all().iter().zip(&b.posterior_all()) {
+            for (p, q) in x.iter().zip(y) {
+                assert!((p - q).abs() <= 1e-12);
+            }
+        }
+        // Warm starts agree across kernel modes too.
+        let sup = ev.clone().with(0, 1);
+        let wa = fused.recalibrate_from(&a, &sup);
+        let wb = classic.recalibrate_from(&b, &sup);
+        assert!(
+            (wa.evidence_probability() - wb.evidence_probability()).abs() <= 1e-12
+        );
+        for (x, y) in wa.posterior_all().iter().zip(&wb.posterior_all()) {
+            for (p, q) in x.iter().zip(y) {
+                assert!((p - q).abs() <= 1e-12);
             }
         }
     }

@@ -9,6 +9,16 @@
 //! * **intra-clique**: within one message, the clique table scan is split
 //!   into spans; marginalization reduces span-private sepset buffers
 //!   (no atomics on the hot path), multiply/divide write disjoint spans.
+//! * **compiled kernels** ([`KernelMode::Fused`], the default): each
+//!   Hugin message runs through the per-edge plans precompiled in
+//!   [`JunctionTree::plans`] — fused marginalize→ratio→absorb scans over
+//!   arena-backed buffers. On the non-intra scan paths (sequential and
+//!   inter-clique engines, and small cliques under hybrid) steady-state
+//!   calibration performs zero per-message heap allocations; the
+//!   intra-split kernels trade tiny span-local digit buffers and scoped
+//!   worker threads for within-clique parallelism. The classic three-op
+//!   path ([`KernelMode::Classic`]) is kept as the correctness oracle and
+//!   ablation baseline (see [`crate::potential::kernel`]).
 //! * **root selection**: the calibration critical path is the heaviest
 //!   root-to-leaf chain of clique weights; we pick the root minimizing it,
 //!   which maximizes the width of each level (ablation knob for bench E4).
@@ -26,7 +36,8 @@
 use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, InferenceEngine, Posterior};
 use crate::network::BayesianNetwork;
-use crate::parallel::{parallel_for_dynamic, parallel_map};
+use crate::parallel::{parallel_for_dynamic, parallel_map, SyncPtr};
+use crate::potential::kernel::{self, ArenaLayout, KernelMode, KernelPlans, TableArena};
 use crate::potential::ops::IndexMode;
 use crate::potential::PotentialTable;
 use super::triangulation::{
@@ -68,6 +79,10 @@ pub struct JunctionTree {
     home_clique: Vec<usize>,
     /// Cardinalities of all network variables.
     cards: Vec<usize>,
+    /// Compiled message kernels: per-edge scan plans and the topological
+    /// message schedule, built once here and reused by every calibration
+    /// of every engine (see [`crate::potential::kernel`]).
+    pub plans: KernelPlans,
 }
 
 impl JunctionTree {
@@ -173,6 +188,16 @@ impl JunctionTree {
             })
             .collect();
 
+        let plans = KernelPlans::build(
+            &cliques,
+            &separators,
+            &parent,
+            &children,
+            &levels,
+            root,
+            &cards,
+        );
+
         JunctionTree {
             cliques,
             parent,
@@ -183,6 +208,7 @@ impl JunctionTree {
             initial,
             home_clique,
             cards,
+            plans,
         }
     }
 
@@ -220,10 +246,15 @@ impl JunctionTree {
             jt: self,
             mode: CalibrationMode::Sequential,
             index_mode: IndexMode::Odometer,
+            kernel: KernelMode::default(),
             threads: 1,
             potentials: Vec::new(),
             sep_potentials: Vec::new(),
             changed: Vec::new(),
+            arena: TableArena::new(),
+            kernel_layout: ArenaLayout::default(),
+            edge_digits: Vec::new(),
+            intra_spans: 0,
             calibrated_for: None,
             evidence_prob: 1.0,
         }
@@ -259,6 +290,13 @@ pub struct JtEngine<'t> {
     jt: &'t JunctionTree,
     pub mode: CalibrationMode,
     pub index_mode: IndexMode,
+    /// Message-kernel implementation. [`KernelMode::Fused`] (the default)
+    /// runs each Hugin message through the precompiled plans of
+    /// [`JunctionTree::plans`] with arena-backed buffers; the classic
+    /// three-op path is the oracle/ablation baseline and is also used
+    /// whenever `index_mode` is not [`IndexMode::Odometer`] (naive
+    /// decoding only exists on the classic path).
+    pub kernel: KernelMode,
     pub threads: usize,
     potentials: Vec<PotentialTable>,
     sep_potentials: Vec<PotentialTable>,
@@ -266,6 +304,18 @@ pub struct JtEngine<'t> {
     /// driving the incremental message schedule of
     /// [`JtEngine::recalibrate`] (unused by cold calibration).
     changed: Vec<bool>,
+    /// Working buffers of the fused kernels (new message, Hugin ratio and
+    /// intra-clique scratch per edge), sized once from the tree's
+    /// worst-case per-edge working set — steady-state fused calibration
+    /// performs zero per-message heap allocations on the non-intra scan
+    /// paths (the intra-split kernels allocate span-local digit buffers).
+    arena: TableArena,
+    kernel_layout: ArenaLayout,
+    /// Per-edge odometer scratch (disjoint across edges, so the
+    /// level-parallel schedule shares them race-free).
+    edge_digits: Vec<Vec<usize>>,
+    /// Span count of intra-clique fused kernels (0 = sequential scans).
+    intra_spans: usize,
     calibrated_for: Option<Evidence>,
     evidence_prob: f64,
 }
@@ -278,6 +328,7 @@ impl JtEngine<'_> {
         if self.calibrated_for.as_ref() == Some(ev) {
             return;
         }
+        self.ensure_kernel_state();
         // Reset to initial potentials and absorb evidence. Buffers are
         // reused across calibrations (copy into existing allocations) —
         // re-allocating every clique table per query dominated repeated-
@@ -302,8 +353,7 @@ impl JtEngine<'_> {
         }
         for (v, s) in ev.iter() {
             let home = self.jt.home_clique[v];
-            let single = Evidence::new().with(v, s);
-            self.potentials[home].reduce_evidence(&single);
+            self.potentials[home].reduce_observation(v, s);
         }
 
         // Collect (bottom-up) then distribute (top-down).
@@ -397,6 +447,7 @@ impl JtEngine<'_> {
         if &base == ev {
             return;
         }
+        self.ensure_kernel_state();
         let k = self.jt.cliques.len();
         self.changed.clear();
         self.changed.resize(k, false);
@@ -406,8 +457,7 @@ impl JtEngine<'_> {
                 continue;
             }
             let home = self.jt.home_clique[v];
-            let single = Evidence::new().with(v, s);
-            self.potentials[home].reduce_evidence(&single);
+            self.potentials[home].reduce_observation(v, s);
             self.changed[home] = true;
         }
 
@@ -422,43 +472,106 @@ impl JtEngine<'_> {
         self.finish_calibration(ev, base_prob);
     }
 
+    /// Build the per-engine fused-kernel state (arena layout + backing
+    /// buffer + per-edge odometer scratch) once. Subsequent calibrations
+    /// find the layout in place and the [`TableArena::ensure`] call is a
+    /// no-op — the counter-asserted zero-allocation steady state. Classic
+    /// and naive-decode engines skip all of it.
+    fn ensure_kernel_state(&mut self) {
+        if !self.fused_active() {
+            return;
+        }
+        let k = self.jt.cliques.len();
+        // Intra-clique span scratch exists only for hybrid engines; the
+        // span count matches the classic hybrid path's work split. The
+        // guard keys on it so an engine whose pub `mode`/`threads` were
+        // changed after a calibration rebuilds its layout instead of
+        // silently keeping a stale (e.g. scratch-free) one.
+        let spans = if self.mode == CalibrationMode::Hybrid && self.threads > 1 {
+            self.threads * 4
+        } else {
+            0
+        };
+        if self.kernel_layout.slots.len() == k && self.intra_spans == spans {
+            return;
+        }
+        self.intra_spans = spans;
+        self.kernel_layout = ArenaLayout::build(&self.jt.plans, self.intra_spans);
+        self.arena.ensure(self.kernel_layout.total);
+        let jt = self.jt;
+        let edge_digits: Vec<Vec<usize>> = (0..k)
+            .map(|c| {
+                if c == jt.root {
+                    Vec::new()
+                } else {
+                    let plan = jt.plans.msg(c);
+                    vec![0usize; plan.child.arity().max(plan.parent.arity())]
+                }
+            })
+            .collect();
+        self.edge_digits = edge_digits;
+    }
+
+    /// Are messages going through the fused kernel plans? (Naive decoding
+    /// only exists on the classic path, so `index_mode` overrides.)
+    fn fused_active(&self) -> bool {
+        self.kernel == KernelMode::Fused && self.index_mode == IndexMode::Odometer
+    }
+
+    /// Backing allocations of the fused-kernel arena: 0 before the first
+    /// fused calibration, then constant — repeated calibrations must not
+    /// move this counter (asserted by tests and `bench_kernels`).
+    pub fn arena_allocations(&self) -> u64 {
+        self.arena.allocations()
+    }
+
     /// Process one level: `collect` = children → parents at level d;
-    /// else parents at level d → children. With `incremental`, messages
+    /// else parents at level d → children. The precompiled
+    /// [`MessageSchedule`](crate::potential::kernel::MessageSchedule)
+    /// already excludes leaf-only entries. With `incremental`, messages
     /// are exchanged only where the `changed` flags require it (the
     /// warm-start schedule of [`JtEngine::recalibrate`]).
     fn run_level(&mut self, d: usize, collect: bool, incremental: bool) {
-        let mut parents: Vec<usize> = self.jt.levels[d].clone();
-        if incremental {
+        let jt = self.jt;
+        let filtered: Vec<usize>;
+        let parents: &[usize] = if incremental {
             // Keep only parents with messages to exchange, so a small
             // delta neither fans idle tasks over the pool nor pays the
             // per-level dispatch the warm-start path exists to avoid.
-            if collect {
-                parents.retain(|&p| {
-                    self.jt.children[p].iter().any(|&c| self.changed[c])
-                });
+            let active = &jt.plans.schedule.active_parents[d];
+            filtered = if collect {
+                active
+                    .iter()
+                    .copied()
+                    .filter(|&p| jt.children[p].iter().any(|&c| self.changed[c]))
+                    .collect()
             } else {
-                parents.retain(|&p| self.changed[p] && !self.jt.children[p].is_empty());
-            }
-            if parents.is_empty() {
+                active.iter().copied().filter(|&p| self.changed[p]).collect()
+            };
+            if filtered.is_empty() {
                 return;
             }
-        }
+            &filtered
+        } else {
+            &jt.plans.schedule.active_parents[d]
+        };
         let use_parallel =
             self.mode != CalibrationMode::Sequential && self.threads > 1 && parents.len() > 1;
         let intra = self.mode == CalibrationMode::Hybrid;
 
         if !use_parallel {
-            for &p in &parents {
+            for &p in parents {
                 self.pass_messages(p, collect, intra, incremental);
             }
             return;
         }
 
         // SAFETY: each task touches only clique `p`, its children, their
-        // separator slots and their `changed` flags; tasks at one level
-        // have disjoint child sets and distinct parents, so all writes are
-        // disjoint. (`changed` reads at this level are of flags written by
-        // *earlier* levels or the delta-absorption prologue.)
+        // separator slots, their `changed` flags, and their edges' arena
+        // regions and digit scratch (disjoint by layout); tasks at one
+        // level have disjoint child sets and distinct parents, so all
+        // writes are disjoint. (`changed` reads at this level are of flags
+        // written by *earlier* levels or the delta-absorption prologue.)
         struct Share<'a, 'b>(std::cell::UnsafeCell<&'a mut JtEngine<'b>>);
         unsafe impl Sync for Share<'_, '_> {}
         let threads = self.threads;
@@ -475,35 +588,110 @@ impl JtEngine<'_> {
     /// (elsewhere it would be identical to the retained sepset, a ratio of
     /// exactly 1) and a distribute message only from a changed parent.
     fn pass_messages(&mut self, p: usize, collect: bool, intra: bool, incremental: bool) {
-        let children = self.jt.children[p].clone();
-        for c in children {
+        let jt = self.jt;
+        let fused = self.fused_active();
+        for &c in &jt.children[p] {
             if collect {
                 if incremental && !self.changed[c] {
                     continue;
                 }
-                // child -> parent: sep_new = marg(child); parent *= new/old.
-                let msg = self.marginalize_clique(c, intra);
-                let mut ratio = msg.clone();
-                ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
-                self.multiply_clique(p, &ratio, intra);
-                self.sep_potentials[c] = msg;
-                if incremental {
-                    self.changed[p] = true;
-                }
+            } else if incremental && !self.changed[p] {
+                continue;
+            }
+            if fused {
+                self.fused_message(p, c, collect, intra);
             } else {
-                if incremental && !self.changed[p] {
-                    continue;
-                }
-                // parent -> child.
-                let msg = self.marginalize_parent_to_sep(p, c, intra);
-                let mut ratio = msg.clone();
-                ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
-                self.multiply_clique(c, &ratio, intra);
-                self.sep_potentials[c] = msg;
-                if incremental {
+                self.classic_message(p, c, collect, intra);
+            }
+            if incremental {
+                if collect {
+                    self.changed[p] = true;
+                } else {
                     self.changed[c] = true;
                 }
             }
+        }
+    }
+
+    /// One Hugin message through the precompiled fused kernels: a single
+    /// scan of the source clique produces the new sepset message into the
+    /// arena, one separator-sized pass forms the ratio against the
+    /// retained message *and* stores the new one, and a single scan of
+    /// the destination clique absorbs the ratio. No intermediate tables,
+    /// no scope algebra, no heap allocation. `collect` sends child →
+    /// parent, otherwise parent → child; both directions share the edge's
+    /// plan pair and arena slot.
+    fn fused_message(&mut self, p: usize, c: usize, collect: bool, intra: bool) {
+        let jt = self.jt;
+        let plan = jt.plans.msg(c);
+        let sep_len = plan.sep_len;
+        let threads = self.threads;
+        let spans = if intra && threads > 1 { self.intra_spans } else { 0 };
+        let (src, dst) = if collect { (c, p) } else { (p, c) };
+        let (src_scan, dst_scan) = if collect {
+            (&plan.child, &plan.parent)
+        } else {
+            (&plan.parent, &plan.child)
+        };
+        let Self { potentials, sep_potentials, arena, kernel_layout, edge_digits, .. } =
+            self;
+        let slot = kernel_layout.slots[c];
+        let digits = &mut edge_digits[c];
+        let (src_pot, dst_pot) = clique_pair_mut(potentials, src, dst);
+
+        // 1. New sepset message: one scan of the source clique.
+        if spans > 0 && slot.scratch_len > 0 && src_scan.len() >= kernel::INTRA_MIN_LEN {
+            let (msg, scratch) = arena
+                .two_regions_mut((slot.msg, sep_len), (slot.scratch, slot.scratch_len));
+            kernel::marginalize_into_intra(
+                src_scan,
+                src_pot.data(),
+                msg,
+                scratch,
+                spans,
+                threads,
+            );
+        } else {
+            let msg = arena.region_mut(slot.msg, sep_len);
+            kernel::marginalize_into(src_scan, src_pot.data(), msg, digits);
+        }
+
+        // 2. Hugin ratio against the retained message + retention, in one
+        // separator-sized pass.
+        {
+            let (msg, ratio) =
+                arena.two_regions_mut((slot.msg, sep_len), (slot.ratio, sep_len));
+            kernel::ratio_and_store(msg, sep_potentials[c].data_mut(), ratio);
+        }
+
+        // 3. Absorb the ratio into the destination clique.
+        let ratio = arena.region(slot.ratio, sep_len);
+        if spans > 0 && dst_scan.len() >= kernel::INTRA_MIN_LEN {
+            kernel::absorb_into_intra(dst_scan, ratio, dst_pot.data_mut(), spans, threads);
+        } else {
+            kernel::absorb_into(dst_scan, ratio, dst_pot.data_mut(), digits);
+        }
+    }
+
+    /// One Hugin message on the classic three-op path (`marginalize_keep`
+    /// → `divide_subset` → `multiply_subset`) — the correctness oracle and
+    /// ablation baseline, and the only path that honours
+    /// [`IndexMode::NaiveDecode`].
+    fn classic_message(&mut self, p: usize, c: usize, collect: bool, intra: bool) {
+        if collect {
+            // child -> parent: sep_new = marg(child); parent *= new/old.
+            let msg = self.marginalize_clique(c, intra);
+            let mut ratio = msg.clone();
+            ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
+            self.multiply_clique(p, &ratio, intra);
+            self.sep_potentials[c] = msg;
+        } else {
+            // parent -> child.
+            let msg = self.marginalize_parent_to_sep(p, c, intra);
+            let mut ratio = msg.clone();
+            ratio.divide_subset(&self.sep_potentials[c], self.index_mode);
+            self.multiply_clique(c, &ratio, intra);
+            self.sep_potentials[c] = msg;
         }
     }
 
@@ -679,9 +867,22 @@ impl JtEngine<'_> {
     }
 }
 
-struct SyncPtr(*mut f64);
-unsafe impl Sync for SyncPtr {}
-unsafe impl Send for SyncPtr {}
+/// Disjoint (read, write) borrows of two cliques' potentials — the split
+/// borrow behind the fused message kernels.
+fn clique_pair_mut(
+    pots: &mut [PotentialTable],
+    read: usize,
+    write: usize,
+) -> (&PotentialTable, &mut PotentialTable) {
+    debug_assert_ne!(read, write, "a clique cannot message itself");
+    if read < write {
+        let (lo, hi) = pots.split_at_mut(write);
+        (&lo[read], &mut hi[0])
+    } else {
+        let (lo, hi) = pots.split_at_mut(read);
+        (&hi[0], &mut lo[write])
+    }
+}
 
 impl InferenceEngine for JtEngine<'_> {
     fn query(&mut self, var: VarId, evidence: &Evidence) -> Posterior {
@@ -811,6 +1012,102 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fused_and_classic_kernels_agree() {
+        for net in [repository::asia(), repository::survey()] {
+            let jt = JunctionTree::build(&net);
+            let ev = Evidence::new().with(1, 1).with(3, 0);
+            let mut fused = jt.engine();
+            assert_eq!(fused.kernel, KernelMode::Fused, "fused is the default");
+            let mut classic = jt.engine();
+            classic.kernel = KernelMode::Classic;
+            let a = fused.query_all(&ev);
+            let b = classic.query_all(&ev);
+            // Identical scan order → the paths agree far below 1e-12.
+            for (v, (x, y)) in a.iter().zip(&b).enumerate() {
+                for (p, q) in x.iter().zip(y) {
+                    assert!((p - q).abs() <= 1e-12, "{} var {v}", net.name());
+                }
+            }
+            assert!(
+                (fused.evidence_probability() - classic.evidence_probability()).abs()
+                    <= 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn fused_parallel_modes_match_classic_sequential() {
+        let net = crate::network::synthetic::SyntheticSpec::alarm_like().generate(4);
+        let jt = JunctionTree::build(&net);
+        let ev = Evidence::new().with(3, 0).with(11, 1);
+        let mut oracle = jt.engine();
+        oracle.kernel = KernelMode::Classic;
+        let expect = oracle.query_all(&ev);
+        for mode in [CalibrationMode::InterClique, CalibrationMode::Hybrid] {
+            let mut eng = jt.parallel_engine(mode, 4);
+            let got = eng.query_all(&ev);
+            for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_close_dist(g, e, 1e-9, &format!("fused {mode:?} var {v}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_arena_steady_state_zero_allocations() {
+        let net = repository::asia();
+        let jt = JunctionTree::build(&net);
+        let mut eng = jt.engine();
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = Evidence::new().with(2, 1).with(6, 0);
+        assert_eq!(eng.arena_allocations(), 0, "arena is built lazily");
+        eng.calibrate(&e1);
+        let after_first = eng.arena_allocations();
+        assert!(after_first >= 1, "fused calibration must build its arena");
+        for _ in 0..3 {
+            eng.calibrate(&e2);
+            eng.calibrate(&e1);
+            eng.recalibrate(&e1.clone().with(4, 1));
+        }
+        assert_eq!(
+            eng.arena_allocations(),
+            after_first,
+            "steady-state calibration must not touch the allocator"
+        );
+    }
+
+    #[test]
+    fn kernel_state_rebuilds_after_mode_flip() {
+        // Mutating the pub schedule knobs between calibrations must
+        // rebuild the kernel layout (span count, scratch regions) rather
+        // than silently keeping the first calibration's, and the flipped
+        // engine must stay exact.
+        let net = crate::network::synthetic::SyntheticSpec::alarm_like().generate(4);
+        let jt = JunctionTree::build(&net);
+        let ev = Evidence::new().with(3, 0).with(11, 1);
+        let mut oracle = jt.engine();
+        oracle.kernel = KernelMode::Classic;
+        let expect = oracle.query_all(&ev);
+        let mut eng = jt.engine();
+        eng.calibrate(&Evidence::new().with(5, 0)); // sequential layout built
+        eng.mode = CalibrationMode::Hybrid;
+        eng.threads = 4;
+        let got = eng.query_all(&ev);
+        for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert_close_dist(g, e, 1e-9, &format!("post-flip var {v}"));
+        }
+    }
+
+    #[test]
+    fn classic_engine_allocates_no_arena() {
+        let net = repository::cancer();
+        let jt = JunctionTree::build(&net);
+        let mut eng = jt.engine();
+        eng.kernel = KernelMode::Classic;
+        eng.calibrate(&Evidence::new().with(0, 1));
+        assert_eq!(eng.arena_allocations(), 0, "classic path must not pay the arena");
     }
 
     #[test]

@@ -37,6 +37,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::core::{Evidence, VarId};
 use crate::inference::Posterior;
 use crate::network::BayesianNetwork;
+use crate::potential::kernel::KernelMode;
 use super::compiled::{CalibratedTree, CompiledTree};
 use super::junction_tree::CalibrationMode;
 use super::map_query::{most_probable_explanation, MapResult};
@@ -59,6 +60,10 @@ pub struct QueryEngineConfig {
     /// fully cold miss calibrations (the serve-query `--no-warm-start`
     /// escape hatch).
     pub warm_start: bool,
+    /// Message-kernel implementation used by every calibration: fused
+    /// precompiled plans (default) or the classic three-op oracle path
+    /// (the serve-query `--kernel` knob).
+    pub kernel: KernelMode,
 }
 
 impl Default for QueryEngineConfig {
@@ -69,6 +74,7 @@ impl Default for QueryEngineConfig {
             threads: 1,
             heuristic: EliminationHeuristic::MinFill,
             warm_start: true,
+            kernel: KernelMode::default(),
         }
     }
 }
@@ -416,7 +422,8 @@ impl QueryEngine {
     /// Build with explicit configuration.
     pub fn with_config(net: &BayesianNetwork, config: QueryEngineConfig) -> Self {
         let compiled =
-            CompiledTree::compile_with(net, config.heuristic, config.mode, config.threads);
+            CompiledTree::compile_with(net, config.heuristic, config.mode, config.threads)
+                .with_kernel(config.kernel);
         QueryEngine {
             net: net.clone(),
             compiled,
@@ -434,6 +441,11 @@ impl QueryEngine {
     /// The compiled artifact (shared, reusable).
     pub fn compiled(&self) -> &CompiledTree {
         &self.compiled
+    }
+
+    /// The message-kernel implementation calibrations run with.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.compiled.kernel()
     }
 
     /// The calibrated snapshot for `evidence` — from cache when possible,

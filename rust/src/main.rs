@@ -84,7 +84,10 @@ USAGE: fastpgm <subcommand> [flags]
            to the --approx-sampler tier under queue/cache pressure
            [--prefix-pool] draw evidence as nested chains (prefix-heavy
            traffic: cache misses warm-start from cached subsets)
-           [--no-warm-start] force fully cold calibrations on every miss"
+           [--no-warm-start] force fully cold calibrations on every miss
+           [--kernel fused|classic] message-kernel implementation: fused
+           precompiled arena-backed plans (default) or the classic
+           three-op oracle path (ablation baseline)"
     );
 }
 
@@ -471,6 +474,9 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     let mark_batch = matches!(choice, EngineChoice::Auto);
     let warm_start = !args.switch("no-warm-start");
     let prefix_pool = args.switch("prefix-pool");
+    let kernel_spec = args.flag_or("kernel", "fused");
+    let kernel = fastpgm::inference::exact::KernelMode::parse(kernel_spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown --kernel {kernel_spec:?} (fused|classic)"))?;
 
     let mut router = QueryRouter::new(threads);
     let mut models: Vec<(String, BayesianNetwork)> = Vec::new();
@@ -482,6 +488,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             QueryEngineConfig {
                 cache_capacity: cache,
                 warm_start,
+                kernel,
                 ..Default::default()
             },
             BatcherConfig::default(),
@@ -489,8 +496,9 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         );
         println!(
             "registered {name}: {} vars, junction tree compiled once, cache={cache}, \
-             engine={engine_spec}, warm_start={warm_start}",
-            net.n_vars()
+             engine={engine_spec}, warm_start={warm_start}, kernel={}",
+            net.n_vars(),
+            kernel.label()
         );
         models.push((name.to_string(), net));
     }

@@ -22,6 +22,16 @@ pub use pool::WorkPool;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// A raw pointer wrapper that is `Send + Sync`, for fan-out kernels whose
+/// workers write provably disjoint regions of one buffer (span-split table
+/// scans, per-worker partial reductions). The *user* carries the safety
+/// obligation: every dereference must stay inside the caller's disjoint
+/// region for the duration of the parallel scope.
+pub struct SyncPtr<T>(pub *mut T);
+
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+
 /// Number of worker threads to default to (physical parallelism of the
 /// container, capped to keep benches stable).
 pub fn default_threads() -> usize {

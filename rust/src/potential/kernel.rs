@@ -1,0 +1,745 @@
+//! Compiled message kernels — preplanned, fused, arena-backed table
+//! operations for the junction-tree hot loop.
+//!
+//! The classic calibration path executes each Hugin message as three
+//! generic table operations (`marginalize_keep` → `divide_subset` →
+//! `multiply_subset`), re-deriving the union scope and the mapped stride
+//! vectors and allocating fresh tables on every message of every
+//! calibration. None of that work depends on the evidence: the scope
+//! algebra is a function of the tree alone. This module moves it to
+//! compile time (the PGMax "flatten messages into preplanned arrays with a
+//! compiled schedule" lever, and OpenGM's model-vs-bound-dispatch split):
+//!
+//! * [`ScanPlan`] — the precomputed mapping of one clique-table scan onto
+//!   a separator scope: mapped strides, the outer/inner scan split, run
+//!   count. Built once per directed edge, reused by every calibration.
+//! * [`MsgPlan`] / [`KernelPlans`] — per-edge plan pairs (child↔sep and
+//!   parent↔sep share one separator, so one plan pair serves both the
+//!   collect and the distribute direction) plus the topological
+//!   [`MessageSchedule`].
+//! * [`TableArena`] — a bump region sized once from the tree's worst-case
+//!   per-edge working set. On the non-intra scan paths, steady-state
+//!   fused calibration allocates nothing on the heap per message;
+//!   [`TableArena::allocations`] counts backing (re)allocations so tests
+//!   and benches can assert exactly that. (The `*_intra` variants trade
+//!   tiny span-local digit buffers and scoped worker threads for
+//!   within-clique parallelism.)
+//! * Fused kernels — [`marginalize_into`] computes the new sepset message
+//!   in one scan of the source clique; [`ratio_and_store`] forms the Hugin
+//!   ratio against the retained old message *and* stores the new message
+//!   in the same pass; [`absorb_into`] multiplies the ratio into the
+//!   destination clique in one scan. No intermediate `PotentialTable` is
+//!   ever materialized. `*_intra` variants split the scan's run range over
+//!   worker threads for the big cliques that dominate wall time (the
+//!   within-clique dimension of the paper's hybrid parallelism).
+//!
+//! The classic path ([`KernelMode::Classic`]) is retained as the
+//! correctness oracle and the ablation baseline of `bench_kernels`.
+
+use crate::core::VarId;
+use crate::parallel::{parallel_for_dynamic, SyncPtr};
+
+/// Which message-passing implementation a calibration engine uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Preplanned fused kernels over the [`TableArena`] (default).
+    #[default]
+    Fused,
+    /// The original three-op path over generic table operations — the
+    /// correctness oracle and ablation baseline.
+    Classic,
+}
+
+impl KernelMode {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "fused" => Some(KernelMode::Fused),
+            "classic" => Some(KernelMode::Classic),
+            _ => None,
+        }
+    }
+
+    /// Stable label for metrics and bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelMode::Fused => "fused",
+            KernelMode::Classic => "classic",
+        }
+    }
+}
+
+/// Tables at least this large are eligible for intra-clique (span-split)
+/// kernel execution — same threshold as the classic hybrid path.
+pub const INTRA_MIN_LEN: usize = 1 << 12;
+
+/// Precomputed mapping of one clique-table scan onto a separator scope.
+///
+/// The scan enumerates the clique table in flat (row-major) order as
+/// `n_runs` contiguous runs of `inner` entries (the last axis hoisted out
+/// of the odometer, as in the classic optimized path); `sep_map[pos]` is
+/// the separator stride contributed by clique scope position `pos` (0 when
+/// the variable is summed out / broadcast), `sep_step` is the per-entry
+/// separator step inside a run.
+#[derive(Clone, Debug)]
+pub struct ScanPlan {
+    /// Shape of the scanned clique table.
+    cards: Vec<usize>,
+    /// `cards` product — the scanned table's length.
+    len: usize,
+    /// Separator stride of each clique scope position.
+    sep_map: Vec<usize>,
+    /// Row-major strides over the *outer* axes (`cards[..k-1]`), for
+    /// decoding a run index when a scan is split across workers.
+    outer_strides: Vec<usize>,
+    /// Run length: cardinality of the last axis (1 for empty scopes).
+    inner: usize,
+    /// Separator step of the last axis (0 = a run maps to one sep cell).
+    sep_step: usize,
+    /// Number of runs (`len / inner`).
+    n_runs: usize,
+    /// Separator size this plan maps onto.
+    sep_len: usize,
+}
+
+impl ScanPlan {
+    /// Plan the scan of a table over `(vars, cards)` mapped onto the
+    /// separator scope `(sep_vars, sep_cards)`. Both scopes must be sorted
+    /// and `sep_vars ⊆ vars`.
+    pub fn new(
+        vars: &[VarId],
+        cards: &[usize],
+        sep_vars: &[VarId],
+        sep_cards: &[usize],
+    ) -> ScanPlan {
+        debug_assert_eq!(vars.len(), cards.len());
+        debug_assert_eq!(sep_vars.len(), sep_cards.len());
+        debug_assert!(sep_vars.iter().all(|v| vars.contains(v)), "sep ⊄ scope");
+        let sep_len: usize = sep_cards.iter().product::<usize>().max(1);
+        // Row-major strides of the separator scope.
+        let mut sep_strides = vec![1usize; sep_vars.len()];
+        for i in (0..sep_vars.len().saturating_sub(1)).rev() {
+            sep_strides[i] = sep_strides[i + 1] * sep_cards[i + 1];
+        }
+        let sep_map: Vec<usize> = vars
+            .iter()
+            .map(|v| {
+                sep_vars
+                    .binary_search(v)
+                    .map_or(0, |p| sep_strides[p])
+            })
+            .collect();
+        let len: usize = cards.iter().product::<usize>().max(1);
+        let (inner, sep_step) = match cards.last() {
+            Some(&c) => (c, sep_map[cards.len() - 1]),
+            None => (1, 0),
+        };
+        let outer = cards.len().saturating_sub(1);
+        let mut outer_strides = vec![1usize; outer];
+        for i in (0..outer.saturating_sub(1)).rev() {
+            outer_strides[i] = outer_strides[i + 1] * cards[i + 1];
+        }
+        ScanPlan {
+            cards: cards.to_vec(),
+            len,
+            sep_map,
+            outer_strides,
+            inner,
+            sep_step,
+            n_runs: len / inner,
+            sep_len,
+        }
+    }
+
+    /// Length of the scanned table.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Never empty — an empty scope is a one-entry scalar table.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Scope arity of the scanned table (digit-scratch sizing).
+    pub fn arity(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Separator size this plan maps onto.
+    pub fn sep_len(&self) -> usize {
+        self.sep_len
+    }
+
+    /// Drive the full scan: `run(i, is)` is called once per run, where
+    /// `i` is the flat start of the run in the scanned table and `is` the
+    /// mapped separator index at the start of the run. `digits` is caller-
+    /// provided odometer scratch of length ≥ `arity()` (no allocation on
+    /// the hot path).
+    #[inline]
+    pub fn for_runs(&self, digits: &mut [usize], mut run: impl FnMut(usize, usize)) {
+        let outer = self.cards.len().saturating_sub(1);
+        let outer_cards = &self.cards[..outer];
+        let digits = &mut digits[..outer];
+        digits.fill(0);
+        let mut i = 0usize;
+        let mut is = 0usize;
+        for _ in 0..self.n_runs {
+            run(i, is);
+            i += self.inner;
+            for pos in (0..outer).rev() {
+                digits[pos] += 1;
+                if digits[pos] < outer_cards[pos] {
+                    is += self.sep_map[pos];
+                    break;
+                }
+                digits[pos] = 0;
+                is -= self.sep_map[pos] * (outer_cards[pos] - 1);
+            }
+        }
+    }
+
+    /// Drive runs `lo..hi` only (a span of a split scan): decodes the
+    /// starting odometer state from the run index, then proceeds as
+    /// [`ScanPlan::for_runs`]. Allocates its (tiny) digit buffer — used
+    /// only on the intra-parallel path, where a span is a worker-sized
+    /// unit of work.
+    pub fn for_runs_span(&self, lo: usize, hi: usize, mut run: impl FnMut(usize, usize)) {
+        let outer = self.cards.len().saturating_sub(1);
+        let outer_cards = &self.cards[..outer];
+        let mut digits = vec![0usize; outer];
+        let mut rem = lo;
+        for pos in 0..outer {
+            digits[pos] = rem / self.outer_strides[pos];
+            rem %= self.outer_strides[pos];
+        }
+        let mut is: usize =
+            digits.iter().zip(&self.sep_map).map(|(&d, &s)| d * s).sum();
+        let mut i = lo * self.inner;
+        for _ in lo..hi {
+            run(i, is);
+            i += self.inner;
+            for pos in (0..outer).rev() {
+                digits[pos] += 1;
+                if digits[pos] < outer_cards[pos] {
+                    is += self.sep_map[pos];
+                    break;
+                }
+                digits[pos] = 0;
+                is -= self.sep_map[pos] * (outer_cards[pos] - 1);
+            }
+        }
+    }
+}
+
+/// Marginalize `src` (scanned per `plan`) into the separator buffer `out`.
+/// Identical accumulation order to the classic odometer
+/// `marginalize_keep`, so results are bit-equal to it.
+pub fn marginalize_into(plan: &ScanPlan, src: &[f64], out: &mut [f64], digits: &mut [usize]) {
+    debug_assert_eq!(src.len(), plan.len);
+    debug_assert_eq!(out.len(), plan.sep_len);
+    out.fill(0.0);
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    plan.for_runs(digits, |i, is| {
+        if step == 0 {
+            // Run collapses into one separator cell: tight reduction.
+            let mut acc = 0.0;
+            for &x in &src[i..i + inner] {
+                acc += x;
+            }
+            out[is] += acc;
+        } else {
+            let mut is = is;
+            for &x in &src[i..i + inner] {
+                out[is] += x;
+                is += step;
+            }
+        }
+    });
+}
+
+/// Intra-parallel [`marginalize_into`]: the run range is split into
+/// `spans` worker units, each reducing into its own span-private region of
+/// `scratch` (no atomics on the hot path), then folded into `out`.
+pub fn marginalize_into_intra(
+    plan: &ScanPlan,
+    src: &[f64],
+    out: &mut [f64],
+    scratch: &mut [f64],
+    spans: usize,
+    threads: usize,
+) {
+    let sep_len = plan.sep_len;
+    debug_assert!(scratch.len() >= spans * sep_len);
+    let scratch = &mut scratch[..spans * sep_len];
+    scratch.fill(0.0);
+    let span_runs = plan.n_runs.div_ceil(spans);
+    let n_runs = plan.n_runs;
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    let ptr = SyncPtr(scratch.as_mut_ptr());
+    let ptr_ref = &ptr; // capture the Sync wrapper, not its field
+    parallel_for_dynamic(spans, threads, 1, move |w| {
+        let lo = w * span_runs;
+        let hi = ((w + 1) * span_runs).min(n_runs);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: span `w` writes only `scratch[w*sep_len .. (w+1)*sep_len]`
+        // — regions are disjoint by construction.
+        let acc =
+            unsafe { std::slice::from_raw_parts_mut(ptr_ref.0.add(w * sep_len), sep_len) };
+        plan.for_runs_span(lo, hi, |i, is| {
+            if step == 0 {
+                let mut sum = 0.0;
+                for &x in &src[i..i + inner] {
+                    sum += x;
+                }
+                acc[is] += sum;
+            } else {
+                let mut is = is;
+                for &x in &src[i..i + inner] {
+                    acc[is] += x;
+                    is += step;
+                }
+            }
+        });
+    });
+    out.fill(0.0);
+    for part in scratch.chunks_exact(sep_len) {
+        for (o, &x) in out.iter_mut().zip(part) {
+            *o += x;
+        }
+    }
+}
+
+/// Form the Hugin ratio `new / old` (junction-tree convention `x/0 = 0`)
+/// into `ratio` and retain `new` as the stored sepset message — one pass
+/// over the (small) separator, no intermediate message table.
+pub fn ratio_and_store(new_msg: &[f64], retained: &mut [f64], ratio: &mut [f64]) {
+    debug_assert_eq!(new_msg.len(), retained.len());
+    debug_assert_eq!(new_msg.len(), ratio.len());
+    for ((r, old), &new) in ratio.iter_mut().zip(retained.iter_mut()).zip(new_msg) {
+        *r = if *old == 0.0 { 0.0 } else { new / *old };
+        *old = new;
+    }
+}
+
+/// Multiply the separator-scoped `ratio` into `dst` (scanned per `plan`)
+/// — the absorb half of a Hugin message, identical scan order to the
+/// classic odometer `multiply_subset`.
+pub fn absorb_into(plan: &ScanPlan, ratio: &[f64], dst: &mut [f64], digits: &mut [usize]) {
+    debug_assert_eq!(dst.len(), plan.len);
+    debug_assert_eq!(ratio.len(), plan.sep_len);
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    plan.for_runs(digits, |i, is| {
+        if step == 0 {
+            let v = ratio[is];
+            for x in &mut dst[i..i + inner] {
+                *x *= v;
+            }
+        } else {
+            let mut is = is;
+            for x in &mut dst[i..i + inner] {
+                *x *= ratio[is];
+                is += step;
+            }
+        }
+    });
+}
+
+/// Intra-parallel [`absorb_into`]: runs are split across workers; every
+/// run is written by exactly one span, so writes are disjoint.
+pub fn absorb_into_intra(
+    plan: &ScanPlan,
+    ratio: &[f64],
+    dst: &mut [f64],
+    spans: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(dst.len(), plan.len);
+    let span_runs = plan.n_runs.div_ceil(spans);
+    let n_runs = plan.n_runs;
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    let ptr = SyncPtr(dst.as_mut_ptr());
+    let ptr_ref = &ptr; // capture the Sync wrapper, not its field
+    parallel_for_dynamic(spans, threads, 1, move |w| {
+        let lo = w * span_runs;
+        let hi = ((w + 1) * span_runs).min(n_runs);
+        if lo >= hi {
+            return;
+        }
+        plan.for_runs_span(lo, hi, |i, is| {
+            // SAFETY: runs are disjoint `inner`-sized slices and each run
+            // belongs to exactly one span.
+            let run = unsafe { std::slice::from_raw_parts_mut(ptr_ref.0.add(i), inner) };
+            if step == 0 {
+                let v = ratio[is];
+                for x in run {
+                    *x *= v;
+                }
+            } else {
+                let mut is = is;
+                for x in run {
+                    *x *= ratio[is];
+                    is += step;
+                }
+            }
+        });
+    });
+}
+
+/// The plan pair of one tree edge: child↔separator and parent↔separator.
+/// Collect (child → parent) marginalizes with `child` and absorbs with
+/// `parent`; distribute reverses the roles. One separator serves both.
+#[derive(Clone, Debug)]
+pub struct MsgPlan {
+    /// Separator table length.
+    pub sep_len: usize,
+    /// Scan of the child clique mapped onto the separator.
+    pub child: ScanPlan,
+    /// Scan of the parent clique mapped onto the separator.
+    pub parent: ScanPlan,
+}
+
+/// Topological message schedule: for each tree depth, the cliques that
+/// exchange messages with children at that depth. Collect walks the levels
+/// deepest-first, distribute shallowest-first; leaf-only levels are
+/// pre-filtered out of the dispatch entirely.
+#[derive(Clone, Debug)]
+pub struct MessageSchedule {
+    /// `active_parents[d]` = cliques at depth `d` with at least one child.
+    pub active_parents: Vec<Vec<usize>>,
+}
+
+/// All compile-time kernel state of one junction tree: per-edge plans and
+/// the message schedule. Built once by `JunctionTree::build`, shared by
+/// every engine and every calibration.
+#[derive(Clone, Debug)]
+pub struct KernelPlans {
+    /// Indexed by clique; `None` for the root (it has no parent edge).
+    msgs: Vec<Option<MsgPlan>>,
+    pub schedule: MessageSchedule,
+}
+
+impl KernelPlans {
+    /// Build plans for a rooted clique tree. `cliques[i]`/`separators[i]`
+    /// are sorted scopes, `cards[v]` global cardinalities, `levels` the
+    /// depth partition, `children` the per-clique child lists.
+    pub fn build(
+        cliques: &[Vec<VarId>],
+        separators: &[Vec<VarId>],
+        parent: &[usize],
+        children: &[Vec<usize>],
+        levels: &[Vec<usize>],
+        root: usize,
+        cards: &[usize],
+    ) -> KernelPlans {
+        let scope_cards =
+            |scope: &[VarId]| -> Vec<usize> { scope.iter().map(|&v| cards[v]).collect() };
+        let msgs: Vec<Option<MsgPlan>> = (0..cliques.len())
+            .map(|c| {
+                if c == root {
+                    return None;
+                }
+                let p = parent[c];
+                let sep = &separators[c];
+                let sep_cards = scope_cards(sep);
+                let child =
+                    ScanPlan::new(&cliques[c], &scope_cards(&cliques[c]), sep, &sep_cards);
+                let par =
+                    ScanPlan::new(&cliques[p], &scope_cards(&cliques[p]), sep, &sep_cards);
+                Some(MsgPlan { sep_len: child.sep_len(), child, parent: par })
+            })
+            .collect();
+        let active_parents: Vec<Vec<usize>> = levels
+            .iter()
+            .map(|level| {
+                level
+                    .iter()
+                    .copied()
+                    .filter(|&c| !children[c].is_empty())
+                    .collect()
+            })
+            .collect();
+        KernelPlans { msgs, schedule: MessageSchedule { active_parents } }
+    }
+
+    /// The plan pair of the edge between clique `c` and its parent.
+    /// Panics for the root, which has no such edge.
+    pub fn msg(&self, c: usize) -> &MsgPlan {
+        self.msgs[c].as_ref().expect("root clique has no message plan")
+    }
+
+    /// Number of cliques the plans were built for.
+    pub fn n_cliques(&self) -> usize {
+        self.msgs.len()
+    }
+}
+
+/// Arena offsets of one edge's working set: the new-message buffer, the
+/// ratio buffer, and (for intra-eligible edges) the span-private
+/// marginalization scratch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeSlots {
+    pub msg: usize,
+    pub ratio: usize,
+    pub scratch: usize,
+    /// `0` when the edge has no intra scratch region.
+    pub scratch_len: usize,
+}
+
+/// Per-engine arena layout: one [`EdgeSlots`] per clique (the root's slot
+/// is unused) and the total arena length. Regions of distinct edges are
+/// disjoint, which is what makes the level-parallel fused path race-free.
+#[derive(Clone, Debug, Default)]
+pub struct ArenaLayout {
+    pub slots: Vec<EdgeSlots>,
+    pub total: usize,
+}
+
+impl ArenaLayout {
+    /// Lay out the arena for `plans`. `intra_spans > 0` reserves
+    /// span-private marginalization scratch for edges whose clique tables
+    /// reach [`INTRA_MIN_LEN`] (0 = sequential engine, no scratch).
+    pub fn build(plans: &KernelPlans, intra_spans: usize) -> ArenaLayout {
+        let mut slots = vec![EdgeSlots::default(); plans.n_cliques()];
+        let mut off = 0usize;
+        for (c, plan) in plans.msgs.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            let slot = &mut slots[c];
+            slot.msg = off;
+            off += plan.sep_len;
+            slot.ratio = off;
+            off += plan.sep_len;
+            let intra_eligible = intra_spans > 0
+                && plan.child.len().max(plan.parent.len()) >= INTRA_MIN_LEN;
+            if intra_eligible {
+                slot.scratch = off;
+                slot.scratch_len = intra_spans * plan.sep_len;
+                off += slot.scratch_len;
+            }
+        }
+        ArenaLayout { slots, total: off }
+    }
+}
+
+/// A bump region for message-kernel working buffers, sized once from an
+/// [`ArenaLayout`]. Offsets come from the layout; the arena itself only
+/// tracks the backing storage and counts (re)allocations so the
+/// zero-allocation steady state is assertable.
+#[derive(Debug, Default)]
+pub struct TableArena {
+    buf: Vec<f64>,
+    allocations: u64,
+}
+
+impl TableArena {
+    pub fn new() -> TableArena {
+        TableArena::default()
+    }
+
+    /// Grow the backing buffer to at least `len` entries. A no-op when the
+    /// arena is already large enough — the steady-state path.
+    pub fn ensure(&mut self, len: usize) {
+        if self.buf.len() < len {
+            self.buf = vec![0.0; len];
+            self.allocations += 1;
+        }
+    }
+
+    /// Number of backing (re)allocations since creation. Constant across
+    /// repeated calibrations = zero per-message heap allocations.
+    pub fn allocations(&self) -> u64 {
+        self.allocations
+    }
+
+    /// Current capacity in `f64` entries.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn region(&self, off: usize, len: usize) -> &[f64] {
+        &self.buf[off..off + len]
+    }
+
+    pub fn region_mut(&mut self, off: usize, len: usize) -> &mut [f64] {
+        &mut self.buf[off..off + len]
+    }
+
+    /// Two disjoint regions at once; the first must end at or before the
+    /// second's start (the layout allocates them in ascending order).
+    pub fn two_regions_mut(
+        &mut self,
+        a: (usize, usize),
+        b: (usize, usize),
+    ) -> (&mut [f64], &mut [f64]) {
+        debug_assert!(a.0 + a.1 <= b.0, "arena regions overlap");
+        let (lo, hi) = self.buf.split_at_mut(b.0);
+        (&mut lo[a.0..a.0 + a.1], &mut hi[..b.1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potential::ops::IndexMode;
+    use crate::potential::PotentialTable;
+
+    fn table(vars: Vec<VarId>, cards: Vec<usize>, seed: u64) -> PotentialTable {
+        let mut t = PotentialTable::zeros(vars, cards);
+        let mut s = seed;
+        for x in t.data_mut() {
+            *x = (crate::rng::splitmix64(&mut s) % 1000) as f64 / 100.0 + 0.01;
+        }
+        t
+    }
+
+    fn plan_for(t: &PotentialTable, sep: &PotentialTable) -> ScanPlan {
+        ScanPlan::new(t.vars(), t.cards(), sep.vars(), sep.cards())
+    }
+
+    #[test]
+    fn marginalize_into_matches_marginalize_keep() {
+        let t = table(vec![0, 2, 5, 6], vec![2, 3, 2, 4], 1);
+        for keep in [vec![], vec![0], vec![2, 6], vec![0, 2, 5, 6], vec![6]] {
+            let expect = t.marginalize_keep(&keep, IndexMode::Odometer);
+            let plan = plan_for(&t, &expect);
+            let mut out = vec![0.0; expect.len()];
+            let mut digits = vec![0usize; plan.arity()];
+            marginalize_into(&plan, t.data(), &mut out, &mut digits);
+            assert_eq!(out.as_slice(), expect.data(), "keep {keep:?}");
+        }
+    }
+
+    #[test]
+    fn marginalize_intra_matches_sequential() {
+        let t = table(vec![0, 1, 2, 3], vec![4, 4, 4, 4], 2);
+        let sep = t.marginalize_keep(&[1, 3], IndexMode::Odometer);
+        let plan = plan_for(&t, &sep);
+        let mut seq = vec![0.0; sep.len()];
+        let mut digits = vec![0usize; plan.arity()];
+        marginalize_into(&plan, t.data(), &mut seq, &mut digits);
+        for spans in [1, 3, 8] {
+            let mut par = vec![0.0; sep.len()];
+            let mut scratch = vec![0.0; spans * sep.len()];
+            marginalize_into_intra(&plan, t.data(), &mut par, &mut scratch, spans, 4);
+            for (a, b) in par.iter().zip(&seq) {
+                assert!((a - b).abs() < 1e-12, "spans {spans}");
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_matches_multiply_subset() {
+        let base = table(vec![0, 1, 3], vec![2, 3, 2], 3);
+        let sub = table(vec![1, 3], vec![3, 2], 4);
+        let mut expect = base.clone();
+        expect.multiply_subset(&sub, IndexMode::Odometer);
+        let plan = plan_for(&base, &sub);
+        let mut got = base.clone();
+        let mut digits = vec![0usize; plan.arity()];
+        absorb_into(&plan, sub.data(), got.data_mut(), &mut digits);
+        assert_eq!(got.data(), expect.data());
+        // Intra-parallel split agrees too.
+        let mut got2 = base.clone();
+        absorb_into_intra(&plan, sub.data(), got2.data_mut(), 5, 4);
+        assert_eq!(got2.data(), expect.data());
+    }
+
+    #[test]
+    fn ratio_and_store_matches_divide_convention() {
+        let new_msg = [2.0, 0.0, 6.0, 0.0];
+        let mut retained = [4.0, 5.0, 0.0, 0.0];
+        let mut ratio = [0.0; 4];
+        ratio_and_store(&new_msg, &mut retained, &mut ratio);
+        // x/0 = 0 convention (including 0/0), matching divide_subset.
+        assert_eq!(ratio, [0.5, 0.0, 0.0, 0.0]);
+        assert_eq!(retained, new_msg, "new message must be retained");
+    }
+
+    #[test]
+    fn empty_scope_plans_are_scalars() {
+        let t = table(vec![], vec![], 5);
+        let sep = PotentialTable::scalar(1.0);
+        let plan = plan_for(&t, &sep);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.sep_len(), 1);
+        let mut out = vec![0.0; 1];
+        marginalize_into(&plan, t.data(), &mut out, &mut []);
+        assert_eq!(out[0], t.data()[0]);
+    }
+
+    #[test]
+    fn span_scan_covers_all_runs() {
+        let t = table(vec![0, 1, 2], vec![3, 2, 4], 6);
+        let sep = t.marginalize_keep(&[1], IndexMode::Odometer);
+        let plan = plan_for(&t, &sep);
+        // Stitch the scan from several spans; must equal the full scan.
+        let mut full: Vec<(usize, usize)> = Vec::new();
+        let mut digits = vec![0usize; plan.arity()];
+        plan.for_runs(&mut digits, |i, is| full.push((i, is)));
+        let mut stitched: Vec<(usize, usize)> = Vec::new();
+        for (lo, hi) in [(0usize, 2usize), (2, 3), (3, 6)] {
+            plan.for_runs_span(lo, hi, |i, is| stitched.push((i, is)));
+        }
+        assert_eq!(full, stitched);
+    }
+
+    #[test]
+    fn arena_layout_disjoint_and_counted() {
+        // Synthetic plans via a tiny chain: 0-1-2 cliques.
+        let cliques = vec![vec![0, 1], vec![1, 2], vec![2, 3]];
+        let separators = vec![vec![], vec![1], vec![2]];
+        let parent = vec![0, 0, 1];
+        let children = vec![vec![1], vec![2], vec![]];
+        let levels = vec![vec![0], vec![1], vec![2]];
+        let cards = vec![2usize, 3, 2, 2];
+        let plans =
+            KernelPlans::build(&cliques, &separators, &parent, &children, &levels, 0, &cards);
+        let layout = ArenaLayout::build(&plans, 0);
+        // Edge 1: sep {1} len 3; edge 2: sep {2} len 2 → 2*(3+2) = 10.
+        assert_eq!(layout.total, 10);
+        let mut arena = TableArena::new();
+        arena.ensure(layout.total);
+        assert_eq!(arena.allocations(), 1);
+        arena.ensure(layout.total);
+        assert_eq!(arena.allocations(), 1, "steady state must not allocate");
+        let (a, b) = arena.two_regions_mut(
+            (layout.slots[1].msg, 3),
+            (layout.slots[1].ratio, 3),
+        );
+        a[0] = 1.0;
+        b[0] = 2.0;
+        assert_eq!(arena.region(layout.slots[1].msg, 1)[0], 1.0);
+        assert_eq!(arena.region(layout.slots[1].ratio, 1)[0], 2.0);
+    }
+
+    #[test]
+    fn schedule_lists_only_parents() {
+        let cliques = vec![vec![0, 1], vec![1, 2], vec![2, 3]];
+        let separators = vec![vec![], vec![1], vec![2]];
+        let parent = vec![0, 0, 1];
+        let children = vec![vec![1], vec![2], vec![]];
+        let levels = vec![vec![0], vec![1], vec![2]];
+        let cards = vec![2usize, 2, 2, 2];
+        let plans =
+            KernelPlans::build(&cliques, &separators, &parent, &children, &levels, 0, &cards);
+        assert_eq!(plans.schedule.active_parents, vec![vec![0], vec![1], vec![]]);
+        // All-binary chain: both non-root edges carry a card-2 separator.
+        assert_eq!(plans.msg(1).sep_len, 2);
+        assert_eq!(plans.msg(2).sep_len, 2);
+    }
+
+    #[test]
+    fn kernel_mode_parse_roundtrip() {
+        assert_eq!(KernelMode::parse("fused"), Some(KernelMode::Fused));
+        assert_eq!(KernelMode::parse("classic"), Some(KernelMode::Classic));
+        assert_eq!(KernelMode::parse("nope"), None);
+        assert_eq!(KernelMode::Fused.label(), "fused");
+        assert_eq!(KernelMode::default(), KernelMode::Fused);
+    }
+}

@@ -12,6 +12,7 @@
 //! maintenance instead of per-entry divide/modulo decoding. The naive
 //! decode path is kept (see [`ops`]) as the ablation baseline for bench E4.
 
+pub mod kernel;
 pub mod ops;
 
 use crate::core::{Evidence, VarId};
@@ -185,25 +186,33 @@ impl PotentialTable {
     /// digit bookkeeping, and runs of consistent entries are never touched.
     pub fn reduce_evidence(&mut self, ev: &Evidence) {
         for (v, s) in ev.iter() {
-            let p = match self.var_position(v) {
-                Some(p) => p,
-                None => continue,
-            };
-            let card = self.cards[p];
-            if s >= card {
-                // Out-of-range state: no entry is consistent (matches the
-                // scan path, where `digits[p] != s` holds everywhere).
-                self.data.fill(0.0);
-                continue;
-            }
-            let stride = self.strides[p];
-            let block = stride * card;
-            let keep_lo = s * stride;
-            let keep_hi = keep_lo + stride;
-            for chunk in self.data.chunks_exact_mut(block) {
-                chunk[..keep_lo].fill(0.0);
-                chunk[keep_hi..].fill(0.0);
-            }
+            self.reduce_observation(v, s);
+        }
+    }
+
+    /// Absorb a single observation `v = s` (see
+    /// [`PotentialTable::reduce_evidence`]). Taking the pair directly lets
+    /// the calibration hot path absorb per-variable deltas without
+    /// building a temporary one-entry [`Evidence`] on the heap.
+    pub fn reduce_observation(&mut self, v: VarId, s: usize) {
+        let p = match self.var_position(v) {
+            Some(p) => p,
+            None => return,
+        };
+        let card = self.cards[p];
+        if s >= card {
+            // Out-of-range state: no entry is consistent (matches the
+            // scan path, where `digits[p] != s` holds everywhere).
+            self.data.fill(0.0);
+            return;
+        }
+        let stride = self.strides[p];
+        let block = stride * card;
+        let keep_lo = s * stride;
+        let keep_hi = keep_lo + stride;
+        for chunk in self.data.chunks_exact_mut(block) {
+            chunk[..keep_lo].fill(0.0);
+            chunk[keep_hi..].fill(0.0);
         }
     }
 

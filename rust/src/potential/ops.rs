@@ -150,21 +150,22 @@ impl PotentialTable {
         match mode {
             IndexMode::Odometer => {
                 let n = out.len();
-                let cards = out.cards().to_vec();
-                let last = cards.len().saturating_sub(1);
-                let (sa, sb) = if cards.is_empty() {
+                let last = out.cards().len().saturating_sub(1);
+                let (sa, sb) = if out.cards().is_empty() {
                     (0, 0)
                 } else {
                     (ma[last], mb[last])
                 };
                 let a_data = self.data();
                 let b_data = other.data();
+                // Split borrow: `cards` (read) and `data` (write) are
+                // disjoint fields of `out`, so neither needs a copy.
+                let PotentialTable { cards, data: out_data, .. } = &mut out;
+                let inner = if cards.is_empty() { 1 } else { cards[last] };
                 // SAFETY of indexing: scan_outer_inner enumerates exactly
                 // the mixed-radix index space of `out`.
-                let out_data = out.data_mut();
-                scan_outer_inner(&cards, n, &[&ma, &mb], |i, idxs| {
+                scan_outer_inner(cards, n, &[&ma, &mb], |i, idxs| {
                     let (mut ia, mut ib) = (idxs[0], idxs[1]);
-                    let inner = if cards.is_empty() { 1 } else { cards[last] };
                     for slot in &mut out_data[i..i + inner] {
                         *slot = a_data[ia] * b_data[ib];
                         ia += sa;
@@ -202,13 +203,13 @@ impl PotentialTable {
         let mo = mapped_strides(self.vars(), &out);
         match mode {
             IndexMode::Odometer => {
-                let cards = self.cards().to_vec();
+                let cards = self.cards();
                 let last = cards.len().saturating_sub(1);
                 let so = if cards.is_empty() { 0 } else { mo[last] };
                 let inner = if cards.is_empty() { 1 } else { cards[last] };
                 let src = self.data();
                 let out_data = out.data_mut();
-                scan_outer_inner(&cards, src.len(), &[&mo], |i, idxs| {
+                scan_outer_inner(cards, src.len(), &[&mo], |i, idxs| {
                     let mut io = idxs[0];
                     if so == 0 {
                         // Last axis is summed out: accumulate the run into
@@ -253,14 +254,18 @@ impl PotentialTable {
         let ms = mapped_strides(self.vars(), sub);
         match mode {
             IndexMode::Odometer => {
-                let cards = self.cards().to_vec();
+                // Split borrows instead of per-call copies: `sub` is a
+                // distinct table (the `&mut self` receiver rules out
+                // aliasing), and `cards` (read) and `data` (write) are
+                // disjoint fields of `self`. The absorb hot path used to
+                // clone `sub.data()` on every call.
+                let sub_data = sub.data();
+                let PotentialTable { cards, data, .. } = self;
                 let last = cards.len().saturating_sub(1);
                 let ss = if cards.is_empty() { 0 } else { ms[last] };
                 let inner = if cards.is_empty() { 1 } else { cards[last] };
-                let n = self.len();
-                let sub_data = sub.data().to_vec(); // tiny; avoids aliasing
-                let data = self.data_mut();
-                scan_outer_inner(&cards, n, &[&ms], |i, idxs| {
+                let n = data.len();
+                scan_outer_inner(cards, n, &[&ms], |i, idxs| {
                     let mut is = idxs[0];
                     if ss == 0 {
                         // Subset doesn't span the last axis: one multiplier
@@ -297,14 +302,14 @@ impl PotentialTable {
         let div = |num: f64, den: f64| if den == 0.0 { 0.0 } else { num / den };
         match mode {
             IndexMode::Odometer => {
-                let cards = self.cards().to_vec();
+                // Same split-borrow shape as `multiply_subset`: no copies.
+                let sub_data = sub.data();
+                let PotentialTable { cards, data, .. } = self;
                 let last = cards.len().saturating_sub(1);
                 let ss = if cards.is_empty() { 0 } else { ms[last] };
                 let inner = if cards.is_empty() { 1 } else { cards[last] };
-                let n = self.len();
-                let sub_data = sub.data().to_vec();
-                let data = self.data_mut();
-                scan_outer_inner(&cards, n, &[&ms], |i, idxs| {
+                let n = data.len();
+                scan_outer_inner(cards, n, &[&ms], |i, idxs| {
                     let mut is = idxs[0];
                     if ss == 0 {
                         let den = sub_data[is];
@@ -452,6 +457,34 @@ mod tests {
         b.multiply_subset(&sub, IndexMode::NaiveDecode);
         for (x, y) in a.data().iter().zip(b.data()) {
             assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn divide_subset_modes_agree() {
+        // Regression for the split-borrow rewrite (the Odometer arms used
+        // to copy `sub.data()` per call): both index modes must agree for
+        // several subset positions, including 0-denominator cells.
+        let base = table(vec![0, 2, 3, 5], vec![2, 3, 2, 2], 15);
+        for sub_vars in [vec![0], vec![2, 5], vec![0, 3], vec![5]] {
+            let cards: Vec<usize> =
+                sub_vars.iter().map(|&v| base.card_of(v).unwrap()).collect();
+            let mut sub = table(sub_vars.clone(), cards, 16);
+            sub.data_mut()[0] = 0.0;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            a.divide_subset(&sub, IndexMode::Odometer);
+            b.divide_subset(&sub, IndexMode::NaiveDecode);
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert!((x - y).abs() < 1e-12, "sub {sub_vars:?}");
+            }
+            let mut m1 = base.clone();
+            let mut m2 = base.clone();
+            m1.multiply_subset(&sub, IndexMode::Odometer);
+            m2.multiply_subset(&sub, IndexMode::NaiveDecode);
+            for (x, y) in m1.data().iter().zip(m2.data()) {
+                assert!((x - y).abs() < 1e-12, "sub {sub_vars:?}");
+            }
         }
     }
 

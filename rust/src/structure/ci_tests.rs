@@ -67,10 +67,19 @@ impl<'d> CiTester<'d> {
 
     /// Number of cells a test of `x ⟂ y | z` would need; PC skips tests
     /// whose tables the data cannot populate (heuristic guard also used by
-    /// the original PC implementations).
+    /// the original PC implementations). Saturating: a large conditioning
+    /// set multiplies cardinalities past `usize::MAX`, and a wrapped
+    /// product would silently defeat the reliability guard (a tiny bogus
+    /// cell count reads as "plenty of rows per cell").
     pub fn table_size(&self, x: VarId, y: VarId, z: &[VarId]) -> usize {
-        let cz: usize = z.iter().map(|&v| self.data.cardinality(v)).product();
-        self.data.cardinality(x) * self.data.cardinality(y) * cz
+        z.iter()
+            .map(|&v| self.data.cardinality(v))
+            .fold(
+                self.data
+                    .cardinality(x)
+                    .saturating_mul(self.data.cardinality(y)),
+                usize::saturating_mul,
+            )
     }
 
     /// Test `x ⟂ y | z`.
@@ -473,5 +482,22 @@ mod tests {
         let ds = dataset_independent(10, 6);
         let t = CiTester::new(&ds);
         assert_eq!(t.table_size(0, 1, &[2]), 2 * 2 * 3);
+    }
+
+    #[test]
+    fn table_size_saturates_instead_of_wrapping() {
+        // 40 card-4 variables: 4^40 = 2^80 overflows 64-bit usize. A
+        // wrapping product would come out tiny and defeat the PC
+        // reliability guard; saturation keeps the "table is absurdly
+        // large" signal intact.
+        let vars: Vec<Variable> =
+            (0..40).map(|i| Variable::new(format!("v{i}"), 4)).collect();
+        let mut ds = Dataset::new(vars);
+        ds.push_row(&[0u8; 40]);
+        let t = CiTester::new(&ds);
+        let z: Vec<VarId> = (2..40).collect();
+        assert_eq!(t.table_size(0, 1, &z), usize::MAX);
+        // Small sets still compute exactly.
+        assert_eq!(t.table_size(0, 1, &[2, 3]), 4 * 4 * 4 * 4);
     }
 }

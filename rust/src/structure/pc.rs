@@ -30,8 +30,11 @@ pub struct PcOptions {
     pub threads: usize,
     /// Edges claimed per work-pool pull (dynamic scheduling granularity).
     pub chunk: usize,
-    /// Skip tests whose contingency table exceeds `n_rows / min_rows_per_cell`
-    /// cells (standard reliability guard; 0 disables).
+    /// Reliability guard: run a CI test only when the dataset averages at
+    /// least this many rows per contingency-table cell, i.e. skip when
+    /// `cells * min_rows_per_cell > n_rows` (the standard "10 rows per
+    /// cell" heuristic of classic PC implementations; 0 disables). A
+    /// skipped test counts as dependence — the edge stays.
     pub min_rows_per_cell: usize,
 }
 
@@ -102,11 +105,18 @@ fn test_edge(
         let mut comb = Combinations::new(pool.len(), level);
         let mut subset = vec![0 as VarId; level];
         while comb.next_into(|slot, idx| subset[slot] = pool[idx]) {
-            // Reliability guard: skip unpopulatable tables.
+            // Reliability guard: skip tests whose contingency table the
+            // data cannot populate. The heuristic (used by classic PC
+            // implementations) requires on average at least
+            // `min_rows_per_cell` rows per table cell, i.e. run the test
+            // only when `n_rows >= cells * min_rows_per_cell`. (An earlier
+            // version multiplied the row count by 10, which at the default
+            // setting only skipped when `cells > n_rows` — a guard 10×
+            // weaker than documented.) `table_size` saturates, so huge
+            // conditioning sets cannot wrap the comparison.
             if opts.min_rows_per_cell > 0 {
                 let cells = tester.table_size(x, y, &subset);
-                if cells * opts.min_rows_per_cell > n_rows.max(1) * 10 {
-                    // Matches the usual heuristic n >= 10 * cells / 10.
+                if cells.saturating_mul(opts.min_rows_per_cell) > n_rows.max(1) {
                     continue;
                 }
             }
@@ -336,5 +346,29 @@ mod tests {
             &PcOptions { strategy: CountStrategy::Naive, ..Default::default() },
         );
         assert_eq!(g.graph, n.graph);
+    }
+
+    #[test]
+    fn reliability_guard_skips_unpopulatable_tables() {
+        // sprinkler is all-binary: every level-0 table has 4 cells. With
+        // 30 rows and the default 10-rows-per-cell guard, 4 * 10 = 40 > 30
+        // — every test must be skipped (a skipped test keeps the edge, so
+        // the skeleton stays complete).
+        let net = repository::sprinkler();
+        let mut rng = Pcg::seed_from(29);
+        let data = forward_sample_dataset(&net, 30, &mut rng);
+        let strict = pc_stable(&data, &PcOptions::default());
+        assert_eq!(strict.n_tests, 0, "30 rows cannot populate any 4-cell table");
+        let n = data.n_vars();
+        assert_eq!(strict.graph.skeleton().n_edges(), n * (n - 1) / 2);
+        // Loosening to 5 rows per cell (4 * 5 = 20 <= 30) or disabling the
+        // guard lets the tests run.
+        for mrpc in [5usize, 0] {
+            let loose = pc_stable(
+                &data,
+                &PcOptions { min_rows_per_cell: mrpc, ..Default::default() },
+            );
+            assert!(loose.n_tests > 0, "guard must not fire at mrpc={mrpc}");
+        }
     }
 }

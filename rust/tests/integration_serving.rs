@@ -6,7 +6,7 @@ use fastpgm::coordinator::{
     BatcherConfig, QueryReply, QueryRequest, QueryRouter,
 };
 use fastpgm::core::Evidence;
-use fastpgm::inference::exact::{JunctionTree, QueryEngineConfig};
+use fastpgm::inference::exact::{JunctionTree, KernelMode, QueryEngineConfig};
 use fastpgm::inference::InferenceEngine;
 use fastpgm::network::repository;
 use fastpgm::rng::Pcg;
@@ -259,6 +259,50 @@ fn no_warm_start_router_serves_identically() {
     let stats = r.stats();
     assert_eq!(stats[0].1.cache.warm_starts, 0, "{:?}", stats[0].1.cache);
     assert_eq!(stats[0].1.cache.cold_misses, 3, "{:?}", stats[0].1.cache);
+}
+
+#[test]
+fn served_kernel_modes_agree_and_report_label() {
+    // A fused-kernel router and a classic-kernel router must serve
+    // identical answers over a mixed hit/warm/cold trace, and the stats
+    // row must carry the kernel label.
+    let net = repository::asia();
+    let mut routers = Vec::new();
+    for kernel in [KernelMode::Fused, KernelMode::Classic] {
+        let mut r = QueryRouter::new(2);
+        r.register(
+            "asia",
+            &net,
+            QueryEngineConfig { cache_capacity: 8, kernel, ..Default::default() },
+            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        );
+        routers.push(r);
+    }
+    let mut rng = Pcg::seed_from(77);
+    for _ in 0..30 {
+        let k = rng.below(3);
+        let ev: Evidence = rng
+            .choose_k(net.n_vars(), k)
+            .into_iter()
+            .map(|v| (v, rng.below(net.cardinality(v))))
+            .collect();
+        let var = rng.below(net.n_vars());
+        let a = routers[0].posterior("asia", var, ev.clone()).unwrap();
+        let b = routers[1].posterior("asia", var, ev.clone()).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-12, "var {var} ev {ev:?}");
+        }
+    }
+    let fused_stats = routers[0].stats();
+    let classic_stats = routers[1].stats();
+    assert_eq!(fused_stats[0].1.serving.kernel, "fused");
+    assert_eq!(classic_stats[0].1.serving.kernel, "classic");
+    assert!(fused_stats[0].1.serving.summary().contains("kernel=fused"));
+    // Identical traffic → identical cache behaviour on both kernels.
+    assert_eq!(
+        fused_stats[0].1.cache.misses(),
+        classic_stats[0].1.cache.misses()
+    );
 }
 
 #[test]

@@ -4,10 +4,14 @@
 
 use fastpgm::core::Evidence;
 use fastpgm::inference::exact::{
-    CalibrationMode, CompiledTree, JunctionTree, QueryEngine, QueryEngineConfig,
+    CalibrationMode, CompiledTree, JunctionTree, KernelMode, QueryEngine,
+    QueryEngineConfig,
 };
 use fastpgm::inference::exact::triangulation::EliminationHeuristic;
 use fastpgm::inference::InferenceEngine;
+use fastpgm::potential::kernel::{
+    absorb_into, marginalize_into, ratio_and_store, ScanPlan,
+};
 use fastpgm::potential::ops::IndexMode;
 use fastpgm::potential::PotentialTable;
 use fastpgm::testkit::*;
@@ -390,6 +394,140 @@ fn prop_query_engine_warm_start_matches_cold_serving() {
         assert_eq!(warm_stats.warm_starts, 2, "{warm_stats:?}");
         let cold_stats = cold_engine.stats();
         assert_eq!(cold_stats.warm_starts, 0, "{cold_stats:?}");
+    });
+}
+
+/// Fused kernel primitives vs both classic oracles, at the table-op
+/// level: marginalization through a precompiled [`ScanPlan`] must match
+/// `marginalize_keep` under [`IndexMode::Odometer`] *and*
+/// [`IndexMode::NaiveDecode`] to 1e-12, and the fused
+/// ratio-and-store + absorb pass must match `divide_subset` +
+/// `multiply_subset` — over randomized scopes (including empty scopes and
+/// empty separators), tables with zero entries, and evidence-reduced
+/// tables (the mid-calibration shape where whole support regions are 0).
+#[test]
+fn prop_fused_kernel_ops_match_oracles() {
+    property("fused kernels == Odometer & NaiveDecode oracles", 150, 120, |rng| {
+        let mut t = gen_potential(rng, 8, 4, 4);
+        for x in t.data_mut() {
+            if rng.bool_with(0.25) {
+                *x = 0.0;
+            }
+        }
+        if rng.bool_with(0.5) && !t.vars().is_empty() {
+            let v = t.vars()[rng.below(t.vars().len())];
+            let card = t.card_of(v).unwrap();
+            t.reduce_evidence(&Evidence::new().with(v, rng.below(card)));
+        }
+        // Random separator sub-scope (possibly empty, possibly the full
+        // scope — both appear in real junction trees).
+        let keep: Vec<usize> =
+            t.vars().iter().copied().filter(|_| rng.bool_with(0.5)).collect();
+        let odo = t.marginalize_keep(&keep, IndexMode::Odometer);
+        let naive = t.marginalize_keep(&keep, IndexMode::NaiveDecode);
+        let plan = ScanPlan::new(t.vars(), t.cards(), odo.vars(), odo.cards());
+        let mut msg = vec![0.0; odo.len()];
+        let mut digits = vec![0usize; plan.arity()];
+        marginalize_into(&plan, t.data(), &mut msg, &mut digits);
+        for ((f, o), n) in msg.iter().zip(odo.data()).zip(naive.data()) {
+            assert!((f - o).abs() <= 1e-12, "marginalize vs Odometer");
+            assert!((f - n).abs() <= 1e-12, "marginalize vs NaiveDecode");
+        }
+
+        // Hugin ratio + absorb with zeros in the retained message (the
+        // 0/0 = 0 convention) against the classic three-op sequence.
+        let mut old = odo.clone();
+        for x in old.data_mut() {
+            if rng.bool_with(0.3) {
+                *x = 0.0;
+            }
+        }
+        let new_msg = PotentialTable::from_data(
+            odo.vars().to_vec(),
+            odo.cards().to_vec(),
+            msg.clone(),
+        );
+        let mut classic_ratio = new_msg.clone();
+        classic_ratio.divide_subset(&old, IndexMode::NaiveDecode);
+        let mut classic_t = t.clone();
+        classic_t.multiply_subset(&classic_ratio, IndexMode::NaiveDecode);
+
+        let mut retained = old.data().to_vec();
+        let mut ratio = vec![0.0; msg.len()];
+        ratio_and_store(&msg, &mut retained, &mut ratio);
+        assert_eq!(retained, msg, "new message must be retained");
+        let mut fused_t = t.clone();
+        absorb_into(&plan, &ratio, fused_t.data_mut(), &mut digits);
+        for (a, b) in fused_t.data().iter().zip(classic_t.data()) {
+            assert!((a - b).abs() <= 1e-12, "absorb vs divide+multiply");
+        }
+    });
+}
+
+/// Fused engine vs the classic engine under both index modes: identical
+/// posteriors and P(e) to 1e-12 over random networks and random evidence
+/// (empty evidence included).
+#[test]
+fn prop_fused_engine_matches_classic_both_index_modes() {
+    property("fused JT == classic JT (both index modes)", 151, 15, |rng| {
+        let net = gen_network(rng, 8);
+        let k = rng.below(4);
+        let ev = gen_evidence(rng, &net, k);
+        let jt = JunctionTree::build(&net);
+        let mut fused = jt.engine();
+        let fused_ans = fused.query_all(&ev);
+        for index_mode in [IndexMode::Odometer, IndexMode::NaiveDecode] {
+            let mut classic = jt.engine();
+            classic.kernel = KernelMode::Classic;
+            classic.index_mode = index_mode;
+            let classic_ans = classic.query_all(&ev);
+            for (v, (f, c)) in fused_ans.iter().zip(&classic_ans).enumerate() {
+                for (a, b) in f.iter().zip(c) {
+                    assert!(
+                        (a - b).abs() <= 1e-12,
+                        "{index_mode:?} var {v}: {f:?} vs {c:?}"
+                    );
+                }
+            }
+            assert!(
+                (fused.evidence_probability() - classic.evidence_probability()).abs()
+                    <= 1e-12
+            );
+        }
+    });
+}
+
+/// Warm-start recalibration under the fused kernels must equal *cold
+/// classic* calibration along random evidence chains — the two paths
+/// share no message code, so agreement to 1e-12 pins both the fused scans
+/// and the incremental schedule at once.
+#[test]
+fn prop_warm_fused_equals_cold_classic_on_chains() {
+    property("fused warm chain == classic cold", 152, 10, |rng| {
+        let net = gen_network(rng, 8);
+        let fused = CompiledTree::compile(&net);
+        let classic = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        let mut warm = Arc::clone(fused.prior());
+        let mut ev = Evidence::new();
+        for v in rng.choose_k(net.n_vars(), 3) {
+            ev.set(v, rng.below(net.cardinality(v)));
+            warm = Arc::new(fused.recalibrate_from(&warm, &ev));
+            let cold = classic.calibrate(&ev);
+            assert!(
+                (warm.evidence_probability() - cold.evidence_probability()).abs()
+                    <= 1e-12,
+                "P(e): {} vs {}",
+                warm.evidence_probability(),
+                cold.evidence_probability()
+            );
+            for (v, (w, c)) in
+                warm.posterior_all().iter().zip(&cold.posterior_all()).enumerate()
+            {
+                for (a, b) in w.iter().zip(c) {
+                    assert!((a - b).abs() <= 1e-12, "var {v}: {w:?} vs {c:?}");
+                }
+            }
+        }
     });
 }
 
