@@ -1,0 +1,226 @@
+//! Learning-pipeline bench — the substrate + parallel-learning numbers,
+//! written to `BENCH_learning.json`:
+//!
+//! * **PC wall-clock and CI tests/s vs threads** — sequential PC-stable
+//!   against the CI-level-parallel variant across worker counts (the
+//!   paper's optimization (i) on the learning side).
+//! * **Hill climbing sequential vs parallel** — the O(n²) candidate-delta
+//!   scan fanned over the pool, with the thread-count-invariance gate
+//!   asserted before anything is timed.
+//! * **Count-cache effectiveness** — hit / projection / scan counters,
+//!   hit rate and resident bytes of one shared cache carried across a
+//!   full `learn::Pipeline` run (structure + MLE), plus the hit rate of
+//!   a PC run alone.
+//!
+//! `FASTPGM_BENCH_QUICK=1` shrinks workloads for CI smoke runs.
+
+use std::path::Path;
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, bench, report, throughput, Measurement};
+use fastpgm::counts::CountCache;
+use fastpgm::learn::Pipeline;
+use fastpgm::network::{repository, synthetic::SyntheticSpec, BayesianNetwork};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::structure::{
+    hill_climb, pc_stable, pc_stable_parallel, pc_stable_with_cache, HcOptions,
+    PcOptions,
+};
+
+fn workload(net: &BayesianNetwork, rows: usize) -> fastpgm::core::Dataset {
+    let mut rng = Pcg::seed_from(0xC0FFEE);
+    forward_sample_dataset(net, rows, &mut rng)
+}
+
+fn main() {
+    println!("== learning pipeline: substrate + parallel learners ==");
+    let rows = benchkit::scaled(20_000, 2_000);
+    let pc_samples = benchkit::scaled(5, 2);
+    let hc_samples = benchkit::scaled(3, 1);
+    let thread_sweep: &[usize] =
+        if benchkit::quick() { &[2] } else { &[2, 4, 8] };
+    let mut scenarios: Vec<Json> = Vec::new();
+
+    let nets: Vec<BayesianNetwork> = vec![
+        repository::survey(),
+        SyntheticSpec::child_like().generate(1),
+    ];
+
+    for net in &nets {
+        let name = net.name().to_string();
+        let data = workload(net, rows);
+        let opts = PcOptions { alpha: 0.05, ..Default::default() };
+
+        // Correctness gates before timing: parallel == sequential for
+        // both learners, cache-backed == direct.
+        let seq_result = pc_stable(&data, &opts);
+        for &t in thread_sweep {
+            let par =
+                pc_stable_parallel(&data, &PcOptions { threads: t, ..opts.clone() });
+            assert_eq!(seq_result.graph, par.graph, "{name}: PC diverges at t={t}");
+            assert_eq!(seq_result.n_tests, par.n_tests);
+        }
+        let gate_cache = CountCache::new();
+        let cached = pc_stable_with_cache(&data, &opts, &gate_cache);
+        assert_eq!(seq_result.graph, cached.graph, "{name}: cache changes the graph");
+
+        // PC wall-clock + CI tests/s vs threads.
+        let mut rows_out: Vec<Measurement> = Vec::new();
+        rows_out.push(bench(format!("{name} pc seq"), 1, pc_samples, || {
+            pc_stable(&data, &opts)
+        }));
+        for &t in thread_sweep {
+            let popts = PcOptions { threads: t, ..opts.clone() };
+            rows_out.push(bench(format!("{name} pc x{t}"), 1, pc_samples, || {
+                pc_stable_parallel(&data, &popts)
+            }));
+        }
+        report(
+            &format!("{name} PC-stable ({} vars, {rows} rows)", net.n_vars()),
+            &rows_out,
+        );
+        let seq_median = rows_out[0].median();
+        scenarios.push(Json::obj([
+            ("net", Json::str(name.clone())),
+            ("mode", Json::str("pc")),
+            ("rows", Json::num(rows as f64)),
+            ("n_ci_tests", Json::num(seq_result.n_tests as f64)),
+            ("seq_median_us", Json::num(seq_median.as_secs_f64() * 1e6)),
+            (
+                "seq_ci_tests_per_s",
+                Json::num(throughput(seq_result.n_tests, seq_median)),
+            ),
+            (
+                "threads",
+                Json::Arr(
+                    thread_sweep
+                        .iter()
+                        .zip(rows_out.iter().skip(1))
+                        .map(|(&t, m)| {
+                            Json::obj([
+                                ("threads", Json::num(t as f64)),
+                                (
+                                    "median_us",
+                                    Json::num(m.median().as_secs_f64() * 1e6),
+                                ),
+                                (
+                                    "ci_tests_per_s",
+                                    Json::num(throughput(
+                                        seq_result.n_tests,
+                                        m.median(),
+                                    )),
+                                ),
+                                (
+                                    "speedup",
+                                    Json::num(
+                                        seq_median.as_secs_f64()
+                                            / m.median().as_secs_f64().max(1e-12),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+
+        // Hill climbing: sequential vs parallel candidate scan.
+        let hc_seq_result = hill_climb(&data, &HcOptions::default());
+        let hc_threads = benchkit::scaled(4, 2);
+        let hc_par_result =
+            hill_climb(&data, &HcOptions { threads: hc_threads, ..Default::default() });
+        assert_eq!(
+            hc_seq_result.dag.edges(),
+            hc_par_result.dag.edges(),
+            "{name}: parallel HC diverges"
+        );
+        let hc_rows = vec![
+            bench(format!("{name} hc seq"), 0, hc_samples, || {
+                hill_climb(&data, &HcOptions::default())
+            }),
+            bench(format!("{name} hc x{hc_threads}"), 0, hc_samples, || {
+                hill_climb(&data, &HcOptions { threads: hc_threads, ..Default::default() })
+            }),
+        ];
+        report(
+            &format!(
+                "{name} hill climbing ({} moves, score {:.1})",
+                hc_seq_result.moves, hc_seq_result.score
+            ),
+            &hc_rows,
+        );
+        scenarios.push(Json::obj([
+            ("net", Json::str(name.clone())),
+            ("mode", Json::str("hc")),
+            ("rows", Json::num(rows as f64)),
+            ("moves", Json::num(hc_seq_result.moves as f64)),
+            ("seq_median_us", Json::num(hc_rows[0].median().as_secs_f64() * 1e6)),
+            ("par_threads", Json::num(hc_threads as f64)),
+            ("par_median_us", Json::num(hc_rows[1].median().as_secs_f64() * 1e6)),
+            (
+                "par_speedup",
+                Json::num(
+                    hc_rows[0].median().as_secs_f64()
+                        / hc_rows[1].median().as_secs_f64().max(1e-12),
+                ),
+            ),
+        ]));
+
+        // Count-cache effectiveness across one full pipeline run
+        // (structure + MLE over a single shared cache), plus the PC-only
+        // run's counters from the gate above. A CPDAG that fails to
+        // extend on this sample (possible on small/quick workloads) only
+        // skips the scenario, never the bench.
+        match Pipeline::pc(opts.clone()).run(&data) {
+            Ok(model) => {
+                let c = &model.report.counts;
+                let pc_only = gate_cache.stats();
+                println!(
+                    "  {name} count cache (pipeline): hits={} projections={} \
+                     scans={} hit_rate={:.3} scan_free={:.3} bytes={}",
+                    c.hits,
+                    c.projections,
+                    c.scans,
+                    c.hit_rate(),
+                    c.scan_free_rate(),
+                    c.bytes
+                );
+                scenarios.push(Json::obj([
+                    ("net", Json::str(name.clone())),
+                    ("mode", Json::str("count_cache")),
+                    ("pipeline_hits", Json::num(c.hits as f64)),
+                    ("pipeline_projections", Json::num(c.projections as f64)),
+                    ("pipeline_scans", Json::num(c.scans as f64)),
+                    ("pipeline_hit_rate", Json::num(c.hit_rate())),
+                    ("pipeline_scan_free_rate", Json::num(c.scan_free_rate())),
+                    ("pipeline_bytes", Json::num(c.bytes as f64)),
+                    ("pipeline_tables", Json::num(c.tables as f64)),
+                    ("pc_only_hit_rate", Json::num(pc_only.hit_rate())),
+                    (
+                        "mle_elapsed_us",
+                        Json::num(model.report.mle_elapsed.as_secs_f64() * 1e6),
+                    ),
+                ]));
+            }
+            Err(e) => println!("  {name} pipeline scenario skipped: {e}"),
+        }
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("learning")),
+        (
+            "config",
+            Json::obj([
+                ("rows", Json::num(rows as f64)),
+                ("pc_samples", Json::num(pc_samples as f64)),
+                ("hc_samples", Json::num(hc_samples as f64)),
+                ("quick", Json::num(if benchkit::quick() { 1.0 } else { 0.0 })),
+            ]),
+        ),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    let path = Path::new("BENCH_learning.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_learning.json");
+    println!("\nwrote {}", path.display());
+}

@@ -4,15 +4,21 @@
 //! Train: learn structure (PC-stable) + parameters (MLE) from labeled
 //! data — or accept a known structure. Predict: posterior of the class
 //! variable given the feature evidence, via any [`InferenceEngine`].
+//!
+//! Training routes every count through one shared
+//! [`crate::counts::CountCache`]: the contingency tables the PC phase
+//! builds for its CI tests stay resident, so the MLE phase hits or
+//! subset-projects instead of rescanning the training rows.
 
 use crate::core::{Dataset, Evidence, VarId};
+use crate::counts::CountCache;
 use crate::graph::Dag;
 use crate::inference::exact::JunctionTree;
 use crate::inference::InferenceEngine;
 use crate::metrics;
 use crate::network::BayesianNetwork;
-use crate::parameter::{mle, MleOptions};
-use crate::structure::{pc_stable_parallel, PcOptions};
+use crate::parameter::{mle_with_cache, MleOptions};
+use crate::structure::{pc_stable_with_cache, PcOptions};
 
 /// How the classifier obtains its structure.
 #[derive(Clone, Debug)]
@@ -39,6 +45,10 @@ impl BnClassifier {
         source: StructureSource,
         mle_opts: &MleOptions,
     ) -> Self {
+        // One cache across both phases: PC's CI tables feed MLE's
+        // family counts (hits / subset projections, never a rescan of
+        // an already-counted scope).
+        let counts = CountCache::new();
         let dag = match source {
             StructureSource::Fixed(d) => d,
             StructureSource::NaiveBayes => {
@@ -51,7 +61,7 @@ impl BnClassifier {
                 d
             }
             StructureSource::Learn(pc_opts) => {
-                let result = pc_stable_parallel(data, &pc_opts);
+                let result = pc_stable_with_cache(data, &pc_opts, &counts);
                 // A CPDAG must be extended to a DAG to parameterize;
                 // fall back to naive Bayes augmentation if extension fails
                 // (possible on small samples with conflicting colliders).
@@ -69,7 +79,7 @@ impl BnClassifier {
                 }
             }
         };
-        let net = mle(data, &dag, mle_opts);
+        let net = mle_with_cache(data, &dag, mle_opts, &counts);
         BnClassifier { net, class_var }
     }
 

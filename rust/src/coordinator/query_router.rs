@@ -674,6 +674,53 @@ impl QueryRouter {
         )
     }
 
+    /// Register (or replace, after draining) a freshly learned model —
+    /// the artifact of a [`crate::learn::Pipeline`] run — reusing its
+    /// already-compiled junction tree instead of re-triangulating (and
+    /// without any `.fpgm` round-trip). The learned model gets the same
+    /// serving treatment as any other: `engine_config`'s serving knobs
+    /// (cache, warm starts, kernel) and a full approximate tier per
+    /// `approx` (pass [`ApproxConfig::default`] for exact-only).
+    pub fn register_learned(
+        &mut self,
+        name: impl Into<String>,
+        model: &crate::learn::LearnedModel,
+        engine_config: QueryEngineConfig,
+        batcher_config: BatcherConfig,
+        approx: ApproxConfig,
+    ) -> bool {
+        let engine = Arc::new(QueryEngine::from_compiled(
+            &model.net,
+            model.compiled.clone(),
+            engine_config,
+        ));
+        self.spawn_and_register(name.into(), engine, batcher_config, approx)
+    }
+
+    /// Shared tail of every registration flavour: spawn the service over
+    /// the router pool and swap it in (draining any predecessor).
+    fn spawn_and_register(
+        &mut self,
+        name: String,
+        engine: Arc<QueryEngine>,
+        batcher_config: BatcherConfig,
+        approx: ApproxConfig,
+    ) -> bool {
+        let service = QueryService::spawn_with_approx(
+            engine,
+            Arc::clone(&self.pool),
+            batcher_config,
+            approx,
+        );
+        super::register_model(
+            &mut self.models,
+            name,
+            service,
+            "query service",
+            QueryService::drain,
+        )
+    }
+
     /// Register (or replace, after draining) a model with an approximate
     /// tier.
     pub fn register_with_approx(
@@ -685,19 +732,7 @@ impl QueryRouter {
         approx: ApproxConfig,
     ) -> bool {
         let engine = Arc::new(QueryEngine::with_config(net, engine_config));
-        let service = QueryService::spawn_with_approx(
-            engine,
-            Arc::clone(&self.pool),
-            batcher_config,
-            approx,
-        );
-        super::register_model(
-            &mut self.models,
-            name.into(),
-            service,
-            "query service",
-            QueryService::drain,
-        )
+        self.spawn_and_register(name.into(), engine, batcher_config, approx)
     }
 
     /// Registered model names, sorted.

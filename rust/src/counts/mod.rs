@@ -1,0 +1,735 @@
+//! Shared sufficient-statistics substrate: grouped contingency counting
+//! over the column-major [`Dataset`] plus a thread-safe, sharded count
+//! cache with subset projection.
+//!
+//! Every learning-side consumer — conditional-independence tests
+//! ([`crate::structure::CiTester`]), decomposable structure scores
+//! ([`crate::structure::Scorer`]), maximum-likelihood parameter
+//! estimation ([`crate::parameter`]) and the classifier
+//! ([`crate::classify`]) — needs the same primitive: integer counts
+//! `n(V)` over a small set of variables `V`. Before this module each of
+//! them re-counted raw rows independently; now they all route through
+//!
+//! * [`ContingencyTable`] — one streaming column-major pass builds the
+//!   joint count table over a *sorted* variable set (the paper's
+//!   optimization (ii): the scan touches `|V|` dense arrays
+//!   sequentially). Marginals, permuted layouts and subset tables are
+//!   derived from the joint by table-sized passes instead of re-reading
+//!   rows (optimization (iii), computation grouping).
+//! * [`CountCache`] — a sharded, read-mostly map from sorted variable
+//!   sets to `Arc<ContingencyTable>`. Hits skip the `O(n_rows)` scan
+//!   entirely; misses first try **subset projection** — deriving the
+//!   requested table from a cached *superset* table by marginalizing
+//!   counts out (`O(superset cells)`, exact integer sums) — and only
+//!   scan rows when no affordable superset is cached. Projection is the
+//!   learning-side analogue of the serving stack's warm starts: the
+//!   cached artifact nearest the request is specialized instead of
+//!   recomputing from scratch.
+//!
+//! All derivations are exact integer arithmetic, so a consumer fed by
+//! the cache produces *bit-identical* statistics, scores and CPTs to one
+//! that counts rows directly (asserted by the equivalence suite in
+//! `integration_learning.rs`).
+
+use crate::core::{Dataset, VarId};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+/// Joint integer counts over a sorted set of variables, row-major with
+/// the last variable fastest.
+#[derive(Clone, Debug)]
+pub struct ContingencyTable {
+    /// Scope, sorted ascending (the canonical cache key).
+    vars: Vec<VarId>,
+    /// Cardinality per scope position.
+    cards: Vec<usize>,
+    /// `counts[idx]` where `idx = Σ digit_i * stride_i` (row-major).
+    counts: Vec<u64>,
+    /// Rows counted (the table always sums to this).
+    n_rows: usize,
+}
+
+impl ContingencyTable {
+    /// Count the joint table in one streaming pass over the dataset's
+    /// columns. `vars` must be sorted and duplicate-free. Small arities
+    /// get dedicated branch-free loops: 1–3 variables cover every CI
+    /// test up to conditioning level 1 and most families, and the
+    /// 4-variable path keeps conditioning level 2 — the hottest deep
+    /// level in PC runs (§Perf P6) — off the generic per-row inner
+    /// loop.
+    pub fn count(data: &Dataset, vars: &[VarId]) -> ContingencyTable {
+        debug_assert!(
+            vars.windows(2).all(|w| w[0] < w[1]),
+            "contingency scope must be sorted and unique"
+        );
+        let cards: Vec<usize> = vars.iter().map(|&v| data.cardinality(v)).collect();
+        let size = cards.iter().product::<usize>().max(1);
+        let mut counts = vec![0u64; size];
+        let n = data.n_rows();
+        match vars.len() {
+            0 => counts[0] = n as u64,
+            1 => {
+                for &s in data.column(vars[0]) {
+                    counts[s as usize] += 1;
+                }
+            }
+            2 => {
+                let c0 = data.column(vars[0]);
+                let c1 = data.column(vars[1]);
+                let k1 = cards[1];
+                for r in 0..n {
+                    counts[c0[r] as usize * k1 + c1[r] as usize] += 1;
+                }
+            }
+            3 => {
+                let c0 = data.column(vars[0]);
+                let c1 = data.column(vars[1]);
+                let c2 = data.column(vars[2]);
+                let (k1, k2) = (cards[1], cards[2]);
+                for r in 0..n {
+                    let idx = (c0[r] as usize * k1 + c1[r] as usize) * k2
+                        + c2[r] as usize;
+                    counts[idx] += 1;
+                }
+            }
+            4 => {
+                let c0 = data.column(vars[0]);
+                let c1 = data.column(vars[1]);
+                let c2 = data.column(vars[2]);
+                let c3 = data.column(vars[3]);
+                let (k1, k2, k3) = (cards[1], cards[2], cards[3]);
+                for r in 0..n {
+                    let idx = ((c0[r] as usize * k1 + c1[r] as usize) * k2
+                        + c2[r] as usize)
+                        * k3
+                        + c3[r] as usize;
+                    counts[idx] += 1;
+                }
+            }
+            _ => {
+                // Mixed-radix index built per row; columns pre-fetched
+                // once to keep the loop branch-free.
+                let cols: Vec<&[u8]> = vars.iter().map(|&v| data.column(v)).collect();
+                for r in 0..n {
+                    let mut idx = 0usize;
+                    for (k, col) in cols.iter().enumerate() {
+                        idx = idx * cards[k] + col[r] as usize;
+                    }
+                    counts[idx] += 1;
+                }
+            }
+        }
+        ContingencyTable { vars: vars.to_vec(), cards, counts, n_rows: n }
+    }
+
+    /// Scope (sorted).
+    pub fn vars(&self) -> &[VarId] {
+        &self.vars
+    }
+
+    /// Cardinalities per scope position.
+    pub fn cards(&self) -> &[usize] {
+        &self.cards
+    }
+
+    /// Raw counts (row-major, last variable fastest).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Consume the table, yielding the raw counts without a copy — for
+    /// owned tables whose canonical layout already is the wanted one.
+    pub fn into_counts(self) -> Vec<u64> {
+        self.counts
+    }
+
+    /// Rows the table was counted over.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Cell count.
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Heap bytes of the count array (cache accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.counts.len() * std::mem::size_of::<u64>()) as u64
+    }
+
+    /// Derive the marginal table over a subset of this table's scope by
+    /// summing the dropped variables out — `O(cells)` exact integer
+    /// sums, no dataset rescan. `vars` must be sorted and a subset of
+    /// [`ContingencyTable::vars`].
+    pub fn project(&self, vars: &[VarId]) -> ContingencyTable {
+        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(
+            is_sorted_subset(vars, &self.vars),
+            "projection scope must be a subset of the table scope"
+        );
+        let cards: Vec<usize> = vars
+            .iter()
+            .map(|&v| self.cards[self.vars.binary_search(&v).unwrap()])
+            .collect();
+        let size = cards.iter().product::<usize>().max(1);
+        let mut counts = vec![0u64; size];
+        // Row-major strides of the kept variables in the output (0 for a
+        // dropped axis), then one odometer walk over the source cells.
+        let mut out_strides = vec![0usize; self.vars.len()];
+        let mut stride = 1usize;
+        for (k, &v) in vars.iter().enumerate().rev() {
+            let pos = self.vars.binary_search(&v).unwrap();
+            out_strides[pos] = stride;
+            stride *= cards[k];
+        }
+        self.scatter_into(&out_strides, &mut counts);
+        ContingencyTable { vars: vars.to_vec(), cards, counts, n_rows: self.n_rows }
+    }
+
+    /// Counts re-laid-out with an explicit axis order (last axis
+    /// fastest). `order` must be a permutation of the table scope; the
+    /// consumers use it to turn the canonical sorted layout into their
+    /// native one — `(parent config, child state)` for families,
+    /// `(z config, x, y)` for CI tests — with exact integer scatter.
+    pub fn permuted_counts(&self, order: &[VarId]) -> Vec<u64> {
+        debug_assert_eq!(order.len(), self.vars.len(), "order must be a permutation");
+        if order == self.vars {
+            // Identity order (ascending scopes — the common case for
+            // sorted conditioning sets and sorted parent lists): the
+            // canonical layout already is the requested one.
+            return self.counts.clone();
+        }
+        let mut out_strides = vec![0usize; self.vars.len()];
+        let mut stride = 1usize;
+        for &v in order.iter().rev() {
+            let pos = self
+                .vars
+                .binary_search(&v)
+                .expect("order must permute the table scope");
+            out_strides[pos] = stride;
+            stride *= self.cards[pos];
+        }
+        let mut out = vec![0u64; self.counts.len().max(1)];
+        self.scatter_into(&out_strides, &mut out);
+        out
+    }
+
+    /// Accumulate every cell into `out` at `Σ digit_i * out_strides[i]`
+    /// — the shared walk behind projection and permutation.
+    fn scatter_into(&self, out_strides: &[usize], out: &mut [u64]) {
+        if self.vars.is_empty() {
+            out[0] += self.counts[0];
+            return;
+        }
+        let mut digits = vec![0usize; self.vars.len()];
+        let mut idx = 0usize;
+        for &c in &self.counts {
+            if c > 0 {
+                out[idx] += c;
+            }
+            // Odometer advance with incremental output index.
+            let mut pos = digits.len();
+            loop {
+                if pos == 0 {
+                    break;
+                }
+                pos -= 1;
+                digits[pos] += 1;
+                if digits[pos] < self.cards[pos] {
+                    idx += out_strides[pos];
+                    break;
+                }
+                digits[pos] = 0;
+                idx -= out_strides[pos] * (self.cards[pos] - 1);
+            }
+        }
+    }
+}
+
+/// Is sorted `a` a subset of sorted `b`? (Linear merge.)
+fn is_sorted_subset(a: &[VarId], b: &[VarId]) -> bool {
+    let mut i = 0;
+    for &x in a {
+        while i < b.len() && b[i] < x {
+            i += 1;
+        }
+        if i == b.len() || b[i] != x {
+            return false;
+        }
+        i += 1;
+    }
+    true
+}
+
+/// Counter snapshot of a [`CountCache`]. Every [`CountCache::table`]
+/// call is counted exactly once: a `hit` (the exact table was cached), a
+/// `projection` (derived from a cached superset — no row scan), or a
+/// `scan` (cold streaming pass over the dataset).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CountCacheStats {
+    pub hits: u64,
+    pub projections: u64,
+    pub scans: u64,
+    /// Tables computed but not admitted (byte budget exhausted).
+    pub skipped_admission: u64,
+    /// Tables currently resident.
+    pub tables: usize,
+    /// Bytes of resident count arrays.
+    pub bytes: u64,
+}
+
+impl CountCacheStats {
+    /// Total lookups.
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.projections + self.scans
+    }
+
+    /// Fraction of lookups that skipped the row scan entirely (exact
+    /// hits only; projections are reported separately).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.lookups();
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of lookups answered without touching the dataset (hits
+    /// plus projections).
+    pub fn scan_free_rate(&self) -> f64 {
+        let total = self.lookups();
+        if total == 0 {
+            0.0
+        } else {
+            (self.hits + self.projections) as f64 / total as f64
+        }
+    }
+}
+
+/// Shard count — a read-mostly workload (PC levels re-probe the same
+/// pairs, hill climbing re-probes families) across at most
+/// `default_threads()` workers; 16 shards keep write collisions rare
+/// without bloating the struct.
+const SHARDS: usize = 16;
+
+/// Cap pooled per-table size indirectly via the byte budget; default 64
+/// MiB of resident counts (tables beyond it are computed but not
+/// cached). The PC reliability guard already bounds individual CI
+/// tables to `n_rows / min_rows_per_cell` cells, so the budget is about
+/// the *number* of resident tables, not runaway single allocations.
+const DEFAULT_BYTE_BUDGET: u64 = 64 << 20;
+
+/// One cache shard: sorted scope → shared table.
+type Shard = RwLock<HashMap<Vec<VarId>, Arc<ContingencyTable>>>;
+
+/// A thread-safe, sharded cache of [`ContingencyTable`]s keyed on
+/// sorted variable sets, bound to one dataset.
+///
+/// * **Hits** are shard-local read locks — the hot path of repeated CI
+///   tests and family re-scores never serializes across shards.
+/// * **Misses** consult an inverted `var → tables` index for the
+///   smallest affordable cached *superset* and project from it
+///   ([`ContingencyTable::project`]) before falling back to a row scan.
+/// * Admission is bounded by a byte budget; over budget the table is
+///   still returned, just not retained (no eviction machinery — see
+///   ROADMAP for the ADTree-style hierarchical follow-up).
+pub struct CountCache {
+    shards: Vec<Shard>,
+    /// `var → cached tables containing it`, consulted only on misses
+    /// (which are about to pay a table-sized or row-sized pass anyway).
+    superset_index: Mutex<HashMap<VarId, Vec<Arc<ContingencyTable>>>>,
+    /// Shape fingerprint `(n_rows, n_vars, cardinality hash)` of the
+    /// dataset this cache is bound to, set by the first lookup. A cache
+    /// serves exactly one dataset — mixing datasets would silently
+    /// return the first one's counts — so every lookup asserts the
+    /// fingerprint (cheap: `O(n_vars)` hashing next to an
+    /// `O(n_rows)`-or-table-sized count derivation).
+    bound: OnceLock<(usize, usize, u64)>,
+    byte_budget: u64,
+    bytes: AtomicU64,
+    tables: AtomicU64,
+    hits: AtomicU64,
+    projections: AtomicU64,
+    scans: AtomicU64,
+    skipped_admission: AtomicU64,
+}
+
+impl Default for CountCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CountCache {
+    /// Cache with the default 64 MiB admission budget.
+    pub fn new() -> Self {
+        Self::with_budget(DEFAULT_BYTE_BUDGET)
+    }
+
+    /// Cache with an explicit byte budget for resident count arrays.
+    pub fn with_budget(byte_budget: u64) -> Self {
+        CountCache {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            superset_index: Mutex::new(HashMap::new()),
+            bound: OnceLock::new(),
+            byte_budget,
+            bytes: AtomicU64::new(0),
+            tables: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            projections: AtomicU64::new(0),
+            scans: AtomicU64::new(0),
+            skipped_admission: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, vars: &[VarId]) -> usize {
+        let mut h = DefaultHasher::new();
+        vars.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Shape fingerprint of a dataset (rows, variable count, cardinality
+    /// hash) — the binding check of [`CountCache::table`].
+    fn fingerprint(data: &Dataset) -> (usize, usize, u64) {
+        let mut h = DefaultHasher::new();
+        for v in data.variables() {
+            v.cardinality.hash(&mut h);
+        }
+        (data.n_rows(), data.n_vars(), h.finish())
+    }
+
+    /// The joint count table over `vars` (sorted, duplicate-free) —
+    /// cached, projected from a cached superset, or counted by one
+    /// streaming pass. The returned table is shared; never mutate it.
+    ///
+    /// A cache is bound to the first dataset it sees: a lookup against a
+    /// shape-incompatible dataset panics rather than silently returning
+    /// the bound dataset's counts. (Same-shape distinct datasets — e.g.
+    /// two equally sized samples — are indistinguishable by this guard;
+    /// the contract stays one cache per dataset.)
+    pub fn table(&self, data: &Dataset, vars: &[VarId]) -> Arc<ContingencyTable> {
+        debug_assert!(vars.windows(2).all(|w| w[0] < w[1]), "cache key must be sorted");
+        let fp = Self::fingerprint(data);
+        let bound = self.bound.get_or_init(|| fp);
+        assert_eq!(
+            *bound, fp,
+            "CountCache serves exactly one dataset (bound shape {bound:?}, got {fp:?})"
+        );
+        let shard = &self.shards[self.shard_of(vars)];
+        if let Some(t) = shard.read().unwrap().get(vars) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(t);
+        }
+
+        // Miss: project from the smallest affordable cached superset, or
+        // scan. Projection costs O(superset cells); a row scan costs
+        // O(n_rows · |vars|). The 4× slack keeps borderline projections
+        // (dense superset, few rows) from losing to the scan they avoid.
+        let table = match self.projection_base(vars, data.n_rows().saturating_mul(4)) {
+            Some(base) => {
+                self.projections.fetch_add(1, Ordering::Relaxed);
+                Arc::new(base.project(vars))
+            }
+            None => {
+                self.scans.fetch_add(1, Ordering::Relaxed);
+                Arc::new(ContingencyTable::count(data, vars))
+            }
+        };
+        self.admit(vars, &table);
+        table
+    }
+
+    /// Smallest cached strict superset of `vars` with at most
+    /// `max_cells` cells, if any.
+    fn projection_base(
+        &self,
+        vars: &[VarId],
+        max_cells: usize,
+    ) -> Option<Arc<ContingencyTable>> {
+        if vars.is_empty() {
+            return None;
+        }
+        let index = self.superset_index.lock().unwrap();
+        let bucket = index.get(&vars[0])?;
+        let mut best: Option<&Arc<ContingencyTable>> = None;
+        for cand in bucket {
+            if cand.len() <= max_cells
+                && cand.vars().len() > vars.len()
+                && best.is_none_or(|b| cand.len() < b.len())
+                && is_sorted_subset(vars, cand.vars())
+            {
+                best = Some(cand);
+            }
+        }
+        best.cloned()
+    }
+
+    /// Store a freshly computed table unless the byte budget is spent.
+    /// A racing duplicate keeps the first insert (the tables are equal).
+    fn admit(&self, vars: &[VarId], table: &Arc<ContingencyTable>) {
+        let bytes = table.bytes();
+        // Reserve the bytes with a compare-and-swap before inserting, so
+        // concurrent admissions cannot collectively overshoot the budget
+        // (a plain check-then-add would admit up to one extra table per
+        // in-flight worker).
+        let reserved = self.bytes.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |cur| (cur + bytes <= self.byte_budget).then_some(cur + bytes),
+        );
+        if reserved.is_err() {
+            self.skipped_admission.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let shard = &self.shards[self.shard_of(vars)];
+        {
+            let mut map = shard.write().unwrap();
+            if map.contains_key(vars) {
+                // Lost the race to an equal table: release the
+                // reservation, keep the resident one. Saturating — a
+                // concurrent `clear` may already have zeroed the
+                // counter, and a wrapped u64 would poison admission
+                // forever.
+                let _ = self.bytes.fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |cur| Some(cur.saturating_sub(bytes)),
+                );
+                return;
+            }
+            map.insert(vars.to_vec(), Arc::clone(table));
+        }
+        self.tables.fetch_add(1, Ordering::Relaxed);
+        let mut index = self.superset_index.lock().unwrap();
+        for &v in table.vars() {
+            index.entry(v).or_default().push(Arc::clone(table));
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CountCacheStats {
+        CountCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            projections: self.projections.load(Ordering::Relaxed),
+            scans: self.scans.load(Ordering::Relaxed),
+            skipped_admission: self.skipped_admission.load(Ordering::Relaxed),
+            tables: self.tables.load(Ordering::Relaxed) as usize,
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Resident table count.
+    pub fn len(&self) -> usize {
+        self.tables.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every resident table (counters are kept, and the cache
+    /// stays bound to its dataset). Concurrent lookups remain safe: an
+    /// in-flight admission racing the clear at worst re-admits its table
+    /// against the emptied maps, and byte accounting saturates rather
+    /// than wrapping.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
+        self.superset_index.lock().unwrap().clear();
+        self.bytes.store(0, Ordering::Relaxed);
+        self.tables.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Variable;
+    use crate::rng::Pcg;
+
+    fn toy(n: usize, seed: u64) -> Dataset {
+        let vars = vec![
+            Variable::new("a", 2),
+            Variable::new("b", 3),
+            Variable::new("c", 2),
+            Variable::new("d", 4),
+            Variable::new("e", 3),
+        ];
+        let mut rng = Pcg::seed_from(seed);
+        let mut ds = Dataset::new(vars);
+        for _ in 0..n {
+            ds.push_row(&[
+                rng.below(2) as u8,
+                rng.below(3) as u8,
+                rng.below(2) as u8,
+                rng.below(4) as u8,
+                rng.below(3) as u8,
+            ]);
+        }
+        ds
+    }
+
+    #[test]
+    fn counts_match_manual() {
+        let ds = toy(500, 1);
+        let t = ContingencyTable::count(&ds, &[0, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.counts().iter().sum::<u64>(), 500);
+        let mut manual = [0u64; 4];
+        for r in 0..ds.n_rows() {
+            manual[ds.value(r, 0) * 2 + ds.value(r, 2)] += 1;
+        }
+        assert_eq!(t.counts(), &manual);
+    }
+
+    #[test]
+    fn empty_scope_counts_rows() {
+        let ds = toy(77, 2);
+        let t = ContingencyTable::count(&ds, &[]);
+        assert_eq!(t.counts(), &[77]);
+    }
+
+    #[test]
+    fn arity_paths_agree() {
+        // The dedicated 1/2/3/4-var loops must equal the generic path;
+        // the generic path is exercised with 5 vars, all cross-checked
+        // against a row-wise manual count.
+        let ds = toy(400, 3);
+        for vars in [
+            vec![1],
+            vec![0, 3],
+            vec![0, 1, 2],
+            vec![0, 1, 2, 3],
+            vec![0, 1, 2, 3, 4],
+        ] {
+            let t = ContingencyTable::count(&ds, &vars);
+            let cards: Vec<usize> =
+                vars.iter().map(|&v| ds.cardinality(v)).collect();
+            let mut manual = vec![0u64; t.len()];
+            for r in 0..ds.n_rows() {
+                let mut idx = 0usize;
+                for (k, &v) in vars.iter().enumerate() {
+                    idx = idx * cards[k] + ds.value(r, v);
+                }
+                manual[idx] += 1;
+            }
+            assert_eq!(t.counts(), &manual[..], "vars {vars:?}");
+        }
+    }
+
+    #[test]
+    fn projection_equals_rescan() {
+        let ds = toy(600, 4);
+        let full = ContingencyTable::count(&ds, &[0, 1, 2, 3]);
+        for sub in [vec![0], vec![1, 3], vec![0, 2], vec![0, 1, 2], Vec::new()] {
+            let projected = full.project(&sub);
+            let direct = ContingencyTable::count(&ds, &sub);
+            assert_eq!(projected.counts(), direct.counts(), "subset {sub:?}");
+            assert_eq!(projected.vars(), direct.vars());
+            assert_eq!(projected.cards(), direct.cards());
+        }
+    }
+
+    #[test]
+    fn permuted_counts_relayouts_exactly() {
+        let ds = toy(300, 5);
+        let t = ContingencyTable::count(&ds, &[0, 1, 3]);
+        // Target layout (d, a, b): idx = (d * 2 + a) * 3 + b.
+        let p = t.permuted_counts(&[3, 0, 1]);
+        let mut manual = vec![0u64; p.len()];
+        for r in 0..ds.n_rows() {
+            manual[(ds.value(r, 3) * 2 + ds.value(r, 0)) * 3 + ds.value(r, 1)] += 1;
+        }
+        assert_eq!(p, manual);
+        // Identity order reproduces the raw counts.
+        assert_eq!(t.permuted_counts(&[0, 1, 3]), t.counts());
+    }
+
+    #[test]
+    fn cache_hits_and_projections_counted() {
+        let ds = toy(500, 6);
+        let cache = CountCache::new();
+        let a = cache.table(&ds, &[0, 1, 2]);
+        assert_eq!(cache.stats().scans, 1);
+        let b = cache.table(&ds, &[0, 1, 2]);
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the resident table");
+        assert_eq!(cache.stats().hits, 1);
+        // Subset of a cached table: projected, not rescanned.
+        let sub = cache.table(&ds, &[0, 2]);
+        let stats = cache.stats();
+        assert_eq!(stats.projections, 1, "{stats:?}");
+        assert_eq!(stats.scans, 1, "{stats:?}");
+        assert_eq!(sub.counts(), ContingencyTable::count(&ds, &[0, 2]).counts());
+        assert!(stats.hit_rate() > 0.0 && stats.scan_free_rate() > stats.hit_rate());
+    }
+
+    #[test]
+    fn cache_prefers_smallest_superset() {
+        let ds = toy(500, 7);
+        let cache = CountCache::new();
+        cache.table(&ds, &[0, 1, 2, 3]); // 48 cells
+        cache.table(&ds, &[0, 1, 2]); // 12 cells (projected from above)
+        let before = cache.stats().projections;
+        let t = cache.table(&ds, &[0, 1]);
+        assert_eq!(cache.stats().projections, before + 1);
+        assert_eq!(t.counts(), ContingencyTable::count(&ds, &[0, 1]).counts());
+    }
+
+    #[test]
+    fn admission_budget_skips_but_still_answers() {
+        let ds = toy(200, 8);
+        let cache = CountCache::with_budget(0);
+        let t = cache.table(&ds, &[0, 1]);
+        assert_eq!(t.counts().iter().sum::<u64>(), 200);
+        let stats = cache.stats();
+        assert_eq!(stats.tables, 0);
+        assert_eq!(stats.skipped_admission, 1);
+        // Nothing cached: the repeat is another scan, never a panic.
+        cache.table(&ds, &[0, 1]);
+        assert_eq!(cache.stats().scans, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly one dataset")]
+    fn cache_rejects_shape_incompatible_dataset() {
+        let a = toy(100, 10);
+        let cache = CountCache::new();
+        cache.table(&a, &[0]);
+        // Different row count: the binding guard must fire instead of
+        // silently serving dataset `a`'s counts.
+        let b = toy(150, 11);
+        cache.table(&b, &[0]);
+    }
+
+    #[test]
+    fn clear_drops_tables_keeps_counters() {
+        let ds = toy(100, 9);
+        let cache = CountCache::new();
+        cache.table(&ds, &[0, 1]);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().scans, 1);
+        // Post-clear lookups re-count (no stale superset index entries).
+        let t = cache.table(&ds, &[0]);
+        assert_eq!(t.counts(), ContingencyTable::count(&ds, &[0]).counts());
+        assert_eq!(cache.stats().scans, 2);
+    }
+
+    #[test]
+    fn sorted_subset_checks() {
+        assert!(is_sorted_subset(&[], &[1, 2]));
+        assert!(is_sorted_subset(&[1, 3], &[0, 1, 3, 5]));
+        assert!(!is_sorted_subset(&[1, 4], &[0, 1, 3, 5]));
+        assert!(!is_sorted_subset(&[1], &[]));
+    }
+}

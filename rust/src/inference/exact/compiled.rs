@@ -20,7 +20,7 @@
 //!   a warm-start base for superset evidence via
 //!   [`CompiledTree::recalibrate_from`].
 
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, Posterior};
@@ -28,8 +28,20 @@ use crate::network::BayesianNetwork;
 use crate::potential::kernel::KernelMode;
 use crate::potential::ops::IndexMode;
 use crate::potential::PotentialTable;
-use super::junction_tree::{CalibrationMode, JtEngine, JunctionTree};
+use super::junction_tree::{CalibrationMode, EngineScratch, JtEngine, JunctionTree};
 use super::triangulation::EliminationHeuristic;
+
+/// Recycled engine-scratch entries retained per compiled tree — matches
+/// the realistic number of concurrent calibrations against one artifact
+/// (the coordinator's pool workers); beyond it, excess scratch is
+/// dropped rather than hoarded.
+const MAX_POOLED_SCRATCH: usize = 8;
+
+/// Shared pool of recyclable engine kernel state (arena + layout +
+/// odometer scratch). Calibrations pop an entry, run, and return it, so
+/// the serving cold path reuses a built arena instead of reallocating
+/// one per snapshot.
+type ScratchPool = Arc<Mutex<Vec<EngineScratch>>>;
 
 /// A junction tree compiled once per network, shareable across threads and
 /// across the per-evidence [`CalibratedTree`] snapshots it produces.
@@ -45,6 +57,9 @@ pub struct CompiledTree {
     /// configurations that never warm-start (`--no-warm-start`) skip the
     /// cost entirely.
     prior: OnceLock<Arc<CalibratedTree>>,
+    /// Recyclable engine kernel state shared by every calibration of
+    /// this tree (and its clones — the pool travels with the `Arc`s).
+    scratch: ScratchPool,
 }
 
 impl CompiledTree {
@@ -74,6 +89,7 @@ impl CompiledTree {
             kernel: KernelMode::default(),
             threads: threads.max(1),
             prior: OnceLock::new(),
+            scratch: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
@@ -110,16 +126,27 @@ impl CompiledTree {
                 self.kernel,
                 self.threads,
                 &Evidence::new(),
+                &self.scratch,
             ))
         })
     }
 
     /// Run message passing for one evidence set, producing an immutable
     /// query snapshot. This is the *only* per-query cost of the serving
-    /// path; the tree structure, the initial potentials and the compiled
-    /// message plans are reused.
+    /// path; the tree structure, the initial potentials, the compiled
+    /// message plans *and the pooled engine scratch* (arena, layout,
+    /// odometer buffers) are reused — repeated cold calibrations hit the
+    /// same zero-allocation arena steady state as a long-lived engine
+    /// (counter-asserted by `calibrate_pools_engine_scratch`).
     pub fn calibrate(&self, evidence: &Evidence) -> CalibratedTree {
-        calibrate_tree(&self.tree, self.mode, self.kernel, self.threads, evidence)
+        calibrate_tree(
+            &self.tree,
+            self.mode,
+            self.kernel,
+            self.threads,
+            evidence,
+            &self.scratch,
+        )
     }
 
     /// Warm-start calibration: extend `base` (a snapshot for a *subset* of
@@ -145,6 +172,9 @@ impl CompiledTree {
         }
         let mut engine = self.tree.parallel_engine(self.mode, self.threads);
         engine.kernel = self.kernel;
+        if let Some(s) = self.scratch.lock().unwrap().pop() {
+            engine.install_scratch(s);
+        }
         engine.load_state(
             &base.potentials,
             &base.sep_potentials,
@@ -152,28 +182,66 @@ impl CompiledTree {
             base.evidence_prob,
         );
         engine.recalibrate(evidence);
-        snapshot(&self.tree, engine)
+        snapshot(&self.tree, engine, &self.scratch)
+    }
+
+    /// Recycled scratch entries currently parked in the pool
+    /// (diagnostics).
+    pub fn pooled_scratch(&self) -> usize {
+        self.scratch.lock().unwrap().len()
+    }
+
+    /// Total arena backing allocations across the pooled scratch entries
+    /// — the serving-cold-path analogue of
+    /// [`JtEngine::arena_allocations`]: after the first calibration has
+    /// built an arena, repeated `calibrate`/`recalibrate_from` calls
+    /// must not move this counter (asserted by tests and
+    /// `bench_kernels`-style steady-state checks).
+    pub fn pooled_arena_allocations(&self) -> u64 {
+        self.scratch
+            .lock()
+            .unwrap()
+            .iter()
+            .map(EngineScratch::arena_allocations)
+            .sum()
     }
 }
 
 /// One cold calibration against a shared tree (the common constructor of
-/// [`CompiledTree::calibrate`] and the lazily built prior).
+/// [`CompiledTree::calibrate`] and the lazily built prior), drawing
+/// recycled engine scratch from the pool.
 fn calibrate_tree(
     tree: &Arc<JunctionTree>,
     mode: CalibrationMode,
     kernel: KernelMode,
     threads: usize,
     evidence: &Evidence,
+    pool: &ScratchPool,
 ) -> CalibratedTree {
     let mut engine = tree.parallel_engine(mode, threads);
     engine.kernel = kernel;
+    if let Some(s) = pool.lock().unwrap().pop() {
+        engine.install_scratch(s);
+    }
     engine.calibrate(evidence);
-    snapshot(tree, engine)
+    snapshot(tree, engine, pool)
 }
 
 /// Freeze a calibrated engine into an immutable snapshot — the single
-/// assembly site shared by the cold and warm calibration paths.
-fn snapshot(tree: &Arc<JunctionTree>, engine: JtEngine<'_>) -> CalibratedTree {
+/// assembly site shared by the cold and warm calibration paths — and
+/// park its recyclable kernel state back in the pool.
+fn snapshot(
+    tree: &Arc<JunctionTree>,
+    mut engine: JtEngine<'_>,
+    pool: &ScratchPool,
+) -> CalibratedTree {
+    let scratch = engine.take_scratch();
+    {
+        let mut pooled = pool.lock().unwrap();
+        if pooled.len() < MAX_POOLED_SCRATCH {
+            pooled.push(scratch);
+        }
+    }
     let evidence = engine
         .calibrated_evidence()
         .expect("snapshot requires a calibrated engine")
@@ -383,6 +451,57 @@ mod tests {
         for (g, e) in got.posterior_all().iter().zip(&expect.posterior_all()) {
             assert_eq!(g, e);
         }
+    }
+
+    #[test]
+    fn calibrate_pools_engine_scratch() {
+        // The serving cold path must hit the arena steady state: after
+        // the first calibration builds an arena, repeated calibrations
+        // (cold and warm, distinct evidence) recycle it through the
+        // scratch pool without touching the allocator again.
+        let net = repository::asia();
+        let compiled = CompiledTree::compile(&net);
+        assert_eq!(compiled.pooled_scratch(), 0, "pool starts empty");
+        let e1 = Evidence::new().with(0, 1);
+        let e2 = Evidence::new().with(2, 1).with(6, 0);
+        let base = compiled.calibrate(&e1);
+        assert_eq!(compiled.pooled_scratch(), 1, "scratch returns to the pool");
+        let after_first = compiled.pooled_arena_allocations();
+        assert!(after_first >= 1, "fused calibration must build its arena");
+        for _ in 0..3 {
+            let _ = compiled.calibrate(&e2);
+            let _ = compiled.calibrate(&e1);
+            let _ = compiled.recalibrate_from(&base, &e1.clone().with(4, 1));
+        }
+        assert_eq!(
+            compiled.pooled_arena_allocations(),
+            after_first,
+            "steady-state serving calibrations must not grow any arena"
+        );
+        // Sequential callers always reuse the single parked entry.
+        assert_eq!(compiled.pooled_scratch(), 1);
+        // And the recycled-scratch snapshots stay exact.
+        let fresh = CompiledTree::compile(&net).calibrate(&e2);
+        for (a, b) in
+            compiled.calibrate(&e2).posterior_all().iter().zip(&fresh.posterior_all())
+        {
+            for (p, q) in a.iter().zip(b) {
+                assert!((p - q).abs() <= 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_scratch_classic_kernel_unaffected() {
+        // Classic-kernel trees never build arenas; pooling must not
+        // change that (counter stays zero) nor the answers.
+        let net = repository::cancer();
+        let compiled = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        let ev = Evidence::new().with(3, 1);
+        let a = compiled.calibrate(&ev);
+        let b = compiled.calibrate(&ev);
+        assert_eq!(compiled.pooled_arena_allocations(), 0);
+        assert_eq!(a.posterior_all(), b.posterior_all());
     }
 
     #[test]

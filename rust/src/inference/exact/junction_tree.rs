@@ -867,6 +867,59 @@ impl JtEngine<'_> {
     }
 }
 
+/// Recyclable kernel state of one engine: the arena (and its layout),
+/// the per-edge odometer scratch and the dirty flags — everything a
+/// calibration allocates that does *not* end up inside the
+/// [`super::CalibratedTree`] snapshot. [`super::CompiledTree`] pools
+/// these across calibrations so the serving cold path reuses a built
+/// arena instead of reallocating one per snapshot (the PR 4 follow-up:
+/// only long-lived engines used to hit the zero-allocation steady
+/// state).
+#[derive(Default)]
+pub(crate) struct EngineScratch {
+    arena: TableArena,
+    layout: ArenaLayout,
+    edge_digits: Vec<Vec<usize>>,
+    intra_spans: usize,
+    changed: Vec<bool>,
+}
+
+impl EngineScratch {
+    /// Backing allocations of the pooled arena (test/bench hook: the
+    /// counter must stop moving once the scratch is warm).
+    pub(crate) fn arena_allocations(&self) -> u64 {
+        self.arena.allocations()
+    }
+}
+
+impl JtEngine<'_> {
+    /// Adopt recycled kernel state. Must come from an engine over the
+    /// *same* tree with the same mode/thread configuration (the scratch
+    /// pool of one [`super::CompiledTree`] guarantees both);
+    /// `ensure_kernel_state` still verifies the layout shape and
+    /// rebuilds on any mismatch, so a stale scratch degrades to a fresh
+    /// build, never to corruption.
+    pub(crate) fn install_scratch(&mut self, scratch: EngineScratch) {
+        self.arena = scratch.arena;
+        self.kernel_layout = scratch.layout;
+        self.edge_digits = scratch.edge_digits;
+        self.intra_spans = scratch.intra_spans;
+        self.changed = scratch.changed;
+    }
+
+    /// Extract the recyclable kernel state (the engine keeps the
+    /// calibrated potentials, which belong to the snapshot).
+    pub(crate) fn take_scratch(&mut self) -> EngineScratch {
+        EngineScratch {
+            arena: std::mem::take(&mut self.arena),
+            layout: std::mem::take(&mut self.kernel_layout),
+            edge_digits: std::mem::take(&mut self.edge_digits),
+            intra_spans: std::mem::take(&mut self.intra_spans),
+            changed: std::mem::take(&mut self.changed),
+        }
+    }
+}
+
 /// Disjoint (read, write) borrows of two cliques' potentials — the split
 /// borrow behind the fused message kernels.
 fn clique_pair_mut(

@@ -424,9 +424,23 @@ impl QueryEngine {
         let compiled =
             CompiledTree::compile_with(net, config.heuristic, config.mode, config.threads)
                 .with_kernel(config.kernel);
+        Self::from_compiled(net, compiled, config)
+    }
+
+    /// Serve an already-compiled tree — e.g. the artifact a
+    /// [`crate::learn::Pipeline`] run produced — without re-triangulating.
+    /// The serving knobs of `config` apply (`cache_capacity`,
+    /// `warm_start`, and `kernel`, which is a per-calibration knob the
+    /// compiled artifact carries); the structural compile-time knobs
+    /// (heuristic, calibration mode, threads) remain the artifact's.
+    pub fn from_compiled(
+        net: &BayesianNetwork,
+        compiled: CompiledTree,
+        config: QueryEngineConfig,
+    ) -> Self {
         QueryEngine {
             net: net.clone(),
-            compiled,
+            compiled: compiled.with_kernel(config.kernel),
             cache: Mutex::new(CacheState::new(config.cache_capacity)),
             inflight: Mutex::new(HashMap::new()),
             warm_start: config.warm_start,

@@ -1,0 +1,254 @@
+//! The end-to-end learning pipeline: data → structure (PC-stable or
+//! hill climbing) → parameters (MLE) → compiled serving artifact.
+//!
+//! Every phase draws its sufficient statistics from **one shared
+//! [`CountCache`]**: the contingency tables counted for CI tests stay
+//! resident, so the MLE pass hits or subset-projects instead of
+//! rescanning rows, and the hill climber's family tables are shared with
+//! everything downstream. The output bundles the learned
+//! [`BayesianNetwork`] with a [`CompiledTree`] so a freshly learned
+//! model drops straight into the serving stack
+//! ([`crate::coordinator::QueryRouter::register_learned`],
+//! `serve-query --learn-from`) without an `.fpgm` round-trip.
+
+use crate::core::Dataset;
+use crate::counts::{CountCache, CountCacheStats};
+use crate::graph::Dag;
+use crate::inference::exact::CompiledTree;
+use crate::network::BayesianNetwork;
+use crate::parameter::{mle_with_cache, MleOptions};
+use crate::structure::{
+    hill_climb_with_cache, pc_stable_with_cache, HcOptions, PcOptions,
+};
+use std::time::{Duration, Instant};
+
+/// Which structure learner the pipeline runs.
+#[derive(Clone, Debug)]
+pub enum StructureAlgo {
+    /// Constraint-based PC-stable (parallel when `threads > 1`).
+    Pc(PcOptions),
+    /// Score-based greedy hill climbing (parallel candidate scan when
+    /// `threads > 1`).
+    Hc(HcOptions),
+}
+
+impl Default for StructureAlgo {
+    fn default() -> Self {
+        StructureAlgo::Pc(PcOptions::default())
+    }
+}
+
+impl StructureAlgo {
+    /// Short label for reports and bench output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StructureAlgo::Pc(_) => "pc",
+            StructureAlgo::Hc(_) => "hc",
+        }
+    }
+}
+
+/// The full learning pipeline configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Pipeline {
+    pub structure: StructureAlgo,
+    pub mle: MleOptions,
+}
+
+impl Pipeline {
+    /// PC-based pipeline with the given options.
+    pub fn pc(opts: PcOptions) -> Self {
+        Pipeline { structure: StructureAlgo::Pc(opts), ..Default::default() }
+    }
+
+    /// Hill-climbing pipeline with the given options.
+    pub fn hc(opts: HcOptions) -> Self {
+        Pipeline { structure: StructureAlgo::Hc(opts), ..Default::default() }
+    }
+
+    /// Replace the MLE options.
+    pub fn with_mle(mut self, opts: MleOptions) -> Self {
+        self.mle = opts;
+        self
+    }
+
+    /// Run the pipeline: learn a structure, fit parameters over the same
+    /// count cache, and compile the junction tree for serving. Fails
+    /// when PC's CPDAG cannot be extended to a DAG (possible on small
+    /// samples with conflicting colliders — callers wanting a fallback
+    /// structure handle it themselves, see [`crate::classify`]).
+    pub fn run(&self, data: &Dataset) -> anyhow::Result<LearnedModel> {
+        let cache = CountCache::new();
+        let t0 = Instant::now();
+        let (dag, detail) = match &self.structure {
+            StructureAlgo::Pc(opts) => {
+                let result = pc_stable_with_cache(data, opts, &cache);
+                let dag = result.graph.to_dag().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "learned CPDAG could not be extended to a DAG \
+                         ({} edges, {} CI tests)",
+                        result.n_edges(),
+                        result.n_tests
+                    )
+                })?;
+                (dag, StructureDetail { n_ci_tests: result.n_tests, ..Default::default() })
+            }
+            StructureAlgo::Hc(opts) => {
+                let result = hill_climb_with_cache(data, opts, &cache);
+                let detail = StructureDetail {
+                    moves: result.moves,
+                    score: Some(result.score),
+                    ..Default::default()
+                };
+                (result.dag, detail)
+            }
+        };
+        let structure_elapsed = t0.elapsed();
+
+        let t1 = Instant::now();
+        let net = mle_with_cache(data, &dag, &self.mle, &cache);
+        let mle_elapsed = t1.elapsed();
+
+        let t2 = Instant::now();
+        let compiled = CompiledTree::compile(&net);
+        let compile_elapsed = t2.elapsed();
+
+        let report = LearnReport {
+            algo: self.structure.label(),
+            n_edges: dag.n_edges(),
+            n_ci_tests: detail.n_ci_tests,
+            moves: detail.moves,
+            score: detail.score,
+            structure_elapsed,
+            mle_elapsed,
+            compile_elapsed,
+            counts: cache.stats(),
+        };
+        Ok(LearnedModel { net, dag, compiled, report })
+    }
+}
+
+#[derive(Default)]
+struct StructureDetail {
+    n_ci_tests: usize,
+    moves: usize,
+    score: Option<f64>,
+}
+
+/// What one [`Pipeline::run`] produced: the parameterized network, its
+/// DAG, a serving-ready compiled junction tree, and the run report.
+pub struct LearnedModel {
+    pub net: BayesianNetwork,
+    pub dag: Dag,
+    pub compiled: CompiledTree,
+    pub report: LearnReport,
+}
+
+/// Timings and substrate counters of one pipeline run.
+#[derive(Clone, Debug)]
+pub struct LearnReport {
+    /// `"pc"` or `"hc"`.
+    pub algo: &'static str,
+    pub n_edges: usize,
+    /// CI tests executed (PC only; 0 for hill climbing).
+    pub n_ci_tests: usize,
+    /// Greedy moves taken (hill climbing only; 0 for PC).
+    pub moves: usize,
+    /// Final structure score (hill climbing only).
+    pub score: Option<f64>,
+    pub structure_elapsed: Duration,
+    pub mle_elapsed: Duration,
+    pub compile_elapsed: Duration,
+    /// Shared count-cache counters across both learning phases — the
+    /// hit-rate observability the substrate exists for.
+    pub counts: CountCacheStats,
+}
+
+impl LearnReport {
+    /// One-line human summary (CLI + bench output).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "algo={} edges={} structure={:.1?} mle={:.1?} compile={:.1?}",
+            self.algo,
+            self.n_edges,
+            self.structure_elapsed,
+            self.mle_elapsed,
+            self.compile_elapsed,
+        );
+        if self.n_ci_tests > 0 {
+            s.push_str(&format!(" ci_tests={}", self.n_ci_tests));
+        }
+        if let Some(score) = self.score {
+            s.push_str(&format!(" moves={} score={score:.1}", self.moves));
+        }
+        s.push_str(&format!(
+            " counts[hits={} proj={} scans={} hit_rate={:.3} bytes={}]",
+            self.counts.hits,
+            self.counts.projections,
+            self.counts.scans,
+            self.counts.hit_rate(),
+            self.counts.bytes,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+    use crate::network::repository;
+    use crate::rng::Pcg;
+    use crate::sampling::forward_sample_dataset;
+
+    #[test]
+    fn pc_pipeline_learns_and_compiles() {
+        let truth = repository::survey();
+        let mut rng = Pcg::seed_from(41);
+        let data = forward_sample_dataset(&truth, 40_000, &mut rng);
+        let model = Pipeline::pc(PcOptions { alpha: 0.05, ..Default::default() })
+            .run(&data)
+            .expect("survey CPDAG extends");
+        assert_eq!(model.report.algo, "pc");
+        assert!(model.report.n_ci_tests > 0);
+        assert!(model.report.counts.hits > 0, "{:?}", model.report.counts);
+        // The compiled artifact answers queries for the learned net.
+        let cal = model.compiled.calibrate(&Evidence::new().with(0, 2));
+        for v in 0..truth.n_vars() {
+            let p = cal.posterior(v);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9, "var {v}");
+        }
+        assert!(model.report.summary().contains("algo=pc"));
+    }
+
+    #[test]
+    fn hc_pipeline_learns_and_compiles() {
+        let truth = repository::sprinkler();
+        let mut rng = Pcg::seed_from(43);
+        let data = forward_sample_dataset(&truth, 6_000, &mut rng);
+        let model = Pipeline::hc(HcOptions::default()).run(&data).unwrap();
+        assert_eq!(model.report.algo, "hc");
+        assert!(model.report.score.is_some());
+        assert!(model.report.moves > 0);
+        let cal = model.compiled.calibrate(&Evidence::new());
+        assert!((cal.posterior(0).iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_cache_spans_phases() {
+        // The MLE phase must reuse tables counted during structure
+        // learning: with PC first, family lookups hit or project — the
+        // scan count stays below what two independent phases would pay.
+        let truth = repository::survey();
+        let mut rng = Pcg::seed_from(47);
+        let data = forward_sample_dataset(&truth, 40_000, &mut rng);
+        let model = Pipeline::pc(PcOptions { alpha: 0.05, ..Default::default() })
+            .run(&data)
+            .unwrap();
+        let c = &model.report.counts;
+        assert!(
+            c.hits + c.projections > 0,
+            "MLE after PC must reuse the substrate: {c:?}"
+        );
+    }
+}

@@ -7,11 +7,18 @@
 //! The library covers every task the paper claims:
 //!
 //! * **Structure learning** — the PC-stable algorithm with conditional-
-//!   independence-level parallelism driven by a dynamic work pool
+//!   independence-level parallelism driven by a dynamic work pool, plus
+//!   score-based greedy hill climbing with a parallel candidate scan
 //!   ([`structure`]).
 //! * **Parameter learning** — maximum-likelihood estimation with Laplace
 //!   smoothing and cache-friendly sufficient-statistics counting
 //!   ([`parameter`]).
+//! * **Shared counting substrate** — every learning-side consumer (CI
+//!   tests, structure scores, MLE, the classifier) draws its integer
+//!   count tables from one grouped-counting engine with a sharded,
+//!   subset-projecting cache ([`counts`]); the end-to-end
+//!   data → structure → parameters → compiled-serving flow is packaged
+//!   as [`learn::Pipeline`].
 //! * **Exact inference** — junction tree (Lauritzen–Spiegelhalter) with
 //!   hybrid inter-/intra-clique parallelism and variable elimination
 //!   ([`inference::exact`]).
@@ -47,9 +54,11 @@ pub mod classify;
 pub mod cli;
 pub mod coordinator;
 pub mod core;
+pub mod counts;
 pub mod graph;
 pub mod inference;
 pub mod io;
+pub mod learn;
 pub mod metrics;
 pub mod mrf;
 pub mod network;

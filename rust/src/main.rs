@@ -26,11 +26,12 @@ use fastpgm::inference::exact::{
 };
 use fastpgm::inference::InferenceEngine;
 use fastpgm::io::{bif, csv, fpgm};
+use fastpgm::learn::Pipeline;
 use fastpgm::network::{repository, BayesianNetwork};
 use fastpgm::parameter::MleOptions;
 use fastpgm::rng::Pcg;
 use fastpgm::sampling::forward_sample_dataset;
-use fastpgm::structure::{pc_stable_parallel, PcOptions};
+use fastpgm::structure::PcOptions;
 use std::path::{Path, PathBuf};
 
 fn main() {
@@ -65,7 +66,10 @@ USAGE: fastpgm <subcommand> [flags]
 
   list                                 list available networks/artifacts
   sample   --net <name> --n <rows> --out data.csv [--seed S]
-  learn    --data data.csv [--alpha A] [--threads T] [--out net.fpgm]
+  learn    --data data.csv [--algo pc|hc] [--alpha A] [--threads T]
+           [--out net.fpgm]   structure (PC-stable prints the CPDAG;
+           hc runs the parallel hill climber) + MLE over one shared
+           count cache (reports the cache hit/projection counters)
   infer    --net <name|file.fpgm> --engine <jt|ve|lbp|pls|lw|sis|ais|epis|gibbs>
            [--evidence var=state,var=state] [--query var] [--samples N]
   map      --net <name|file.fpgm> [--evidence var=state,...]   MPE query
@@ -87,7 +91,11 @@ USAGE: fastpgm <subcommand> [flags]
            [--no-warm-start] force fully cold calibrations on every miss
            [--kernel fused|classic] message-kernel implementation: fused
            precompiled arena-backed plans (default) or the classic
-           three-op oracle path (ablation baseline)"
+           three-op oracle path (ablation baseline)
+           [--learn-from data.csv] learn a model from a CSV (structure +
+           MLE + compile) and register it for serving directly — no
+           .fpgm round-trip; [--learn-algo pc|hc] [--learn-alpha A]
+           [--learn-name NAME (default: learned)]"
     );
 }
 
@@ -143,17 +151,56 @@ fn cmd_sample(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Learner-thread flag shared by every learning entry point.
+fn learn_threads(args: &Args) -> usize {
+    args.parse_flag("threads", fastpgm::parallel::default_threads())
+}
+
+/// Hill-climbing options from the flag set (single source of the
+/// defaults for `learn --algo hc` and `serve-query --learn-algo hc`).
+fn hc_opts_from_flags(args: &Args) -> fastpgm::structure::HcOptions {
+    fastpgm::structure::HcOptions { threads: learn_threads(args), ..Default::default() }
+}
+
+/// PC-stable options from the flag set (`alpha_flag` differs between
+/// `learn --alpha` and `serve-query --learn-alpha`).
+fn pc_opts_from_flags(args: &Args, alpha_flag: &str) -> PcOptions {
+    PcOptions {
+        alpha: args.parse_flag(alpha_flag, 0.01f64),
+        threads: learn_threads(args),
+        ..Default::default()
+    }
+}
+
+/// Build the learning pipeline a `--algo`/`--alpha`/`--threads` flag set
+/// describes (the `serve-query --learn-from` path).
+fn pipeline_from_flags(args: &Args, algo_flag: &str, alpha_flag: &str) -> Pipeline {
+    match args.flag_or(algo_flag, "pc") {
+        "hc" => Pipeline::hc(hc_opts_from_flags(args)),
+        _ => Pipeline::pc(pc_opts_from_flags(args, alpha_flag)),
+    }
+}
+
 fn cmd_learn(args: &Args) -> anyhow::Result<()> {
     let data_path = PathBuf::from(
         args.flag("data").ok_or_else(|| anyhow::anyhow!("--data required"))?,
     );
     let data = csv::load(&data_path, None)?;
-    if args.flag_or("algo", "pc") == "hc" {
-        // Score-based baseline: greedy hill climbing over BIC.
-        let t0 = std::time::Instant::now();
-        let hc = fastpgm::structure::hill_climb(
+    // Structure first (both learners share one count cache with the MLE
+    // pass); parameterizing — and, for PC, DAG extension — happens only
+    // when the model is written out, so a structure-only inspection run
+    // pays for nothing it discards.
+    enum Learned {
+        Hc(fastpgm::graph::Dag),
+        Pc(fastpgm::graph::Pdag),
+    }
+    let cache = fastpgm::counts::CountCache::new();
+    let t0 = std::time::Instant::now();
+    let learned = if args.flag_or("algo", "pc") == "hc" {
+        let hc = fastpgm::structure::hill_climb_with_cache(
             &data,
-            &fastpgm::structure::HcOptions::default(),
+            &hc_opts_from_flags(args),
+            &cache,
         );
         println!(
             "hill-climbing (BIC): {} edges, score {:.1}, {} moves, {:.1?}",
@@ -165,41 +212,47 @@ fn cmd_learn(args: &Args) -> anyhow::Result<()> {
         for (f, t) in hc.dag.edges() {
             println!("  {} -> {}", data.variable(f).name, data.variable(t).name);
         }
-        if let Some(out) = args.flag("out") {
-            let net = fastpgm::parameter::mle(&data, &hc.dag, &MleOptions::default());
-            fpgm::save(&net, Path::new(out))?;
-            println!("wrote learned network to {out}");
+        Learned::Hc(hc.dag)
+    } else {
+        let opts = pc_opts_from_flags(args, "alpha");
+        let result = fastpgm::structure::pc_stable_with_cache(&data, &opts, &cache);
+        println!(
+            "PC-stable: {} edges, {} CI tests, {:.1?}",
+            result.n_edges(),
+            result.n_tests,
+            t0.elapsed()
+        );
+        for (a, b) in result.graph.directed_edges() {
+            println!("  {} -> {}", data.variable(a).name, data.variable(b).name);
         }
-        return Ok(());
-    }
-    let opts = PcOptions {
-        alpha: args.parse_flag("alpha", 0.01f64),
-        threads: args.parse_flag("threads", fastpgm::parallel::default_threads()),
-        ..Default::default()
+        for (a, b) in result.graph.undirected_edges() {
+            println!("  {} -- {}", data.variable(a).name, data.variable(b).name);
+        }
+        Learned::Pc(result.graph)
     };
-    let t0 = std::time::Instant::now();
-    let result = pc_stable_parallel(&data, &opts);
-    println!(
-        "PC-stable: {} edges, {} CI tests, {:.1?}",
-        result.n_edges(),
-        result.n_tests,
-        t0.elapsed()
-    );
-    for (a, b) in result.graph.directed_edges() {
-        println!("  {} -> {}", data.variable(a).name, data.variable(b).name);
-    }
-    for (a, b) in result.graph.undirected_edges() {
-        println!("  {} -- {}", data.variable(a).name, data.variable(b).name);
-    }
     if let Some(out) = args.flag("out") {
-        let dag = result
-            .graph
-            .to_dag()
-            .ok_or_else(|| anyhow::anyhow!("CPDAG could not be extended to a DAG"))?;
-        let net = fastpgm::parameter::mle(&data, &dag, &MleOptions::default());
+        // The CPDAG was printed faithfully above; extension to a DAG is
+        // attempted only here, where parameterization needs one.
+        let dag = match learned {
+            Learned::Hc(dag) => dag,
+            Learned::Pc(graph) => graph.to_dag().ok_or_else(|| {
+                anyhow::anyhow!("CPDAG could not be extended to a DAG")
+            })?,
+        };
+        let net =
+            fastpgm::parameter::mle_with_cache(&data, &dag, &MleOptions::default(), &cache);
         fpgm::save(&net, Path::new(out))?;
         println!("wrote learned network to {out}");
     }
+    let c = cache.stats();
+    println!(
+        "count cache: hits={} projections={} scans={} hit_rate={:.3} bytes={}",
+        c.hits,
+        c.projections,
+        c.scans,
+        c.hit_rate(),
+        c.bytes
+    );
     Ok(())
 }
 
@@ -501,6 +554,34 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             kernel.label()
         );
         models.push((name.to_string(), net));
+    }
+    // --learn-from: learn a model from a CSV (PC or HC + MLE over the
+    // shared count cache), compile it, and register it directly — no
+    // .fpgm round-trip between the learner and the serving stack.
+    if let Some(csv_path) = args.flag("learn-from") {
+        let name = args.flag_or("learn-name", "learned").to_string();
+        let learn_data = csv::load(Path::new(csv_path), None)?;
+        let pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha");
+        let model = pipeline.run(&learn_data)?;
+        // Same serving knobs as the --nets models: cache, warm starts,
+        // --kernel, and the --engine/--approx-* tier all apply.
+        router.register_learned(
+            name.clone(),
+            &model,
+            QueryEngineConfig {
+                cache_capacity: cache,
+                warm_start,
+                kernel,
+                ..Default::default()
+            },
+            BatcherConfig::default(),
+            approx.clone(),
+        );
+        println!(
+            "learned + registered {name} from {csv_path}: {}",
+            model.report.summary()
+        );
+        models.push((name, model.net));
     }
     anyhow::ensure!(!models.is_empty(), "--nets resolved to no networks");
 

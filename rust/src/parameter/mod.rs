@@ -1,8 +1,14 @@
 //! Parameter learning: maximum-likelihood estimation of CPTs given a
-//! structure, with Laplace smoothing and cache-friendly sufficient-
-//! statistics counting (paper §2 + optimization (ii)).
+//! structure, with Laplace smoothing and sufficient statistics drawn
+//! from the shared counting substrate (paper §2 + optimization (ii)):
+//! family tables come from [`crate::counts::CountCache`], so repeated
+//! families hit, subsets of already-counted tables (e.g. CI-test joints
+//! from a preceding PC run over the same cache) project instead of
+//! rescanning rows, and the derived counts are bit-identical to direct
+//! counting ([`count_family`] stays as the direct-path oracle).
 
 use crate::core::{Dataset, VarId};
+use crate::counts::CountCache;
 use crate::graph::Dag;
 use crate::network::{BayesianNetwork, Cpt};
 use crate::parallel::parallel_map;
@@ -34,7 +40,9 @@ pub struct FamilyCounts {
 
 /// Count one family's sufficient statistics in a single column-major pass:
 /// the child and parent columns are each contiguous, so the scan touches
-/// `(1 + #parents)` dense arrays sequentially (optimization ii).
+/// `(1 + #parents)` dense arrays sequentially (optimization ii). This is
+/// the direct-path oracle the substrate-backed
+/// [`family_counts_cached`] is equivalence-tested against.
 pub fn count_family(data: &Dataset, var: VarId, parents: &[VarId]) -> FamilyCounts {
     let card = data.cardinality(var);
     let parent_cards: Vec<usize> =
@@ -97,15 +105,51 @@ pub fn counts_to_cpt(
     Cpt::new(var, parents, parent_cards, card, table)
 }
 
-/// Learn all CPTs for a given structure by MLE.
+/// One family's sufficient statistics through the counting substrate —
+/// cache hit, exact superset projection, or one streaming pass; the
+/// scattered counts are bit-identical to [`count_family`].
+pub fn family_counts_cached(
+    data: &Dataset,
+    cache: &CountCache,
+    var: VarId,
+    parents: &[VarId],
+) -> FamilyCounts {
+    let mut key: Vec<VarId> = parents.to_vec();
+    key.push(var);
+    key.sort_unstable();
+    let table = cache.table(data, &key);
+    let mut order: Vec<VarId> = parents.to_vec();
+    order.push(var);
+    FamilyCounts {
+        var,
+        counts: table.permuted_counts(&order),
+        card: data.cardinality(var),
+    }
+}
+
+/// Learn all CPTs for a given structure by MLE (families counted through
+/// a fresh count cache; see [`mle_with_cache`] to share one across
+/// learning phases).
 pub fn mle(data: &Dataset, dag: &Dag, opts: &MleOptions) -> BayesianNetwork {
+    mle_with_cache(data, dag, opts, &CountCache::new())
+}
+
+/// MLE over a shared [`CountCache`]: a cache populated by a preceding
+/// structure-learning run over the same dataset lets family tables hit
+/// or project instead of rescanning rows.
+pub fn mle_with_cache(
+    data: &Dataset,
+    dag: &Dag,
+    opts: &MleOptions,
+    cache: &CountCache,
+) -> BayesianNetwork {
     assert_eq!(dag.n_nodes(), data.n_vars());
     let n = data.n_vars();
     let cpts: Vec<Cpt> = parallel_map(n, opts.threads, 1, |v| {
         let parents = dag.parents(v).to_vec();
         let parent_cards: Vec<usize> =
             parents.iter().map(|&p| data.cardinality(p)).collect();
-        let counts = count_family(data, v, &parents);
+        let counts = family_counts_cached(data, cache, v, &parents);
         counts_to_cpt(&counts, v, parents, parent_cards, opts.pseudo_count)
     });
     BayesianNetwork::new(
@@ -177,6 +221,44 @@ mod tests {
         for v in 0..learned.n_vars() {
             assert!(learned.cpt(v).table.iter().all(|&p| p > 0.0));
         }
+    }
+
+    #[test]
+    fn cached_family_counts_bit_identical() {
+        let net = repository::asia();
+        let mut rng = Pcg::seed_from(8);
+        let data = forward_sample_dataset(&net, 3_000, &mut rng);
+        let cache = CountCache::new();
+        for v in 0..net.n_vars() {
+            let parents = net.dag().parents(v).to_vec();
+            let direct = count_family(&data, v, &parents);
+            let cached = family_counts_cached(&data, &cache, v, &parents);
+            assert_eq!(direct.counts, cached.counts, "family of {v}");
+            assert_eq!(direct.card, cached.card);
+        }
+        // And through a *projection*: warm a superset table, then derive
+        // a smaller family from it instead of rescanning.
+        let warm = CountCache::new();
+        warm.table(&data, &[0, 1, 2]);
+        let sub = family_counts_cached(&data, &warm, 1, &[0]);
+        assert_eq!(sub.counts, count_family(&data, 1, &[0]).counts);
+        let stats = warm.stats();
+        assert_eq!(stats.projections, 1, "{stats:?}");
+        assert_eq!(stats.scans, 1, "{stats:?}");
+    }
+
+    #[test]
+    fn mle_with_shared_cache_identical() {
+        let net = repository::survey();
+        let mut rng = Pcg::seed_from(9);
+        let data = forward_sample_dataset(&net, 4_000, &mut rng);
+        let plain = mle(&data, net.dag(), &MleOptions::default());
+        let cache = CountCache::new();
+        let shared = mle_with_cache(&data, net.dag(), &MleOptions::default(), &cache);
+        for v in 0..net.n_vars() {
+            assert_eq!(plain.cpt(v).table, shared.cpt(v).table, "cpt of {v}");
+        }
+        assert!(cache.stats().lookups() >= net.n_vars() as u64);
     }
 
     #[test]

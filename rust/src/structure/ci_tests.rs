@@ -1,13 +1,21 @@
 //! Conditional-independence tests on discrete data.
 //!
 //! The hot core of constraint-based structure learning. A test of
-//! `X ⟂ Y | Z` builds the contingency table `n(x, y, z)` in one streaming
-//! pass over the dataset's columns (cache-friendly storage, paper opt ii),
-//! derives the marginals from the joint instead of recounting (computation
+//! `X ⟂ Y | Z` draws the contingency table `n(x, y, z)` from the shared
+//! counting substrate ([`crate::counts`]) — one streaming pass over the
+//! dataset's columns (cache-friendly storage, paper opt ii), or a cache
+//! hit / superset projection when a [`CountCache`] is attached — derives
+//! the marginals from the joint instead of recounting (computation
 //! grouping, paper opt iii), and evaluates either the G² likelihood-ratio
 //! statistic or Pearson's χ² against the chi-square distribution.
+//!
+//! All count derivations are exact integer arithmetic and the statistic
+//! loop is unchanged, so cache-backed and direct testers produce
+//! bit-identical outcomes (asserted by `cached_tester_bit_identical`).
 
 use crate::core::{Dataset, VarId};
+use crate::counts::{ContingencyTable, CountCache};
+use std::sync::Arc;
 
 /// Which independence statistic to compute.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -23,12 +31,15 @@ pub enum CiTest {
 /// Counting strategy — the ablation knob for bench E2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum CountStrategy {
-    /// One pass builds `n(x,y,z)`; marginals are summed out of the joint
+    /// One joint table `n(x,y,z)`; marginals are summed out of the joint
     /// (grouped computations, optimization iii).
     #[default]
     Grouped,
-    /// Four independent passes over the data re-count `n_xyz`, `n_xz`,
-    /// `n_yz` and `n_z` — what an implementation without grouping does.
+    /// Four independent row passes re-count `n_xyz`, `n_xz`, `n_yz` and
+    /// `n_z` — what an implementation without grouping does. This is
+    /// the opt-iii ablation baseline, so it deliberately bypasses the
+    /// count cache: a cached (or projected) marginal would be grouped
+    /// counting by another name and silently converge the E2 numbers.
     Naive,
 }
 
@@ -47,22 +58,40 @@ impl CiOutcome {
     }
 }
 
-/// A reusable tester bound to one dataset. Holds scratch buffers so
-/// repeated tests allocate nothing beyond the (query-sized) count tables.
+/// A reusable tester bound to one dataset, optionally backed by a shared
+/// [`CountCache`] so repeated and overlapping tests (both PC edge sides,
+/// cross-level repeats, a following MLE pass) skip the row scan.
 #[derive(Clone)]
 pub struct CiTester<'d> {
     data: &'d Dataset,
     pub test: CiTest,
     pub strategy: CountStrategy,
+    cache: Option<&'d CountCache>,
 }
 
 impl<'d> CiTester<'d> {
     pub fn new(data: &'d Dataset) -> Self {
-        CiTester { data, test: CiTest::default(), strategy: CountStrategy::default() }
+        CiTester {
+            data,
+            test: CiTest::default(),
+            strategy: CountStrategy::default(),
+            cache: None,
+        }
     }
 
     pub fn with(data: &'d Dataset, test: CiTest, strategy: CountStrategy) -> Self {
-        CiTester { data, test, strategy }
+        CiTester { data, test, strategy, cache: None }
+    }
+
+    /// Tester sharing a count cache (thread-safe; parallel PC workers
+    /// all feed one cache).
+    pub fn with_cache(
+        data: &'d Dataset,
+        test: CiTest,
+        strategy: CountStrategy,
+        cache: &'d CountCache,
+    ) -> Self {
+        CiTester { data, test, strategy, cache: Some(cache) }
     }
 
     /// Number of cells a test of `x ⟂ y | z` would need; PC skips tests
@@ -94,7 +123,43 @@ impl<'d> CiTester<'d> {
         }
     }
 
-    /// One pass: joint counts, marginals by summation.
+    /// The substrate table over a sorted scope — shared-cache lookup
+    /// (hit / projection / scan) when a cache is attached, one direct
+    /// streaming pass otherwise.
+    fn table(&self, key: &[VarId]) -> Arc<ContingencyTable> {
+        match self.cache {
+            Some(cache) => cache.table(self.data, key),
+            None => Arc::new(ContingencyTable::count(self.data, key)),
+        }
+    }
+
+    /// Counts laid out with the axes in `order` (last fastest): the
+    /// substrate counts the canonical sorted scope once, then scatters
+    /// into the requested layout by an exact table-sized pass.
+    fn counts_layout(&self, order: &[VarId]) -> Vec<u64> {
+        let mut key = order.to_vec();
+        key.sort_unstable();
+        self.table(&key).permuted_counts(order)
+    }
+
+    /// Like [`CiTester::counts_layout`] but always a fresh row pass —
+    /// never a cache hit or projection. The naive ablation's primitive;
+    /// the owned table is moved out, not cloned, when the requested
+    /// order already is the canonical sorted one.
+    fn counts_layout_uncached(&self, order: &[VarId]) -> Vec<u64> {
+        let mut key = order.to_vec();
+        key.sort_unstable();
+        let table = ContingencyTable::count(self.data, &key);
+        if order == table.vars() {
+            table.into_counts()
+        } else {
+            table.permuted_counts(order)
+        }
+    }
+
+    /// One joint table: marginals by summation (opt iii). `n_xyz` is
+    /// indexed as `(zcfg * cx + xs) * cy + ys` — y fastest so the inner
+    /// marginalization loops are contiguous.
     fn test_grouped(
         &self,
         x: VarId,
@@ -104,56 +169,10 @@ impl<'d> CiTester<'d> {
         cy: usize,
         cz: usize,
     ) -> CiOutcome {
-        // n_xyz indexed as (zcfg * cx + xs) * cy + ys: y fastest so the
-        // inner marginalization loops are contiguous.
-        let mut n_xyz = vec![0u32; cx * cy * cz];
-        let col_x = self.data.column(x);
-        let col_y = self.data.column(y);
-        match z.len() {
-            0 => {
-                for r in 0..self.data.n_rows() {
-                    let (xs, ys) = (col_x[r] as usize, col_y[r] as usize);
-                    n_xyz[xs * cy + ys] += 1;
-                }
-            }
-            1 => {
-                let col_z = self.data.column(z[0]);
-                for r in 0..self.data.n_rows() {
-                    let idx = ((col_z[r] as usize) * cx + col_x[r] as usize) * cy
-                        + col_y[r] as usize;
-                    n_xyz[idx] += 1;
-                }
-            }
-            2 => {
-                // Level-2 is the hottest deep level in PC runs — a
-                // dedicated two-column path avoids the per-row inner loop
-                // (§Perf P6).
-                let col_z0 = self.data.column(z[0]);
-                let col_z1 = self.data.column(z[1]);
-                let cz1 = self.data.cardinality(z[1]);
-                for r in 0..self.data.n_rows() {
-                    let zc = col_z0[r] as usize * cz1 + col_z1[r] as usize;
-                    let idx = (zc * cx + col_x[r] as usize) * cy + col_y[r] as usize;
-                    n_xyz[idx] += 1;
-                }
-            }
-            _ => {
-                // Mixed-radix z configuration built per row; columns are
-                // pre-fetched once to keep the loop branch-free.
-                let cols_z: Vec<&[u8]> =
-                    z.iter().map(|&v| self.data.column(v)).collect();
-                let cards_z: Vec<usize> =
-                    z.iter().map(|&v| self.data.cardinality(v)).collect();
-                for r in 0..self.data.n_rows() {
-                    let mut zc = 0usize;
-                    for (c, col) in cols_z.iter().enumerate() {
-                        zc = zc * cards_z[c] + col[r] as usize;
-                    }
-                    let idx = (zc * cx + col_x[r] as usize) * cy + col_y[r] as usize;
-                    n_xyz[idx] += 1;
-                }
-            }
-        }
+        let mut order: Vec<VarId> = z.to_vec();
+        order.push(x);
+        order.push(y);
+        let n_xyz = self.counts_layout(&order);
         // Marginals out of the joint — no second data pass (opt iii).
         let mut n_xz = vec![0u64; cx * cz];
         let mut n_yz = vec![0u64; cy * cz];
@@ -163,7 +182,7 @@ impl<'d> CiTester<'d> {
                 let base = (zc * cx + xs) * cy;
                 let mut row_total = 0u64;
                 for ys in 0..cy {
-                    let c = n_xyz[base + ys] as u64;
+                    let c = n_xyz[base + ys];
                     row_total += c;
                     n_yz[zc * cy + ys] += c;
                 }
@@ -174,8 +193,10 @@ impl<'d> CiTester<'d> {
         self.statistic(&n_xyz, &n_xz, &n_yz, &n_z, cx, cy, cz)
     }
 
-    /// Four passes: what a non-grouped implementation does. Identical
-    /// output, ~4x the memory traffic (ablation baseline, bench E2).
+    /// Four independent row passes: what a non-grouped implementation
+    /// does. Identical output, ~4x the memory traffic (ablation
+    /// baseline, bench E2). Bypasses the cache by design — see
+    /// [`CountStrategy::Naive`].
     fn test_naive(
         &self,
         x: VarId,
@@ -185,38 +206,23 @@ impl<'d> CiTester<'d> {
         cy: usize,
         cz: usize,
     ) -> CiOutcome {
-        let zcfg = |r: usize| {
-            let mut zc = 0usize;
-            for &v in z {
-                zc = zc * self.data.cardinality(v) + self.data.value(r, v);
-            }
-            zc
-        };
-        let n = self.data.n_rows();
-        let mut n_xyz = vec![0u32; cx * cy * cz];
-        for r in 0..n {
-            let idx =
-                (zcfg(r) * cx + self.data.value(r, x)) * cy + self.data.value(r, y);
-            n_xyz[idx] += 1;
-        }
-        let mut n_xz = vec![0u64; cx * cz];
-        for r in 0..n {
-            n_xz[zcfg(r) * cx + self.data.value(r, x)] += 1;
-        }
-        let mut n_yz = vec![0u64; cy * cz];
-        for r in 0..n {
-            n_yz[zcfg(r) * cy + self.data.value(r, y)] += 1;
-        }
-        let mut n_z = vec![0u64; cz];
-        for r in 0..n {
-            n_z[zcfg(r)] += 1;
-        }
+        let mut xyz: Vec<VarId> = z.to_vec();
+        xyz.push(x);
+        xyz.push(y);
+        let n_xyz = self.counts_layout_uncached(&xyz);
+        let mut xz: Vec<VarId> = z.to_vec();
+        xz.push(x);
+        let n_xz = self.counts_layout_uncached(&xz);
+        let mut yz: Vec<VarId> = z.to_vec();
+        yz.push(y);
+        let n_yz = self.counts_layout_uncached(&yz);
+        let n_z = self.counts_layout_uncached(z);
         self.statistic(&n_xyz, &n_xz, &n_yz, &n_z, cx, cy, cz)
     }
 
     fn statistic(
         &self,
-        n_xyz: &[u32],
+        n_xyz: &[u64],
         n_xz: &[u64],
         n_yz: &[u64],
         n_z: &[u64],
@@ -475,6 +481,40 @@ mod tests {
         let g = CiTester::with(&ds, CiTest::GSquare, CountStrategy::Grouped).test(0, 1, &[]);
         let c = CiTester::with(&ds, CiTest::ChiSquare, CountStrategy::Grouped).test(0, 1, &[]);
         assert!(!g.independent(0.05) && !c.independent(0.05));
+    }
+
+    #[test]
+    fn cached_tester_bit_identical() {
+        // A cache-backed tester must produce *bit-identical* outcomes to
+        // the direct one (integer tables are exact; the statistic loop is
+        // shared), and repeats/overlaps must hit or project.
+        let ds = dataset_dependent(4_000, 31);
+        let cache = crate::counts::CountCache::new();
+        for test in [CiTest::GSquare, CiTest::ChiSquare] {
+            for strategy in [CountStrategy::Grouped, CountStrategy::Naive] {
+                let plain = CiTester::with(&ds, test, strategy);
+                let cached = CiTester::with_cache(&ds, test, strategy, &cache);
+                for (x, y, z) in
+                    [(0, 1, vec![2]), (0, 1, vec![]), (0, 2, vec![1]), (1, 2, vec![0])]
+                {
+                    let a = plain.test(x, y, &z);
+                    let b = cached.test(x, y, &z);
+                    assert_eq!(a.statistic.to_bits(), b.statistic.to_bits());
+                    assert_eq!(a.dof, b.dof);
+                    assert_eq!(a.p_value.to_bits(), b.p_value.to_bits());
+                    // And again: the repeat must be served from cache.
+                    let c = cached.test(x, y, &z);
+                    assert_eq!(b.statistic.to_bits(), c.statistic.to_bits());
+                }
+            }
+        }
+        let stats = cache.stats();
+        assert!(stats.hits > 0, "{stats:?}");
+        // The grouped level-0 test over (0,1) runs after (0,1|2) cached
+        // the {0,1,2} joint: its pair table projects instead of
+        // rescanning. (The naive strategy bypasses the cache entirely —
+        // it is the ungrouped-counting ablation.)
+        assert!(stats.projections > 0, "{stats:?}");
     }
 
     #[test]

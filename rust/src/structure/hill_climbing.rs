@@ -2,10 +2,21 @@
 //! score-based learner (what bnlearn's `hc` does), implemented as the
 //! baseline comparator to PC-stable. Operators: add / delete / reverse a
 //! single edge; the decomposable score means each candidate costs at most
-//! two family re-scores (served by the [`super::score::Scorer`] cache).
+//! two family re-scores (served by the sharded [`super::score::Scorer`]
+//! cache over the shared counting substrate).
+//!
+//! The O(n²) candidate-delta scan of each greedy step fans out over the
+//! dynamic work pool ([`HcOptions::threads`]): every (from, to) pair's
+//! candidates are evaluated independently (the scorer is `Sync`), then
+//! reduced sequentially in pair order with strict-improvement
+//! tie-breaking — the exact comparison sequence of the sequential scan —
+//! so the chosen move, and therefore the learned graph, is invariant
+//! across thread counts (asserted by the integration suite).
 
 use crate::core::{Dataset, VarId};
+use crate::counts::CountCache;
 use crate::graph::Dag;
+use crate::parallel::parallel_map;
 use super::score::{ScoreKind, Scorer};
 
 /// Hill-climbing options.
@@ -20,6 +31,9 @@ pub struct HcOptions {
     pub restarts: usize,
     /// Seed for restart perturbations.
     pub seed: u64,
+    /// Worker threads for the candidate-delta scan (1 = sequential; any
+    /// count produces the identical graph).
+    pub threads: usize,
 }
 
 impl Default for HcOptions {
@@ -30,6 +44,7 @@ impl Default for HcOptions {
             max_iters: 1_000,
             restarts: 0,
             seed: 7,
+            threads: 1,
         }
     }
 }
@@ -43,6 +58,7 @@ pub struct HcResult {
     pub moves: usize,
 }
 
+#[derive(Clone, Copy)]
 enum Op {
     Add(VarId, VarId),
     Delete(VarId, VarId),
@@ -89,6 +105,53 @@ fn apply(dag: &mut Dag, op: &Op) {
     }
 }
 
+/// Scored candidate moves of one `(f, t)` pair, in the fixed evaluation
+/// order (delete before reverse) the deterministic reduce depends on.
+type PairCandidates = [Option<(f64, Op)>; 2];
+
+/// Evaluate the legal operators on the ordered pair `(f, t)` against the
+/// current DAG. Pure read of `dag`; family scores are served (and
+/// memoized) by the `Sync` scorer, so pairs evaluate concurrently.
+fn pair_candidates(
+    scorer: &Scorer,
+    dag: &Dag,
+    opts: &HcOptions,
+    f: VarId,
+    t: VarId,
+) -> PairCandidates {
+    if f == t {
+        return [None, None];
+    }
+    if dag.has_edge(f, t) {
+        // Try delete and reverse.
+        let del = Op::Delete(f, t);
+        let d_del = delta(scorer, dag, &del);
+        let rev = if dag.parents(f).len() < opts.max_parents {
+            // Reverse must not create a cycle: check path f→t excluding
+            // the direct edge by removing first.
+            let mut probe = dag.clone();
+            probe.remove_edge(f, t);
+            if !probe.has_path(f, t) {
+                let op = Op::Reverse(f, t);
+                Some((delta(scorer, dag, &op), op))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        [Some((d_del, del)), rev]
+    } else if !dag.has_edge(t, f)
+        && dag.parents(t).len() < opts.max_parents
+        && !dag.has_path(t, f)
+    {
+        let op = Op::Add(f, t);
+        [Some((delta(scorer, dag, &op), op)), None]
+    } else {
+        [None, None]
+    }
+}
+
 fn greedy(scorer: &Scorer, data: &Dataset, opts: &HcOptions, start: Dag) -> HcResult {
     let n = data.n_vars();
     let mut dag = start;
@@ -96,46 +159,33 @@ fn greedy(scorer: &Scorer, data: &Dataset, opts: &HcOptions, start: Dag) -> HcRe
     let mut moves = 0usize;
 
     for _ in 0..opts.max_iters {
+        // With workers, fan the O(n²) candidate scan over the pool (a
+        // row of `t`s per pull) and reduce in pair order with the strict
+        // `>` the sequential scan uses; single-threaded callers keep the
+        // streaming zero-allocation scan. Both fold the exact same
+        // candidate sequence, so the winner — and the learned graph —
+        // is identical for every thread count.
         let mut best: Option<(f64, Op)> = None;
-        for f in 0..n {
-            for t in 0..n {
-                if f == t {
-                    continue;
+        let consider = |cands: PairCandidates, best: &mut Option<(f64, Op)>| {
+            for (d, op) in cands.into_iter().flatten() {
+                if best.as_ref().is_none_or(|(b, _)| d > *b) {
+                    *best = Some((d, op));
                 }
-                let candidate = if dag.has_edge(f, t) {
-                    // Try delete and reverse.
-                    let del = Op::Delete(f, t);
-                    let d_del = delta(scorer, &dag, &del);
-                    if best.as_ref().is_none_or(|(b, _)| d_del > *b) {
-                        best = Some((d_del, del));
-                    }
-                    if dag.parents(f).len() < opts.max_parents {
-                        // Reverse must not create a cycle: check path
-                        // f→t excluding the direct edge by removing first.
-                        let mut probe = dag.clone();
-                        probe.remove_edge(f, t);
-                        if !probe.has_path(f, t) {
-                            Some(Op::Reverse(f, t))
-                        } else {
-                            None
-                        }
-                    } else {
-                        None
-                    }
-                } else if !dag.has_edge(t, f)
-                    && dag.parents(t).len() < opts.max_parents
-                    && !dag.has_path(t, f)
-                {
-                    Some(Op::Add(f, t))
-                } else {
-                    None
-                };
-                if let Some(op) = candidate {
-                    let d = delta(scorer, &dag, &op);
-                    if best.as_ref().is_none_or(|(b, _)| d > *b) {
-                        best = Some((d, op));
-                    }
+            }
+        };
+        if opts.threads <= 1 {
+            for f in 0..n {
+                for t in 0..n {
+                    consider(pair_candidates(scorer, &dag, opts, f, t), &mut best);
                 }
+            }
+        } else {
+            let candidates: Vec<PairCandidates> =
+                parallel_map(n * n, opts.threads, n.max(1), |i| {
+                    pair_candidates(scorer, &dag, opts, i / n, i % n)
+                });
+            for cands in candidates {
+                consider(cands, &mut best);
             }
         }
         match best {
@@ -153,7 +203,22 @@ fn greedy(scorer: &Scorer, data: &Dataset, opts: &HcOptions, start: Dag) -> HcRe
 /// Learn a DAG by greedy hill climbing (with optional random restarts).
 pub fn hill_climb(data: &Dataset, opts: &HcOptions) -> HcResult {
     let scorer = Scorer::new(data, opts.score);
-    let mut best = greedy(&scorer, data, opts, Dag::new(data.n_vars()));
+    hill_climb_with_scorer(data, opts, &scorer)
+}
+
+/// Hill climbing over a shared [`CountCache`] — family tables counted by
+/// a preceding run (PC, scoring, MLE) over the same cache are reused.
+pub fn hill_climb_with_cache(
+    data: &Dataset,
+    opts: &HcOptions,
+    cache: &CountCache,
+) -> HcResult {
+    let scorer = Scorer::with_cache(data, opts.score, cache);
+    hill_climb_with_scorer(data, opts, &scorer)
+}
+
+fn hill_climb_with_scorer(data: &Dataset, opts: &HcOptions, scorer: &Scorer) -> HcResult {
+    let mut best = greedy(scorer, data, opts, Dag::new(data.n_vars()));
     if opts.restarts > 0 {
         let mut rng = crate::rng::Pcg::seed_from(opts.seed);
         for _ in 0..opts.restarts {
@@ -172,7 +237,7 @@ pub fn hill_climb(data: &Dataset, opts: &HcOptions) -> HcResult {
                     }
                 }
             }
-            let run = greedy(&scorer, data, opts, start);
+            let run = greedy(scorer, data, opts, start);
             let total_moves = best.moves + run.moves;
             if run.score > best.score {
                 best = run;
@@ -265,6 +330,36 @@ mod tests {
         for v in 0..8 {
             assert!(result.dag.parents(v).len() <= 1);
         }
+    }
+
+    #[test]
+    fn parallel_scan_identical_across_thread_counts() {
+        // The parallel candidate scan must choose the exact same move
+        // sequence as the sequential one: identical edges, bit-identical
+        // score, same move count, for every thread count.
+        let net = repository::survey();
+        let mut rng = Pcg::seed_from(13);
+        let data = forward_sample_dataset(&net, 8_000, &mut rng);
+        let seq = hill_climb(&data, &HcOptions::default());
+        for threads in [2usize, 4] {
+            let par = hill_climb(&data, &HcOptions { threads, ..Default::default() });
+            assert_eq!(seq.dag.edges(), par.dag.edges(), "t={threads}");
+            assert_eq!(seq.score.to_bits(), par.score.to_bits(), "t={threads}");
+            assert_eq!(seq.moves, par.moves, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn shared_cache_hc_identical() {
+        let net = repository::sprinkler();
+        let mut rng = Pcg::seed_from(15);
+        let data = forward_sample_dataset(&net, 5_000, &mut rng);
+        let plain = hill_climb(&data, &HcOptions::default());
+        let cache = crate::counts::CountCache::new();
+        let cached = hill_climb_with_cache(&data, &HcOptions::default(), &cache);
+        assert_eq!(plain.dag.edges(), cached.dag.edges());
+        assert_eq!(plain.score.to_bits(), cached.score.to_bits());
+        assert!(cache.stats().lookups() > 0);
     }
 
     #[test]

@@ -9,10 +9,17 @@
 //!   ([`pc_parallel`]).
 //! * **(ii) cache-friendly data storage** — contingency counting streams
 //!   column-major data ([`crate::core::Dataset`]) into one dense count
-//!   array ([`ci_tests`]).
+//!   array (the shared substrate in [`crate::counts`], consumed by
+//!   [`ci_tests`]).
 //! * **(iii) computation grouping** — marginal counts (`n_xz`, `n_yz`,
 //!   `n_z`) are derived from the joint `n_xyz` table instead of recounted,
-//!   collapsing four dataset passes into one ([`ci_tests::CountStrategy`]).
+//!   collapsing four dataset passes into one ([`ci_tests::CountStrategy`]),
+//!   and whole tables are reused across tests, scores and MLE through the
+//!   sharded [`crate::counts::CountCache`] with subset projection.
+//!
+//! Score-based search rides the same substrate: greedy hill climbing
+//! ([`hill_climb`]) fans its O(n²) candidate-delta scan over the work
+//! pool with a deterministic reduce (thread-count-invariant graphs).
 
 pub mod ci_tests;
 mod hill_climbing;
@@ -22,7 +29,7 @@ pub mod score;
 mod sepset;
 
 pub use ci_tests::{CiTest, CiTester, CountStrategy};
-pub use hill_climbing::{hill_climb, HcOptions, HcResult};
-pub use pc::{pc_stable, pc_stable_parallel, PcOptions, PcResult};
+pub use hill_climbing::{hill_climb, hill_climb_with_cache, HcOptions, HcResult};
+pub use pc::{pc_stable, pc_stable_parallel, pc_stable_with_cache, PcOptions, PcResult};
 pub use score::{ScoreKind, Scorer};
 pub use sepset::SepsetMap;

@@ -9,6 +9,7 @@
 //! count (asserted by the integration suite).
 
 use crate::core::{Dataset, VarId};
+use crate::counts::CountCache;
 use crate::graph::{Pdag, UGraph};
 use crate::parallel::parallel_map;
 use super::ci_tests::{CiTest, CiTester, CountStrategy};
@@ -181,9 +182,25 @@ impl Combinations {
     }
 }
 
-fn run_pc(data: &Dataset, opts: &PcOptions, parallel: bool) -> PcResult {
+fn run_pc(
+    data: &Dataset,
+    opts: &PcOptions,
+    parallel: bool,
+    cache: Option<&CountCache>,
+) -> PcResult {
     let n = data.n_vars();
-    let tester = CiTester::with(data, opts.test, opts.strategy);
+    // Every CI test draws its tables from the shared counting substrate;
+    // with no caller-provided cache the run owns a private one (both PC
+    // edge sides and cross-level repeats still dedupe within the run).
+    let owned;
+    let cache = match cache {
+        Some(c) => c,
+        None => {
+            owned = CountCache::new();
+            &owned
+        }
+    };
+    let tester = CiTester::with_cache(data, opts.test, opts.strategy, cache);
     let mut skeleton = UGraph::complete(n);
     let mut sepsets = SepsetMap::new();
     let mut n_tests = 0usize;
@@ -243,14 +260,27 @@ fn run_pc(data: &Dataset, opts: &PcOptions, parallel: bool) -> PcResult {
 
 /// Sequential PC-stable.
 pub fn pc_stable(data: &Dataset, opts: &PcOptions) -> PcResult {
-    run_pc(data, opts, false)
+    run_pc(data, opts, false, None)
 }
 
 /// PC-stable with CI-level parallelism over the dynamic work pool
 /// (paper optimization (i)). Produces the same graph as [`pc_stable`]
 /// for every thread count.
 pub fn pc_stable_parallel(data: &Dataset, opts: &PcOptions) -> PcResult {
-    run_pc(data, opts, true)
+    run_pc(data, opts, true, None)
+}
+
+/// PC-stable over a shared [`CountCache`] (parallel when
+/// `opts.threads > 1`): the contingency tables counted for CI tests stay
+/// resident, so a following scoring or MLE pass over the same cache
+/// hits or projects instead of rescanning rows. The result is
+/// bit-identical to [`pc_stable`] / [`pc_stable_parallel`].
+pub fn pc_stable_with_cache(
+    data: &Dataset,
+    opts: &PcOptions,
+    cache: &CountCache,
+) -> PcResult {
+    run_pc(data, opts, opts.threads > 1, Some(cache))
 }
 
 /// Default implementation of EdgeDecision parallel-map slots.
@@ -333,6 +363,29 @@ mod tests {
             );
             assert_eq!(seq.n_tests, par.n_tests);
         }
+    }
+
+    #[test]
+    fn cache_backed_pc_identical() {
+        let net = repository::asia();
+        let mut rng = Pcg::seed_from(37);
+        let data = forward_sample_dataset(&net, 8_000, &mut rng);
+        let plain = pc_stable(&data, &PcOptions::default());
+        let cache = crate::counts::CountCache::new();
+        let cached = pc_stable_with_cache(&data, &PcOptions::default(), &cache);
+        assert_eq!(plain.graph, cached.graph);
+        assert_eq!(plain.n_tests, cached.n_tests);
+        // Both edge sides + cross-level repeats dedupe inside one run.
+        assert!(cache.stats().hits > 0, "{:?}", cache.stats());
+        // A second (parallel) run over the warm cache is pure hits on
+        // the counting side and still bit-identical.
+        let par = pc_stable_with_cache(
+            &data,
+            &PcOptions { threads: 4, ..Default::default() },
+            &cache,
+        );
+        assert_eq!(plain.graph, par.graph);
+        assert_eq!(plain.n_tests, par.n_tests);
     }
 
     #[test]

@@ -1,12 +1,26 @@
-//! Decomposable structure scores (BIC / log-likelihood) with a family
-//! score cache — the substrate for score-based structure learning, and
-//! the baseline family the constraint-based PC algorithm is compared
-//! against in every structure-learning evaluation.
+//! Decomposable structure scores (BIC / log-likelihood) with a sharded,
+//! read-mostly family-score cache over the shared counting substrate —
+//! the backbone of score-based structure learning, and the baseline
+//! family the constraint-based PC algorithm is compared against in every
+//! structure-learning evaluation.
+//!
+//! Family counts come from [`crate::counts::CountCache`] (grouped
+//! column-major counting, exact subset projection from cached superset
+//! tables), so a hill-climbing run shares tables across candidate moves
+//! — deleting a parent projects the smaller family table out of the
+//! already-counted larger one — and, when the cache is shared with a
+//! preceding PC run, across learning phases. Scores are memoized in
+//! per-shard `RwLock` maps: the parallel candidate scan of
+//! [`super::hill_climb`] re-probes the same families from many workers,
+//! so reads must not serialize (the old single global `Mutex<HashMap>`
+//! did exactly that).
 
 use crate::core::{Dataset, VarId};
-use crate::parameter::count_family;
+use crate::counts::{CountCache, CountCacheStats};
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::hash::{Hash, Hasher};
+use std::sync::RwLock;
 
 /// Which decomposable score to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -21,48 +35,101 @@ pub enum ScoreKind {
     LogLikelihood,
 }
 
+/// Score-cache shards. Sized like the count cache's: enough to keep the
+/// hill-climbing workers' write collisions rare, read locks are shared
+/// anyway.
+const SCORE_SHARDS: usize = 16;
+
+/// A count cache the scorer either owns (the default — every scorer
+/// routes through the substrate) or borrows (a learning pipeline sharing
+/// one cache across CI tests, scoring and MLE).
+enum CacheRef<'d> {
+    Owned(Box<CountCache>),
+    Shared(&'d CountCache),
+}
+
+impl CacheRef<'_> {
+    fn get(&self) -> &CountCache {
+        match self {
+            CacheRef::Owned(c) => c,
+            CacheRef::Shared(c) => c,
+        }
+    }
+}
+
+/// One score shard: `(var, sorted parents) -> family score`.
+type ScoreShard = RwLock<HashMap<(VarId, Vec<VarId>), f64>>;
+
 /// Family-decomposable scorer with memoization: `score(G) = Σ_v
-/// family_score(v, pa_G(v))`, so local search only re-scores the families
-/// an operation touches.
+/// family_score(v, pa_G(v))`, so local search only re-scores the
+/// families an operation touches. `Sync`: the parallel hill-climbing
+/// candidate scan shares one scorer across workers.
 pub struct Scorer<'d> {
     data: &'d Dataset,
     pub kind: ScoreKind,
-    /// `(var, sorted parents) -> family score`. Mutex (not RwLock): the
-    /// critical section is a hash probe, contention is negligible
-    /// relative to counting.
-    cache: Mutex<HashMap<(VarId, Vec<VarId>), f64>>,
+    /// Sharded read-mostly family-score memo.
+    shards: Vec<ScoreShard>,
+    counts: CacheRef<'d>,
     ln_n: f64,
 }
 
 impl<'d> Scorer<'d> {
     pub fn new(data: &'d Dataset, kind: ScoreKind) -> Self {
+        Self::build(data, kind, CacheRef::Owned(Box::new(CountCache::new())))
+    }
+
+    /// Scorer drawing counts from a shared cache (e.g. one populated by
+    /// a preceding PC run over the same dataset).
+    pub fn with_cache(data: &'d Dataset, kind: ScoreKind, cache: &'d CountCache) -> Self {
+        Self::build(data, kind, CacheRef::Shared(cache))
+    }
+
+    fn build(data: &'d Dataset, kind: ScoreKind, counts: CacheRef<'d>) -> Self {
         Scorer {
             data,
             kind,
-            cache: Mutex::new(HashMap::new()),
+            shards: (0..SCORE_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            counts,
             ln_n: (data.n_rows().max(1) as f64).ln(),
         }
     }
 
-    /// Score of one family (memoized).
+    fn shard_of(&self, v: VarId, parents: &[VarId]) -> usize {
+        let mut h = DefaultHasher::new();
+        v.hash(&mut h);
+        parents.hash(&mut h);
+        (h.finish() as usize) % self.shards.len()
+    }
+
+    /// Score of one family (memoized; read-mostly sharded lookup).
     pub fn family_score(&self, v: VarId, parents: &[VarId]) -> f64 {
         debug_assert!(parents.windows(2).all(|w| w[0] < w[1]));
-        let key = (v, parents.to_vec());
-        if let Some(&s) = self.cache.lock().unwrap().get(&key) {
+        let shard = &self.shards[self.shard_of(v, parents)];
+        if let Some(&s) = shard.read().unwrap().get(&(v, parents.to_vec())) {
             return s;
         }
         let s = self.compute_family(v, parents);
-        self.cache.lock().unwrap().insert(key, s);
+        // Racing computes insert the same deterministic value.
+        shard.write().unwrap().insert((v, parents.to_vec()), s);
         s
     }
 
     fn compute_family(&self, v: VarId, parents: &[VarId]) -> f64 {
-        let counts = count_family(self.data, v, parents);
-        let card = counts.card;
-        let n_cfg = counts.counts.len() / card;
+        // Family counts in (parent config, child state) layout, child
+        // fastest — drawn from the substrate (cache hit, superset
+        // projection, or one streaming pass) and scattered exactly.
+        let mut key: Vec<VarId> = parents.to_vec();
+        key.push(v);
+        key.sort_unstable();
+        let table = self.counts.get().table(self.data, &key);
+        let mut order: Vec<VarId> = parents.to_vec();
+        order.push(v);
+        let counts = table.permuted_counts(&order);
+        let card = self.data.cardinality(v);
+        let n_cfg = counts.len() / card;
         let mut ll = 0.0;
         for cfg in 0..n_cfg {
-            let row = &counts.counts[cfg * card..(cfg + 1) * card];
+            let row = &counts[cfg * card..(cfg + 1) * card];
             let total: u64 = row.iter().sum();
             if total == 0 {
                 continue;
@@ -90,9 +157,14 @@ impl<'d> Scorer<'d> {
             .sum()
     }
 
-    /// Cache size (diagnostics).
+    /// Memoized family-score count (diagnostics).
     pub fn cached_families(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Counting-substrate counters behind this scorer (hit rate, bytes).
+    pub fn count_stats(&self) -> CountCacheStats {
+        self.counts.get().stats()
     }
 }
 
@@ -146,6 +218,52 @@ mod tests {
         let b = s.family_score(0, &[1]);
         assert_eq!(a, b);
         assert_eq!(s.cached_families(), 1);
+        // The count substrate saw exactly one table request.
+        assert_eq!(s.count_stats().lookups(), 1);
+    }
+
+    #[test]
+    fn shared_cache_scores_bit_identical() {
+        // A scorer over a shared (possibly pre-warmed) count cache must
+        // produce bit-identical scores to a fresh one.
+        let data = data();
+        let cache = CountCache::new();
+        // Pre-warm with a superset table so some families project.
+        cache.table(&data, &[0, 1, 2, 4]);
+        let fresh = Scorer::new(&data, ScoreKind::Bic);
+        let shared = Scorer::with_cache(&data, ScoreKind::Bic, &cache);
+        for (v, ps) in [
+            (0usize, vec![]),
+            (2, vec![0, 1]),
+            (4, vec![2]),
+            (4, vec![1, 2]),
+            (1, vec![0]),
+        ] {
+            let a = fresh.family_score(v, &ps);
+            let b = shared.family_score(v, &ps);
+            assert_eq!(a.to_bits(), b.to_bits(), "family ({v}, {ps:?})");
+        }
+        assert!(cache.stats().projections > 0, "{:?}", cache.stats());
+    }
+
+    #[test]
+    fn concurrent_scoring_consistent() {
+        // The sharded scorer is Sync: concurrent probes of overlapping
+        // families agree with a sequential pass.
+        let data = data();
+        let scorer = Scorer::new(&data, ScoreKind::Bic);
+        let expect: Vec<f64> =
+            (0..data.n_vars()).map(|v| scorer.family_score(v, &[])).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for v in 0..data.n_vars() {
+                        let s = scorer.family_score(v, &[]);
+                        assert_eq!(s.to_bits(), expect[v].to_bits());
+                    }
+                });
+            }
+        });
     }
 
     #[test]

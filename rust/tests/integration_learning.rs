@@ -135,3 +135,146 @@ fn ci_test_counts_are_reported() {
     assert!(r.n_tests >= 6);
     assert!(r.levels >= 1);
 }
+
+#[test]
+fn substrate_backed_learning_bit_identical() {
+    // The shared counting substrate must not move a single bit anywhere
+    // in the learning stack: PC graphs, CI test counts, family scores
+    // and MLE tables are identical whether counts come from direct row
+    // scans or from one shared cache (hits + subset projections).
+    use fastpgm::counts::CountCache;
+    use fastpgm::parameter::mle_with_cache;
+    use fastpgm::structure::{pc_stable_with_cache, ScoreKind, Scorer};
+
+    let net = SyntheticSpec::child_like().generate(5);
+    let mut rng = Pcg::seed_from(29);
+    let data = forward_sample_dataset(&net, 6_000, &mut rng);
+
+    let plain = pc_stable(&data, &PcOptions::default());
+    let cache = CountCache::new();
+    let cached = pc_stable_with_cache(&data, &PcOptions::default(), &cache);
+    assert_eq!(plain.graph, cached.graph);
+    assert_eq!(plain.n_tests, cached.n_tests);
+    let after_pc = cache.stats();
+    assert!(after_pc.hits > 0, "{after_pc:?}");
+
+    // Scores over the PC-warmed cache == scores over a fresh scorer.
+    let fresh = Scorer::new(&data, ScoreKind::Bic);
+    let shared = Scorer::with_cache(&data, ScoreKind::Bic, &cache);
+    for v in 0..net.n_vars() {
+        let ps = net.dag().parents(v);
+        assert_eq!(
+            fresh.family_score(v, ps).to_bits(),
+            shared.family_score(v, ps).to_bits(),
+            "family of {v}"
+        );
+    }
+
+    // MLE over the same warmed cache == plain MLE, table for table.
+    let a = mle(&data, net.dag(), &MleOptions::default());
+    let b = mle_with_cache(&data, net.dag(), &MleOptions::default(), &cache);
+    for v in 0..net.n_vars() {
+        assert_eq!(a.cpt(v).table, b.cpt(v).table, "cpt of {v}");
+    }
+    // Cross-phase reuse actually happened: the post-PC phases hit or
+    // projected instead of rescanning everything.
+    let final_stats = cache.stats();
+    assert!(
+        final_stats.hits + final_stats.projections > after_pc.hits,
+        "scoring/MLE must reuse PC's tables: {final_stats:?}"
+    );
+}
+
+#[test]
+fn parallel_hc_identical_across_thread_counts_and_networks() {
+    use fastpgm::structure::{hill_climb, HcOptions};
+
+    let mut rng = Pcg::seed_from(31);
+    for net in [repository::survey(), SyntheticSpec::child_like().generate(7)] {
+        let data = forward_sample_dataset(&net, 6_000, &mut rng);
+        let seq = hill_climb(&data, &HcOptions::default());
+        for threads in [1usize, 2, 4] {
+            let par = hill_climb(&data, &HcOptions { threads, ..Default::default() });
+            assert_eq!(
+                seq.dag.edges(),
+                par.dag.edges(),
+                "{}: t={threads}",
+                net.name()
+            );
+            assert_eq!(seq.score.to_bits(), par.score.to_bits(), "t={threads}");
+            assert_eq!(seq.moves, par.moves, "t={threads}");
+        }
+    }
+}
+
+#[test]
+fn parallel_pc_thread_counts_one_two_four() {
+    // The acceptance sweep: {1, 2, 4} threads over a shared cache all
+    // produce the sequential graph and test count.
+    use fastpgm::counts::CountCache;
+    use fastpgm::structure::pc_stable_with_cache;
+
+    let net = repository::asia();
+    let mut rng = Pcg::seed_from(33);
+    let data = forward_sample_dataset(&net, 8_000, &mut rng);
+    let seq = pc_stable(&data, &PcOptions::default());
+    let cache = CountCache::new();
+    for threads in [1usize, 2, 4] {
+        let par = pc_stable_with_cache(
+            &data,
+            &PcOptions { threads, ..Default::default() },
+            &cache,
+        );
+        assert_eq!(seq.graph, par.graph, "t={threads}");
+        assert_eq!(seq.n_tests, par.n_tests, "t={threads}");
+    }
+}
+
+#[test]
+fn projection_tables_equal_rescan_tables() {
+    use fastpgm::counts::{ContingencyTable, CountCache};
+
+    let net = SyntheticSpec::child_like().generate(11);
+    let mut rng = Pcg::seed_from(35);
+    let data = forward_sample_dataset(&net, 3_000, &mut rng);
+    let cache = CountCache::new();
+    // Warm a 4-variable joint, then derive every sub-scope through the
+    // cache; each must equal a direct rescan exactly.
+    let scope = [0usize, 3, 5, 8];
+    cache.table(&data, &scope);
+    for sub in [
+        vec![0usize, 3, 5],
+        vec![0, 5],
+        vec![3, 8],
+        vec![5],
+        vec![0, 3, 5, 8],
+    ] {
+        let via_cache = cache.table(&data, &sub);
+        let direct = ContingencyTable::count(&data, &sub);
+        assert_eq!(via_cache.counts(), direct.counts(), "scope {sub:?}");
+    }
+    let stats = cache.stats();
+    assert!(stats.projections >= 4, "{stats:?}");
+    assert_eq!(stats.hits, 1, "{stats:?}"); // the full-scope repeat
+}
+
+#[test]
+fn hc_cli_path_pipeline_matches_direct_hill_climb() {
+    // The learn::Pipeline HC route (what `fastpgm learn --algo hc`
+    // drives) produces exactly the hill climber's graph, and its MLE
+    // parameters match a direct fit of that graph.
+    use fastpgm::learn::Pipeline;
+    use fastpgm::structure::{hill_climb, HcOptions};
+
+    let net = repository::survey();
+    let mut rng = Pcg::seed_from(39);
+    let data = forward_sample_dataset(&net, 8_000, &mut rng);
+    let opts = HcOptions { threads: 4, ..Default::default() };
+    let direct = hill_climb(&data, &opts);
+    let model = Pipeline::hc(opts).run(&data).unwrap();
+    assert_eq!(direct.dag.edges(), model.dag.edges());
+    let refit = mle(&data, &direct.dag, &MleOptions::default());
+    for v in 0..net.n_vars() {
+        assert_eq!(refit.cpt(v).table, model.net.cpt(v).table, "cpt of {v}");
+    }
+}

@@ -3,7 +3,7 @@
 //! and exactness of everything served.
 
 use fastpgm::coordinator::{
-    BatcherConfig, QueryReply, QueryRequest, QueryRouter,
+    ApproxConfig, BatcherConfig, QueryReply, QueryRequest, QueryRouter,
 };
 use fastpgm::core::Evidence;
 use fastpgm::inference::exact::{JunctionTree, KernelMode, QueryEngineConfig};
@@ -317,4 +317,66 @@ fn query_engine_cache_is_shared_across_batches() {
     let cache = &stats[0].1.cache;
     assert_eq!(cache.misses(), 1, "{cache:?}");
     assert_eq!(cache.hits, 4, "{cache:?}");
+}
+
+#[test]
+fn learned_model_registers_and_serves_without_roundtrip() {
+    // learn → compile → register: a Pipeline artifact goes straight into
+    // the QueryRouter (no .fpgm round-trip), reusing its compiled tree,
+    // and everything served matches the learned network's own junction
+    // tree to 1e-12.
+    use fastpgm::learn::Pipeline;
+    use fastpgm::structure::PcOptions;
+
+    let truth = repository::survey();
+    let mut rng = Pcg::seed_from(61);
+    let data = fastpgm::sampling::forward_sample_dataset(&truth, 40_000, &mut rng);
+    let model = Pipeline::pc(PcOptions { alpha: 0.05, ..Default::default() })
+        .run(&data)
+        .expect("survey CPDAG extends to a DAG");
+    assert!(model.report.counts.lookups() > 0, "{:?}", model.report.counts);
+
+    let mut router = QueryRouter::new(2);
+    let replaced = router.register_learned(
+        "survey-learned",
+        &model,
+        QueryEngineConfig { cache_capacity: 16, ..Default::default() },
+        BatcherConfig::default(),
+        ApproxConfig::default(),
+    );
+    assert!(!replaced);
+    assert!(router.has_model("survey-learned"));
+
+    let jt = JunctionTree::build(&model.net);
+    let mut fresh = jt.engine();
+    for _ in 0..10 {
+        let ev: Evidence = rng
+            .choose_k(model.net.n_vars(), 2)
+            .into_iter()
+            .map(|v| (v, rng.below(model.net.cardinality(v))))
+            .collect();
+        let expect = fresh.query_all(&ev);
+        let reply = router
+            .query("survey-learned", QueryRequest::all(ev.clone()))
+            .unwrap();
+        match reply {
+            QueryReply::All(ps) => {
+                for (v, (g, e)) in ps.iter().zip(&expect).enumerate() {
+                    for (a, b) in g.iter().zip(e) {
+                        assert!((a - b).abs() <= 1e-12, "var {v} ev {ev:?}");
+                    }
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    // Re-registering a learned model drains + replaces like any other.
+    let replaced = router.register_learned(
+        "survey-learned",
+        &model,
+        QueryEngineConfig::default(),
+        BatcherConfig::default(),
+        ApproxConfig::default(),
+    );
+    assert!(replaced);
 }
