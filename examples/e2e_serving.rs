@@ -58,7 +58,7 @@ fn query_serving_demo(args: &Args) -> anyhow::Result<()> {
         router.register(
             name,
             &net,
-            QueryEngineConfig { cache_capacity: 128, ..Default::default() },
+            QueryEngineConfig::new().with_cache_capacity(128),
             BatcherConfig::default(),
         );
         models.push((name.to_string(), net));
@@ -166,15 +166,15 @@ fn approx_serving_demo(args: &Args) -> anyhow::Result<()> {
     router.register_with_approx(
         "asia",
         &net,
-        QueryEngineConfig { cache_capacity: 64, ..Default::default() },
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(20) },
-        ApproxConfig {
-            engine: EngineChoice::Auto,
-            opts: ApproxOptions { n_samples: 20_000, ..Default::default() },
-            error_budget: 0.01,
-            shed_queue_depth: 2,
-            ..Default::default()
-        },
+        QueryEngineConfig::new().with_cache_capacity(64),
+        BatcherConfig::new()
+            .with_max_batch(64)
+            .with_max_wait(Duration::from_millis(20)),
+        ApproxConfig::new()
+            .with_engine(EngineChoice::Auto)
+            .with_opts(ApproxOptions { n_samples: 20_000, ..Default::default() })
+            .with_error_budget(0.01)
+            .with_shed_queue_depth(2),
     );
 
     // Bounded evidence pool, restricted to evidence with non-negligible
@@ -284,10 +284,9 @@ mod xla_demo {
             router.register_with(
                 name,
                 Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
-                BatcherConfig {
-                    max_batch: meta.batch,
-                    max_wait: Duration::from_millis(1),
-                },
+                BatcherConfig::new()
+                    .with_max_batch(meta.batch)
+                    .with_max_wait(Duration::from_millis(1)),
             )?;
 
             // -- concurrent request stream ----------------------------------

@@ -1,0 +1,231 @@
+//! Fabric bench — what does crossing the wire cost, and what does
+//! affinity routing buy? Four serving shapes over the same prefix-heavy
+//! query trace, written to `BENCH_fabric.json`:
+//!
+//! * `in-process`         — the [`QueryRouter`] baseline, no wire.
+//! * `fabric-1`           — one shard behind the versioned wire protocol
+//!   (isolates pure framing + TCP round-trip overhead).
+//! * `fabric-N-affinity`  — N shards, consistent hashing on the evidence
+//!   signature prefix (nested chains stay colocated, caches stay warm).
+//! * `fabric-N-rr`        — N shards, round-robin (the ablation: same
+//!   wire, no locality — watch the warm-start rate fall).
+//!
+//! Shards run in-process over real TCP ([`ThreadLauncher`]), so the wire
+//! traffic is identical to `serve-query --fabric N` without needing the
+//! built binary on the bench path.
+
+use fastpgm::benchkit::json::Json;
+use fastpgm::benchkit::{self, report, scaled, Measurement};
+use fastpgm::core::Evidence;
+use fastpgm::network::{repository, BayesianNetwork};
+use fastpgm::rng::Pcg;
+use fastpgm::serving::{
+    FabricConfig, Frontend, ModelSpec, QueryEngineConfig, QueryRequest, QueryRouter,
+    RoutingPolicy, ShardConfig, ThreadLauncher,
+};
+use fastpgm::testkit;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const MODEL: &str = "alarm_like";
+const SHARDS: usize = 2;
+const CACHE_CAPACITY: usize = 256;
+
+fn specs(net: &BayesianNetwork) -> Vec<ModelSpec> {
+    vec![ModelSpec::new(MODEL, net.clone())
+        .with_engine(QueryEngineConfig::new().with_cache_capacity(CACHE_CAPACITY))]
+}
+
+/// Prefix-heavy trace: nested evidence chains in serving order (the
+/// traffic shape whose warm starts affinity routing is built to protect).
+fn workload(net: &BayesianNetwork, queries: usize) -> Vec<(usize, Evidence)> {
+    let mut rng = Pcg::seed_from(0xFAB);
+    let chains = (queries / 4).max(1);
+    let pool = testkit::gen_evidence_chain_pool(&mut rng, net, chains, 4);
+    (0..queries)
+        .map(|i| {
+            let ev = pool[i % pool.len()].clone();
+            (testkit::gen_query_var(&mut rng, net, &ev), ev)
+        })
+        .collect()
+}
+
+fn drive(
+    trace: &[(usize, Evidence)],
+    mut answer: impl FnMut(usize, &Evidence) -> Vec<f64>,
+) -> (Vec<Vec<f64>>, Vec<Duration>) {
+    let mut posts = Vec::with_capacity(trace.len());
+    let mut latencies = Vec::with_capacity(trace.len());
+    for (var, ev) in trace {
+        let t0 = Instant::now();
+        let p = answer(*var, ev);
+        latencies.push(t0.elapsed());
+        posts.push(p);
+    }
+    (posts, latencies)
+}
+
+/// Run the trace through a thread-shard fabric; returns posteriors,
+/// latencies, and the fleet warm-start rate off the wire stats.
+fn run_fabric(
+    net: &BayesianNetwork,
+    shards: usize,
+    policy: RoutingPolicy,
+    trace: &[(usize, Evidence)],
+) -> (Vec<Vec<f64>>, Vec<Duration>, f64) {
+    let frontend = Frontend::new(
+        specs(net),
+        Box::new(
+            ThreadLauncher::new(specs(net))
+                .with_config(ShardConfig::new().with_pool_threads(2)),
+        ),
+        FabricConfig::new().with_shards(shards).with_policy(policy),
+    )
+    .expect("fabric launches");
+    let (posts, latencies) = drive(trace, |var, ev| {
+        frontend
+            .query_routed(MODEL, QueryRequest::marginal(var, ev.clone()))
+            .expect("fabric answers")
+            .into_marginal()
+            .expect("marginal reply")
+    });
+    let stats = frontend.stats().expect("fleet stats");
+    let warm_rate = stats
+        .iter()
+        .find(|(m, _)| m == MODEL)
+        .map(|(_, s)| s.cache.warm_start_rate())
+        .unwrap_or(0.0);
+    frontend.shutdown();
+    (posts, latencies, warm_rate)
+}
+
+fn scenario_json(mode: &str, latencies: &[Duration], extra: Vec<(&str, Json)>) -> Json {
+    let total: f64 = latencies.iter().map(Duration::as_secs_f64).sum();
+    let m = Measurement { label: mode.to_string(), samples: latencies.to_vec() };
+    let mut pairs = vec![
+        ("net", Json::str(MODEL)),
+        ("mode", Json::str(mode)),
+        ("queries", Json::num(latencies.len() as f64)),
+        ("throughput_qps", Json::num(latencies.len() as f64 / total.max(1e-12))),
+        ("p50_us", Json::num(m.percentile(50.0).as_secs_f64() * 1e6)),
+        ("p99_us", Json::num(m.percentile(99.0).as_secs_f64() * 1e6)),
+    ];
+    pairs.extend(extra);
+    Json::obj(pairs)
+}
+
+fn main() {
+    let queries = scaled(512, 96);
+    println!(
+        "== fabric: in-process vs wire, affinity vs round-robin \
+         ({MODEL}, {queries} queries, {SHARDS} shards) =="
+    );
+    let net = repository::by_name_extended(MODEL).expect("known network");
+    let trace = workload(&net, queries);
+
+    // 1. In-process baseline (no wire anywhere).
+    let mut router = QueryRouter::new(2);
+    for spec in specs(&net) {
+        router.register_with_approx(
+            spec.name.as_str(),
+            &spec.net,
+            spec.engine,
+            spec.batcher.clone(),
+            spec.approx.clone(),
+        );
+    }
+    let (local_posts, local_lat) = drive(&trace, |var, ev| {
+        router
+            .query_routed(MODEL, QueryRequest::marginal(var, ev.clone()))
+            .expect("router answers")
+            .into_marginal()
+            .expect("marginal reply")
+    });
+    let local_warm = router.stats()[0].1.cache.warm_start_rate();
+
+    // 2. One shard: pure wire overhead. 3./4. N shards: affinity vs rr.
+    let (one_posts, one_lat, one_warm) =
+        run_fabric(&net, 1, RoutingPolicy::Affinity, &trace);
+    let (aff_posts, aff_lat, aff_warm) =
+        run_fabric(&net, SHARDS, RoutingPolicy::Affinity, &trace);
+    let (_rr_posts, rr_lat, rr_warm) =
+        run_fabric(&net, SHARDS, RoutingPolicy::RoundRobin, &trace);
+
+    // The wire must not change a single answer (f64s cross bit-exact).
+    for ((a, b), c) in local_posts.iter().zip(&one_posts).zip(&aff_posts) {
+        for ((x, y), z) in a.iter().zip(b).zip(c) {
+            assert!(
+                (x - y).abs() <= 1e-12 && (x - z).abs() <= 1e-12,
+                "fabric answers diverged from in-process serving"
+            );
+        }
+    }
+
+    let rows = [
+        ("in-process", &local_lat),
+        ("fabric 1 shard", &one_lat),
+        ("fabric N affinity", &aff_lat),
+        ("fabric N round-robin", &rr_lat),
+    ]
+    .map(|(label, samples)| Measurement {
+        label: label.to_string(),
+        samples: samples.clone(),
+    });
+    report(&format!("{MODEL} ({} vars, {queries} queries)", net.n_vars()), &rows);
+    println!(
+        "  warm-start rates: in-process {local_warm:.3}, 1-shard {one_warm:.3}, \
+         {SHARDS}-shard affinity {aff_warm:.3}, {SHARDS}-shard rr {rr_warm:.3}"
+    );
+    if local_warm - aff_warm > 0.10 {
+        println!("  WARNING: affinity warm rate fell >10% below in-process");
+    }
+
+    let out = Json::obj([
+        ("bench", Json::str("fabric")),
+        (
+            "config",
+            Json::obj([
+                ("net", Json::str(MODEL)),
+                ("queries", Json::num(queries as f64)),
+                ("shards", Json::num(SHARDS as f64)),
+                ("cache_capacity", Json::num(CACHE_CAPACITY as f64)),
+            ]),
+        ),
+        (
+            "scenarios",
+            Json::Arr(vec![
+                scenario_json(
+                    "in-process",
+                    &local_lat,
+                    vec![("warm_start_rate", Json::num(local_warm))],
+                ),
+                scenario_json(
+                    "fabric-1",
+                    &one_lat,
+                    vec![("warm_start_rate", Json::num(one_warm)), ("shards", Json::num(1.0))],
+                ),
+                scenario_json(
+                    "fabric-affinity",
+                    &aff_lat,
+                    vec![
+                        ("warm_start_rate", Json::num(aff_warm)),
+                        ("shards", Json::num(SHARDS as f64)),
+                        ("warm_rate_vs_in_process", Json::num(aff_warm - local_warm)),
+                    ],
+                ),
+                scenario_json(
+                    "fabric-rr",
+                    &rr_lat,
+                    vec![
+                        ("warm_start_rate", Json::num(rr_warm)),
+                        ("shards", Json::num(SHARDS as f64)),
+                        ("warm_rate_vs_in_process", Json::num(rr_warm - local_warm)),
+                    ],
+                ),
+            ]),
+        ),
+    ]);
+    let path = Path::new("BENCH_fabric.json");
+    benchkit::json::write(path, &out).expect("writing BENCH_fabric.json");
+    println!("\nwrote {}", path.display());
+}

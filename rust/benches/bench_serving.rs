@@ -104,7 +104,7 @@ fn main() {
         // 3. Compiled + LRU calibration cache (the QueryEngine).
         let engine = QueryEngine::with_config(
             &net,
-            QueryEngineConfig { cache_capacity: CACHE_CAPACITY, ..Default::default() },
+            QueryEngineConfig::new().with_cache_capacity(CACHE_CAPACITY),
         );
         let (cached_posts, cached_lat) =
             drive(&stream, |ev, var| engine.posterior(var, ev));

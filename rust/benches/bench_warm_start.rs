@@ -127,7 +127,7 @@ fn main() {
         for warm_start in [false, true] {
             let engine = QueryEngine::with_config(
                 &net,
-                QueryEngineConfig { warm_start, cache_capacity: 64, ..Default::default() },
+                QueryEngineConfig::new().with_warm_start(warm_start).with_cache_capacity(64),
             );
             let t0 = Instant::now();
             let posts: Vec<Vec<f64>> =

@@ -111,10 +111,9 @@ mod xla_bench {
                 .register_with(
                     name,
                     Box::new(move || Ok(Box::new(BatchScorer::load(&b2)?) as _)),
-                    BatcherConfig {
-                        max_batch: meta.batch,
-                        max_wait: Duration::from_micros(500),
-                    },
+                    BatcherConfig::new()
+                        .with_max_batch(meta.batch)
+                        .with_max_wait(Duration::from_micros(500)),
                 )
                 .unwrap();
             let n_requests = rows.len();

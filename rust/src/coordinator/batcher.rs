@@ -15,7 +15,12 @@ pub type ScorerFactory =
     Box<dyn FnOnce() -> anyhow::Result<Box<dyn Scorer>> + Send + 'static>;
 
 /// Batching policy.
+///
+/// `#[non_exhaustive]`: construct via [`BatcherConfig::new`] (or
+/// `Default`) and the `with_*` builders, so wire-protocol versioning can
+/// add fields without breaking callers.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct BatcherConfig {
     /// Flush when this many requests are queued (clamped to the scorer's
     /// native batch size).
@@ -27,6 +32,25 @@ pub struct BatcherConfig {
 impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig { max_batch: usize::MAX, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatcherConfig {
+    /// The defaults — start here and chain `with_*` calls.
+    pub fn new() -> BatcherConfig {
+        BatcherConfig::default()
+    }
+
+    /// Set the flush-when-full batch size.
+    pub fn with_max_batch(mut self, max_batch: usize) -> BatcherConfig {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Set the flush deadline for a non-empty queue.
+    pub fn with_max_wait(mut self, max_wait: Duration) -> BatcherConfig {
+        self.max_wait = max_wait;
+        self
     }
 }
 

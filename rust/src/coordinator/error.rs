@@ -1,0 +1,233 @@
+//! Typed errors for the serving surface.
+//!
+//! The serving path used to fail with stringly `anyhow` errors; crossing a
+//! process boundary (the fabric wire protocol) forces a stable contract:
+//! every failure a client can observe is one [`ServingError`] variant, and
+//! each variant maps 1:1 onto a wire-protocol error code (see
+//! `docs/WIRE_PROTOCOL.md`). Non-serving callers are untouched:
+//! `ServingError` implements [`std::error::Error`], so `?` still converts
+//! into `anyhow::Error` through the blanket `From`.
+
+use std::fmt;
+
+/// Everything that can go wrong on the serving path, local or remote.
+///
+/// The enum is `#[non_exhaustive]`: wire-protocol versioning may add
+/// variants (with fresh error codes) without breaking callers, so match
+/// arms need a wildcard.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ServingError {
+    /// The request referenced an out-of-range variable or state.
+    InvalidQuery(String),
+    /// No model registered under the requested name.
+    ModelNotFound(String),
+    /// The service/batcher behind the model has stopped (drained, dropped,
+    /// or its worker thread died) — the request was not answered.
+    ServiceStopped,
+    /// A fabric shard could not be reached (dead, unreachable, or past its
+    /// retry budget) and no fallback was available.
+    ShardUnavailable(String),
+    /// Protocol-version negotiation failed: the two version ranges do not
+    /// overlap.
+    ProtocolMismatch {
+        local_min: u16,
+        local_max: u16,
+        remote_min: u16,
+        remote_max: u16,
+    },
+    /// A frame failed to parse (bad magic, truncated payload, unknown
+    /// message type, or malformed field encoding).
+    Wire(String),
+    /// A shard refused a request because its in-flight bound was reached;
+    /// the caller may retry elsewhere or fall back.
+    Overloaded(String),
+    /// Model registration failed (e.g. a scorer factory error).
+    Registration(String),
+    /// An internal invariant broke (e.g. a reply variant that does not
+    /// match its request target). Always a bug, never a caller error.
+    Internal(String),
+}
+
+impl ServingError {
+    /// Stable wire-protocol error code for this variant. Codes are
+    /// append-only across protocol versions (see `docs/WIRE_PROTOCOL.md`).
+    pub fn code(&self) -> u16 {
+        match self {
+            ServingError::InvalidQuery(_) => 1,
+            ServingError::ModelNotFound(_) => 2,
+            ServingError::ServiceStopped => 3,
+            ServingError::ShardUnavailable(_) => 4,
+            ServingError::ProtocolMismatch { .. } => 5,
+            ServingError::Wire(_) => 6,
+            ServingError::Overloaded(_) => 7,
+            ServingError::Registration(_) => 8,
+            ServingError::Internal(_) => 9,
+        }
+    }
+
+    /// The human-readable detail carried by this variant (empty for
+    /// variants whose meaning is fully captured by the code).
+    pub fn detail(&self) -> String {
+        match self {
+            ServingError::InvalidQuery(s)
+            | ServingError::ModelNotFound(s)
+            | ServingError::ShardUnavailable(s)
+            | ServingError::Wire(s)
+            | ServingError::Overloaded(s)
+            | ServingError::Registration(s)
+            | ServingError::Internal(s) => s.clone(),
+            ServingError::ServiceStopped | ServingError::ProtocolMismatch { .. } => {
+                String::new()
+            }
+        }
+    }
+
+    /// Two generic numeric slots carried next to the code on the wire.
+    /// Only [`ServingError::ProtocolMismatch`] uses them (packed version
+    /// ranges); every other variant sends zeros.
+    pub fn wire_slots(&self) -> (u32, u32) {
+        match self {
+            ServingError::ProtocolMismatch {
+                local_min,
+                local_max,
+                remote_min,
+                remote_max,
+            } => (
+                ((*local_min as u32) << 16) | *local_max as u32,
+                ((*remote_min as u32) << 16) | *remote_max as u32,
+            ),
+            _ => (0, 0),
+        }
+    }
+
+    /// Rebuild a `ServingError` from its wire form. Total: unknown codes
+    /// (from a newer peer) decode as [`ServingError::Wire`] so older
+    /// clients degrade gracefully instead of failing to parse.
+    pub fn from_wire(code: u16, a: u32, b: u32, detail: String) -> ServingError {
+        match code {
+            1 => ServingError::InvalidQuery(detail),
+            2 => ServingError::ModelNotFound(detail),
+            3 => ServingError::ServiceStopped,
+            4 => ServingError::ShardUnavailable(detail),
+            5 => ServingError::ProtocolMismatch {
+                local_min: (a >> 16) as u16,
+                local_max: (a & 0xffff) as u16,
+                remote_min: (b >> 16) as u16,
+                remote_max: (b & 0xffff) as u16,
+            },
+            6 => ServingError::Wire(detail),
+            7 => ServingError::Overloaded(detail),
+            8 => ServingError::Registration(detail),
+            9 => ServingError::Internal(detail),
+            other => {
+                ServingError::Wire(format!("unrecognized error code {other}: {detail}"))
+            }
+        }
+    }
+}
+
+impl fmt::Display for ServingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServingError::InvalidQuery(s) => write!(f, "invalid query: {s}"),
+            ServingError::ModelNotFound(name) => write!(f, "unknown model {name:?}"),
+            ServingError::ServiceStopped => write!(f, "query service stopped"),
+            ServingError::ShardUnavailable(s) => write!(f, "shard unavailable: {s}"),
+            ServingError::ProtocolMismatch {
+                local_min,
+                local_max,
+                remote_min,
+                remote_max,
+            } => write!(
+                f,
+                "protocol mismatch: local supports v{local_min}..=v{local_max}, \
+                 remote supports v{remote_min}..=v{remote_max}"
+            ),
+            ServingError::Wire(s) => write!(f, "wire protocol error: {s}"),
+            ServingError::Overloaded(s) => write!(f, "shard overloaded: {s}"),
+            ServingError::Registration(s) => write!(f, "registration failed: {s}"),
+            ServingError::Internal(s) => write!(f, "internal serving error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ServingError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<ServingError> {
+        vec![
+            ServingError::InvalidQuery("var 99 out of range".into()),
+            ServingError::ModelNotFound("asia".into()),
+            ServingError::ServiceStopped,
+            ServingError::ShardUnavailable("shard 2 dead".into()),
+            ServingError::ProtocolMismatch {
+                local_min: 1,
+                local_max: 3,
+                remote_min: 4,
+                remote_max: 7,
+            },
+            ServingError::Wire("truncated frame".into()),
+            ServingError::Overloaded("1024 in flight".into()),
+            ServingError::Registration("factory failed".into()),
+            ServingError::Internal("reply variant mismatch".into()),
+        ]
+    }
+
+    #[test]
+    fn codes_are_unique_and_stable() {
+        let variants = all_variants();
+        let mut codes: Vec<u16> = variants.iter().map(|e| e.code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), variants.len(), "duplicate error codes");
+        assert_eq!(codes, (1..=9).collect::<Vec<u16>>());
+    }
+
+    #[test]
+    fn wire_round_trip_every_variant() {
+        for e in all_variants() {
+            let (a, b) = e.wire_slots();
+            let back = ServingError::from_wire(e.code(), a, b, e.detail());
+            assert_eq!(back, e, "round trip changed {e:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_code_degrades_to_wire_error() {
+        let e = ServingError::from_wire(999, 0, 0, "future variant".into());
+        match e {
+            ServingError::Wire(s) => {
+                assert!(s.contains("999"));
+                assert!(s.contains("future variant"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ServingError::ServiceStopped)?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert!(format!("{e}").contains("stopped"));
+    }
+
+    #[test]
+    fn protocol_mismatch_packs_versions() {
+        let e = ServingError::ProtocolMismatch {
+            local_min: 2,
+            local_max: 5,
+            remote_min: 7,
+            remote_max: 9,
+        };
+        let (a, b) = e.wire_slots();
+        assert_eq!(a, (2 << 16) | 5);
+        assert_eq!(b, (7 << 16) | 9);
+    }
+}

@@ -1,0 +1,781 @@
+//! The fabric frontend: routes queries to shards by evidence affinity,
+//! supervises shard processes, and falls back in-process when a shard is
+//! beyond saving.
+//!
+//! **Why affinity routing**: a shard's warm-start calibration cache only
+//! pays off if queries with related evidence keep landing on the same
+//! shard. The frontend hashes a bounded *prefix* of the query's evidence
+//! signature (the sorted variable set) onto a consistent-hash ring — so
+//! nested evidence chains (`E ⊂ E' ⊂ E''`, which differ in their tails
+//! but share their smallest variables) stay colocated and warm-start off
+//! each other, instead of being diluted N ways. Round-robin routing is
+//! available as the ablation baseline.
+//!
+//! **Failure ladder** per query: reuse the pooled connection → on I/O
+//! error redial once (a stale connection is not a dead shard) → on dial
+//! failure declare the shard dead, respawn it via the launcher and retry
+//! → finally answer from the in-process fallback router. A query is never
+//! dropped; [`FabricMetrics`] counts every recovery step.
+
+use super::shard::{ModelSpec, ShardConfig, ShardWorker};
+use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
+use crate::coordinator::{
+    QueryModelStats, QueryRequest, QueryRouter, RoutedReply, ServingError,
+};
+use crate::core::Evidence;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
+use std::net::{Shutdown as NetShutdown, SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Line a `--shard` process prints on stdout once its listener is up; the
+/// launcher parses the address after the space.
+pub const SHARD_READY_PREFIX: &str = "FASTPGM_SHARD_READY ";
+
+/// How the frontend picks a shard for a query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Consistent-hash on the evidence-signature prefix (cache-local).
+    Affinity,
+    /// Ignore evidence; spread queries evenly (the ablation baseline).
+    RoundRobin,
+}
+
+/// Tuning knobs for the fabric frontend.
+///
+/// `#[non_exhaustive]`: construct via [`FabricConfig::new`] (or `Default`)
+/// and the `with_*` builders.
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub struct FabricConfig {
+    /// Number of shards to launch.
+    pub shards: usize,
+    pub policy: RoutingPolicy,
+    /// How many (smallest) evidence variables feed the affinity hash.
+    /// Small prefixes colocate nested evidence chains; larger values
+    /// spread load more evenly at the cost of cache locality.
+    pub affinity_prefix: usize,
+    /// Virtual nodes per shard on the consistent-hash ring.
+    pub virtual_nodes: usize,
+    /// Socket read/write timeout for shard round trips.
+    pub io_timeout: Duration,
+    /// Timeout for dialing a shard.
+    pub connect_timeout: Duration,
+    /// Keep an in-process [`QueryRouter`] as the answer of last resort.
+    pub fallback: bool,
+    /// Calibration pool width of the fallback router.
+    pub pool_threads: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            shards: 2,
+            policy: RoutingPolicy::Affinity,
+            affinity_prefix: 1,
+            virtual_nodes: 64,
+            io_timeout: Duration::from_secs(10),
+            connect_timeout: Duration::from_secs(5),
+            fallback: true,
+            pool_threads: 2,
+        }
+    }
+}
+
+impl FabricConfig {
+    /// The defaults — start here and chain `with_*` calls.
+    pub fn new() -> FabricConfig {
+        FabricConfig::default()
+    }
+
+    /// Set the shard count.
+    pub fn with_shards(mut self, shards: usize) -> FabricConfig {
+        self.shards = shards;
+        self
+    }
+
+    /// Set the routing policy.
+    pub fn with_policy(mut self, policy: RoutingPolicy) -> FabricConfig {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the affinity-hash prefix length.
+    pub fn with_affinity_prefix(mut self, prefix: usize) -> FabricConfig {
+        self.affinity_prefix = prefix;
+        self
+    }
+
+    /// Set the virtual nodes per shard.
+    pub fn with_virtual_nodes(mut self, n: usize) -> FabricConfig {
+        self.virtual_nodes = n;
+        self
+    }
+
+    /// Set the shard round-trip socket timeout.
+    pub fn with_io_timeout(mut self, t: Duration) -> FabricConfig {
+        self.io_timeout = t;
+        self
+    }
+
+    /// Set the shard dial timeout.
+    pub fn with_connect_timeout(mut self, t: Duration) -> FabricConfig {
+        self.connect_timeout = t;
+        self
+    }
+
+    /// Enable/disable the in-process fallback router.
+    pub fn with_fallback(mut self, fallback: bool) -> FabricConfig {
+        self.fallback = fallback;
+        self
+    }
+
+    /// Set the fallback router's pool width.
+    pub fn with_pool_threads(mut self, n: usize) -> FabricConfig {
+        self.pool_threads = n;
+        self
+    }
+}
+
+/// Counters for the fabric's routing and recovery machinery (the serving
+/// counters themselves live in each shard's
+/// [`crate::coordinator::ServingMetrics`]; [`Frontend::stats`] merges
+/// those into a fleet view).
+#[derive(Clone, Debug, Default)]
+pub struct FabricMetrics {
+    /// Queries routed through the frontend.
+    pub queries: usize,
+    /// Queries first routed to each shard (before any failover).
+    pub per_shard: Vec<usize>,
+    /// Times a shard was declared dead while holding a query.
+    pub failovers: usize,
+    /// Shard respawns performed by the supervisor.
+    pub respawns: usize,
+    /// Queries answered by the in-process fallback router.
+    pub fallback_answers: usize,
+    /// Transparent same-shard retries (stale connection redials).
+    pub retried: usize,
+}
+
+/// A running shard as the frontend sees it: an address to dial plus the
+/// means to kill it.
+pub enum ShardHandle {
+    /// In-process worker over real TCP (tests, benches).
+    Thread(Box<ShardWorker>),
+    /// Separate `--shard` process (the CLI fabric path).
+    Process { child: Child, addr: SocketAddr },
+}
+
+impl ShardHandle {
+    pub fn addr(&self) -> SocketAddr {
+        match self {
+            ShardHandle::Thread(w) => w.addr(),
+            ShardHandle::Process { addr, .. } => *addr,
+        }
+    }
+
+    /// Abrupt kill — the chaos hook and the supervisor's cleanup step.
+    pub fn kill(&mut self) {
+        match self {
+            ShardHandle::Thread(w) => w.abort(),
+            ShardHandle::Process { child, .. } => {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+
+    /// Orderly teardown after a wire Shutdown was acked: join the worker
+    /// or wait (bounded) for the process to exit, killing it if it lingers.
+    fn finish(mut self) {
+        match &mut self {
+            ShardHandle::Thread(w) => w.stop(),
+            ShardHandle::Process { child, .. } => {
+                let deadline = Instant::now() + Duration::from_secs(5);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => return,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Launches (and re-launches) shards — the seam between the frontend's
+/// supervision logic and how a shard actually runs.
+pub trait ShardLauncher: Send + Sync {
+    fn launch(&self, shard_id: u32) -> Result<ShardHandle, ServingError>;
+}
+
+/// Runs each shard as an in-process [`ShardWorker`] over real TCP —
+/// identical wire traffic to process shards without needing a built
+/// binary. What tests and benches use.
+pub struct ThreadLauncher {
+    pub specs: Vec<ModelSpec>,
+    pub config: ShardConfig,
+}
+
+impl ThreadLauncher {
+    pub fn new(specs: Vec<ModelSpec>) -> ThreadLauncher {
+        ThreadLauncher { specs, config: ShardConfig::default() }
+    }
+
+    pub fn with_config(mut self, config: ShardConfig) -> ThreadLauncher {
+        self.config = config;
+        self
+    }
+}
+
+impl ShardLauncher for ThreadLauncher {
+    fn launch(&self, shard_id: u32) -> Result<ShardHandle, ServingError> {
+        let worker =
+            ShardWorker::spawn(shard_id, self.specs.clone(), self.config.clone())?;
+        Ok(ShardHandle::Thread(Box::new(worker)))
+    }
+}
+
+/// Spawns each shard as a child process running `exe` with
+/// `--shard --shard-id <n>` plus the pass-through model arguments, and
+/// reads the [`SHARD_READY_PREFIX`] line to learn its address.
+pub struct ProcessLauncher {
+    pub exe: PathBuf,
+    /// Arguments after the hidden shard flags — typically the same model
+    /// flags the frontend invocation received (`--nets …`, engine knobs).
+    pub args: Vec<String>,
+}
+
+impl ShardLauncher for ProcessLauncher {
+    fn launch(&self, shard_id: u32) -> Result<ShardHandle, ServingError> {
+        let mut child = Command::new(&self.exe)
+            .arg("serve-query")
+            .arg("--shard")
+            .arg("--shard-id")
+            .arg(shard_id.to_string())
+            .args(&self.args)
+            .stdout(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                ServingError::ShardUnavailable(format!(
+                    "shard {shard_id}: spawn {:?} failed: {e}",
+                    self.exe
+                ))
+            })?;
+        let stdout = child.stdout.take().ok_or_else(|| {
+            ServingError::ShardUnavailable(format!("shard {shard_id}: no stdout"))
+        })?;
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = reader.read_line(&mut line).map_err(|e| {
+                ServingError::ShardUnavailable(format!(
+                    "shard {shard_id}: reading ready line: {e}"
+                ))
+            })?;
+            if n == 0 {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(ServingError::ShardUnavailable(format!(
+                    "shard {shard_id}: exited before becoming ready"
+                )));
+            }
+            if let Some(rest) = line.trim_end().strip_prefix(SHARD_READY_PREFIX) {
+                let addr: SocketAddr = rest.parse().map_err(|e| {
+                    ServingError::ShardUnavailable(format!(
+                        "shard {shard_id}: bad ready address {rest:?}: {e}"
+                    ))
+                })?;
+                // Keep draining stdout in the background so the child
+                // never blocks on a full pipe.
+                std::thread::spawn(move || {
+                    let mut sink = String::new();
+                    while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+                        sink.clear();
+                    }
+                });
+                return Ok(ShardHandle::Process { child, addr });
+            }
+        }
+    }
+}
+
+/// One pooled shard connection after a successful handshake.
+struct Connection {
+    stream: TcpStream,
+    version: u16,
+}
+
+struct Slot {
+    handle: Option<ShardHandle>,
+    conn: Option<Connection>,
+}
+
+/// FNV-1a 64-bit.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Hash the first `prefix` (smallest) evidence variables — the affinity
+/// signature. States are deliberately excluded: `X=0` and `X=1` share
+/// cached junction-tree structure, so they belong on the same shard.
+fn signature_hash(evidence: &Evidence, prefix: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (v, _) in evidence.iter().take(prefix.max(1)) {
+        for b in (v as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The serving frontend over a fleet of shards.
+pub struct Frontend {
+    config: FabricConfig,
+    launcher: Box<dyn ShardLauncher>,
+    slots: Vec<Mutex<Slot>>,
+    /// Consistent-hash ring: sorted (point, shard index).
+    ring: Vec<(u64, usize)>,
+    rr: AtomicUsize,
+    next_id: AtomicU64,
+    fallback: Option<QueryRouter>,
+    metrics: Mutex<FabricMetrics>,
+}
+
+impl Frontend {
+    /// Launch `config.shards` shards via `launcher` and build the routing
+    /// ring. `specs` also seeds the in-process fallback router (when
+    /// enabled) so the frontend can answer even with every shard down.
+    pub fn new(
+        specs: Vec<ModelSpec>,
+        launcher: Box<dyn ShardLauncher>,
+        config: FabricConfig,
+    ) -> Result<Frontend, ServingError> {
+        if config.shards == 0 {
+            return Err(ServingError::Registration(
+                "fabric needs at least one shard".into(),
+            ));
+        }
+        let mut slots = Vec::with_capacity(config.shards);
+        for shard_id in 0..config.shards {
+            let handle = launcher.launch(shard_id as u32)?;
+            slots.push(Mutex::new(Slot { handle: Some(handle), conn: None }));
+        }
+        let mut ring = Vec::with_capacity(config.shards * config.virtual_nodes);
+        for shard in 0..config.shards {
+            for vnode in 0..config.virtual_nodes.max(1) {
+                let mut key = [0u8; 16];
+                key[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+                key[8..].copy_from_slice(&(vnode as u64).to_le_bytes());
+                ring.push((fnv1a(&key), shard));
+            }
+        }
+        ring.sort_unstable();
+        let fallback = if config.fallback {
+            let mut router = QueryRouter::new(config.pool_threads.max(1));
+            for spec in &specs {
+                router.register_with_approx(
+                    &spec.name,
+                    &spec.net,
+                    spec.engine,
+                    spec.batcher.clone(),
+                    spec.approx.clone(),
+                );
+            }
+            Some(router)
+        } else {
+            None
+        };
+        let metrics =
+            FabricMetrics { per_shard: vec![0; config.shards], ..Default::default() };
+        Ok(Frontend {
+            config,
+            launcher,
+            slots,
+            ring,
+            rr: AtomicUsize::new(0),
+            next_id: AtomicU64::new(1),
+            fallback,
+            metrics: Mutex::new(metrics),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Routing and recovery counters so far.
+    pub fn metrics(&self) -> FabricMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Which shard this request routes to (before any failover).
+    pub fn route(&self, request: &QueryRequest) -> usize {
+        match self.config.policy {
+            RoutingPolicy::RoundRobin => {
+                self.rr.fetch_add(1, Ordering::Relaxed) % self.slots.len()
+            }
+            RoutingPolicy::Affinity => {
+                let h = signature_hash(&request.evidence, self.config.affinity_prefix);
+                match self.ring.binary_search(&(h, usize::MAX)) {
+                    Ok(i) => self.ring[i].1,
+                    Err(i) if i < self.ring.len() => self.ring[i].1,
+                    Err(_) => self.ring[0].1,
+                }
+            }
+        }
+    }
+
+    /// Route, send, and answer one query. Never drops: walks the failure
+    /// ladder (redial → respawn + retry → in-process fallback) before
+    /// giving up with [`ServingError::ShardUnavailable`].
+    pub fn query_routed(
+        &self,
+        model: &str,
+        request: QueryRequest,
+    ) -> Result<RoutedReply, ServingError> {
+        let shard = self.route(&request);
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.queries += 1;
+            m.per_shard[shard] += 1;
+        }
+        match self.query_on_shard(shard, model, &request) {
+            Ok(reply) => Ok(reply),
+            Err(ServingError::ShardUnavailable(why)) => {
+                self.metrics.lock().unwrap().failovers += 1;
+                match self.respawn_and_retry(shard, model, &request) {
+                    Ok(reply) => Ok(reply),
+                    Err(_) => self.answer_from_fallback(model, request, &why),
+                }
+            }
+            Err(ServingError::Overloaded(why)) => {
+                // The shard is alive but full — shed to the fallback
+                // rather than queueing blind.
+                self.answer_from_fallback(model, request, &why)
+            }
+            Err(other) => Err(other),
+        }
+    }
+
+    /// Send `Drain` to every shard (rolling model reload). Returns how
+    /// many shards replaced an existing registration.
+    pub fn drain(&self, model: &str) -> Result<usize, ServingError> {
+        let mut replaced = 0;
+        for shard in 0..self.slots.len() {
+            let msg = Message::Drain { model: model.to_string() };
+            match self.exchange_on_shard(shard, &msg)? {
+                Message::DrainAck { replaced: r, .. } => replaced += usize::from(r),
+                other => {
+                    return Err(ServingError::Wire(format!(
+                        "unexpected drain response {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(replaced)
+    }
+
+    /// Per-shard serving/cache stats straight off the wire.
+    pub fn shard_stats(
+        &self,
+    ) -> Result<Vec<(u32, Vec<(String, QueryModelStats)>)>, ServingError> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for shard in 0..self.slots.len() {
+            match self.exchange_on_shard(shard, &Message::StatsRequest)? {
+                Message::StatsReply { shard_id, per_model } => {
+                    out.push((shard_id, per_model));
+                }
+                other => {
+                    return Err(ServingError::Wire(format!(
+                        "unexpected stats response {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fleet view: per-model stats merged across every shard.
+    pub fn stats(&self) -> Result<Vec<(String, QueryModelStats)>, ServingError> {
+        let mut merged: HashMap<String, QueryModelStats> = HashMap::new();
+        for (_, per_model) in self.shard_stats()? {
+            for (name, stats) in per_model {
+                match merged.entry(name) {
+                    Entry::Vacant(slot) => {
+                        slot.insert(stats);
+                    }
+                    Entry::Occupied(mut slot) => {
+                        let acc = slot.get_mut();
+                        acc.serving.merge_from(&stats.serving);
+                        acc.cache.hits += stats.cache.hits;
+                        acc.cache.warm_starts += stats.cache.warm_starts;
+                        acc.cache.cold_misses += stats.cache.cold_misses;
+                        acc.cache.evictions += stats.cache.evictions;
+                        acc.cache.entries += stats.cache.entries;
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(String, QueryModelStats)> = merged.into_iter().collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
+
+    /// Chaos hook: kill a shard abruptly (connection resets, dead port).
+    /// The next query routed there walks the failure ladder.
+    pub fn kill_shard(&self, shard: usize) {
+        let mut slot = self.slots[shard].lock().unwrap();
+        if let Some(conn) = slot.conn.take() {
+            let _ = conn.stream.shutdown(NetShutdown::Both);
+        }
+        if let Some(handle) = slot.handle.as_mut() {
+            handle.kill();
+        }
+    }
+
+    /// Orderly teardown: wire Shutdown to every shard, then join/reap.
+    pub fn shutdown(&self) {
+        for slot in &self.slots {
+            let mut slot = slot.lock().unwrap();
+            // Best-effort Shutdown over an existing or fresh connection.
+            let conn = slot.conn.take().or_else(|| {
+                slot.handle
+                    .as_ref()
+                    .and_then(|h| self.connect(h.addr()).ok())
+            });
+            if let Some(mut conn) = conn {
+                let ok = wire::write_frame(
+                    &mut conn.stream,
+                    conn.version,
+                    &Message::Shutdown,
+                )
+                .and_then(|()| wire::read_frame(&mut conn.stream));
+                let _ = ok;
+            }
+            if let Some(handle) = slot.handle.take() {
+                handle.finish();
+            }
+        }
+    }
+
+    // -- internals --------------------------------------------------------
+
+    fn connect(&self, addr: SocketAddr) -> Result<Connection, ServingError> {
+        let stream = TcpStream::connect_timeout(&addr, self.config.connect_timeout)
+            .map_err(|e| {
+                ServingError::ShardUnavailable(format!("dial {addr}: {e}"))
+            })?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(self.config.io_timeout));
+        let _ = stream.set_write_timeout(Some(self.config.io_timeout));
+        let mut conn = Connection { stream, version: PROTOCOL_VERSION };
+        wire::write_frame(
+            &mut conn.stream,
+            PROTOCOL_VERSION,
+            &Message::Hello {
+                min_version: MIN_SUPPORTED_VERSION,
+                max_version: PROTOCOL_VERSION,
+                client: "fastpgm-frontend".into(),
+            },
+        )
+        .map_err(|e| ServingError::ShardUnavailable(format!("handshake: {e}")))?;
+        match wire::read_frame(&mut conn.stream) {
+            Ok((_, Message::HelloAck { version: 0, .. })) => {
+                Err(ServingError::ProtocolMismatch {
+                    local_min: MIN_SUPPORTED_VERSION,
+                    local_max: PROTOCOL_VERSION,
+                    remote_min: 0,
+                    remote_max: 0,
+                })
+            }
+            Ok((_, Message::HelloAck { version, .. })) => {
+                conn.version = version;
+                Ok(conn)
+            }
+            Ok((_, other)) => Err(ServingError::Wire(format!(
+                "expected HelloAck, got {other:?}"
+            ))),
+            Err(e) => Err(ServingError::ShardUnavailable(format!("handshake: {e}"))),
+        }
+    }
+
+    /// One request/response round trip on a shard, with the stale-conn
+    /// redial: an I/O failure on a *pooled* connection is retried once on
+    /// a fresh dial before the shard is declared unavailable.
+    fn exchange_on_shard(
+        &self,
+        shard: usize,
+        msg: &Message,
+    ) -> Result<Message, ServingError> {
+        let mut slot = self.slots[shard].lock().unwrap();
+        let addr = match slot.handle.as_ref() {
+            Some(h) => h.addr(),
+            None => {
+                return Err(ServingError::ShardUnavailable(format!(
+                    "shard {shard} has no handle"
+                )))
+            }
+        };
+        let pooled = slot.conn.is_some();
+        let mut conn = match slot.conn.take() {
+            Some(c) => c,
+            None => self.connect(addr)?,
+        };
+        let attempt = wire::write_frame(&mut conn.stream, conn.version, msg)
+            .and_then(|()| wire::read_frame(&mut conn.stream));
+        match attempt {
+            Ok((_, reply)) => {
+                slot.conn = Some(conn);
+                Ok(reply)
+            }
+            Err(first_err) => {
+                drop(conn);
+                if !pooled {
+                    return Err(ServingError::ShardUnavailable(format!(
+                        "shard {shard}: {first_err}"
+                    )));
+                }
+                // The pooled connection may simply have idled out.
+                self.metrics.lock().unwrap().retried += 1;
+                let mut fresh = self.connect(addr)?;
+                match wire::write_frame(&mut fresh.stream, fresh.version, msg)
+                    .and_then(|()| wire::read_frame(&mut fresh.stream))
+                {
+                    Ok((_, reply)) => {
+                        slot.conn = Some(fresh);
+                        Ok(reply)
+                    }
+                    Err(second_err) => Err(ServingError::ShardUnavailable(format!(
+                        "shard {shard}: {second_err}"
+                    ))),
+                }
+            }
+        }
+    }
+
+    fn query_on_shard(
+        &self,
+        shard: usize,
+        model: &str,
+        request: &QueryRequest,
+    ) -> Result<RoutedReply, ServingError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let msg = Message::Query {
+            id,
+            model: model.to_string(),
+            request: request.clone(),
+        };
+        match self.exchange_on_shard(shard, &msg)? {
+            Message::Reply { id: got, outcome } if got == id => outcome,
+            other => Err(ServingError::Wire(format!(
+                "expected reply to query {id}, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The supervisor: replace a dead shard's handle via the launcher and
+    /// retry the query there once.
+    fn respawn_and_retry(
+        &self,
+        shard: usize,
+        model: &str,
+        request: &QueryRequest,
+    ) -> Result<RoutedReply, ServingError> {
+        {
+            let mut slot = self.slots[shard].lock().unwrap();
+            if let Some(old) = slot.handle.as_mut() {
+                old.kill();
+            }
+            slot.conn = None;
+            slot.handle = Some(self.launcher.launch(shard as u32)?);
+        }
+        self.metrics.lock().unwrap().respawns += 1;
+        self.query_on_shard(shard, model, request)
+    }
+
+    fn answer_from_fallback(
+        &self,
+        model: &str,
+        request: QueryRequest,
+        why: &str,
+    ) -> Result<RoutedReply, ServingError> {
+        match &self.fallback {
+            Some(router) => {
+                self.metrics.lock().unwrap().fallback_answers += 1;
+                router.query_routed(model, request)
+            }
+            None => Err(ServingError::ShardUnavailable(format!(
+                "{why} (and no in-process fallback is configured)"
+            ))),
+        }
+    }
+}
+
+impl Drop for Frontend {
+    fn drop(&mut self) {
+        // Anything shutdown() did not already reap dies abruptly here so
+        // no shard process outlives its frontend.
+        for slot in &self.slots {
+            if let Ok(mut slot) = slot.lock() {
+                if let Some(handle) = slot.handle.as_mut() {
+                    handle.kill();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signature_hash_prefix_colocates_nested_evidence() {
+        let base = Evidence::new().with(2, 1);
+        let grown = base.clone().with(5, 0).with(7, 1);
+        let more = grown.clone().with(9, 0);
+        let h = |e: &Evidence| signature_hash(e, 1);
+        assert_eq!(h(&base), h(&grown));
+        assert_eq!(h(&grown), h(&more));
+        // A different smallest variable hashes elsewhere.
+        let other = Evidence::new().with(3, 1);
+        assert_ne!(h(&base), h(&other));
+        // States do not influence the signature.
+        assert_eq!(
+            signature_hash(&Evidence::new().with(2, 0), 2),
+            signature_hash(&Evidence::new().with(2, 1), 2)
+        );
+    }
+
+    #[test]
+    fn ring_routing_is_deterministic_and_covers_shards() {
+        let specs = vec![];
+        // No launcher call happens with shards=0 → error instead.
+        let err = Frontend::new(
+            specs,
+            Box::new(ThreadLauncher::new(vec![])),
+            FabricConfig::new().with_shards(0),
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! The sharded serving fabric: horizontal scale-out for the query path.
+//!
+//! Three layers, bottom-up:
+//!
+//! * [`wire`] — the versioned length-prefixed binary protocol every
+//!   shard boundary speaks (spec: `docs/WIRE_PROTOCOL.md`).
+//! * [`ShardWorker`] — one serving shard: today's in-process
+//!   [`crate::coordinator::QueryRouter`] behind a TCP listener, with
+//!   bounded in-flight, per-connection timeouts, and wire-driven
+//!   drain-on-replace.
+//! * [`Frontend`] — launches and supervises N shards, routes each query
+//!   by consistent hashing on its evidence-signature prefix (so each
+//!   shard's warm-start calibration cache stays hot), and walks a
+//!   redial → respawn → in-process-fallback ladder so no query is ever
+//!   dropped.
+//!
+//! The CLI exposes this as `serve-query --fabric N`; tests and benches
+//! run the same wire traffic in-process via [`ThreadLauncher`].
+
+pub mod wire;
+
+mod frontend;
+mod shard;
+
+pub use frontend::{
+    FabricConfig, FabricMetrics, Frontend, ProcessLauncher, RoutingPolicy,
+    ShardHandle, ShardLauncher, ThreadLauncher, SHARD_READY_PREFIX,
+};
+pub use shard::{ModelSpec, ShardConfig, ShardWorker};

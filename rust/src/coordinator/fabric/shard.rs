@@ -1,0 +1,641 @@
+//! One fabric shard: today's [`QueryRouter`] behind a TCP listener.
+//!
+//! A [`ShardWorker`] owns a router (and the specs needed to rebuild each
+//! model), accepts connections on a loopback port, and answers wire-framed
+//! [`Message`]s: queries, stats, drain-on-replace, shutdown. It runs
+//! either inside a dedicated `--shard` process (the fabric CLI path) or
+//! in-process on a real TCP socket (tests and benches, via the thread
+//! launcher) — the wire traffic is identical.
+
+use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
+use crate::coordinator::{
+    ApproxConfig, BatcherConfig, QueryRequest, QueryRouter, RoutedReply, ServingError,
+};
+use crate::inference::exact::QueryEngineConfig;
+use crate::network::BayesianNetwork;
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Everything needed to (re)build one served model: the network plus its
+/// serving configuration. Shards keep their specs so a [`Message::Drain`]
+/// can re-register the model fresh (new engine, cold caches) — the wire
+/// extension of the router's drain-on-replace hot reload.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub net: BayesianNetwork,
+    pub engine: QueryEngineConfig,
+    pub batcher: BatcherConfig,
+    pub approx: ApproxConfig,
+}
+
+impl ModelSpec {
+    /// A spec with default serving configuration.
+    pub fn new(name: impl Into<String>, net: BayesianNetwork) -> ModelSpec {
+        ModelSpec {
+            name: name.into(),
+            net,
+            engine: QueryEngineConfig::default(),
+            batcher: BatcherConfig::default(),
+            approx: ApproxConfig::default(),
+        }
+    }
+
+    /// Set the exact-engine configuration.
+    pub fn with_engine(mut self, engine: QueryEngineConfig) -> ModelSpec {
+        self.engine = engine;
+        self
+    }
+
+    /// Set the batching policy.
+    pub fn with_batcher(mut self, batcher: BatcherConfig) -> ModelSpec {
+        self.batcher = batcher;
+        self
+    }
+
+    /// Set the approximate-tier configuration.
+    pub fn with_approx(mut self, approx: ApproxConfig) -> ModelSpec {
+        self.approx = approx;
+        self
+    }
+}
+
+/// Tuning knobs for one shard worker.
+///
+/// `#[non_exhaustive]`: construct via [`ShardConfig::new`] (or `Default`)
+/// and the `with_*` builders.
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub struct ShardConfig {
+    /// Per-connection read/write timeout. A connection idle past this is
+    /// closed; the frontend transparently redials.
+    pub io_timeout: Duration,
+    /// Bound on concurrently served queries; excess requests get an
+    /// immediate [`ServingError::Overloaded`] reply instead of queueing
+    /// without limit.
+    pub max_inflight: usize,
+    /// Calibration [`crate::parallel::WorkPool`] width for this shard's
+    /// router.
+    pub pool_threads: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            io_timeout: Duration::from_secs(30),
+            max_inflight: 256,
+            pool_threads: 2,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// The defaults — start here and chain `with_*` calls.
+    pub fn new() -> ShardConfig {
+        ShardConfig::default()
+    }
+
+    /// Set the per-connection read/write timeout.
+    pub fn with_io_timeout(mut self, io_timeout: Duration) -> ShardConfig {
+        self.io_timeout = io_timeout;
+        self
+    }
+
+    /// Set the in-flight query bound.
+    pub fn with_max_inflight(mut self, max_inflight: usize) -> ShardConfig {
+        self.max_inflight = max_inflight;
+        self
+    }
+
+    /// Set the calibration pool width.
+    pub fn with_pool_threads(mut self, pool_threads: usize) -> ShardConfig {
+        self.pool_threads = pool_threads;
+        self
+    }
+}
+
+/// Shared state between the accept loop and the per-connection handlers.
+struct ShardState {
+    shard_id: u32,
+    config: ShardConfig,
+    /// Read for queries/stats; write for drain-on-replace, so a reload
+    /// waits out in-flight queries instead of racing them.
+    router: RwLock<QueryRouter>,
+    specs: HashMap<String, ModelSpec>,
+    inflight: AtomicUsize,
+    stop: AtomicBool,
+    addr: SocketAddr,
+    /// Try-cloned handles of live connections — shut down to unblock
+    /// handler reads on stop, or abruptly on [`ShardWorker::abort`].
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+impl ShardState {
+    fn serve_query(
+        &self,
+        model: &str,
+        request: QueryRequest,
+    ) -> Result<RoutedReply, ServingError> {
+        let n = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if n >= self.config.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(ServingError::Overloaded(format!(
+                "shard {}: {} queries in flight (cap {})",
+                self.shard_id, n, self.config.max_inflight
+            )));
+        }
+        let out = self.router.read().unwrap().query_routed(model, request);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    /// Drain-on-replace: rebuild the model from its spec (the predecessor
+    /// service drains first inside `register_with_approx`, so no pending
+    /// query is dropped). Returns whether an existing registration was
+    /// replaced; an unknown model is a no-op `false`.
+    fn drain_model(&self, model: &str) -> bool {
+        match self.specs.get(model) {
+            Some(spec) => self.router.write().unwrap().register_with_approx(
+                &spec.name,
+                &spec.net,
+                spec.engine,
+                spec.batcher.clone(),
+                spec.approx.clone(),
+            ),
+            None => false,
+        }
+    }
+
+    /// Flag the worker stopped and poke the accept loop awake with a
+    /// throwaway self-connection.
+    fn begin_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+    }
+}
+
+/// A serving shard: accept loop + per-connection handler threads over one
+/// shared [`QueryRouter`].
+pub struct ShardWorker {
+    state: Arc<ShardState>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stopped: bool,
+}
+
+impl ShardWorker {
+    /// Register every spec into a fresh router, bind a loopback listener
+    /// on an ephemeral port, and start accepting.
+    pub fn spawn(
+        shard_id: u32,
+        specs: Vec<ModelSpec>,
+        config: ShardConfig,
+    ) -> Result<ShardWorker, ServingError> {
+        let mut router = QueryRouter::new(config.pool_threads.max(1));
+        let mut spec_map = HashMap::new();
+        for spec in specs {
+            router.register_with_approx(
+                &spec.name,
+                &spec.net,
+                spec.engine,
+                spec.batcher.clone(),
+                spec.approx.clone(),
+            );
+            spec_map.insert(spec.name.clone(), spec);
+        }
+        let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| {
+            ServingError::ShardUnavailable(format!("shard {shard_id}: bind failed: {e}"))
+        })?;
+        let addr = listener.local_addr().map_err(|e| {
+            ServingError::ShardUnavailable(format!("shard {shard_id}: no local addr: {e}"))
+        })?;
+        let state = Arc::new(ShardState {
+            shard_id,
+            config,
+            router: RwLock::new(router),
+            specs: spec_map,
+            inflight: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            addr,
+            conns: Mutex::new(Vec::new()),
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let state = Arc::clone(&state);
+            let handlers = Arc::clone(&handlers);
+            std::thread::Builder::new()
+                .name(format!("fastpgm-shard-{shard_id}-accept"))
+                .spawn(move || accept_loop(listener, state, handlers))
+                .map_err(|e| {
+                    ServingError::ShardUnavailable(format!(
+                        "shard {shard_id}: spawn failed: {e}"
+                    ))
+                })?
+        };
+        Ok(ShardWorker { state, accept: Some(accept), handlers, stopped: false })
+    }
+
+    /// The address clients dial.
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    pub fn shard_id(&self) -> u32 {
+        self.state.shard_id
+    }
+
+    /// Whether the worker has been told to stop (locally or by a wire
+    /// [`Message::Shutdown`]).
+    pub fn stop_requested(&self) -> bool {
+        self.state.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until a stop is requested (the `--shard` process main loop).
+    pub fn run_until_shutdown(&self) {
+        while !self.stop_requested() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Orderly stop: stop accepting, close connections, join every
+    /// thread. Registered services drain on drop.
+    pub fn stop(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        self.state.begin_stop();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        self.close_conns();
+        self.join_handlers();
+    }
+
+    /// Abrupt death for fault-injection tests: connections are reset
+    /// mid-whatever and the port stops accepting — from a client's view
+    /// this is indistinguishable from a crash.
+    pub fn abort(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        self.state.stop.store(true, Ordering::SeqCst);
+        self.close_conns();
+        // Unblock the accept loop so the listener drops and the port dies.
+        let _ =
+            TcpStream::connect_timeout(&self.state.addr, Duration::from_millis(200));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        self.join_handlers();
+    }
+
+    fn close_conns(&self) {
+        for c in self.state.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn join_handlers(&self) {
+        let drained: Vec<JoinHandle<()>> =
+            self.handlers.lock().unwrap().drain(..).collect();
+        for h in drained {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    state: Arc<ShardState>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(state.config.io_timeout));
+        let _ = stream.set_write_timeout(Some(state.config.io_timeout));
+        if let Ok(clone) = stream.try_clone() {
+            state.conns.lock().unwrap().push(clone);
+        }
+        let st = Arc::clone(&state);
+        let handle = std::thread::Builder::new()
+            .name(format!("fastpgm-shard-{}-conn", state.shard_id))
+            .spawn(move || handle_conn(stream, st));
+        if let Ok(h) = handle {
+            handlers.lock().unwrap().push(h);
+        }
+    }
+}
+
+/// Serve one connection: version handshake, then a request/reply loop
+/// until the peer disconnects, times out, or the shard stops.
+fn handle_conn(mut stream: TcpStream, state: Arc<ShardState>) {
+    // Handshake: the first frame must be a Hello.
+    let (remote_min, remote_max) = match wire::read_frame(&mut stream) {
+        Ok((_, Message::Hello { min_version, max_version, .. })) => {
+            (min_version, max_version)
+        }
+        _ => return,
+    };
+    let version = match wire::negotiate(
+        (MIN_SUPPORTED_VERSION, PROTOCOL_VERSION),
+        (remote_min, remote_max),
+    ) {
+        Ok(v) => v,
+        Err(_) => {
+            // Version 0 = refusal; the client maps it to ProtocolMismatch.
+            let _ = wire::write_frame(
+                &mut stream,
+                PROTOCOL_VERSION,
+                &Message::HelloAck {
+                    version: 0,
+                    shard_id: state.shard_id,
+                    models: Vec::new(),
+                },
+            );
+            return;
+        }
+    };
+    let models: Vec<String> = state
+        .router
+        .read()
+        .unwrap()
+        .models()
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    if wire::write_frame(
+        &mut stream,
+        version,
+        &Message::HelloAck { version, shard_id: state.shard_id, models },
+    )
+    .is_err()
+    {
+        return;
+    }
+
+    loop {
+        if state.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let (got_version, msg) = match wire::read_frame(&mut stream) {
+            Ok(x) => x,
+            Err(_) => return, // disconnect, timeout, or garbage — close
+        };
+        if wire::check_version(got_version, version).is_err() {
+            return;
+        }
+        let reply = match msg {
+            Message::Query { id, model, request } => {
+                let outcome = state.serve_query(&model, request);
+                Message::Reply { id, outcome }
+            }
+            Message::StatsRequest => Message::StatsReply {
+                shard_id: state.shard_id,
+                per_model: state.router.read().unwrap().stats(),
+            },
+            Message::Drain { model } => {
+                let replaced = state.drain_model(&model);
+                Message::DrainAck { model, replaced }
+            }
+            Message::Shutdown => {
+                let _ = wire::write_frame(&mut stream, version, &Message::ShutdownAck);
+                state.begin_stop();
+                return;
+            }
+            // Anything else is a protocol violation from a client.
+            _ => return,
+        };
+        if wire::write_frame(&mut stream, version, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Evidence;
+    use crate::coordinator::{QueryReply, QueryTarget};
+    use crate::network::repository;
+
+    fn dial(addr: SocketAddr) -> (TcpStream, u16) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        stream.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+        handshake(stream)
+    }
+
+    fn handshake(mut stream: TcpStream) -> (TcpStream, u16) {
+        wire::write_frame(
+            &mut stream,
+            PROTOCOL_VERSION,
+            &Message::Hello {
+                min_version: MIN_SUPPORTED_VERSION,
+                max_version: PROTOCOL_VERSION,
+                client: "test".into(),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut stream).unwrap() {
+            (_, Message::HelloAck { version, .. }) => {
+                assert_ne!(version, 0, "handshake refused");
+                (stream, version)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn worker() -> ShardWorker {
+        ShardWorker::spawn(
+            0,
+            vec![ModelSpec::new("asia", repository::asia())],
+            ShardConfig::new().with_io_timeout(Duration::from_secs(5)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_queries_over_tcp() {
+        let w = worker();
+        let (mut s, v) = dial(w.addr());
+        let request = QueryRequest::marginal(5, Evidence::new().with(0, 1));
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query { id: 1, model: "asia".into(), request },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 1, outcome: Ok(r) }) => {
+                let p = r.into_marginal().unwrap();
+                assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn typed_errors_cross_the_wire() {
+        let w = worker();
+        let (mut s, v) = dial(w.addr());
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 2,
+                model: "nope".into(),
+                request: QueryRequest::all(Evidence::new()),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 2, outcome: Err(e) }) => {
+                assert_eq!(e, ServingError::ModelNotFound("nope".into()));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Invalid query variable → InvalidQuery, not a dropped connection.
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 3,
+                model: "asia".into(),
+                request: QueryRequest {
+                    evidence: Evidence::new(),
+                    target: QueryTarget::Marginal(99),
+                    qos: Default::default(),
+                },
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 3, outcome: Err(ServingError::InvalidQuery(m)) }) => {
+                assert!(m.contains("99"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_replaces_and_stats_report() {
+        let w = worker();
+        let (mut s, v) = dial(w.addr());
+        // Warm the model with a query so stats are non-empty.
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 1,
+                model: "asia".into(),
+                request: QueryRequest::all(Evidence::new().with(0, 1)),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { outcome: Ok(r), .. }) => match r.reply {
+                QueryReply::All(ps) => assert_eq!(ps.len(), 8),
+                other => panic!("unexpected {other:?}"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+        wire::write_frame(&mut s, v, &Message::StatsRequest).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::StatsReply { shard_id: 0, per_model }) => {
+                assert_eq!(per_model.len(), 1);
+                assert_eq!(per_model[0].0, "asia");
+                assert_eq!(per_model[0].1.serving.requests, 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Drain: the model is rebuilt (replaced=true), unknown names are
+        // no-ops, and the fresh service still answers.
+        wire::write_frame(&mut s, v, &Message::Drain { model: "asia".into() }).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::DrainAck { replaced, .. }) => assert!(replaced),
+            other => panic!("unexpected {other:?}"),
+        }
+        wire::write_frame(&mut s, v, &Message::Drain { model: "nope".into() }).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::DrainAck { replaced, .. }) => assert!(!replaced),
+            other => panic!("unexpected {other:?}"),
+        }
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 9,
+                model: "asia".into(),
+                request: QueryRequest::marginal(1, Evidence::new()),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 9, outcome: Ok(_) }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn incompatible_version_is_refused() {
+        let w = worker();
+        let mut s = TcpStream::connect(w.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        wire::write_frame(
+            &mut s,
+            99,
+            &Message::Hello { min_version: 99, max_version: 120, client: "test".into() },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::HelloAck { version: 0, .. }) => {}
+            other => panic!("expected refusal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_message_stops_worker() {
+        let w = worker();
+        let (mut s, v) = dial(w.addr());
+        wire::write_frame(&mut s, v, &Message::Shutdown).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::ShutdownAck) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        w.run_until_shutdown();
+        assert!(w.stop_requested());
+    }
+
+    #[test]
+    fn abort_resets_connections_and_port() {
+        let mut w = worker();
+        let addr = w.addr();
+        let (mut s, v) = dial(addr);
+        w.abort();
+        // The established connection dies...
+        let dead = wire::write_frame(&mut s, v, &Message::StatsRequest)
+            .and_then(|()| wire::read_frame(&mut s).map(|_| ()));
+        assert!(dead.is_err(), "aborted shard answered");
+        // ...and fresh dials are refused.
+        assert!(TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err());
+    }
+}

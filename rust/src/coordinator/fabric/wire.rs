@@ -1,0 +1,910 @@
+//! The fabric wire protocol: compact length-prefixed binary frames.
+//!
+//! Everything that crosses a shard boundary is one [`Message`] inside one
+//! frame. A frame is a fixed 12-byte header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"FPGM"
+//! 4       2     protocol version (LE u16) the frame is encoded under
+//! 6       1     message type tag
+//! 7       1     flags (must be zero in v1)
+//! 8       4     payload length (LE u32, <= MAX_PAYLOAD)
+//! 12      n     payload (message-type-specific field encoding)
+//! ```
+//!
+//! All integers are little-endian; `f64` travels as its IEEE-754 bit
+//! pattern (`to_bits`/`from_bits`), so posteriors round-trip bit-exactly —
+//! the loopback tests assert fabric replies equal in-process replies to
+//! 1e-12, and bit-exact floats make that 0.0. Strings are a `u32` length
+//! plus UTF-8 bytes. See `docs/WIRE_PROTOCOL.md` for the full message
+//! tables and the version policy.
+//!
+//! **Version negotiation**: a connection opens with `Hello` carrying the
+//! client's supported `[min, max]` version range (the Hello frame itself
+//! is stamped with the client's max). The shard answers `HelloAck` with
+//! the negotiated version — the highest version both ranges contain — or
+//! version `0` when the ranges do not overlap, which the client surfaces
+//! as [`ServingError::ProtocolMismatch`]. Every subsequent frame must be
+//! stamped with the negotiated version; anything else is rejected.
+
+use crate::coordinator::{
+    AnswerTier, QueryModelStats, QueryPriority, QueryQos, QueryReply, QueryRequest,
+    QueryTarget, RoutedReply, ServingError, ServingMetrics,
+};
+use crate::core::Evidence;
+use crate::inference::engine::SamplerKind;
+use crate::inference::exact::QueryEngineStats;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Newest protocol version this build speaks.
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Oldest protocol version this build still accepts.
+pub const MIN_SUPPORTED_VERSION: u16 = 1;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"FPGM";
+
+/// Hard cap on a frame payload — anything larger is rejected before
+/// allocation, so a garbage or hostile length field cannot OOM a peer.
+pub const MAX_PAYLOAD: usize = 16 * 1024 * 1024;
+
+/// Stats replies carry at most this many (most recent) latency samples per
+/// model, bounding frame size on long-lived shards.
+pub const MAX_WIRE_LATENCIES: usize = 65_536;
+
+/// Pick the highest protocol version both ranges contain.
+pub fn negotiate(
+    local: (u16, u16),
+    remote: (u16, u16),
+) -> Result<u16, ServingError> {
+    let hi = local.1.min(remote.1);
+    if hi >= local.0 && hi >= remote.0 {
+        Ok(hi)
+    } else {
+        Err(ServingError::ProtocolMismatch {
+            local_min: local.0,
+            local_max: local.1,
+            remote_min: remote.0,
+            remote_max: remote.1,
+        })
+    }
+}
+
+/// Every message that can cross the wire. Tags are append-only: a new
+/// protocol version may add message types but never renumber these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Connection opener: the client's supported version range.
+    Hello { min_version: u16, max_version: u16, client: String },
+    /// Handshake answer: negotiated version (0 = no common version) plus
+    /// the shard's registration info — its id and served model names.
+    HelloAck { version: u16, shard_id: u32, models: Vec<String> },
+    /// One posterior query against a named model.
+    Query { id: u64, model: String, request: QueryRequest },
+    /// The answer (or typed error) for the query with the same `id`.
+    Reply { id: u64, outcome: Result<RoutedReply, ServingError> },
+    /// Ask the shard for its per-model serving + cache stats.
+    StatsRequest,
+    StatsReply { shard_id: u32, per_model: Vec<(String, QueryModelStats)> },
+    /// Rolling reload: drain the named model's service and re-register it
+    /// fresh (new engine, cold caches) from the shard's spec.
+    Drain { model: String },
+    DrainAck { model: String, replaced: bool },
+    /// Orderly shutdown: the shard acks, stops accepting, and exits.
+    Shutdown,
+    ShutdownAck,
+}
+
+impl Message {
+    /// The header tag for this message type.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::HelloAck { .. } => 2,
+            Message::Query { .. } => 3,
+            Message::Reply { .. } => 4,
+            Message::StatsRequest => 5,
+            Message::StatsReply { .. } => 6,
+            Message::Drain { .. } => 7,
+            Message::DrainAck { .. } => 8,
+            Message::Shutdown => 9,
+            Message::ShutdownAck => 10,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitive encoders/decoders
+// ---------------------------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, x: u16) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    put_u64(buf, x.to_bits());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked reader over a frame payload. Every decode error is a
+/// [`ServingError::Wire`] naming what failed — truncated frames fail here,
+/// never by panicking.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ServingError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let slice = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(slice)
+            }
+            None => Err(ServingError::Wire(format!(
+                "truncated payload reading {what}: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ))),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, ServingError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, ServingError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ServingError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ServingError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, ServingError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A length-prefixed count, sanity-capped so a corrupt frame cannot
+    /// trigger a huge allocation before the bounds check catches it.
+    fn count(&mut self, what: &str) -> Result<usize, ServingError> {
+        let n = self.u32(what)? as usize;
+        // Every counted element is at least one byte, so a count larger
+        // than the remaining payload is corrupt.
+        if n > self.buf.len().saturating_sub(self.pos) {
+            return Err(ServingError::Wire(format!(
+                "corrupt count for {what}: {n} elements but only {} payload bytes left",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &str) -> Result<String, ServingError> {
+        let n = self.count(what)?;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ServingError::Wire(format!("non-UTF-8 string in {what}")))
+    }
+
+    fn finish(&self, what: &str) -> Result<(), ServingError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(ServingError::Wire(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain-type codecs
+// ---------------------------------------------------------------------------
+
+fn put_evidence(buf: &mut Vec<u8>, ev: &Evidence) {
+    put_u32(buf, ev.len() as u32);
+    for (v, s) in ev.iter() {
+        put_u32(buf, v as u32);
+        put_u32(buf, s as u32);
+    }
+}
+
+fn get_evidence(d: &mut Dec) -> Result<Evidence, ServingError> {
+    let n = d.count("evidence count")?;
+    let mut ev = Evidence::new();
+    for _ in 0..n {
+        let v = d.u32("evidence var")? as usize;
+        let s = d.u32("evidence state")? as usize;
+        ev.set(v, s);
+    }
+    Ok(ev)
+}
+
+fn put_request(buf: &mut Vec<u8>, req: &QueryRequest) {
+    put_evidence(buf, &req.evidence);
+    match req.target {
+        QueryTarget::Marginal(v) => {
+            buf.push(1);
+            put_u32(buf, v as u32);
+        }
+        QueryTarget::All => buf.push(2),
+        QueryTarget::EvidenceProbability => buf.push(3),
+    }
+    buf.push(match req.qos.priority {
+        QueryPriority::Interactive => 0,
+        QueryPriority::Batch => 1,
+    });
+    match req.qos.deadline {
+        Some(d) => {
+            buf.push(1);
+            put_u64(buf, d.as_micros() as u64);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn get_request(d: &mut Dec) -> Result<QueryRequest, ServingError> {
+    let evidence = get_evidence(d)?;
+    let target = match d.u8("query target tag")? {
+        1 => QueryTarget::Marginal(d.u32("marginal var")? as usize),
+        2 => QueryTarget::All,
+        3 => QueryTarget::EvidenceProbability,
+        t => return Err(ServingError::Wire(format!("unknown query target tag {t}"))),
+    };
+    let priority = match d.u8("qos priority")? {
+        0 => QueryPriority::Interactive,
+        1 => QueryPriority::Batch,
+        t => return Err(ServingError::Wire(format!("unknown qos priority tag {t}"))),
+    };
+    let deadline = match d.u8("deadline tag")? {
+        0 => None,
+        1 => Some(Duration::from_micros(d.u64("deadline µs")?)),
+        t => return Err(ServingError::Wire(format!("unknown deadline tag {t}"))),
+    };
+    Ok(QueryRequest { evidence, target, qos: QueryQos { priority, deadline } })
+}
+
+fn put_posterior(buf: &mut Vec<u8>, p: &[f64]) {
+    put_u32(buf, p.len() as u32);
+    for &x in p {
+        put_f64(buf, x);
+    }
+}
+
+fn get_posterior(d: &mut Dec) -> Result<Vec<f64>, ServingError> {
+    let n = d.count("posterior length")?;
+    let mut p = Vec::with_capacity(n);
+    for _ in 0..n {
+        p.push(d.f64("posterior entry")?);
+    }
+    Ok(p)
+}
+
+/// Map a wire engine label back onto the `&'static str` the in-process API
+/// uses. The set of engines is closed within one build; a label from a
+/// newer peer decodes as `"unknown"` rather than failing the frame.
+fn intern_engine(label: &str) -> &'static str {
+    if label == "exact" {
+        return "exact";
+    }
+    SamplerKind::ALL
+        .iter()
+        .map(|k| k.name())
+        .find(|name| *name == label)
+        .unwrap_or("unknown")
+}
+
+/// Same closed-set interning for the serving kernel label.
+fn intern_kernel(label: &str) -> &'static str {
+    match label {
+        "fused" => "fused",
+        "classic" => "classic",
+        _ => "",
+    }
+}
+
+fn put_routed_reply(buf: &mut Vec<u8>, r: &RoutedReply) {
+    buf.push(match r.tier {
+        AnswerTier::Exact => 0,
+        AnswerTier::Approx => 1,
+    });
+    put_str(buf, r.engine);
+    match &r.reply {
+        QueryReply::Marginal(p) => {
+            buf.push(1);
+            put_posterior(buf, p);
+        }
+        QueryReply::All(ps) => {
+            buf.push(2);
+            put_u32(buf, ps.len() as u32);
+            for p in ps {
+                put_posterior(buf, p);
+            }
+        }
+        QueryReply::EvidenceProbability(p) => {
+            buf.push(3);
+            put_f64(buf, *p);
+        }
+    }
+}
+
+fn get_routed_reply(d: &mut Dec) -> Result<RoutedReply, ServingError> {
+    let tier = match d.u8("answer tier")? {
+        0 => AnswerTier::Exact,
+        1 => AnswerTier::Approx,
+        t => return Err(ServingError::Wire(format!("unknown answer tier tag {t}"))),
+    };
+    let engine = intern_engine(&d.str("engine label")?);
+    let reply = match d.u8("reply tag")? {
+        1 => QueryReply::Marginal(get_posterior(d)?),
+        2 => {
+            let n = d.count("all-marginals count")?;
+            let mut ps = Vec::with_capacity(n);
+            for _ in 0..n {
+                ps.push(get_posterior(d)?);
+            }
+            QueryReply::All(ps)
+        }
+        3 => QueryReply::EvidenceProbability(d.f64("evidence probability")?),
+        t => return Err(ServingError::Wire(format!("unknown reply tag {t}"))),
+    };
+    Ok(RoutedReply { reply, tier, engine })
+}
+
+/// Uniform error layout — `code u16, slot_a u32, slot_b u32, detail str` —
+/// so peers can decode errors from codes they do not know.
+fn put_error(buf: &mut Vec<u8>, e: &ServingError) {
+    let (a, b) = e.wire_slots();
+    put_u16(buf, e.code());
+    put_u32(buf, a);
+    put_u32(buf, b);
+    put_str(buf, &e.detail());
+}
+
+fn get_error(d: &mut Dec) -> Result<ServingError, ServingError> {
+    let code = d.u16("error code")?;
+    let a = d.u32("error slot a")?;
+    let b = d.u32("error slot b")?;
+    let detail = d.str("error detail")?;
+    Ok(ServingError::from_wire(code, a, b, detail))
+}
+
+fn put_metrics(buf: &mut Vec<u8>, m: &ServingMetrics) {
+    put_u64(buf, m.requests as u64);
+    put_u64(buf, m.batches as u64);
+    put_u64(buf, m.exec_time_total.as_nanos() as u64);
+    put_u64(buf, m.exact_requests as u64);
+    put_u64(buf, m.approx_requests as u64);
+    put_u64(buf, m.warm_starts as u64);
+    put_u64(buf, m.cold_misses as u64);
+    put_str(buf, m.kernel);
+    let lat = m.latencies_us();
+    let tail = &lat[lat.len().saturating_sub(MAX_WIRE_LATENCIES)..];
+    put_u32(buf, tail.len() as u32);
+    for &us in tail {
+        put_u64(buf, us);
+    }
+}
+
+fn get_metrics(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
+    let requests = d.u64("metrics requests")? as usize;
+    let batches = d.u64("metrics batches")? as usize;
+    let exec_time_total = Duration::from_nanos(d.u64("metrics exec ns")?);
+    let exact_requests = d.u64("metrics exact")? as usize;
+    let approx_requests = d.u64("metrics approx")? as usize;
+    let warm_starts = d.u64("metrics warm starts")? as usize;
+    let cold_misses = d.u64("metrics cold misses")? as usize;
+    let kernel = intern_kernel(&d.str("metrics kernel")?);
+    let n = d.count("metrics latency count")?;
+    let mut latencies_us = Vec::with_capacity(n);
+    for _ in 0..n {
+        latencies_us.push(d.u64("metrics latency")?);
+    }
+    Ok(ServingMetrics::from_wire_parts(
+        requests,
+        batches,
+        exec_time_total,
+        exact_requests,
+        approx_requests,
+        warm_starts,
+        cold_misses,
+        kernel,
+        latencies_us,
+    ))
+}
+
+fn put_cache_stats(buf: &mut Vec<u8>, c: &QueryEngineStats) {
+    put_u64(buf, c.hits);
+    put_u64(buf, c.warm_starts);
+    put_u64(buf, c.cold_misses);
+    put_u64(buf, c.evictions);
+    put_u64(buf, c.entries as u64);
+}
+
+fn get_cache_stats(d: &mut Dec) -> Result<QueryEngineStats, ServingError> {
+    Ok(QueryEngineStats {
+        hits: d.u64("cache hits")?,
+        warm_starts: d.u64("cache warm starts")?,
+        cold_misses: d.u64("cache cold misses")?,
+        evictions: d.u64("cache evictions")?,
+        entries: d.u64("cache entries")? as usize,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Message codec + framing
+// ---------------------------------------------------------------------------
+
+/// Encode one message payload (header excluded).
+pub fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match msg {
+        Message::Hello { min_version, max_version, client } => {
+            put_u16(&mut buf, *min_version);
+            put_u16(&mut buf, *max_version);
+            put_str(&mut buf, client);
+        }
+        Message::HelloAck { version, shard_id, models } => {
+            put_u16(&mut buf, *version);
+            put_u32(&mut buf, *shard_id);
+            put_u32(&mut buf, models.len() as u32);
+            for m in models {
+                put_str(&mut buf, m);
+            }
+        }
+        Message::Query { id, model, request } => {
+            put_u64(&mut buf, *id);
+            put_str(&mut buf, model);
+            put_request(&mut buf, request);
+        }
+        Message::Reply { id, outcome } => {
+            put_u64(&mut buf, *id);
+            match outcome {
+                Ok(r) => {
+                    buf.push(0);
+                    put_routed_reply(&mut buf, r);
+                }
+                Err(e) => {
+                    buf.push(1);
+                    put_error(&mut buf, e);
+                }
+            }
+        }
+        Message::StatsRequest | Message::Shutdown | Message::ShutdownAck => {}
+        Message::StatsReply { shard_id, per_model } => {
+            put_u32(&mut buf, *shard_id);
+            put_u32(&mut buf, per_model.len() as u32);
+            for (name, stats) in per_model {
+                put_str(&mut buf, name);
+                put_metrics(&mut buf, &stats.serving);
+                put_cache_stats(&mut buf, &stats.cache);
+            }
+        }
+        Message::Drain { model } => put_str(&mut buf, model),
+        Message::DrainAck { model, replaced } => {
+            put_str(&mut buf, model);
+            buf.push(*replaced as u8);
+        }
+    }
+    buf
+}
+
+/// Decode one message payload given its header tag.
+pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message, ServingError> {
+    let mut d = Dec::new(payload);
+    let msg = match tag {
+        1 => Message::Hello {
+            min_version: d.u16("hello min version")?,
+            max_version: d.u16("hello max version")?,
+            client: d.str("hello client")?,
+        },
+        2 => {
+            let version = d.u16("helloack version")?;
+            let shard_id = d.u32("helloack shard id")?;
+            let n = d.count("helloack model count")?;
+            let mut models = Vec::with_capacity(n);
+            for _ in 0..n {
+                models.push(d.str("helloack model name")?);
+            }
+            Message::HelloAck { version, shard_id, models }
+        }
+        3 => Message::Query {
+            id: d.u64("query id")?,
+            model: d.str("query model")?,
+            request: get_request(&mut d)?,
+        },
+        4 => {
+            let id = d.u64("reply id")?;
+            let outcome = match d.u8("reply outcome tag")? {
+                0 => Ok(get_routed_reply(&mut d)?),
+                1 => Err(get_error(&mut d)?),
+                t => {
+                    return Err(ServingError::Wire(format!(
+                        "unknown reply outcome tag {t}"
+                    )))
+                }
+            };
+            Message::Reply { id, outcome }
+        }
+        5 => Message::StatsRequest,
+        6 => {
+            let shard_id = d.u32("statsreply shard id")?;
+            let n = d.count("statsreply model count")?;
+            let mut per_model = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = d.str("statsreply model name")?;
+                let serving = get_metrics(&mut d)?;
+                let cache = get_cache_stats(&mut d)?;
+                per_model.push((name, QueryModelStats { serving, cache }));
+            }
+            Message::StatsReply { shard_id, per_model }
+        }
+        7 => Message::Drain { model: d.str("drain model")? },
+        8 => Message::DrainAck {
+            model: d.str("drainack model")?,
+            replaced: d.u8("drainack replaced")? != 0,
+        },
+        9 => Message::Shutdown,
+        10 => Message::ShutdownAck,
+        t => return Err(ServingError::Wire(format!("unknown message type tag {t}"))),
+    };
+    d.finish("message payload")?;
+    Ok(msg)
+}
+
+/// Serialize one framed message into a byte vector.
+pub fn encode_frame(version: u16, msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    debug_assert!(payload.len() <= MAX_PAYLOAD, "oversized frame payload");
+    let mut frame = Vec::with_capacity(12 + payload.len());
+    frame.extend_from_slice(&MAGIC);
+    frame.extend_from_slice(&version.to_le_bytes());
+    frame.push(msg.tag());
+    frame.push(0); // flags: must be zero in v1
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Write one framed message.
+pub fn write_frame(
+    w: &mut impl Write,
+    version: u16,
+    msg: &Message,
+) -> Result<(), ServingError> {
+    let frame = encode_frame(version, msg);
+    w.write_all(&frame)
+        .and_then(|()| w.flush())
+        .map_err(|e| ServingError::Wire(format!("write failed: {e}")))
+}
+
+/// Read one framed message, returning the version the frame was stamped
+/// with alongside the decoded message. Rejects bad magic, nonzero flags,
+/// oversized payloads and truncation.
+pub fn read_frame(r: &mut impl Read) -> Result<(u16, Message), ServingError> {
+    let mut header = [0u8; 12];
+    r.read_exact(&mut header)
+        .map_err(|e| ServingError::Wire(format!("read header failed: {e}")))?;
+    if header[0..4] != MAGIC {
+        return Err(ServingError::Wire(format!(
+            "bad magic {:02x}{:02x}{:02x}{:02x}",
+            header[0], header[1], header[2], header[3]
+        )));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    let tag = header[6];
+    if header[7] != 0 {
+        return Err(ServingError::Wire(format!("nonzero flags byte {}", header[7])));
+    }
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ServingError::Wire(format!(
+            "payload length {len} exceeds cap {MAX_PAYLOAD}"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| ServingError::Wire(format!("read payload failed: {e}")))?;
+    let msg = decode_payload(tag, &payload)?;
+    Ok((version, msg))
+}
+
+/// Enforce that a received frame carries the expected (negotiated)
+/// protocol version.
+pub fn check_version(got: u16, expected: u16) -> Result<(), ServingError> {
+    if got == expected {
+        Ok(())
+    } else {
+        Err(ServingError::ProtocolMismatch {
+            local_min: expected,
+            local_max: expected,
+            remote_min: got,
+            remote_max: got,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(msg: Message) -> Message {
+        let frame = encode_frame(PROTOCOL_VERSION, &msg);
+        let (version, back) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(version, PROTOCOL_VERSION);
+        back
+    }
+
+    fn sample_request() -> QueryRequest {
+        QueryRequest::marginal(3, Evidence::new().with(0, 1).with(7, 2))
+            .batch_priority()
+            .with_deadline(Duration::from_millis(40))
+    }
+
+    #[test]
+    fn round_trip_handshake_messages() {
+        for msg in [
+            Message::Hello { min_version: 1, max_version: 1, client: "frontend".into() },
+            Message::HelloAck {
+                version: 1,
+                shard_id: 7,
+                models: vec!["asia".into(), "alarm_like".into()],
+            },
+            Message::StatsRequest,
+            Message::Drain { model: "asia".into() },
+            Message::DrainAck { model: "asia".into(), replaced: true },
+            Message::Shutdown,
+            Message::ShutdownAck,
+        ] {
+            assert_eq!(round_trip(msg.clone()), msg);
+        }
+    }
+
+    #[test]
+    fn round_trip_query_and_replies() {
+        let q = Message::Query { id: 42, model: "asia".into(), request: sample_request() };
+        assert_eq!(round_trip(q.clone()), q);
+
+        let replies = [
+            QueryReply::Marginal(vec![0.25, 0.75]),
+            QueryReply::All(vec![vec![0.5, 0.5], vec![0.1, 0.2, 0.7]]),
+            QueryReply::EvidenceProbability(1.0e-17),
+        ];
+        for reply in replies {
+            let msg = Message::Reply {
+                id: u64::MAX,
+                outcome: Ok(RoutedReply {
+                    reply,
+                    tier: AnswerTier::Exact,
+                    engine: "exact",
+                }),
+            };
+            assert_eq!(round_trip(msg.clone()), msg);
+        }
+        // Every typed error crosses the wire intact inside a Reply.
+        let err = Message::Reply {
+            id: 9,
+            outcome: Err(ServingError::ModelNotFound("nope".into())),
+        };
+        assert_eq!(round_trip(err.clone()), err);
+    }
+
+    #[test]
+    fn round_trip_extreme_values() {
+        // Empty evidence, huge state index, empty posterior, NaN-free
+        // extreme floats, and subnormal probabilities all survive.
+        let empty_ev = Message::Query {
+            id: 0,
+            model: String::new(),
+            request: QueryRequest::all(Evidence::new()),
+        };
+        assert_eq!(round_trip(empty_ev.clone()), empty_ev);
+
+        let extreme = Message::Query {
+            id: 1,
+            model: "m".into(),
+            request: QueryRequest::evidence_probability(
+                Evidence::new().with(u32::MAX as usize, u32::MAX as usize),
+            ),
+        };
+        assert_eq!(round_trip(extreme.clone()), extreme);
+
+        let tiny = Message::Reply {
+            id: 2,
+            outcome: Ok(RoutedReply {
+                reply: QueryReply::Marginal(vec![
+                    f64::MIN_POSITIVE,
+                    1.0 - f64::EPSILON,
+                    5e-324, // subnormal
+                    0.0,
+                ]),
+                tier: AnswerTier::Approx,
+                engine: "likelihood-weighting",
+            }),
+        };
+        // Bit-exact: compare the decoded bits, not just PartialEq.
+        match round_trip(tiny.clone()) {
+            Message::Reply { outcome: Ok(r), .. } => match (&r.reply, &tiny) {
+                (
+                    QueryReply::Marginal(got),
+                    Message::Reply {
+                        outcome:
+                            Ok(RoutedReply { reply: QueryReply::Marginal(want), .. }),
+                        ..
+                    },
+                ) => {
+                    for (g, w) in got.iter().zip(want) {
+                        assert_eq!(g.to_bits(), w.to_bits());
+                    }
+                }
+                _ => panic!("wrong shape"),
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_trip_stats() {
+        let mut serving = ServingMetrics::default();
+        serving.record_batch(5, Duration::from_micros(123));
+        serving.record_latency(Duration::from_micros(250));
+        serving.record_latency_us(999);
+        serving.exact_requests = 4;
+        serving.approx_requests = 1;
+        serving.warm_starts = 2;
+        serving.cold_misses = 1;
+        serving.kernel = "fused";
+        let cache = QueryEngineStats {
+            hits: 10,
+            warm_starts: 2,
+            cold_misses: 1,
+            evictions: 3,
+            entries: 4,
+        };
+        let msg = Message::StatsReply {
+            shard_id: 3,
+            per_model: vec![("asia".into(), QueryModelStats { serving, cache })],
+        };
+        match round_trip(msg) {
+            Message::StatsReply { shard_id, per_model } => {
+                assert_eq!(shard_id, 3);
+                let (name, stats) = &per_model[0];
+                assert_eq!(name, "asia");
+                assert_eq!(stats.serving.requests, 5);
+                assert_eq!(stats.serving.batches, 1);
+                assert_eq!(stats.serving.exact_requests, 4);
+                assert_eq!(stats.serving.approx_requests, 1);
+                assert_eq!(stats.serving.warm_starts, 2);
+                assert_eq!(stats.serving.cold_misses, 1);
+                assert_eq!(stats.serving.kernel, "fused");
+                assert_eq!(stats.serving.latencies_us(), &[250, 999]);
+                assert_eq!(stats.cache, cache);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_rejected() {
+        let msg = Message::Query { id: 7, model: "asia".into(), request: sample_request() };
+        let frame = encode_frame(PROTOCOL_VERSION, &msg);
+        // Every strict prefix must fail cleanly (header or payload read,
+        // or payload decode), never panic or succeed.
+        for cut in 0..frame.len() {
+            let err = read_frame(&mut &frame[..cut]).unwrap_err();
+            match err {
+                ServingError::Wire(_) => {}
+                other => panic!("cut at {cut}: unexpected {other:?}"),
+            }
+        }
+        // The full frame still parses.
+        assert_eq!(read_frame(&mut frame.as_slice()).unwrap().1, msg);
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let msg = Message::StatsRequest;
+        let mut bad_magic = encode_frame(PROTOCOL_VERSION, &msg);
+        bad_magic[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut bad_magic.as_slice()),
+            Err(ServingError::Wire(_))
+        ));
+
+        let mut bad_flags = encode_frame(PROTOCOL_VERSION, &msg);
+        bad_flags[7] = 1;
+        assert!(matches!(
+            read_frame(&mut bad_flags.as_slice()),
+            Err(ServingError::Wire(_))
+        ));
+
+        let mut bad_tag = encode_frame(PROTOCOL_VERSION, &msg);
+        bad_tag[6] = 200;
+        assert!(matches!(
+            read_frame(&mut bad_tag.as_slice()),
+            Err(ServingError::Wire(_))
+        ));
+
+        let mut huge_len = encode_frame(PROTOCOL_VERSION, &msg);
+        huge_len[8..12].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut huge_len.as_slice()),
+            Err(ServingError::Wire(_))
+        ));
+
+        // Trailing garbage after a valid payload is rejected too.
+        let mut trailing = encode_frame(PROTOCOL_VERSION, &Message::Shutdown);
+        trailing.push(0xAB);
+        trailing[8..12].copy_from_slice(&1u32.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut trailing.as_slice()),
+            Err(ServingError::Wire(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_version_rejected_by_check() {
+        let frame = encode_frame(7, &Message::StatsRequest);
+        let (version, _) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(version, 7);
+        assert!(check_version(version, PROTOCOL_VERSION).is_err());
+        assert!(check_version(PROTOCOL_VERSION, PROTOCOL_VERSION).is_ok());
+    }
+
+    #[test]
+    fn negotiation_picks_highest_common() {
+        assert_eq!(negotiate((1, 3), (2, 5)), Ok(3));
+        assert_eq!(negotiate((2, 5), (1, 3)), Ok(3));
+        assert_eq!(negotiate((1, 1), (1, 1)), Ok(1));
+        match negotiate((1, 2), (3, 4)) {
+            Err(ServingError::ProtocolMismatch {
+                local_min: 1,
+                local_max: 2,
+                remote_min: 3,
+                remote_max: 4,
+            }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn engine_labels_intern_to_statics() {
+        assert_eq!(intern_engine("exact"), "exact");
+        assert_eq!(intern_engine("ais-bn"), "ais-bn");
+        assert_eq!(intern_engine("from-the-future"), "unknown");
+        assert_eq!(intern_kernel("fused"), "fused");
+        assert_eq!(intern_kernel(""), "");
+        assert_eq!(intern_kernel("simd"), "");
+    }
+}

@@ -3,7 +3,7 @@
 use std::time::Duration;
 
 /// Aggregated counters for one batcher.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ServingMetrics {
     pub requests: usize,
     pub batches: usize,
@@ -39,6 +39,64 @@ impl ServingMetrics {
 
     pub fn record_latency(&mut self, latency: Duration) {
         self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    /// Record an already-measured latency in microseconds (the wire
+    /// decoder's entry point — latencies cross the fabric as raw µs).
+    pub fn record_latency_us(&mut self, us: u64) {
+        self.latencies_us.push(us);
+    }
+
+    /// The raw recorded latencies in microseconds, unsorted (what the wire
+    /// encoder serializes so percentile math survives the hop intact).
+    pub fn latencies_us(&self) -> &[u64] {
+        &self.latencies_us
+    }
+
+    /// Rebuild a snapshot from its wire-decoded parts (fabric use only —
+    /// the latency vector is private, so the decoder cannot use a struct
+    /// literal).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_wire_parts(
+        requests: usize,
+        batches: usize,
+        exec_time_total: Duration,
+        exact_requests: usize,
+        approx_requests: usize,
+        warm_starts: usize,
+        cold_misses: usize,
+        kernel: &'static str,
+        latencies_us: Vec<u64>,
+    ) -> ServingMetrics {
+        ServingMetrics {
+            requests,
+            batches,
+            exec_time_total,
+            exact_requests,
+            approx_requests,
+            warm_starts,
+            cold_misses,
+            kernel,
+            latencies_us,
+        }
+    }
+
+    /// Fold another metrics snapshot into this one (the fabric frontend
+    /// aggregates per-shard metrics into a fleet view). Counters add,
+    /// latency samples concatenate; the kernel label is kept only when
+    /// both sides agree (mixed-kernel fleets report an empty label).
+    pub fn merge_from(&mut self, other: &ServingMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.exec_time_total += other.exec_time_total;
+        self.exact_requests += other.exact_requests;
+        self.approx_requests += other.approx_requests;
+        self.warm_starts += other.warm_starts;
+        self.cold_misses += other.cold_misses;
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        if self.kernel != other.kernel {
+            self.kernel = "";
+        }
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -142,6 +200,33 @@ mod tests {
         assert!(!m.summary().contains("kernel="));
         m.kernel = "fused";
         assert!(m.summary().contains("kernel=fused"));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_latencies() {
+        let mut a = ServingMetrics::default();
+        a.record_batch(4, Duration::from_millis(1));
+        a.record_latency(Duration::from_micros(100));
+        a.exact_requests = 4;
+        a.kernel = "fused";
+        let mut b = ServingMetrics::default();
+        b.record_batch(2, Duration::from_millis(3));
+        b.record_latency_us(300);
+        b.approx_requests = 2;
+        b.kernel = "fused";
+        a.merge_from(&b);
+        assert_eq!(a.requests, 6);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.exec_time_total, Duration::from_millis(4));
+        assert_eq!(a.exact_requests, 4);
+        assert_eq!(a.approx_requests, 2);
+        assert_eq!(a.latencies_us(), &[100, 300]);
+        assert_eq!(a.kernel, "fused");
+        // Mixed kernels blank the label.
+        let mut c = ServingMetrics::default();
+        c.kernel = "classic";
+        a.merge_from(&c);
+        assert_eq!(a.kernel, "");
     }
 
     #[test]

@@ -15,11 +15,19 @@
 //! the offline image, and none is needed at these request rates.
 
 mod batcher;
+mod error;
+pub mod fabric;
 mod metrics;
 mod query_router;
 mod router;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use error::ServingError;
+pub use fabric::{
+    FabricConfig, FabricMetrics, Frontend, ModelSpec, ProcessLauncher, RoutingPolicy,
+    ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ThreadLauncher,
+    SHARD_READY_PREFIX,
+};
 pub use metrics::ServingMetrics;
 pub use query_router::{
     AnswerTier, ApproxConfig, QueryModelStats, QueryPriority, QueryQos, QueryReply,

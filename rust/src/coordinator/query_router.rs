@@ -39,7 +39,7 @@ use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-use super::{BatcherConfig, ServingMetrics};
+use super::{BatcherConfig, ServingError, ServingMetrics};
 
 /// What a query asks for.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,7 +73,7 @@ pub struct QueryQos {
 }
 
 /// One posterior query.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct QueryRequest {
     pub evidence: Evidence,
     pub target: QueryTarget,
@@ -167,7 +167,12 @@ impl RoutedReply {
 }
 
 /// Configuration of the approximate tier and the shedding policy.
+///
+/// `#[non_exhaustive]`: construct via [`ApproxConfig::new`] (or
+/// `Default`) and the `with_*` builders, so wire-protocol versioning can
+/// add fields without breaking callers.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct ApproxConfig {
     /// Which tier(s) answer queries. The default, [`EngineChoice::Exact`],
     /// preserves the pre-existing exact-only behaviour.
@@ -206,6 +211,61 @@ impl Default for ApproxConfig {
             tight_deadline: Duration::from_millis(2),
             max_inflight_runs: 2,
         }
+    }
+}
+
+impl ApproxConfig {
+    /// The defaults (exact-only) — start here and chain `with_*` calls.
+    pub fn new() -> ApproxConfig {
+        ApproxConfig::default()
+    }
+
+    /// Set which tier(s) answer queries.
+    pub fn with_engine(mut self, engine: EngineChoice) -> ApproxConfig {
+        self.engine = engine;
+        self
+    }
+
+    /// Set the sampler the `Auto` policy sheds to.
+    pub fn with_kind(mut self, kind: SamplerKind) -> ApproxConfig {
+        self.kind = kind;
+        self
+    }
+
+    /// Set the sampling options for the approximate tier.
+    pub fn with_opts(mut self, opts: ApproxOptions) -> ApproxConfig {
+        self.opts = opts;
+        self
+    }
+
+    /// Set the adaptive-stopping target (0 disables).
+    pub fn with_error_budget(mut self, error_budget: f64) -> ApproxConfig {
+        self.error_budget = error_budget;
+        self
+    }
+
+    /// Set the backlog depth at which `Auto` starts shedding.
+    pub fn with_shed_queue_depth(mut self, depth: usize) -> ApproxConfig {
+        self.shed_queue_depth = depth;
+        self
+    }
+
+    /// Set the cache-miss-rate threshold at which `Auto` starts shedding.
+    pub fn with_shed_miss_rate(mut self, rate: f64) -> ApproxConfig {
+        self.shed_miss_rate = rate;
+        self
+    }
+
+    /// Set the deadline below which batch queries stay exact.
+    pub fn with_tight_deadline(mut self, deadline: Duration) -> ApproxConfig {
+        self.tight_deadline = deadline;
+        self
+    }
+
+    /// Set the cap on concurrent dedicated approx-tier threads.
+    pub fn with_max_inflight_runs(mut self, n: usize) -> ApproxConfig {
+        self.max_inflight_runs = n;
+        self
     }
 }
 
@@ -308,41 +368,53 @@ impl QueryService {
         }
     }
 
-    fn validate(&self, request: &QueryRequest) -> anyhow::Result<()> {
+    fn validate(&self, request: &QueryRequest) -> Result<(), ServingError> {
         if let QueryTarget::Marginal(v) = request.target {
-            anyhow::ensure!(v < self.n_vars, "query variable {v} out of range");
+            if v >= self.n_vars {
+                return Err(ServingError::InvalidQuery(format!(
+                    "query variable {v} out of range"
+                )));
+            }
         }
         for (v, s) in request.evidence.iter() {
-            anyhow::ensure!(v < self.n_vars, "evidence variable {v} out of range");
-            anyhow::ensure!(
-                s < self.cards[v],
-                "evidence state {s} out of range for variable {v}"
-            );
+            if v >= self.n_vars {
+                return Err(ServingError::InvalidQuery(format!(
+                    "evidence variable {v} out of range"
+                )));
+            }
+            if s >= self.cards[v] {
+                return Err(ServingError::InvalidQuery(format!(
+                    "evidence state {s} out of range for variable {v}"
+                )));
+            }
         }
         Ok(())
     }
 
     /// Submit one query and block for the reply.
-    pub fn query(&self, request: QueryRequest) -> anyhow::Result<QueryReply> {
+    pub fn query(&self, request: QueryRequest) -> Result<QueryReply, ServingError> {
         Ok(self.query_routed(request)?.reply)
     }
 
     /// Submit one query and block for the reply plus its answer tier.
-    pub fn query_routed(&self, request: QueryRequest) -> anyhow::Result<RoutedReply> {
+    pub fn query_routed(
+        &self,
+        request: QueryRequest,
+    ) -> Result<RoutedReply, ServingError> {
         let rx = self.query_async(request)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("query batcher dropped request"))
+        rx.recv().map_err(|_| ServingError::ServiceStopped)
     }
 
     /// Submit asynchronously; returns a receiver for the routed reply.
     pub fn query_async(
         &self,
         request: QueryRequest,
-    ) -> anyhow::Result<Receiver<RoutedReply>> {
+    ) -> Result<Receiver<RoutedReply>, ServingError> {
         self.validate(&request)?;
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
             .send(PendingQuery { request, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("query batcher stopped"))?;
+            .map_err(|_| ServingError::ServiceStopped)?;
         Ok(reply_rx)
     }
 
@@ -632,7 +704,7 @@ impl Drop for QueryService {
 }
 
 /// Snapshot of one model's query-serving state.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QueryModelStats {
     pub serving: ServingMetrics,
     pub cache: QueryEngineStats,
@@ -746,14 +818,18 @@ impl QueryRouter {
         self.models.contains_key(name)
     }
 
-    fn service(&self, model: &str) -> anyhow::Result<&QueryService> {
+    fn service(&self, model: &str) -> Result<&QueryService, ServingError> {
         self.models
             .get(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))
+            .ok_or_else(|| ServingError::ModelNotFound(model.to_string()))
     }
 
     /// Blocking query against a named model.
-    pub fn query(&self, model: &str, request: QueryRequest) -> anyhow::Result<QueryReply> {
+    pub fn query(
+        &self,
+        model: &str,
+        request: QueryRequest,
+    ) -> Result<QueryReply, ServingError> {
         self.service(model)?.query(request)
     }
 
@@ -762,7 +838,7 @@ impl QueryRouter {
         &self,
         model: &str,
         request: QueryRequest,
-    ) -> anyhow::Result<RoutedReply> {
+    ) -> Result<RoutedReply, ServingError> {
         self.service(model)?.query_routed(request)
     }
 
@@ -771,7 +847,7 @@ impl QueryRouter {
         &self,
         model: &str,
         request: QueryRequest,
-    ) -> anyhow::Result<Receiver<RoutedReply>> {
+    ) -> Result<Receiver<RoutedReply>, ServingError> {
         self.service(model)?.query_async(request)
     }
 
@@ -781,10 +857,12 @@ impl QueryRouter {
         model: &str,
         var: VarId,
         evidence: Evidence,
-    ) -> anyhow::Result<Posterior> {
+    ) -> Result<Posterior, ServingError> {
         match self.query(model, QueryRequest::marginal(var, evidence))? {
             QueryReply::Marginal(p) => Ok(p),
-            other => anyhow::bail!("unexpected reply variant {other:?}"),
+            other => Err(ServingError::Internal(format!(
+                "unexpected reply variant {other:?}"
+            ))),
         }
     }
 
@@ -894,7 +972,9 @@ mod tests {
             QueryEngineConfig::default(),
             // A long flush window: the pending queries below would sit in
             // the old batcher for 200ms if draining did not flush them.
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(200) },
+            BatcherConfig::new()
+                .with_max_batch(64)
+                .with_max_wait(Duration::from_millis(200)),
         );
         let ev = Evidence::new().with(0, 1);
         let pending: Vec<_> = (0..8)
@@ -964,11 +1044,9 @@ mod tests {
             &repository::asia(),
             QueryEngineConfig::default(),
             BatcherConfig::default(),
-            ApproxConfig {
-                engine: EngineChoice::Force(SamplerKind::LikelihoodWeighting),
-                opts: ApproxOptions { n_samples: 4_000, ..Default::default() },
-                ..Default::default()
-            },
+            ApproxConfig::new()
+                .with_engine(EngineChoice::Force(SamplerKind::LikelihoodWeighting))
+                .with_opts(ApproxOptions { n_samples: 4_000, ..Default::default() }),
         );
         let ev = Evidence::new().with(0, 1);
         let routed = r.query_routed("asia", QueryRequest::marginal(5, ev)).unwrap();
@@ -990,11 +1068,9 @@ mod tests {
             &repository::asia(),
             QueryEngineConfig::default(),
             BatcherConfig::default(),
-            ApproxConfig {
-                engine: EngineChoice::Force(SamplerKind::Gibbs),
-                opts: ApproxOptions { n_samples: 2_000, ..Default::default() },
-                ..Default::default()
-            },
+            ApproxConfig::new()
+                .with_engine(EngineChoice::Force(SamplerKind::Gibbs))
+                .with_opts(ApproxOptions { n_samples: 2_000, ..Default::default() }),
         );
         let net = repository::asia();
         let xray = net.var_index("xray").unwrap();

@@ -3,7 +3,7 @@
 use crate::runtime::Scorer;
 use std::collections::HashMap;
 use super::batcher::ScorerFactory;
-use super::{BatcherConfig, DynamicBatcher, ServingMetrics};
+use super::{BatcherConfig, DynamicBatcher, ServingError, ServingMetrics};
 
 /// Routes classification requests by model name to per-model dynamic
 /// batchers.
@@ -44,16 +44,18 @@ impl Router {
     }
 
     /// Register a model from a thread-affine scorer factory (the XLA
-    /// path). Fails if the factory fails (e.g. missing artifacts); on
-    /// success returns `true` when an existing registration was replaced
-    /// (after draining, as in [`Router::register`]).
+    /// path). Fails with [`ServingError::Registration`] if the factory
+    /// fails (e.g. missing artifacts); on success returns `true` when an
+    /// existing registration was replaced (after draining, as in
+    /// [`Router::register`]).
     pub fn register_with(
         &mut self,
         name: impl Into<String>,
         factory: ScorerFactory,
         config: BatcherConfig,
-    ) -> anyhow::Result<bool> {
-        let batcher = DynamicBatcher::spawn_with(factory, config)?;
+    ) -> Result<bool, ServingError> {
+        let batcher = DynamicBatcher::spawn_with(factory, config)
+            .map_err(|e| ServingError::Registration(e.to_string()))?;
         Ok(super::register_model(
             &mut self.models,
             name.into(),
@@ -175,7 +177,9 @@ mod tests {
             // A long batching window: without draining, the 8 pending
             // requests below would sit in the old batcher for 200ms (or be
             // dropped) while the replacement takes the name.
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(200) },
+            BatcherConfig::new()
+                .with_max_batch(64)
+                .with_max_wait(Duration::from_millis(200)),
         );
         let pending: Vec<_> =
             (0..8).map(|_| r.classify_async("m", vec![0; 8]).unwrap()).collect();

@@ -29,7 +29,12 @@ use crate::rng::Pcg;
 pub type ChunkKernel = dyn Fn(&mut Pcg, usize, &mut PosteriorAccumulator) + Send + Sync;
 
 /// Tuning for one chunked run.
+///
+/// `#[non_exhaustive]`: construct via [`ChunkedConfig::new`] (or
+/// `Default`) and the `with_*` builders, so wire-protocol versioning can
+/// add fields without breaking callers.
 #[derive(Clone, Debug)]
+#[non_exhaustive]
 pub struct ChunkedConfig {
     /// Total sample budget (upper bound; adaptive stopping may use less).
     pub max_samples: usize,
@@ -68,6 +73,55 @@ impl Default for ChunkedConfig {
             min_accepted: 1_000,
             seed: 0x5EED,
         }
+    }
+}
+
+impl ChunkedConfig {
+    /// The defaults — start here and chain `with_*` calls.
+    pub fn new() -> ChunkedConfig {
+        ChunkedConfig::default()
+    }
+
+    /// Set the total sample budget.
+    pub fn with_max_samples(mut self, max_samples: usize) -> ChunkedConfig {
+        self.max_samples = max_samples;
+        self
+    }
+
+    /// Set the samples-per-chunk size.
+    pub fn with_chunk(mut self, chunk: usize) -> ChunkedConfig {
+        self.chunk = chunk;
+        self
+    }
+
+    /// Set the chunks scheduled per adaptive round.
+    pub fn with_round_chunks(mut self, round_chunks: usize) -> ChunkedConfig {
+        self.round_chunks = round_chunks;
+        self
+    }
+
+    /// Set the adaptive-stopping target standard error (0 disables).
+    pub fn with_error_budget(mut self, error_budget: f64) -> ChunkedConfig {
+        self.error_budget = error_budget;
+        self
+    }
+
+    /// Set the rounds completed before the stopping rule is consulted.
+    pub fn with_min_rounds(mut self, min_rounds: usize) -> ChunkedConfig {
+        self.min_rounds = min_rounds;
+        self
+    }
+
+    /// Set the minimum accepted samples before stopping may fire.
+    pub fn with_min_accepted(mut self, min_accepted: usize) -> ChunkedConfig {
+        self.min_accepted = min_accepted;
+        self
+    }
+
+    /// Set the root seed for the per-chunk RNG streams.
+    pub fn with_seed(mut self, seed: u64) -> ChunkedConfig {
+        self.seed = seed;
+        self
     }
 }
 

@@ -44,7 +44,12 @@ use super::map_query::{most_probable_explanation, MapResult};
 use super::triangulation::EliminationHeuristic;
 
 /// Tuning knobs for a [`QueryEngine`].
+///
+/// `#[non_exhaustive]`: construct via [`QueryEngineConfig::new`] (or
+/// `Default`) and the `with_*` builders, so wire-protocol versioning can
+/// add fields without breaking callers.
 #[derive(Clone, Copy, Debug)]
+#[non_exhaustive]
 pub struct QueryEngineConfig {
     /// Maximum number of cached calibrations (0 disables caching).
     pub cache_capacity: usize,
@@ -76,6 +81,49 @@ impl Default for QueryEngineConfig {
             warm_start: true,
             kernel: KernelMode::default(),
         }
+    }
+}
+
+impl QueryEngineConfig {
+    /// The defaults — start here and chain `with_*` calls.
+    pub fn new() -> QueryEngineConfig {
+        QueryEngineConfig::default()
+    }
+
+    /// Set the calibration-cache capacity (0 disables caching).
+    pub fn with_cache_capacity(mut self, cache_capacity: usize) -> QueryEngineConfig {
+        self.cache_capacity = cache_capacity;
+        self
+    }
+
+    /// Set the message-passing schedule used on cache misses.
+    pub fn with_mode(mut self, mode: CalibrationMode) -> QueryEngineConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the intra-calibration worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> QueryEngineConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// Set the compile-time triangulation heuristic.
+    pub fn with_heuristic(mut self, heuristic: EliminationHeuristic) -> QueryEngineConfig {
+        self.heuristic = heuristic;
+        self
+    }
+
+    /// Enable/disable warm-start incremental recalibration.
+    pub fn with_warm_start(mut self, warm_start: bool) -> QueryEngineConfig {
+        self.warm_start = warm_start;
+        self
+    }
+
+    /// Set the message-kernel implementation.
+    pub fn with_kernel(mut self, kernel: KernelMode) -> QueryEngineConfig {
+        self.kernel = kernel;
+        self
     }
 }
 

@@ -48,6 +48,13 @@
 //!   [`inference::engine::InferenceEngine`] trait, fanning chunked sample
 //!   budgets over the same pool with per-chunk RNG streams and adaptive
 //!   stopping ([`inference::engine::ApproxEngine`]).
+//!
+//! The serving surface scales horizontally through the sharded fabric
+//! ([`coordinator::fabric`]): a frontend routes queries to shard processes
+//! by consistent hashing on the evidence signature (keeping each shard's
+//! warm-start caches hot) over a versioned binary wire protocol, with
+//! supervised respawn and in-process fallback. The stable public facade
+//! for all of it is [`serving`].
 
 pub mod benchkit;
 pub mod classify;
@@ -68,6 +75,7 @@ pub mod potential;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod serving;
 pub mod structure;
 pub mod testkit;
 

@@ -95,7 +95,15 @@ USAGE: fastpgm <subcommand> [flags]
            [--learn-from data.csv] learn a model from a CSV (structure +
            MLE + compile) and register it for serving directly — no
            .fpgm round-trip; [--learn-algo pc|hc] [--learn-alpha A]
-           [--learn-name NAME (default: learned)]"
+           [--learn-name NAME (default: learned)]
+           [--fabric N] serve through N shard processes over the
+           versioned binary wire protocol (docs/WIRE_PROTOCOL.md):
+           the frontend routes by consistent hashing on the evidence
+           signature (cache affinity), supervises and respawns dead
+           shards, and falls back in-process — no query is dropped
+           [--routing affinity|rr] fabric routing policy (rr =
+           round-robin ablation) [--affinity-prefix P] evidence vars
+           feeding the affinity hash (default 1)"
     );
 }
 
@@ -476,141 +484,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Drive the general posterior-query serving path: a [`QueryRouter`] over
-/// one or more built-in networks, hammered by concurrent clients drawing
-/// evidence from a bounded pool (serving traffic repeats itself — that is
-/// what the calibration cache exploits). With `--engine auto` a fraction
-/// of the traffic is marked batch-priority and sheds to the approximate
-/// sampling tier under load; with a sampler name every query goes through
-/// that engine.
-fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
-    use fastpgm::coordinator::{
-        AnswerTier, ApproxConfig, BatcherConfig, QueryRequest, QueryRouter,
-    };
-    use fastpgm::inference::approx::ApproxOptions;
-    use fastpgm::inference::engine::{EngineChoice, SamplerKind};
-    use fastpgm::inference::exact::QueryEngineConfig;
+/// How both serving shapes answer a routed query — the in-process
+/// [`fastpgm::serving::QueryRouter`] and the sharded
+/// [`fastpgm::serving::Frontend`] behind one signature, so the client
+/// drive loop is written once.
+type ServeFn = dyn Fn(
+        &str,
+        fastpgm::serving::QueryRequest,
+    ) -> Result<fastpgm::serving::RoutedReply, fastpgm::serving::ServingError>
+    + Send
+    + Sync;
+
+/// Hammer a serving surface with `clients` concurrent threads drawing
+/// evidence from per-model pools. Returns (exact answers, approx answers,
+/// elapsed wall time).
+fn drive_clients(
+    serve: std::sync::Arc<ServeFn>,
+    models: std::sync::Arc<Vec<(String, BayesianNetwork)>>,
+    pools: std::sync::Arc<Vec<Vec<Evidence>>>,
+    requests: usize,
+    clients: usize,
+    mark_batch: bool,
+    batch_fraction: f64,
+) -> anyhow::Result<(usize, usize, std::time::Duration)> {
+    use fastpgm::serving::{AnswerTier, QueryRequest};
     use std::sync::Arc;
-
-    let nets_spec = args.flag_or("nets", "asia,child_like,alarm_like").to_string();
-    let requests = args.parse_flag("requests", 4096usize);
-    let clients = args.parse_flag("clients", 4usize).max(1);
-    let cache = args.parse_flag("cache", 256usize);
-    let pool_size = args.parse_flag("evidence-pool", 32usize).max(1);
-    let threads = args.parse_flag("threads", fastpgm::parallel::default_threads());
-
-    let engine_spec = args.flag_or("engine", "exact").to_string();
-    let choice = EngineChoice::parse(&engine_spec).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown engine {engine_spec:?} (exact|auto|lw|aisbn|epis|gibbs|pls|sis|lbp)"
-        )
-    })?;
-    let shed_kind = match choice {
-        EngineChoice::Force(kind) => kind,
-        _ => {
-            let spec = args.flag_or("approx-sampler", "lw");
-            SamplerKind::parse(spec)
-                .ok_or_else(|| anyhow::anyhow!("unknown --approx-sampler {spec:?}"))?
-        }
-    };
-    let approx = ApproxConfig {
-        engine: choice,
-        kind: shed_kind,
-        opts: ApproxOptions {
-            n_samples: args.parse_flag("approx-samples", 20_000usize),
-            ..Default::default()
-        },
-        shed_queue_depth: args.parse_flag("shed-queue", 8usize),
-        ..Default::default()
-    };
-    let batch_fraction = args.parse_flag("batch-fraction", 0.5f64).clamp(0.0, 1.0);
-    let mark_batch = matches!(choice, EngineChoice::Auto);
-    let warm_start = !args.switch("no-warm-start");
-    let prefix_pool = args.switch("prefix-pool");
-    let kernel_spec = args.flag_or("kernel", "fused");
-    let kernel = fastpgm::inference::exact::KernelMode::parse(kernel_spec)
-        .ok_or_else(|| anyhow::anyhow!("unknown --kernel {kernel_spec:?} (fused|classic)"))?;
-
-    let mut router = QueryRouter::new(threads);
-    let mut models: Vec<(String, BayesianNetwork)> = Vec::new();
-    for name in nets_spec.split(',').filter(|n| !n.is_empty()) {
-        let net = load_net(name)?;
-        router.register_with_approx(
-            name,
-            &net,
-            QueryEngineConfig {
-                cache_capacity: cache,
-                warm_start,
-                kernel,
-                ..Default::default()
-            },
-            BatcherConfig::default(),
-            approx.clone(),
-        );
-        println!(
-            "registered {name}: {} vars, junction tree compiled once, cache={cache}, \
-             engine={engine_spec}, warm_start={warm_start}, kernel={}",
-            net.n_vars(),
-            kernel.label()
-        );
-        models.push((name.to_string(), net));
-    }
-    // --learn-from: learn a model from a CSV (PC or HC + MLE over the
-    // shared count cache), compile it, and register it directly — no
-    // .fpgm round-trip between the learner and the serving stack.
-    if let Some(csv_path) = args.flag("learn-from") {
-        let name = args.flag_or("learn-name", "learned").to_string();
-        let learn_data = csv::load(Path::new(csv_path), None)?;
-        let pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha");
-        let model = pipeline.run(&learn_data)?;
-        // Same serving knobs as the --nets models: cache, warm starts,
-        // --kernel, and the --engine/--approx-* tier all apply.
-        router.register_learned(
-            name.clone(),
-            &model,
-            QueryEngineConfig {
-                cache_capacity: cache,
-                warm_start,
-                kernel,
-                ..Default::default()
-            },
-            BatcherConfig::default(),
-            approx.clone(),
-        );
-        println!(
-            "learned + registered {name} from {csv_path}: {}",
-            model.report.summary()
-        );
-        models.push((name, model.net));
-    }
-    anyhow::ensure!(!models.is_empty(), "--nets resolved to no networks");
-
-    // Pre-draw a bounded evidence pool per model (the shared
-    // serving-traffic model: bounded reuse is what the cache exploits).
-    // --prefix-pool draws nested chains instead — the prefix-heavy shape
-    // (panels differing by one or two observations) that exercises the
-    // warm-start path on every non-exact hit.
-    let mut rng = Pcg::seed_from(11);
-    let pools: Vec<Vec<Evidence>> = models
-        .iter()
-        .map(|(_, net)| {
-            if prefix_pool {
-                let chains = (pool_size / 4).max(1);
-                fastpgm::testkit::gen_evidence_chain_pool(&mut rng, net, chains, 4)
-            } else {
-                fastpgm::testkit::gen_evidence_pool(&mut rng, net, pool_size, 2)
-            }
-        })
-        .collect();
-
-    let router = Arc::new(router);
-    let models = Arc::new(models);
-    let pools = Arc::new(pools);
     let per_client = requests / clients;
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
-            let router = Arc::clone(&router);
+            let serve = Arc::clone(&serve);
             let models = Arc::clone(&models);
             let pools = Arc::clone(&pools);
             std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
@@ -626,7 +529,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
                     if mark_batch && rng.bool_with(batch_fraction) {
                         request = request.batch_priority();
                     }
-                    let routed = router.query_routed(name, request)?;
+                    let routed = serve(name, request)?;
                     match routed.tier {
                         AnswerTier::Exact => exact_served += 1,
                         AnswerTier::Approx => approx_served += 1,
@@ -651,9 +554,275 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         exact_total += e;
         approx_total += a;
     }
-    let elapsed = t0.elapsed();
-    let served = per_client * clients;
+    Ok((exact_total, approx_total, t0.elapsed()))
+}
 
+/// Drive the general posterior-query serving path: one or more networks
+/// hammered by concurrent clients drawing evidence from a bounded pool
+/// (serving traffic repeats itself — that is what the calibration cache
+/// exploits). Three shapes share the flags and the drive loop:
+///
+/// * default — an in-process [`fastpgm::serving::QueryRouter`];
+/// * `--fabric N` — a [`fastpgm::serving::Frontend`] over N shard
+///   *processes* speaking the versioned wire protocol, routed by evidence
+///   affinity (`--routing rr` for the round-robin ablation);
+/// * `--shard` (hidden) — what the fabric launches: one shard worker
+///   serving the same models over TCP until a wire Shutdown.
+///
+/// With `--engine auto` a fraction of the traffic is marked
+/// batch-priority and sheds to the approximate sampling tier under load;
+/// with a sampler name every query goes through that engine.
+fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
+    use fastpgm::serving::{
+        wire, ApproxConfig, ApproxOptions, EngineChoice, FabricConfig, Frontend,
+        KernelMode, ModelSpec, ProcessLauncher, QueryEngineConfig, QueryRouter,
+        RoutingPolicy, SamplerKind, ShardConfig, ShardWorker, SHARD_READY_PREFIX,
+    };
+    use std::sync::Arc;
+
+    let nets_spec = args.flag_or("nets", "asia,child_like,alarm_like").to_string();
+    let requests = args.parse_flag("requests", 4096usize);
+    let clients = args.parse_flag("clients", 4usize).max(1);
+    let cache = args.parse_flag("cache", 256usize);
+    let pool_size = args.parse_flag("evidence-pool", 32usize).max(1);
+    let threads = args.parse_flag("threads", fastpgm::parallel::default_threads());
+
+    let engine_spec = args.flag_or("engine", "exact").to_string();
+    let choice = EngineChoice::parse(&engine_spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown engine {engine_spec:?} (exact|auto|lw|aisbn|epis|gibbs|pls|sis|lbp)"
+        )
+    })?;
+    let shed_kind = match choice {
+        EngineChoice::Force(kind) => kind,
+        _ => {
+            let spec = args.flag_or("approx-sampler", "lw");
+            SamplerKind::parse(spec)
+                .ok_or_else(|| anyhow::anyhow!("unknown --approx-sampler {spec:?}"))?
+        }
+    };
+    let approx = ApproxConfig::new()
+        .with_engine(choice)
+        .with_kind(shed_kind)
+        .with_opts(ApproxOptions {
+            n_samples: args.parse_flag("approx-samples", 20_000usize),
+            ..Default::default()
+        })
+        .with_shed_queue_depth(args.parse_flag("shed-queue", 8usize));
+    let batch_fraction = args.parse_flag("batch-fraction", 0.5f64).clamp(0.0, 1.0);
+    let mark_batch = matches!(choice, EngineChoice::Auto);
+    let warm_start = !args.switch("no-warm-start");
+    let prefix_pool = args.switch("prefix-pool");
+    let kernel_spec = args.flag_or("kernel", "fused").to_string();
+    let kernel = KernelMode::parse(&kernel_spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown --kernel {kernel_spec:?} (fused|classic)"))?;
+    let engine_cfg = QueryEngineConfig::new()
+        .with_cache_capacity(cache)
+        .with_warm_start(warm_start)
+        .with_kernel(kernel);
+
+    // Resolve every model once into [`ModelSpec`]s — the one description
+    // all three serving shapes register from. --learn-from learns a model
+    // from a CSV (PC or HC + MLE over the shared count cache) and serves
+    // it directly — no .fpgm round-trip between learner and server.
+    let mut specs: Vec<ModelSpec> = Vec::new();
+    let mut models: Vec<(String, BayesianNetwork)> = Vec::new();
+    for name in nets_spec.split(',').filter(|n| !n.is_empty()) {
+        let net = load_net(name)?;
+        println!(
+            "model {name}: {} vars, cache={cache}, engine={engine_spec}, \
+             warm_start={warm_start}, kernel={}",
+            net.n_vars(),
+            kernel.label()
+        );
+        specs.push(
+            ModelSpec::new(name, net.clone())
+                .with_engine(engine_cfg)
+                .with_approx(approx.clone()),
+        );
+        models.push((name.to_string(), net));
+    }
+    if let Some(csv_path) = args.flag("learn-from") {
+        let name = args.flag_or("learn-name", "learned").to_string();
+        let learn_data = csv::load(Path::new(csv_path), None)?;
+        let pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha");
+        let model = pipeline.run(&learn_data)?;
+        println!("learned {name} from {csv_path}: {}", model.report.summary());
+        specs.push(
+            ModelSpec::new(name.clone(), model.net.clone())
+                .with_engine(engine_cfg)
+                .with_approx(approx.clone()),
+        );
+        models.push((name, model.net));
+    }
+    anyhow::ensure!(!models.is_empty(), "--nets resolved to no networks");
+
+    // Hidden shard mode: what [`ProcessLauncher`] spawns as
+    // `serve-query --shard --shard-id N <model flags>`. Serve the resolved
+    // models over TCP until a wire Shutdown; the ready line on stdout
+    // tells the frontend which port the OS assigned.
+    if args.switch("shard") {
+        let shard_id = args.parse_flag("shard-id", 0u32);
+        let worker = ShardWorker::spawn(
+            shard_id,
+            specs,
+            ShardConfig::new().with_pool_threads(threads),
+        )?;
+        println!("{SHARD_READY_PREFIX}{}", worker.addr());
+        use std::io::Write as _;
+        std::io::stdout().flush()?;
+        worker.run_until_shutdown();
+        return Ok(());
+    }
+
+    // Pre-draw a bounded evidence pool per model (the shared
+    // serving-traffic model: bounded reuse is what the cache exploits).
+    // --prefix-pool draws nested chains instead — the prefix-heavy shape
+    // (panels differing by one or two observations) that exercises the
+    // warm-start path on every non-exact hit, and the traffic affinity
+    // routing keeps colocated.
+    let mut rng = Pcg::seed_from(11);
+    let pools: Vec<Vec<Evidence>> = models
+        .iter()
+        .map(|(_, net)| {
+            if prefix_pool {
+                let chains = (pool_size / 4).max(1);
+                fastpgm::testkit::gen_evidence_chain_pool(&mut rng, net, chains, 4)
+            } else {
+                fastpgm::testkit::gen_evidence_pool(&mut rng, net, pool_size, 2)
+            }
+        })
+        .collect();
+    let models = Arc::new(models);
+    let pools = Arc::new(pools);
+
+    let fabric_shards = args.parse_flag("fabric", 0usize);
+    if fabric_shards > 0 {
+        let policy = match args.flag_or("routing", "affinity") {
+            "rr" | "round-robin" | "roundrobin" => RoutingPolicy::RoundRobin,
+            _ => RoutingPolicy::Affinity,
+        };
+        // Re-assemble the model flags for the shard processes: each shard
+        // resolves (and, under --learn-from, relearns) the same models.
+        let mut pass: Vec<String> = Vec::new();
+        for (key, value) in [
+            ("nets", nets_spec.clone()),
+            ("cache", cache.to_string()),
+            ("threads", threads.to_string()),
+            ("engine", engine_spec.clone()),
+            ("approx-sampler", shed_kind.flag().to_string()),
+            ("approx-samples", approx.opts.n_samples.to_string()),
+            ("shed-queue", approx.shed_queue_depth.to_string()),
+            ("kernel", kernel_spec.clone()),
+        ] {
+            pass.push(format!("--{key}"));
+            pass.push(value);
+        }
+        if !warm_start {
+            pass.push("--no-warm-start".to_string());
+        }
+        for key in ["learn-from", "learn-algo", "learn-alpha", "learn-name"] {
+            if let Some(v) = args.flag(key) {
+                pass.push(format!("--{key}"));
+                pass.push(v.to_string());
+            }
+        }
+        let launcher =
+            ProcessLauncher { exe: std::env::current_exe()?, args: pass };
+        let frontend = Frontend::new(
+            specs,
+            Box::new(launcher),
+            FabricConfig::new()
+                .with_shards(fabric_shards)
+                .with_policy(policy)
+                .with_affinity_prefix(args.parse_flag("affinity-prefix", 1usize))
+                .with_pool_threads(threads),
+        )?;
+        println!(
+            "fabric up: {fabric_shards} shard processes, routing={policy:?}, \
+             wire protocol v{}",
+            wire::PROTOCOL_VERSION
+        );
+        let frontend = Arc::new(frontend);
+        let serve: Arc<ServeFn> = {
+            let f = Arc::clone(&frontend);
+            Arc::new(move |name: &str, request| f.query_routed(name, request))
+        };
+        let (exact_total, approx_total, elapsed) = drive_clients(
+            serve,
+            Arc::clone(&models),
+            Arc::clone(&pools),
+            requests,
+            clients,
+            mark_batch,
+            batch_fraction,
+        )?;
+        let served = (requests / clients) * clients;
+        println!(
+            "served {served} posterior queries through {fabric_shards} shards \
+             from {clients} clients in {elapsed:.2?} -> {:.0} queries/s \
+             end-to-end (tiers: exact={exact_total} approx={approx_total})",
+            served as f64 / elapsed.as_secs_f64()
+        );
+        for (shard_id, per_model) in frontend.shard_stats()? {
+            for (model, stats) in per_model {
+                println!(
+                    "  shard {shard_id} {model}: {} | hit_rate={:.3} warm_rate={:.3}",
+                    stats.serving.summary(),
+                    stats.cache.hit_rate(),
+                    stats.cache.warm_start_rate()
+                );
+            }
+        }
+        for (model, stats) in frontend.stats()? {
+            println!(
+                "  fleet {model}: {} | cache hits={} warm_starts={} \
+                 cold_misses={} hit_rate={:.3} warm_rate={:.3}",
+                stats.serving.summary(),
+                stats.cache.hits,
+                stats.cache.warm_starts,
+                stats.cache.cold_misses,
+                stats.cache.hit_rate(),
+                stats.cache.warm_start_rate()
+            );
+        }
+        let m = frontend.metrics();
+        println!(
+            "  fabric: queries={} per_shard={:?} failovers={} respawns={} \
+             fallback_answers={} retried={}",
+            m.queries, m.per_shard, m.failovers, m.respawns, m.fallback_answers,
+            m.retried
+        );
+        frontend.shutdown();
+        return Ok(());
+    }
+
+    // In-process shape: one QueryRouter registered from the same specs.
+    let mut router = QueryRouter::new(threads);
+    for spec in &specs {
+        router.register_with_approx(
+            spec.name.as_str(),
+            &spec.net,
+            spec.engine,
+            spec.batcher.clone(),
+            spec.approx.clone(),
+        );
+    }
+    let router = Arc::new(router);
+    let serve: Arc<ServeFn> = {
+        let r = Arc::clone(&router);
+        Arc::new(move |name: &str, request| r.query_routed(name, request))
+    };
+    let (exact_total, approx_total, elapsed) = drive_clients(
+        serve,
+        Arc::clone(&models),
+        Arc::clone(&pools),
+        requests,
+        clients,
+        mark_batch,
+        batch_fraction,
+    )?;
+    let served = (requests / clients) * clients;
     println!(
         "served {served} posterior queries from {clients} clients in {elapsed:.2?} \
          -> {:.0} queries/s end-to-end (tiers: exact={exact_total} approx={approx_total})",

@@ -1,0 +1,62 @@
+//! The stable public serving facade.
+//!
+//! Everything an embedding application needs to serve posterior queries —
+//! in-process or across the sharded fabric — re-exported under one path,
+//! so internal module moves never break downstream code:
+//!
+//! ```no_run
+//! use fastpgm::network::repository;
+//! use fastpgm::serving::{
+//!     BatcherConfig, QueryEngineConfig, QueryRequest, QueryRouter,
+//! };
+//! use fastpgm::prelude::Evidence;
+//!
+//! let mut router = QueryRouter::new(2);
+//! router.register(
+//!     "asia",
+//!     &repository::asia(),
+//!     QueryEngineConfig::new().with_cache_capacity(128),
+//!     BatcherConfig::new(),
+//! );
+//! let reply = router
+//!     .query_routed("asia", QueryRequest::marginal(5, Evidence::new().with(0, 1)))
+//!     .unwrap();
+//! assert_eq!(reply.engine, "exact");
+//! ```
+//!
+//! The four config types (`QueryEngineConfig`, `ApproxConfig`,
+//! `BatcherConfig`, `ChunkedConfig`) are `#[non_exhaustive]` with
+//! builder-style `with_*` constructors, and every failure on this surface
+//! is a typed [`ServingError`] — the same contract, with the same error
+//! codes, that the fabric wire protocol (`docs/WIRE_PROTOCOL.md`) encodes.
+
+// Request/reply vocabulary.
+pub use crate::coordinator::{
+    AnswerTier, QueryPriority, QueryQos, QueryReply, QueryRequest, QueryTarget,
+    RoutedReply,
+};
+
+// Engines, routers, and their configuration.
+pub use crate::coordinator::{
+    ApproxConfig, BatcherConfig, DynamicBatcher, QueryModelStats, QueryRouter,
+    QueryService, Router, RouterStats, ServingMetrics,
+};
+pub use crate::inference::approx::ApproxOptions;
+pub use crate::inference::engine::{
+    ApproxEngine, ChunkedConfig, EngineChoice, InferenceEngine, SamplerKind,
+};
+pub use crate::inference::exact::{
+    CalibrationMode, EliminationOrderHeuristic, KernelMode, QueryEngine,
+    QueryEngineConfig, QueryEngineStats,
+};
+
+// Typed serving errors (shared by the in-process path and the wire).
+pub use crate::coordinator::ServingError;
+
+// The distributed fabric.
+pub use crate::coordinator::fabric::wire;
+pub use crate::coordinator::{
+    FabricConfig, FabricMetrics, Frontend, ModelSpec, ProcessLauncher, RoutingPolicy,
+    ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ThreadLauncher,
+    SHARD_READY_PREFIX,
+};

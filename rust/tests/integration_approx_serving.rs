@@ -143,13 +143,13 @@ fn auto_routing_sheds_batch_queries_under_pressure() {
         &repository::asia(),
         QueryEngineConfig::default(),
         // A generous flush window so the whole burst lands in one flush.
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(100) },
-        ApproxConfig {
-            engine: EngineChoice::Auto,
-            opts: ApproxOptions { n_samples: 4_000, ..Default::default() },
-            shed_queue_depth: 4,
-            ..Default::default()
-        },
+        BatcherConfig::new()
+            .with_max_batch(64)
+            .with_max_wait(Duration::from_millis(100)),
+        ApproxConfig::new()
+            .with_engine(EngineChoice::Auto)
+            .with_opts(ApproxOptions { n_samples: 4_000, ..Default::default() })
+            .with_shed_queue_depth(4),
     );
     let ev = Evidence::new().with(0, 1);
     // Burst of 32 async queries: 16 batch-priority (sheddable), 16
@@ -197,11 +197,9 @@ fn forced_sampler_tier_answers_everything_loosely() {
         &repository::cancer(),
         QueryEngineConfig::default(),
         BatcherConfig::default(),
-        ApproxConfig {
-            engine: EngineChoice::Force(SamplerKind::LikelihoodWeighting),
-            opts: ApproxOptions { n_samples: 60_000, ..Default::default() },
-            ..Default::default()
-        },
+        ApproxConfig::new()
+            .with_engine(EngineChoice::Force(SamplerKind::LikelihoodWeighting))
+            .with_opts(ApproxOptions { n_samples: 60_000, ..Default::default() }),
     );
     let net = repository::cancer();
     let exact = QueryEngine::new(&net);

@@ -15,7 +15,7 @@ fn batched_results_equal_unbatched() {
     let direct = ReferenceScorer::new(net.clone(), class_var, 32);
     let batcher = DynamicBatcher::spawn(
         ReferenceScorer::new(net.clone(), class_var, 32),
-        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(3) },
+        BatcherConfig::new().with_max_batch(32).with_max_wait(Duration::from_millis(3)),
     );
 
     let mut rng = Pcg::seed_from(1);
@@ -45,7 +45,7 @@ fn heavy_concurrency_no_loss() {
     let net = repository::cancer();
     let batcher = Arc::new(DynamicBatcher::spawn(
         ReferenceScorer::new(net, 2, 64),
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_micros(500) },
+        BatcherConfig::new().with_max_batch(64).with_max_wait(Duration::from_micros(500)),
     ));
     let handles: Vec<_> = (0..16)
         .map(|t| {
@@ -114,7 +114,9 @@ fn router_over_real_artifact() {
         .register_with(
             "asia",
             Box::new(move || Ok(Box::new(BatchScorer::load(&bundle)?) as _)),
-            BatcherConfig { max_batch: meta.batch, max_wait: Duration::from_millis(1) },
+            BatcherConfig::new()
+                .with_max_batch(meta.batch)
+                .with_max_wait(Duration::from_millis(1)),
         )
         .unwrap();
 

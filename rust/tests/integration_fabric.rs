@@ -1,0 +1,245 @@
+//! End-to-end tests for the sharded serving fabric: wire-loopback parity
+//! with the in-process router, affinity routing keeping warm-start rates
+//! intact under sharding (the acceptance criterion for the fabric), and
+//! fault injection — a shard killed mid-load is respawned without a
+//! single dropped query.
+//!
+//! Every test runs real TCP traffic through [`ThreadLauncher`] shards:
+//! identical frames to the `--shard` process path, no built binary
+//! needed.
+
+use fastpgm::network::repository;
+use fastpgm::prelude::Evidence;
+use fastpgm::rng::Pcg;
+use fastpgm::serving::{
+    FabricConfig, Frontend, ModelSpec, QueryEngineConfig, QueryRequest, QueryRouter,
+    RoutingPolicy, ShardConfig, ThreadLauncher,
+};
+use fastpgm::testkit::{gen_evidence_chain_pool, gen_query_var};
+
+fn specs() -> Vec<ModelSpec> {
+    let engine = QueryEngineConfig::new().with_cache_capacity(256);
+    vec![
+        ModelSpec::new("asia", repository::asia()).with_engine(engine),
+        ModelSpec::new("cancer", repository::cancer()).with_engine(engine),
+    ]
+}
+
+fn thread_fabric(shards: usize, policy: RoutingPolicy) -> Frontend {
+    Frontend::new(
+        specs(),
+        Box::new(
+            ThreadLauncher::new(specs())
+                .with_config(ShardConfig::new().with_pool_threads(2)),
+        ),
+        FabricConfig::new().with_shards(shards).with_policy(policy),
+    )
+    .expect("fabric launches")
+}
+
+/// A prefix-heavy trace on one model: nested evidence chains in serving
+/// order, each paired with an unobserved query variable.
+fn chain_trace(net: &fastpgm::network::BayesianNetwork) -> Vec<(usize, Evidence)> {
+    let mut rng = Pcg::seed_from(20_260_807);
+    gen_evidence_chain_pool(&mut rng, net, 24, 4)
+        .into_iter()
+        .map(|ev| (gen_query_var(&mut rng, net, &ev), ev))
+        .collect()
+}
+
+#[test]
+fn fabric_replies_match_in_process_router() {
+    let frontend = thread_fabric(2, RoutingPolicy::Affinity);
+    let mut reference = QueryRouter::new(2);
+    for spec in specs() {
+        reference.register_with_approx(
+            spec.name.as_str(),
+            &spec.net,
+            spec.engine,
+            spec.batcher.clone(),
+            spec.approx.clone(),
+        );
+    }
+
+    let mut rng = Pcg::seed_from(4242);
+    let nets = [("asia", repository::asia()), ("cancer", repository::cancer())];
+    for i in 0..60 {
+        let (name, net) = &nets[i % nets.len()];
+        let mut ev = Evidence::new();
+        for v in rng.choose_k(net.n_vars(), rng.below(3)) {
+            ev.set(v, rng.below(net.cardinality(v)));
+        }
+        let var = gen_query_var(&mut rng, net, &ev);
+        let over_wire = frontend
+            .query_routed(name, QueryRequest::marginal(var, ev.clone()))
+            .expect("fabric answers");
+        let local = reference
+            .query_routed(name, QueryRequest::marginal(var, ev))
+            .expect("reference answers");
+        assert_eq!(over_wire.engine, local.engine);
+        let a = over_wire.into_marginal().expect("marginal reply");
+        let b = local.into_marginal().expect("marginal reply");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 1e-12,
+                "wire {x} vs in-process {y} diverged past 1e-12"
+            );
+        }
+    }
+    let m = frontend.metrics();
+    assert_eq!(m.queries, 60);
+    assert_eq!(m.failovers, 0);
+    assert_eq!(m.fallback_answers, 0);
+    frontend.shutdown();
+}
+
+/// The fabric acceptance criterion: on a prefix-heavy trace, affinity
+/// routing keeps every serving shard's warm-start rate within 10% of what
+/// a single in-process router achieves — sharding must not dilute the
+/// nested-evidence chains that warm-start off each other.
+#[test]
+fn affinity_keeps_per_shard_warm_start_rate() {
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+
+    // Single-process baseline.
+    let mut single = QueryRouter::new(2);
+    single.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new().with_cache_capacity(256),
+        Default::default(),
+    );
+    for (var, ev) in &trace {
+        single
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("baseline answers");
+    }
+    let single_rate = single.stats()[0].1.cache.warm_start_rate();
+    assert!(
+        single_rate > 0.3,
+        "prefix-heavy trace should warm-start (got {single_rate})"
+    );
+
+    // Same trace through a 2-shard affinity-routed fabric.
+    let frontend = thread_fabric(2, RoutingPolicy::Affinity);
+    for (var, ev) in &trace {
+        frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("fabric answers");
+    }
+    let shard_stats = frontend.shard_stats().expect("stats over the wire");
+    let mut serving_shards = 0;
+    for (shard_id, per_model) in &shard_stats {
+        for (model, stats) in per_model {
+            if model == "asia" && stats.cache.misses() > 0 {
+                serving_shards += 1;
+                let rate = stats.cache.warm_start_rate();
+                assert!(
+                    single_rate - rate <= 0.10,
+                    "shard {shard_id} warm rate {rate:.3} fell more than 10% \
+                     below single-process {single_rate:.3}"
+                );
+            }
+        }
+    }
+    assert!(serving_shards >= 2, "affinity left a shard idle: {shard_stats:?}");
+    frontend.shutdown();
+}
+
+/// Round-robin is the ablation: it must still answer every query (the
+/// correctness bar), just without the locality guarantee.
+#[test]
+fn round_robin_spreads_queries_across_shards() {
+    let frontend = thread_fabric(2, RoutingPolicy::RoundRobin);
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+    for (var, ev) in &trace {
+        frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("fabric answers");
+    }
+    let m = frontend.metrics();
+    assert_eq!(m.queries, trace.len());
+    assert!(
+        m.per_shard.iter().all(|&n| n > 0),
+        "round-robin left a shard idle: {:?}",
+        m.per_shard
+    );
+    frontend.shutdown();
+}
+
+/// Fault injection: kill a shard abruptly mid-load. The frontend must
+/// respawn it and answer every single query — zero drops — while the
+/// metrics record the failover and the respawn.
+#[test]
+fn shard_kill_mid_load_drops_no_query() {
+    let frontend = thread_fabric(2, RoutingPolicy::Affinity);
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+    let reference = {
+        let mut r = QueryRouter::new(2);
+        r.register(
+            "asia",
+            &net,
+            QueryEngineConfig::new().with_cache_capacity(256),
+            Default::default(),
+        );
+        r
+    };
+
+    let mut answered = 0usize;
+    for (i, (var, ev)) in trace.iter().enumerate() {
+        if i == trace.len() / 2 {
+            // Chaos: connection resets + dead port on shard 0.
+            frontend.kill_shard(0);
+        }
+        let reply = frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("no query may be dropped across a shard kill");
+        let expect = reference
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("reference answers");
+        let a = reply.into_marginal().expect("marginal reply");
+        let b = expect.into_marginal().expect("marginal reply");
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+        answered += 1;
+    }
+    assert_eq!(answered, trace.len());
+    let m = frontend.metrics();
+    assert_eq!(m.queries, trace.len());
+    assert!(
+        m.failovers >= 1 && m.respawns >= 1,
+        "kill went unnoticed: {m:?}"
+    );
+    frontend.shutdown();
+}
+
+/// Rolling reload over the wire: Drain on every shard re-registers the
+/// model fresh (cold caches) and reports the replacement, and the fabric
+/// keeps answering afterwards.
+#[test]
+fn drain_reloads_models_on_every_shard() {
+    let frontend = thread_fabric(2, RoutingPolicy::Affinity);
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+    for (var, ev) in trace.iter().take(8) {
+        frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("fabric answers");
+    }
+    let replaced = frontend.drain("asia").expect("drain crosses the wire");
+    assert_eq!(replaced, 2, "both shards should replace their registration");
+    // Caches are cold again; serving continues.
+    let (var, ev) = &trace[0];
+    frontend
+        .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+        .expect("fabric answers after reload");
+    let stats = frontend.stats().expect("merged stats");
+    let asia = stats.iter().find(|(m, _)| m == "asia").expect("asia stats");
+    assert_eq!(asia.1.serving.requests, 1, "drain should reset counters");
+    frontend.shutdown();
+}

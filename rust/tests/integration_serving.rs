@@ -18,8 +18,8 @@ fn asia_router(cache: usize) -> QueryRouter {
     r.register(
         "asia",
         &repository::asia(),
-        QueryEngineConfig { cache_capacity: cache, ..Default::default() },
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        QueryEngineConfig::new().with_cache_capacity(cache),
+        BatcherConfig::new().with_max_batch(64).with_max_wait(Duration::from_millis(2)),
     );
     r
 }
@@ -56,8 +56,8 @@ fn same_evidence_requests_share_one_calibration() {
     r.register(
         "asia",
         &repository::asia(),
-        QueryEngineConfig { cache_capacity: 32, ..Default::default() },
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(100) },
+        QueryEngineConfig::new().with_cache_capacity(32),
+        BatcherConfig::new().with_max_batch(64).with_max_wait(Duration::from_millis(100)),
     );
     let router = Arc::new(r);
     let ev = Evidence::new().with(0, 1).with(3, 1);
@@ -238,8 +238,8 @@ fn no_warm_start_router_serves_identically() {
     r.register(
         "asia",
         &repository::asia(),
-        QueryEngineConfig { warm_start: false, ..Default::default() },
-        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        QueryEngineConfig::new().with_warm_start(false),
+        BatcherConfig::new().with_max_batch(64).with_max_wait(Duration::from_millis(2)),
     );
     let warm = asia_router(32);
     let chain = [
@@ -273,8 +273,10 @@ fn served_kernel_modes_agree_and_report_label() {
         r.register(
             "asia",
             &net,
-            QueryEngineConfig { cache_capacity: 8, kernel, ..Default::default() },
-            BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+            QueryEngineConfig::new().with_cache_capacity(8).with_kernel(kernel),
+            BatcherConfig::new()
+                .with_max_batch(64)
+                .with_max_wait(Duration::from_millis(2)),
         );
         routers.push(r);
     }
@@ -340,7 +342,7 @@ fn learned_model_registers_and_serves_without_roundtrip() {
     let replaced = router.register_learned(
         "survey-learned",
         &model,
-        QueryEngineConfig { cache_capacity: 16, ..Default::default() },
+        QueryEngineConfig::new().with_cache_capacity(16),
         BatcherConfig::default(),
         ApproxConfig::default(),
     );

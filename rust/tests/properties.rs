@@ -194,12 +194,10 @@ fn prop_query_engine_matches_fresh_engine_all_modes() {
             let net = gen_network(rng, 8);
             let engine = QueryEngine::with_config(
                 &net,
-                QueryEngineConfig {
-                    cache_capacity: 4,
-                    mode,
-                    threads,
-                    ..Default::default()
-                },
+                QueryEngineConfig::new()
+                    .with_cache_capacity(4)
+                    .with_mode(mode)
+                    .with_threads(threads),
             );
             let jt = JunctionTree::build(&net);
             let mut fresh = jt.parallel_engine(mode, threads);
@@ -238,7 +236,7 @@ fn prop_eviction_recalibration_stable() {
         let net = gen_network(rng, 7);
         let engine = QueryEngine::with_config(
             &net,
-            QueryEngineConfig { cache_capacity: 2, ..Default::default() },
+            QueryEngineConfig::new().with_cache_capacity(2),
         );
         let evidence: Vec<Evidence> =
             (0..5).map(|_| gen_evidence(rng, &net, 2)).collect();
@@ -376,7 +374,7 @@ fn prop_query_engine_warm_start_matches_cold_serving() {
         let warm_engine = QueryEngine::new(&net);
         let cold_engine = QueryEngine::with_config(
             &net,
-            QueryEngineConfig { warm_start: false, ..Default::default() },
+            QueryEngineConfig::new().with_warm_start(false),
         );
         let mut ev = Evidence::new();
         for v in rng.choose_k(net.n_vars(), 3) {
