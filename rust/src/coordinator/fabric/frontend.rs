@@ -19,10 +19,12 @@
 
 use super::shard::{ModelSpec, ShardConfig, ShardWorker};
 use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
+use crate::coordinator::query_router::stats_to_samples;
 use crate::coordinator::{
     QueryModelStats, QueryRequest, QueryRouter, RoutedReply, ServingError,
 };
 use crate::core::Evidence;
+use crate::obs::{Collector, LatencyHistogram, ObsConfig, Sample};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader};
@@ -70,6 +72,9 @@ pub struct FabricConfig {
     pub fallback: bool,
     /// Calibration pool width of the fallback router.
     pub pool_threads: usize,
+    /// Observability knobs for the fallback router (shards carry their
+    /// own via [`ShardConfig`]).
+    pub obs: ObsConfig,
 }
 
 impl Default for FabricConfig {
@@ -83,6 +88,7 @@ impl Default for FabricConfig {
             connect_timeout: Duration::from_secs(5),
             fallback: true,
             pool_threads: 2,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -140,6 +146,12 @@ impl FabricConfig {
         self.pool_threads = n;
         self
     }
+
+    /// Set the fallback router's observability knobs.
+    pub fn with_obs(mut self, obs: ObsConfig) -> FabricConfig {
+        self.obs = obs;
+        self
+    }
 }
 
 /// Counters for the fabric's routing and recovery machinery (the serving
@@ -160,6 +172,9 @@ pub struct FabricMetrics {
     pub fallback_answers: usize,
     /// Transparent same-shard retries (stale connection redials).
     pub retried: usize,
+    /// Frontend-side query round-trip time (write request → read reply on
+    /// the shard connection) — the `wire` stage of the query lifecycle.
+    pub wire: LatencyHistogram,
 }
 
 /// A running shard as the frontend sees it: an address to dial plus the
@@ -391,7 +406,8 @@ impl Frontend {
         }
         ring.sort_unstable();
         let fallback = if config.fallback {
-            let mut router = QueryRouter::new(config.pool_threads.max(1));
+            let mut router =
+                QueryRouter::with_obs(config.pool_threads.max(1), config.obs.clone());
             for spec in &specs {
                 router.register_with_approx(
                     &spec.name,
@@ -495,14 +511,18 @@ impl Frontend {
         Ok(replaced)
     }
 
-    /// Per-shard serving/cache stats straight off the wire.
+    /// Per-shard serving/cache stats straight off the wire. A v2 shard
+    /// ships full histograms and stage sets ([`Message::StatsReplyV2`]);
+    /// a v1 shard's reply is decoded from its legacy representative
+    /// samples — both land here as the same structure.
     pub fn shard_stats(
         &self,
     ) -> Result<Vec<(u32, Vec<(String, QueryModelStats)>)>, ServingError> {
         let mut out = Vec::with_capacity(self.slots.len());
         for shard in 0..self.slots.len() {
             match self.exchange_on_shard(shard, &Message::StatsRequest)? {
-                Message::StatsReply { shard_id, per_model } => {
+                Message::StatsReplyV2 { shard_id, per_model }
+                | Message::StatsReply { shard_id, per_model } => {
                     out.push((shard_id, per_model));
                 }
                 other => {
@@ -515,30 +535,11 @@ impl Frontend {
         Ok(out)
     }
 
-    /// Fleet view: per-model stats merged across every shard.
+    /// Fleet view: per-model stats merged across every shard. Histogram
+    /// buckets merge exactly, so fleet percentiles are as accurate as any
+    /// single shard's.
     pub fn stats(&self) -> Result<Vec<(String, QueryModelStats)>, ServingError> {
-        let mut merged: HashMap<String, QueryModelStats> = HashMap::new();
-        for (_, per_model) in self.shard_stats()? {
-            for (name, stats) in per_model {
-                match merged.entry(name) {
-                    Entry::Vacant(slot) => {
-                        slot.insert(stats);
-                    }
-                    Entry::Occupied(mut slot) => {
-                        let acc = slot.get_mut();
-                        acc.serving.merge_from(&stats.serving);
-                        acc.cache.hits += stats.cache.hits;
-                        acc.cache.warm_starts += stats.cache.warm_starts;
-                        acc.cache.cold_misses += stats.cache.cold_misses;
-                        acc.cache.evictions += stats.cache.evictions;
-                        acc.cache.entries += stats.cache.entries;
-                    }
-                }
-            }
-        }
-        let mut out: Vec<(String, QueryModelStats)> = merged.into_iter().collect();
-        out.sort_by(|a, b| a.0.cmp(&b.0));
-        Ok(out)
+        Ok(merge_fleet(&self.shard_stats()?))
     }
 
     /// Chaos hook: kill a shard abruptly (connection resets, dead port).
@@ -685,7 +686,12 @@ impl Frontend {
             model: model.to_string(),
             request: request.clone(),
         };
-        match self.exchange_on_shard(shard, &msg)? {
+        let t0 = Instant::now();
+        let reply = self.exchange_on_shard(shard, &msg)?;
+        // The wire stage: the full frontend-side round trip (serialize,
+        // shard serving time included — what sharding costs the caller).
+        self.metrics.lock().unwrap().wire.record_duration(t0.elapsed());
+        match reply {
             Message::Reply { id: got, outcome } if got == id => outcome,
             other => Err(ServingError::Wire(format!(
                 "expected reply to query {id}, got {other:?}"
@@ -727,6 +733,93 @@ impl Frontend {
             None => Err(ServingError::ShardUnavailable(format!(
                 "{why} (and no in-process fallback is configured)"
             ))),
+        }
+    }
+}
+
+/// Merge per-shard stats into the fleet view: serving counters add and
+/// histogram buckets merge exactly, so the fleet distribution equals the
+/// union of the shards' samples.
+pub(crate) fn merge_fleet(
+    per_shard: &[(u32, Vec<(String, QueryModelStats)>)],
+) -> Vec<(String, QueryModelStats)> {
+    let mut merged: HashMap<String, QueryModelStats> = HashMap::new();
+    for (_, models) in per_shard {
+        for (name, stats) in models {
+            match merged.entry(name.clone()) {
+                Entry::Vacant(slot) => {
+                    slot.insert(stats.clone());
+                }
+                Entry::Occupied(mut slot) => slot.get_mut().merge_from(stats),
+            }
+        }
+    }
+    let mut out: Vec<(String, QueryModelStats)> = merged.into_iter().collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// The frontend publishes its routing/recovery counters, the frontend-side
+/// `wire` stage histogram, every shard's serving stats (labelled
+/// `shard="<id>"`), and the fleet-merged view (`shard="fleet"`). Scraping
+/// performs one stats round trip per shard; an unreachable shard drops
+/// out of that scrape rather than failing it.
+impl Collector for Frontend {
+    fn collect(&self, out: &mut Vec<Sample>) {
+        let m = self.metrics();
+        out.push(
+            Sample::counter("fastpgm_fabric_queries_total", vec![], m.queries as u64)
+                .with_help("Queries routed through the fabric frontend"),
+        );
+        out.push(
+            Sample::counter("fastpgm_fabric_failovers_total", vec![], m.failovers as u64)
+                .with_help("Shards declared dead while holding a query"),
+        );
+        out.push(
+            Sample::counter("fastpgm_fabric_respawns_total", vec![], m.respawns as u64)
+                .with_help("Shard respawns by the supervisor"),
+        );
+        out.push(
+            Sample::counter(
+                "fastpgm_fabric_fallback_answers_total",
+                vec![],
+                m.fallback_answers as u64,
+            )
+            .with_help("Queries answered by the in-process fallback router"),
+        );
+        out.push(
+            Sample::counter("fastpgm_fabric_retried_total", vec![], m.retried as u64)
+                .with_help("Transparent stale-connection redials"),
+        );
+        for (shard, n) in m.per_shard.iter().enumerate() {
+            out.push(
+                Sample::counter(
+                    "fastpgm_fabric_shard_routed_total",
+                    vec![("shard", shard.to_string())],
+                    *n as u64,
+                )
+                .with_help("Queries first routed to each shard"),
+            );
+        }
+        if !m.wire.is_empty() {
+            out.push(
+                Sample::hist(
+                    "fastpgm_stage_us",
+                    vec![("stage", "wire".to_string()), ("shard", "fleet".to_string())],
+                    m.wire.clone(),
+                )
+                .with_help("Per-stage query lifecycle time, µs"),
+            );
+        }
+        if let Ok(per_shard) = self.shard_stats() {
+            for (shard_id, models) in &per_shard {
+                stats_to_samples(models, &[("shard", shard_id.to_string())], out);
+            }
+            stats_to_samples(
+                &merge_fleet(&per_shard),
+                &[("shard", "fleet".to_string())],
+                out,
+            );
         }
     }
 }

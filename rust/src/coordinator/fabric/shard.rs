@@ -81,6 +81,9 @@ pub struct ShardConfig {
     /// Calibration [`crate::parallel::WorkPool`] width for this shard's
     /// router.
     pub pool_threads: usize,
+    /// Observability knobs for this shard's router (stage histograms,
+    /// trace sampling).
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for ShardConfig {
@@ -89,6 +92,7 @@ impl Default for ShardConfig {
             io_timeout: Duration::from_secs(30),
             max_inflight: 256,
             pool_threads: 2,
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 }
@@ -114,6 +118,12 @@ impl ShardConfig {
     /// Set the calibration pool width.
     pub fn with_pool_threads(mut self, pool_threads: usize) -> ShardConfig {
         self.pool_threads = pool_threads;
+        self
+    }
+
+    /// Set the observability knobs for this shard's router.
+    pub fn with_obs(mut self, obs: crate::obs::ObsConfig) -> ShardConfig {
+        self.obs = obs;
         self
     }
 }
@@ -195,7 +205,8 @@ impl ShardWorker {
         specs: Vec<ModelSpec>,
         config: ShardConfig,
     ) -> Result<ShardWorker, ServingError> {
-        let mut router = QueryRouter::new(config.pool_threads.max(1));
+        let mut router =
+            QueryRouter::with_obs(config.pool_threads.max(1), config.obs.clone());
         let mut spec_map = HashMap::new();
         for spec in specs {
             router.register_with_approx(
@@ -408,6 +419,13 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ShardState>) {
                 let outcome = state.serve_query(&model, request);
                 Message::Reply { id, outcome }
             }
+            // A v2 peer gets the full histogram payload; a v1 peer gets
+            // the legacy reply (the v1 codec synthesizes representative
+            // samples from the histograms).
+            Message::StatsRequest if version >= 2 => Message::StatsReplyV2 {
+                shard_id: state.shard_id,
+                per_model: state.router.read().unwrap().stats(),
+            },
             Message::StatsRequest => Message::StatsReply {
                 shard_id: state.shard_id,
                 per_model: state.router.read().unwrap().stats(),
@@ -560,10 +578,14 @@ mod tests {
         }
         wire::write_frame(&mut s, v, &Message::StatsRequest).unwrap();
         match wire::read_frame(&mut s).unwrap() {
-            (_, Message::StatsReply { shard_id: 0, per_model }) => {
+            // A full-range handshake negotiates v2, so stats arrive with
+            // histograms and stage sets intact.
+            (_, Message::StatsReplyV2 { shard_id: 0, per_model }) => {
                 assert_eq!(per_model.len(), 1);
                 assert_eq!(per_model[0].0, "asia");
                 assert_eq!(per_model[0].1.serving.requests, 1);
+                assert_eq!(per_model[0].1.serving.latency.count(), 1);
+                assert!(!per_model[0].1.serving.stages.is_empty());
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -591,6 +613,57 @@ mod tests {
         .unwrap();
         match wire::read_frame(&mut s).unwrap() {
             (_, Message::Reply { id: 9, outcome: Ok(_) }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_peer_gets_legacy_stats_reply() {
+        let w = worker();
+        let mut s = TcpStream::connect(w.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+        // Pin the handshake to v1 — an old frontend.
+        wire::write_frame(
+            &mut s,
+            MIN_SUPPORTED_VERSION,
+            &Message::Hello {
+                min_version: MIN_SUPPORTED_VERSION,
+                max_version: MIN_SUPPORTED_VERSION,
+                client: "test-v1".into(),
+            },
+        )
+        .unwrap();
+        let v = match wire::read_frame(&mut s).unwrap() {
+            (_, Message::HelloAck { version, .. }) => {
+                assert_eq!(version, MIN_SUPPORTED_VERSION);
+                version
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 1,
+                model: "asia".into(),
+                request: QueryRequest::marginal(5, Evidence::new().with(0, 1)),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 1, outcome: Ok(_) }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        wire::write_frame(&mut s, v, &Message::StatsRequest).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::StatsReply { shard_id: 0, per_model }) => {
+                assert_eq!(per_model[0].1.serving.requests, 1);
+                // Legacy decode rebuilds the latency histogram from the
+                // synthesized samples; stage sets don't cross a v1 wire.
+                assert_eq!(per_model[0].1.serving.latency.count(), 1);
+                assert!(per_model[0].1.serving.stages.is_empty());
+            }
             other => panic!("unexpected {other:?}"),
         }
     }

@@ -35,11 +35,17 @@ use crate::coordinator::{
 use crate::core::Evidence;
 use crate::inference::engine::SamplerKind;
 use crate::inference::exact::QueryEngineStats;
+use crate::obs::hist::BUCKETS;
+use crate::obs::{LatencyHistogram, Stage, StageSet};
 use std::io::{Read, Write};
 use std::time::Duration;
 
-/// Newest protocol version this build speaks.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// Newest protocol version this build speaks. **v2** adds the
+/// histogram-carrying stats reply (tag 11): shards ship bounded latency
+/// histogram buckets and per-stage histograms instead of capped raw
+/// sample arrays. v1 peers still work — both sides fall back to the
+/// legacy sample-array stats reply (tag 6) on a v1 connection.
+pub const PROTOCOL_VERSION: u16 = 2;
 /// Oldest protocol version this build still accepts.
 pub const MIN_SUPPORTED_VERSION: u16 = 1;
 
@@ -50,8 +56,10 @@ pub const MAGIC: [u8; 4] = *b"FPGM";
 /// allocation, so a garbage or hostile length field cannot OOM a peer.
 pub const MAX_PAYLOAD: usize = 16 * 1024 * 1024;
 
-/// Stats replies carry at most this many (most recent) latency samples per
-/// model, bounding frame size on long-lived shards.
+/// **Legacy (v1) stats replies only**: at most this many synthesized
+/// latency samples per model cross the wire, bounding frame size on
+/// long-lived shards. v2 replies carry fixed-size histogram buckets, so
+/// no cap is needed there.
 pub const MAX_WIRE_LATENCIES: usize = 65_536;
 
 /// Pick the highest protocol version both ranges contain.
@@ -87,6 +95,10 @@ pub enum Message {
     Reply { id: u64, outcome: Result<RoutedReply, ServingError> },
     /// Ask the shard for its per-model serving + cache stats.
     StatsRequest,
+    /// Legacy (v1) stats answer: latencies as a capped raw sample array.
+    /// A v2 sender synthesizes representative samples from its histogram
+    /// so v1 peers keep working; a v2 receiver rebuilds a histogram from
+    /// the samples. Per-stage timings do not cross a v1 connection.
     StatsReply { shard_id: u32, per_model: Vec<(String, QueryModelStats)> },
     /// Rolling reload: drain the named model's service and re-register it
     /// fresh (new engine, cold caches) from the shard's spec.
@@ -95,6 +107,11 @@ pub enum Message {
     /// Orderly shutdown: the shard acks, stops accepting, and exits.
     Shutdown,
     ShutdownAck,
+    /// v2 stats answer: latency **histograms** (bounded bucket counts +
+    /// exact count/sum/min/max) plus per-stage histograms, merged
+    /// exactly on the frontend. Only sent on connections negotiated at
+    /// version ≥ 2.
+    StatsReplyV2 { shard_id: u32, per_model: Vec<(String, QueryModelStats)> },
 }
 
 impl Message {
@@ -111,6 +128,7 @@ impl Message {
             Message::DrainAck { .. } => 8,
             Message::Shutdown => 9,
             Message::ShutdownAck => 10,
+            Message::StatsReplyV2 { .. } => 11,
         }
     }
 }
@@ -400,7 +418,8 @@ fn get_error(d: &mut Dec) -> Result<ServingError, ServingError> {
     Ok(ServingError::from_wire(code, a, b, detail))
 }
 
-fn put_metrics(buf: &mut Vec<u8>, m: &ServingMetrics) {
+/// Shared scalar prefix of both metrics encodings.
+fn put_metrics_scalars(buf: &mut Vec<u8>, m: &ServingMetrics) {
     put_u64(buf, m.requests as u64);
     put_u64(buf, m.batches as u64);
     put_u64(buf, m.exec_time_total.as_nanos() as u64);
@@ -409,38 +428,140 @@ fn put_metrics(buf: &mut Vec<u8>, m: &ServingMetrics) {
     put_u64(buf, m.warm_starts as u64);
     put_u64(buf, m.cold_misses as u64);
     put_str(buf, m.kernel);
-    let lat = m.latencies_us();
-    let tail = &lat[lat.len().saturating_sub(MAX_WIRE_LATENCIES)..];
+}
+
+struct MetricsScalars {
+    requests: usize,
+    batches: usize,
+    exec_time_total: Duration,
+    exact_requests: usize,
+    approx_requests: usize,
+    warm_starts: usize,
+    cold_misses: usize,
+    kernel: &'static str,
+}
+
+fn get_metrics_scalars(d: &mut Dec) -> Result<MetricsScalars, ServingError> {
+    Ok(MetricsScalars {
+        requests: d.u64("metrics requests")? as usize,
+        batches: d.u64("metrics batches")? as usize,
+        exec_time_total: Duration::from_nanos(d.u64("metrics exec ns")?),
+        exact_requests: d.u64("metrics exact")? as usize,
+        approx_requests: d.u64("metrics approx")? as usize,
+        warm_starts: d.u64("metrics warm starts")? as usize,
+        cold_misses: d.u64("metrics cold misses")? as usize,
+        kernel: intern_kernel(&d.str("metrics kernel")?),
+    })
+}
+
+/// Legacy (v1) metrics body: latencies as a capped raw sample array,
+/// synthesized from the histogram (one value per recorded entry at its
+/// bucket's clamped upper edge, exact min/max pinned) so v1 peers see
+/// percentiles within one bucket of the truth.
+fn put_metrics(buf: &mut Vec<u8>, m: &ServingMetrics) {
+    put_metrics_scalars(buf, m);
+    let tail = m.latency.representative_samples(MAX_WIRE_LATENCIES);
     put_u32(buf, tail.len() as u32);
-    for &us in tail {
+    for &us in &tail {
         put_u64(buf, us);
     }
 }
 
 fn get_metrics(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
-    let requests = d.u64("metrics requests")? as usize;
-    let batches = d.u64("metrics batches")? as usize;
-    let exec_time_total = Duration::from_nanos(d.u64("metrics exec ns")?);
-    let exact_requests = d.u64("metrics exact")? as usize;
-    let approx_requests = d.u64("metrics approx")? as usize;
-    let warm_starts = d.u64("metrics warm starts")? as usize;
-    let cold_misses = d.u64("metrics cold misses")? as usize;
-    let kernel = intern_kernel(&d.str("metrics kernel")?);
+    let s = get_metrics_scalars(d)?;
     let n = d.count("metrics latency count")?;
-    let mut latencies_us = Vec::with_capacity(n);
+    let mut latency = LatencyHistogram::new();
     for _ in 0..n {
-        latencies_us.push(d.u64("metrics latency")?);
+        latency.record(d.u64("metrics latency")?);
     }
     Ok(ServingMetrics::from_wire_parts(
-        requests,
-        batches,
-        exec_time_total,
-        exact_requests,
-        approx_requests,
-        warm_starts,
-        cold_misses,
-        kernel,
-        latencies_us,
+        s.requests,
+        s.batches,
+        s.exec_time_total,
+        s.exact_requests,
+        s.approx_requests,
+        s.warm_starts,
+        s.cold_misses,
+        s.kernel,
+        latency,
+        StageSet::default(),
+    ))
+}
+
+/// One histogram on the wire: exact scalars plus sparse nonzero buckets
+/// (`u8` index, `u64` count) — a cold histogram costs 33 bytes, a fully
+/// populated one ~610.
+fn put_hist(buf: &mut Vec<u8>, h: &LatencyHistogram) {
+    let (count, sum, min_raw, max) = h.raw_parts();
+    put_u64(buf, count);
+    put_u64(buf, sum);
+    put_u64(buf, min_raw);
+    put_u64(buf, max);
+    let nonzero = h.buckets().iter().filter(|&&c| c != 0).count();
+    buf.push(nonzero as u8);
+    for (idx, &c) in h.buckets().iter().enumerate() {
+        if c != 0 {
+            buf.push(idx as u8);
+            put_u64(buf, c);
+        }
+    }
+}
+
+fn get_hist(d: &mut Dec) -> Result<LatencyHistogram, ServingError> {
+    let count = d.u64("hist count")?;
+    let sum = d.u64("hist sum")?;
+    let min_raw = d.u64("hist min")?;
+    let max = d.u64("hist max")?;
+    let nonzero = d.u8("hist nonzero buckets")? as usize;
+    let mut counts = [0u64; BUCKETS];
+    for _ in 0..nonzero {
+        let idx = d.u8("hist bucket index")? as usize;
+        if idx >= BUCKETS {
+            return Err(ServingError::Wire(format!(
+                "histogram bucket index {idx} out of range"
+            )));
+        }
+        counts[idx] = d.u64("hist bucket count")?;
+    }
+    Ok(LatencyHistogram::from_parts(&counts, count, sum, min_raw, max))
+}
+
+/// v2 metrics body: scalars + latency histogram + per-stage histograms
+/// (count-prefixed in [`Stage::ALL`] order, so a later version can add
+/// stages without breaking v2 decoders).
+fn put_metrics_v2(buf: &mut Vec<u8>, m: &ServingMetrics) {
+    put_metrics_scalars(buf, m);
+    put_hist(buf, &m.latency);
+    buf.push(Stage::ALL.len() as u8);
+    for &stage in &Stage::ALL {
+        put_hist(buf, m.stages.get(stage));
+    }
+}
+
+fn get_metrics_v2(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
+    let s = get_metrics_scalars(d)?;
+    let latency = get_hist(d)?;
+    let n_stages = d.u8("metrics stage count")? as usize;
+    let mut stages = StageSet::default();
+    for i in 0..n_stages {
+        let h = get_hist(d)?;
+        // Stages beyond the ones this build knows are decoded (the
+        // frame must drain) but dropped.
+        if let Some(stage) = Stage::from_index(i) {
+            *stages.get_mut(stage) = h;
+        }
+    }
+    Ok(ServingMetrics::from_wire_parts(
+        s.requests,
+        s.batches,
+        s.exec_time_total,
+        s.exact_requests,
+        s.approx_requests,
+        s.warm_starts,
+        s.cold_misses,
+        s.kernel,
+        latency,
+        stages,
     ))
 }
 
@@ -511,6 +632,15 @@ pub fn encode_payload(msg: &Message) -> Vec<u8> {
                 put_cache_stats(&mut buf, &stats.cache);
             }
         }
+        Message::StatsReplyV2 { shard_id, per_model } => {
+            put_u32(&mut buf, *shard_id);
+            put_u32(&mut buf, per_model.len() as u32);
+            for (name, stats) in per_model {
+                put_str(&mut buf, name);
+                put_metrics_v2(&mut buf, &stats.serving);
+                put_cache_stats(&mut buf, &stats.cache);
+            }
+        }
         Message::Drain { model } => put_str(&mut buf, model),
         Message::DrainAck { model, replaced } => {
             put_str(&mut buf, model);
@@ -577,6 +707,18 @@ pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message, ServingError> 
         },
         9 => Message::Shutdown,
         10 => Message::ShutdownAck,
+        11 => {
+            let shard_id = d.u32("statsreplyv2 shard id")?;
+            let n = d.count("statsreplyv2 model count")?;
+            let mut per_model = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = d.str("statsreplyv2 model name")?;
+                let serving = get_metrics_v2(&mut d)?;
+                let cache = get_cache_stats(&mut d)?;
+                per_model.push((name, QueryModelStats { serving, cache }));
+            }
+            Message::StatsReplyV2 { shard_id, per_model }
+        }
         t => return Err(ServingError::Wire(format!("unknown message type tag {t}"))),
     };
     d.finish("message payload")?;
@@ -774,8 +916,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn round_trip_stats() {
+    fn sample_stats() -> (ServingMetrics, QueryEngineStats) {
         let mut serving = ServingMetrics::default();
         serving.record_batch(5, Duration::from_micros(123));
         serving.record_latency(Duration::from_micros(250));
@@ -785,6 +926,8 @@ mod tests {
         serving.warm_starts = 2;
         serving.cold_misses = 1;
         serving.kernel = "fused";
+        serving.stages.record_us(crate::obs::Stage::Queue, 40);
+        serving.stages.record_us(crate::obs::Stage::Kernel, 180);
         let cache = QueryEngineStats {
             hits: 10,
             warm_starts: 2,
@@ -792,24 +935,82 @@ mod tests {
             evictions: 3,
             entries: 4,
         };
-        let msg = Message::StatsReply {
+        (serving, cache)
+    }
+
+    /// The v2 stats reply round-trips histograms bucket-exactly,
+    /// including per-stage timings.
+    #[test]
+    fn round_trip_stats_v2() {
+        let (serving, cache) = sample_stats();
+        let msg = Message::StatsReplyV2 {
             shard_id: 3,
-            per_model: vec![("asia".into(), QueryModelStats { serving, cache })],
+            per_model: vec![(
+                "asia".into(),
+                QueryModelStats { serving: serving.clone(), cache },
+            )],
         };
         match round_trip(msg) {
-            Message::StatsReply { shard_id, per_model } => {
+            Message::StatsReplyV2 { shard_id, per_model } => {
                 assert_eq!(shard_id, 3);
                 let (name, stats) = &per_model[0];
                 assert_eq!(name, "asia");
-                assert_eq!(stats.serving.requests, 5);
-                assert_eq!(stats.serving.batches, 1);
-                assert_eq!(stats.serving.exact_requests, 4);
-                assert_eq!(stats.serving.approx_requests, 1);
-                assert_eq!(stats.serving.warm_starts, 2);
-                assert_eq!(stats.serving.cold_misses, 1);
-                assert_eq!(stats.serving.kernel, "fused");
-                assert_eq!(stats.serving.latencies_us(), &[250, 999]);
+                // Bucket-exact: the whole metrics struct is Eq.
+                assert_eq!(stats.serving, serving);
                 assert_eq!(stats.cache, cache);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// The legacy (v1) stats reply survives with percentile fidelity:
+    /// samples synthesized from the histogram reproduce min/max/count
+    /// exactly, percentiles within one bucket. Stage timings are a v2
+    /// feature and do not cross.
+    #[test]
+    fn round_trip_stats_legacy_v1() {
+        let (serving, cache) = sample_stats();
+        let msg = Message::StatsReply {
+            shard_id: 3,
+            per_model: vec![(
+                "asia".into(),
+                QueryModelStats { serving: serving.clone(), cache },
+            )],
+        };
+        // v1 frames decode under the v1 stamp.
+        let frame = encode_frame(MIN_SUPPORTED_VERSION, &msg);
+        let (version, back) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(version, MIN_SUPPORTED_VERSION);
+        match back {
+            Message::StatsReply { shard_id, per_model } => {
+                assert_eq!(shard_id, 3);
+                let (_, stats) = &per_model[0];
+                assert_eq!(stats.serving.requests, 5);
+                assert_eq!(stats.serving.kernel, "fused");
+                assert_eq!(stats.serving.latency.count(), 2);
+                assert_eq!(stats.serving.latency.min(), 250);
+                assert_eq!(stats.serving.latency.max(), 999);
+                assert!(stats.serving.stages.is_empty());
+                assert_eq!(stats.cache, cache);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Empty histograms (min sentinel) round-trip exactly in v2.
+    #[test]
+    fn round_trip_stats_v2_empty() {
+        let serving = ServingMetrics::default();
+        let msg = Message::StatsReplyV2 {
+            shard_id: 0,
+            per_model: vec![(
+                "m".into(),
+                QueryModelStats { serving: serving.clone(), cache: Default::default() },
+            )],
+        };
+        match round_trip(msg) {
+            Message::StatsReplyV2 { per_model, .. } => {
+                assert_eq!(per_model[0].1.serving, serving);
             }
             other => panic!("unexpected {other:?}"),
         }

@@ -1,5 +1,14 @@
 //! Serving metrics: batch sizes, execution time, end-to-end latency.
+//!
+//! Latency lives in a bounded [`LatencyHistogram`] (64 log buckets +
+//! exact count/sum/min/max) — constant memory under sustained load,
+//! where the previous raw `Vec<u64>` grew one entry per request forever
+//! and had to be tail-capped to cross the fabric wire. Percentiles off
+//! the histogram are exact at p0/p100 and within one log bucket
+//! elsewhere; the mean is exact. Per-stage timings ([`StageSet`])
+//! travel alongside, merging the same way.
 
+use crate::obs::{LatencyHistogram, StageSet};
 use std::time::Duration;
 
 /// Aggregated counters for one batcher.
@@ -27,7 +36,12 @@ pub struct ServingMetrics {
     /// — populated at read time by `QueryRouter::stats()` like the
     /// warm-start counters; empty outside the router.
     pub kernel: &'static str,
-    latencies_us: Vec<u64>,
+    /// End-to-end (enqueue → reply) latency distribution.
+    pub latency: LatencyHistogram,
+    /// Per-stage latency distributions (queue/route/cache/calibration/
+    /// kernel/wire) — empty unless the router runs with stage recording
+    /// on ([`crate::obs::ObsLevel::Counters`] or above).
+    pub stages: StageSet,
 }
 
 impl ServingMetrics {
@@ -38,24 +52,16 @@ impl ServingMetrics {
     }
 
     pub fn record_latency(&mut self, latency: Duration) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.latency.record_duration(latency);
     }
 
     /// Record an already-measured latency in microseconds (the wire
     /// decoder's entry point — latencies cross the fabric as raw µs).
     pub fn record_latency_us(&mut self, us: u64) {
-        self.latencies_us.push(us);
+        self.latency.record(us);
     }
 
-    /// The raw recorded latencies in microseconds, unsorted (what the wire
-    /// encoder serializes so percentile math survives the hop intact).
-    pub fn latencies_us(&self) -> &[u64] {
-        &self.latencies_us
-    }
-
-    /// Rebuild a snapshot from its wire-decoded parts (fabric use only —
-    /// the latency vector is private, so the decoder cannot use a struct
-    /// literal).
+    /// Rebuild a snapshot from its wire-decoded parts (fabric use only).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_wire_parts(
         requests: usize,
@@ -66,7 +72,8 @@ impl ServingMetrics {
         warm_starts: usize,
         cold_misses: usize,
         kernel: &'static str,
-        latencies_us: Vec<u64>,
+        latency: LatencyHistogram,
+        stages: StageSet,
     ) -> ServingMetrics {
         ServingMetrics {
             requests,
@@ -77,14 +84,15 @@ impl ServingMetrics {
             warm_starts,
             cold_misses,
             kernel,
-            latencies_us,
+            latency,
+            stages,
         }
     }
 
     /// Fold another metrics snapshot into this one (the fabric frontend
-    /// aggregates per-shard metrics into a fleet view). Counters add,
-    /// latency samples concatenate; the kernel label is kept only when
-    /// both sides agree (mixed-kernel fleets report an empty label).
+    /// aggregates per-shard metrics into a fleet view). Counters add and
+    /// histograms merge bucket-exactly; the kernel label is kept only
+    /// when both sides agree (mixed-kernel fleets report an empty label).
     pub fn merge_from(&mut self, other: &ServingMetrics) {
         self.requests += other.requests;
         self.batches += other.batches;
@@ -93,7 +101,8 @@ impl ServingMetrics {
         self.approx_requests += other.approx_requests;
         self.warm_starts += other.warm_starts;
         self.cold_misses += other.cold_misses;
-        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.latency.merge(&other.latency);
+        self.stages.merge(&other.stages);
         if self.kernel != other.kernel {
             self.kernel = "";
         }
@@ -107,22 +116,15 @@ impl ServingMetrics {
         }
     }
 
-    /// Latency percentile in microseconds (p in [0, 100]).
+    /// Latency percentile in microseconds (p in [0, 100]). Exact at the
+    /// extremes, within one log bucket in between.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64 * p / 100.0) as usize).min(v.len() - 1);
-        v[idx]
+        self.latency.percentile(p)
     }
 
+    /// Exact mean latency in microseconds.
     pub fn mean_latency_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+        self.latency.mean()
     }
 
     /// Requests per second of pure scorer execution time.
@@ -169,6 +171,7 @@ impl ServingMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::Stage;
 
     #[test]
     fn records_and_aggregates() {
@@ -203,24 +206,50 @@ mod tests {
     }
 
     #[test]
+    fn latency_memory_is_bounded() {
+        // The regression the histogram fixes: recording must not grow
+        // per-sample state. The struct is Clone + Eq over fixed arrays,
+        // so equal counts in equal buckets compare equal regardless of
+        // how many samples produced them — and size_of is constant.
+        let mut m = ServingMetrics::default();
+        for i in 0..200_000u64 {
+            m.record_latency_us(100 + (i % 7));
+        }
+        assert_eq!(m.latency.count(), 200_000);
+        assert_eq!(
+            std::mem::size_of_val(&m.latency),
+            std::mem::size_of::<LatencyHistogram>()
+        );
+        // Percentiles stay sane at volume.
+        assert!(m.latency_percentile_us(50.0) >= 100);
+        assert!(m.latency_percentile_us(50.0) <= 127);
+    }
+
+    #[test]
     fn merge_adds_counters_and_latencies() {
         let mut a = ServingMetrics::default();
         a.record_batch(4, Duration::from_millis(1));
         a.record_latency(Duration::from_micros(100));
         a.exact_requests = 4;
         a.kernel = "fused";
+        a.stages.record(Stage::Queue, Duration::from_micros(40));
         let mut b = ServingMetrics::default();
         b.record_batch(2, Duration::from_millis(3));
         b.record_latency_us(300);
         b.approx_requests = 2;
         b.kernel = "fused";
+        b.stages.record(Stage::Queue, Duration::from_micros(60));
         a.merge_from(&b);
         assert_eq!(a.requests, 6);
         assert_eq!(a.batches, 2);
         assert_eq!(a.exec_time_total, Duration::from_millis(4));
         assert_eq!(a.exact_requests, 4);
         assert_eq!(a.approx_requests, 2);
-        assert_eq!(a.latencies_us(), &[100, 300]);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.latency.min(), 100);
+        assert_eq!(a.latency.max(), 300);
+        assert_eq!(a.stages.get(Stage::Queue).count(), 2);
+        assert_eq!(a.stages.get(Stage::Queue).sum(), 100);
         assert_eq!(a.kernel, "fused");
         // Mixed kernels blank the label.
         let mut c = ServingMetrics::default();

@@ -32,6 +32,7 @@ use crate::inference::engine::{ApproxEngine, EngineChoice, SamplerKind};
 use crate::inference::exact::{QueryEngine, QueryEngineConfig, QueryEngineStats};
 use crate::inference::Posterior;
 use crate::network::BayesianNetwork;
+use crate::obs::{Collector, ObsConfig, Sample, SpanRecord, Stage};
 use crate::parallel::WorkPool;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -303,6 +304,12 @@ struct ServiceCore {
     /// Dedicated approx-tier threads currently running (incremented only
     /// by the batcher thread, decremented by the threads themselves).
     approx_inflight: Arc<AtomicUsize>,
+    /// Observability knobs: stage-histogram recording and the sampled
+    /// trace sink (cheap clones; `ObsLevel::Off` costs one branch).
+    obs: ObsConfig,
+    /// Model label for trace records (empty when spawned outside a
+    /// router).
+    model: Arc<str>,
 }
 
 impl QueryService {
@@ -323,6 +330,20 @@ impl QueryService {
         pool: Arc<WorkPool>,
         config: BatcherConfig,
         approx: ApproxConfig,
+    ) -> QueryService {
+        Self::spawn_with_obs(engine, pool, config, approx, ObsConfig::default(), "")
+    }
+
+    /// Spawn with explicit observability knobs and a model label for
+    /// trace records (what [`QueryRouter`] uses — the label is the
+    /// registered model name).
+    pub fn spawn_with_obs(
+        engine: Arc<QueryEngine>,
+        pool: Arc<WorkPool>,
+        config: BatcherConfig,
+        approx: ApproxConfig,
+        obs: ObsConfig,
+        model: &str,
     ) -> QueryService {
         let net = engine.network();
         let n_vars = net.n_vars();
@@ -351,6 +372,8 @@ impl QueryService {
             stop: Arc::clone(&stop),
             metrics: Arc::clone(&metrics),
             approx_inflight: Arc::new(AtomicUsize::new(0)),
+            obs,
+            model: Arc::from(model),
         };
         let worker = std::thread::Builder::new()
             .name("fastpgm-query-batcher".into())
@@ -433,7 +456,25 @@ impl QueryService {
     /// its old service before the replacement is swapped in, so no
     /// in-flight query is dropped (see [`super::drain_worker`]).
     pub fn drain(mut self) {
+        self.drain_in_place();
+    }
+
+    /// The by-`&mut` drain step — lets [`QueryRouter`] snapshot the final
+    /// stats *after* the flush (so the retired baseline counts every
+    /// drained query) and before the service is dropped.
+    fn drain_in_place(&mut self) {
         super::drain_worker(&mut self.tx, &mut self.worker);
+    }
+
+    /// Serving + cache stats with the two views reconciled (warm/cold
+    /// counters and kernel label come from the engine at read time).
+    fn model_stats(&self) -> QueryModelStats {
+        let cache = self.engine.stats();
+        let mut serving = self.metrics.lock().unwrap().clone();
+        serving.warm_starts = cache.warm_starts as usize;
+        serving.cold_misses = cache.cold_misses as usize;
+        serving.kernel = self.engine.kernel_mode().label();
+        QueryModelStats { serving, cache }
     }
 }
 
@@ -472,6 +513,10 @@ impl ServiceCore {
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
             }
+
+            // Route stage: the shed decision + evidence grouping for this
+            // flush (one sample per flush, on the batcher thread).
+            let route_t0 = self.obs.now();
 
             // Load signals for the shedding policy.
             let stats = self.engine.stats();
@@ -527,15 +572,38 @@ impl ServiceCore {
             exact_groups.sort_by(|a, b| {
                 a.0.len().cmp(&b.0.len()).then_with(|| a.0.cmp(&b.0))
             });
+            if let Some(t0) = route_t0 {
+                self.metrics.lock().unwrap().stages.record(Stage::Route, t0.elapsed());
+            }
             for (evidence, members) in exact_groups {
                 let engine = Arc::clone(&self.engine);
                 let metrics = Arc::clone(&self.metrics);
+                let obs = self.obs.clone();
+                let model = Arc::clone(&self.model);
                 self.pool.execute(move || {
                     // Time the whole unit of work — calibration (or cache
                     // hit) plus every member's marginalization — so the
                     // reported exec/latency match what clients waited for.
                     let t0 = Instant::now();
-                    let calibrated = engine.calibrated(&evidence);
+                    // Queue stage per member: enqueue → this group's
+                    // execution starts (includes the pool wait).
+                    let queue_us: Vec<u64> = if obs.stages() {
+                        members
+                            .iter()
+                            .map(|p| {
+                                t0.saturating_duration_since(p.enqueued).as_micros()
+                                    as u64
+                            })
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let (calibrated, timing) = if obs.stages() {
+                        let (c, t) = engine.calibrated_timed(&evidence);
+                        (c, Some(t))
+                    } else {
+                        (engine.calibrated(&evidence), None)
+                    };
                     // Cross-request batching: one shared posterior_all
                     // pass answers every all-marginals request in the
                     // group.
@@ -565,6 +633,37 @@ impl ServiceCore {
                         m.exact_requests += members.len();
                         for p in &members {
                             m.record_latency(p.enqueued.elapsed());
+                        }
+                        if let Some(t) = &timing {
+                            for &us in &queue_us {
+                                m.stages.record_us(Stage::Queue, us);
+                            }
+                            // One cache/calibration sample per evidence
+                            // group: the group shares one lookup.
+                            m.stages.record_us(Stage::Cache, t.lookup_ns / 1_000);
+                            if t.calibrate_ns > 0 {
+                                m.stages
+                                    .record_us(Stage::Calibration, t.calibrate_ns / 1_000);
+                                m.stages.record_us(Stage::Kernel, t.kernel_ns / 1_000);
+                            }
+                        }
+                    }
+                    if obs.traces() {
+                        if let (Some(trace), Some(t)) = (obs.trace.as_ref(), &timing) {
+                            for (i, p) in members.iter().enumerate() {
+                                let mut stages =
+                                    vec![(Stage::Queue, queue_us[i]), (Stage::Cache, t.lookup_ns / 1_000)];
+                                if t.calibrate_ns > 0 {
+                                    stages.push((Stage::Calibration, t.calibrate_ns / 1_000));
+                                    stages.push((Stage::Kernel, t.kernel_ns / 1_000));
+                                }
+                                trace.offer(&SpanRecord {
+                                    model: model.as_ref().to_string(),
+                                    tier: "exact",
+                                    total_us: p.enqueued.elapsed().as_micros() as u64,
+                                    stages,
+                                });
+                            }
                         }
                     }
                     for (p, reply) in members.into_iter().zip(answers) {
@@ -600,10 +699,14 @@ impl ServiceCore {
                     self.approx_inflight.fetch_add(1, Ordering::Relaxed);
                     let metrics = Arc::clone(&self.metrics);
                     let inflight = Arc::clone(&self.approx_inflight);
+                    let obs = self.obs.clone();
+                    let model = Arc::clone(&self.model);
                     let spawned = std::thread::Builder::new()
                         .name("fastpgm-approx-tier".into())
                         .spawn(move || {
-                            answer_approx_group(&ae, &metrics, &evidence, members);
+                            answer_approx_group(
+                                &ae, &metrics, &evidence, members, &obs, &model,
+                            );
                             inflight.fetch_sub(1, Ordering::Relaxed);
                         });
                     if let Err(e) = spawned {
@@ -616,7 +719,14 @@ impl ServiceCore {
                         eprintln!("coordinator: approx-tier thread spawn failed: {e}");
                     }
                 } else {
-                    answer_approx_group(&ae, &self.metrics, &evidence, members);
+                    answer_approx_group(
+                        &ae,
+                        &self.metrics,
+                        &evidence,
+                        members,
+                        &self.obs,
+                        &self.model,
+                    );
                 }
             }
         }
@@ -633,6 +743,8 @@ fn answer_approx_group(
     metrics: &Mutex<ServingMetrics>,
     evidence: &Evidence,
     members: Vec<PendingQuery>,
+    obs: &ObsConfig,
+    model: &str,
 ) {
     let t0 = Instant::now();
     let run = ae.run(evidence);
@@ -653,6 +765,36 @@ fn answer_approx_group(
         m.approx_requests += members.len();
         for p in &members {
             m.record_latency(p.enqueued.elapsed());
+        }
+        if obs.stages() {
+            for p in &members {
+                m.stages.record(
+                    Stage::Queue,
+                    t0.saturating_duration_since(p.enqueued),
+                );
+            }
+            // On the approx tier the "kernel" stage is the sampling run
+            // (one sample per evidence group, like exact calibration).
+            m.stages.record(Stage::Kernel, exec);
+        }
+    }
+    if obs.traces() {
+        if let Some(trace) = obs.trace.as_ref() {
+            let exec_us = exec.as_micros() as u64;
+            for p in &members {
+                trace.offer(&SpanRecord {
+                    model: model.to_string(),
+                    tier: "approx",
+                    total_us: p.enqueued.elapsed().as_micros() as u64,
+                    stages: vec![
+                        (
+                            Stage::Queue,
+                            t0.saturating_duration_since(p.enqueued).as_micros() as u64,
+                        ),
+                        (Stage::Kernel, exec_us),
+                    ],
+                });
+            }
         }
     }
     for (p, reply) in members.into_iter().zip(answers) {
@@ -704,10 +846,25 @@ impl Drop for QueryService {
 }
 
 /// Snapshot of one model's query-serving state.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct QueryModelStats {
     pub serving: ServingMetrics,
     pub cache: QueryEngineStats,
+}
+
+impl QueryModelStats {
+    /// Fold another snapshot into this one: serving counters/histograms
+    /// merge per [`ServingMetrics::merge_from`]; cache counters add,
+    /// including `entries` (callers folding a *retired* cache zero its
+    /// entries first — a drained service's cache no longer exists).
+    pub fn merge_from(&mut self, other: &QueryModelStats) {
+        self.serving.merge_from(&other.serving);
+        self.cache.hits += other.cache.hits;
+        self.cache.warm_starts += other.cache.warm_starts;
+        self.cache.cold_misses += other.cache.cold_misses;
+        self.cache.evictions += other.cache.evictions;
+        self.cache.entries += other.cache.entries;
+    }
 }
 
 /// Routes posterior queries by model name to per-model [`QueryService`]s,
@@ -716,13 +873,35 @@ pub struct QueryRouter {
     // Field order matters for drop: services stop accepting + join their
     // batcher threads first, then the pool drains and joins its workers.
     models: HashMap<String, QueryService>,
+    /// Final stats of drained (replaced) services, folded per model name
+    /// so [`QueryRouter::stats`] counters stay monotonic across hot
+    /// reloads.
+    retired: HashMap<String, QueryModelStats>,
+    obs: ObsConfig,
     pool: Arc<WorkPool>,
 }
 
 impl QueryRouter {
     /// Create a router whose calibrations run on `threads` pool workers.
     pub fn new(threads: usize) -> QueryRouter {
-        QueryRouter { models: HashMap::new(), pool: Arc::new(WorkPool::new(threads)) }
+        Self::with_obs(threads, ObsConfig::default())
+    }
+
+    /// Create a router with explicit observability knobs — stage
+    /// recording level and optional trace sink — applied to every model
+    /// registered afterwards.
+    pub fn with_obs(threads: usize, obs: ObsConfig) -> QueryRouter {
+        QueryRouter {
+            models: HashMap::new(),
+            retired: HashMap::new(),
+            obs,
+            pool: Arc::new(WorkPool::new(threads)),
+        }
+    }
+
+    /// The router's observability configuration.
+    pub fn obs(&self) -> &ObsConfig {
+        &self.obs
     }
 
     /// Register (or replace) an exact-only model. Returns `true` when an
@@ -778,18 +957,32 @@ impl QueryRouter {
         batcher_config: BatcherConfig,
         approx: ApproxConfig,
     ) -> bool {
-        let service = QueryService::spawn_with_approx(
+        let service = QueryService::spawn_with_obs(
             engine,
             Arc::clone(&self.pool),
             batcher_config,
             approx,
+            self.obs.clone(),
+            &name,
         );
+        let retired = &mut self.retired;
+        let retired_name = name.clone();
         super::register_model(
             &mut self.models,
             name,
             service,
             "query service",
-            QueryService::drain,
+            |mut old: QueryService| {
+                // Snapshot *after* the flush so the retired baseline
+                // counts every drained query, then fold it in — this is
+                // what keeps `stats()` monotonic across hot reloads.
+                old.drain_in_place();
+                let mut fin = old.model_stats();
+                // The drained cache is gone; its entry count must not
+                // inflate the live `entries` gauge.
+                fin.cache.entries = 0;
+                retired.entry(retired_name).or_default().merge_from(&fin);
+            },
         )
     }
 
@@ -867,26 +1060,142 @@ impl QueryRouter {
     }
 
     /// Per-model serving + cache stats, sorted by model name.
+    ///
+    /// # Consistency model
+    ///
+    /// * **Monotonic counters across reads.** Every counter (requests,
+    ///   batches, tier counts, cache hits/warm/cold/evictions, histogram
+    ///   counts and sums) only grows between two consecutive `stats()`
+    ///   calls on the same router — *including across hot reloads*: when
+    ///   `register*` replaces a model, the drained service's final
+    ///   counters are folded into a retired per-name baseline that every
+    ///   subsequent read adds back in. `cache.entries` is the one gauge
+    ///   in the row (live cache size); it legitimately shrinks on
+    ///   eviction and resets on reload.
+    /// * **Read-time reconciliation, not atomic snapshots.** Warm/cold
+    ///   counters live in the engine (calibrations run on pool jobs the
+    ///   batcher never observes synchronously); the serving view is
+    ///   populated from those authoritative totals at read time, and the
+    ///   kernel label from the engine, so both views in one row always
+    ///   agree on them. The serving-metrics mutex and the engine's cache
+    ///   mutex are taken separately, though: a row read under load may
+    ///   pair a slightly newer cache view with a slightly older serving
+    ///   view (e.g. `cache.hits` counting a query whose latency is not in
+    ///   the histogram yet). Each individual counter is still monotonic;
+    ///   cross-counter invariants (`requests == hits + misses`) hold only
+    ///   at quiescence.
     pub fn stats(&self) -> Vec<(String, QueryModelStats)> {
         let mut out: Vec<(String, QueryModelStats)> = self
             .models
             .iter()
             .map(|(name, s)| {
-                let cache = s.engine().stats();
-                let mut serving = s.metrics.lock().unwrap().clone();
-                // Warm/cold counters live in the engine (calibrations run
-                // on pool jobs the batcher never observes synchronously);
-                // populate the serving view from those authoritative
-                // totals at read time so both views in one
-                // QueryModelStats always agree.
-                serving.warm_starts = cache.warm_starts as usize;
-                serving.cold_misses = cache.cold_misses as usize;
-                serving.kernel = s.engine().kernel_mode().label();
-                (name.clone(), QueryModelStats { serving, cache })
+                let mut ms = s.model_stats();
+                if let Some(base) = self.retired.get(name) {
+                    ms.merge_from(base);
+                }
+                (name.clone(), ms)
             })
             .collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
+    }
+}
+
+/// Render a stats snapshot as registry samples. `extra` labels (e.g.
+/// `shard`) are appended to every sample's label set — shared by the
+/// in-process router collector and the fabric frontend's per-shard and
+/// fleet-merged views.
+pub(crate) fn stats_to_samples(
+    stats: &[(String, QueryModelStats)],
+    extra: &[(&'static str, String)],
+    out: &mut Vec<Sample>,
+) {
+    let labels = |model: &str| -> crate::obs::Labels {
+        let mut l: crate::obs::Labels = vec![("model", model.to_string())];
+        l.extend(extra.iter().cloned());
+        l
+    };
+    for (model, ms) in stats {
+        let m = &ms.serving;
+        out.push(
+            Sample::counter("fastpgm_requests_total", labels(model), m.requests as u64)
+                .with_help("Queries answered"),
+        );
+        out.push(
+            Sample::counter("fastpgm_batches_total", labels(model), m.batches as u64)
+                .with_help("Evidence-group batches executed"),
+        );
+        out.push(
+            Sample::counter(
+                "fastpgm_exec_us_total",
+                labels(model),
+                m.exec_time_total.as_micros() as u64,
+            )
+            .with_help("Scorer execution time, µs"),
+        );
+        for (tier, n) in [("exact", m.exact_requests), ("approx", m.approx_requests)] {
+            let mut l = labels(model);
+            l.push(("tier", tier.to_string()));
+            out.push(
+                Sample::counter("fastpgm_tier_requests_total", l, n as u64)
+                    .with_help("Queries answered per tier"),
+            );
+        }
+        out.push(
+            Sample::hist("fastpgm_latency_us", labels(model), m.latency.clone())
+                .with_help("End-to-end (enqueue to reply) query latency, µs"),
+        );
+        for (stage, h) in m.stages.iter() {
+            if h.is_empty() {
+                continue;
+            }
+            let mut l = labels(model);
+            l.push(("stage", stage.label().to_string()));
+            out.push(
+                Sample::hist("fastpgm_stage_us", l, h.clone())
+                    .with_help("Per-stage query lifecycle time, µs"),
+            );
+        }
+        let c = &ms.cache;
+        for (outcome, n) in [
+            ("hit", c.hits),
+            ("warm", c.warm_starts),
+            ("cold", c.cold_misses),
+        ] {
+            let mut l = labels(model);
+            l.push(("outcome", outcome.to_string()));
+            out.push(
+                Sample::counter("fastpgm_cache_lookups_total", l, n)
+                    .with_help("Calibration-cache lookups by outcome"),
+            );
+        }
+        out.push(
+            Sample::counter("fastpgm_cache_evictions_total", labels(model), c.evictions)
+                .with_help("Calibration-cache evictions"),
+        );
+        out.push(
+            Sample::gauge("fastpgm_cache_entries", labels(model), c.entries as f64)
+                .with_help("Live calibration-cache entries"),
+        );
+        if !m.kernel.is_empty() {
+            let mut l = labels(model);
+            l.push(("kernel", m.kernel.to_string()));
+            out.push(
+                Sample::gauge("fastpgm_kernel_info", l, 1.0)
+                    .with_help("Message-kernel implementation in use"),
+            );
+        }
+    }
+}
+
+/// The router publishes every registered model's serving and cache stats
+/// at scrape time. Register with
+/// `Registry::global().register("query-router", Arc::downgrade(&router))`
+/// after wrapping the router in an `Arc` (the registry holds collectors
+/// weakly, so a dropped router simply vanishes from scrapes).
+impl Collector for QueryRouter {
+    fn collect(&self, out: &mut Vec<Sample>) {
+        stats_to_samples(&self.stats(), &[], out);
     }
 }
 
@@ -1085,6 +1394,160 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn stats_stay_monotonic_across_reregistration() {
+        // The regression: replacing a model used to reset its counters to
+        // zero, so two consecutive stats() reads could go backwards.
+        let mut r = QueryRouter::new(1);
+        r.register(
+            "m",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        let ev = Evidence::new().with(0, 1);
+        for _ in 0..3 {
+            r.posterior("m", 5, ev.clone()).unwrap();
+        }
+        let before = r.stats()[0].1.clone();
+        assert_eq!(before.serving.requests, 3);
+        assert!(before.cache.hits + before.cache.misses() >= 1);
+
+        // Hot reload under the same name: the drained service's final
+        // counters must fold into the baseline, not vanish.
+        r.register(
+            "m",
+            &repository::cancer(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        let after = r.stats()[0].1.clone();
+        assert_eq!(after.serving.requests, before.serving.requests);
+        assert_eq!(after.serving.latency.count(), before.serving.latency.count());
+        assert!(after.cache.hits >= before.cache.hits);
+        assert!(after.cache.cold_misses >= before.cache.cold_misses);
+        assert!(after.cache.warm_starts >= before.cache.warm_starts);
+        // The gauge is the one value allowed to reset: the old cache died.
+        assert_eq!(after.cache.entries, 0);
+
+        // New traffic lands on top of the folded baseline.
+        for _ in 0..2 {
+            r.posterior("m", 1, Evidence::new()).unwrap();
+        }
+        let last = r.stats()[0].1.clone();
+        assert_eq!(last.serving.requests, 5);
+        assert_eq!(last.serving.latency.count(), 5);
+        assert!(
+            last.cache.hits + last.cache.misses()
+                > before.cache.hits + before.cache.misses()
+        );
+    }
+
+    #[test]
+    fn stage_histograms_populate_by_default() {
+        let r = router();
+        let ev = Evidence::new().with(0, 1);
+        for _ in 0..4 {
+            r.posterior("asia", 5, ev.clone()).unwrap();
+        }
+        let stats = r.stats();
+        let m = &stats.iter().find(|(n, _)| n == "asia").unwrap().1.serving;
+        // Queue: one sample per request.
+        assert_eq!(m.stages.get(Stage::Queue).count(), 4);
+        // Route: one sample per flush — at least one flush happened.
+        assert!(m.stages.get(Stage::Route).count() >= 1);
+        // Cache: one sample per evidence group.
+        assert!(m.stages.get(Stage::Cache).count() >= 1);
+        // The first query over this evidence paid a calibration, and the
+        // kernel sweep time is a subset of it.
+        assert!(m.stages.get(Stage::Calibration).count() >= 1);
+        assert!(m.stages.get(Stage::Kernel).count() >= 1);
+        assert!(
+            m.stages.get(Stage::Kernel).sum() <= m.stages.get(Stage::Calibration).sum()
+        );
+        // Aggregate sanity: queue waits can't exceed total measured
+        // latency.
+        assert!(m.stages.get(Stage::Queue).sum() <= m.latency.sum());
+        // An obs-off router records no stages.
+        let mut off = QueryRouter::with_obs(1, ObsConfig::off());
+        off.register(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        off.posterior("asia", 5, ev).unwrap();
+        let stats = off.stats();
+        assert!(stats[0].1.serving.stages.is_empty());
+        assert_eq!(stats[0].1.serving.requests, 1);
+    }
+
+    #[test]
+    fn router_collects_registry_samples() {
+        use crate::obs::Registry;
+        let mut r = QueryRouter::new(1);
+        r.register(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        r.posterior("asia", 5, Evidence::new().with(0, 1)).unwrap();
+        let router = Arc::new(r);
+        let reg = Registry::new();
+        let weak: std::sync::Weak<dyn Collector> = Arc::downgrade(&router);
+        reg.register("query-router", weak);
+        let samples = reg.gather();
+        let find = |name: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap_or_else(|| panic!("missing {name}"))
+        };
+        assert_eq!(
+            find("fastpgm_requests_total").value,
+            crate::obs::Value::Counter(1)
+        );
+        assert!(samples.iter().any(|s| s.name == "fastpgm_stage_us"
+            && s.labels.iter().any(|(k, v)| *k == "stage" && v == "queue")));
+        assert!(samples.iter().any(|s| s.name == "fastpgm_cache_lookups_total"));
+        match &find("fastpgm_latency_us").value {
+            crate::obs::Value::Hist(h) => assert_eq!(h.count(), 1),
+            other => panic!("latency must be a histogram, got {other:?}"),
+        }
+        // Dropping the router removes it from scrapes.
+        drop(router);
+        assert!(reg.gather().is_empty());
+    }
+
+    #[test]
+    fn traces_record_sampled_spans() {
+        use crate::obs::TraceLog;
+        let trace = Arc::new(TraceLog::in_memory().with_sampling(1, 0));
+        let mut r =
+            QueryRouter::with_obs(1, ObsConfig::new().with_trace(Arc::clone(&trace)));
+        r.register(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+        );
+        let ev = Evidence::new().with(0, 1);
+        for _ in 0..3 {
+            r.posterior("asia", 5, ev.clone()).unwrap();
+        }
+        assert_eq!(trace.offered(), 3);
+        assert_eq!(trace.recorded(), 3);
+        let lines = trace.recent();
+        assert!(lines[0].contains("\"model\":\"asia\""));
+        assert!(lines[0].contains("\"tier\":\"exact\""));
+        assert!(lines[0].contains("\"queue_us\""));
+        assert!(lines[0].contains("\"cache_us\""));
+        // The first (cold) query's span carries calibration + kernel.
+        assert!(lines[0].contains("\"calibration_us\""));
+        assert!(lines[0].contains("\"kernel_us\""));
     }
 
     #[test]

@@ -313,6 +313,57 @@ impl CountCacheStats {
             (self.hits + self.projections) as f64 / total as f64
         }
     }
+
+    /// Render this snapshot as registry samples under the
+    /// `fastpgm_counts_*` families, one lookup counter per outcome
+    /// (`hit` / `projection` / `scan`). `extra` labels (e.g. a `model`
+    /// or `algo` tag) are prepended to every sample so several caches
+    /// can publish side by side.
+    pub fn to_samples(&self, extra: &crate::obs::Labels, out: &mut Vec<crate::obs::Sample>) {
+        use crate::obs::Sample;
+        let with = |outcome: &str| {
+            let mut l = extra.clone();
+            l.push(("outcome", outcome.to_string()));
+            l
+        };
+        out.push(
+            Sample::counter("fastpgm_counts_lookups_total", with("hit"), self.hits)
+                .with_help("Count-cache lookups by outcome"),
+        );
+        out.push(Sample::counter(
+            "fastpgm_counts_lookups_total",
+            with("projection"),
+            self.projections,
+        ));
+        out.push(Sample::counter("fastpgm_counts_lookups_total", with("scan"), self.scans));
+        out.push(
+            Sample::counter(
+                "fastpgm_counts_skipped_admission_total",
+                extra.clone(),
+                self.skipped_admission,
+            )
+            .with_help("Tables computed but not admitted (byte budget exhausted)"),
+        );
+        out.push(
+            Sample::gauge("fastpgm_counts_tables", extra.clone(), self.tables as f64)
+                .with_help("Contingency tables currently resident"),
+        );
+        out.push(
+            Sample::gauge("fastpgm_counts_bytes", extra.clone(), self.bytes as f64)
+                .with_help("Bytes of resident count arrays"),
+        );
+    }
+
+    /// Push this snapshot into `registry` (the publication style for a
+    /// finished learning run; live caches should prefer a pull-style
+    /// [`crate::obs::Collector`] wrapping [`CountCache::stats`]).
+    pub fn publish(&self, registry: &crate::obs::Registry, extra: &crate::obs::Labels) {
+        let mut samples = Vec::new();
+        self.to_samples(extra, &mut samples);
+        for s in samples {
+            registry.push(s);
+        }
+    }
 }
 
 /// Shard count — a read-mostly workload (PC levels re-probe the same

@@ -16,6 +16,7 @@
 //! The coordinator calls it from the batcher thread, never from a pool
 //! worker.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -23,6 +24,61 @@ use crate::inference::approx::PosteriorAccumulator;
 use crate::network::BayesianNetwork;
 use crate::parallel::WorkPool;
 use crate::rng::Pcg;
+
+/// Process-wide totals across every [`run_chunked`] call — the approx
+/// tier's contribution to the metrics registry. Plain atomics updated
+/// once per run (not per chunk), so the sampling hot path pays nothing.
+static RUNS_TOTAL: AtomicU64 = AtomicU64::new(0);
+static CONVERGED_TOTAL: AtomicU64 = AtomicU64::new(0);
+static CHUNKS_TOTAL: AtomicU64 = AtomicU64::new(0);
+static SAMPLES_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide chunked-sampling totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ApproxRunTotals {
+    /// Chunked runs completed.
+    pub runs: u64,
+    /// Runs that stopped early within their error budget.
+    pub converged: u64,
+    /// Chunks completed across all runs.
+    pub chunks: u64,
+    /// Samples drawn across all runs (incl. rejected ones).
+    pub samples_drawn: u64,
+}
+
+/// Read the process-wide chunked-sampling totals.
+pub fn approx_run_totals() -> ApproxRunTotals {
+    ApproxRunTotals {
+        runs: RUNS_TOTAL.load(Ordering::Relaxed),
+        converged: CONVERGED_TOTAL.load(Ordering::Relaxed),
+        chunks: CHUNKS_TOTAL.load(Ordering::Relaxed),
+        samples_drawn: SAMPLES_TOTAL.load(Ordering::Relaxed),
+    }
+}
+
+/// Render the process-wide totals as registry samples — wrap in a
+/// closure collector to put the approx tier on `--stats-addr`:
+/// `Arc::new(|out: &mut Vec<Sample>| approx_totals_to_samples(out))`.
+pub fn approx_totals_to_samples(out: &mut Vec<crate::obs::Sample>) {
+    use crate::obs::Sample;
+    let t = approx_run_totals();
+    out.push(
+        Sample::counter("fastpgm_approx_runs_total", vec![], t.runs)
+            .with_help("Chunked sampling runs completed"),
+    );
+    out.push(
+        Sample::counter("fastpgm_approx_converged_total", vec![], t.converged)
+            .with_help("Chunked runs that stopped early within the error budget"),
+    );
+    out.push(
+        Sample::counter("fastpgm_approx_chunks_total", vec![], t.chunks)
+            .with_help("Sampling chunks completed"),
+    );
+    out.push(
+        Sample::counter("fastpgm_approx_samples_total", vec![], t.samples_drawn)
+            .with_help("Samples drawn (including rejected)"),
+    );
+}
 
 /// A sampling kernel: draw `count` samples with `rng`, accumulating
 /// weighted samples into `acc`.
@@ -263,6 +319,12 @@ pub fn run_chunked(
             }
         }
     }
+    RUNS_TOTAL.fetch_add(1, Ordering::Relaxed);
+    if converged {
+        CONVERGED_TOTAL.fetch_add(1, Ordering::Relaxed);
+    }
+    CHUNKS_TOTAL.fetch_add(chunks_done as u64, Ordering::Relaxed);
+    SAMPLES_TOTAL.fetch_add(drawn as u64, Ordering::Relaxed);
     ChunkedRun {
         acc: global,
         samples_drawn: drawn,

@@ -25,7 +25,10 @@
 mod chunked;
 mod samplers;
 
-pub use chunked::{run_chunked, ChunkKernel, ChunkedConfig, ChunkedRun};
+pub use chunked::{
+    approx_run_totals, approx_totals_to_samples, run_chunked, ApproxRunTotals,
+    ChunkKernel, ChunkedConfig, ChunkedRun,
+};
 pub use samplers::{ApproxEngine, EngineRun, SamplerKind};
 
 use crate::core::{Evidence, VarId};

@@ -356,14 +356,19 @@ impl JtEngine<'_> {
             self.potentials[home].reduce_observation(v, s);
         }
 
-        // Collect (bottom-up) then distribute (top-down).
-        let n_levels = self.jt.levels.len();
-        for d in (0..n_levels.saturating_sub(1)).rev() {
-            // Parents at level d absorb from their children at level d+1.
-            self.run_level(d, true, false);
-        }
-        for d in 0..n_levels.saturating_sub(1) {
-            self.run_level(d, false, false);
+        // Collect (bottom-up) then distribute (top-down). The sweep timer
+        // charges the message-passing wall time to this thread's kernel
+        // accumulator (the `kernel` observability stage).
+        {
+            let _sweep = crate::obs::span::KernelSweepTimer::start();
+            let n_levels = self.jt.levels.len();
+            for d in (0..n_levels.saturating_sub(1)).rev() {
+                // Parents at level d absorb from their children at level d+1.
+                self.run_level(d, true, false);
+            }
+            for d in 0..n_levels.saturating_sub(1) {
+                self.run_level(d, false, false);
+            }
         }
         self.finish_calibration(ev, 1.0);
     }
@@ -462,12 +467,15 @@ impl JtEngine<'_> {
         }
 
         let base_prob = self.evidence_prob;
-        let n_levels = self.jt.levels.len();
-        for d in (0..n_levels.saturating_sub(1)).rev() {
-            self.run_level(d, true, true);
-        }
-        for d in 0..n_levels.saturating_sub(1) {
-            self.run_level(d, false, true);
+        {
+            let _sweep = crate::obs::span::KernelSweepTimer::start();
+            let n_levels = self.jt.levels.len();
+            for d in (0..n_levels.saturating_sub(1)).rev() {
+                self.run_level(d, true, true);
+            }
+            for d in 0..n_levels.saturating_sub(1) {
+                self.run_level(d, false, true);
+            }
         }
         self.finish_calibration(ev, base_prob);
     }

@@ -33,8 +33,10 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::core::{Evidence, VarId};
+use crate::obs::span::{kernel_timer_reset, kernel_timer_take};
 use crate::inference::Posterior;
 use crate::network::BayesianNetwork;
 use crate::potential::kernel::KernelMode;
@@ -414,6 +416,39 @@ impl CacheState {
     }
 }
 
+/// How one [`QueryEngine::calibrated_timed`] call obtained its snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CalibrationOutcome {
+    /// Served straight from the calibration cache.
+    #[default]
+    Hit,
+    /// Joined another thread's in-flight calibration of the same evidence
+    /// (counted as a hit in the cache stats).
+    Joined,
+    /// Miss answered by warm-start recalibration from a cached subset (or
+    /// the prior).
+    Warm,
+    /// Miss paying a fully cold calibration.
+    Cold,
+}
+
+/// Per-call timing breakdown from [`QueryEngine::calibrated_timed`] — the
+/// raw material for the serving stage histograms
+/// ([`crate::obs::Stage`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CalibrationTiming {
+    /// Cache lookup + plan selection (and, for a follower, the wait on
+    /// the leader's in-flight calibration).
+    pub lookup_ns: u64,
+    /// Building the calibrated snapshot (zero on `Hit`/`Joined`).
+    pub calibrate_ns: u64,
+    /// Message-passing sweep wall time inside the calibration, as charged
+    /// to this thread's kernel timer by the junction-tree engine
+    /// (`<= calibrate_ns`; zero on `Hit`/`Joined`).
+    pub kernel_ns: u64,
+    pub outcome: CalibrationOutcome,
+}
+
 /// One in-flight calibration: the leader publishes the snapshot and flips
 /// `done`; followers wait on the condvar instead of duplicating the work.
 #[derive(Default)]
@@ -515,11 +550,36 @@ impl QueryEngine {
     /// calibration of the same evidence) on a miss. Calibration always
     /// runs outside the cache lock.
     pub fn calibrated(&self, evidence: &Evidence) -> Arc<CalibratedTree> {
+        self.calibrated_inner(evidence, false).0
+    }
+
+    /// [`Self::calibrated`] plus a per-call timing breakdown (lookup /
+    /// calibrate / kernel nanoseconds and the outcome). The untimed path
+    /// reads no extra clocks — callers with observability off should call
+    /// `calibrated` directly.
+    pub fn calibrated_timed(
+        &self,
+        evidence: &Evidence,
+    ) -> (Arc<CalibratedTree>, CalibrationTiming) {
+        self.calibrated_inner(evidence, true)
+    }
+
+    fn calibrated_inner(
+        &self,
+        evidence: &Evidence,
+        timed: bool,
+    ) -> (Arc<CalibratedTree>, CalibrationTiming) {
+        let mut timing = CalibrationTiming::default();
+        let t_start = if timed { Some(Instant::now()) } else { None };
         {
             let mut cache = self.cache.lock().unwrap();
             if let Some(value) = cache.lookup_touch(evidence) {
                 cache.hits += 1;
-                return value;
+                drop(cache);
+                if let Some(t0) = t_start {
+                    timing.lookup_ns = t0.elapsed().as_nanos() as u64;
+                }
+                return (value, timing);
             }
         }
 
@@ -546,7 +606,13 @@ impl QueryEngine {
                 drop(st);
                 // Served without calibrating: counts as a hit.
                 self.cache.lock().unwrap().hits += 1;
-                return value;
+                if let Some(t0) = t_start {
+                    // The follower's wait is lookup time: it never ran the
+                    // kernel itself.
+                    timing.lookup_ns = t0.elapsed().as_nanos() as u64;
+                    timing.outcome = CalibrationOutcome::Joined;
+                }
+                return (value, timing);
             }
             // The leader died before publishing — fall through and
             // calibrate here (no flight of our own; rare crash path).
@@ -589,13 +655,26 @@ impl QueryEngine {
             }
         };
 
+        // Lookup time ends where calibration starts: everything up to the
+        // plan decision (both lock sections and the flight negotiation).
+        let t_calibrate = t_start.map(|t0| {
+            timing.lookup_ns = t0.elapsed().as_nanos() as u64;
+            // Drain any stale nanoseconds an untimed calibration on this
+            // thread left behind.
+            kernel_timer_reset();
+            Instant::now()
+        });
         let (value, fresh) = match plan {
-            Plan::Ready(value) => (value, false),
-            Plan::Warm(base) => (
-                Arc::new(self.compiled.recalibrate_from(&base, evidence)),
-                true,
-            ),
+            Plan::Ready(value) => {
+                timing.outcome = CalibrationOutcome::Hit;
+                (value, false)
+            }
+            Plan::Warm(base) => {
+                timing.outcome = CalibrationOutcome::Warm;
+                (Arc::new(self.compiled.recalibrate_from(&base, evidence)), true)
+            }
             Plan::Cold => {
+                timing.outcome = CalibrationOutcome::Cold;
                 let snapshot = if self.warm_start {
                     // No cached subset: the tree's prior (E = ∅) is the
                     // universal warm-start base.
@@ -606,6 +685,12 @@ impl QueryEngine {
                 (Arc::new(snapshot), true)
             }
         };
+        if let Some(c0) = t_calibrate {
+            if fresh {
+                timing.calibrate_ns = c0.elapsed().as_nanos() as u64;
+                timing.kernel_ns = kernel_timer_take().min(timing.calibrate_ns);
+            }
+        }
         if fresh {
             self.cache.lock().unwrap().insert(evidence, Arc::clone(&value));
         }
@@ -614,7 +699,7 @@ impl QueryEngine {
             st.result = Some(Arc::clone(&value));
             // `_guard` flips `done`, notifies and unregisters on drop.
         }
-        value
+        (value, timing)
     }
 
     /// Posterior P(var | evidence).

@@ -191,6 +191,52 @@ impl LearnReport {
         ));
         s
     }
+
+    /// Publish this run's stage timings and substrate counters to a
+    /// metrics registry (push-style — a learn run is a one-shot event,
+    /// not a live component). Labeled by `algo`; a later run with the
+    /// same algo overwrites, so the registry always shows the most
+    /// recent pipeline run.
+    pub fn publish(&self, registry: &crate::obs::Registry) {
+        use crate::obs::Sample;
+        let labels = || vec![("algo", self.algo.to_string())];
+        let stage = |name: &str| {
+            let mut l = labels();
+            l.push(("stage", name.to_string()));
+            l
+        };
+        registry.push(
+            Sample::counter(
+                "fastpgm_learn_stage_us_total",
+                stage("structure"),
+                self.structure_elapsed.as_micros() as u64,
+            )
+            .with_help("Wall-clock spent per learning pipeline stage (last run)"),
+        );
+        registry.push(Sample::counter(
+            "fastpgm_learn_stage_us_total",
+            stage("mle"),
+            self.mle_elapsed.as_micros() as u64,
+        ));
+        registry.push(Sample::counter(
+            "fastpgm_learn_stage_us_total",
+            stage("compile"),
+            self.compile_elapsed.as_micros() as u64,
+        ));
+        registry.push(
+            Sample::gauge("fastpgm_learn_edges", labels(), self.n_edges as f64)
+                .with_help("Edges in the learned structure (last run)"),
+        );
+        registry.push(
+            Sample::counter("fastpgm_learn_ci_tests_total", labels(), self.n_ci_tests as u64)
+                .with_help("CI tests executed by the last structure run"),
+        );
+        registry.push(
+            Sample::counter("fastpgm_learn_moves_total", labels(), self.moves as u64)
+                .with_help("Greedy moves taken by the last structure run"),
+        );
+        self.counts.publish(registry, &labels());
+    }
 }
 
 #[cfg(test)]

@@ -55,6 +55,12 @@
 //! warm-start caches hot) over a versioned binary wire protocol, with
 //! supervised respawn and in-process fallback. The stable public facade
 //! for all of it is [`serving`].
+//!
+//! Everything measurable publishes through the observability substrate
+//! ([`obs`]): per-query stage spans accumulated into mergeable
+//! log-bucket histograms, one process-global metrics registry, and a
+//! zero-dependency Prometheus/JSON exporter (`serve-query
+//! --stats-addr`) — see `docs/OBSERVABILITY.md`.
 
 pub mod benchkit;
 pub mod classify;
@@ -69,6 +75,7 @@ pub mod learn;
 pub mod metrics;
 pub mod mrf;
 pub mod network;
+pub mod obs;
 pub mod parallel;
 pub mod parameter;
 pub mod potential;

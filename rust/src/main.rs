@@ -103,7 +103,17 @@ USAGE: fastpgm <subcommand> [flags]
            shards, and falls back in-process — no query is dropped
            [--routing affinity|rr] fabric routing policy (rr =
            round-robin ablation) [--affinity-prefix P] evidence vars
-           feeding the affinity hash (default 1)"
+           feeding the affinity hash (default 1)
+           [--obs off|counters|full] observability level (default full:
+           per-stage latency histograms; docs/OBSERVABILITY.md)
+           [--stats-addr HOST:PORT] zero-dependency scrape endpoint:
+           Prometheus text at /metrics, JSON at /json (port 0 = ephemeral;
+           in fabric mode shards ship counters over the wire and the
+           frontend serves per-shard + fleet-merged views)
+           [--stats-linger S] keep the endpoint up S seconds after the
+           drive loop so external scrapers can read final counters
+           [--trace-log out.jsonl] sampled per-query span records (one
+           JSON object per line; shards append .shardN to the path)"
     );
 }
 
@@ -574,9 +584,10 @@ fn drive_clients(
 /// with a sampler name every query goes through that engine.
 fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     use fastpgm::serving::{
-        wire, ApproxConfig, ApproxOptions, EngineChoice, FabricConfig, Frontend,
-        KernelMode, ModelSpec, ProcessLauncher, QueryEngineConfig, QueryRouter,
-        RoutingPolicy, SamplerKind, ShardConfig, ShardWorker, SHARD_READY_PREFIX,
+        wire, ApproxConfig, ApproxOptions, Collector, EngineChoice, FabricConfig,
+        Frontend, KernelMode, ModelSpec, ObsConfig, ObsLevel, ProcessLauncher,
+        QueryEngineConfig, QueryRouter, Registry, RoutingPolicy, Sample, SamplerKind,
+        ShardConfig, ShardWorker, StatsServer, TraceLog, SHARD_READY_PREFIX,
     };
     use std::sync::Arc;
 
@@ -586,6 +597,45 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     let cache = args.parse_flag("cache", 256usize);
     let pool_size = args.parse_flag("evidence-pool", 32usize).max(1);
     let threads = args.parse_flag("threads", fastpgm::parallel::default_threads());
+
+    // Observability: the cost knob, the sampled JSONL trace ring, and the
+    // scrape endpoint (docs/OBSERVABILITY.md). Shard processes inherit
+    // --obs/--trace-log from the frontend's flag set; each shard rewrites
+    // the trace path with its shard id so rings don't interleave, and
+    // only the frontend binds --stats-addr (shards ship their counters
+    // over the wire instead).
+    let obs_spec = args.flag_or("obs", "full").to_string();
+    let obs_level = ObsLevel::parse(&obs_spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown --obs {obs_spec:?} (off|counters|full)"))?;
+    let trace = match args.flag("trace-log") {
+        Some(path) => {
+            let path = if args.switch("shard") {
+                format!("{path}.shard{}", args.parse_flag("shard-id", 0u32))
+            } else {
+                path.to_string()
+            };
+            Some(Arc::new(TraceLog::to_file(Path::new(&path))?))
+        }
+        None => None,
+    };
+    let mut obs = ObsConfig::new().with_level(obs_level);
+    if let Some(t) = &trace {
+        obs = obs.with_trace(Arc::clone(t));
+    }
+    let stats_server = match args.flag("stats-addr") {
+        Some(addr) if !args.switch("shard") => {
+            let s = StatsServer::spawn(addr, Registry::global(), trace.clone())?;
+            println!("stats endpoint on http://{}/metrics (JSON at /json)", s.addr());
+            Some(s)
+        }
+        _ => None,
+    };
+    let stats_linger = args.parse_flag("stats-linger", 0u64);
+    // The approx tier's process-wide chunked-run totals.
+    let approx_collector: Arc<dyn Collector> = Arc::new(|out: &mut Vec<Sample>| {
+        fastpgm::inference::engine::approx_totals_to_samples(out)
+    });
+    Registry::global().register("approx-tier", Arc::downgrade(&approx_collector));
 
     let engine_spec = args.flag_or("engine", "exact").to_string();
     let choice = EngineChoice::parse(&engine_spec).ok_or_else(|| {
@@ -648,6 +698,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         let pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha");
         let model = pipeline.run(&learn_data)?;
         println!("learned {name} from {csv_path}: {}", model.report.summary());
+        model.report.publish(Registry::global());
         specs.push(
             ModelSpec::new(name.clone(), model.net.clone())
                 .with_engine(engine_cfg)
@@ -666,7 +717,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         let worker = ShardWorker::spawn(
             shard_id,
             specs,
-            ShardConfig::new().with_pool_threads(threads),
+            ShardConfig::new().with_pool_threads(threads).with_obs(obs),
         )?;
         println!("{SHARD_READY_PREFIX}{}", worker.addr());
         use std::io::Write as _;
@@ -714,6 +765,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             ("approx-samples", approx.opts.n_samples.to_string()),
             ("shed-queue", approx.shed_queue_depth.to_string()),
             ("kernel", kernel_spec.clone()),
+            ("obs", obs_spec.clone()),
         ] {
             pass.push(format!("--{key}"));
             pass.push(value);
@@ -721,7 +773,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         if !warm_start {
             pass.push("--no-warm-start".to_string());
         }
-        for key in ["learn-from", "learn-algo", "learn-alpha", "learn-name"] {
+        for key in ["learn-from", "learn-algo", "learn-alpha", "learn-name", "trace-log"] {
             if let Some(v) = args.flag(key) {
                 pass.push(format!("--{key}"));
                 pass.push(v.to_string());
@@ -736,7 +788,8 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
                 .with_shards(fabric_shards)
                 .with_policy(policy)
                 .with_affinity_prefix(args.parse_flag("affinity-prefix", 1usize))
-                .with_pool_threads(threads),
+                .with_pool_threads(threads)
+                .with_obs(obs.clone()),
         )?;
         println!(
             "fabric up: {fabric_shards} shard processes, routing={policy:?}, \
@@ -744,6 +797,10 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             wire::PROTOCOL_VERSION
         );
         let frontend = Arc::new(frontend);
+        // Scraping the frontend walks every shard (one StatsRequest round
+        // trip each) and adds the fleet-merged view under shard="fleet".
+        let frontend_collector: Arc<dyn Collector> = Arc::clone(&frontend);
+        Registry::global().register("fabric-frontend", Arc::downgrade(&frontend_collector));
         let serve: Arc<ServeFn> = {
             let f = Arc::clone(&frontend);
             Arc::new(move |name: &str, request| f.query_routed(name, request))
@@ -793,12 +850,16 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             m.queries, m.per_shard, m.failovers, m.respawns, m.fallback_answers,
             m.retried
         );
+        linger_for_scrape(&stats_server, stats_linger);
+        if let Some(t) = &trace {
+            println!("trace: {} spans recorded ({} offered)", t.recorded(), t.offered());
+        }
         frontend.shutdown();
         return Ok(());
     }
 
     // In-process shape: one QueryRouter registered from the same specs.
-    let mut router = QueryRouter::new(threads);
+    let mut router = QueryRouter::with_obs(threads, obs.clone());
     for spec in &specs {
         router.register_with_approx(
             spec.name.as_str(),
@@ -809,6 +870,8 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         );
     }
     let router = Arc::new(router);
+    let router_collector: Arc<dyn Collector> = Arc::clone(&router);
+    Registry::global().register("query-router", Arc::downgrade(&router_collector));
     let serve: Arc<ServeFn> = {
         let r = Arc::clone(&router);
         Arc::new(move |name: &str, request| r.query_routed(name, request))
@@ -841,5 +904,21 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             stats.cache.warm_start_rate()
         );
     }
+    linger_for_scrape(&stats_server, stats_linger);
+    if let Some(t) = &trace {
+        println!("trace: {} spans recorded ({} offered)", t.recorded(), t.offered());
+    }
     Ok(())
+}
+
+/// Keep the `--stats-addr` endpoint up for `secs` after the drive loop
+/// finishes, so an external scraper (the CI smoke test, a curl) can read
+/// the final counters instead of racing the process exit.
+fn linger_for_scrape(server: &Option<fastpgm::serving::StatsServer>, secs: u64) {
+    if let Some(s) = server {
+        if secs > 0 {
+            println!("stats endpoint lingering {secs}s on http://{}/metrics", s.addr());
+            std::thread::sleep(std::time::Duration::from_secs(secs));
+        }
+    }
 }

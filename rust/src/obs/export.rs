@@ -1,0 +1,472 @@
+//! Zero-dependency metrics exporter: Prometheus text format + JSON over
+//! a plain [`std::net::TcpListener`].
+//!
+//! The offline image has no HTTP stack, and none is needed: a scrape is
+//! one GET, one response, connection closed. [`StatsServer::spawn`]
+//! binds `HOST:PORT`, answers
+//!
+//! * `GET /metrics` (or `/`) — Prometheus text exposition format 0.0.4,
+//! * `GET /json` — the same samples as a JSON document, plus recent
+//!   trace-ring spans when a [`crate::obs::TraceLog`] is attached,
+//!
+//! and `404`s anything else. Rendering is pure ([`render_prometheus`],
+//! [`render_json`]) so format tests never open a socket.
+//!
+//! Histograms render the Prometheus way: cumulative `_bucket{le="…"}`
+//! series over the log-bucket upper edges (µs), a `+Inf` bucket, exact
+//! `_sum` (µs) and `_count`. Only non-empty buckets are emitted (plus
+//! `+Inf`), keeping a 64-bucket histogram's text small.
+
+use super::hist::{bucket_upper_edge, LatencyHistogram, BUCKETS};
+use super::registry::{Registry, Sample, Value};
+use super::span::TraceLog;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
+/// `\n`).
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a JSON string value.
+pub fn escape_json(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(&'static str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn render_labels_extra(
+    labels: &[(&'static str, String)],
+    extra_k: &str,
+    extra_v: &str,
+) -> String {
+    let mut inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    inner.push(format!("{extra_k}=\"{extra_v}\""));
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Render samples as Prometheus text exposition format. Samples sharing
+/// a family name get one `# TYPE` header (the registry's `gather` sorts
+/// by name, so families arrive contiguous).
+pub fn render_prometheus(samples: &[Sample]) -> String {
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for s in samples {
+        if last_family != Some(s.name) {
+            if !s.help.is_empty() {
+                out.push_str(&format!("# HELP {} {}\n", s.name, s.help));
+            }
+            let kind = match s.value {
+                Value::Counter(_) => "counter",
+                Value::Gauge(_) => "gauge",
+                Value::Hist(_) => "histogram",
+            };
+            out.push_str(&format!("# TYPE {} {kind}\n", s.name));
+            last_family = Some(s.name);
+        }
+        match &s.value {
+            Value::Counter(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, render_labels(&s.labels)));
+            }
+            Value::Gauge(v) => {
+                out.push_str(&format!("{}{} {v}\n", s.name, render_labels(&s.labels)));
+            }
+            Value::Hist(h) => render_prom_hist(&mut out, s, h),
+        }
+    }
+    out
+}
+
+fn render_prom_hist(out: &mut String, s: &Sample, h: &LatencyHistogram) {
+    let mut cumulative = 0u64;
+    for (idx, &c) in h.buckets().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cumulative += c;
+        let le = bucket_upper_edge(idx).to_string();
+        out.push_str(&format!(
+            "{}_bucket{} {cumulative}\n",
+            s.name,
+            render_labels_extra(&s.labels, "le", &le)
+        ));
+    }
+    out.push_str(&format!(
+        "{}_bucket{} {}\n",
+        s.name,
+        render_labels_extra(&s.labels, "le", "+Inf"),
+        h.count()
+    ));
+    out.push_str(&format!("{}_sum{} {}\n", s.name, render_labels(&s.labels), h.sum()));
+    out.push_str(&format!(
+        "{}_count{} {}\n",
+        s.name,
+        render_labels(&s.labels),
+        h.count()
+    ));
+}
+
+/// Render samples (and optionally recent trace spans) as one JSON
+/// document: `{"metrics": [...], "traces": [...]}`.
+pub fn render_json(samples: &[Sample], traces: Option<&TraceLog>) -> String {
+    let mut out = String::from("{\"metrics\":[");
+    for (i, s) in samples.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"name\":\"{}\",\"labels\":{{", escape_json(s.name)));
+        for (j, (k, v)) in s.labels.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":\"{}\"", escape_json(k), escape_json(v)));
+        }
+        out.push_str("},");
+        match &s.value {
+            Value::Counter(v) => {
+                out.push_str(&format!("\"type\":\"counter\",\"value\":{v}"))
+            }
+            Value::Gauge(v) => {
+                let v = if v.is_finite() { *v } else { 0.0 };
+                out.push_str(&format!("\"type\":\"gauge\",\"value\":{v}"))
+            }
+            Value::Hist(h) => {
+                out.push_str(&format!(
+                    "\"type\":\"histogram\",\"count\":{},\"sum_us\":{},\"min_us\":{},\"max_us\":{},\"p50_us\":{},\"p95_us\":{},\"p99_us\":{},\"buckets\":[",
+                    h.count(),
+                    h.sum(),
+                    h.min(),
+                    h.max(),
+                    h.percentile(50.0),
+                    h.percentile(95.0),
+                    h.percentile(99.0),
+                ));
+                let mut first = true;
+                for (idx, &c) in h.buckets().iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    if !first {
+                        out.push(',');
+                    }
+                    first = false;
+                    out.push_str(&format!(
+                        "{{\"le_us\":{},\"count\":{c}}}",
+                        bucket_upper_edge(idx)
+                    ));
+                }
+                out.push(']');
+            }
+        }
+        out.push('}');
+    }
+    out.push_str("],\"traces\":[");
+    if let Some(t) = traces {
+        for (i, line) in t.recent().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(line);
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+fn http_response(status: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Prometheus content type for the 0.0.4 text format.
+const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+fn handle_scrape(
+    stream: &mut TcpStream,
+    registry: &Registry,
+    traces: Option<&TraceLog>,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    // Read the request head (we only need the request line; drain until
+    // the header terminator or the buffer fills — scrape requests are
+    // tiny).
+    let mut buf = [0u8; 4096];
+    let mut n = 0;
+    loop {
+        match stream.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(m) => {
+                n += m;
+                if n >= buf.len() || buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = head.split_whitespace();
+    let (method, path) =
+        (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
+    let response = if method != "GET" {
+        http_response("405 Method Not Allowed", "text/plain", "GET only\n")
+    } else {
+        match path {
+            "/" | "/metrics" => {
+                let body = render_prometheus(&registry.gather());
+                http_response("200 OK", PROM_CONTENT_TYPE, &body)
+            }
+            "/json" => {
+                let body = render_json(&registry.gather(), traces);
+                http_response("200 OK", "application/json", &body)
+            }
+            _ => http_response("404 Not Found", "text/plain", "not found\n"),
+        }
+    };
+    let _ = stream.write_all(&response);
+    let _ = stream.flush();
+}
+
+/// The scrape endpoint: a background thread accepting connections on
+/// the bound address until dropped or [`StatsServer::shutdown`].
+pub struct StatsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// the given registry. `traces` attaches a trace ring to `/json`.
+    pub fn spawn(
+        addr: &str,
+        registry: &'static Registry,
+        traces: Option<Arc<TraceLog>>,
+    ) -> std::io::Result<StatsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("fastpgm-stats".into())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let _ = stream.set_nonblocking(false);
+                            handle_scrape(
+                                &mut stream,
+                                registry,
+                                traces.as_deref(),
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })?;
+        Ok(StatsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves `:0` requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Sanity check used by tests and docs: a 64-bucket histogram renders at
+/// most `BUCKETS + 3` lines.
+pub const MAX_HIST_LINES: usize = BUCKETS + 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_set() -> Vec<Sample> {
+        let mut h = LatencyHistogram::new();
+        for us in [5u64, 120, 120, 30_000] {
+            h.record(us);
+        }
+        vec![
+            Sample::counter(
+                "fastpgm_requests_total",
+                vec![("model", "asia".into()), ("tier", "exact".into())],
+                12,
+            )
+            .with_help("Requests answered."),
+            Sample::counter(
+                "fastpgm_requests_total",
+                vec![("model", "we\"ird\\na\nme".into()), ("tier", "approx".into())],
+                3,
+            ),
+            Sample::gauge("fastpgm_cache_entries", vec![("model", "asia".into())], 7.0),
+            Sample::hist(
+                "fastpgm_latency_us",
+                vec![("model", "asia".into())],
+                h,
+            ),
+        ]
+    }
+
+    #[test]
+    fn prometheus_format_has_types_and_escapes() {
+        let mut samples = sample_set();
+        samples.sort_by_key(|s| s.name);
+        let text = render_prometheus(&samples);
+        // One TYPE line per family, correct kinds.
+        assert_eq!(text.matches("# TYPE fastpgm_requests_total counter\n").count(), 1);
+        assert_eq!(text.matches("# TYPE fastpgm_cache_entries gauge\n").count(), 1);
+        assert_eq!(text.matches("# TYPE fastpgm_latency_us histogram\n").count(), 1);
+        assert!(text.contains("# HELP fastpgm_requests_total Requests answered.\n"));
+        // Label escaping: backslash, quote, newline.
+        assert!(text.contains(r#"model="we\"ird\\na\nme""#), "{text}");
+        // Histogram: cumulative buckets, +Inf, sum and count.
+        assert!(text.contains("fastpgm_latency_us_bucket{model=\"asia\",le=\"+Inf\"} 4"));
+        assert!(text.contains("fastpgm_latency_us_sum{model=\"asia\"} 30245"));
+        assert!(text.contains("fastpgm_latency_us_count{model=\"asia\"} 4"));
+        // Cumulative counts never decrease along le order.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative bucket counts must not decrease");
+            last = v;
+        }
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.rsplit(' ').next().unwrap().parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn json_dump_is_parseable_shape() {
+        let samples = sample_set();
+        let traces = TraceLog::in_memory().with_sampling(1, 0);
+        traces.offer(&crate::obs::SpanRecord {
+            model: "asia".into(),
+            tier: "exact",
+            total_us: 99,
+            stages: vec![(crate::obs::Stage::Cache, 12)],
+        });
+        let json = render_json(&samples, Some(&traces));
+        assert!(json.starts_with("{\"metrics\":["));
+        assert!(json.contains("\"type\":\"histogram\""));
+        assert!(json.contains("\"p95_us\":"));
+        assert!(json.contains("\"traces\":[{\"seq\":0"));
+        // Balanced braces/brackets (cheap well-formedness check, no
+        // parser in the image).
+        let opens = json.matches('{').count() + json.matches('[').count();
+        let closes = json.matches('}').count() + json.matches(']').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn server_serves_metrics_and_json() {
+        // A static registry distinct from the global one so parallel
+        // tests cannot contaminate assertions.
+        static TEST_REG: OnceRegistry = OnceRegistry::new();
+        let reg = TEST_REG.get();
+        reg.set_counter("fastpgm_test_requests_total", vec![], 41);
+        let server = StatsServer::spawn("127.0.0.1:0", reg, None).unwrap();
+        let addr = server.addr();
+
+        let body = http_get(addr, "/metrics");
+        assert!(body.contains("# TYPE fastpgm_test_requests_total counter"));
+        assert!(body.contains("fastpgm_test_requests_total 41"));
+
+        let json = http_get(addr, "/json");
+        assert!(json.contains("\"name\":\"fastpgm_test_requests_total\""));
+
+        let missing = http_get_raw(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"));
+        server.shutdown();
+    }
+
+    struct OnceRegistry(OnceLockRegistry);
+    type OnceLockRegistry = std::sync::OnceLock<Registry>;
+    impl OnceRegistry {
+        const fn new() -> Self {
+            OnceRegistry(OnceLockRegistry::new())
+        }
+        fn get(&'static self) -> &'static Registry {
+            self.0.get_or_init(Registry::new)
+        }
+    }
+
+    fn http_get_raw(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let raw = http_get_raw(addr, path);
+        assert!(raw.starts_with("HTTP/1.1 200 OK"), "{raw}");
+        raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string()
+    }
+}

@@ -1,0 +1,529 @@
+//! Fixed-size log-bucketed latency histograms (HDR-style).
+//!
+//! Both histogram flavours share one bucket layout: 64 buckets over
+//! microsecond values, two sub-buckets per power-of-two octave, covering
+//! 1µs up to ~2³²µs (≈71 minutes — comfortably past the 60s ceiling any
+//! serving latency should see). Bucketing is pure integer math
+//! (`leading_zeros`, shifts — no floats, no loops), so a `record` is an
+//! index computation plus one increment.
+//!
+//! * [`LatencyHistogram`] — plain counters. Lives inside mutex-guarded
+//!   metrics structs ([`crate::coordinator::ServingMetrics`]), crosses
+//!   the fabric wire as bucket counts, and supports **exact** `merge`
+//!   (bucket-wise addition — associative and commutative, tested).
+//! * [`AtomicHistogram`] — the same layout over `AtomicU64`, for
+//!   lock-free recording through a shared reference (registry-owned
+//!   metrics on hot paths). `snapshot()` converts to the plain form.
+//!
+//! Percentile error is bounded by one bucket: a reported percentile is
+//! the inclusive upper edge of the bucket holding that rank, clamped to
+//! the exact observed `[min, max]` — so `p0`/`p100` are exact, and any
+//! interior percentile is within the bucket's width (< 50% relative
+//! error by construction, since bucket width is half its lower edge).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of buckets — two per octave across 32 octaves.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a microsecond value. Monotonic in `v`; everything at
+/// or above the top bucket's lower edge (3·2³⁰µs) saturates into bucket 63.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        return v as usize;
+    }
+    let k = 63 - v.leading_zeros() as usize; // floor(log2 v) >= 1
+    let sub = ((v >> (k - 1)) & 1) as usize;
+    (2 * k + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive upper edge (µs) of bucket `idx` — the value percentile
+/// queries report for ranks landing in the bucket.
+#[inline]
+pub fn bucket_upper_edge(idx: usize) -> u64 {
+    debug_assert!(idx < BUCKETS);
+    match idx {
+        0 => 0,
+        1 => 1,
+        _ => {
+            let k = idx / 2;
+            let sub = (idx % 2) as u64;
+            // Bucket [2^k + sub·2^(k-1), 2^k + (sub+1)·2^(k-1) - 1].
+            (1u64 << k) + (sub + 1) * (1u64 << (k - 1)) - 1
+        }
+    }
+}
+
+/// Inclusive lower edge (µs) of bucket `idx`.
+#[inline]
+pub fn bucket_lower_edge(idx: usize) -> u64 {
+    debug_assert!(idx < BUCKETS);
+    match idx {
+        0 => 0,
+        1 => 1,
+        _ => {
+            let k = idx / 2;
+            let sub = (idx % 2) as u64;
+            (1u64 << k) + sub * (1u64 << (k - 1))
+        }
+    }
+}
+
+/// A bounded log-bucketed histogram of microsecond latencies.
+///
+/// Fixed memory regardless of sample count (the fix for the unbounded
+/// `Vec<u64>` the serving metrics used to carry), with exact
+/// `count`/`sum`/`min`/`max` alongside the bucket counts so means are
+/// exact and percentile clamping is tight.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one microsecond value.
+    #[inline]
+    pub fn record(&mut self, us: u64) {
+        self.counts[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(us);
+        self.min = self.min.min(us);
+        self.max = self.max.max(us);
+    }
+
+    /// Record a duration (saturating to µs).
+    #[inline]
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Exact merge: bucket-wise addition. Associative and commutative —
+    /// the fleet view merged from per-shard histograms is identical to
+    /// the histogram of the union of samples.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of recorded values (µs).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact minimum, or 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum, or 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean in µs (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The raw bucket counts (index ↔ edges via [`bucket_upper_edge`]).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Percentile in µs, `p` in `[0, 100]`. Rank selection matches what a
+    /// sorted sample vector would do (`rank = ⌊count·p/100⌋`, clamped),
+    /// then reports the holding bucket's upper edge clamped into the
+    /// exact `[min, max]` — so `p0 == min`, `p100 == max`, and interior
+    /// percentiles are within one bucket of the exact order statistic.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank =
+            ((self.count as f64 * p / 100.0) as u64).min(self.count - 1);
+        if rank == 0 {
+            return self.min;
+        }
+        if rank == self.count - 1 {
+            return self.max;
+        }
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_upper_edge(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Rebuild from wire-decoded parts. `counts` longer than [`BUCKETS`]
+    /// is rejected by the caller; shorter is zero-padded (forward
+    /// compatibility if a later version shrinks the layout).
+    pub(crate) fn from_parts(
+        counts: &[u64],
+        count: u64,
+        sum: u64,
+        min: u64,
+        max: u64,
+    ) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        h.counts[..counts.len().min(BUCKETS)]
+            .copy_from_slice(&counts[..counts.len().min(BUCKETS)]);
+        h.count = count;
+        h.sum = sum;
+        h.min = min;
+        h.max = max;
+        h
+    }
+
+    /// Wire-encoding accessors (count/sum travel raw; `min` is the raw
+    /// sentinel-preserving field so empty histograms round-trip exactly).
+    pub(crate) fn raw_parts(&self) -> (u64, u64, u64, u64) {
+        (self.count, self.sum, self.min, self.max)
+    }
+
+    /// Synthesize up to `cap` representative samples — one value per
+    /// recorded entry at its bucket's clamped upper edge, plus the exact
+    /// min and max — for legacy (v1) wire peers that expect raw sample
+    /// arrays. Percentiles computed from these samples stay within one
+    /// bucket of this histogram's.
+    pub fn representative_samples(&self, cap: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity((self.count as usize).min(cap));
+        if self.count == 0 || cap == 0 {
+            return out;
+        }
+        out.push(self.min);
+        'fill: for (idx, &c) in self.counts.iter().enumerate() {
+            let v = bucket_upper_edge(idx).clamp(self.min, self.max);
+            for _ in 0..c {
+                if out.len() >= cap {
+                    break 'fill;
+                }
+                out.push(v);
+            }
+        }
+        // The loop emitted min plus one value per sample; drop one
+        // bucket-edge duplicate so the count matches (min replaced it),
+        // then pin the exact max in the last slot.
+        if out.len() as u64 > self.count {
+            out.pop();
+        }
+        if let Some(last) = out.last_mut() {
+            *last = self.max;
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+/// The same bucket layout with lock-free atomic increments, for metrics
+/// recorded through a shared reference (registry-owned, hot paths).
+/// `record` is a relaxed fetch-add per field — no locks, no CAS loops
+/// except the min/max updates which use `fetch_min`/`fetch_max`.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, us: u64) {
+        self.counts[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(us, Ordering::Relaxed);
+        self.min.fetch_min(us, Ordering::Relaxed);
+        self.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// A plain-histogram snapshot. Concurrent recording makes the
+    /// snapshot only *approximately* consistent (a racing record may be
+    /// counted in some fields and not others for one read); counts never
+    /// go backwards across snapshots.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::default();
+        for (dst, src) in h.counts.iter_mut().zip(&self.counts) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum = self.sum.load(Ordering::Relaxed);
+        h.min = self.min.load(Ordering::Relaxed);
+        h.max = self.max.load(Ordering::Relaxed);
+        // A torn read could show per-bucket counts summing past `count`;
+        // percentile walks use the bucket counts, so pin the total to
+        // their sum to keep rank selection in bounds.
+        let bucket_total: u64 = h.counts.iter().sum();
+        h.count = h.count.min(bucket_total);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn bucket_math_is_monotonic_and_inverts() {
+        let mut prev = 0;
+        for v in 0..10_000u64 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket index must be monotonic at {v}");
+            prev = idx;
+            assert!(
+                bucket_lower_edge(idx) <= v && v <= bucket_upper_edge(idx),
+                "v={v} outside bucket {idx} [{}, {}]",
+                bucket_lower_edge(idx),
+                bucket_upper_edge(idx)
+            );
+        }
+        // Edges tile the space: each upper edge + 1 is the next lower edge.
+        for idx in 0..BUCKETS - 1 {
+            assert_eq!(bucket_upper_edge(idx) + 1, bucket_lower_edge(idx + 1));
+        }
+        // 60s and beyond are representable; the extreme saturates.
+        assert!(bucket_index(60_000_000) < BUCKETS - 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+    }
+
+    #[test]
+    fn exact_extremes_and_mean() {
+        let mut h = LatencyHistogram::new();
+        for us in [100u64, 200, 300, 400] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 400);
+        assert_eq!(h.percentile(0.0), 100);
+        assert_eq!(h.percentile(100.0), 400);
+        assert!((h.mean() - 250.0).abs() < 1e-9);
+        let empty = LatencyHistogram::new();
+        assert_eq!(empty.percentile(95.0), 0);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), 0);
+    }
+
+    /// Percentiles must match the exact order statistic to within the
+    /// holding bucket's width, on random samples.
+    #[test]
+    fn percentile_within_one_bucket_of_exact() {
+        let mut rng = Pcg::seed_from(7);
+        for scale in [100u64, 10_000, 1_000_000] {
+            let mut h = LatencyHistogram::new();
+            let mut exact: Vec<u64> =
+                (0..2000).map(|_| rng.next_u64() % scale).collect();
+            for &v in &exact {
+                h.record(v);
+            }
+            exact.sort_unstable();
+            for p in [0.0, 1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let rank = ((exact.len() as f64 * p / 100.0) as usize)
+                    .min(exact.len() - 1);
+                let want = exact[rank];
+                let got = h.percentile(p);
+                let idx = bucket_index(want);
+                let (lo, hi) = (bucket_lower_edge(idx), bucket_upper_edge(idx));
+                assert!(
+                    got >= lo && got <= hi.max(want),
+                    "p{p}: got {got}, exact {want}, bucket [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+
+    /// Merge is exact: merging per-part histograms equals the histogram
+    /// of all samples, in any association or order.
+    #[test]
+    fn merge_associative_commutative_exact() {
+        let mut rng = Pcg::seed_from(42);
+        let parts: Vec<Vec<u64>> = (0..4)
+            .map(|_| (0..500).map(|_| rng.next_u64() % 1_000_000).collect())
+            .collect();
+        let hist_of = |samples: &[u64]| {
+            let mut h = LatencyHistogram::new();
+            for &v in samples {
+                h.record(v);
+            }
+            h
+        };
+        let hs: Vec<LatencyHistogram> =
+            parts.iter().map(|p| hist_of(p)).collect();
+        let all: Vec<u64> = parts.iter().flatten().copied().collect();
+        let whole = hist_of(&all);
+
+        // Left fold.
+        let mut left = hs[0].clone();
+        for h in &hs[1..] {
+            left.merge(h);
+        }
+        assert_eq!(left, whole, "left-fold merge must equal one-shot build");
+
+        // Right-assoc fold.
+        let mut right = hs[3].clone();
+        for h in hs[..3].iter().rev() {
+            let mut tmp = h.clone();
+            tmp.merge(&right);
+            right = tmp;
+        }
+        assert_eq!(right, whole, "merge must be associative");
+
+        // Reversed order (commutativity).
+        let mut rev = hs[3].clone();
+        for h in hs[..3].iter().rev() {
+            rev.merge(h);
+        }
+        assert_eq!(rev, whole, "merge must be commutative");
+    }
+
+    #[test]
+    fn top_bucket_saturates() {
+        let mut h = LatencyHistogram::new();
+        let huge = u64::MAX - 3;
+        h.record(huge);
+        h.record(u64::MAX);
+        assert_eq!(h.buckets()[BUCKETS - 1], 2);
+        assert_eq!(h.count(), 2);
+        // Extremes stay exact even though the bucket is saturated.
+        assert_eq!(h.percentile(0.0), huge);
+        assert_eq!(h.percentile(100.0), u64::MAX);
+        // Sum saturates instead of wrapping.
+        assert_eq!(h.sum(), u64::MAX);
+    }
+
+    #[test]
+    fn atomic_matches_plain() {
+        let a = AtomicHistogram::new();
+        let mut p = LatencyHistogram::new();
+        let mut rng = Pcg::seed_from(3);
+        for _ in 0..1000 {
+            let v = rng.next_u64() % 500_000;
+            a.record(v);
+            p.record(v);
+        }
+        assert_eq!(a.snapshot(), p);
+    }
+
+    #[test]
+    fn atomic_concurrent_total_is_exact() {
+        use std::sync::Arc;
+        let a = Arc::new(AtomicHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    let mut rng = Pcg::seed_from(t);
+                    for _ in 0..2500 {
+                        a.record(rng.next_u64() % 1_000_000);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = a.snapshot();
+        assert_eq!(snap.count(), 10_000);
+        assert_eq!(snap.buckets().iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn representative_samples_preserve_percentile_shape() {
+        let mut rng = Pcg::seed_from(11);
+        let mut h = LatencyHistogram::new();
+        for _ in 0..1000 {
+            h.record(rng.next_u64() % 100_000);
+        }
+        let samples = h.representative_samples(usize::MAX);
+        assert_eq!(samples.len() as u64, h.count());
+        assert_eq!(*samples.first().unwrap(), h.min());
+        assert_eq!(*samples.last().unwrap(), h.max());
+        // Rebuilding a histogram from the samples reproduces percentiles
+        // within one bucket.
+        let mut rebuilt = LatencyHistogram::new();
+        for &s in &samples {
+            rebuilt.record(s);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            let a = h.percentile(p) as f64;
+            let b = rebuilt.percentile(p) as f64;
+            assert!(
+                (a - b).abs() <= a * 0.5 + 1.0,
+                "p{p}: {a} vs rebuilt {b}"
+            );
+        }
+        // The cap bounds the output.
+        assert_eq!(h.representative_samples(10).len(), 10);
+        assert!(LatencyHistogram::new().representative_samples(5).is_empty());
+    }
+}

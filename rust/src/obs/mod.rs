@@ -1,0 +1,30 @@
+//! Full-stack observability: log-bucket histograms, a process-global
+//! metrics registry, per-query lifecycle spans, and a zero-dependency
+//! exporter.
+//!
+//! The layer every perf claim in this repo routes through:
+//!
+//! * [`hist`] — fixed-size HDR-style latency histograms with exact
+//!   merge (what `ServingMetrics` and the fabric wire carry instead of
+//!   unbounded sample vectors).
+//! * [`registry`] — one named registry for every counter/gauge/
+//!   histogram in the process, fed by pull-style [`Collector`]s and
+//!   push-style one-shots.
+//! * [`span`] — the query stage model (queue → route → cache →
+//!   calibration → kernel → wire), the [`ObsConfig`] cost knob, and the
+//!   sampled JSONL [`TraceLog`].
+//! * [`export`] — `--stats-addr` TCP endpoint rendering Prometheus text
+//!   and JSON; pure render functions for offline tests.
+//!
+//! See `docs/OBSERVABILITY.md` for the metric catalog and stage
+//! glossary.
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use export::{render_json, render_prometheus, StatsServer};
+pub use hist::{AtomicHistogram, LatencyHistogram};
+pub use registry::{Collector, Labels, Registry, Sample, Value};
+pub use span::{ObsConfig, ObsLevel, SpanRecord, Stage, StageSet, TraceLog};

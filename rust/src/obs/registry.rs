@@ -1,0 +1,273 @@
+//! A process-global named metrics registry.
+//!
+//! One interface for every counter the stack exposes — serving metrics,
+//! fabric metrics, calibration-cache stats, count-cache stats, arena
+//! counters, learning-report timings — instead of five bespoke structs
+//! each with its own accessor. Two publication styles:
+//!
+//! * **Collectors** (pull): a component implementing [`Collector`] is
+//!   registered once and asked for fresh [`Sample`]s at scrape time.
+//!   This is the hot-path style — the component keeps its own counters
+//!   (atomics, mutex-guarded structs) at whatever cost it already pays,
+//!   and the registry touches them only when someone scrapes.
+//! * **Values** (push): one-shot or low-rate facts (a learn report's
+//!   stage timings, a build label) are `set_gauge`/`inc_counter`-ed into
+//!   the registry's own store.
+//!
+//! Metric names follow Prometheus conventions (`snake_case`, unit
+//! suffix, `_total` for counters); label sets are static per call site
+//! (`model`, `tier`, `kernel`, `shard`, `stage`). The registry itself
+//! never touches the network — [`crate::obs::export`] renders its
+//! samples.
+
+use super::hist::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+/// A label set: static keys, owned values.
+pub type Labels = Vec<(&'static str, String)>;
+
+/// One scraped metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Monotonic count.
+    Counter(u64),
+    /// Point-in-time level.
+    Gauge(f64),
+    /// Log-bucketed latency distribution (µs).
+    Hist(LatencyHistogram),
+}
+
+/// One scraped sample: family name + labels + value. Families must keep
+/// one value kind across all label sets (enforced by the exporter's
+/// grouping, asserted in tests).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: &'static str,
+    pub labels: Labels,
+    pub value: Value,
+    /// One-line family description (`# HELP`); the first sample of a
+    /// family with a non-empty help wins.
+    pub help: &'static str,
+}
+
+impl Sample {
+    pub fn counter(name: &'static str, labels: Labels, v: u64) -> Sample {
+        Sample { name, labels, value: Value::Counter(v), help: "" }
+    }
+
+    pub fn gauge(name: &'static str, labels: Labels, v: f64) -> Sample {
+        Sample { name, labels, value: Value::Gauge(v), help: "" }
+    }
+
+    pub fn hist(
+        name: &'static str,
+        labels: Labels,
+        h: LatencyHistogram,
+    ) -> Sample {
+        Sample { name, labels, value: Value::Hist(h), help: "" }
+    }
+
+    pub fn with_help(mut self, help: &'static str) -> Sample {
+        self.help = help;
+        self
+    }
+}
+
+/// Anything that can contribute samples at scrape time.
+pub trait Collector: Send + Sync {
+    /// Append current samples to `out`. Called on the scrape thread;
+    /// must not block on the recording hot path longer than a counter
+    /// snapshot requires.
+    fn collect(&self, out: &mut Vec<Sample>);
+}
+
+/// Blanket: closures are collectors (tests, small adapters).
+impl<F> Collector for F
+where
+    F: Fn(&mut Vec<Sample>) + Send + Sync,
+{
+    fn collect(&self, out: &mut Vec<Sample>) {
+        self(out)
+    }
+}
+
+#[derive(Default)]
+struct PushStore {
+    /// Keyed by (name, rendered labels) so re-pushing overwrites.
+    values: BTreeMap<(String, String), Sample>,
+}
+
+fn label_key(labels: &Labels) -> String {
+    let mut s = String::new();
+    for (k, v) in labels {
+        s.push_str(k);
+        s.push('=');
+        s.push_str(v);
+        s.push(';');
+    }
+    s
+}
+
+/// The registry: registered collectors plus a push store.
+///
+/// Collectors are held weakly — a dropped component (a drained router, a
+/// finished benchmark) silently disappears from scrapes instead of
+/// keeping the component alive or serving stale data.
+#[derive(Default)]
+pub struct Registry {
+    collectors: Mutex<Vec<(String, Weak<dyn Collector>)>>,
+    push: Mutex<PushStore>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-global registry (what `--stats-addr` serves).
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Register a collector under a diagnostic name. Re-registering the
+    /// same name replaces the previous entry (model reload).
+    pub fn register(&self, name: &str, collector: Weak<dyn Collector>) {
+        let mut cs = self.collectors.lock().unwrap();
+        if let Some(slot) = cs.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = collector;
+        } else {
+            cs.push((name.to_string(), collector));
+        }
+    }
+
+    /// Remove a collector by name.
+    pub fn unregister(&self, name: &str) {
+        self.collectors.lock().unwrap().retain(|(n, _)| n != name);
+    }
+
+    /// Push-style: record a monotonic counter value.
+    pub fn set_counter(&self, name: &'static str, labels: Labels, v: u64) {
+        self.push_sample(Sample::counter(name, labels, v));
+    }
+
+    /// Push-style: record a gauge.
+    pub fn set_gauge(&self, name: &'static str, labels: Labels, v: f64) {
+        self.push_sample(Sample::gauge(name, labels, v));
+    }
+
+    /// Push-style: record a histogram snapshot.
+    pub fn set_hist(
+        &self,
+        name: &'static str,
+        labels: Labels,
+        h: LatencyHistogram,
+    ) {
+        self.push_sample(Sample::hist(name, labels, h));
+    }
+
+    /// Push-style: record a pre-built sample (keeps its `help` text;
+    /// overwrites any previous sample with the same name + labels).
+    pub fn push(&self, s: Sample) {
+        self.push_sample(s);
+    }
+
+    fn push_sample(&self, s: Sample) {
+        let key = (s.name.to_string(), label_key(&s.labels));
+        self.push.lock().unwrap().values.insert(key, s);
+    }
+
+    /// Scrape: every live collector's samples plus the push store,
+    /// sorted by family name (stable output for the exporter). Dead
+    /// (dropped) collectors are pruned as a side effect.
+    pub fn gather(&self) -> Vec<Sample> {
+        let mut out = Vec::new();
+        {
+            let mut cs = self.collectors.lock().unwrap();
+            cs.retain(|(_, weak)| match weak.upgrade() {
+                Some(c) => {
+                    c.collect(&mut out);
+                    true
+                }
+                None => false,
+            });
+        }
+        {
+            let push = self.push.lock().unwrap();
+            out.extend(push.values.values().cloned());
+        }
+        out.sort_by(|a, b| {
+            a.name.cmp(b.name).then_with(|| label_key(&a.labels).cmp(&label_key(&b.labels)))
+        });
+        out
+    }
+
+    /// Registered (possibly dead) collector count — diagnostics only.
+    pub fn collector_count(&self) -> usize {
+        self.collectors.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_values_overwrite_by_name_and_labels() {
+        let r = Registry::new();
+        r.set_counter("fastpgm_requests_total", vec![("model", "asia".into())], 5);
+        r.set_counter("fastpgm_requests_total", vec![("model", "asia".into())], 9);
+        r.set_counter("fastpgm_requests_total", vec![("model", "alarm".into())], 2);
+        r.set_gauge("fastpgm_cache_entries", vec![], 4.0);
+        let samples = r.gather();
+        assert_eq!(samples.len(), 3);
+        let asia = samples
+            .iter()
+            .find(|s| s.labels.iter().any(|(_, v)| v == "asia"))
+            .unwrap();
+        assert_eq!(asia.value, Value::Counter(9));
+        // Sorted by name then labels.
+        assert_eq!(samples[0].name, "fastpgm_cache_entries");
+    }
+
+    #[test]
+    fn collectors_pull_fresh_and_prune_dead() {
+        let r = Registry::new();
+        let live = Arc::new(std::sync::atomic::AtomicU64::new(1));
+        let live_ref = Arc::clone(&live);
+        let collector: Arc<dyn Collector> = Arc::new(move |out: &mut Vec<Sample>| {
+            out.push(Sample::counter(
+                "fastpgm_live_total",
+                vec![],
+                live_ref.load(std::sync::atomic::Ordering::Relaxed),
+            ));
+        });
+        r.register("live", Arc::downgrade(&collector));
+        assert_eq!(r.gather()[0].value, Value::Counter(1));
+        live.store(7, std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(r.gather()[0].value, Value::Counter(7), "pull must be fresh");
+        drop(collector);
+        assert!(r.gather().is_empty(), "dead collectors vanish");
+        assert_eq!(r.collector_count(), 0, "and are pruned");
+    }
+
+    #[test]
+    fn re_registering_replaces() {
+        let r = Registry::new();
+        let a: Arc<dyn Collector> = Arc::new(|out: &mut Vec<Sample>| {
+            out.push(Sample::counter("fastpgm_x_total", vec![], 1));
+        });
+        let b: Arc<dyn Collector> = Arc::new(|out: &mut Vec<Sample>| {
+            out.push(Sample::counter("fastpgm_x_total", vec![], 2));
+        });
+        r.register("x", Arc::downgrade(&a));
+        r.register("x", Arc::downgrade(&b));
+        let samples = r.gather();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].value, Value::Counter(2));
+        r.unregister("x");
+        assert!(r.gather().is_empty());
+        drop((a, b));
+    }
+}

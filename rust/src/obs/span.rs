@@ -1,0 +1,482 @@
+//! Per-query lifecycle spans: where a query's wall time goes.
+//!
+//! A query moving through the serving stack crosses six stages:
+//!
+//! | stage        | measures                                              |
+//! |--------------|-------------------------------------------------------|
+//! | `queue`      | enqueue → the flush that answers it starts            |
+//! | `route`      | shed/tier decision + evidence grouping for the flush  |
+//! | `cache`      | calibration-cache lookup (hit / warm-base / cold)     |
+//! | `calibration`| building the calibrated tree on a miss (incl. kernel) |
+//! | `kernel`     | message-passing inside calibration (subset of above)  |
+//! | `wire`       | fabric round-trip, frontend-side (fabric mode only)   |
+//!
+//! Stage timings accumulate into a per-stage histogram set
+//! ([`StageSet`]) carried by the serving metrics, so they merge across
+//! shards exactly like the end-to-end latency histogram. [`ObsConfig`]
+//! gates the cost: `Off` skips every clock read the serving path does
+//! not already need, `Counters` keeps histograms but skips per-query
+//! trace records, `Full` adds sampled JSONL traces of individual slow
+//! queries ([`TraceLog`]).
+//!
+//! The kernel stage is measured with a thread-local accumulator
+//! ([`kernel_timer_reset`] / [`kernel_timer_take`]) charged by the
+//! junction-tree engine around its message-passing sweeps: calibration
+//! runs on the thread that asked for it, so the caller brackets the
+//! calibration call with reset/take and attributes the nanoseconds to
+//! the query group being answered. Intra-clique parallel scans count as
+//! the wall time of the sweep on the calling thread.
+
+use super::hist::LatencyHistogram;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One stage of a query's lifecycle. `ALL` is ordered; the index is the
+/// wire and array encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Queue,
+    Route,
+    Cache,
+    Calibration,
+    Kernel,
+    Wire,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 6] = [
+        Stage::Queue,
+        Stage::Route,
+        Stage::Cache,
+        Stage::Calibration,
+        Stage::Kernel,
+        Stage::Wire,
+    ];
+
+    /// Stable lowercase label (metric label value, trace field name).
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue",
+            Stage::Route => "route",
+            Stage::Cache => "cache",
+            Stage::Calibration => "calibration",
+            Stage::Kernel => "kernel",
+            Stage::Wire => "wire",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<Stage> {
+        Stage::ALL.get(i).copied()
+    }
+}
+
+/// Per-stage latency histograms — one [`LatencyHistogram`] per
+/// [`Stage`], merged exactly like the histograms themselves.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageSet {
+    stages: [LatencyHistogram; 6],
+}
+
+impl StageSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, stage: Stage, d: Duration) {
+        self.stages[stage.index()].record_duration(d);
+    }
+
+    #[inline]
+    pub fn record_us(&mut self, stage: Stage, us: u64) {
+        self.stages[stage.index()].record(us);
+    }
+
+    pub fn get(&self, stage: Stage) -> &LatencyHistogram {
+        &self.stages[stage.index()]
+    }
+
+    pub(crate) fn get_mut(&mut self, stage: Stage) -> &mut LatencyHistogram {
+        &mut self.stages[stage.index()]
+    }
+
+    pub fn merge(&mut self, other: &StageSet) {
+        for (a, b) in self.stages.iter_mut().zip(&other.stages) {
+            a.merge(b);
+        }
+    }
+
+    /// Total µs across all stages (spans sanity checks: per-query stage
+    /// times sum to ≤ the end-to-end latency, so aggregated sums do too).
+    pub fn total_us(&self) -> u64 {
+        self.stages.iter().map(|h| h.sum()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.iter().all(|h| h.is_empty())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, &LatencyHistogram)> {
+        Stage::ALL.iter().map(move |&s| (s, &self.stages[s.index()]))
+    }
+}
+
+/// How much the observability layer records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// No per-stage clock reads beyond what serving already takes.
+    Off,
+    /// Stage histograms and counters, no per-query traces.
+    Counters,
+    /// Histograms plus sampled per-query JSONL traces.
+    #[default]
+    Full,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Option<ObsLevel> {
+        match s {
+            "off" => Some(ObsLevel::Off),
+            "counters" => Some(ObsLevel::Counters),
+            "full" => Some(ObsLevel::Full),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Full => "full",
+        }
+    }
+}
+
+/// Observability knobs threaded through routers and engines. Cheap to
+/// clone (the trace log is shared behind an `Arc`).
+#[derive(Clone, Debug, Default)]
+#[non_exhaustive]
+pub struct ObsConfig {
+    pub level: ObsLevel,
+    pub trace: Option<std::sync::Arc<TraceLog>>,
+}
+
+impl ObsConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All recording disabled.
+    pub fn off() -> Self {
+        ObsConfig { level: ObsLevel::Off, trace: None }
+    }
+
+    pub fn with_level(mut self, level: ObsLevel) -> Self {
+        self.level = level;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: std::sync::Arc<TraceLog>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Stage histograms enabled?
+    #[inline]
+    pub fn stages(&self) -> bool {
+        self.level >= ObsLevel::Counters
+    }
+
+    /// Per-query trace records enabled?
+    #[inline]
+    pub fn traces(&self) -> bool {
+        self.level >= ObsLevel::Full && self.trace.is_some()
+    }
+
+    /// `Instant::now()` when stage timing is on, else `None` — the
+    /// compile-out-cheap pattern: an `Off` config costs one branch.
+    #[inline]
+    pub fn now(&self) -> Option<Instant> {
+        if self.stages() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+}
+
+/// A finished query span, ready for the trace log.
+#[derive(Clone, Debug, Default)]
+pub struct SpanRecord {
+    pub model: String,
+    pub tier: &'static str,
+    pub total_us: u64,
+    /// (stage, µs) pairs for the stages this query crossed.
+    pub stages: Vec<(Stage, u64)>,
+}
+
+impl SpanRecord {
+    /// One JSONL line (hand-escaped — model names are the only free
+    /// text, escaped like the exporter does).
+    pub fn to_json_line(&self, seq: u64) -> String {
+        let mut s = format!(
+            "{{\"seq\":{},\"model\":\"{}\",\"tier\":\"{}\",\"total_us\":{}",
+            seq,
+            crate::obs::export::escape_json(&self.model),
+            self.tier,
+            self.total_us
+        );
+        for (stage, us) in &self.stages {
+            s.push_str(&format!(",\"{}_us\":{}", stage.label(), us));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Sampled JSONL trace sink: every `sample_every`-th span plus every
+/// span slower than `slow_us` is appended to the file (line-buffered,
+/// flushed per record — trace rates are sampled, not per-query) and kept
+/// in a bounded in-memory ring for the `/json` endpoint.
+#[derive(Debug)]
+pub struct TraceLog {
+    file: Option<Mutex<BufWriter<File>>>,
+    ring: Mutex<VecDeque<String>>,
+    ring_cap: usize,
+    sample_every: u64,
+    slow_us: u64,
+    seq: AtomicU64,
+    written: AtomicU64,
+}
+
+impl TraceLog {
+    pub const DEFAULT_SAMPLE_EVERY: u64 = 64;
+    pub const DEFAULT_SLOW_US: u64 = 10_000;
+    pub const DEFAULT_RING: usize = 256;
+
+    /// A trace log writing sampled spans to `path`.
+    pub fn to_file(path: &Path) -> std::io::Result<TraceLog> {
+        let file = File::create(path)?;
+        Ok(TraceLog {
+            file: Some(Mutex::new(BufWriter::new(file))),
+            ..TraceLog::in_memory()
+        })
+    }
+
+    /// Ring-buffer only (tests, `/json` without a `--trace-log` file).
+    pub fn in_memory() -> TraceLog {
+        TraceLog {
+            file: None,
+            ring: Mutex::new(VecDeque::new()),
+            ring_cap: Self::DEFAULT_RING,
+            sample_every: Self::DEFAULT_SAMPLE_EVERY,
+            slow_us: Self::DEFAULT_SLOW_US,
+            seq: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_sampling(mut self, sample_every: u64, slow_us: u64) -> Self {
+        self.sample_every = sample_every.max(1);
+        self.slow_us = slow_us;
+        self
+    }
+
+    /// Offer a span; records it when sampling or the slow threshold says
+    /// so. Returns whether it was recorded.
+    pub fn offer(&self, record: &SpanRecord) -> bool {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if seq % self.sample_every != 0 && record.total_us < self.slow_us {
+            return false;
+        }
+        let line = record.to_json_line(seq);
+        {
+            let mut ring = self.ring.lock().unwrap();
+            if ring.len() >= self.ring_cap {
+                ring.pop_front();
+            }
+            ring.push_back(line.clone());
+        }
+        if let Some(file) = &self.file {
+            let mut w = file.lock().unwrap();
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+        self.written.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Spans currently in the ring (oldest first).
+    pub fn recent(&self) -> Vec<String> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Spans recorded (ring + file) since creation.
+    pub fn recorded(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// Spans offered since creation.
+    pub fn offered(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel timer: thread-local nanosecond accumulator
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static KERNEL_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Zero this thread's kernel-time accumulator (bracket a calibration
+/// call with `reset` … `take`).
+#[inline]
+pub fn kernel_timer_reset() {
+    KERNEL_NS.with(|c| c.set(0));
+}
+
+/// Read and zero this thread's accumulated kernel nanoseconds.
+#[inline]
+pub fn kernel_timer_take() -> u64 {
+    KERNEL_NS.with(|c| c.replace(0))
+}
+
+/// Charge `ns` to this thread's kernel accumulator (called by the
+/// junction-tree engine around its message-passing sweeps).
+#[inline]
+pub fn kernel_timer_add(ns: u64) {
+    KERNEL_NS.with(|c| c.set(c.get().saturating_add(ns)));
+}
+
+/// RAII sweep timer: charges its lifetime to the kernel accumulator.
+pub struct KernelSweepTimer(Instant);
+
+impl KernelSweepTimer {
+    #[inline]
+    pub fn start() -> KernelSweepTimer {
+        KernelSweepTimer(Instant::now())
+    }
+}
+
+impl Drop for KernelSweepTimer {
+    #[inline]
+    fn drop(&mut self) {
+        kernel_timer_add(self.0.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indices_round_trip() {
+        for (i, &s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(Stage::from_index(i), Some(s));
+            assert!(!s.label().is_empty());
+        }
+        assert_eq!(Stage::from_index(6), None);
+    }
+
+    #[test]
+    fn stage_set_records_and_merges() {
+        let mut a = StageSet::new();
+        a.record(Stage::Queue, Duration::from_micros(10));
+        a.record(Stage::Kernel, Duration::from_micros(40));
+        let mut b = StageSet::new();
+        b.record(Stage::Queue, Duration::from_micros(30));
+        a.merge(&b);
+        assert_eq!(a.get(Stage::Queue).count(), 2);
+        assert_eq!(a.get(Stage::Queue).sum(), 40);
+        assert_eq!(a.get(Stage::Kernel).count(), 1);
+        assert_eq!(a.total_us(), 80);
+        assert!(StageSet::new().is_empty());
+    }
+
+    #[test]
+    fn obs_levels_order_and_parse() {
+        assert!(ObsLevel::Off < ObsLevel::Counters);
+        assert!(ObsLevel::Counters < ObsLevel::Full);
+        for l in [ObsLevel::Off, ObsLevel::Counters, ObsLevel::Full] {
+            assert_eq!(ObsLevel::parse(l.label()), Some(l));
+        }
+        assert_eq!(ObsLevel::parse("verbose"), None);
+        assert!(ObsConfig::off().now().is_none());
+        assert!(ObsConfig::new().now().is_some());
+        // Full without a trace sink records no traces.
+        assert!(!ObsConfig::new().traces());
+    }
+
+    #[test]
+    fn trace_log_samples_and_catches_slow() {
+        let log = TraceLog::in_memory().with_sampling(10, 1_000);
+        let fast = SpanRecord {
+            model: "asia".into(),
+            tier: "exact",
+            total_us: 50,
+            stages: vec![(Stage::Queue, 10), (Stage::Cache, 5)],
+        };
+        let slow = SpanRecord { total_us: 5_000, ..fast.clone() };
+        // Span 0 sampled; spans 1..9 fast → dropped; slow ones always kept.
+        assert!(log.offer(&fast));
+        for _ in 0..5 {
+            assert!(!log.offer(&fast));
+        }
+        assert!(log.offer(&slow));
+        assert_eq!(log.recorded(), 2);
+        assert_eq!(log.offered(), 7);
+        let lines = log.recent();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"model\":\"asia\""));
+        assert!(lines[0].contains("\"queue_us\":10"));
+        assert!(lines[1].contains("\"total_us\":5000"));
+    }
+
+    #[test]
+    fn trace_log_writes_jsonl_file() {
+        let path = std::env::temp_dir()
+            .join(format!("fastpgm_trace_{}.jsonl", std::process::id()));
+        let log = TraceLog::to_file(&path).unwrap().with_sampling(1, 0);
+        log.offer(&SpanRecord {
+            model: "m".into(),
+            tier: "exact",
+            total_us: 7,
+            stages: vec![(Stage::Calibration, 6)],
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.trim().starts_with('{') && text.trim().ends_with('}'));
+        assert!(text.contains("\"calibration_us\":6"));
+    }
+
+    #[test]
+    fn kernel_timer_accumulates_per_thread() {
+        kernel_timer_reset();
+        kernel_timer_add(100);
+        {
+            let _t = KernelSweepTimer::start();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let ns = kernel_timer_take();
+        assert!(ns >= 100 + 1_000_000, "accumulated {ns}ns");
+        assert_eq!(kernel_timer_take(), 0, "take must drain");
+        // Another thread's accumulator is independent.
+        kernel_timer_add(42);
+        let other = std::thread::spawn(kernel_timer_take).join().unwrap();
+        assert_eq!(other, 0);
+        assert_eq!(kernel_timer_take(), 42);
+    }
+}

@@ -53,6 +53,13 @@ pub use crate::inference::exact::{
 // Typed serving errors (shared by the in-process path and the wire).
 pub use crate::coordinator::ServingError;
 
+// Observability: the cost knob, the stage model, the registry, and the
+// stats endpoint (`docs/OBSERVABILITY.md`).
+pub use crate::obs::{
+    Collector, LatencyHistogram, ObsConfig, ObsLevel, Registry, Sample, SpanRecord,
+    Stage, StageSet, StatsServer, TraceLog, Value,
+};
+
 // The distributed fabric.
 pub use crate::coordinator::fabric::wire;
 pub use crate::coordinator::{

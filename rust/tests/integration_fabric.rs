@@ -240,6 +240,10 @@ fn drain_reloads_models_on_every_shard() {
         .expect("fabric answers after reload");
     let stats = frontend.stats().expect("merged stats");
     let asia = stats.iter().find(|(m, _)| m == "asia").expect("asia stats");
-    assert_eq!(asia.1.serving.requests, 1, "drain should reset counters");
+    // Counters are monotonic across the reload: the drained registration's
+    // totals are folded into its replacement (8 before + 1 after), so a
+    // scraper never sees the fleet's request count move backwards.
+    assert_eq!(asia.1.serving.requests, 9, "stats must stay monotonic across drain");
+    assert_eq!(asia.1.serving.latency.count(), 9, "latency histogram folds too");
     frontend.shutdown();
 }

@@ -1,0 +1,258 @@
+//! End-to-end tests for the observability stack: span lifecycle
+//! invariants on real serving traffic, monotonic stats across hot
+//! reloads, fleet-merged fabric views equal to the sum of per-shard
+//! views, and a raw-TCP scrape of the `--stats-addr` endpoint.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use fastpgm::network::repository;
+use fastpgm::prelude::Evidence;
+use fastpgm::rng::Pcg;
+use fastpgm::serving::{
+    Collector, FabricConfig, Frontend, ModelSpec, ObsConfig, QueryEngineConfig,
+    QueryRequest, QueryRouter, Registry, RoutingPolicy, ShardConfig, Stage,
+    StatsServer, ThreadLauncher, TraceLog,
+};
+use fastpgm::testkit::{gen_evidence_chain_pool, gen_query_var};
+
+/// A prefix-heavy trace on one model (what serving traffic looks like).
+fn chain_trace(net: &fastpgm::network::BayesianNetwork) -> Vec<(usize, Evidence)> {
+    let mut rng = Pcg::seed_from(20_260_808);
+    gen_evidence_chain_pool(&mut rng, net, 16, 4)
+        .into_iter()
+        .map(|ev| (gen_query_var(&mut rng, net, &ev), ev))
+        .collect()
+}
+
+fn drive(router: &QueryRouter, trace: &[(usize, Evidence)]) {
+    for (var, ev) in trace {
+        router
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("router answers");
+    }
+}
+
+/// Pull one integer field out of a flat JSONL span record.
+fn json_field(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Span lifecycle: every traced span's per-stage durations must sum to at
+/// most its end-to-end total (stages are disjoint slices of the query's
+/// life; µs truncation only ever shrinks them).
+#[test]
+fn span_stages_sum_within_end_to_end() {
+    let trace_log = Arc::new(TraceLog::in_memory().with_sampling(1, 0));
+    let obs = ObsConfig::new().with_trace(Arc::clone(&trace_log));
+    let mut router = QueryRouter::with_obs(2, obs);
+    let net = repository::asia();
+    router.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new().with_cache_capacity(64),
+        Default::default(),
+    );
+    let trace = chain_trace(&net);
+    drive(&router, &trace);
+
+    let lines = trace_log.recent();
+    assert_eq!(lines.len(), trace.len(), "sample_every=1 records every span");
+    for line in &lines {
+        let total = json_field(line, "total_us").expect("total_us field");
+        let staged: u64 = ["queue_us", "cache_us", "calibration_us", "kernel_us"]
+            .iter()
+            .filter_map(|k| json_field(line, k))
+            .sum();
+        // kernel is nested inside calibration, so subtract it back out of
+        // the disjoint-stage sum.
+        let kernel = json_field(line, "kernel_us").unwrap_or(0);
+        assert!(
+            staged - kernel <= total,
+            "stages {staged} (kernel {kernel} nested) exceed total {total}: {line}"
+        );
+        assert!(line.contains("\"tier\":\"exact\""), "exact tier tag: {line}");
+    }
+
+    // The same invariant in aggregate on the stage histograms.
+    let stats = router.stats();
+    let serving = &stats[0].1.serving;
+    let queue_sum = serving.stages.get(Stage::Queue).sum();
+    assert!(queue_sum <= serving.latency.sum(), "queue within e2e");
+    let kernel_sum = serving.stages.get(Stage::Kernel).sum();
+    let calibration_sum = serving.stages.get(Stage::Calibration).sum();
+    assert!(kernel_sum <= calibration_sum, "kernel nested in calibration");
+}
+
+/// The consistency model promised by `QueryRouter::stats()`: counters
+/// never move backwards across consecutive reads, including across a
+/// hot reload of the same model name.
+#[test]
+fn stats_monotonic_across_hot_reload() {
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+    let mut router = QueryRouter::new(2);
+    router.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new().with_cache_capacity(64),
+        Default::default(),
+    );
+    drive(&router, &trace[..8]);
+    let before = router.stats()[0].1.clone();
+    assert_eq!(before.serving.requests, 8);
+
+    // Hot reload: same name, fresh engine. The drained registration's
+    // totals must fold into the replacement.
+    router.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new().with_cache_capacity(64),
+        Default::default(),
+    );
+    let mid = router.stats()[0].1.clone();
+    assert!(mid.serving.requests >= before.serving.requests, "requests regressed");
+    assert!(
+        mid.serving.latency.count() >= before.serving.latency.count(),
+        "latency count regressed"
+    );
+    assert_eq!(mid.cache.entries, 0, "entries is a gauge: fresh cache is empty");
+
+    drive(&router, &trace[8..]);
+    let after = router.stats()[0].1.clone();
+    assert_eq!(after.serving.requests, trace.len() as u64);
+    assert_eq!(after.serving.latency.count(), trace.len() as u64);
+}
+
+/// Fabric acceptance: the fleet-merged view must equal the exact sum of
+/// the per-shard views — counters, latency histograms, and every stage
+/// histogram (bucket-wise exact merge, not approximation).
+#[test]
+fn fleet_merged_stats_equal_sum_of_shards() {
+    let engine = QueryEngineConfig::new().with_cache_capacity(64);
+    let specs = vec![ModelSpec::new("asia", repository::asia()).with_engine(engine)];
+    let frontend = Frontend::new(
+        specs.clone(),
+        Box::new(
+            ThreadLauncher::new(specs)
+                .with_config(ShardConfig::new().with_pool_threads(2)),
+        ),
+        FabricConfig::new().with_shards(2).with_policy(RoutingPolicy::RoundRobin),
+    )
+    .expect("fabric launches");
+
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+    for (var, ev) in &trace {
+        frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("fabric answers");
+    }
+
+    let per_shard = frontend.shard_stats().expect("per-shard stats");
+    let fleet = frontend.stats().expect("fleet stats");
+    let asia = &fleet.iter().find(|(m, _)| m == "asia").expect("asia").1;
+
+    let mut requests = 0u64;
+    let mut latency_count = 0u64;
+    let mut latency_sum = 0u64;
+    let mut queue_count = 0u64;
+    let mut shards_with_stages = 0;
+    for (_, models) in &per_shard {
+        for (name, stats) in models {
+            assert_eq!(name, "asia");
+            requests += stats.serving.requests;
+            latency_count += stats.serving.latency.count();
+            latency_sum += stats.serving.latency.sum();
+            queue_count += stats.serving.stages.get(Stage::Queue).count();
+            if !stats.serving.stages.is_empty() {
+                shards_with_stages += 1;
+            }
+        }
+    }
+    assert_eq!(requests, trace.len() as u64, "every query counted once");
+    assert_eq!(asia.serving.requests, requests, "fleet requests = Σ shards");
+    assert_eq!(asia.serving.latency.count(), latency_count, "fleet count = Σ");
+    assert_eq!(asia.serving.latency.sum(), latency_sum, "fleet sum = Σ");
+    assert_eq!(
+        asia.serving.stages.get(Stage::Queue).count(),
+        queue_count,
+        "fleet stage histograms merge bucket-wise"
+    );
+    assert!(
+        shards_with_stages >= 2,
+        "stage histograms must cross the wire from every shard (v2 stats)"
+    );
+    // Round-robin over 2 shards: both served, so the fleet view is a real
+    // merge, not a copy of one shard.
+    for (_, models) in &per_shard {
+        assert!(models[0].1.serving.requests > 0, "idle shard: {per_shard:?}");
+    }
+    frontend.shutdown();
+}
+
+/// Scrape `--stats-addr` over raw TCP and check the Prometheus rendering
+/// end-to-end: stage families with labels, histogram suffixes, counters.
+#[test]
+fn stats_server_serves_prometheus_and_json() {
+    let mut router = QueryRouter::new(2);
+    let net = repository::asia();
+    router.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new().with_cache_capacity(64),
+        Default::default(),
+    );
+    let trace = chain_trace(&net);
+    drive(&router, &trace);
+    let router = Arc::new(router);
+    let collector: Arc<dyn Collector> = Arc::clone(&router);
+    Registry::global().register("obs-scrape-test", Arc::downgrade(&collector));
+
+    let server = StatsServer::spawn("127.0.0.1:0", Registry::global(), None)
+        .expect("ephemeral bind");
+    let addr = server.addr();
+
+    let get = |path: &str| -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect scrape");
+        write!(stream, "GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .expect("send request");
+        let mut body = String::new();
+        stream.read_to_string(&mut body).expect("read response");
+        body
+    };
+
+    let metrics = get("/metrics");
+    assert!(metrics.starts_with("HTTP/1.1 200 OK"), "got: {metrics}");
+    for family in [
+        "# TYPE fastpgm_requests_total counter",
+        "# TYPE fastpgm_latency_us histogram",
+        "# TYPE fastpgm_stage_us histogram",
+        "fastpgm_requests_total{model=\"asia\"}",
+        "fastpgm_latency_us_count{model=\"asia\"}",
+        "fastpgm_cache_lookups_total{model=\"asia\",outcome=\"hit\"}",
+    ] {
+        assert!(metrics.contains(family), "missing {family:?} in:\n{metrics}");
+    }
+    // Every stage the in-process path crosses shows up as a labeled series.
+    for stage in ["queue", "cache", "calibration", "kernel"] {
+        let needle = format!("stage=\"{stage}\"");
+        assert!(metrics.contains(&needle), "missing {needle} in:\n{metrics}");
+    }
+
+    let json = get("/json");
+    assert!(json.starts_with("HTTP/1.1 200 OK"), "got: {json}");
+    assert!(json.contains("\"metrics\":["), "json body: {json}");
+    assert!(json.contains("fastpgm_requests_total"), "json body: {json}");
+
+    let missing = get("/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+
+    Registry::global().unregister("obs-scrape-test");
+    server.shutdown();
+}

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Collate the per-commit BENCH_*.json artifacts into one trajectory table.
+
+Every bench target in this repo writes a BENCH_<name>.json with a
+top-level ``bench`` tag, a ``config`` block, and a ``scenarios`` array of
+flat objects. This script walks whatever BENCH_*.json files are present
+(a fresh checkout after ``cargo bench``, or an unpacked CI artifact
+directory) and prints one aligned row per scenario, so a perf trajectory
+across commits is a diff of two runs of this script.
+
+Zero dependencies — stdlib only. Usage:
+
+    python3 scripts/bench_trajectory.py [dir-with-BENCH-json]   # default .
+    python3 scripts/bench_trajectory.py --json                  # machine-readable
+"""
+
+import glob
+import json
+import os
+import sys
+
+# Keys promoted into the table when a scenario carries them, in display
+# order. Everything else stays visible via --json.
+COLUMNS = [
+    ("net", "{}"),
+    ("mode", "{}"),
+    ("level", "{}"),
+    ("algo", "{}"),
+    ("queries", "{:.0f}"),
+    ("throughput_qps", "{:.0f}"),
+    ("p50_us", "{:.1f}"),
+    ("p99_us", "{:.1f}"),
+    ("speedup_vs_rebuild", "{:.2f}x"),
+    ("cache_hit_rate", "{:.3f}"),
+    ("overhead_vs_off", "{:+.1%}"),
+]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def scenario_row(bench, scenario):
+    row = {"bench": bench}
+    for key, fmt in COLUMNS:
+        if key in scenario:
+            value = scenario[key]
+            try:
+                row[key] = fmt.format(value)
+            except (ValueError, TypeError):
+                row[key] = str(value)
+    return row
+
+
+def main():
+    args = [a for a in sys.argv[1:] if a != "--json"]
+    as_json = "--json" in sys.argv[1:]
+    root = args[0] if args else "."
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print(f"no BENCH_*.json under {root!r} — run `cargo bench` first",
+              file=sys.stderr)
+        return 1
+
+    rows = []
+    gates = []
+    for path in paths:
+        try:
+            doc = load(path)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"skipping {path}: {e}", file=sys.stderr)
+            continue
+        bench = doc.get("bench", os.path.basename(path))
+        for scenario in doc.get("scenarios", []):
+            rows.append(scenario_row(bench, scenario))
+        if "full_overhead_vs_off" in doc:
+            gates.append(
+                ("obs full-span overhead", doc["full_overhead_vs_off"], 0.05))
+
+    if as_json:
+        print(json.dumps(rows, indent=2))
+        return 0
+
+    keys = ["bench"] + [k for k, _ in COLUMNS if any(k in r for r in rows)]
+    widths = {
+        k: max([len(k)] + [len(r.get(k, "")) for r in rows]) for k in keys
+    }
+    header = "  ".join(k.ljust(widths[k]) for k in keys)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print("  ".join(r.get(k, "-").ljust(widths[k]) for k in keys))
+
+    for label, value, limit in gates:
+        status = "OK" if value < limit else "OVER"
+        print(f"\ngate: {label} {value:+.1%} (limit {limit:.0%}) [{status}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
