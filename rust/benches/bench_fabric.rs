@@ -13,6 +13,15 @@
 //! Shards run in-process over real TCP ([`ThreadLauncher`]), so the wire
 //! traffic is identical to `serve-query --fabric N` without needing the
 //! built binary on the bench path.
+//!
+//! Two resilience gates ride along (docs/ROBUSTNESS.md):
+//!
+//! * `faults-idle`        — an armed fault plan whose rules never fire
+//!   (prob 0) must cost < 5% vs no plan on the affinity hot path
+//!   (bench_obs methodology: interleaved rounds, best round per arm; the
+//!   assert is skipped under `FASTPGM_BENCH_QUICK=1`).
+//! * `straggler-hedged`   — with shard 0 serving 20 ms slow, hedged sends
+//!   must cut interactive p99 vs the unhedged run of the same trace.
 
 use fastpgm::benchkit::json::Json;
 use fastpgm::benchkit::{self, report, scaled, Measurement};
@@ -20,8 +29,9 @@ use fastpgm::core::Evidence;
 use fastpgm::network::{repository, BayesianNetwork};
 use fastpgm::rng::Pcg;
 use fastpgm::serving::{
-    FabricConfig, Frontend, ModelSpec, QueryEngineConfig, QueryRequest, QueryRouter,
-    RoutingPolicy, ShardConfig, ThreadLauncher,
+    Backoff, FabricConfig, FaultKind, FaultPlan, FaultRule, FaultSite, Frontend,
+    ModelSpec, QueryEngineConfig, QueryRequest, QueryRouter, RoutingPolicy,
+    ShardConfig, ThreadLauncher,
 };
 use fastpgm::testkit;
 use std::path::Path;
@@ -30,6 +40,8 @@ use std::time::{Duration, Instant};
 const MODEL: &str = "alarm_like";
 const SHARDS: usize = 2;
 const CACHE_CAPACITY: usize = 256;
+/// Interleaved rounds for the faults-idle comparison (best round per arm).
+const FAULT_ROUNDS: usize = 3;
 
 fn specs(net: &BayesianNetwork) -> Vec<ModelSpec> {
     vec![ModelSpec::new(MODEL, net.clone())
@@ -97,6 +109,36 @@ fn run_fabric(
         .unwrap_or(0.0);
     frontend.shutdown();
     (posts, latencies, warm_rate)
+}
+
+/// Run the trace through a fabric with explicit fault wiring on the shard
+/// side (`shard_plan`) and whatever the caller put in `config` (frontend
+/// plan, hedging, backoff); returns per-query latencies.
+fn run_with(
+    net: &BayesianNetwork,
+    trace: &[(usize, Evidence)],
+    shard_plan: Option<FaultPlan>,
+    config: FabricConfig,
+) -> Vec<Duration> {
+    let mut shard_config = ShardConfig::new().with_pool_threads(2);
+    if let Some(plan) = shard_plan {
+        shard_config = shard_config.with_faults(plan);
+    }
+    let frontend = Frontend::new(
+        specs(net),
+        Box::new(ThreadLauncher::new(specs(net)).with_config(shard_config)),
+        config,
+    )
+    .expect("fabric launches");
+    let (_, latencies) = drive(trace, |var, ev| {
+        frontend
+            .query_routed(MODEL, QueryRequest::marginal(var, ev.clone()))
+            .expect("fabric answers")
+            .into_marginal()
+            .expect("marginal reply")
+    });
+    frontend.shutdown();
+    latencies
 }
 
 fn scenario_json(mode: &str, latencies: &[Duration], extra: Vec<(&str, Json)>) -> Json {
@@ -180,6 +222,77 @@ fn main() {
         println!("  WARNING: affinity warm rate fell >10% below in-process");
     }
 
+    // 5. Faults-idle gate: an armed plan whose rules never fire (prob 0 on
+    //    both the shard and frontend hooks) vs no plan at all, same trace,
+    //    same affinity fabric. Interleaved rounds so background-load drift
+    //    hits both arms equally; keep the best (least-perturbed) round.
+    let idle_plan = FaultPlan::seeded(1)
+        .with(FaultKind::Delay, 0.0, FaultSite::Serve)
+        .with(FaultKind::Corrupt, 0.0, FaultSite::ShardSend)
+        .with(FaultKind::Refuse, 0.0, FaultSite::Connect);
+    let mut best: [Option<Vec<Duration>>; 2] = [None, None];
+    for _ in 0..FAULT_ROUNDS {
+        for (arm, slot) in best.iter_mut().enumerate() {
+            let plan = (arm == 1).then(|| idle_plan.clone());
+            let mut config =
+                FabricConfig::new().with_shards(SHARDS).with_policy(RoutingPolicy::Affinity);
+            if let Some(p) = plan.clone() {
+                config = config.with_faults(p);
+            }
+            let lat = run_with(&net, &trace, plan, config);
+            let total: Duration = lat.iter().sum();
+            let keep = match slot {
+                Some(prev) => total < prev.iter().sum::<Duration>(),
+                None => true,
+            };
+            if keep {
+                *slot = Some(lat);
+            }
+        }
+    }
+    let hooks_off = best[0].take().expect("rounds ran");
+    let hooks_idle = best[1].take().expect("rounds ran");
+    let idle_ratio = hooks_idle.iter().sum::<Duration>().as_secs_f64()
+        / hooks_off.iter().sum::<Duration>().as_secs_f64().max(1e-12);
+    println!(
+        "  fault hooks: no plan vs armed idle plan ratio {idle_ratio:.3} (gate < 1.05)"
+    );
+
+    // 6. Hedged sends vs a straggler: shard 0 answers 20 ms slow, every
+    //    query. Round-robin sends half the trace straight at it; hedging
+    //    cuts the primary read at 2 ms and retries the ring successor.
+    let straggler_trace = workload(&net, scaled(192, 48));
+    let straggler = |hedge: bool| {
+        let plan = FaultPlan::seeded(7).with_rule(FaultRule {
+            kind: FaultKind::Delay,
+            prob: 1.0,
+            site: FaultSite::Serve,
+            shard: Some(0),
+            millis: 20,
+        });
+        let mut config = FabricConfig::new()
+            .with_shards(SHARDS)
+            .with_policy(RoutingPolicy::RoundRobin)
+            .with_backoff(Backoff::new().with_base(Duration::from_millis(1)));
+        if hedge {
+            config = config.with_hedge(true).with_hedge_delay(Duration::from_millis(2));
+        }
+        run_with(&net, &straggler_trace, Some(plan), config)
+    };
+    let no_hedge_lat = straggler(false);
+    let hedged_lat = straggler(true);
+    let p99 = |lat: &[Duration]| {
+        Measurement { label: String::new(), samples: lat.to_vec() }
+            .percentile(99.0)
+            .as_secs_f64()
+            * 1e6
+    };
+    let (p99_off, p99_on) = (p99(&no_hedge_lat), p99(&hedged_lat));
+    println!(
+        "  straggler p99: unhedged {p99_off:.0}us, hedged {p99_on:.0}us \
+         (hedge must win)"
+    );
+
     let out = Json::obj([
         ("bench", Json::str("fabric")),
         (
@@ -222,10 +335,53 @@ fn main() {
                         ("warm_rate_vs_in_process", Json::num(rr_warm - local_warm)),
                     ],
                 ),
+                scenario_json(
+                    "faults-idle",
+                    &hooks_idle,
+                    vec![
+                        ("idle_overhead_ratio", Json::num(idle_ratio)),
+                        ("gate", Json::num(1.05)),
+                    ],
+                ),
+                scenario_json(
+                    "straggler-no-hedge",
+                    &no_hedge_lat,
+                    vec![("hedge", Json::num(0.0)), ("injected_delay_ms", Json::num(20.0))],
+                ),
+                scenario_json(
+                    "straggler-hedged",
+                    &hedged_lat,
+                    vec![
+                        ("hedge", Json::num(1.0)),
+                        ("injected_delay_ms", Json::num(20.0)),
+                        ("p99_improvement_us", Json::num(p99_off - p99_on)),
+                    ],
+                ),
             ]),
         ),
+        ("quick", Json::num(if benchkit::quick() { 1.0 } else { 0.0 })),
     ]);
     let path = Path::new("BENCH_fabric.json");
     benchkit::json::write(path, &out).expect("writing BENCH_fabric.json");
     println!("\nwrote {}", path.display());
+
+    // The gates. Quick (CI smoke) runs are too noisy for a 5% latency
+    // comparison or a p99 race to be meaningful — emit, don't assert.
+    if !benchkit::quick() {
+        assert!(
+            idle_ratio < 1.05,
+            "armed-but-idle fault hooks cost {:.1}% (> 5% gate)",
+            (idle_ratio - 1.0) * 100.0
+        );
+        assert!(
+            p99_on < p99_off,
+            "hedged p99 {p99_on:.0}us did not beat unhedged {p99_off:.0}us \
+             under a 20ms straggler"
+        );
+    } else if idle_ratio >= 1.05 || p99_on >= p99_off {
+        println!(
+            "  NOTE: resilience gates outside bounds in quick mode (noisy; \
+             asserted in full runs only)"
+        );
+    }
 }

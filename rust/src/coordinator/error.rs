@@ -47,6 +47,11 @@ pub enum ServingError {
     /// An internal invariant broke (e.g. a reply variant that does not
     /// match its request target). Always a bug, never a caller error.
     Internal(String),
+    /// The query's deadline budget ran out before an answer was produced
+    /// — either the flush queue expired it shard-side or the frontend
+    /// exhausted the budget walking the retry ladder. The query was
+    /// *not* answered late; it was dropped from the work queue.
+    DeadlineExceeded(String),
 }
 
 impl ServingError {
@@ -63,6 +68,7 @@ impl ServingError {
             ServingError::Overloaded(_) => 7,
             ServingError::Registration(_) => 8,
             ServingError::Internal(_) => 9,
+            ServingError::DeadlineExceeded(_) => 10,
         }
     }
 
@@ -76,7 +82,8 @@ impl ServingError {
             | ServingError::Wire(s)
             | ServingError::Overloaded(s)
             | ServingError::Registration(s)
-            | ServingError::Internal(s) => s.clone(),
+            | ServingError::Internal(s)
+            | ServingError::DeadlineExceeded(s) => s.clone(),
             ServingError::ServiceStopped | ServingError::ProtocolMismatch { .. } => {
                 String::new()
             }
@@ -120,6 +127,7 @@ impl ServingError {
             7 => ServingError::Overloaded(detail),
             8 => ServingError::Registration(detail),
             9 => ServingError::Internal(detail),
+            10 => ServingError::DeadlineExceeded(detail),
             other => {
                 ServingError::Wire(format!("unrecognized error code {other}: {detail}"))
             }
@@ -148,6 +156,9 @@ impl fmt::Display for ServingError {
             ServingError::Overloaded(s) => write!(f, "shard overloaded: {s}"),
             ServingError::Registration(s) => write!(f, "registration failed: {s}"),
             ServingError::Internal(s) => write!(f, "internal serving error: {s}"),
+            ServingError::DeadlineExceeded(s) => {
+                write!(f, "deadline exceeded: {s}")
+            }
         }
     }
 }
@@ -174,6 +185,7 @@ mod tests {
             ServingError::Overloaded("1024 in flight".into()),
             ServingError::Registration("factory failed".into()),
             ServingError::Internal("reply variant mismatch".into()),
+            ServingError::DeadlineExceeded("budget spent after 2 attempts".into()),
         ]
     }
 
@@ -184,7 +196,7 @@ mod tests {
         codes.sort_unstable();
         codes.dedup();
         assert_eq!(codes.len(), variants.len(), "duplicate error codes");
-        assert_eq!(codes, (1..=9).collect::<Vec<u16>>());
+        assert_eq!(codes, (1..=10).collect::<Vec<u16>>());
     }
 
     #[test]

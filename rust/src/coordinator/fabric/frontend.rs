@@ -16,23 +16,34 @@
 //! failure declare the shard dead, respawn it via the launcher and retry
 //! → finally answer from the in-process fallback router. A query is never
 //! dropped; [`FabricMetrics`] counts every recovery step.
+//!
+//! **Resilience** (`docs/ROBUSTNESS.md`): every redial/respawn draws from
+//! a global [`RetryBudget`] and pauses by a jittered [`Backoff`]; each
+//! shard sits behind a [`CircuitBreaker`] that takes it off the routing
+//! ring when it keeps failing and probes it back in half-open; deadline
+//! budgets shrink per-attempt I/O timeouts and decrement across hops; and
+//! interactive queries can hedge onto the ring successor once the primary
+//! outlives the observed p99.
 
+use super::resilience::{Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget};
 use super::shard::{ModelSpec, ShardConfig, ShardWorker};
 use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
 use crate::coordinator::query_router::stats_to_samples;
 use crate::coordinator::{
-    QueryModelStats, QueryRequest, QueryRouter, RoutedReply, ServingError,
+    QueryModelStats, QueryPriority, QueryRequest, QueryRouter, RoutedReply,
+    ServingError,
 };
 use crate::core::Evidence;
-use crate::obs::{Collector, LatencyHistogram, ObsConfig, Sample};
+use crate::faults::{FaultAction, FaultHook, FaultPlan, FaultSite, Faults};
+use crate::obs::{Collector, LatencyHistogram, ObsConfig, Sample, SpanRecord, Stage};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader};
+use std::io::{BufRead, BufReader, Write as _};
 use std::net::{Shutdown as NetShutdown, SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Line a `--shard` process prints on stdout once its listener is up; the
@@ -75,6 +86,27 @@ pub struct FabricConfig {
     /// Observability knobs for the fallback router (shards carry their
     /// own via [`ShardConfig`]).
     pub obs: ObsConfig,
+    /// Deterministic fault plan for the frontend's own I/O sites
+    /// (`connect` / `frontend_send` / `frontend_recv`). Shards carry
+    /// their own plan via [`ShardConfig`]. `None` (the default) keeps
+    /// the hot path fault-free at zero cost.
+    pub faults: Option<FaultPlan>,
+    /// Hedge interactive queries: cut the primary attempt short at the
+    /// hedge delay and retry on the ring successor instead of waiting
+    /// out the full `io_timeout` behind a straggler.
+    pub hedge: bool,
+    /// Explicit hedge delay. `None` derives it from the observed wire
+    /// p99 with a 1 ms floor (a cold histogram hedges conservatively).
+    pub hedge_delay: Option<Duration>,
+    /// Per-shard circuit-breaker thresholds.
+    pub breaker: BreakerConfig,
+    /// Backoff schedule for redials and respawns.
+    pub backoff: Backoff,
+    /// Retry-budget token bucket: burst capacity shared by every
+    /// redial/respawn the frontend performs.
+    pub retry_burst: f64,
+    /// Retry-budget token bucket: sustained refill rate, tokens/second.
+    pub retry_per_sec: f64,
 }
 
 impl Default for FabricConfig {
@@ -89,6 +121,13 @@ impl Default for FabricConfig {
             fallback: true,
             pool_threads: 2,
             obs: ObsConfig::default(),
+            faults: None,
+            hedge: false,
+            hedge_delay: None,
+            breaker: BreakerConfig::default(),
+            backoff: Backoff::default(),
+            retry_burst: 8.0,
+            retry_per_sec: 4.0,
         }
     }
 }
@@ -152,6 +191,43 @@ impl FabricConfig {
         self.obs = obs;
         self
     }
+
+    /// Arm a deterministic fault plan on the frontend's I/O sites.
+    pub fn with_faults(mut self, plan: FaultPlan) -> FabricConfig {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Enable/disable hedged sends for interactive queries.
+    pub fn with_hedge(mut self, hedge: bool) -> FabricConfig {
+        self.hedge = hedge;
+        self
+    }
+
+    /// Pin the hedge delay instead of deriving it from the wire p99.
+    pub fn with_hedge_delay(mut self, d: Duration) -> FabricConfig {
+        self.hedge_delay = Some(d);
+        self
+    }
+
+    /// Set the per-shard circuit-breaker thresholds.
+    pub fn with_breaker(mut self, breaker: BreakerConfig) -> FabricConfig {
+        self.breaker = breaker;
+        self
+    }
+
+    /// Set the redial/respawn backoff schedule.
+    pub fn with_backoff(mut self, backoff: Backoff) -> FabricConfig {
+        self.backoff = backoff;
+        self
+    }
+
+    /// Set the retry budget (burst capacity, refill tokens/second).
+    pub fn with_retry_budget(mut self, burst: f64, per_sec: f64) -> FabricConfig {
+        self.retry_burst = burst;
+        self.retry_per_sec = per_sec;
+        self
+    }
 }
 
 /// Counters for the fabric's routing and recovery machinery (the serving
@@ -172,6 +248,18 @@ pub struct FabricMetrics {
     pub fallback_answers: usize,
     /// Transparent same-shard retries (stale connection redials).
     pub retried: usize,
+    /// Queries whose deadline budget ran out while the fabric held them.
+    pub deadline_exceeded: usize,
+    /// Interactive queries whose primary attempt was cut short at the
+    /// hedge delay and re-sent on the ring successor.
+    pub hedged: usize,
+    /// Hedged re-sends that produced the answer.
+    pub hedge_wins: usize,
+    /// Redials/respawns skipped because the retry budget was exhausted.
+    pub retries_denied: usize,
+    /// Batch queries sent with brownout hints (shrunk approx sample
+    /// budgets / approx-tier preference) because breakers were open.
+    pub brownout_queries: usize,
     /// Frontend-side query round-trip time (write request → read reply on
     /// the shard connection) — the `wire` stage of the query lifecycle.
     pub wire: LatencyHistogram,
@@ -374,7 +462,25 @@ pub struct Frontend {
     next_id: AtomicU64,
     fallback: Option<QueryRouter>,
     metrics: Mutex<FabricMetrics>,
+    /// One circuit breaker per shard; an open breaker takes the shard off
+    /// the routing ring until a half-open probe succeeds.
+    breakers: Vec<CircuitBreaker>,
+    /// Global token bucket gating every redial/respawn.
+    retry_budget: RetryBudget,
+    /// Armed fault hook for the frontend's own I/O sites (`None` when no
+    /// plan is configured — the common, zero-cost case).
+    faults: FaultHook,
+    /// Stats scrape cache: per-shard `StatsRequest` round trips are
+    /// reused for ~1 s so a tight scrape loop costs one fleet sweep per
+    /// second, not per scrape.
+    stats_cache: StatsCache,
 }
+
+type ShardStats = Vec<(u32, Vec<(String, QueryModelStats)>)>;
+type StatsCache = Mutex<Option<(Instant, ShardStats)>>;
+
+/// How long a stats scrape may reuse the previous fleet sweep.
+const STATS_CACHE_TTL: Duration = Duration::from_secs(1);
 
 impl Frontend {
     /// Launch `config.shards` shards via `launcher` and build the routing
@@ -423,6 +529,11 @@ impl Frontend {
         };
         let metrics =
             FabricMetrics { per_shard: vec![0; config.shards], ..Default::default() };
+        let breakers = (0..config.shards)
+            .map(|_| CircuitBreaker::new(config.breaker.clone()))
+            .collect();
+        let retry_budget = RetryBudget::new(config.retry_burst, config.retry_per_sec);
+        let faults = config.faults.as_ref().map(|plan| plan.arm(None));
         Ok(Frontend {
             config,
             launcher,
@@ -432,7 +543,22 @@ impl Frontend {
             next_id: AtomicU64::new(1),
             fallback,
             metrics: Mutex::new(metrics),
+            breakers,
+            retry_budget,
+            faults,
+            stats_cache: Mutex::new(None),
         })
+    }
+
+    /// The armed frontend fault hook, when a plan was configured — chaos
+    /// tests disarm/re-arm injection through it mid-run.
+    pub fn faults(&self) -> Option<&Arc<Faults>> {
+        self.faults.as_ref()
+    }
+
+    /// Current breaker state per shard.
+    pub fn breaker_states(&self) -> Vec<BreakerState> {
+        self.breakers.iter().map(|b| b.state()).collect()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -462,35 +588,254 @@ impl Frontend {
     }
 
     /// Route, send, and answer one query. Never drops: walks the failure
-    /// ladder (redial → respawn + retry → in-process fallback) before
-    /// giving up with [`ServingError::ShardUnavailable`].
+    /// ladder (redial → hedge → respawn + retry → in-process fallback)
+    /// before giving up with [`ServingError::ShardUnavailable`] — except
+    /// when the query's own deadline budget runs out first, which is
+    /// [`ServingError::DeadlineExceeded`] rather than a late answer.
     pub fn query_routed(
         &self,
         model: &str,
-        request: QueryRequest,
+        mut request: QueryRequest,
     ) -> Result<RoutedReply, ServingError> {
-        let shard = self.route(&request);
+        let t0 = Instant::now();
+        if request.trace_id == 0 {
+            // Stitchable across processes: pid high, query sequence low.
+            request.trace_id = (std::process::id() as u64) << 32
+                | (self.next_id.fetch_add(1, Ordering::Relaxed) & 0xffff_ffff);
+        }
+        let trace_id = request.trace_id;
+        self.apply_brownout(&mut request);
+        let shard = self.route_admitted(&request);
         {
             let mut m = self.metrics.lock().unwrap();
             m.queries += 1;
             m.per_shard[shard] += 1;
         }
-        match self.query_on_shard(shard, model, &request) {
-            Ok(reply) => Ok(reply),
-            Err(ServingError::ShardUnavailable(why)) => {
-                self.metrics.lock().unwrap().failovers += 1;
-                match self.respawn_and_retry(shard, model, &request) {
-                    Ok(reply) => Ok(reply),
-                    Err(_) => self.answer_from_fallback(model, request, &why),
+        let out = self.answer_resilient(shard, model, request, t0);
+        if self.config.obs.traces() {
+            if let Some(trace) = self.config.obs.trace.as_ref() {
+                let total_us = t0.elapsed().as_micros() as u64;
+                trace.offer(&SpanRecord {
+                    model: model.to_string(),
+                    tier: "fabric",
+                    trace_id,
+                    total_us,
+                    stages: vec![(Stage::Wire, total_us)],
+                });
+            }
+        }
+        out
+    }
+
+    /// Like [`Frontend::route`], but an open breaker takes its shard out
+    /// of contention: Affinity keeps walking the ring to the next distinct
+    /// admitted shard, RoundRobin skips over open slots. When *every*
+    /// breaker is open the primary is used anyway — the failure ladder and
+    /// the fallback router degrade service instead of dropping queries.
+    fn route_admitted(&self, request: &QueryRequest) -> usize {
+        let primary = self.route(request);
+        if matches!(self.breakers[primary].admit(), Admit::Yes | Admit::Probe) {
+            return primary;
+        }
+        match self.config.policy {
+            RoutingPolicy::RoundRobin => {
+                for _ in 0..self.slots.len() {
+                    let s = self.rr.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+                    if matches!(self.breakers[s].admit(), Admit::Yes | Admit::Probe) {
+                        return s;
+                    }
                 }
+                primary
+            }
+            RoutingPolicy::Affinity => {
+                let h = signature_hash(&request.evidence, self.config.affinity_prefix);
+                let start = match self.ring.binary_search(&(h, usize::MAX)) {
+                    Ok(i) | Err(i) => i % self.ring.len(),
+                };
+                let mut seen = vec![false; self.slots.len()];
+                seen[primary] = true;
+                for k in 0..self.ring.len() {
+                    let s = self.ring[(start + k) % self.ring.len()].1;
+                    if seen[s] {
+                        continue;
+                    }
+                    seen[s] = true;
+                    if matches!(self.breakers[s].admit(), Admit::Yes | Admit::Probe) {
+                        return s;
+                    }
+                }
+                primary
+            }
+        }
+    }
+
+    /// Staged brownout: when breakers are open, degrade *gracefully*
+    /// before any query is dropped. Batch traffic gets its approx sample
+    /// budget shrunk; once a majority of shards is open it is pushed to
+    /// the approx tier outright. Interactive queries are never degraded
+    /// here — they keep their full exact path.
+    fn apply_brownout(&self, request: &mut QueryRequest) {
+        if request.qos.priority != QueryPriority::Batch {
+            return;
+        }
+        let open = self
+            .breakers
+            .iter()
+            .filter(|b| b.state() == BreakerState::Open)
+            .count();
+        if open == 0 {
+            return;
+        }
+        let majority = open * 2 >= self.breakers.len();
+        request.qos.approx_shrink =
+            request.qos.approx_shrink.max(if majority { 2 } else { 1 });
+        if majority {
+            request.qos.prefer_approx = true;
+        }
+        self.metrics.lock().unwrap().brownout_queries += 1;
+    }
+
+    /// The resilient answer path behind [`Frontend::query_routed`]:
+    /// deadline pre-checks, a (possibly hedged) primary attempt, breaker
+    /// bookkeeping, and the budget-gated respawn → fallback ladder.
+    fn answer_resilient(
+        &self,
+        shard: usize,
+        model: &str,
+        request: QueryRequest,
+        t0: Instant,
+    ) -> Result<RoutedReply, ServingError> {
+        let deadline = request.qos.deadline;
+        // Remaining deadline budget, or a typed refusal once it is gone —
+        // an expired query must never be answered late.
+        let remaining = |label: &str| -> Result<Option<Duration>, ServingError> {
+            match deadline {
+                None => Ok(None),
+                Some(d) => {
+                    let left = d.saturating_sub(t0.elapsed());
+                    if left.is_zero() {
+                        self.metrics.lock().unwrap().deadline_exceeded += 1;
+                        Err(ServingError::DeadlineExceeded(format!(
+                            "budget {d:?} exhausted before {label}"
+                        )))
+                    } else {
+                        Ok(Some(left))
+                    }
+                }
+            }
+        };
+        let hedging = self.config.hedge
+            && request.qos.priority == QueryPriority::Interactive
+            && self.slots.len() > 1;
+        let hedge_cut = if hedging { Some(self.hedge_delay()) } else { None };
+
+        let left = remaining("first attempt")?;
+        let why = match self.query_on_shard(shard, model, &request, left, hedge_cut) {
+            Ok(reply) => {
+                self.breakers[shard].record_success();
+                return Ok(reply);
+            }
+            Err(ServingError::ShardUnavailable(why)) => {
+                // A hedge-shortened timeout is not evidence of shard
+                // sickness; only full-timeout failures feed the breaker.
+                if hedge_cut.is_none() {
+                    self.breakers[shard].record_failure();
+                }
+                why
             }
             Err(ServingError::Overloaded(why)) => {
                 // The shard is alive but full — shed to the fallback
                 // rather than queueing blind.
-                self.answer_from_fallback(model, request, &why)
+                return self.answer_from_fallback(model, request, &why);
             }
-            Err(other) => Err(other),
+            Err(ServingError::DeadlineExceeded(why)) => {
+                self.metrics.lock().unwrap().deadline_exceeded += 1;
+                return Err(ServingError::DeadlineExceeded(why));
+            }
+            Err(other) => return Err(other),
+        };
+
+        // Hedged second send: the primary outlived its hedge delay, so
+        // race the ring successor with the full remaining budget.
+        if hedge_cut.is_some() {
+            self.metrics.lock().unwrap().hedged += 1;
+            if let Some(succ) = self.successor(shard) {
+                let left = remaining("hedged retry")?;
+                if let Ok(reply) =
+                    self.query_on_shard(succ, model, &request, left, None)
+                {
+                    self.breakers[succ].record_success();
+                    self.metrics.lock().unwrap().hedge_wins += 1;
+                    return Ok(reply);
+                }
+            }
+            // Both attempts failed — now it counts against the primary.
+            self.breakers[shard].record_failure();
         }
+
+        // The shard looks dead: respawn it (budget- and backoff-gated)
+        // and retry once, else answer in-process.
+        self.metrics.lock().unwrap().failovers += 1;
+        if !self.retry_budget.try_take() {
+            self.metrics.lock().unwrap().retries_denied += 1;
+            return self.answer_from_fallback(model, request, &why);
+        }
+        let mut pause = self.config.backoff.delay(1);
+        if let Some(left) = remaining("respawn")? {
+            pause = pause.min(left / 2);
+        }
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
+        match self.respawn_and_retry(shard, model, &request, remaining("retry")?) {
+            Ok(reply) => {
+                self.breakers[shard].record_success();
+                Ok(reply)
+            }
+            Err(ServingError::DeadlineExceeded(why)) => {
+                self.metrics.lock().unwrap().deadline_exceeded += 1;
+                Err(ServingError::DeadlineExceeded(why))
+            }
+            Err(_) => self.answer_from_fallback(model, request, &why),
+        }
+    }
+
+    /// The hedge delay: the explicit override when set, else the observed
+    /// frontend-side wire p99 floored at 1 ms (so a cold histogram hedges
+    /// conservatively) and capped at the io_timeout.
+    fn hedge_delay(&self) -> Duration {
+        if let Some(d) = self.config.hedge_delay {
+            return d;
+        }
+        let p99_us = {
+            let m = self.metrics.lock().unwrap();
+            if m.wire.count() >= 32 {
+                m.wire.percentile(99.0)
+            } else {
+                0
+            }
+        };
+        Duration::from_micros(p99_us)
+            .max(Duration::from_millis(1))
+            .min(self.config.io_timeout)
+    }
+
+    /// The hedge target: the next distinct shard after `shard`, preferring
+    /// one whose breaker admits traffic.
+    fn successor(&self, shard: usize) -> Option<usize> {
+        let n = self.slots.len();
+        if n < 2 {
+            return None;
+        }
+        let mut any = None;
+        for k in 1..n {
+            let s = (shard + k) % n;
+            if matches!(self.breakers[s].admit(), Admit::Yes | Admit::Probe) {
+                return Some(s);
+            }
+            any.get_or_insert(s);
+        }
+        any
     }
 
     /// Send `Drain` to every shard (rolling model reload). Returns how
@@ -533,6 +878,24 @@ impl Frontend {
             }
         }
         Ok(out)
+    }
+
+    /// [`Frontend::shard_stats`] behind a ~1 s cache — what the metrics
+    /// scrape path uses, so a tight scrape loop costs one stats round trip
+    /// per shard per second instead of per scrape. Direct `shard_stats`
+    /// and `stats` callers still see fresh numbers.
+    fn shard_stats_cached(&self) -> Result<ShardStats, ServingError> {
+        {
+            let cache = self.stats_cache.lock().unwrap();
+            if let Some((at, stats)) = cache.as_ref() {
+                if at.elapsed() < STATS_CACHE_TTL {
+                    return Ok(stats.clone());
+                }
+            }
+        }
+        let fresh = self.shard_stats()?;
+        *self.stats_cache.lock().unwrap() = Some((Instant::now(), fresh.clone()));
+        Ok(fresh)
     }
 
     /// Fleet view: per-model stats merged across every shard. Histogram
@@ -582,6 +945,28 @@ impl Frontend {
     // -- internals --------------------------------------------------------
 
     fn connect(&self, addr: SocketAddr) -> Result<Connection, ServingError> {
+        self.connect_to_shard(addr, None)
+    }
+
+    fn connect_to_shard(
+        &self,
+        addr: SocketAddr,
+        shard: Option<u32>,
+    ) -> Result<Connection, ServingError> {
+        if let Some(faults) = &self.faults {
+            match faults.decide(FaultSite::Connect, shard) {
+                FaultAction::Refuse | FaultAction::Kill | FaultAction::Drop => {
+                    return Err(ServingError::ShardUnavailable(format!(
+                        "dial {addr}: injected connect refusal"
+                    )));
+                }
+                other => {
+                    if let Some(d) = other.sleep() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
         let stream = TcpStream::connect_timeout(&addr, self.config.connect_timeout)
             .map_err(|e| {
                 ServingError::ShardUnavailable(format!("dial {addr}: {e}"))
@@ -620,13 +1005,77 @@ impl Frontend {
         }
     }
 
+    /// One write→read on an open connection, through the frontend fault
+    /// sites. A shortened `read_timeout` (deadline budget or hedge cut)
+    /// applies to this attempt only; the caller restores the configured
+    /// io_timeout before repooling the connection.
+    fn attempt_io(
+        &self,
+        shard: usize,
+        conn: &mut Connection,
+        msg: &Message,
+        read_timeout: Option<Duration>,
+    ) -> Result<Message, ServingError> {
+        if let Some(t) = read_timeout {
+            let _ = conn.stream.set_read_timeout(Some(t));
+        }
+        let mut send = true;
+        if let Some(faults) = &self.faults {
+            match faults.decide(FaultSite::FrontendSend, Some(shard as u32)) {
+                // Swallowed request: nothing is sent, the read below
+                // waits out its timeout — a lost-datagram-shaped fault.
+                FaultAction::Drop => send = false,
+                FaultAction::Kill | FaultAction::Refuse => {
+                    let _ = conn.stream.shutdown(NetShutdown::Both);
+                }
+                FaultAction::Corrupt => {
+                    let mut frame = wire::encode_frame(conn.version, msg);
+                    faults.corrupt_frame(&mut frame);
+                    conn.stream.write_all(&frame).map_err(|e| {
+                        ServingError::ShardUnavailable(format!("send: {e}"))
+                    })?;
+                    // The shard drops undecodable frames and closes, so
+                    // the read below fails — error-shaped, never wedged.
+                    send = false;
+                }
+                other => {
+                    if let Some(d) = other.sleep() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
+        if send {
+            wire::write_frame(&mut conn.stream, conn.version, msg)?;
+        }
+        let (_, reply) = wire::read_frame(&mut conn.stream)?;
+        if let Some(faults) = &self.faults {
+            match faults.decide(FaultSite::FrontendRecv, Some(shard as u32)) {
+                FaultAction::Drop | FaultAction::Kill | FaultAction::Refuse => {
+                    let _ = conn.stream.shutdown(NetShutdown::Both);
+                    return Err(ServingError::ShardUnavailable(
+                        "injected: reply dropped after read".into(),
+                    ));
+                }
+                other => {
+                    if let Some(d) = other.sleep() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
+        Ok(reply)
+    }
+
     /// One request/response round trip on a shard, with the stale-conn
     /// redial: an I/O failure on a *pooled* connection is retried once on
-    /// a fresh dial before the shard is declared unavailable.
-    fn exchange_on_shard(
+    /// a fresh dial — gated by the retry budget and paused by the backoff
+    /// schedule — before the shard is declared unavailable.
+    fn exchange_with_timeout(
         &self,
         shard: usize,
         msg: &Message,
+        read_timeout: Option<Duration>,
     ) -> Result<Message, ServingError> {
         let mut slot = self.slots[shard].lock().unwrap();
         let addr = match slot.handle.as_ref() {
@@ -640,12 +1089,11 @@ impl Frontend {
         let pooled = slot.conn.is_some();
         let mut conn = match slot.conn.take() {
             Some(c) => c,
-            None => self.connect(addr)?,
+            None => self.connect_to_shard(addr, Some(shard as u32))?,
         };
-        let attempt = wire::write_frame(&mut conn.stream, conn.version, msg)
-            .and_then(|()| wire::read_frame(&mut conn.stream));
-        match attempt {
-            Ok((_, reply)) => {
+        match self.attempt_io(shard, &mut conn, msg, read_timeout) {
+            Ok(reply) => {
+                let _ = conn.stream.set_read_timeout(Some(self.config.io_timeout));
                 slot.conn = Some(conn);
                 Ok(reply)
             }
@@ -656,13 +1104,28 @@ impl Frontend {
                         "shard {shard}: {first_err}"
                     )));
                 }
-                // The pooled connection may simply have idled out.
+                // The pooled connection may simply have idled out — but a
+                // dead shard must not turn the redial into a dial storm,
+                // so the retry draws a budget token and backs off.
+                if !self.retry_budget.try_take() {
+                    self.metrics.lock().unwrap().retries_denied += 1;
+                    return Err(ServingError::ShardUnavailable(format!(
+                        "shard {shard}: {first_err} (retry budget exhausted)"
+                    )));
+                }
                 self.metrics.lock().unwrap().retried += 1;
-                let mut fresh = self.connect(addr)?;
-                match wire::write_frame(&mut fresh.stream, fresh.version, msg)
-                    .and_then(|()| wire::read_frame(&mut fresh.stream))
-                {
-                    Ok((_, reply)) => {
+                let mut pause = self.config.backoff.delay(0);
+                if let Some(cap) = read_timeout {
+                    pause = pause.min(cap / 4);
+                }
+                if !pause.is_zero() {
+                    std::thread::sleep(pause);
+                }
+                let mut fresh = self.connect_to_shard(addr, Some(shard as u32))?;
+                match self.attempt_io(shard, &mut fresh, msg, read_timeout) {
+                    Ok(reply) => {
+                        let _ =
+                            fresh.stream.set_read_timeout(Some(self.config.io_timeout));
                         slot.conn = Some(fresh);
                         Ok(reply)
                     }
@@ -674,20 +1137,42 @@ impl Frontend {
         }
     }
 
+    fn exchange_on_shard(
+        &self,
+        shard: usize,
+        msg: &Message,
+    ) -> Result<Message, ServingError> {
+        self.exchange_with_timeout(shard, msg, None)
+    }
+
+    /// Send one query to `shard`. `budget` is the remaining deadline — the
+    /// shard sees only what is left (per-hop decrement), and the read
+    /// timeout shrinks to the smallest of io_timeout, the budget, and the
+    /// hedge cut, so the frontend never waits past what the caller would.
     fn query_on_shard(
         &self,
         shard: usize,
         model: &str,
         request: &QueryRequest,
+        budget: Option<Duration>,
+        hedge_cut: Option<Duration>,
     ) -> Result<RoutedReply, ServingError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let msg = Message::Query {
-            id,
-            model: model.to_string(),
-            request: request.clone(),
-        };
+        let mut wire_req = request.clone();
+        if budget.is_some() {
+            wire_req.qos.deadline = budget;
+        }
+        let msg = Message::Query { id, model: model.to_string(), request: wire_req };
+        let mut read_cap = self.config.io_timeout;
+        if let Some(b) = budget {
+            read_cap = read_cap.min(b);
+        }
+        if let Some(h) = hedge_cut {
+            read_cap = read_cap.min(h);
+        }
+        let read_cap = read_cap.max(Duration::from_millis(1));
         let t0 = Instant::now();
-        let reply = self.exchange_on_shard(shard, &msg)?;
+        let reply = self.exchange_with_timeout(shard, &msg, Some(read_cap))?;
         // The wire stage: the full frontend-side round trip (serialize,
         // shard serving time included — what sharding costs the caller).
         self.metrics.lock().unwrap().wire.record_duration(t0.elapsed());
@@ -706,6 +1191,7 @@ impl Frontend {
         shard: usize,
         model: &str,
         request: &QueryRequest,
+        budget: Option<Duration>,
     ) -> Result<RoutedReply, ServingError> {
         {
             let mut slot = self.slots[shard].lock().unwrap();
@@ -716,7 +1202,7 @@ impl Frontend {
             slot.handle = Some(self.launcher.launch(shard as u32)?);
         }
         self.metrics.lock().unwrap().respawns += 1;
-        self.query_on_shard(shard, model, request)
+        self.query_on_shard(shard, model, request, budget, None)
     }
 
     fn answer_from_fallback(
@@ -791,6 +1277,81 @@ impl Collector for Frontend {
             Sample::counter("fastpgm_fabric_retried_total", vec![], m.retried as u64)
                 .with_help("Transparent stale-connection redials"),
         );
+        out.push(
+            Sample::counter(
+                "fastpgm_fabric_deadline_exceeded_total",
+                vec![],
+                m.deadline_exceeded as u64,
+            )
+            .with_help("Queries refused because their deadline budget ran out"),
+        );
+        out.push(
+            Sample::counter("fastpgm_fabric_hedged_total", vec![], m.hedged as u64)
+                .with_help("Interactive queries hedged onto the ring successor"),
+        );
+        out.push(
+            Sample::counter(
+                "fastpgm_fabric_hedge_wins_total",
+                vec![],
+                m.hedge_wins as u64,
+            )
+            .with_help("Hedged re-sends that produced the answer"),
+        );
+        out.push(
+            Sample::counter(
+                "fastpgm_fabric_retries_denied_total",
+                vec![],
+                m.retries_denied as u64,
+            )
+            .with_help("Redials/respawns skipped on an exhausted retry budget"),
+        );
+        out.push(
+            Sample::counter(
+                "fastpgm_fabric_brownout_queries_total",
+                vec![],
+                m.brownout_queries as u64,
+            )
+            .with_help("Batch queries degraded to the approx tier under brownout"),
+        );
+        out.push(
+            Sample::gauge(
+                "fastpgm_fabric_retry_budget_tokens",
+                vec![],
+                self.retry_budget.available(),
+            )
+            .with_help("Retry-budget tokens currently available"),
+        );
+        for (shard, breaker) in self.breakers.iter().enumerate() {
+            out.push(
+                Sample::gauge(
+                    "fastpgm_fabric_breaker_open",
+                    vec![
+                        ("shard", shard.to_string()),
+                        ("state", breaker.state().label().to_string()),
+                    ],
+                    f64::from(u8::from(breaker.state() != BreakerState::Closed)),
+                )
+                .with_help("1 when the shard's circuit breaker is not closed"),
+            );
+            out.push(
+                Sample::counter(
+                    "fastpgm_fabric_breaker_transitions_total",
+                    vec![("shard", shard.to_string())],
+                    breaker.transitions(),
+                )
+                .with_help("Circuit-breaker state transitions"),
+            );
+        }
+        if let Some(faults) = &self.faults {
+            out.push(
+                Sample::counter(
+                    "fastpgm_faults_injected_total",
+                    vec![("scope", "frontend".to_string())],
+                    faults.injected_total(),
+                )
+                .with_help("Faults injected by the armed frontend plan"),
+            );
+        }
         for (shard, n) in m.per_shard.iter().enumerate() {
             out.push(
                 Sample::counter(
@@ -811,7 +1372,7 @@ impl Collector for Frontend {
                 .with_help("Per-stage query lifecycle time, µs"),
             );
         }
-        if let Ok(per_shard) = self.shard_stats() {
+        if let Ok(per_shard) = self.shard_stats_cached() {
             for (shard_id, models) in &per_shard {
                 stats_to_samples(models, &[("shard", shard_id.to_string())], out);
             }

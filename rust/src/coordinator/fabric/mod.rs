@@ -20,10 +20,14 @@
 pub mod wire;
 
 mod frontend;
+mod resilience;
 mod shard;
 
 pub use frontend::{
     FabricConfig, FabricMetrics, Frontend, ProcessLauncher, RoutingPolicy,
     ShardHandle, ShardLauncher, ThreadLauncher, SHARD_READY_PREFIX,
+};
+pub use resilience::{
+    Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget,
 };
 pub use shard::{ModelSpec, ShardConfig, ShardWorker};

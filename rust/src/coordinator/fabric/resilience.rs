@@ -1,0 +1,446 @@
+//! Resilience policies for the fabric frontend: capped jittered
+//! exponential backoff, a global retry-budget token bucket, and
+//! per-shard circuit breakers.
+//!
+//! These are deliberately small, deterministic state machines — policy
+//! lives here, wiring lives in [`super::Frontend`]:
+//!
+//! * [`Backoff`] replaces the fixed 200 ms redial/respawn sleeps with
+//!   `base * 2^attempt` capped at `cap`, scaled by a deterministic
+//!   jitter factor in `[0.5, 1.0)` so a fleet of frontends does not
+//!   redial a recovering shard in lockstep. Determinism (the jitter is
+//!   a hash of `(seed, attempt)`) keeps fault-injection runs replayable.
+//! * [`RetryBudget`] is a token bucket spanning *all* shards: every
+//!   redial or respawn spends one token, refilled at `per_sec`. When an
+//!   outage makes every query retry, the bucket empties and further
+//!   failures go straight to the in-process fallback instead of
+//!   amplifying the outage with connect storms.
+//! * [`CircuitBreaker`] is the classic closed → open → half-open
+//!   machine, driven by consecutive transport failures (connect/IO
+//!   errors and timeouts — *not* typed per-query errors, which prove
+//!   the shard is alive). An open shard leaves the consistent-hash ring
+//!   (the frontend routes around it); after `open_cooldown` a single
+//!   probe query is let through, and `half_open_probes` probe successes
+//!   close the breaker again.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Backoff
+// ---------------------------------------------------------------------------
+
+/// Capped exponential backoff with deterministic jitter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub struct Backoff {
+    /// Delay before the first retry (scaled by jitter).
+    pub base: Duration,
+    /// Upper bound on any single delay, pre-jitter.
+    pub cap: Duration,
+    /// Jitter stream seed — two frontends with different seeds spread
+    /// their retries; the same seed replays the same delays.
+    pub seed: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base: Duration::from_millis(50), cap: Duration::from_secs(2), seed: 0 }
+    }
+}
+
+impl Backoff {
+    pub fn new() -> Backoff {
+        Backoff::default()
+    }
+
+    pub fn with_base(mut self, base: Duration) -> Backoff {
+        self.base = base;
+        self
+    }
+
+    pub fn with_cap(mut self, cap: Duration) -> Backoff {
+        self.cap = cap;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Backoff {
+        self.seed = seed;
+        self
+    }
+
+    /// Delay before retry number `attempt` (0-based): `base * 2^attempt`
+    /// capped at `cap`, times a jitter factor in `[0.5, 1.0)` drawn
+    /// deterministically from `(seed, attempt)`.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX))
+            .min(self.cap);
+        let unit = splitmix(self.seed ^ (u64::from(attempt) << 32).wrapping_add(0x9E37))
+            as f64
+            / u64::MAX as f64;
+        exp.mul_f64(0.5 + 0.5 * unit)
+    }
+}
+
+/// SplitMix64 finalizer — the same mixer the fault plan uses, kept local
+/// so the policy layer has no dependency on the faults module.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Retry budget
+// ---------------------------------------------------------------------------
+
+/// Global token bucket bounding retry amplification across all shards.
+#[derive(Debug)]
+pub struct RetryBudget {
+    burst: f64,
+    per_sec: f64,
+    state: Mutex<BudgetState>,
+}
+
+#[derive(Debug)]
+struct BudgetState {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+impl RetryBudget {
+    /// A bucket holding at most `burst` tokens, refilled at `per_sec`
+    /// tokens per second. Starts full.
+    pub fn new(burst: f64, per_sec: f64) -> RetryBudget {
+        RetryBudget {
+            burst: burst.max(0.0),
+            per_sec: per_sec.max(0.0),
+            state: Mutex::new(BudgetState { tokens: burst.max(0.0), last_refill: Instant::now() }),
+        }
+    }
+
+    /// Spend one token if available. `false` means the retry is denied —
+    /// the caller should go straight to its fallback.
+    pub fn try_take(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let now = Instant::now();
+        let elapsed = now.duration_since(s.last_refill).as_secs_f64();
+        s.tokens = (s.tokens + elapsed * self.per_sec).min(self.burst);
+        s.last_refill = now;
+        if s.tokens >= 1.0 {
+            s.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after refill; diagnostic).
+    pub fn available(&self) -> f64 {
+        let mut s = self.state.lock().unwrap();
+        let now = Instant::now();
+        let elapsed = now.duration_since(s.last_refill).as_secs_f64();
+        s.tokens = (s.tokens + elapsed * self.per_sec).min(self.burst);
+        s.last_refill = now;
+        s.tokens
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Circuit breaker
+// ---------------------------------------------------------------------------
+
+/// Knobs for one shard's [`CircuitBreaker`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub struct BreakerConfig {
+    /// Consecutive transport failures that trip the breaker open.
+    pub failure_threshold: u32,
+    /// How long an open breaker rejects before letting a probe through.
+    pub open_cooldown: Duration,
+    /// Probe successes required in half-open before closing. Also the
+    /// staleness bound on an in-flight probe: a probe that neither
+    /// succeeded nor failed within `open_cooldown` is presumed lost and
+    /// a new one is admitted.
+    pub half_open_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            failure_threshold: 3,
+            open_cooldown: Duration::from_millis(500),
+            half_open_probes: 1,
+        }
+    }
+}
+
+impl BreakerConfig {
+    pub fn new() -> BreakerConfig {
+        BreakerConfig::default()
+    }
+
+    pub fn with_failure_threshold(mut self, n: u32) -> BreakerConfig {
+        self.failure_threshold = n.max(1);
+        self
+    }
+
+    pub fn with_open_cooldown(mut self, d: Duration) -> BreakerConfig {
+        self.open_cooldown = d;
+        self
+    }
+
+    pub fn with_half_open_probes(mut self, n: u32) -> BreakerConfig {
+        self.half_open_probes = n.max(1);
+        self
+    }
+}
+
+/// Breaker state, for metrics and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// The routing verdict for one query against one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Closed: route normally.
+    Yes,
+    /// Half-open: route, and this query is the recovery probe.
+    Probe,
+    /// Open: do not send primary traffic here.
+    No,
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    opened_at: Option<Instant>,
+    probe_started: Option<Instant>,
+    probe_successes: u32,
+    transitions: u64,
+}
+
+/// Per-shard closed/open/half-open circuit breaker.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    config: BreakerConfig,
+    inner: Mutex<BreakerInner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(config: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            config,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                opened_at: None,
+                probe_started: None,
+                probe_successes: 0,
+                transitions: 0,
+            }),
+        }
+    }
+
+    /// May a query be sent to this shard right now? Calling `admit` may
+    /// move an open breaker to half-open once its cooldown has elapsed.
+    pub fn admit(&self) -> Admit {
+        let mut s = self.inner.lock().unwrap();
+        match s.state {
+            BreakerState::Closed => Admit::Yes,
+            BreakerState::Open => {
+                let cooled = s
+                    .opened_at
+                    .map(|t| t.elapsed() >= self.config.open_cooldown)
+                    .unwrap_or(true);
+                if cooled {
+                    s.state = BreakerState::HalfOpen;
+                    s.transitions += 1;
+                    s.probe_successes = 0;
+                    s.probe_started = Some(Instant::now());
+                    Admit::Probe
+                } else {
+                    Admit::No
+                }
+            }
+            BreakerState::HalfOpen => {
+                // One probe at a time; a probe outstanding longer than
+                // the cooldown is presumed lost (e.g. the route was
+                // computed but the query went elsewhere), so admit a
+                // fresh one rather than deadlocking half-open.
+                let stale = s
+                    .probe_started
+                    .map(|t| t.elapsed() >= self.config.open_cooldown)
+                    .unwrap_or(true);
+                if stale {
+                    s.probe_started = Some(Instant::now());
+                    Admit::Probe
+                } else {
+                    Admit::No
+                }
+            }
+        }
+    }
+
+    /// Record a successful exchange with the shard.
+    pub fn record_success(&self) {
+        let mut s = self.inner.lock().unwrap();
+        s.consecutive_failures = 0;
+        match s.state {
+            BreakerState::Closed => {}
+            BreakerState::HalfOpen => {
+                s.probe_started = None;
+                s.probe_successes += 1;
+                if s.probe_successes >= self.config.half_open_probes {
+                    s.state = BreakerState::Closed;
+                    s.transitions += 1;
+                    s.opened_at = None;
+                }
+            }
+            // A success from a request that was in flight when the
+            // breaker opened proves nothing about recovery; the cooldown
+            // and probe path decide.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record a transport failure (connect error, IO error, timeout).
+    pub fn record_failure(&self) {
+        let mut s = self.inner.lock().unwrap();
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+        match s.state {
+            BreakerState::Closed => {
+                if s.consecutive_failures >= self.config.failure_threshold {
+                    s.state = BreakerState::Open;
+                    s.transitions += 1;
+                    s.opened_at = Some(Instant::now());
+                }
+            }
+            BreakerState::HalfOpen => {
+                // Failed probe: back to open, full cooldown again.
+                s.state = BreakerState::Open;
+                s.transitions += 1;
+                s.opened_at = Some(Instant::now());
+                s.probe_started = None;
+            }
+            // Already open; don't extend the cooldown for stragglers.
+            BreakerState::Open => {}
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.inner.lock().unwrap().state
+    }
+
+    /// Total state transitions since creation (metrics counter).
+    pub fn transitions(&self) -> u64 {
+        self.inner.lock().unwrap().transitions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_deterministically() {
+        let b = Backoff::new()
+            .with_base(Duration::from_millis(10))
+            .with_cap(Duration::from_millis(200))
+            .with_seed(7);
+        let d0 = b.delay(0);
+        let d3 = b.delay(3);
+        // Jitter keeps each delay within [0.5, 1.0) of its nominal value.
+        assert!(d0 >= Duration::from_millis(5) && d0 < Duration::from_millis(10));
+        assert!(d3 >= Duration::from_millis(40) && d3 < Duration::from_millis(80));
+        // Capped: attempt 20 nominal is 10ms << 20, bounded by the cap.
+        assert!(b.delay(20) <= Duration::from_millis(200));
+        // Deterministic in (seed, attempt); different seeds diverge.
+        assert_eq!(b.delay(2), b.delay(2));
+        let other = Backoff::new()
+            .with_base(Duration::from_millis(10))
+            .with_cap(Duration::from_millis(200))
+            .with_seed(8);
+        assert_ne!(b.delay(2), other.delay(2));
+    }
+
+    #[test]
+    fn retry_budget_denies_when_empty_and_refills() {
+        let budget = RetryBudget::new(2.0, 50.0);
+        assert!(budget.try_take());
+        assert!(budget.try_take());
+        assert!(!budget.try_take(), "burst of 2 must deny the third take");
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(budget.try_take(), "50/s refill restores a token in 40ms");
+        // A zero-refill bucket stays empty forever once drained.
+        let frozen = RetryBudget::new(1.0, 0.0);
+        assert!(frozen.try_take());
+        assert!(!frozen.try_take());
+        assert!(frozen.available() < 1.0);
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_half_open_closed() {
+        let cb = CircuitBreaker::new(
+            BreakerConfig::new()
+                .with_failure_threshold(2)
+                .with_open_cooldown(Duration::from_millis(30)),
+        );
+        assert_eq!(cb.state(), BreakerState::Closed);
+        assert_eq!(cb.admit(), Admit::Yes);
+        // One failure then a success: the consecutive counter resets.
+        cb.record_failure();
+        cb.record_success();
+        cb.record_failure();
+        assert_eq!(cb.state(), BreakerState::Closed);
+        // Two in a row trip it.
+        cb.record_failure();
+        assert_eq!(cb.state(), BreakerState::Open);
+        assert_eq!(cb.admit(), Admit::No);
+        // Cooldown elapses → one probe admitted, followers rejected.
+        std::thread::sleep(Duration::from_millis(35));
+        assert_eq!(cb.admit(), Admit::Probe);
+        assert_eq!(cb.state(), BreakerState::HalfOpen);
+        assert_eq!(cb.admit(), Admit::No);
+        // Probe success closes it again.
+        cb.record_success();
+        assert_eq!(cb.state(), BreakerState::Closed);
+        assert_eq!(cb.admit(), Admit::Yes);
+        assert_eq!(cb.transitions(), 3);
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_fresh_cooldown() {
+        let cb = CircuitBreaker::new(
+            BreakerConfig::new()
+                .with_failure_threshold(1)
+                .with_open_cooldown(Duration::from_millis(30)),
+        );
+        cb.record_failure();
+        assert_eq!(cb.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(35));
+        assert_eq!(cb.admit(), Admit::Probe);
+        cb.record_failure();
+        assert_eq!(cb.state(), BreakerState::Open);
+        // Freshly reopened: still rejecting inside the new cooldown.
+        assert_eq!(cb.admit(), Admit::No);
+    }
+}

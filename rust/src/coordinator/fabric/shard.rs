@@ -11,9 +11,11 @@ use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
 use crate::coordinator::{
     ApproxConfig, BatcherConfig, QueryRequest, QueryRouter, RoutedReply, ServingError,
 };
+use crate::faults::{FaultAction, FaultHook, FaultPlan, FaultSite};
 use crate::inference::exact::QueryEngineConfig;
 use crate::network::BayesianNetwork;
 use std::collections::HashMap;
+use std::io::Write as _;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -84,6 +86,13 @@ pub struct ShardConfig {
     /// Observability knobs for this shard's router (stage histograms,
     /// trace sampling).
     pub obs: crate::obs::ObsConfig,
+    /// Timeout for the shard's own self-connect probes (the stop/abort
+    /// wakeup dials). Slow-start environments can raise this instead of
+    /// inheriting a hardcoded 200 ms.
+    pub connect_timeout: Duration,
+    /// Deterministic fault-injection plan for chaos testing; `None` (the
+    /// default) costs one branch per I/O site.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ShardConfig {
@@ -93,6 +102,8 @@ impl Default for ShardConfig {
             max_inflight: 256,
             pool_threads: 2,
             obs: crate::obs::ObsConfig::default(),
+            connect_timeout: Duration::from_millis(200),
+            faults: None,
         }
     }
 }
@@ -126,6 +137,18 @@ impl ShardConfig {
         self.obs = obs;
         self
     }
+
+    /// Set the self-connect probe timeout.
+    pub fn with_connect_timeout(mut self, connect_timeout: Duration) -> ShardConfig {
+        self.connect_timeout = connect_timeout;
+        self
+    }
+
+    /// Arm a deterministic fault-injection plan on this shard's I/O sites.
+    pub fn with_faults(mut self, faults: FaultPlan) -> ShardConfig {
+        self.faults = Some(faults);
+        self
+    }
 }
 
 /// Shared state between the accept loop and the per-connection handlers.
@@ -142,6 +165,9 @@ struct ShardState {
     /// Try-cloned handles of live connections — shut down to unblock
     /// handler reads on stop, or abruptly on [`ShardWorker::abort`].
     conns: Mutex<Vec<TcpStream>>,
+    /// Armed fault-injection hook (scoped to this shard's id); `None`
+    /// when no plan is configured.
+    faults: FaultHook,
 }
 
 impl ShardState {
@@ -157,6 +183,14 @@ impl ShardState {
                 "shard {}: {} queries in flight (cap {})",
                 self.shard_id, n, self.config.max_inflight
             )));
+        }
+        // Serve-site fault: a slow shard, not a dead one — the query is
+        // still answered, just late (delay ≈ GC pause, stall ≈ CPU
+        // starvation).
+        if let Some(faults) = &self.faults {
+            if let Some(d) = faults.decide(FaultSite::Serve, None).sleep() {
+                std::thread::sleep(d);
+            }
         }
         let out = self.router.read().unwrap().query_routed(model, request);
         self.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -184,7 +218,7 @@ impl ShardState {
     /// throwaway self-connection.
     fn begin_stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        let _ = TcpStream::connect_timeout(&self.addr, self.config.connect_timeout);
     }
 }
 
@@ -224,6 +258,7 @@ impl ShardWorker {
         let addr = listener.local_addr().map_err(|e| {
             ServingError::ShardUnavailable(format!("shard {shard_id}: no local addr: {e}"))
         })?;
+        let faults = config.faults.as_ref().map(|plan| plan.arm(Some(shard_id)));
         let state = Arc::new(ShardState {
             shard_id,
             config,
@@ -233,6 +268,7 @@ impl ShardWorker {
             stop: AtomicBool::new(false),
             addr,
             conns: Mutex::new(Vec::new()),
+            faults,
         });
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
@@ -263,6 +299,13 @@ impl ShardWorker {
     /// [`Message::Shutdown`]).
     pub fn stop_requested(&self) -> bool {
         self.state.stop.load(Ordering::SeqCst)
+    }
+
+    /// The armed fault-injection hook, when a plan is configured — lets
+    /// chaos tests disarm injection mid-run or read injected-fault
+    /// events.
+    pub fn faults(&self) -> Option<&Arc<crate::faults::Faults>> {
+        self.state.faults.as_ref()
     }
 
     /// Block until a stop is requested (the `--shard` process main loop).
@@ -298,8 +341,10 @@ impl ShardWorker {
         self.state.stop.store(true, Ordering::SeqCst);
         self.close_conns();
         // Unblock the accept loop so the listener drops and the port dies.
-        let _ =
-            TcpStream::connect_timeout(&self.state.addr, Duration::from_millis(200));
+        let _ = TcpStream::connect_timeout(
+            &self.state.addr,
+            self.state.config.connect_timeout,
+        );
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
@@ -414,6 +459,24 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ShardState>) {
         if wire::check_version(got_version, version).is_err() {
             return;
         }
+        // Receive-site fault: the request was read off the socket but the
+        // shard misbehaves before serving it.
+        if let Some(faults) = &state.faults {
+            match faults.decide(FaultSite::ShardRecv, None) {
+                // Swallow the request — the client sees a read timeout.
+                FaultAction::Drop => continue,
+                // Die with a request in hand — a crash mid-accept.
+                FaultAction::Kill => {
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                other => {
+                    if let Some(d) = other.sleep() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
         let reply = match msg {
             Message::Query { id, model, request } => {
                 let outcome = state.serve_query(&model, request);
@@ -442,6 +505,36 @@ fn handle_conn(mut stream: TcpStream, state: Arc<ShardState>) {
             // Anything else is a protocol violation from a client.
             _ => return,
         };
+        // Send-site fault: the answer was computed but the reply path
+        // misbehaves.
+        if let Some(faults) = &state.faults {
+            match faults.decide(FaultSite::ShardSend, None) {
+                // The reply evaporates — the client sees a read timeout.
+                FaultAction::Drop => continue,
+                // Die mid-reply: half a frame, then a hard close.
+                FaultAction::Kill => {
+                    let frame = wire::encode_frame(version, &reply);
+                    let _ = stream.write_all(&frame[..frame.len() / 2]);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                // Flip one payload bit; the frontend's decoder must turn
+                // this into a typed Wire error, never a panic or a hang.
+                FaultAction::Corrupt => {
+                    let mut frame = wire::encode_frame(version, &reply);
+                    faults.corrupt_frame(&mut frame);
+                    if stream.write_all(&frame).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                other => {
+                    if let Some(d) = other.sleep() {
+                        std::thread::sleep(d);
+                    }
+                }
+            }
+        }
         if wire::write_frame(&mut stream, version, &reply).is_err() {
             return;
         }
@@ -542,6 +635,7 @@ mod tests {
                     evidence: Evidence::new(),
                     target: QueryTarget::Marginal(99),
                     qos: Default::default(),
+                    trace_id: 0,
                 },
             },
         )
@@ -696,6 +790,60 @@ mod tests {
         }
         w.run_until_shutdown();
         assert!(w.stop_requested());
+    }
+
+    #[test]
+    fn armed_faults_inject_and_disarm() {
+        use crate::faults::FaultKind;
+        let plan = crate::faults::FaultPlan::seeded(7).with(
+            FaultKind::Delay,
+            1.0,
+            FaultSite::Serve,
+        );
+        let w = ShardWorker::spawn(
+            0,
+            vec![ModelSpec::new("asia", repository::asia())],
+            ShardConfig::new()
+                .with_io_timeout(Duration::from_secs(5))
+                .with_faults(plan),
+        )
+        .unwrap();
+        let (mut s, v) = dial(w.addr());
+        // Delay faults slow the answer; they never lose it.
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 1,
+                model: "asia".into(),
+                request: QueryRequest::marginal(5, Evidence::new().with(0, 1)),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 1, outcome: Ok(_) }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let faults = w.faults().expect("plan was configured");
+        assert!(faults.injected_total() >= 1);
+        let before = faults.injected_total();
+        // Disarmed hooks stop injecting without restarting the shard.
+        faults.set_enabled(false);
+        wire::write_frame(
+            &mut s,
+            v,
+            &Message::Query {
+                id: 2,
+                model: "asia".into(),
+                request: QueryRequest::marginal(5, Evidence::new().with(0, 1)),
+            },
+        )
+        .unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            (_, Message::Reply { id: 2, outcome: Ok(_) }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(faults.injected_total(), before);
     }
 
     #[test]

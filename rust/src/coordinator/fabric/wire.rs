@@ -43,9 +43,14 @@ use std::time::Duration;
 /// Newest protocol version this build speaks. **v2** adds the
 /// histogram-carrying stats reply (tag 11): shards ship bounded latency
 /// histogram buckets and per-stage histograms instead of capped raw
-/// sample arrays. v1 peers still work — both sides fall back to the
-/// legacy sample-array stats reply (tag 6) on a v1 connection.
-pub const PROTOCOL_VERSION: u16 = 2;
+/// sample arrays. **v3** appends two fields to the query request — a
+/// `u64` trace id (stitches frontend and shard trace records, and
+/// attributes hedged duplicates) and a `u8` QoS-flags byte (bit 0:
+/// prefer the approx tier; bits 1–3: approx sample-budget shrink
+/// exponent — the brownout hints). Older peers still work — requests on
+/// a v1/v2 connection simply omit the trailing fields and decode with
+/// trace id 0 and no hints.
+pub const PROTOCOL_VERSION: u16 = 3;
 /// Oldest protocol version this build still accepts.
 pub const MIN_SUPPORTED_VERSION: u16 = 1;
 
@@ -269,7 +274,14 @@ fn get_evidence(d: &mut Dec) -> Result<Evidence, ServingError> {
     Ok(ev)
 }
 
-fn put_request(buf: &mut Vec<u8>, req: &QueryRequest) {
+/// QoS-flags byte (v3): bit 0 = prefer the approx tier, bits 1–3 =
+/// approx sample-budget shrink exponent. Bits 4–7 are reserved and must
+/// be zero.
+fn qos_flags(qos: &QueryQos) -> u8 {
+    u8::from(qos.prefer_approx) | ((qos.approx_shrink & 0x7) << 1)
+}
+
+fn put_request(buf: &mut Vec<u8>, version: u16, req: &QueryRequest) {
     put_evidence(buf, &req.evidence);
     match req.target {
         QueryTarget::Marginal(v) => {
@@ -290,9 +302,13 @@ fn put_request(buf: &mut Vec<u8>, req: &QueryRequest) {
         }
         None => buf.push(0),
     }
+    if version >= 3 {
+        put_u64(buf, req.trace_id);
+        buf.push(qos_flags(&req.qos));
+    }
 }
 
-fn get_request(d: &mut Dec) -> Result<QueryRequest, ServingError> {
+fn get_request(d: &mut Dec, version: u16) -> Result<QueryRequest, ServingError> {
     let evidence = get_evidence(d)?;
     let target = match d.u8("query target tag")? {
         1 => QueryTarget::Marginal(d.u32("marginal var")? as usize),
@@ -310,7 +326,26 @@ fn get_request(d: &mut Dec) -> Result<QueryRequest, ServingError> {
         1 => Some(Duration::from_micros(d.u64("deadline µs")?)),
         t => return Err(ServingError::Wire(format!("unknown deadline tag {t}"))),
     };
-    Ok(QueryRequest { evidence, target, qos: QueryQos { priority, deadline } })
+    let mut trace_id = 0;
+    let mut prefer_approx = false;
+    let mut approx_shrink = 0;
+    if version >= 3 {
+        trace_id = d.u64("trace id")?;
+        let flags = d.u8("qos flags")?;
+        if flags & 0xf0 != 0 {
+            return Err(ServingError::Wire(format!(
+                "reserved qos flag bits set: {flags:#04x}"
+            )));
+        }
+        prefer_approx = flags & 1 != 0;
+        approx_shrink = (flags >> 1) & 0x7;
+    }
+    Ok(QueryRequest {
+        evidence,
+        target,
+        qos: QueryQos { priority, deadline, prefer_approx, approx_shrink },
+        trace_id,
+    })
 }
 
 fn put_posterior(buf: &mut Vec<u8>, p: &[f64]) {
@@ -587,8 +622,10 @@ fn get_cache_stats(d: &mut Dec) -> Result<QueryEngineStats, ServingError> {
 // Message codec + framing
 // ---------------------------------------------------------------------------
 
-/// Encode one message payload (header excluded).
-pub fn encode_payload(msg: &Message) -> Vec<u8> {
+/// Encode one message payload (header excluded) at the given protocol
+/// version — within one connection both peers encode strictly at the
+/// negotiated version, so version-gated fields stay symmetric.
+pub fn encode_payload(version: u16, msg: &Message) -> Vec<u8> {
     let mut buf = Vec::new();
     match msg {
         Message::Hello { min_version, max_version, client } => {
@@ -607,7 +644,7 @@ pub fn encode_payload(msg: &Message) -> Vec<u8> {
         Message::Query { id, model, request } => {
             put_u64(&mut buf, *id);
             put_str(&mut buf, model);
-            put_request(&mut buf, request);
+            put_request(&mut buf, version, request);
         }
         Message::Reply { id, outcome } => {
             put_u64(&mut buf, *id);
@@ -650,8 +687,13 @@ pub fn encode_payload(msg: &Message) -> Vec<u8> {
     buf
 }
 
-/// Decode one message payload given its header tag.
-pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message, ServingError> {
+/// Decode one message payload given its header tag and the version the
+/// frame was stamped with.
+pub fn decode_payload(
+    version: u16,
+    tag: u8,
+    payload: &[u8],
+) -> Result<Message, ServingError> {
     let mut d = Dec::new(payload);
     let msg = match tag {
         1 => Message::Hello {
@@ -672,7 +714,7 @@ pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message, ServingError> 
         3 => Message::Query {
             id: d.u64("query id")?,
             model: d.str("query model")?,
-            request: get_request(&mut d)?,
+            request: get_request(&mut d, version)?,
         },
         4 => {
             let id = d.u64("reply id")?;
@@ -727,7 +769,7 @@ pub fn decode_payload(tag: u8, payload: &[u8]) -> Result<Message, ServingError> 
 
 /// Serialize one framed message into a byte vector.
 pub fn encode_frame(version: u16, msg: &Message) -> Vec<u8> {
-    let payload = encode_payload(msg);
+    let payload = encode_payload(version, msg);
     debug_assert!(payload.len() <= MAX_PAYLOAD, "oversized frame payload");
     let mut frame = Vec::with_capacity(12 + payload.len());
     frame.extend_from_slice(&MAGIC);
@@ -778,7 +820,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u16, Message), ServingError> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)
         .map_err(|e| ServingError::Wire(format!("read payload failed: {e}")))?;
-    let msg = decode_payload(tag, &payload)?;
+    let msg = decode_payload(version, tag, &payload)?;
     Ok((version, msg))
 }
 
@@ -1072,6 +1114,128 @@ mod tests {
             read_frame(&mut trailing.as_slice()),
             Err(ServingError::Wire(_))
         ));
+    }
+
+    /// v3 trailing fields (trace id, QoS flags) round-trip, and the
+    /// brownout hints survive the flags byte.
+    #[test]
+    fn round_trip_v3_trace_and_qos_flags() {
+        let mut request = sample_request().with_trace_id(0xABCD_1234_5678_9012);
+        request.qos.prefer_approx = true;
+        request.qos.approx_shrink = 3;
+        let msg = Message::Query { id: 5, model: "asia".into(), request };
+        assert_eq!(round_trip(msg.clone()), msg);
+        // Reserved flag bits are rejected, not silently dropped.
+        let mut frame = encode_frame(PROTOCOL_VERSION, &msg);
+        let last = frame.len() - 1; // qos flags is the final payload byte
+        frame[last] |= 0x10;
+        match read_frame(&mut frame.as_slice()) {
+            Err(ServingError::Wire(s)) => assert!(s.contains("reserved")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// A Query encoded at v2 (no trailing fields) decodes on a v3 build
+    /// with trace id 0 and no hints — the cross-version contract.
+    #[test]
+    fn v2_query_decodes_without_v3_fields() {
+        let mut request = sample_request().with_trace_id(99);
+        request.qos.prefer_approx = true;
+        let msg = Message::Query { id: 1, model: "asia".into(), request };
+        let frame = encode_frame(2, &msg);
+        let (version, back) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(version, 2);
+        match back {
+            Message::Query { request, .. } => {
+                assert_eq!(request.trace_id, 0);
+                assert!(!request.qos.prefer_approx);
+                assert_eq!(request.qos.approx_shrink, 0);
+                assert_eq!(request.evidence, sample_request().evidence);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_exceeded_crosses_the_wire() {
+        let msg = Message::Reply {
+            id: 3,
+            outcome: Err(ServingError::DeadlineExceeded(
+                "expired 1200µs before flush".into(),
+            )),
+        };
+        assert_eq!(round_trip(msg.clone()), msg);
+    }
+
+    /// Robustness property: flipping any single bit of any valid frame
+    /// either decodes (the flip landed in a don't-care position) or
+    /// returns a typed error — never a panic. Decoding from a byte slice
+    /// cannot block, so this also proves corruption cannot hang a
+    /// decoder; only length-field corruption can stall a *socket* read,
+    /// which is why live injection skips those bytes
+    /// ([`crate::faults::Faults::corrupt_frame`]).
+    #[test]
+    fn single_bit_corruption_never_panics() {
+        let (serving, cache) = sample_stats();
+        let messages = vec![
+            Message::Hello { min_version: 1, max_version: 3, client: "c".into() },
+            Message::HelloAck { version: 3, shard_id: 1, models: vec!["asia".into()] },
+            Message::Query { id: 7, model: "asia".into(), request: sample_request() },
+            Message::Reply {
+                id: 7,
+                outcome: Ok(RoutedReply {
+                    reply: QueryReply::All(vec![vec![0.5, 0.5], vec![0.25, 0.75]]),
+                    tier: AnswerTier::Exact,
+                    engine: "exact",
+                }),
+            },
+            Message::Reply {
+                id: 8,
+                outcome: Err(ServingError::Overloaded("full".into())),
+            },
+            Message::StatsRequest,
+            Message::StatsReply {
+                shard_id: 0,
+                per_model: vec![(
+                    "asia".into(),
+                    QueryModelStats { serving: serving.clone(), cache },
+                )],
+            },
+            Message::StatsReplyV2 {
+                shard_id: 0,
+                per_model: vec![("asia".into(), QueryModelStats { serving, cache })],
+            },
+            Message::Drain { model: "asia".into() },
+            Message::DrainAck { model: "asia".into(), replaced: true },
+            Message::Shutdown,
+            Message::ShutdownAck,
+        ];
+        let mut outcomes = [0usize; 2]; // [ok, typed error]
+        for msg in &messages {
+            let frame = encode_frame(PROTOCOL_VERSION, msg);
+            for pos in 0..frame.len() {
+                for bit in 0..8 {
+                    let mut bad = frame.clone();
+                    bad[pos] ^= 1 << bit;
+                    match read_frame(&mut bad.as_slice()) {
+                        Ok(_) => outcomes[0] += 1,
+                        Err(
+                            ServingError::Wire(_) | ServingError::ProtocolMismatch { .. },
+                        ) => outcomes[1] += 1,
+                        Err(other) => panic!(
+                            "{}: bit {bit} of byte {pos} produced non-wire error \
+                             {other:?}",
+                            msg.tag()
+                        ),
+                    }
+                }
+            }
+        }
+        // Both outcomes must occur: flips in value bytes (f64 bits, ids)
+        // are benign, flips in structure (magic, tags, counts) are
+        // detected. The property under test is only "no panic".
+        assert!(outcomes[0] > 0, "no benign flips — suspicious");
+        assert!(outcomes[1] > 0, "no detected flips — suspicious");
     }
 
     #[test]

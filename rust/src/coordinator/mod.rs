@@ -24,7 +24,8 @@ mod router;
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use error::ServingError;
 pub use fabric::{
-    FabricConfig, FabricMetrics, Frontend, ModelSpec, ProcessLauncher, RoutingPolicy,
+    Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, FabricConfig,
+    FabricMetrics, Frontend, ModelSpec, ProcessLauncher, RetryBudget, RoutingPolicy,
     ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ThreadLauncher,
     SHARD_READY_PREFIX,
 };

@@ -67,10 +67,23 @@ pub enum QueryPriority {
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueryQos {
     pub priority: QueryPriority,
-    /// Soft latency target. Batch queries with a deadline tighter than
+    /// Latency budget. Once a query has waited out its whole deadline in
+    /// the flush queue, it is expired with
+    /// [`ServingError::DeadlineExceeded`] instead of being answered late.
+    /// Batch queries with a deadline tighter than
     /// [`ApproxConfig::tight_deadline`] are kept on the exact tier (a
     /// cached calibration is faster than any sampling run).
     pub deadline: Option<Duration>,
+    /// Brownout hint: route this query to the approximate tier if one is
+    /// configured, even when the service is not under pressure. Set by the
+    /// fabric frontend when enough shards have tripped their circuit
+    /// breakers; only honoured for batch-priority queries.
+    pub prefer_approx: bool,
+    /// Brownout hint: right-shift the approximate tier's sample budget by
+    /// this many bits (budget `>> shrink`, floored at a small minimum).
+    /// `0` means the configured budget. Only the low 3 bits cross the
+    /// wire.
+    pub approx_shrink: u8,
 }
 
 /// One posterior query.
@@ -79,6 +92,11 @@ pub struct QueryRequest {
     pub evidence: Evidence,
     pub target: QueryTarget,
     pub qos: QueryQos,
+    /// Trace correlation ID. `0` means unassigned; the fabric frontend
+    /// stamps one per query and forwards it over the wire, so frontend
+    /// and shard JSONL trace records for the same query (including hedged
+    /// duplicates) carry the same ID and can be stitched offline.
+    pub trace_id: u64,
 }
 
 impl QueryRequest {
@@ -88,12 +106,18 @@ impl QueryRequest {
             evidence,
             target: QueryTarget::Marginal(var),
             qos: QueryQos::default(),
+            trace_id: 0,
         }
     }
 
     /// All-marginals query (interactive priority).
     pub fn all(evidence: Evidence) -> QueryRequest {
-        QueryRequest { evidence, target: QueryTarget::All, qos: QueryQos::default() }
+        QueryRequest {
+            evidence,
+            target: QueryTarget::All,
+            qos: QueryQos::default(),
+            trace_id: 0,
+        }
     }
 
     /// P(evidence) query (interactive priority).
@@ -102,6 +126,7 @@ impl QueryRequest {
             evidence,
             target: QueryTarget::EvidenceProbability,
             qos: QueryQos::default(),
+            trace_id: 0,
         }
     }
 
@@ -120,6 +145,12 @@ impl QueryRequest {
     /// Attach a soft deadline.
     pub fn with_deadline(mut self, deadline: Duration) -> QueryRequest {
         self.qos.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a trace correlation ID (`0` = unassigned).
+    pub fn with_trace_id(mut self, trace_id: u64) -> QueryRequest {
+        self.trace_id = trace_id;
         self
     }
 }
@@ -273,7 +304,10 @@ impl ApproxConfig {
 struct PendingQuery {
     request: QueryRequest,
     enqueued: Instant,
-    reply: SyncSender<RoutedReply>,
+    /// `Err` carries per-query failures the batcher can detect — today
+    /// only [`ServingError::DeadlineExceeded`] for queries expired out of
+    /// the flush queue.
+    reply: SyncSender<Result<RoutedReply, ServingError>>,
 }
 
 /// Per-model serving loop: dynamic batching + evidence grouping over one
@@ -425,14 +459,16 @@ impl QueryService {
         request: QueryRequest,
     ) -> Result<RoutedReply, ServingError> {
         let rx = self.query_async(request)?;
-        rx.recv().map_err(|_| ServingError::ServiceStopped)
+        rx.recv().map_err(|_| ServingError::ServiceStopped)?
     }
 
-    /// Submit asynchronously; returns a receiver for the routed reply.
+    /// Submit asynchronously; returns a receiver for the routed reply (or
+    /// the per-query error — e.g. [`ServingError::DeadlineExceeded`] when
+    /// the query expired in the flush queue).
     pub fn query_async(
         &self,
         request: QueryRequest,
-    ) -> Result<Receiver<RoutedReply>, ServingError> {
+    ) -> Result<Receiver<Result<RoutedReply, ServingError>>, ServingError> {
         self.validate(&request)?;
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         self.tx
@@ -540,13 +576,35 @@ impl ServiceCore {
             let mut exact_groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
             let mut approx_groups: HashMap<Evidence, Vec<PendingQuery>> = HashMap::new();
             for p in queue.drain(..) {
+                // Deadline budget: a query that already waited out its
+                // whole deadline in the queue is expired here, not
+                // answered late — computing a dead answer would only slow
+                // the live ones behind it.
+                if let Some(deadline) = p.request.qos.deadline {
+                    let waited = p.enqueued.elapsed();
+                    if waited >= deadline {
+                        let _ = p.reply.send(Err(ServingError::DeadlineExceeded(
+                            format!(
+                                "expired in flush queue after {waited:?} \
+                                 (deadline {deadline:?})"
+                            ),
+                        )));
+                        continue;
+                    }
+                }
+                // Brownout hint from the fabric frontend: batch traffic is
+                // pushed to the approximate tier before any query is
+                // dropped, regardless of local pressure.
+                let hinted = p.request.qos.prefer_approx
+                    && p.request.qos.priority == QueryPriority::Batch;
                 let to_approx = match (&self.approx_engine, self.approx.engine) {
                     (Some(ae), EngineChoice::Force(_)) => {
                         approx_can_answer(ae, &p.request, &self.approx.opts)
                     }
                     (Some(ae), EngineChoice::Auto) => {
-                        under_pressure
-                            && sheddable(&p.request, self.approx.tight_deadline)
+                        (hinted
+                            || (under_pressure
+                                && sheddable(&p.request, self.approx.tight_deadline)))
                             && approx_can_answer(ae, &p.request, &self.approx.opts)
                     }
                     _ => false,
@@ -660,6 +718,7 @@ impl ServiceCore {
                                 trace.offer(&SpanRecord {
                                     model: model.as_ref().to_string(),
                                     tier: "exact",
+                                    trace_id: p.request.trace_id,
                                     total_us: p.enqueued.elapsed().as_micros() as u64,
                                     stages,
                                 });
@@ -667,11 +726,11 @@ impl ServiceCore {
                         }
                     }
                     for (p, reply) in members.into_iter().zip(answers) {
-                        let _ = p.reply.send(RoutedReply {
+                        let _ = p.reply.send(Ok(RoutedReply {
                             reply,
                             tier: AnswerTier::Exact,
                             engine: "exact",
-                        });
+                        }));
                     }
                 });
             }
@@ -693,6 +752,14 @@ impl ServiceCore {
                         .as_ref()
                         .expect("approx group without an approx engine"),
                 );
+                // Brownout sample-budget shrink: the group runs at the
+                // deepest shrink any member asked for (shrinking is the
+                // graceful-degradation direction; `0` = full budget).
+                let shrink = members
+                    .iter()
+                    .map(|p| p.request.qos.approx_shrink)
+                    .max()
+                    .unwrap_or(0);
                 if self.approx_inflight.load(Ordering::Relaxed)
                     < self.approx.max_inflight_runs
                 {
@@ -705,7 +772,8 @@ impl ServiceCore {
                         .name("fastpgm-approx-tier".into())
                         .spawn(move || {
                             answer_approx_group(
-                                &ae, &metrics, &evidence, members, &obs, &model,
+                                &ae, &metrics, &evidence, members, shrink, &obs,
+                                &model,
                             );
                             inflight.fetch_sub(1, Ordering::Relaxed);
                         });
@@ -724,6 +792,7 @@ impl ServiceCore {
                         &self.metrics,
                         &evidence,
                         members,
+                        shrink,
                         &self.obs,
                         &self.model,
                     );
@@ -743,11 +812,12 @@ fn answer_approx_group(
     metrics: &Mutex<ServingMetrics>,
     evidence: &Evidence,
     members: Vec<PendingQuery>,
+    shrink: u8,
     obs: &ObsConfig,
     model: &str,
 ) {
     let t0 = Instant::now();
-    let run = ae.run(evidence);
+    let run = ae.run_scaled(evidence, shrink);
     let answers: Vec<QueryReply> = members
         .iter()
         .map(|p| match p.request.target {
@@ -785,6 +855,7 @@ fn answer_approx_group(
                 trace.offer(&SpanRecord {
                     model: model.to_string(),
                     tier: "approx",
+                    trace_id: p.request.trace_id,
                     total_us: p.enqueued.elapsed().as_micros() as u64,
                     stages: vec![
                         (
@@ -798,11 +869,11 @@ fn answer_approx_group(
         }
     }
     for (p, reply) in members.into_iter().zip(answers) {
-        let _ = p.reply.send(RoutedReply {
+        let _ = p.reply.send(Ok(RoutedReply {
             reply,
             tier: AnswerTier::Approx,
             engine: ae.kind().name(),
-        });
+        }));
     }
 }
 
@@ -1040,7 +1111,7 @@ impl QueryRouter {
         &self,
         model: &str,
         request: QueryRequest,
-    ) -> Result<Receiver<RoutedReply>, ServingError> {
+    ) -> Result<Receiver<Result<RoutedReply, ServingError>>, ServingError> {
         self.service(model)?.query_async(request)
     }
 
@@ -1300,7 +1371,10 @@ mod tests {
         );
         assert!(replaced);
         for rx in pending {
-            let routed = rx.recv().expect("drained service dropped a pending query");
+            let routed = rx
+                .recv()
+                .expect("drained service dropped a pending query")
+                .expect("drained query failed");
             let p = routed.into_marginal().unwrap();
             assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
         }
@@ -1555,9 +1629,16 @@ mod tests {
         let req = QueryRequest::marginal(0, Evidence::new());
         assert_eq!(req.qos.priority, QueryPriority::Interactive);
         assert_eq!(req.qos.deadline, None);
-        let req = req.batch_priority().with_deadline(Duration::from_millis(50));
+        assert!(!req.qos.prefer_approx);
+        assert_eq!(req.qos.approx_shrink, 0);
+        assert_eq!(req.trace_id, 0);
+        let req = req
+            .batch_priority()
+            .with_deadline(Duration::from_millis(50))
+            .with_trace_id(42);
         assert_eq!(req.qos.priority, QueryPriority::Batch);
         assert_eq!(req.qos.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(req.trace_id, 42);
         assert!(sheddable(&req, Duration::from_millis(2)));
         let tight = QueryRequest::marginal(0, Evidence::new())
             .batch_priority()
@@ -1565,5 +1646,67 @@ mod tests {
         assert!(!sheddable(&tight, Duration::from_millis(2)));
         let interactive = QueryRequest::marginal(0, Evidence::new());
         assert!(!sheddable(&interactive, Duration::from_millis(2)));
+    }
+
+    #[test]
+    fn expired_queries_get_deadline_exceeded_not_late_answers() {
+        // A batching window longer than the deadline guarantees the query
+        // sits in the flush queue past its whole budget.
+        let mut r = QueryRouter::new(1);
+        r.register(
+            "m",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::new()
+                .with_max_batch(64)
+                .with_max_wait(Duration::from_millis(80)),
+        );
+        let ev = Evidence::new().with(0, 1);
+        let doomed = QueryRequest::marginal(5, ev.clone())
+            .with_deadline(Duration::from_millis(1));
+        let err = r.query_routed("m", doomed).unwrap_err();
+        match err {
+            ServingError::DeadlineExceeded(s) => {
+                assert!(s.contains("flush queue"), "unexpected detail: {s}");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // A generous deadline on the same service still answers.
+        let ok = r
+            .query_routed(
+                "m",
+                QueryRequest::marginal(5, ev).with_deadline(Duration::from_secs(5)),
+            )
+            .unwrap();
+        assert_eq!(ok.tier, AnswerTier::Exact);
+    }
+
+    #[test]
+    fn brownout_hint_pushes_batch_queries_to_approx_tier() {
+        // Auto policy with shedding thresholds far out of reach: only the
+        // prefer_approx brownout hint can move traffic off the exact tier.
+        let mut r = QueryRouter::new(2);
+        r.register_with_approx(
+            "asia",
+            &repository::asia(),
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+            ApproxConfig::new()
+                .with_engine(EngineChoice::Auto)
+                .with_shed_queue_depth(usize::MAX)
+                .with_shed_miss_rate(2.0)
+                .with_opts(ApproxOptions { n_samples: 4_000, ..Default::default() }),
+        );
+        let ev = Evidence::new().with(0, 1);
+        let mut hinted = QueryRequest::marginal(5, ev.clone()).batch_priority();
+        hinted.qos.prefer_approx = true;
+        hinted.qos.approx_shrink = 2;
+        let routed = r.query_routed("asia", hinted).unwrap();
+        assert_eq!(routed.tier, AnswerTier::Approx);
+        // Interactive traffic ignores the hint.
+        let mut interactive = QueryRequest::marginal(5, ev);
+        interactive.qos.prefer_approx = true;
+        let routed = r.query_routed("asia", interactive).unwrap();
+        assert_eq!(routed.tier, AnswerTier::Exact);
     }
 }

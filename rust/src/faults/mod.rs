@@ -1,0 +1,757 @@
+//! Deterministic fault injection for the serving fabric.
+//!
+//! Chaos testing is only useful if a failure found once can be found
+//! again: every decision this module makes is a pure function of a
+//! **seed**, so a fault schedule replays exactly from
+//! `serve-query --fault-plan "seed=42,…"` or from a [`FaultPlan`] in a
+//! test. The design mirrors [`crate::obs::ObsConfig`]'s
+//! zero-cost-when-off pattern: call sites hold an
+//! `Option<Arc<Faults>>` ([`FaultHook`]) and a disabled hook costs one
+//! branch on the hot path — no clock reads, no hashing, no locks.
+//!
+//! ## Sites
+//!
+//! Faults are injected at named points in the fabric I/O paths
+//! ([`FaultSite`]):
+//!
+//! | site            | where                                               |
+//! |-----------------|-----------------------------------------------------|
+//! | `connect`       | frontend dials a shard (refuse)                     |
+//! | `frontend_send` | frontend writes a request frame                     |
+//! | `frontend_recv` | frontend reads a reply frame                        |
+//! | `shard_recv`    | shard has read a request frame                      |
+//! | `serve`         | shard is about to answer a query (slowdown/stall)   |
+//! | `shard_send`    | shard writes a reply frame                          |
+//!
+//! ## Determinism model
+//!
+//! Each site keeps a sequence counter; the decision for the *k*-th
+//! evaluation at a site is `mix(seed, site, rule, k)` compared against
+//! the rule's probability — independent of wall clock, thread timing,
+//! or what other sites did. A single-threaded client therefore replays
+//! an identical fault sequence from the same seed; concurrent clients
+//! see the same per-site decision *stream* with interleaving decided by
+//! arrival order. [`schedule_digest`] folds the first decisions of
+//! every site into one hash that depends only on `(seed, rules)` —
+//! `serve-query` prints it so CI can assert two runs of the same plan
+//! agree.
+//!
+//! Frame corruption ([`Faults::corrupt_frame`]) deliberately flips a
+//! bit only inside the 4-byte wire magic: every such flip is a prompt,
+//! unambiguous decode error at the peer, so live chaos runs stay
+//! error-shaped — never a silent wrong answer (payload bit), never a
+//! read blocked on a mangled length until the I/O timeout. Arbitrary
+//! single-byte corruption of every frame region is covered by the wire
+//! property tests instead (pure decode, no I/O).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A named injection point in the fabric I/O paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Frontend dials a shard.
+    Connect,
+    /// Frontend writes a request frame.
+    FrontendSend,
+    /// Frontend reads a reply frame.
+    FrontendRecv,
+    /// Shard has read a request frame.
+    ShardRecv,
+    /// Shard is about to serve a query.
+    Serve,
+    /// Shard writes a reply frame.
+    ShardSend,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 6] = [
+        FaultSite::Connect,
+        FaultSite::FrontendSend,
+        FaultSite::FrontendRecv,
+        FaultSite::ShardRecv,
+        FaultSite::Serve,
+        FaultSite::ShardSend,
+    ];
+
+    /// Stable lowercase label (spec syntax, event log, metric label).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::Connect => "connect",
+            FaultSite::FrontendSend => "frontend_send",
+            FaultSite::FrontendRecv => "frontend_recv",
+            FaultSite::ShardRecv => "shard_recv",
+            FaultSite::Serve => "serve",
+            FaultSite::ShardSend => "shard_send",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.iter().copied().find(|site| site.label() == s)
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Per-site hash salt so two sites never share a decision stream.
+    fn salt(self) -> u64 {
+        (self as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+}
+
+/// What kind of fault a rule injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Lose the frame (the peer's read times out).
+    Drop,
+    /// Sleep before proceeding (slow shard / slow network).
+    Delay,
+    /// Flip one deterministic bit in the encoded frame.
+    Corrupt,
+    /// Refuse the connection attempt.
+    Refuse,
+    /// Kill the connection abruptly (mid-reply when at `shard_send`).
+    Kill,
+    /// Long sleep — a stalled-but-alive shard.
+    Stall,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::Drop,
+        FaultKind::Delay,
+        FaultKind::Corrupt,
+        FaultKind::Refuse,
+        FaultKind::Kill,
+        FaultKind::Stall,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Refuse => "refuse",
+            FaultKind::Kill => "kill",
+            FaultKind::Stall => "stall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.label() == s)
+    }
+
+    /// Where this kind lands when the spec names no site.
+    fn default_site(self) -> FaultSite {
+        match self {
+            FaultKind::Drop => FaultSite::ShardSend,
+            FaultKind::Delay => FaultSite::Serve,
+            FaultKind::Corrupt => FaultSite::ShardSend,
+            FaultKind::Refuse => FaultSite::Connect,
+            FaultKind::Kill => FaultSite::ShardSend,
+            FaultKind::Stall => FaultSite::Serve,
+        }
+    }
+
+    /// Default duration for the kinds that sleep.
+    fn default_millis(self) -> u64 {
+        match self {
+            FaultKind::Delay => 5,
+            FaultKind::Stall => 250,
+            _ => 0,
+        }
+    }
+
+    fn has_duration(self) -> bool {
+        matches!(self, FaultKind::Delay | FaultKind::Stall)
+    }
+}
+
+/// One injection rule: at `site` (optionally scoped to one shard),
+/// inject `kind` with probability `prob` per decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Per-decision probability in `[0, 1]`.
+    pub prob: f64,
+    pub site: FaultSite,
+    /// `None` = any shard.
+    pub shard: Option<u32>,
+    /// Sleep length for `Delay`/`Stall` (ignored otherwise).
+    pub millis: u64,
+}
+
+impl fmt::Display for FaultRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}={}", self.kind.label(), self.prob)?;
+        if self.kind.has_duration() {
+            write!(f, "x{}ms", self.millis)?;
+        }
+        write!(f, "@{}", self.site.label())?;
+        if let Some(s) = self.shard {
+            write!(f, "/shard{s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A seedable, replayable fault schedule: a seed plus an ordered rule
+/// list (first matching rule wins at each decision).
+///
+/// Spec syntax (`--fault-plan`):
+///
+/// ```text
+/// seed=42,delay=0.2x5ms@serve/shard0,corrupt=0.05@shard_send,kill=0.02
+/// ```
+///
+/// Each item is `seed=N` or `kind=prob[xMILLISms][@site][/shardN]` with
+/// kinds `drop|delay|corrupt|refuse|kill|stall` and sites
+/// `connect|frontend_send|frontend_recv|shard_recv|serve|shard_send`.
+/// A rule with no `@site` lands at its kind's natural site (e.g.
+/// `refuse` → `connect`, `delay` → `serve`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// An empty plan with a seed — add rules via [`FaultPlan::with_rule`].
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    pub fn with_rule(mut self, rule: FaultRule) -> FaultPlan {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Convenience builder: `kind` with `prob` at `site`.
+    pub fn with(mut self, kind: FaultKind, prob: f64, site: FaultSite) -> FaultPlan {
+        self.rules.push(FaultRule {
+            kind,
+            prob,
+            site,
+            shard: None,
+            millis: kind.default_millis(),
+        });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Parse the `--fault-plan` spec syntax. Errors name the offending
+    /// item so a typo in a chaos run fails fast instead of silently
+    /// injecting nothing.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, value) = item
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan item {item:?}: expected key=value"))?;
+            if key == "seed" {
+                plan.seed = value
+                    .parse()
+                    .map_err(|e| format!("fault-plan seed {value:?}: {e}"))?;
+                continue;
+            }
+            let kind = FaultKind::parse(key)
+                .ok_or_else(|| format!("fault-plan item {item:?}: unknown kind {key:?}"))?;
+            let mut rest = value;
+            let mut shard = None;
+            if let Some(i) = rest.find("/shard") {
+                let id = &rest[i + "/shard".len()..];
+                shard = Some(
+                    id.parse()
+                        .map_err(|e| format!("fault-plan item {item:?}: shard {id:?}: {e}"))?,
+                );
+                rest = &rest[..i];
+            }
+            let mut site = None;
+            if let Some(i) = rest.find('@') {
+                let name = &rest[i + 1..];
+                site = Some(FaultSite::parse(name).ok_or_else(|| {
+                    format!("fault-plan item {item:?}: unknown site {name:?}")
+                })?);
+                rest = &rest[..i];
+            }
+            let mut millis = kind.default_millis();
+            if let Some(i) = rest.find('x') {
+                let dur = &rest[i + 1..];
+                let dur = dur.strip_suffix("ms").ok_or_else(|| {
+                    format!("fault-plan item {item:?}: duration {dur:?} must end in ms")
+                })?;
+                millis = dur
+                    .parse()
+                    .map_err(|e| format!("fault-plan item {item:?}: duration: {e}"))?;
+                rest = &rest[..i];
+            }
+            let prob: f64 = rest
+                .parse()
+                .map_err(|e| format!("fault-plan item {item:?}: probability: {e}"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!(
+                    "fault-plan item {item:?}: probability {prob} outside [0, 1]"
+                ));
+            }
+            plan.rules.push(FaultRule {
+                kind,
+                prob,
+                site: site.unwrap_or_else(|| kind.default_site()),
+                shard,
+                millis,
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Arm the plan into a live [`Faults`] instance. `scope` bakes in a
+    /// shard id for processes that *are* one shard (shard workers pass
+    /// their own id; the frontend passes `None` and scopes per call).
+    pub fn arm(&self, scope: Option<u32>) -> Arc<Faults> {
+        Arc::new(Faults {
+            plan: self.clone(),
+            scope,
+            enabled: AtomicBool::new(true),
+            counters: Default::default(),
+            corrupt_seq: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            events: Mutex::new(VecDeque::new()),
+        })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for rule in &self.rules {
+            write!(f, ",{rule}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The action a call site must take after consulting [`Faults::decide`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault — proceed normally.
+    None,
+    /// Lose the frame: skip the write/processing step.
+    Drop,
+    /// Sleep this long, then proceed.
+    Delay(Duration),
+    /// Flip a bit in the encoded frame before writing it.
+    Corrupt,
+    /// Fail the connection attempt.
+    Refuse,
+    /// Kill the connection abruptly.
+    Kill,
+    /// Sleep this long (stalled shard), then proceed.
+    Stall(Duration),
+}
+
+impl FaultAction {
+    /// The sleep this action implies, if any — callers that only
+    /// distinguish "wait" from "act" can collapse Delay/Stall here.
+    pub fn sleep(self) -> Option<Duration> {
+        match self {
+            FaultAction::Delay(d) | FaultAction::Stall(d) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+/// One injected fault, for the bounded event log.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub site: FaultSite,
+    pub shard: Option<u32>,
+    /// The site-local sequence number of the decision.
+    pub seq: u64,
+    /// Index of the rule that fired.
+    pub rule: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Stable one-line rendering (chaos-run logs, debugging).
+    pub fn line(&self) -> String {
+        match self.shard {
+            Some(s) => format!(
+                "fault {} seq={} shard={} rule={}",
+                format_args!("{}@{}", self.kind.label(), self.site.label()),
+                self.seq,
+                s,
+                self.rule
+            ),
+            None => format!(
+                "fault {} seq={} rule={}",
+                format_args!("{}@{}", self.kind.label(), self.site.label()),
+                self.seq,
+                self.rule
+            ),
+        }
+    }
+}
+
+/// Bound on the in-memory fault event ring.
+const EVENT_RING_CAP: usize = 4096;
+
+/// A live, armed fault plan: per-site decision counters plus a bounded
+/// event log. Cheap to share (`Arc`), cheap to consult (one atomic
+/// fetch-add and a few hashes per decision; zero when the plan has no
+/// rule for the site).
+#[derive(Debug)]
+pub struct Faults {
+    plan: FaultPlan,
+    scope: Option<u32>,
+    enabled: AtomicBool,
+    counters: [AtomicU64; 6],
+    corrupt_seq: AtomicU64,
+    injected: AtomicU64,
+    events: Mutex<VecDeque<FaultEvent>>,
+}
+
+/// What call sites hold: `None` = fault injection compiled down to one
+/// branch (the [`crate::obs::ObsConfig`] pattern).
+pub type FaultHook = Option<Arc<Faults>>;
+
+impl Faults {
+    /// The plan this instance was armed from.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Disarm (or re-arm) injection at runtime — recovery phases of
+    /// chaos tests flip this instead of rebuilding the fabric.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::SeqCst);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Total faults injected so far.
+    pub fn injected_total(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the (bounded) event log, oldest first.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.events.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The k-th decision at `site`: a pure function of
+    /// `(seed, site, rules, k)`. `shard` scopes shard-targeted rules;
+    /// an armed scope (shard workers) wins over the per-call value.
+    pub fn decide(&self, site: FaultSite, shard: Option<u32>) -> FaultAction {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return FaultAction::None;
+        }
+        let shard = self.scope.or(shard);
+        let seq = self.counters[site.index()].fetch_add(1, Ordering::Relaxed);
+        match decide_pure(&self.plan, site, shard, seq) {
+            Some((rule, kind, action)) => {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                let mut events = self.events.lock().unwrap();
+                if events.len() >= EVENT_RING_CAP {
+                    events.pop_front();
+                }
+                events.push_back(FaultEvent { site, shard, seq, rule, kind });
+                action
+            }
+            None => FaultAction::None,
+        }
+    }
+
+    /// Flip one deterministic bit in an encoded frame's 4-byte magic.
+    ///
+    /// Live injection restricts itself to the magic on purpose: any flip
+    /// there is a *guaranteed* prompt decode error at the receiving peer,
+    /// so the fault stays error-shaped and the redial ladder owns it.
+    /// Flipping deeper bytes can be silent (a payload value bit) or
+    /// ambiguous (a tag aliasing to another message), which turns a chaos
+    /// run into wrong answers instead of recoverable faults — the wire
+    /// property tests cover those decode paths exhaustively without I/O,
+    /// and the length field (offsets 8..12) separately, because a length
+    /// flip blocks until the peer's I/O timeout (timing-shaped, not
+    /// error-shaped).
+    pub fn corrupt_frame(&self, frame: &mut [u8]) {
+        if frame.is_empty() {
+            return;
+        }
+        let seq = self.corrupt_seq.fetch_add(1, Ordering::Relaxed);
+        let z = mix(self.plan.seed ^ 0xc0dec0de ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let span = frame.len().min(4);
+        let pos = (z as usize) % span;
+        let bit = ((z >> 32) % 8) as u8;
+        frame[pos] ^= 1 << bit;
+    }
+}
+
+/// splitmix64 finalizer — the hash behind every decision.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform in `[0, 1)` from `(seed, site, rule, seq)`.
+fn unit(seed: u64, site: FaultSite, rule: usize, seq: u64) -> f64 {
+    let z = mix(
+        seed ^ site.salt()
+            ^ ((rule as u64 + 1) << 48)
+            ^ seq.wrapping_mul(0x2545_f491_4f6c_dd1d),
+    );
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// The pure decision core shared by [`Faults::decide`] and
+/// [`schedule_digest`]: first matching rule wins.
+fn decide_pure(
+    plan: &FaultPlan,
+    site: FaultSite,
+    shard: Option<u32>,
+    seq: u64,
+) -> Option<(usize, FaultKind, FaultAction)> {
+    for (i, rule) in plan.rules.iter().enumerate() {
+        if rule.site != site {
+            continue;
+        }
+        if let Some(want) = rule.shard {
+            if shard != Some(want) {
+                continue;
+            }
+        }
+        if unit(plan.seed, site, i, seq) < rule.prob {
+            let action = match rule.kind {
+                FaultKind::Drop => FaultAction::Drop,
+                FaultKind::Delay => {
+                    FaultAction::Delay(Duration::from_millis(rule.millis))
+                }
+                FaultKind::Corrupt => FaultAction::Corrupt,
+                FaultKind::Refuse => FaultAction::Refuse,
+                FaultKind::Kill => FaultAction::Kill,
+                FaultKind::Stall => {
+                    FaultAction::Stall(Duration::from_millis(rule.millis))
+                }
+            };
+            return Some((i, rule.kind, action));
+        }
+    }
+    None
+}
+
+/// Fold the first `n` decisions of every site (unscoped) into one hash.
+/// Depends only on `(seed, rules)` — two runs of the same plan print
+/// the same digest, which is the CI reproducibility assertion.
+pub fn schedule_digest(plan: &FaultPlan, n: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut fold = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    for site in FaultSite::ALL {
+        for seq in 0..n {
+            // Probe both the unscoped stream and each scoped shard the
+            // plan names, so shard-targeted rules shape the digest too.
+            let mut scopes: Vec<Option<u32>> = vec![None];
+            for rule in &plan.rules {
+                if let Some(s) = rule.shard {
+                    if !scopes.contains(&Some(s)) {
+                        scopes.push(Some(s));
+                    }
+                }
+            }
+            for scope in scopes {
+                if let Some((rule, kind, _)) = decide_pure(plan, site, scope, seq) {
+                    fold(site.index() as u64 + 1);
+                    fold(scope.map_or(u64::MAX, u64::from));
+                    fold(seq);
+                    fold(rule as u64);
+                    fold(kind as u64 + 1);
+                }
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let spec = "seed=42,delay=0.2x5ms@serve/shard0,corrupt=0.05@shard_send,kill=0.02";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.rules.len(), 3);
+        assert_eq!(plan.rules[0].kind, FaultKind::Delay);
+        assert_eq!(plan.rules[0].millis, 5);
+        assert_eq!(plan.rules[0].shard, Some(0));
+        assert_eq!(plan.rules[0].site, FaultSite::Serve);
+        // kill with no site lands at its natural site.
+        assert_eq!(plan.rules[2].site, FaultSite::ShardSend);
+        // Display → parse is the identity.
+        let reparsed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(reparsed, plan);
+    }
+
+    #[test]
+    fn bad_specs_fail_fast() {
+        for bad in [
+            "frob=0.5",
+            "delay=2.0",
+            "delay=0.5@nowhere",
+            "seed=notanumber",
+            "delay",
+            "delay=0.5x10s",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // Empty items are tolerated (trailing commas).
+        assert!(FaultPlan::parse("seed=1,").unwrap().is_empty());
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let plan = FaultPlan::parse("seed=7,drop=0.3@shard_send,delay=0.4x1ms@serve")
+            .unwrap();
+        let a = plan.arm(None);
+        let b = plan.arm(None);
+        let mut injected = 0;
+        for _ in 0..512 {
+            let da = a.decide(FaultSite::ShardSend, None);
+            let db = b.decide(FaultSite::ShardSend, None);
+            assert_eq!(da, db);
+            if da != FaultAction::None {
+                injected += 1;
+            }
+            assert_eq!(
+                a.decide(FaultSite::Serve, None),
+                b.decide(FaultSite::Serve, None)
+            );
+        }
+        // ~30% of 512 — loose bounds, deterministic given the seed.
+        assert!(injected > 100 && injected < 220, "injected {injected}");
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn different_seed_diverges() {
+        let rules = "drop=0.3@shard_send";
+        let a = FaultPlan::parse(&format!("seed=1,{rules}")).unwrap().arm(None);
+        let b = FaultPlan::parse(&format!("seed=2,{rules}")).unwrap().arm(None);
+        let diverged = (0..256).any(|_| {
+            a.decide(FaultSite::ShardSend, None) != b.decide(FaultSite::ShardSend, None)
+        });
+        assert!(diverged);
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let always = FaultPlan::parse("seed=3,refuse=1.0@connect").unwrap().arm(None);
+        let never = FaultPlan::parse("seed=3,refuse=0.0@connect").unwrap().arm(None);
+        for _ in 0..64 {
+            assert_eq!(always.decide(FaultSite::Connect, None), FaultAction::Refuse);
+            assert_eq!(never.decide(FaultSite::Connect, None), FaultAction::None);
+        }
+        assert_eq!(always.injected_total(), 64);
+        assert_eq!(never.injected_total(), 0);
+    }
+
+    #[test]
+    fn shard_scope_filters() {
+        let plan = FaultPlan::parse("seed=5,refuse=1.0@connect/shard1").unwrap();
+        let f = plan.arm(None);
+        assert_eq!(f.decide(FaultSite::Connect, Some(0)), FaultAction::None);
+        assert_eq!(f.decide(FaultSite::Connect, Some(1)), FaultAction::Refuse);
+        assert_eq!(f.decide(FaultSite::Connect, None), FaultAction::None);
+        // An armed scope (a shard worker's own id) wins.
+        let scoped = plan.arm(Some(1));
+        assert_eq!(scoped.decide(FaultSite::Connect, None), FaultAction::Refuse);
+    }
+
+    #[test]
+    fn disarm_stops_injection() {
+        let f = FaultPlan::parse("seed=9,refuse=1.0@connect").unwrap().arm(None);
+        assert_eq!(f.decide(FaultSite::Connect, None), FaultAction::Refuse);
+        f.set_enabled(false);
+        assert!(!f.enabled());
+        assert_eq!(f.decide(FaultSite::Connect, None), FaultAction::None);
+        f.set_enabled(true);
+        assert_ne!(f.decide(FaultSite::Connect, None), FaultAction::None);
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let plan =
+            FaultPlan::parse("seed=11,kill=1.0@shard_send,drop=1.0@shard_send").unwrap();
+        let f = plan.arm(None);
+        assert_eq!(f.decide(FaultSite::ShardSend, None), FaultAction::Kill);
+    }
+
+    #[test]
+    fn digest_is_pure_and_seed_sensitive() {
+        let plan = FaultPlan::parse("seed=42,drop=0.3@shard_send,delay=0.1x2ms@serve")
+            .unwrap();
+        let d1 = schedule_digest(&plan, 64);
+        let d2 = schedule_digest(&plan, 64);
+        assert_eq!(d1, d2);
+        let other = FaultPlan { seed: 43, ..plan.clone() };
+        assert_ne!(d1, schedule_digest(&other, 64));
+        // Arming and deciding does not perturb the digest (pure fn).
+        let f = plan.arm(None);
+        for _ in 0..32 {
+            f.decide(FaultSite::ShardSend, None);
+        }
+        assert_eq!(schedule_digest(&plan, 64), d1);
+    }
+
+    #[test]
+    fn corrupt_frame_is_deterministic_and_stays_in_the_magic() {
+        let base = vec![0u8; 64];
+        let a = FaultPlan::seeded(17).arm(None);
+        let b = FaultPlan::seeded(17).arm(None);
+        for _ in 0..32 {
+            let mut fa = base.clone();
+            let mut fb = base.clone();
+            a.corrupt_frame(&mut fa);
+            b.corrupt_frame(&mut fb);
+            assert_eq!(fa, fb);
+            let flipped: Vec<usize> =
+                (0..fa.len()).filter(|&i| fa[i] != base[i]).collect();
+            assert_eq!(flipped.len(), 1, "exactly one byte flips");
+            assert!(
+                flipped[0] < 4,
+                "live corruption must stay in the magic so it is always \
+                 detected (flipped {})",
+                flipped[0]
+            );
+        }
+    }
+
+    #[test]
+    fn event_lines_render() {
+        let f = FaultPlan::parse("seed=1,refuse=1.0@connect/shard2").unwrap().arm(None);
+        f.decide(FaultSite::Connect, Some(2));
+        let events = f.events();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].line().contains("refuse@connect"));
+        assert!(events[0].line().contains("shard=2"));
+    }
+}

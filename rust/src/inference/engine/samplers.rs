@@ -169,6 +169,29 @@ impl ApproxEngine {
         &self.net
     }
 
+    /// One full approximate answer for `evidence` at a brownout-shrunk
+    /// sample budget: the configured budget right-shifted by `shrink`
+    /// bits, floored at 256 samples so a deep shrink still answers
+    /// something statistically meaningful. `shrink == 0` is exactly
+    /// [`ApproxEngine::run`]. LoopyBp draws no samples, so shrink is a
+    /// no-op there.
+    pub fn run_scaled(&self, evidence: &Evidence, shrink: u8) -> EngineRun {
+        if shrink == 0 || self.kind == SamplerKind::LoopyBp {
+            return self.run(evidence);
+        }
+        let scale = |n: usize| (n >> shrink.min(16)).max(256.min(n));
+        let mut scaled = ApproxEngine {
+            net: Arc::clone(&self.net),
+            kind: self.kind,
+            opts: self.opts.clone(),
+            chunked: self.chunked.clone(),
+            pool: self.pool.clone(),
+        };
+        scaled.opts.n_samples = scale(self.opts.n_samples);
+        scaled.chunked.max_samples = scale(self.chunked.max_samples);
+        scaled.run(evidence)
+    }
+
     /// One full approximate answer for `evidence`.
     pub fn run(&self, evidence: &Evidence) -> EngineRun {
         let t0 = Instant::now();
@@ -429,6 +452,23 @@ mod tests {
                 kind.name()
             );
         }
+    }
+
+    #[test]
+    fn run_scaled_shrinks_sample_budget_with_floor() {
+        let net = repository::cancer();
+        let ev = Evidence::new().with(3, 1);
+        let engine = ApproxEngine::new(
+            &net,
+            SamplerKind::LikelihoodWeighting,
+            ApproxOptions { n_samples: 16_000, ..Default::default() },
+        );
+        assert_eq!(engine.run_scaled(&ev, 0).samples_drawn, 16_000);
+        assert_eq!(engine.run_scaled(&ev, 2).samples_drawn, 4_000);
+        // Deep shrink hits the floor instead of going to zero.
+        assert_eq!(engine.run_scaled(&ev, 7).samples_drawn, 256);
+        // The original engine keeps its full budget.
+        assert_eq!(engine.run(&ev).samples_drawn, 16_000);
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod core;
 pub mod counts;
+pub mod faults;
 pub mod graph;
 pub mod inference;
 pub mod io;

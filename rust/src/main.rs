@@ -113,7 +113,14 @@ USAGE: fastpgm <subcommand> [flags]
            [--stats-linger S] keep the endpoint up S seconds after the
            drive loop so external scrapers can read final counters
            [--trace-log out.jsonl] sampled per-query span records (one
-           JSON object per line; shards append .shardN to the path)"
+           JSON object per line; shards append .shardN to the path)
+           [--fault-plan SPEC] deterministic fault injection for chaos
+           runs (docs/ROBUSTNESS.md), e.g.
+           seed=42,delay=0.2x5ms@serve/shard0,corrupt=0.05@shard_send
+           — same seed replays the same fault schedule exactly
+           [--hedge] hedge interactive queries onto the ring successor
+           after the observed wire p99 [--hedge-delay-ms MS] pin the
+           hedge delay instead of deriving it"
     );
 }
 
@@ -584,10 +591,11 @@ fn drive_clients(
 /// with a sampler name every query goes through that engine.
 fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     use fastpgm::serving::{
-        wire, ApproxConfig, ApproxOptions, Collector, EngineChoice, FabricConfig,
-        Frontend, KernelMode, ModelSpec, ObsConfig, ObsLevel, ProcessLauncher,
-        QueryEngineConfig, QueryRouter, Registry, RoutingPolicy, Sample, SamplerKind,
-        ShardConfig, ShardWorker, StatsServer, TraceLog, SHARD_READY_PREFIX,
+        schedule_digest, wire, ApproxConfig, ApproxOptions, Collector, EngineChoice,
+        FabricConfig, FaultPlan, Frontend, KernelMode, ModelSpec, ObsConfig, ObsLevel,
+        ProcessLauncher, QueryEngineConfig, QueryRouter, Registry, RoutingPolicy,
+        Sample, SamplerKind, ShardConfig, ShardWorker, StatsServer, TraceLog,
+        SHARD_READY_PREFIX,
     };
     use std::sync::Arc;
 
@@ -631,6 +639,23 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         _ => None,
     };
     let stats_linger = args.parse_flag("stats-linger", 0u64);
+    // Deterministic fault injection: parse once, print the schedule digest
+    // so a chaos harness can assert that the same seed replays the same
+    // fault sequence (shard workers print their own scoped line).
+    let fault_plan = match args.flag("fault-plan") {
+        Some(spec) => {
+            let plan = FaultPlan::parse(spec)
+                .map_err(|e| anyhow::anyhow!("bad --fault-plan: {e}"))?;
+            println!(
+                "FAULT_PLAN seed={} rules={} digest={:016x}",
+                plan.seed,
+                plan.rules.len(),
+                schedule_digest(&plan, 64)
+            );
+            Some(plan)
+        }
+        None => None,
+    };
     // The approx tier's process-wide chunked-run totals.
     let approx_collector: Arc<dyn Collector> = Arc::new(|out: &mut Vec<Sample>| {
         fastpgm::inference::engine::approx_totals_to_samples(out)
@@ -714,11 +739,12 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     // tells the frontend which port the OS assigned.
     if args.switch("shard") {
         let shard_id = args.parse_flag("shard-id", 0u32);
-        let worker = ShardWorker::spawn(
-            shard_id,
-            specs,
-            ShardConfig::new().with_pool_threads(threads).with_obs(obs),
-        )?;
+        let mut shard_config =
+            ShardConfig::new().with_pool_threads(threads).with_obs(obs);
+        if let Some(plan) = &fault_plan {
+            shard_config = shard_config.with_faults(plan.clone());
+        }
+        let worker = ShardWorker::spawn(shard_id, specs, shard_config)?;
         println!("{SHARD_READY_PREFIX}{}", worker.addr());
         use std::io::Write as _;
         std::io::stdout().flush()?;
@@ -773,7 +799,14 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         if !warm_start {
             pass.push("--no-warm-start".to_string());
         }
-        for key in ["learn-from", "learn-algo", "learn-alpha", "learn-name", "trace-log"] {
+        for key in [
+            "learn-from",
+            "learn-algo",
+            "learn-alpha",
+            "learn-name",
+            "trace-log",
+            "fault-plan",
+        ] {
             if let Some(v) = args.flag(key) {
                 pass.push(format!("--{key}"));
                 pass.push(v.to_string());
@@ -781,16 +814,24 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         }
         let launcher =
             ProcessLauncher { exe: std::env::current_exe()?, args: pass };
-        let frontend = Frontend::new(
-            specs,
-            Box::new(launcher),
-            FabricConfig::new()
-                .with_shards(fabric_shards)
-                .with_policy(policy)
-                .with_affinity_prefix(args.parse_flag("affinity-prefix", 1usize))
-                .with_pool_threads(threads)
-                .with_obs(obs.clone()),
-        )?;
+        let mut fabric_config = FabricConfig::new()
+            .with_shards(fabric_shards)
+            .with_policy(policy)
+            .with_affinity_prefix(args.parse_flag("affinity-prefix", 1usize))
+            .with_pool_threads(threads)
+            .with_obs(obs.clone())
+            .with_hedge(args.switch("hedge"));
+        if let Some(ms) = args.flag("hedge-delay-ms") {
+            let ms: u64 = ms.parse().map_err(|e| {
+                anyhow::anyhow!("bad --hedge-delay-ms {ms:?}: {e}")
+            })?;
+            fabric_config =
+                fabric_config.with_hedge_delay(std::time::Duration::from_millis(ms));
+        }
+        if let Some(plan) = &fault_plan {
+            fabric_config = fabric_config.with_faults(plan.clone());
+        }
+        let frontend = Frontend::new(specs, Box::new(launcher), fabric_config)?;
         println!(
             "fabric up: {fabric_shards} shard processes, routing={policy:?}, \
              wire protocol v{}",
@@ -846,10 +887,23 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         let m = frontend.metrics();
         println!(
             "  fabric: queries={} per_shard={:?} failovers={} respawns={} \
-             fallback_answers={} retried={}",
-            m.queries, m.per_shard, m.failovers, m.respawns, m.fallback_answers,
-            m.retried
+             fallback_answers={} retried={} retries_denied={} hedged={} \
+             hedge_wins={} deadline_exceeded={} brownout={}",
+            m.queries,
+            m.per_shard,
+            m.failovers,
+            m.respawns,
+            m.fallback_answers,
+            m.retried,
+            m.retries_denied,
+            m.hedged,
+            m.hedge_wins,
+            m.deadline_exceeded,
+            m.brownout_queries
         );
+        if let Some(faults) = frontend.faults() {
+            println!("  faults(frontend): injected={}", faults.injected_total());
+        }
         linger_for_scrape(&stats_server, stats_linger);
         if let Some(t) = &trace {
             println!("trace: {} spans recorded ({} offered)", t.recorded(), t.offered());

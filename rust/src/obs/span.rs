@@ -220,6 +220,11 @@ impl ObsConfig {
 pub struct SpanRecord {
     pub model: String,
     pub tier: &'static str,
+    /// Trace correlation ID (`0` = unassigned, omitted from the JSONL
+    /// line). The fabric frontend stamps one per query and forwards it
+    /// over the wire, so frontend and shard records for the same query —
+    /// including hedged duplicates — stitch on this field.
+    pub trace_id: u64,
     pub total_us: u64,
     /// (stage, µs) pairs for the stages this query crossed.
     pub stages: Vec<(Stage, u64)>,
@@ -236,6 +241,9 @@ impl SpanRecord {
             self.tier,
             self.total_us
         );
+        if self.trace_id != 0 {
+            s.push_str(&format!(",\"trace_id\":{}", self.trace_id));
+        }
         for (stage, us) in &self.stages {
             s.push_str(&format!(",\"{}_us\":{}", stage.label(), us));
         }
@@ -426,6 +434,7 @@ mod tests {
         let fast = SpanRecord {
             model: "asia".into(),
             tier: "exact",
+            trace_id: 0,
             total_us: 50,
             stages: vec![(Stage::Queue, 10), (Stage::Cache, 5)],
         };
@@ -453,6 +462,7 @@ mod tests {
         log.offer(&SpanRecord {
             model: "m".into(),
             tier: "exact",
+            trace_id: 9,
             total_us: 7,
             stages: vec![(Stage::Calibration, 6)],
         });
@@ -460,6 +470,15 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         assert!(text.trim().starts_with('{') && text.trim().ends_with('}'));
         assert!(text.contains("\"calibration_us\":6"));
+        assert!(text.contains("\"trace_id\":9"));
+    }
+
+    #[test]
+    fn zero_trace_id_is_omitted_from_json() {
+        let span = SpanRecord { model: "m".into(), tier: "exact", ..Default::default() };
+        assert!(!span.to_json_line(0).contains("trace_id"));
+        let span = SpanRecord { trace_id: 7, ..span };
+        assert!(span.to_json_line(0).contains("\"trace_id\":7"));
     }
 
     #[test]

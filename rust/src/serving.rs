@@ -67,3 +67,14 @@ pub use crate::coordinator::{
     ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ThreadLauncher,
     SHARD_READY_PREFIX,
 };
+
+// Resilience: breakers, backoff, retry budgets (`docs/ROBUSTNESS.md`).
+pub use crate::coordinator::{
+    Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget,
+};
+
+// Deterministic fault injection for chaos tests and `--fault-plan`.
+pub use crate::faults::{
+    schedule_digest, FaultAction, FaultEvent, FaultHook, FaultKind, FaultPlan,
+    FaultRule, FaultSite, Faults,
+};

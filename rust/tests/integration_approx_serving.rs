@@ -165,7 +165,7 @@ fn auto_routing_sheds_batch_queries_under_pressure() {
         }
     }
     for rx in interactive_rx {
-        let routed = rx.recv().unwrap();
+        let routed = rx.recv().unwrap().expect("interactive query failed");
         assert_eq!(
             routed.tier,
             AnswerTier::Exact,
@@ -174,7 +174,7 @@ fn auto_routing_sheds_batch_queries_under_pressure() {
     }
     let mut shed = 0usize;
     for rx in batch_rx {
-        let routed = rx.recv().unwrap();
+        let routed = rx.recv().unwrap().expect("batch query failed");
         if routed.tier == AnswerTier::Approx {
             shed += 1;
         }

@@ -1,0 +1,319 @@
+//! End-to-end resilience tests: deterministic fault injection through the
+//! sharded fabric (docs/ROBUSTNESS.md).
+//!
+//! The contract under chaos: **zero dropped queries**. Whatever the
+//! seeded plan kills, delays, or corrupts, every query gets either a
+//! correct answer (within 1e-12 of the in-process reference) or a typed
+//! error the caller asked for (`DeadlineExceeded` on an expired budget) —
+//! never a hang, never a late answer, never a panic.
+
+use fastpgm::network::repository;
+use fastpgm::prelude::Evidence;
+use fastpgm::rng::Pcg;
+use fastpgm::serving::{
+    schedule_digest, Backoff, BreakerConfig, BreakerState, FabricConfig, FaultKind,
+    FaultPlan, FaultSite, Frontend, ModelSpec, QueryEngineConfig, QueryRequest,
+    QueryRouter, RoutingPolicy, ServingError, ShardConfig, ThreadLauncher,
+};
+use fastpgm::testkit::{gen_evidence_chain_pool, gen_query_var};
+use std::time::Duration;
+
+fn specs() -> Vec<ModelSpec> {
+    let engine = QueryEngineConfig::new().with_cache_capacity(256);
+    vec![
+        ModelSpec::new("asia", repository::asia()).with_engine(engine),
+        ModelSpec::new("cancer", repository::cancer()).with_engine(engine),
+    ]
+}
+
+fn reference_router() -> QueryRouter {
+    let mut r = QueryRouter::new(2);
+    for spec in specs() {
+        r.register_with_approx(
+            spec.name.as_str(),
+            &spec.net,
+            spec.engine,
+            spec.batcher.clone(),
+            spec.approx.clone(),
+        );
+    }
+    r
+}
+
+fn chain_trace(net: &fastpgm::network::BayesianNetwork) -> Vec<(usize, Evidence)> {
+    let mut rng = Pcg::seed_from(20_260_808);
+    gen_evidence_chain_pool(&mut rng, net, 16, 4)
+        .into_iter()
+        .map(|ev| (gen_query_var(&mut rng, net, &ev), ev))
+        .collect()
+}
+
+fn fabric_with(
+    shard_plan: Option<FaultPlan>,
+    config: FabricConfig,
+) -> Frontend {
+    let mut shard_config = ShardConfig::new().with_pool_threads(2);
+    if let Some(plan) = shard_plan {
+        shard_config = shard_config.with_faults(plan);
+    }
+    Frontend::new(
+        specs(),
+        Box::new(ThreadLauncher::new(specs()).with_config(shard_config)),
+        config,
+    )
+    .expect("fabric launches")
+}
+
+/// Fast-recovery knobs shared by the chaos tests: millisecond backoff so
+/// respawn ladders don't dominate test wall time.
+fn chaos_config() -> FabricConfig {
+    FabricConfig::new()
+        .with_shards(2)
+        .with_backoff(Backoff::new().with_base(Duration::from_millis(1)))
+        .with_io_timeout(Duration::from_secs(5))
+}
+
+#[test]
+fn same_seed_replays_the_same_fault_schedule() {
+    let spec = "seed=42,delay=0.2x5ms@serve/shard0,corrupt=0.05@shard_send,kill=0.02";
+    let a = FaultPlan::parse(spec).expect("spec parses");
+    let b = FaultPlan::parse(spec).expect("spec parses");
+    assert_eq!(a, b);
+    assert_eq!(schedule_digest(&a, 256), schedule_digest(&b, 256));
+    // A different seed reshuffles the schedule.
+    let c = FaultPlan::parse("seed=43,delay=0.2x5ms@serve/shard0,corrupt=0.05@shard_send,kill=0.02")
+        .expect("spec parses");
+    assert_ne!(schedule_digest(&a, 256), schedule_digest(&c, 256));
+}
+
+/// The headline chaos test: a seeded plan mixing a shard kill (every
+/// shard-0 request's connection dies after the read), a serve-path
+/// slowdown, and reply-frame corruption. Every query must be answered —
+/// by the shard, a ring neighbor, or the in-process fallback — and every
+/// answer must match the in-process reference to 1e-12.
+#[test]
+fn chaos_mix_drops_no_query_and_matches_in_process() {
+    let plan = FaultPlan::seeded(42)
+        .with_rule(fastpgm::serving::FaultRule {
+            kind: FaultKind::Kill,
+            prob: 1.0,
+            site: FaultSite::ShardRecv,
+            shard: Some(0),
+            millis: 0,
+        })
+        .with(FaultKind::Delay, 0.3, FaultSite::Serve)
+        .with_rule(fastpgm::serving::FaultRule {
+            kind: FaultKind::Corrupt,
+            prob: 0.1,
+            site: FaultSite::ShardSend,
+            shard: Some(1),
+            millis: 0,
+        });
+    let frontend = fabric_with(Some(plan), chaos_config());
+    let reference = reference_router();
+    let net = repository::asia();
+    let trace = chain_trace(&net);
+
+    let mut answered = 0usize;
+    for (var, ev) in &trace {
+        let reply = frontend
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("no query may be dropped under chaos");
+        let expect = reference
+            .query_routed("asia", QueryRequest::marginal(*var, ev.clone()))
+            .expect("reference answers");
+        let a = reply.into_marginal().expect("marginal reply");
+        let b = expect.into_marginal().expect("marginal reply");
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 1e-12,
+                "chaos answer {x} diverged from in-process {y}"
+            );
+        }
+        answered += 1;
+    }
+    assert_eq!(answered, trace.len());
+    let m = frontend.metrics();
+    assert_eq!(m.queries, trace.len());
+    assert!(
+        m.failovers >= 1,
+        "the dead shard was never noticed: {m:?}"
+    );
+    frontend.shutdown();
+}
+
+/// Deadline semantics: an expired budget is a typed `DeadlineExceeded`,
+/// never a late answer; a generous budget answers normally.
+#[test]
+fn expired_queries_return_deadline_exceeded_not_late_answers() {
+    let frontend = fabric_with(None, chaos_config());
+    let ev = Evidence::new().with(0, 1);
+
+    let expired = frontend.query_routed(
+        "asia",
+        QueryRequest::marginal(5, ev.clone()).with_deadline(Duration::ZERO),
+    );
+    match expired {
+        Err(ServingError::DeadlineExceeded(_)) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+
+    let fine = frontend
+        .query_routed(
+            "asia",
+            QueryRequest::marginal(5, ev).with_deadline(Duration::from_secs(30)),
+        )
+        .expect("generous deadline answers");
+    let p = fine.into_marginal().expect("marginal reply");
+    assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+
+    let m = frontend.metrics();
+    assert!(m.deadline_exceeded >= 1, "expiry went uncounted: {m:?}");
+    frontend.shutdown();
+}
+
+/// Hedged sends: a stalled primary is cut short at the hedge delay and
+/// the ring successor answers — the caller never waits out io_timeout
+/// behind one straggler.
+#[test]
+fn hedged_retry_rescues_interactive_query_from_straggler() {
+    let plan = FaultPlan::seeded(7).with_rule(fastpgm::serving::FaultRule {
+        kind: FaultKind::Stall,
+        prob: 1.0,
+        site: FaultSite::Serve,
+        shard: Some(0),
+        millis: 500,
+    });
+    let frontend = fabric_with(
+        Some(plan),
+        chaos_config()
+            .with_policy(RoutingPolicy::RoundRobin)
+            .with_hedge(true)
+            .with_hedge_delay(Duration::from_millis(10)),
+    );
+    let ev = Evidence::new().with(0, 1);
+    // Round-robin starts at shard 0 — the stalled one.
+    let reply = frontend
+        .query_routed("asia", QueryRequest::marginal(5, ev))
+        .expect("hedge answers despite the straggler");
+    let p = reply.into_marginal().expect("marginal reply");
+    assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    let m = frontend.metrics();
+    assert!(m.hedged >= 1, "primary straggler never hedged: {m:?}");
+    assert!(m.hedge_wins >= 1, "hedge did not win: {m:?}");
+    frontend.shutdown();
+}
+
+/// The breaker lifecycle end-to-end: repeated connect refusals trip the
+/// shard-0 breaker open, open means *no new primary traffic* (the ring
+/// routes around it), and after the cooldown a half-open probe against
+/// the recovered shard closes it again.
+#[test]
+fn open_breaker_sheds_ring_traffic_until_probe_succeeds() {
+    // Frontend-side fault: every dial to shard 0 is refused while armed.
+    let plan = FaultPlan::seeded(9).with_rule(fastpgm::serving::FaultRule {
+        kind: FaultKind::Refuse,
+        prob: 1.0,
+        site: FaultSite::Connect,
+        shard: Some(0),
+        millis: 0,
+    });
+    let frontend = fabric_with(
+        None,
+        chaos_config()
+            .with_policy(RoutingPolicy::RoundRobin)
+            .with_faults(plan)
+            .with_breaker(
+                BreakerConfig::new()
+                    .with_failure_threshold(3)
+                    .with_open_cooldown(Duration::from_millis(500)),
+            ),
+    );
+    let ev = Evidence::new().with(0, 1);
+    let ask = |frontend: &Frontend| {
+        frontend
+            .query_routed("asia", QueryRequest::marginal(5, ev.clone()))
+            .expect("every query is answered, shard 0 dead or alive")
+    };
+
+    // Trip: round-robin sends about half of these to shard 0; each dial
+    // is refused, fails over, and lands on the fallback — three strikes
+    // open the breaker.
+    for _ in 0..8 {
+        ask(&frontend);
+    }
+    assert_eq!(
+        frontend.breaker_states()[0],
+        BreakerState::Open,
+        "refusals did not trip the breaker: {:?}",
+        frontend.metrics()
+    );
+
+    // Open = no new primary traffic: the ring walks past shard 0.
+    let routed_while_open = frontend.metrics().per_shard[0];
+    for _ in 0..6 {
+        ask(&frontend);
+    }
+    assert_eq!(
+        frontend.metrics().per_shard[0],
+        routed_while_open,
+        "an open shard still received primary traffic"
+    );
+
+    // Recovery: disarm the fault, wait out the cooldown, and let the
+    // half-open probe rejoin the shard.
+    frontend.faults().expect("plan armed").set_enabled(false);
+    std::thread::sleep(Duration::from_millis(600));
+    for _ in 0..10 {
+        ask(&frontend);
+        if frontend.breaker_states()[0] == BreakerState::Closed {
+            break;
+        }
+    }
+    assert_eq!(
+        frontend.breaker_states()[0],
+        BreakerState::Closed,
+        "probe never closed the breaker: {:?}",
+        frontend.metrics()
+    );
+    assert!(
+        frontend.metrics().per_shard[0] > routed_while_open,
+        "recovered shard got no traffic back"
+    );
+    frontend.shutdown();
+}
+
+/// Retry amplification is bounded: with a zero-refill budget of one
+/// token, a permanently refused shard burns the token once and every
+/// later query goes straight to the fallback instead of dial-storming.
+#[test]
+fn retry_budget_caps_retry_amplification() {
+    let plan = FaultPlan::seeded(3).with(FaultKind::Refuse, 1.0, FaultSite::Connect);
+    let frontend = fabric_with(
+        None,
+        chaos_config()
+            .with_policy(RoutingPolicy::RoundRobin)
+            .with_faults(plan)
+            .with_retry_budget(1.0, 0.0),
+    );
+    let ev = Evidence::new().with(0, 1);
+    for _ in 0..6 {
+        let reply = frontend
+            .query_routed("asia", QueryRequest::marginal(5, ev.clone()))
+            .expect("fallback answers when every dial is refused");
+        let p = reply.into_marginal().expect("marginal reply");
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+    let m = frontend.metrics();
+    assert_eq!(m.fallback_answers, 6, "every query should land on the fallback");
+    assert!(
+        m.retries_denied >= 1,
+        "the exhausted budget never denied a retry: {m:?}"
+    );
+    assert!(
+        m.respawns <= 1,
+        "retry amplification: {} respawns against a refused dial",
+        m.respawns
+    );
+    frontend.shutdown();
+}

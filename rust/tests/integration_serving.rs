@@ -71,7 +71,7 @@ fn same_evidence_requests_share_one_calibration() {
         })
         .collect();
     for rx in receivers {
-        let reply = rx.recv().unwrap();
+        let reply = rx.recv().unwrap().expect("async query failed");
         let p = reply.into_marginal().unwrap();
         assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
     }
