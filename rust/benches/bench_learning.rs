@@ -176,6 +176,29 @@ fn main() {
             Ok(model) => {
                 let c = &model.report.counts;
                 let pc_only = gate_cache.stats();
+                // Validation-overhead gate: the lifecycle validation pass
+                // (`model::validate_network`, run on every load and every
+                // registration) must stay noise against the learn itself —
+                // under 3% of the pipeline's structure+MLE wall-clock.
+                let validate = bench(format!("{name} validate"), 0, 30, || {
+                    fastpgm::io::model::validate_network(&model.net).unwrap()
+                });
+                let learn_s = (model.report.structure_elapsed
+                    + model.report.mle_elapsed)
+                    .as_secs_f64();
+                let overhead = validate.median().as_secs_f64() / learn_s.max(1e-9);
+                println!(
+                    "  {name} validation gate: {:.0?} vs learn {:.1?} \
+                     ({:.3}% overhead)",
+                    validate.median(),
+                    model.report.structure_elapsed + model.report.mle_elapsed,
+                    overhead * 100.0
+                );
+                assert!(
+                    overhead < 0.03,
+                    "{name}: validation overhead {:.2}% exceeds the 3% budget",
+                    overhead * 100.0
+                );
                 println!(
                     "  {name} count cache (pipeline): hits={} projections={} \
                      scans={} hit_rate={:.3} scan_free={:.3} bytes={}",
@@ -201,6 +224,11 @@ fn main() {
                         "mle_elapsed_us",
                         Json::num(model.report.mle_elapsed.as_secs_f64() * 1e6),
                     ),
+                    (
+                        "validate_median_us",
+                        Json::num(validate.median().as_secs_f64() * 1e6),
+                    ),
+                    ("validate_overhead_frac", Json::num(overhead)),
                 ]));
             }
             Err(e) => println!("  {name} pipeline scenario skipped: {e}"),

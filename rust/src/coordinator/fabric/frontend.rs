@@ -18,14 +18,20 @@
 //! dropped; [`FabricMetrics`] counts every recovery step.
 //!
 //! **Resilience** (`docs/ROBUSTNESS.md`): every redial/respawn draws from
-//! a global [`RetryBudget`] and pauses by a jittered [`Backoff`]; each
-//! shard sits behind a [`CircuitBreaker`] that takes it off the routing
-//! ring when it keeps failing and probes it back in half-open; deadline
-//! budgets shrink per-attempt I/O timeouts and decrement across hops; and
-//! interactive queries can hedge onto the ring successor once the primary
-//! outlives the observed p99.
+//! a per-shard [`ShardedRetryBudget`] bucket (with a retained fleet-wide
+//! cap, so one sick shard cannot starve redials for healthy ones) and
+//! pauses by a jittered [`Backoff`]; each shard sits behind a
+//! [`CircuitBreaker`] that takes it off the routing ring when it keeps
+//! failing and probes it back in half-open; deadline budgets shrink
+//! per-attempt I/O timeouts and decrement across hops; and interactive
+//! queries can hedge onto the ring successor once the primary outlives
+//! the observed p99. Batch traffic browns out by a staged ladder keyed
+//! on open breakers, frontend in-flight depth, and the observed wire p99
+//! ([`Frontend::query_routed`]).
 
-use super::resilience::{Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget};
+use super::resilience::{
+    Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, ShardedRetryBudget,
+};
 use super::shard::{ModelSpec, ShardConfig, ShardWorker};
 use super::wire::{self, Message, MIN_SUPPORTED_VERSION, PROTOCOL_VERSION};
 use crate::coordinator::query_router::stats_to_samples;
@@ -102,11 +108,20 @@ pub struct FabricConfig {
     pub breaker: BreakerConfig,
     /// Backoff schedule for redials and respawns.
     pub backoff: Backoff,
-    /// Retry-budget token bucket: burst capacity shared by every
-    /// redial/respawn the frontend performs.
+    /// Retry-budget token bucket: burst capacity of *each shard's*
+    /// bucket. The fleet-wide cap is `retry_burst * shards`.
     pub retry_burst: f64,
-    /// Retry-budget token bucket: sustained refill rate, tokens/second.
+    /// Retry-budget token bucket: sustained refill rate per shard,
+    /// tokens/second.
     pub retry_per_sec: f64,
+    /// Brownout pressure signal: batch queries degrade when this many
+    /// queries are already in flight through the frontend. `None`
+    /// (default) disables the queue-depth signal.
+    pub brownout_queue_depth: Option<usize>,
+    /// Brownout latency signal: batch queries degrade when the observed
+    /// frontend wire p99 (after 32 samples) exceeds this. `None`
+    /// (default) disables the latency signal.
+    pub brownout_p99: Option<Duration>,
 }
 
 impl Default for FabricConfig {
@@ -128,6 +143,8 @@ impl Default for FabricConfig {
             backoff: Backoff::default(),
             retry_burst: 8.0,
             retry_per_sec: 4.0,
+            brownout_queue_depth: None,
+            brownout_p99: None,
         }
     }
 }
@@ -222,10 +239,25 @@ impl FabricConfig {
         self
     }
 
-    /// Set the retry budget (burst capacity, refill tokens/second).
+    /// Set the per-shard retry budget (burst capacity, refill
+    /// tokens/second). The fleet cap scales with the shard count.
     pub fn with_retry_budget(mut self, burst: f64, per_sec: f64) -> FabricConfig {
         self.retry_burst = burst;
         self.retry_per_sec = per_sec;
+        self
+    }
+
+    /// Arm the brownout queue-depth signal: batch queries degrade once
+    /// this many queries are in flight through the frontend.
+    pub fn with_brownout_queue_depth(mut self, depth: usize) -> FabricConfig {
+        self.brownout_queue_depth = Some(depth);
+        self
+    }
+
+    /// Arm the brownout latency signal: batch queries degrade once the
+    /// observed wire p99 exceeds `p99`.
+    pub fn with_brownout_p99(mut self, p99: Duration) -> FabricConfig {
+        self.brownout_p99 = Some(p99);
         self
     }
 }
@@ -465,8 +497,12 @@ pub struct Frontend {
     /// One circuit breaker per shard; an open breaker takes the shard off
     /// the routing ring until a half-open probe succeeds.
     breakers: Vec<CircuitBreaker>,
-    /// Global token bucket gating every redial/respawn.
-    retry_budget: RetryBudget,
+    /// Per-shard token buckets (plus a retained fleet cap) gating every
+    /// redial/respawn — one sick shard cannot starve healthy ones.
+    retry_budget: ShardedRetryBudget,
+    /// Queries currently held by the frontend (the brownout ladder's
+    /// queue-depth signal).
+    inflight: AtomicUsize,
     /// Armed fault hook for the frontend's own I/O sites (`None` when no
     /// plan is configured — the common, zero-cost case).
     faults: FaultHook,
@@ -532,7 +568,11 @@ impl Frontend {
         let breakers = (0..config.shards)
             .map(|_| CircuitBreaker::new(config.breaker.clone()))
             .collect();
-        let retry_budget = RetryBudget::new(config.retry_burst, config.retry_per_sec);
+        let retry_budget = ShardedRetryBudget::new(
+            config.shards,
+            config.retry_burst,
+            config.retry_per_sec,
+        );
         let faults = config.faults.as_ref().map(|plan| plan.arm(None));
         Ok(Frontend {
             config,
@@ -545,6 +585,7 @@ impl Frontend {
             metrics: Mutex::new(metrics),
             breakers,
             retry_budget,
+            inflight: AtomicUsize::new(0),
             faults,
             stats_cache: Mutex::new(None),
         })
@@ -611,7 +652,9 @@ impl Frontend {
             m.queries += 1;
             m.per_shard[shard] += 1;
         }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
         let out = self.answer_resilient(shard, model, request, t0);
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
         if self.config.obs.traces() {
             if let Some(trace) = self.config.obs.trace.as_ref() {
                 let total_us = t0.elapsed().as_micros() as u64;
@@ -669,11 +712,14 @@ impl Frontend {
         }
     }
 
-    /// Staged brownout: when breakers are open, degrade *gracefully*
-    /// before any query is dropped. Batch traffic gets its approx sample
-    /// budget shrunk; once a majority of shards is open it is pushed to
-    /// the approx tier outright. Interactive queries are never degraded
-    /// here — they keep their full exact path.
+    /// Staged brownout: degrade batch traffic *gracefully* before any
+    /// query is dropped. The ladder sums independent pressure signals —
+    /// any breaker open (+1), a majority open (+1), frontend in-flight
+    /// depth past `brownout_queue_depth` (+1), observed wire p99 past
+    /// `brownout_p99` (+1, after 32 samples) — and shrinks the approx
+    /// sample budget by that many steps; from level 2 upward batch
+    /// queries are pushed to the approx tier outright. Interactive
+    /// queries are never degraded here — they keep their full exact path.
     fn apply_brownout(&self, request: &mut QueryRequest) {
         if request.qos.priority != QueryPriority::Batch {
             return;
@@ -683,13 +729,34 @@ impl Frontend {
             .iter()
             .filter(|b| b.state() == BreakerState::Open)
             .count();
-        if open == 0 {
+        let queue_hot = self
+            .config
+            .brownout_queue_depth
+            .is_some_and(|cap| self.inflight.load(Ordering::Relaxed) >= cap);
+        let latency_hot = self.config.brownout_p99.is_some_and(|cap| {
+            let m = self.metrics.lock().unwrap();
+            m.wire.count() >= 32
+                && Duration::from_micros(m.wire.percentile(99.0)) >= cap
+        });
+        let mut level = 0u8;
+        if open > 0 {
+            level += 1;
+        }
+        if open > 0 && open * 2 >= self.breakers.len() {
+            level += 1;
+        }
+        if queue_hot {
+            level += 1;
+        }
+        if latency_hot {
+            level += 1;
+        }
+        if level == 0 {
             return;
         }
-        let majority = open * 2 >= self.breakers.len();
-        request.qos.approx_shrink =
-            request.qos.approx_shrink.max(if majority { 2 } else { 1 });
-        if majority {
+        // The wire encodes approx_shrink in 3 bits — cap the ladder there.
+        request.qos.approx_shrink = request.qos.approx_shrink.max(level.min(7));
+        if level >= 2 {
             request.qos.prefer_approx = true;
         }
         self.metrics.lock().unwrap().brownout_queries += 1;
@@ -776,7 +843,7 @@ impl Frontend {
         // The shard looks dead: respawn it (budget- and backoff-gated)
         // and retry once, else answer in-process.
         self.metrics.lock().unwrap().failovers += 1;
-        if !self.retry_budget.try_take() {
+        if !self.retry_budget.try_take(shard) {
             self.metrics.lock().unwrap().retries_denied += 1;
             return self.answer_from_fallback(model, request, &why);
         }
@@ -1106,8 +1173,9 @@ impl Frontend {
                 }
                 // The pooled connection may simply have idled out — but a
                 // dead shard must not turn the redial into a dial storm,
-                // so the retry draws a budget token and backs off.
-                if !self.retry_budget.try_take() {
+                // so the retry draws this shard's budget token and backs
+                // off. Healthy shards keep their own buckets.
+                if !self.retry_budget.try_take(shard) {
                     self.metrics.lock().unwrap().retries_denied += 1;
                     return Err(ServingError::ShardUnavailable(format!(
                         "shard {shard}: {first_err} (retry budget exhausted)"
@@ -1317,9 +1385,27 @@ impl Collector for Frontend {
             Sample::gauge(
                 "fastpgm_fabric_retry_budget_tokens",
                 vec![],
-                self.retry_budget.available(),
+                self.retry_budget.available_global(),
             )
-            .with_help("Retry-budget tokens currently available"),
+            .with_help("Fleet-wide retry-budget tokens currently available"),
+        );
+        for shard in 0..self.retry_budget.n_shards() {
+            out.push(
+                Sample::gauge(
+                    "fastpgm_fabric_shard_retry_budget_tokens",
+                    vec![("shard", shard.to_string())],
+                    self.retry_budget.available_shard(shard),
+                )
+                .with_help("Per-shard retry-budget tokens currently available"),
+            );
+        }
+        out.push(
+            Sample::gauge(
+                "fastpgm_fabric_inflight",
+                vec![],
+                self.inflight.load(Ordering::Relaxed) as f64,
+            )
+            .with_help("Queries currently held by the fabric frontend"),
         );
         for (shard, breaker) in self.breakers.iter().enumerate() {
             out.push(
@@ -1431,5 +1517,62 @@ mod tests {
             FabricConfig::new().with_shards(0),
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn brownout_ladder_sums_queue_and_latency_pressure() {
+        let frontend = Frontend::new(
+            vec![],
+            Box::new(ThreadLauncher::new(vec![])),
+            FabricConfig::new()
+                .with_shards(2)
+                .with_fallback(false)
+                .with_brownout_queue_depth(1)
+                .with_brownout_p99(Duration::from_micros(100)),
+        )
+        .expect("fabric starts");
+
+        let batch = || {
+            let mut r = QueryRequest::marginal(0, Evidence::new());
+            r.qos.priority = QueryPriority::Batch;
+            r
+        };
+
+        // All signals cold: healthy fleet, nothing in flight, cold
+        // histogram — the ladder stays at level 0.
+        let mut request = batch();
+        frontend.apply_brownout(&mut request);
+        assert_eq!(request.qos.approx_shrink, 0);
+        assert!(!request.qos.prefer_approx);
+
+        // Queue pressure alone: one query in flight at threshold 1 →
+        // level 1 (shrink, but stay on the exact tier).
+        frontend.inflight.fetch_add(1, Ordering::Relaxed);
+        let mut request = batch();
+        frontend.apply_brownout(&mut request);
+        assert_eq!(request.qos.approx_shrink, 1);
+        assert!(!request.qos.prefer_approx);
+
+        // Add latency pressure: a warm histogram whose p99 is past the
+        // threshold → level 2 → push to the approx tier outright.
+        {
+            let mut m = frontend.metrics.lock().unwrap();
+            for _ in 0..32 {
+                m.wire.record(5_000);
+            }
+        }
+        let mut request = batch();
+        frontend.apply_brownout(&mut request);
+        assert_eq!(request.qos.approx_shrink, 2);
+        assert!(request.qos.prefer_approx);
+
+        // Interactive traffic is never browned out.
+        let mut request = QueryRequest::marginal(0, Evidence::new());
+        frontend.apply_brownout(&mut request);
+        assert_eq!(request.qos.approx_shrink, 0);
+        assert!(!request.qos.prefer_approx);
+
+        assert_eq!(frontend.metrics().brownout_queries, 2);
+        frontend.shutdown();
     }
 }

@@ -29,5 +29,6 @@ pub use frontend::{
 };
 pub use resilience::{
     Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget,
+    ShardedRetryBudget,
 };
 pub use shard::{ModelSpec, ShardConfig, ShardWorker};

@@ -1,0 +1,198 @@
+//! Gated rollout of learned models: no freshly learned replacement
+//! reaches the router without (1) the validation gate
+//! ([`crate::io::model::validate_network`]) and (2) — when it *replaces*
+//! an incumbent — a shadow-comparison spot-check: a deterministic set of
+//! marginal queries answered by both the incumbent (through the live
+//! router) and the candidate (on its compiled tree, before it serves
+//! anything). The candidate's answers must be well-formed distributions;
+//! its divergence from the incumbent is measured and reported, not
+//! gated — a retrain on new data may legitimately move posteriors, but
+//! the operator should see by how much. Cutover then rides the existing
+//! drain-on-replace path ([`QueryRouter::register_learned`]), so
+//! in-flight queries against the incumbent finish before the swap.
+
+use crate::coordinator::{ApproxConfig, BatcherConfig, QueryRouter, ServingError};
+use crate::core::Evidence;
+use crate::inference::exact::QueryEngineConfig;
+use crate::io::model::{validate_network, ValidationReport};
+use crate::learn::LearnedModel;
+
+/// How many spot-check marginals [`register_gated`] runs by default.
+pub const DEFAULT_SPOT_CHECKS: usize = 8;
+
+/// What the shadow comparison measured.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShadowReport {
+    /// Spot-check queries actually compared (0 when the incumbent shares
+    /// no variables with the candidate).
+    pub queries: usize,
+    /// Worst per-state |candidate - incumbent| across all comparisons.
+    pub max_divergence: f64,
+}
+
+/// What [`register_gated`] did, for logs and tests.
+#[derive(Clone, Copy, Debug)]
+pub struct GateReport {
+    pub validation: ValidationReport,
+    /// `None` when there was no incumbent to shadow against.
+    pub shadow: Option<ShadowReport>,
+    /// An incumbent was drained and replaced.
+    pub replaced: bool,
+}
+
+impl GateReport {
+    /// One-line rendering for CLI output and CI greps.
+    pub fn summary(&self, name: &str) -> String {
+        let mut s = format!(
+            "ROLLOUT model={name} vars={} entries={} row_err={:.2e}",
+            self.validation.n_vars,
+            self.validation.n_entries,
+            self.validation.max_row_err
+        );
+        match self.shadow {
+            Some(sh) => s.push_str(&format!(
+                " shadow_queries={} shadow_divergence={:.3e} replaced={}",
+                sh.queries, sh.max_divergence, self.replaced
+            )),
+            None => s.push_str(" fresh=true"),
+        }
+        s
+    }
+}
+
+/// Shadow-compare `candidate` against the incumbent registered under
+/// `name`: empty-evidence marginals for every variable the two models
+/// share (by name), candidate answered on its own compiled tree. Fails
+/// only when a candidate posterior is not a distribution — that is the
+/// gate; divergence is information.
+pub fn shadow_compare(
+    router: &QueryRouter,
+    name: &str,
+    candidate: &LearnedModel,
+    max_queries: usize,
+) -> Result<ShadowReport, ServingError> {
+    let cal = candidate.compiled.calibrate(&Evidence::new());
+    let mut report = ShadowReport::default();
+    for v in 0..candidate.net.n_vars() {
+        if report.queries >= max_queries {
+            break;
+        }
+        let post = cal.posterior(v);
+        let sum: f64 = post.iter().sum();
+        if !post.iter().all(|p| p.is_finite() && *p >= 0.0)
+            || (sum - 1.0).abs() > 1e-6
+        {
+            return Err(ServingError::Registration(format!(
+                "shadow check: candidate posterior for {} is not a \
+                 distribution (sum {sum})",
+                candidate.net.variable(v).name
+            )));
+        }
+        // Compare against the incumbent only where it has a matching
+        // variable (same index, same cardinality) — a candidate over a
+        // different variable set is validity-checked but not diffed.
+        let incumbent = match router.posterior(name, v, Evidence::new()) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        if incumbent.len() != post.len() {
+            continue;
+        }
+        report.queries += 1;
+        for (a, b) in post.iter().zip(&incumbent) {
+            report.max_divergence = report.max_divergence.max((a - b).abs());
+        }
+    }
+    Ok(report)
+}
+
+/// The only sanctioned way to put a freshly learned model into service:
+/// validation gate → shadow spot-check (when replacing) → drain-on-replace
+/// registration. On any gate failure the router is untouched — the
+/// incumbent keeps serving.
+pub fn register_gated(
+    router: &mut QueryRouter,
+    name: &str,
+    model: &LearnedModel,
+    engine_config: QueryEngineConfig,
+    batcher_config: BatcherConfig,
+    approx: ApproxConfig,
+    spot_checks: usize,
+) -> Result<GateReport, ServingError> {
+    let validation = validate_network(&model.net).map_err(|e| {
+        ServingError::Registration(format!("validation gate for {name:?}: {e}"))
+    })?;
+    let shadow = if router.has_model(name) {
+        Some(shadow_compare(router, name, model, spot_checks)?)
+    } else {
+        None
+    };
+    let replaced =
+        router.register_learned(name, model, engine_config, batcher_config, approx);
+    Ok(GateReport { validation, shadow, replaced })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learn::{HcOptions, Pipeline};
+    use crate::network::repository;
+    use crate::rng::Pcg;
+    use crate::sampling::forward_sample_dataset;
+
+    fn learned() -> LearnedModel {
+        let truth = repository::sprinkler();
+        let mut rng = Pcg::seed_from(61);
+        let data = forward_sample_dataset(&truth, 6_000, &mut rng);
+        Pipeline::hc(HcOptions::default()).run(&data).unwrap()
+    }
+
+    #[test]
+    fn fresh_registration_skips_shadow() {
+        let mut router = QueryRouter::new(2);
+        let model = learned();
+        let report = register_gated(
+            &mut router,
+            "m",
+            &model,
+            QueryEngineConfig::default(),
+            BatcherConfig::default(),
+            ApproxConfig::default(),
+            DEFAULT_SPOT_CHECKS,
+        )
+        .unwrap();
+        assert!(report.shadow.is_none());
+        assert!(!report.replaced);
+        assert!(router.has_model("m"));
+        assert!(report.summary("m").contains("fresh=true"));
+    }
+
+    #[test]
+    fn replacement_shadow_compares_and_drains() {
+        let mut router = QueryRouter::new(2);
+        let model = learned();
+        for round in 0..2 {
+            let report = register_gated(
+                &mut router,
+                "m",
+                &model,
+                QueryEngineConfig::default(),
+                BatcherConfig::default(),
+                ApproxConfig::default(),
+                DEFAULT_SPOT_CHECKS,
+            )
+            .unwrap();
+            if round == 1 {
+                let shadow = report.shadow.expect("incumbent present");
+                assert!(shadow.queries > 0);
+                // Identical model: spot-check must agree to fp precision.
+                assert!(shadow.max_divergence < 1e-9, "{}", shadow.max_divergence);
+                assert!(report.replaced);
+                assert!(report.summary("m").contains("replaced=true"));
+            }
+        }
+        // The replacement still serves.
+        let post = router.posterior("m", 0, Evidence::new()).unwrap();
+        assert!((post.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+}

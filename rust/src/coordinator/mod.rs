@@ -17,6 +17,7 @@
 mod batcher;
 mod error;
 pub mod fabric;
+pub mod lifecycle;
 mod metrics;
 mod query_router;
 mod router;
@@ -26,8 +27,11 @@ pub use error::ServingError;
 pub use fabric::{
     Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, FabricConfig,
     FabricMetrics, Frontend, ModelSpec, ProcessLauncher, RetryBudget, RoutingPolicy,
-    ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ThreadLauncher,
-    SHARD_READY_PREFIX,
+    ShardConfig, ShardHandle, ShardLauncher, ShardWorker, ShardedRetryBudget,
+    ThreadLauncher, SHARD_READY_PREFIX,
+};
+pub use lifecycle::{
+    register_gated, shadow_compare, GateReport, ShadowReport, DEFAULT_SPOT_CHECKS,
 };
 pub use metrics::ServingMetrics;
 pub use query_router::{

@@ -14,14 +14,22 @@
 //! Faults are injected at named points in the fabric I/O paths
 //! ([`FaultSite`]):
 //!
-//! | site            | where                                               |
-//! |-----------------|-----------------------------------------------------|
-//! | `connect`       | frontend dials a shard (refuse)                     |
-//! | `frontend_send` | frontend writes a request frame                     |
-//! | `frontend_recv` | frontend reads a reply frame                        |
-//! | `shard_recv`    | shard has read a request frame                      |
-//! | `serve`         | shard is about to answer a query (slowdown/stall)   |
-//! | `shard_send`    | shard writes a reply frame                          |
+//! | site             | where                                               |
+//! |------------------|-----------------------------------------------------|
+//! | `connect`        | frontend dials a shard (refuse)                     |
+//! | `frontend_send`  | frontend writes a request frame                     |
+//! | `frontend_recv`  | frontend reads a reply frame                        |
+//! | `shard_recv`     | shard has read a request frame                      |
+//! | `serve`          | shard is about to answer a query (slowdown/stall)   |
+//! | `shard_send`     | shard writes a reply frame                          |
+//! | `corrupt_row`    | CSV ingestion is about to parse a data row          |
+//! | `truncate_model` | a `.fpgm` snapshot is about to hit the disk         |
+//! | `slow_counts`    | the learner is about to sweep the dataset counts    |
+//! | `learn_kill`     | the learner crosses a pipeline phase boundary       |
+//!
+//! The last four extend chaos coverage past the wire into the model/data
+//! plane (`--learn-from`): corrupted ingestion rows, torn or bit-flipped
+//! snapshot writes, slow counting passes, and a learner dying mid-run.
 //!
 //! ## Determinism model
 //!
@@ -65,16 +73,28 @@ pub enum FaultSite {
     Serve,
     /// Shard writes a reply frame.
     ShardSend,
+    /// CSV ingestion is about to parse a data row (corrupt it first).
+    CorruptRow,
+    /// A `.fpgm` snapshot is about to be written (tear or flip it).
+    TruncateModel,
+    /// The learner is about to sweep dataset counts (slow it down).
+    SlowCounts,
+    /// The learner crosses a phase boundary (kill it mid-learn).
+    LearnKill,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 6] = [
+    pub const ALL: [FaultSite; 10] = [
         FaultSite::Connect,
         FaultSite::FrontendSend,
         FaultSite::FrontendRecv,
         FaultSite::ShardRecv,
         FaultSite::Serve,
         FaultSite::ShardSend,
+        FaultSite::CorruptRow,
+        FaultSite::TruncateModel,
+        FaultSite::SlowCounts,
+        FaultSite::LearnKill,
     ];
 
     /// Stable lowercase label (spec syntax, event log, metric label).
@@ -86,6 +106,10 @@ impl FaultSite {
             FaultSite::ShardRecv => "shard_recv",
             FaultSite::Serve => "serve",
             FaultSite::ShardSend => "shard_send",
+            FaultSite::CorruptRow => "corrupt_row",
+            FaultSite::TruncateModel => "truncate_model",
+            FaultSite::SlowCounts => "slow_counts",
+            FaultSite::LearnKill => "learn_kill",
         }
     }
 
@@ -210,9 +234,11 @@ impl fmt::Display for FaultRule {
 ///
 /// Each item is `seed=N` or `kind=prob[xMILLISms][@site][/shardN]` with
 /// kinds `drop|delay|corrupt|refuse|kill|stall` and sites
-/// `connect|frontend_send|frontend_recv|shard_recv|serve|shard_send`.
+/// `connect|frontend_send|frontend_recv|shard_recv|serve|shard_send|`
+/// `corrupt_row|truncate_model|slow_counts|learn_kill`.
 /// A rule with no `@site` lands at its kind's natural site (e.g.
-/// `refuse` → `connect`, `delay` → `serve`).
+/// `refuse` → `connect`, `delay` → `serve`); the learning-path sites are
+/// only reached when named explicitly (`corrupt=0.2@corrupt_row`).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultPlan {
     pub seed: u64,
@@ -416,7 +442,7 @@ pub struct Faults {
     plan: FaultPlan,
     scope: Option<u32>,
     enabled: AtomicBool,
-    counters: [AtomicU64; 6],
+    counters: [AtomicU64; 10],
     corrupt_seq: AtomicU64,
     injected: AtomicU64,
     events: Mutex<VecDeque<FaultEvent>>,
@@ -497,6 +523,21 @@ impl Faults {
         let pos = (z as usize) % span;
         let bit = ((z >> 32) % 8) as u8;
         frame[pos] ^= 1 << bit;
+    }
+
+    /// Flip one deterministic bit *anywhere* in `buf` — the snapshot
+    /// analogue of [`Faults::corrupt_frame`]. Snapshots carry a CRC32
+    /// trailer, so unlike the wire path a flip in any byte is detected
+    /// on load; restricting the flip to a header is unnecessary here.
+    pub fn corrupt_bytes(&self, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let seq = self.corrupt_seq.fetch_add(1, Ordering::Relaxed);
+        let z = mix(self.plan.seed ^ 0x5eedfa11 ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let pos = (z as usize) % buf.len();
+        let bit = ((z >> 32) % 8) as u8;
+        buf[pos] ^= 1 << bit;
     }
 }
 
@@ -742,6 +783,50 @@ mod tests {
                  detected (flipped {})",
                 flipped[0]
             );
+        }
+    }
+
+    #[test]
+    fn learning_sites_parse_and_round_trip() {
+        let spec = "seed=77,corrupt=0.2@corrupt_row,kill=1.0@truncate_model,\
+                    delay=0.5x2ms@slow_counts,kill=0.3@learn_kill";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.rules.len(), 4);
+        assert_eq!(plan.rules[0].site, FaultSite::CorruptRow);
+        assert_eq!(plan.rules[1].site, FaultSite::TruncateModel);
+        assert_eq!(plan.rules[2].site, FaultSite::SlowCounts);
+        assert_eq!(plan.rules[3].site, FaultSite::LearnKill);
+        let reparsed = FaultPlan::parse(&plan.to_string()).unwrap();
+        assert_eq!(reparsed, plan);
+        // Labels are stable and distinct across all ten sites.
+        let mut labels: Vec<&str> = FaultSite::ALL.iter().map(|s| s.label()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 10);
+        // Learning sites have their own decision streams and show up in
+        // the schedule digest like any wire site.
+        let d = schedule_digest(&plan, 32);
+        assert_eq!(d, schedule_digest(&plan, 32));
+        let always = FaultPlan::parse("seed=1,kill=1.0@learn_kill").unwrap().arm(None);
+        assert_eq!(always.decide(FaultSite::LearnKill, None), FaultAction::Kill);
+        assert_eq!(always.injected_total(), 1);
+    }
+
+    #[test]
+    fn corrupt_bytes_is_deterministic_single_bit() {
+        let base = vec![0u8; 256];
+        let a = FaultPlan::seeded(17).arm(None);
+        let b = FaultPlan::seeded(17).arm(None);
+        for _ in 0..32 {
+            let mut fa = base.clone();
+            let mut fb = base.clone();
+            a.corrupt_bytes(&mut fa);
+            b.corrupt_bytes(&mut fb);
+            assert_eq!(fa, fb);
+            let flipped: Vec<usize> =
+                (0..fa.len()).filter(|&i| fa[i] != base[i]).collect();
+            assert_eq!(flipped.len(), 1, "exactly one byte flips");
+            assert_eq!((fa[flipped[0]] ^ base[flipped[0]]).count_ones(), 1);
         }
     }
 

@@ -1,8 +1,88 @@
 //! CSV dataset loading/saving (header row = variable names; values are
 //! state names or indices).
+//!
+//! Ingestion is either **strict** (any malformed row fails the whole
+//! load — the historical behaviour, still the [`from_str`] default) or
+//! **permissive** ([`IngestOptions::permissive`]): malformed rows —
+//! ragged field counts, states a fixed schema does not know — are
+//! *quarantined* into a bounded, reported reject set and the learn
+//! proceeds on the surviving rows. The accounting invariant
+//! `rows_kept + rows_quarantined == rows_total` holds in every mode and
+//! is property-tested. A load where *every* row is quarantined still
+//! errors: zero usable rows can never silently produce an empty learn.
+//!
+//! The `corrupt_row` fault site lives here: an armed chaos plan can
+//! deterministically mangle rows before parsing, driving the quarantine
+//! machinery through the same seeded harness as the wire faults.
 
 use crate::core::{Dataset, Variable};
+use crate::faults::{FaultAction, FaultHook, FaultSite};
 use anyhow::{bail, Context, Result};
+
+/// Datasets store states as `u8`, so ingestion refuses wider columns.
+pub const MAX_STATES: usize = 256;
+
+/// How ingestion treats malformed rows.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestOptions {
+    /// `false` (strict): first malformed row fails the load.
+    /// `true`: malformed rows are quarantined and reported.
+    pub permissive: bool,
+    /// Cap on quarantine *examples* kept for the report (counts are
+    /// always exact; only the per-row detail list is bounded).
+    pub max_examples: usize,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions { permissive: false, max_examples: 16 }
+    }
+}
+
+impl IngestOptions {
+    pub fn strict() -> Self {
+        Self::default()
+    }
+
+    pub fn permissive() -> Self {
+        IngestOptions { permissive: true, ..Self::default() }
+    }
+}
+
+/// What ingestion did: exact row accounting plus a bounded sample of
+/// quarantined rows for diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct IngestReport {
+    pub rows_total: usize,
+    pub rows_kept: usize,
+    pub rows_quarantined: usize,
+    /// Up to [`IngestOptions::max_examples`] of `(line number, reason)`.
+    pub examples: Vec<(usize, String)>,
+    /// More rows were quarantined than `examples` records.
+    pub examples_truncated: bool,
+    /// Rows mangled by the `corrupt_row` fault site (chaos runs).
+    pub corrupt_row_faults: u64,
+}
+
+impl IngestReport {
+    fn quarantine(&mut self, max_examples: usize, line: usize, reason: String) {
+        self.rows_quarantined += 1;
+        if self.examples.len() < max_examples {
+            self.examples.push((line, reason));
+        } else {
+            self.examples_truncated = true;
+        }
+    }
+
+    /// One-line rendering for logs and CI greps.
+    pub fn summary(&self) -> String {
+        format!(
+            "rows={} kept={} quarantined={} corrupt_row_faults={}",
+            self.rows_total, self.rows_kept, self.rows_quarantined,
+            self.corrupt_row_faults
+        )
+    }
+}
 
 /// Serialize a dataset to CSV with state names where available.
 pub fn to_string(ds: &Dataset) -> String {
@@ -21,21 +101,61 @@ pub fn to_string(ds: &Dataset) -> String {
     out
 }
 
-/// Parse a CSV into a dataset. State spaces are inferred from the values
-/// seen (sorted for determinism) unless `schema` provides variables.
+/// Parse a CSV into a dataset, strict mode (back-compat surface). State
+/// spaces are inferred from the values seen (sorted for determinism)
+/// unless `schema` provides variables.
 pub fn from_str(text: &str, schema: Option<Vec<Variable>>) -> Result<Dataset> {
-    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
-    let header = lines.next().context("empty CSV")?;
-    let names: Vec<&str> = header.split(',').map(str::trim).collect();
+    ingest(text, schema, IngestOptions::strict(), &None).map(|(ds, _)| ds)
+}
+
+/// Full ingestion: strict or permissive, with exact quarantine
+/// accounting and the `corrupt_row` fault site applied per data row.
+pub fn ingest(
+    text: &str,
+    schema: Option<Vec<Variable>>,
+    opts: IngestOptions,
+    faults: &FaultHook,
+) -> Result<(Dataset, IngestReport)> {
+    let mut report = IngestReport::default();
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty());
+    let (_, header) = lines.next().context("empty CSV")?;
+    let names: Vec<String> =
+        header.split(',').map(|t| t.trim().to_string()).collect();
     let n = names.len();
-    let rows: Vec<Vec<&str>> = lines
-        .map(|l| l.split(',').map(str::trim).collect::<Vec<_>>())
-        .collect();
-    for (i, r) in rows.iter().enumerate() {
-        if r.len() != n {
-            bail!("row {} has {} fields, expected {n}", i + 2, r.len());
+
+    // Split rows up front, applying the corrupt_row fault site. Each kept
+    // entry is `(line number, fields)`; `None` marks a quarantined row.
+    let mut rows: Vec<Option<(usize, Vec<String>)>> = Vec::new();
+    for (idx, line) in lines {
+        let lineno = idx + 1;
+        report.rows_total += 1;
+        let mut owned = line.to_string();
+        if let Some(f) = faults {
+            if f.decide(FaultSite::CorruptRow, None) == FaultAction::Corrupt {
+                // Deterministic mangling: an extra field makes the row
+                // ragged, which the classifier below must quarantine.
+                owned.push_str(",\u{0}corrupt");
+                report.corrupt_row_faults += 1;
+            }
+        }
+        let fields: Vec<String> =
+            owned.split(',').map(|t| t.trim().to_string()).collect();
+        if fields.len() != n {
+            let reason =
+                format!("{} fields, expected {n}", fields.len());
+            if !opts.permissive {
+                bail!("row at line {lineno}: {reason}");
+            }
+            report.quarantine(opts.max_examples, lineno, reason);
+            rows.push(None);
+        } else {
+            rows.push(Some((lineno, fields)));
         }
     }
+
     let variables: Vec<Variable> = match schema {
         Some(vs) => {
             if vs.len() != n {
@@ -45,33 +165,84 @@ pub fn from_str(text: &str, schema: Option<Vec<Variable>>) -> Result<Dataset> {
         }
         None => (0..n)
             .map(|c| {
-                let mut states: Vec<String> =
-                    rows.iter().map(|r| r[c].to_string()).collect();
+                let mut states: Vec<String> = rows
+                    .iter()
+                    .flatten()
+                    .map(|(_, r)| r[c].clone())
+                    .collect();
                 states.sort();
                 states.dedup();
-                Variable::with_states(names[c], states)
+                if states.is_empty() {
+                    // No surviving rows; give the column one placeholder
+                    // state — the zero-usable-rows check below fires.
+                    states.push("_".to_string());
+                }
+                Variable::with_states(names[c].clone(), states)
             })
             .collect(),
     };
+    for v in &variables {
+        if v.cardinality > MAX_STATES {
+            bail!(
+                "column {} has {} states (max {MAX_STATES})",
+                v.name,
+                v.cardinality
+            );
+        }
+    }
+
     let mut ds = Dataset::new(variables);
     let mut buf = vec![0u8; n];
-    for (i, r) in rows.iter().enumerate() {
-        for (c, tok) in r.iter().enumerate() {
-            let s = ds
-                .variable(c)
-                .state_index(tok)
-                .with_context(|| format!("row {}: unknown state {tok:?} for {}", i + 2, names[c]))?;
-            buf[c] = s as u8;
+    'rows: for entry in rows.iter().flatten() {
+        let (lineno, fields) = entry;
+        for (c, tok) in fields.iter().enumerate() {
+            match ds.variable(c).state_index(tok) {
+                Some(s) => buf[c] = s as u8,
+                None => {
+                    let reason =
+                        format!("unknown state {tok:?} for {}", names[c]);
+                    if !opts.permissive {
+                        bail!("row at line {lineno}: {reason}");
+                    }
+                    report.quarantine(opts.max_examples, *lineno, reason);
+                    continue 'rows;
+                }
+            }
         }
         ds.push_row(&buf);
+        report.rows_kept += 1;
     }
-    Ok(ds)
+
+    debug_assert_eq!(
+        report.rows_kept + report.rows_quarantined,
+        report.rows_total
+    );
+    if report.rows_kept == 0 {
+        bail!(
+            "zero usable rows ({} quarantined of {})",
+            report.rows_quarantined,
+            report.rows_total
+        );
+    }
+    Ok((ds, report))
 }
 
 pub fn load(path: &std::path::Path, schema: Option<Vec<Variable>>) -> Result<Dataset> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     from_str(&text, schema)
+}
+
+/// Load with full ingestion control (permissive quarantine, faults).
+pub fn load_ingest(
+    path: &std::path::Path,
+    schema: Option<Vec<Variable>>,
+    opts: IngestOptions,
+    faults: &FaultHook,
+) -> Result<(Dataset, IngestReport)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    ingest(&text, schema, opts, faults)
 }
 
 pub fn save(ds: &Dataset, path: &std::path::Path) -> Result<()> {
@@ -82,6 +253,7 @@ pub fn save(ds: &Dataset, path: &std::path::Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultPlan;
     use crate::network::repository;
     use crate::rng::Pcg;
     use crate::sampling::forward_sample_dataset;
@@ -118,5 +290,78 @@ mod tests {
     fn rejects_unknown_state_with_schema() {
         let schema = vec![Variable::with_states("a", ["x", "y"])];
         assert!(from_str("a\nz\n", Some(schema)).is_err());
+    }
+
+    #[test]
+    fn permissive_quarantines_and_accounts() {
+        let text = "a,b\nyes,1\nno\nyes,2,extra\nno,1\n";
+        let (ds, report) =
+            ingest(text, None, IngestOptions::permissive(), &None).unwrap();
+        assert_eq!(report.rows_total, 4);
+        assert_eq!(report.rows_kept, 2);
+        assert_eq!(report.rows_quarantined, 2);
+        assert_eq!(report.rows_kept + report.rows_quarantined, report.rows_total);
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(report.examples.len(), 2);
+        assert!(report.summary().contains("quarantined=2"));
+    }
+
+    #[test]
+    fn permissive_quarantines_unknown_states() {
+        let schema = vec![Variable::with_states("a", ["x", "y"])];
+        let (ds, report) = ingest(
+            "a\nx\nz\ny\n",
+            Some(schema),
+            IngestOptions::permissive(),
+            &None,
+        )
+        .unwrap();
+        assert_eq!(ds.n_rows(), 2);
+        assert_eq!(report.rows_quarantined, 1);
+        assert_eq!(report.examples[0].1, "unknown state \"z\" for a");
+    }
+
+    #[test]
+    fn zero_usable_rows_errors_even_permissive() {
+        let err = ingest("a,b\nonly\n", None, IngestOptions::permissive(), &None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("zero usable rows"));
+    }
+
+    #[test]
+    fn example_list_is_bounded() {
+        let mut text = String::from("a,b\nok,1\n");
+        for _ in 0..100 {
+            text.push_str("bad\n");
+        }
+        let opts = IngestOptions { permissive: true, max_examples: 4 };
+        let (_, report) = ingest(&text, None, opts, &None).unwrap();
+        assert_eq!(report.rows_quarantined, 100);
+        assert_eq!(report.examples.len(), 4);
+        assert!(report.examples_truncated);
+    }
+
+    #[test]
+    fn corrupt_row_fault_drives_quarantine() {
+        let net = repository::asia();
+        let mut rng = Pcg::seed_from(2);
+        let ds = forward_sample_dataset(&net, 200, &mut rng);
+        let text = to_string(&ds);
+        let plan = FaultPlan::parse("seed=42,corrupt=0.25@corrupt_row").unwrap();
+        let run = |faults: &FaultHook| {
+            ingest(&text, None, IngestOptions::permissive(), faults).unwrap().1
+        };
+        let a = run(&Some(plan.arm(None)));
+        let b = run(&Some(plan.arm(None)));
+        // Deterministic: same plan, same quarantine accounting.
+        assert_eq!(a.rows_quarantined, b.rows_quarantined);
+        assert_eq!(a.corrupt_row_faults, b.corrupt_row_faults);
+        assert!(a.corrupt_row_faults > 20, "{}", a.corrupt_row_faults);
+        assert_eq!(a.rows_quarantined, a.corrupt_row_faults as usize);
+        assert_eq!(a.rows_kept + a.rows_quarantined, a.rows_total);
+        // Disarmed: nothing quarantined.
+        let clean = run(&None);
+        assert_eq!(clean.rows_quarantined, 0);
+        assert_eq!(clean.rows_kept, 200);
     }
 }

@@ -18,16 +18,65 @@
 //!
 //! Every `var` line precedes all `parents` lines, which precede all `cpt`
 //! lines. Indices refer to `var` declaration order.
+//!
+//! ## Format v2: checksummed snapshots
+//!
+//! Version 2 (`fpgm 2`) is the same body followed by one trailer line:
+//!
+//! ```text
+//! fpgm 2
+//! ...same directives...
+//! end
+//! crc32 <8 hex digits>
+//! ```
+//!
+//! The digest is CRC32 over the *canonical body* — the trimmed,
+//! non-empty, non-comment lines from the header through `end`, joined
+//! with `\n` plus a trailing `\n` — so it is stable across CRLF mangling
+//! while still catching any single-byte damage to real content. A v2
+//! file with no trailer is [`ModelError::Truncated`] (the signature of a
+//! torn write); a digest mismatch is [`ModelError::Corrupt`]. v1 files
+//! carry no trailer and still load.
+//!
+//! Decoding is **total**: [`decode`] parses into a raw form, runs
+//! [`model::validate_raw`], and only then constructs — no corrupted
+//! input can reach a panicking constructor. [`save_atomic`] writes
+//! temp-file + fsync + rename so a crash leaves the previous snapshot
+//! intact, and hosts the `truncate_model` fault site so chaos plans can
+//! tear or bit-flip a snapshot deterministically.
 
-use crate::core::Variable;
-use crate::graph::Dag;
-use crate::network::{BayesianNetwork, Cpt};
-use anyhow::{bail, Context, Result};
+use crate::faults::{FaultAction, FaultHook, FaultSite};
+use crate::io::model::{self, ModelError, RawNet};
+use crate::network::BayesianNetwork;
+use anyhow::{Context, Result};
 
-/// Serialize a network to `.fpgm` text.
+/// Digest and version of a decoded snapshot, for recovery logs and the
+/// frontend's digest verification of a recovered model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotInfo {
+    /// Format version (1 or 2).
+    pub version: u8,
+    /// CRC32 of the canonical body (computed for v1 too, for logging).
+    pub digest: u32,
+}
+
+/// Serialize a network to `.fpgm` v1 text (the Python-interop format).
 pub fn to_string(net: &BayesianNetwork) -> String {
-    let mut out = String::new();
-    out.push_str("fpgm 1\n");
+    let mut out = String::from("fpgm 1\n");
+    push_body(net, &mut out);
+    out
+}
+
+/// Serialize to v2: versioned header plus CRC32 trailer.
+pub fn to_string_v2(net: &BayesianNetwork) -> String {
+    let mut out = String::from("fpgm 2\n");
+    push_body(net, &mut out);
+    let crc = model::crc32(out.as_bytes());
+    out.push_str(&format!("crc32 {crc:08x}\n"));
+    out
+}
+
+fn push_body(net: &BayesianNetwork, out: &mut String) {
     out.push_str(&format!("name {}\n", net.name()));
     for v in net.variables() {
         out.push_str(&format!("var {} {}", v.name, v.cardinality));
@@ -52,124 +101,239 @@ pub fn to_string(net: &BayesianNetwork) -> String {
         out.push('\n');
     }
     out.push_str("end\n");
-    out
 }
 
-/// Parse `.fpgm` text into a network.
-pub fn from_str(text: &str) -> Result<BayesianNetwork> {
-    let mut lines = text.lines().map(str::trim).filter(|l| {
-        !l.is_empty() && !l.starts_with('#')
-    });
-    let header = lines.next().context("empty fpgm file")?;
-    if header != "fpgm 1" {
-        bail!("unsupported fpgm header: {header:?}");
+/// Total decoder for v1 and v2 text: parse → validate → construct.
+/// Never panics or hangs, whatever the bytes; every failure is a typed
+/// [`ModelError`].
+pub fn decode(text: &str) -> Result<(BayesianNetwork, SnapshotInfo), ModelError> {
+    // Canonical body: trimmed, non-empty, non-comment lines up to the
+    // trailer (a line starting with "crc32"), which is kept separate.
+    let mut body: Vec<&str> = Vec::new();
+    let mut trailer: Option<&str> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("crc32") {
+            trailer = Some(rest.trim());
+            break;
+        }
+        body.push(line);
     }
-    let mut name = String::from("unnamed");
-    let mut variables: Vec<Variable> = Vec::new();
-    let mut parents: Vec<Vec<usize>> = Vec::new();
-    let mut cpts: Vec<Option<Vec<f64>>> = Vec::new();
-    let mut saw_end = false;
+    let header = *body
+        .first()
+        .ok_or_else(|| ModelError::Truncated("empty fpgm input".into()))?;
+    let version: u8 = match header {
+        "fpgm 1" => 1,
+        "fpgm 2" => 2,
+        other => {
+            return Err(ModelError::Corrupt(format!(
+                "unsupported fpgm header {other:?}"
+            )))
+        }
+    };
+    let mut canonical = body.join("\n");
+    canonical.push('\n');
+    let digest = model::crc32(canonical.as_bytes());
+    if version == 2 {
+        let stated = trailer.ok_or_else(|| {
+            ModelError::Truncated("v2 snapshot has no crc32 trailer".into())
+        })?;
+        let stated = u32::from_str_radix(stated, 16).map_err(|e| {
+            ModelError::Corrupt(format!("bad crc32 trailer {stated:?}: {e}"))
+        })?;
+        if stated != digest {
+            return Err(ModelError::Corrupt(format!(
+                "crc32 mismatch: trailer {stated:08x}, body {digest:08x}"
+            )));
+        }
+    }
+    let raw = parse_raw(&body[1..])?;
+    let net = model::build(raw)?;
+    Ok((net, SnapshotInfo { version, digest }))
+}
 
-    for line in lines {
+/// Parse body lines (header already consumed) into an unvalidated
+/// [`RawNet`]. Pure string work — no constructors, no asserts.
+fn parse_raw(lines: &[&str]) -> Result<RawNet, ModelError> {
+    let corrupt = |d: String| Err(ModelError::Corrupt(d));
+    let mut raw = RawNet { name: "unnamed".into(), ..Default::default() };
+    let mut tables: Vec<Option<Vec<f64>>> = Vec::new();
+    let mut saw_end = false;
+    for &line in lines {
         let mut it = line.split_whitespace();
         match it.next() {
             Some("name") => {
-                name = it.collect::<Vec<_>>().join(" ");
+                raw.name = it.collect::<Vec<_>>().join(" ");
             }
             Some("var") => {
-                let vname = it.next().context("var line missing name")?;
-                let card: usize = it
-                    .next()
-                    .context("var line missing cardinality")?
-                    .parse()
-                    .context("bad cardinality")?;
+                let vname = match it.next() {
+                    Some(n) => n,
+                    None => return corrupt("var line missing name".into()),
+                };
+                let card: usize = match it.next().map(str::parse) {
+                    Some(Ok(c)) => c,
+                    _ => {
+                        return corrupt(format!("var {vname}: bad cardinality"))
+                    }
+                };
                 let states: Vec<String> = it.map(String::from).collect();
-                if !states.is_empty() && states.len() != card {
-                    bail!("var {vname}: {} state names for cardinality {card}", states.len());
-                }
-                let mut v = Variable::new(vname, card);
-                v.states = states;
-                variables.push(v);
-                parents.push(Vec::new());
-                cpts.push(None);
+                raw.variables.push((vname.to_string(), card, states));
+                raw.parents.push(Vec::new());
+                tables.push(None);
             }
             Some("parents") => {
-                let v: usize = it.next().context("parents line missing index")?.parse()?;
-                if v >= variables.len() {
-                    bail!("parents line: variable index {v} out of range");
+                let v: usize = match it.next().map(str::parse) {
+                    Some(Ok(v)) => v,
+                    _ => return corrupt("parents line: bad index".into()),
+                };
+                if v >= raw.variables.len() {
+                    return corrupt(format!("parents line: index {v} out of range"));
                 }
-                let ps: Vec<usize> = it
-                    .map(|t| t.parse::<usize>().context("bad parent index"))
-                    .collect::<Result<_>>()?;
-                for &p in &ps {
-                    if p >= variables.len() {
-                        bail!("parent index {p} out of range");
+                let mut ps = Vec::new();
+                for tok in it {
+                    match tok.parse::<usize>() {
+                        Ok(p) => ps.push(p),
+                        Err(e) => {
+                            return corrupt(format!("bad parent index {tok:?}: {e}"))
+                        }
                     }
                 }
-                parents[v] = ps;
+                raw.parents[v] = ps;
             }
             Some("cpt") => {
-                let v: usize = it.next().context("cpt line missing index")?.parse()?;
-                if v >= variables.len() {
-                    bail!("cpt line: variable index {v} out of range");
+                let v: usize = match it.next().map(str::parse) {
+                    Some(Ok(v)) => v,
+                    _ => return corrupt("cpt line: bad index".into()),
+                };
+                if v >= raw.variables.len() {
+                    return corrupt(format!("cpt line: index {v} out of range"));
                 }
-                let vals: Vec<f64> = it
-                    .map(|t| t.parse::<f64>().context("bad probability"))
-                    .collect::<Result<_>>()?;
-                cpts[v] = Some(vals);
+                let mut vals = Vec::new();
+                for tok in it {
+                    match tok.parse::<f64>() {
+                        Ok(p) => vals.push(p),
+                        Err(e) => {
+                            return corrupt(format!("bad probability {tok:?}: {e}"))
+                        }
+                    }
+                }
+                tables[v] = Some(vals);
             }
             Some("end") => {
                 saw_end = true;
                 break;
             }
-            Some(other) => bail!("unknown fpgm directive: {other:?}"),
-            None => unreachable!(),
+            Some(other) => {
+                return corrupt(format!("unknown fpgm directive {other:?}"))
+            }
+            None => unreachable!("body lines are non-empty"),
         }
     }
     if !saw_end {
-        bail!("fpgm file missing 'end'");
+        return Err(ModelError::Truncated("fpgm input missing 'end'".into()));
     }
-
-    let n = variables.len();
-    let mut dag = Dag::new(n);
-    for (v, ps) in parents.iter().enumerate() {
-        for &p in ps {
-            dag.add_edge_unchecked(p, v);
-        }
-    }
-    if dag.topological_order().is_none() {
-        bail!("fpgm structure is cyclic");
-    }
-    let cpts: Vec<Cpt> = (0..n)
-        .map(|v| {
-            let table = cpts[v]
-                .take()
-                .with_context(|| format!("missing cpt for variable {v}"))?;
-            let ps = dag.parents(v).to_vec();
-            let pcards: Vec<usize> =
-                ps.iter().map(|&p| variables[p].cardinality).collect();
-            let expect: usize =
-                pcards.iter().product::<usize>() * variables[v].cardinality;
-            if table.len() != expect {
-                bail!("cpt for variable {v}: expected {expect} entries, got {}", table.len());
-            }
-            Ok(Cpt::new(v, ps, pcards, variables[v].cardinality, table))
+    raw.tables = tables
+        .into_iter()
+        .enumerate()
+        .map(|(v, t)| {
+            t.ok_or_else(|| {
+                ModelError::Corrupt(format!("missing cpt for variable {v}"))
+            })
         })
-        .collect::<Result<_>>()?;
-    Ok(BayesianNetwork::new(name, variables, dag, cpts))
+        .collect::<Result<_, _>>()?;
+    Ok(raw)
 }
 
-/// Write a network to a `.fpgm` file.
+/// Parse `.fpgm` text into a network (back-compat `anyhow` surface).
+pub fn from_str(text: &str) -> Result<BayesianNetwork> {
+    Ok(decode(text).map_err(anyhow::Error::from)?.0)
+}
+
+/// Write a network to a `.fpgm` file (v1 text, plain write — the
+/// Python-interop path). Crash-safe snapshots use [`save_atomic`].
 pub fn save(net: &BayesianNetwork, path: &std::path::Path) -> Result<()> {
     std::fs::write(path, to_string(net))
         .with_context(|| format!("writing {}", path.display()))
 }
 
-/// Load a network from a `.fpgm` file.
+/// Atomically write a v2 snapshot: temp file in the same directory,
+/// fsync, rename over `path`. A crash at any point leaves either the
+/// previous snapshot or a temp file the loader never looks at. The
+/// `truncate_model` fault site lives here: a `kill`/`drop` rule tears
+/// the payload in half (a simulated torn write), a `corrupt` rule flips
+/// one deterministic bit — both are caught by the CRC trailer on load.
+pub fn save_atomic(
+    net: &BayesianNetwork,
+    path: &std::path::Path,
+    faults: &FaultHook,
+) -> Result<SnapshotInfo> {
+    use std::io::Write;
+
+    let text = to_string_v2(net);
+    let digest = model::crc32(
+        text
+            .rsplit_once("crc32")
+            .map(|(body, _)| body)
+            .unwrap_or(&text)
+            .as_bytes(),
+    );
+    let mut bytes = text.into_bytes();
+    if let Some(f) = faults {
+        match f.decide(FaultSite::TruncateModel, None) {
+            FaultAction::Kill | FaultAction::Drop => {
+                bytes.truncate(bytes.len() / 2);
+            }
+            FaultAction::Corrupt => f.corrupt_bytes(&mut bytes),
+            other => {
+                if let Some(d) = other.sleep() {
+                    std::thread::sleep(d);
+                }
+            }
+        }
+    }
+    let tmp = path.with_file_name(format!(
+        "{}.tmp",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("snapshot.fpgm")
+    ));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    // Best-effort directory sync so the rename itself is durable.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(SnapshotInfo { version: 2, digest })
+}
+
+/// Load a network from a `.fpgm` file (v1 or v2, validated).
 pub fn load(path: &std::path::Path) -> Result<BayesianNetwork> {
+    Ok(load_snapshot(path)
+        .map_err(anyhow::Error::from)
+        .with_context(|| format!("loading {}", path.display()))?
+        .0)
+}
+
+/// Typed load: read, decode, validate. Callers branch on the
+/// [`ModelError`] variant to pick a recovery path.
+pub fn load_snapshot(
+    path: &std::path::Path,
+) -> Result<(BayesianNetwork, SnapshotInfo), ModelError> {
     let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    from_str(&text).with_context(|| format!("parsing {}", path.display()))
+        .map_err(|e| ModelError::Io(format!("reading {}: {e}", path.display())))?;
+    decode(&text)
 }
 
 #[cfg(test)]
@@ -182,14 +346,15 @@ mod tests {
     fn roundtrip_all_builtins() {
         for name in repository::BUILTIN_NAMES {
             let net = repository::by_name(name).unwrap();
-            let text = to_string(&net);
-            let back = from_str(&text).unwrap();
-            assert_eq!(back.name(), net.name());
-            assert_eq!(back.n_vars(), net.n_vars());
-            assert_eq!(back.dag().edges(), net.dag().edges());
-            for v in 0..net.n_vars() {
-                assert_eq!(back.cpt(v).table, net.cpt(v).table, "{name} var {v}");
-                assert_eq!(back.variable(v).states, net.variable(v).states);
+            for text in [to_string(&net), to_string_v2(&net)] {
+                let back = from_str(&text).unwrap();
+                assert_eq!(back.name(), net.name());
+                assert_eq!(back.n_vars(), net.n_vars());
+                assert_eq!(back.dag().edges(), net.dag().edges());
+                for v in 0..net.n_vars() {
+                    assert_eq!(back.cpt(v).table, net.cpt(v).table, "{name} var {v}");
+                    assert_eq!(back.variable(v).states, net.variable(v).states);
+                }
             }
         }
     }
@@ -209,12 +374,34 @@ mod tests {
     }
 
     #[test]
+    fn v2_crc_catches_damage() {
+        let net = repository::sprinkler();
+        let text = to_string_v2(&net);
+        let (_, info) = decode(&text).unwrap();
+        assert_eq!(info.version, 2);
+        // Flip one probability digit: body changes, trailer does not.
+        let damaged = text.replacen("0.", "1.", 1);
+        match decode(&damaged) {
+            Err(ModelError::Corrupt(_)) | Err(ModelError::Invalid(_)) => {}
+            other => panic!("damaged v2 decoded as {other:?}"),
+        }
+        // Drop the trailer: a torn write.
+        let torn = &text[..text.rfind("crc32").unwrap()];
+        assert!(matches!(decode(torn), Err(ModelError::Truncated(_))));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(from_str("").is_err());
-        assert!(from_str("fpgm 2\nend\n").is_err());
+        assert!(from_str("fpgm 3\nend\n").is_err());
         assert!(from_str("fpgm 1\nvar x 2\nend\n").is_err()); // missing cpt
         assert!(from_str("fpgm 1\nbogus\nend\n").is_err());
         assert!(from_str("fpgm 1\nvar x 2\ncpt 0 0.5 0.5\n").is_err()); // no end
+        // Construction-precondition garbage must error, not panic.
+        assert!(from_str("fpgm 1\nvar x 0\ncpt 0\nend\n").is_err()); // card 0
+        assert!(from_str("fpgm 1\nvar x 2\nparents 0 0\ncpt 0 0.5 0.5\nend\n").is_err()); // self loop
+        assert!(from_str("fpgm 1\nvar x 2\ncpt 0 NaN NaN\nend\n").is_err()); // NaN
+        assert!(from_str("fpgm 1\nvar x 2\ncpt 0 0.9 0.9\nend\n").is_err()); // bad row
     }
 
     #[test]
@@ -236,5 +423,37 @@ mod tests {
         text.push_str(&to_string(&net));
         let back = from_str(&text).unwrap();
         assert_eq!(back.n_vars(), 4);
+    }
+
+    #[test]
+    fn atomic_save_round_trips_and_faults_tear_it() {
+        use crate::faults::FaultPlan;
+
+        let dir = std::env::temp_dir().join("fastpgm_fpgm_atomic_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let net = repository::asia();
+
+        let clean = dir.join("clean.fpgm");
+        let info = save_atomic(&net, &clean, &None).unwrap();
+        let (back, loaded) = load_snapshot(&clean).unwrap();
+        assert_eq!(loaded, info);
+        assert_eq!(back.n_vars(), net.n_vars());
+        assert!(!clean.with_file_name("clean.fpgm.tmp").exists());
+
+        // A kill rule at truncate_model tears the write in half; the
+        // loader detects it as truncated/corrupt, never panics.
+        let torn = dir.join("torn.fpgm");
+        let faults =
+            Some(FaultPlan::parse("seed=5,kill=1.0@truncate_model").unwrap().arm(None));
+        save_atomic(&net, &torn, &faults).unwrap();
+        assert!(load_snapshot(&torn).is_err());
+
+        // A corrupt rule flips one bit; the CRC trailer catches it.
+        let flipped = dir.join("flipped.fpgm");
+        let faults =
+            Some(FaultPlan::parse("seed=5,corrupt=1.0@truncate_model").unwrap().arm(None));
+        save_atomic(&net, &flipped, &faults).unwrap();
+        assert!(load_snapshot(&flipped).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

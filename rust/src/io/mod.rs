@@ -2,7 +2,16 @@
 //! features): the native `.fpgm` text format (shared with the Python
 //! compile path — both sides of the AOT bridge parse it), the standard
 //! BIF format, and CSV datasets.
+//!
+//! All load paths are **total**: untrusted bytes go through
+//! [`model::validate_raw`] before any constructor that asserts, so a
+//! corrupted or truncated file is a typed [`model::ModelError`] — never
+//! a panic. Snapshots written by [`fpgm::save_atomic`] carry a CRC32
+//! trailer and land via temp-file + fsync + rename, so a crash mid-write
+//! leaves either the old snapshot or a detectable partial, never a
+//! silently half-written model.
 
 pub mod bif;
 pub mod csv;
 pub mod fpgm;
+pub mod model;

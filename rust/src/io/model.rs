@@ -1,0 +1,362 @@
+//! Model validation: the gate between untrusted bytes and a live
+//! [`BayesianNetwork`].
+//!
+//! The constructors in `network/` enforce their invariants with
+//! `assert!` — correct for programmer errors, fatal for file input: a
+//! zero-cardinality `var` line or a self-loop parent in a corrupted
+//! `.fpgm` file would panic the process before any error could be
+//! reported. This module provides the *total* path: parse into a
+//! [`RawNet`], [`validate_raw`] it (every construction precondition
+//! plus probability sanity), then [`build`] — which can no longer trip
+//! an assert. Freshly *learned* models pass the same bar via
+//! [`validate_network`] before the router will register them.
+//!
+//! Errors are typed ([`ModelError`]): `Truncated` (the bytes stop
+//! early — a torn write), `Corrupt` (structure or checksum damage),
+//! `Invalid` (well-formed bytes describing a bad model), `Io`. Callers
+//! branch on the variant to pick a recovery (e.g. fall back to the
+//! last-good snapshot) instead of string-matching messages.
+
+use std::fmt;
+
+use crate::core::Variable;
+use crate::graph::Dag;
+use crate::network::{BayesianNetwork, Cpt};
+
+/// Per-row CPT sum tolerance (matches `Cpt::validate`).
+pub const ROW_SUM_TOLERANCE: f64 = 1e-6;
+/// Upper bound on a single entry (matches `Cpt::validate`).
+pub const ENTRY_SLACK: f64 = 1e-9;
+/// Cardinality bound — far above any discrete BN in the repository, low
+/// enough that a corrupted count cannot drive a pathological allocation.
+pub const MAX_CARDINALITY: usize = 1 << 16;
+/// Arity (parent-count) bound per variable.
+pub const MAX_PARENTS: usize = 32;
+/// Bound on one CPT's entry count (size checks use checked arithmetic,
+/// so an overflowing product is caught, not wrapped).
+pub const MAX_TABLE_ENTRIES: usize = 1 << 26;
+
+/// Typed failure of loading or validating a model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelError {
+    /// The input stops before the format says it should (torn write).
+    Truncated(String),
+    /// The input is structurally damaged or fails its checksum.
+    Corrupt(String),
+    /// Well-formed input describing an invalid model (bad probabilities,
+    /// cycles, out-of-bounds cardinality/arity).
+    Invalid(String),
+    /// The underlying read/write failed.
+    Io(String),
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::Truncated(d) => write!(f, "model truncated: {d}"),
+            ModelError::Corrupt(d) => write!(f, "model corrupt: {d}"),
+            ModelError::Invalid(d) => write!(f, "model invalid: {d}"),
+            ModelError::Io(d) => write!(f, "model io error: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// A parsed-but-unvalidated network: exactly what the bytes said, no
+/// invariants assumed. `variables[i]` is `(name, cardinality, states)`;
+/// `parents[i]`/`tables[i]` align with it.
+#[derive(Clone, Debug, Default)]
+pub struct RawNet {
+    pub name: String,
+    pub variables: Vec<(String, usize, Vec<String>)>,
+    pub parents: Vec<Vec<usize>>,
+    pub tables: Vec<Vec<f64>>,
+}
+
+/// What a validation pass measured (also the registration-gate report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ValidationReport {
+    pub n_vars: usize,
+    pub n_entries: usize,
+    /// Worst |row sum - 1| seen across all CPT rows.
+    pub max_row_err: f64,
+}
+
+/// Check every construction precondition and probability invariant on a
+/// raw net. After `validate_raw(raw)?`, [`build`] cannot panic.
+pub fn validate_raw(raw: &RawNet) -> Result<ValidationReport, ModelError> {
+    let n = raw.variables.len();
+    let invalid = |d: String| Err(ModelError::Invalid(d));
+    if n == 0 {
+        return invalid("no variables".into());
+    }
+    if raw.parents.len() != n || raw.tables.len() != n {
+        return Err(ModelError::Corrupt(format!(
+            "{} parent lists / {} tables for {n} variables",
+            raw.parents.len(),
+            raw.tables.len()
+        )));
+    }
+    for (i, (name, card, states)) in raw.variables.iter().enumerate() {
+        if *card == 0 || *card > MAX_CARDINALITY {
+            return invalid(format!(
+                "variable {name:?} cardinality {card} outside 1..={MAX_CARDINALITY}"
+            ));
+        }
+        if !states.is_empty() && states.len() != *card {
+            return invalid(format!(
+                "variable {name:?}: {} state names for cardinality {card}",
+                states.len()
+            ));
+        }
+        if raw.variables[..i].iter().any(|(other, _, _)| other == name) {
+            return invalid(format!("duplicate variable name {name:?}"));
+        }
+    }
+    for (v, ps) in raw.parents.iter().enumerate() {
+        if ps.len() > MAX_PARENTS {
+            return invalid(format!(
+                "variable {v} has {} parents (max {MAX_PARENTS})",
+                ps.len()
+            ));
+        }
+        for &p in ps {
+            if p >= n {
+                return invalid(format!("variable {v}: parent index {p} out of range"));
+            }
+            if p == v {
+                return invalid(format!("variable {v} is its own parent"));
+            }
+        }
+        let mut sorted = ps.clone();
+        sorted.sort_unstable();
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            return invalid(format!("variable {v} has duplicate parents"));
+        }
+    }
+    // Acyclicity (Kahn) over the parent lists, before any Dag is built.
+    let mut indeg: Vec<usize> = raw.parents.iter().map(Vec::len).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (v, ps) in raw.parents.iter().enumerate() {
+        for &p in ps {
+            children[p].push(v);
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    let mut seen = 0usize;
+    while let Some(v) = queue.pop() {
+        seen += 1;
+        for &c in &children[v] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                queue.push(c);
+            }
+        }
+    }
+    if seen != n {
+        return invalid("structure is cyclic".into());
+    }
+    // Table shapes (checked arithmetic) and probability sanity.
+    let mut report = ValidationReport { n_vars: n, ..Default::default() };
+    for (v, table) in raw.tables.iter().enumerate() {
+        let card = raw.variables[v].1;
+        let mut expect = card;
+        for &p in &raw.parents[v] {
+            expect = match expect.checked_mul(raw.variables[p].1) {
+                Some(e) if e <= MAX_TABLE_ENTRIES => e,
+                _ => {
+                    return invalid(format!(
+                        "variable {v}: CPT size overflows {MAX_TABLE_ENTRIES}"
+                    ))
+                }
+            };
+        }
+        if table.len() != expect {
+            return invalid(format!(
+                "variable {v}: expected {expect} CPT entries, got {}",
+                table.len()
+            ));
+        }
+        report.n_entries += table.len();
+        for row in table.chunks(card) {
+            let mut sum = 0.0;
+            for &p in row {
+                if !p.is_finite() || !(0.0..=1.0 + ENTRY_SLACK).contains(&p) {
+                    return invalid(format!(
+                        "variable {v}: CPT entry {p} is not a probability"
+                    ));
+                }
+                sum += p;
+            }
+            let err = (sum - 1.0).abs();
+            if err > ROW_SUM_TOLERANCE {
+                return invalid(format!("variable {v}: CPT row sums to {sum}"));
+            }
+            report.max_row_err = report.max_row_err.max(err);
+        }
+    }
+    Ok(report)
+}
+
+/// Assemble a validated [`RawNet`] into a live network. Validates first;
+/// after that the constructor asserts are unreachable.
+pub fn build(raw: RawNet) -> Result<BayesianNetwork, ModelError> {
+    validate_raw(&raw)?;
+    let n = raw.variables.len();
+    let variables: Vec<Variable> = raw
+        .variables
+        .into_iter()
+        .map(|(name, card, states)| {
+            let mut v = Variable::new(name, card);
+            v.states = states;
+            v
+        })
+        .collect();
+    let mut dag = Dag::new(n);
+    for (v, ps) in raw.parents.iter().enumerate() {
+        for &p in ps {
+            dag.add_edge_unchecked(p, v);
+        }
+    }
+    let cpts: Vec<Cpt> = raw
+        .tables
+        .into_iter()
+        .enumerate()
+        .map(|(v, table)| {
+            let ps = dag.parents(v).to_vec();
+            let pcards: Vec<usize> =
+                ps.iter().map(|&p| variables[p].cardinality).collect();
+            Cpt::new(v, ps, pcards, variables[v].cardinality, table)
+        })
+        .collect();
+    Ok(BayesianNetwork::new(raw.name, variables, dag, cpts))
+}
+
+/// Validate an already-constructed network — the registration gate every
+/// freshly learned model passes before the router will serve it. The
+/// constructors guarantee most invariants; this re-checks the numeric
+/// ones (a degenerate learn could in principle emit NaN) and reports
+/// what it measured.
+pub fn validate_network(net: &BayesianNetwork) -> Result<ValidationReport, ModelError> {
+    let mut report =
+        ValidationReport { n_vars: net.n_vars(), ..Default::default() };
+    for v in 0..net.n_vars() {
+        let cpt = net.cpt(v);
+        report.n_entries += cpt.table.len();
+        if net.cardinality(v) > MAX_CARDINALITY {
+            return Err(ModelError::Invalid(format!(
+                "variable {v} cardinality {} outside bounds",
+                net.cardinality(v)
+            )));
+        }
+        for cfg in 0..cpt.n_parent_configs() {
+            let row = cpt.row(cfg);
+            let mut sum = 0.0;
+            for &p in row {
+                if !p.is_finite() || !(0.0..=1.0 + ENTRY_SLACK).contains(&p) {
+                    return Err(ModelError::Invalid(format!(
+                        "variable {v}: CPT entry {p} is not a probability"
+                    )));
+                }
+                sum += p;
+            }
+            let err = (sum - 1.0).abs();
+            if err > ROW_SUM_TOLERANCE {
+                return Err(ModelError::Invalid(format!(
+                    "variable {v}: CPT row {cfg} sums to {sum}"
+                )));
+            }
+            report.max_row_err = report.max_row_err.max(err);
+        }
+    }
+    Ok(report)
+}
+
+/// CRC32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) — the snapshot
+/// trailer digest. Bitwise (no table): snapshots are small and this
+/// keeps the implementation obviously correct and dependency-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in bytes {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::repository;
+
+    fn raw_two_node() -> RawNet {
+        RawNet {
+            name: "two".into(),
+            variables: vec![
+                ("a".into(), 2, vec![]),
+                ("b".into(), 2, vec![]),
+            ],
+            parents: vec![vec![], vec![0]],
+            tables: vec![vec![0.7, 0.3], vec![0.9, 0.1, 0.2, 0.8]],
+        }
+    }
+
+    #[test]
+    fn valid_raw_builds() {
+        let report = validate_raw(&raw_two_node()).unwrap();
+        assert_eq!(report.n_vars, 2);
+        assert_eq!(report.n_entries, 6);
+        assert!(report.max_row_err < 1e-12);
+        let net = build(raw_two_node()).unwrap();
+        assert_eq!(net.n_vars(), 2);
+        assert_eq!(net.parents(1), &[0]);
+    }
+
+    #[test]
+    fn rejects_every_construction_panic_path() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut RawNet)>)> = vec![
+            ("zero cardinality", Box::new(|r| r.variables[0].1 = 0)),
+            ("huge cardinality", Box::new(|r| r.variables[0].1 = MAX_CARDINALITY + 1)),
+            ("self parent", Box::new(|r| r.parents[1] = vec![1])),
+            ("dup parent", Box::new(|r| r.parents[1] = vec![0, 0])),
+            ("parent oob", Box::new(|r| r.parents[1] = vec![7])),
+            ("cycle", Box::new(|r| r.parents[0] = vec![1])),
+            ("wrong table size", Box::new(|r| {
+                r.tables[1].pop();
+            })),
+            ("nan entry", Box::new(|r| r.tables[0][0] = f64::NAN)),
+            ("inf entry", Box::new(|r| r.tables[0][0] = f64::INFINITY)),
+            ("negative entry", Box::new(|r| r.tables[0][0] = -0.1)),
+            ("bad row sum", Box::new(|r| r.tables[0] = vec![0.9, 0.9])),
+            ("dup name", Box::new(|r| r.variables[1].0 = "a".into())),
+            ("bad state count", Box::new(|r| r.variables[0].2 = vec!["x".into()])),
+        ];
+        for (label, mutate) in cases {
+            let mut raw = raw_two_node();
+            mutate(&mut raw);
+            assert!(build(raw).is_err(), "{label} accepted");
+        }
+    }
+
+    #[test]
+    fn validate_network_passes_builtins() {
+        for name in repository::BUILTIN_NAMES {
+            let net = repository::by_name(name).unwrap();
+            let report = validate_network(&net).unwrap();
+            assert_eq!(report.n_vars, net.n_vars());
+            assert!(report.max_row_err <= ROW_SUM_TOLERANCE, "{name}");
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789" under CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+}

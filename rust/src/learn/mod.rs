@@ -11,15 +11,31 @@
 //! ([`crate::coordinator::QueryRouter::register_learned`],
 //! `serve-query --learn-from`) without an `.fpgm` round-trip.
 
+//!
+//! ## Crash safety
+//!
+//! A pipeline built [`Pipeline::with_checkpoint`] writes every model
+//! that passes the validation gate ([`crate::io::model::validate_network`])
+//! to a **last-good snapshot** (atomic, checksummed `.fpgm` v2) before
+//! returning it — a learner that dies on the next run recovers from
+//! that snapshot instead of relearning. The learning-path fault sites
+//! (`slow_counts` at each counting sweep, `learn_kill` at each phase
+//! boundary, `truncate_model` inside the snapshot write) hang off
+//! [`Pipeline::with_faults`], so chaos plans replay deterministic
+//! mid-learn crashes through the same harness as the wire faults.
+
 use crate::core::Dataset;
 use crate::counts::{CountCache, CountCacheStats};
+use crate::faults::{FaultAction, FaultHook, FaultSite};
 use crate::graph::Dag;
 use crate::inference::exact::CompiledTree;
+use crate::io::{fpgm, model};
 use crate::network::BayesianNetwork;
 use crate::parameter::{mle_with_cache, MleOptions};
 use crate::structure::{
     hill_climb_with_cache, pc_stable_with_cache, HcOptions, PcOptions,
 };
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Which structure learner the pipeline runs.
@@ -53,6 +69,11 @@ impl StructureAlgo {
 pub struct Pipeline {
     pub structure: StructureAlgo,
     pub mle: MleOptions,
+    /// Last-good snapshot path: every validated result is written here
+    /// atomically (`.fpgm` v2) so a later crashed learn can recover.
+    pub checkpoint: Option<PathBuf>,
+    /// Chaos hook for the learning-path fault sites.
+    pub faults: FaultHook,
 }
 
 impl Pipeline {
@@ -72,14 +93,33 @@ impl Pipeline {
         self
     }
 
+    /// Checkpoint every validated result to `path` (atomic v2 snapshot).
+    pub fn with_checkpoint(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    /// Arm the learning-path fault sites.
+    pub fn with_faults(mut self, faults: FaultHook) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Run the pipeline: learn a structure, fit parameters over the same
     /// count cache, and compile the junction tree for serving. Fails
     /// when PC's CPDAG cannot be extended to a DAG (possible on small
     /// samples with conflicting colliders — callers wanting a fallback
     /// structure handle it themselves, see [`crate::classify`]).
     pub fn run(&self, data: &Dataset) -> anyhow::Result<LearnedModel> {
+        let chaos = |site: FaultSite| match &self.faults {
+            Some(f) => f.decide(site, None),
+            None => FaultAction::None,
+        };
         let cache = CountCache::new();
         let t0 = Instant::now();
+        if let Some(d) = chaos(FaultSite::SlowCounts).sleep() {
+            std::thread::sleep(d);
+        }
         let (dag, detail) = match &self.structure {
             StructureAlgo::Pc(opts) => {
                 let result = pc_stable_with_cache(data, opts, &cache);
@@ -104,14 +144,33 @@ impl Pipeline {
             }
         };
         let structure_elapsed = t0.elapsed();
+        if chaos(FaultSite::LearnKill) == FaultAction::Kill {
+            anyhow::bail!("learn_kill fault: killed mid-learn after structure phase");
+        }
 
         let t1 = Instant::now();
+        if let Some(d) = chaos(FaultSite::SlowCounts).sleep() {
+            std::thread::sleep(d);
+        }
         let net = mle_with_cache(data, &dag, &self.mle, &cache);
         let mle_elapsed = t1.elapsed();
+        if chaos(FaultSite::LearnKill) == FaultAction::Kill {
+            anyhow::bail!("learn_kill fault: killed mid-learn after parameter phase");
+        }
 
         let t2 = Instant::now();
         let compiled = CompiledTree::compile(&net);
         let compile_elapsed = t2.elapsed();
+
+        // Validation gate: no model leaves the pipeline (or reaches the
+        // checkpoint) without passing the same bar a loaded snapshot must.
+        model::validate_network(&net).map_err(anyhow::Error::from)?;
+
+        let mut snapshot_digest = None;
+        if let Some(path) = &self.checkpoint {
+            let info = fpgm::save_atomic(&net, path, &self.faults)?;
+            snapshot_digest = Some(info.digest);
+        }
 
         let report = LearnReport {
             algo: self.structure.label(),
@@ -123,6 +182,7 @@ impl Pipeline {
             mle_elapsed,
             compile_elapsed,
             counts: cache.stats(),
+            snapshot_digest,
         };
         Ok(LearnedModel { net, dag, compiled, report })
     }
@@ -162,6 +222,9 @@ pub struct LearnReport {
     /// Shared count-cache counters across both learning phases — the
     /// hit-rate observability the substrate exists for.
     pub counts: CountCacheStats,
+    /// CRC32 of the last-good snapshot this run wrote (checkpointing
+    /// pipelines only).
+    pub snapshot_digest: Option<u32>,
 }
 
 impl LearnReport {
@@ -189,6 +252,9 @@ impl LearnReport {
             self.counts.hit_rate(),
             self.counts.bytes,
         ));
+        if let Some(d) = self.snapshot_digest {
+            s.push_str(&format!(" snapshot_crc32={d:08x}"));
+        }
         s
     }
 
@@ -278,6 +344,66 @@ mod tests {
         assert!(model.report.moves > 0);
         let cal = model.compiled.calibrate(&Evidence::new());
         assert!((cal.posterior(0).iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn learn_kill_fault_aborts_and_checkpoint_recovers() {
+        use crate::faults::FaultPlan;
+        use crate::io::fpgm;
+
+        let truth = repository::sprinkler();
+        let mut rng = Pcg::seed_from(51);
+        let data = forward_sample_dataset(&truth, 6_000, &mut rng);
+        let dir = std::env::temp_dir().join("fastpgm_learn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = dir.join("lastgood.fpgm");
+
+        // Clean checkpointing run: snapshot lands, digest is reported.
+        let model = Pipeline::hc(HcOptions::default())
+            .with_checkpoint(&ckpt)
+            .run(&data)
+            .unwrap();
+        let digest = model.report.snapshot_digest.unwrap();
+        assert!(model.report.summary().contains("snapshot_crc32="));
+        let (back, info) = fpgm::load_snapshot(&ckpt).unwrap();
+        assert_eq!(info.digest, digest);
+        assert_eq!(back.n_vars(), truth.n_vars());
+
+        // A killed learn errors (typed, greppable) without touching the
+        // last-good snapshot.
+        let faults =
+            Some(FaultPlan::parse("seed=3,kill=1.0@learn_kill").unwrap().arm(None));
+        let err = Pipeline::hc(HcOptions::default())
+            .with_checkpoint(&ckpt)
+            .with_faults(faults)
+            .run(&data)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("learn_kill fault"));
+        let (_, info2) = fpgm::load_snapshot(&ckpt).unwrap();
+        assert_eq!(info2.digest, digest, "failed learn must not disturb last-good");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn slow_counts_fault_delays_but_preserves_result() {
+        use crate::faults::FaultPlan;
+
+        let truth = repository::sprinkler();
+        let mut rng = Pcg::seed_from(53);
+        let data = forward_sample_dataset(&truth, 4_000, &mut rng);
+        let clean = Pipeline::hc(HcOptions::default()).run(&data).unwrap();
+        let faults =
+            Some(FaultPlan::parse("seed=3,delay=1.0x5ms@slow_counts").unwrap().arm(None));
+        let slowed = Pipeline::hc(HcOptions::default())
+            .with_faults(faults)
+            .run(&data)
+            .unwrap();
+        assert_eq!(slowed.net.dag().edges(), clean.net.dag().edges());
+        for v in 0..truth.n_vars() {
+            for (a, b) in slowed.net.cpt(v).table.iter().zip(&clean.net.cpt(v).table) {
+                assert!((a - b).abs() < 1e-15);
+            }
+        }
     }
 
     #[test]

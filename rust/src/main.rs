@@ -26,7 +26,7 @@ use fastpgm::inference::exact::{
 };
 use fastpgm::inference::InferenceEngine;
 use fastpgm::io::{bif, csv, fpgm};
-use fastpgm::learn::Pipeline;
+use fastpgm::learn::{LearnedModel, Pipeline};
 use fastpgm::network::{repository, BayesianNetwork};
 use fastpgm::parameter::MleOptions;
 use fastpgm::rng::Pcg;
@@ -96,6 +96,13 @@ USAGE: fastpgm <subcommand> [flags]
            MLE + compile) and register it for serving directly — no
            .fpgm round-trip; [--learn-algo pc|hc] [--learn-alpha A]
            [--learn-name NAME (default: learned)]
+           [--learn-checkpoint model.fpgm] checkpoint the learned model
+           to a checksummed atomic snapshot; on restart (and on shard
+           respawn) the snapshot is recovered instead of relearning
+           [--learn-fresh] ignore an existing snapshot and relearn
+           [--learn-permissive] quarantine malformed CSV rows instead
+           of refusing the file (exact counts reported; zero usable
+           rows still refuses)
            [--fabric N] serve through N shard processes over the
            versioned binary wire protocol (docs/WIRE_PROTOCOL.md):
            the frontend routes by consistent hashing on the evidence
@@ -591,10 +598,11 @@ fn drive_clients(
 /// with a sampler name every query goes through that engine.
 fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     use fastpgm::serving::{
-        schedule_digest, wire, ApproxConfig, ApproxOptions, Collector, EngineChoice,
-        FabricConfig, FaultPlan, Frontend, KernelMode, ModelSpec, ObsConfig, ObsLevel,
-        ProcessLauncher, QueryEngineConfig, QueryRouter, Registry, RoutingPolicy,
-        Sample, SamplerKind, ShardConfig, ShardWorker, StatsServer, TraceLog,
+        register_gated, schedule_digest, wire, ApproxConfig, ApproxOptions, Collector,
+        EngineChoice, FabricConfig, FaultPlan, Frontend, IngestOptions, KernelMode,
+        ModelSpec, ObsConfig, ObsLevel, ProcessLauncher, QueryEngineConfig,
+        QueryRouter, Registry, RoutingPolicy, Sample, SamplerKind, ServingError,
+        ShardConfig, ShardWorker, StatsServer, TraceLog, DEFAULT_SPOT_CHECKS,
         SHARD_READY_PREFIX,
     };
     use std::sync::Arc;
@@ -717,19 +725,110 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
         );
         models.push((name.to_string(), net));
     }
+    // Crash-safe learning path (docs/ROBUSTNESS.md, "Model lifecycle"):
+    // recover from the last-good checksummed snapshot when one is
+    // loadable (restart and shard respawn skip the relearn), otherwise
+    // ingest → learn → validate → snapshot. Every failure on this path
+    // is a typed `ServingError::Registration` and a nonzero exit — never
+    // a panic, never a half-registered router.
+    let mut learned_entry: Option<(String, LearnedModel)> = None;
     if let Some(csv_path) = args.flag("learn-from") {
         let name = args.flag_or("learn-name", "learned").to_string();
-        let learn_data = csv::load(Path::new(csv_path), None)?;
-        let pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha");
-        let model = pipeline.run(&learn_data)?;
-        println!("learned {name} from {csv_path}: {}", model.report.summary());
-        model.report.publish(Registry::global());
+        let checkpoint = args.flag("learn-checkpoint").map(PathBuf::from);
+        let registration = |msg: String| {
+            anyhow::Error::from(ServingError::Registration(msg))
+        };
+        let mut recovered: Option<BayesianNetwork> = None;
+        if !args.switch("learn-fresh") {
+            if let Some(ckpt) = &checkpoint {
+                match fpgm::load_snapshot(ckpt) {
+                    Ok((net, info)) => {
+                        println!(
+                            "RECOVERY from={} digest={:08x}",
+                            ckpt.display(),
+                            info.digest
+                        );
+                        recovered = Some(net);
+                    }
+                    Err(e) if ckpt.exists() => eprintln!(
+                        "snapshot {} unusable ({e}); relearning from {csv_path}",
+                        ckpt.display()
+                    ),
+                    Err(_) => {}
+                }
+            }
+        }
+        let net = match recovered {
+            Some(net) => net,
+            None => {
+                let learn_faults = fault_plan.as_ref().map(|p| p.arm(None));
+                let opts = if args.switch("learn-permissive") {
+                    IngestOptions::permissive()
+                } else {
+                    IngestOptions::strict()
+                };
+                let (learn_data, ingest) =
+                    csv::load_ingest(Path::new(csv_path), None, opts, &learn_faults)
+                        .map_err(|e| {
+                            registration(format!("--learn-from {csv_path}: {e:#}"))
+                        })?;
+                println!("LEARN_INGEST {}", ingest.summary());
+                let mut pipeline = pipeline_from_flags(args, "learn-algo", "learn-alpha")
+                    .with_faults(learn_faults);
+                if let Some(ckpt) = &checkpoint {
+                    pipeline = pipeline.with_checkpoint(ckpt);
+                }
+                match pipeline.run(&learn_data) {
+                    Ok(model) => {
+                        println!(
+                            "learned {name} from {csv_path}: {}",
+                            model.report.summary()
+                        );
+                        if let (Some(ckpt), Some(digest)) =
+                            (&checkpoint, model.report.snapshot_digest)
+                        {
+                            println!(
+                                "SNAPSHOT path={} digest={digest:08x}",
+                                ckpt.display()
+                            );
+                        }
+                        model.report.publish(Registry::global());
+                        let net = model.net.clone();
+                        learned_entry = Some((name.clone(), model));
+                        net
+                    }
+                    Err(e) => {
+                        // The learn died mid-flight (chaos, bad data):
+                        // serve the last-good snapshot when one loads.
+                        let fallback = checkpoint.as_ref().and_then(|ckpt| {
+                            fpgm::load_snapshot(ckpt).ok().map(|(net, info)| {
+                                eprintln!(
+                                    "learn failed ({e:#}); serving last-good snapshot"
+                                );
+                                println!(
+                                    "RECOVERY from={} digest={:08x}",
+                                    ckpt.display(),
+                                    info.digest
+                                );
+                                net
+                            })
+                        });
+                        fallback.ok_or_else(|| {
+                            registration(format!(
+                                "--learn-from {csv_path} failed with no usable \
+                                 snapshot: {e:#}"
+                            ))
+                        })?
+                    }
+                }
+            }
+        };
         specs.push(
-            ModelSpec::new(name.clone(), model.net.clone())
+            ModelSpec::new(name.clone(), net.clone())
                 .with_engine(engine_cfg)
                 .with_approx(approx.clone()),
         );
-        models.push((name, model.net));
+        models.push((name, net));
     }
     anyhow::ensure!(!models.is_empty(), "--nets resolved to no networks");
 
@@ -804,6 +903,7 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             "learn-algo",
             "learn-alpha",
             "learn-name",
+            "learn-checkpoint",
             "trace-log",
             "fault-plan",
         ] {
@@ -812,6 +912,12 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
                 pass.push(v.to_string());
             }
         }
+        if args.switch("learn-permissive") {
+            pass.push("--learn-permissive".to_string());
+        }
+        // --learn-fresh deliberately does NOT pass through: the frontend
+        // just learned and snapshotted, so (re)spawned shards recover
+        // from that digest-verified snapshot instead of relearning.
         let launcher =
             ProcessLauncher { exe: std::env::current_exe()?, args: pass };
         let mut fabric_config = FabricConfig::new()
@@ -913,8 +1019,14 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     }
 
     // In-process shape: one QueryRouter registered from the same specs.
+    // A freshly learned model goes through the gated-rollout path
+    // (validation gate + shadow spot-check + drain-on-replace) instead
+    // of plain registration.
     let mut router = QueryRouter::with_obs(threads, obs.clone());
     for spec in &specs {
+        if learned_entry.as_ref().is_some_and(|(n, _)| n == spec.name.as_str()) {
+            continue;
+        }
         router.register_with_approx(
             spec.name.as_str(),
             &spec.net,
@@ -922,6 +1034,22 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
             spec.batcher.clone(),
             spec.approx.clone(),
         );
+    }
+    if let Some((name, model)) = &learned_entry {
+        let spec = specs
+            .iter()
+            .find(|s| s.name == *name)
+            .expect("learned spec was pushed above");
+        let gate = register_gated(
+            &mut router,
+            name,
+            model,
+            spec.engine,
+            spec.batcher.clone(),
+            spec.approx.clone(),
+            DEFAULT_SPOT_CHECKS,
+        )?;
+        println!("{}", gate.summary(name));
     }
     let router = Arc::new(router);
     let router_collector: Arc<dyn Collector> = Arc::clone(&router);

@@ -71,10 +71,23 @@ pub use crate::coordinator::{
 // Resilience: breakers, backoff, retry budgets (`docs/ROBUSTNESS.md`).
 pub use crate::coordinator::{
     Admit, Backoff, BreakerConfig, BreakerState, CircuitBreaker, RetryBudget,
+    ShardedRetryBudget,
 };
 
 // Deterministic fault injection for chaos tests and `--fault-plan`.
 pub use crate::faults::{
     schedule_digest, FaultAction, FaultEvent, FaultHook, FaultKind, FaultPlan,
     FaultRule, FaultSite, Faults,
+};
+
+// Crash-safe model lifecycle: checksummed snapshots, total (panic-free)
+// decoders, validation gates, quarantining ingestion, and gated rollout
+// (`docs/ROBUSTNESS.md`, "Model lifecycle").
+pub use crate::coordinator::{
+    register_gated, shadow_compare, GateReport, ShadowReport, DEFAULT_SPOT_CHECKS,
+};
+pub use crate::io::csv::{IngestOptions, IngestReport};
+pub use crate::io::fpgm::SnapshotInfo;
+pub use crate::io::model::{
+    validate_network, validate_raw, ModelError, RawNet, ValidationReport,
 };

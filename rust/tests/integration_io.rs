@@ -1,9 +1,14 @@
 //! Format-transformation integration: fpgm/BIF/CSV round-trips on random
-//! networks, cross-format equivalence, file-system paths.
+//! networks, cross-format equivalence, file-system paths, and corruption
+//! sweeps — no damaged input may ever panic or hang a decoder.
 
 use fastpgm::core::Evidence;
+use fastpgm::io::csv::IngestOptions;
+use fastpgm::io::model::validate_network;
 use fastpgm::io::{bif, csv, fpgm};
+use fastpgm::network::repository;
 use fastpgm::network::synthetic::SyntheticSpec;
+use fastpgm::network::BayesianNetwork;
 use fastpgm::rng::Pcg;
 use fastpgm::sampling::forward_sample_dataset;
 use fastpgm::testkit::{gen_network, property};
@@ -80,6 +85,161 @@ fn file_roundtrips() {
         assert_eq!(back.column(v), ds.column(v));
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+fn semantically_equal(a: &BayesianNetwork, b: &BayesianNetwork) -> bool {
+    a.n_vars() == b.n_vars()
+        && a.dag().edges() == b.dag().edges()
+        && (0..a.n_vars()).all(|v| {
+            a.cpt(v).table.len() == b.cpt(v).table.len()
+                && a.cpt(v)
+                    .table
+                    .iter()
+                    .zip(&b.cpt(v).table)
+                    .all(|(x, y)| (x - y).abs() < 1e-12)
+        })
+}
+
+/// Single-byte corruption sweep over the v2 snapshot format: flip one
+/// bit at every byte position. The decoder must never panic, and — the
+/// CRC trailer's whole job — whenever it still answers `Ok`, the result
+/// must be semantically identical to the original (the only survivable
+/// flips land in trailing whitespace the canonical body excludes).
+#[test]
+fn fpgm_v2_bit_flip_sweep_never_panics_and_crc_catches_changes() {
+    let net = repository::sprinkler();
+    let text = fpgm::to_string_v2(&net);
+    let bytes = text.as_bytes();
+    for pos in 0..bytes.len() {
+        let mut damaged = bytes.to_vec();
+        damaged[pos] ^= 1 << (pos % 8);
+        // Invalid UTF-8 is the file loader's problem (read_to_string
+        // errors into ModelError::Io); the decoder sees only strings.
+        let Ok(s) = String::from_utf8(damaged) else { continue };
+        if let Ok((back, info)) = fpgm::decode(&s) {
+            assert!(
+                semantically_equal(&net, &back),
+                "flip at byte {pos} changed the model but passed the CRC \
+                 (digest {:08x})",
+                info.digest
+            );
+        }
+    }
+}
+
+/// The same sweep over the legacy v1 text (no trailer): without a digest
+/// some flips legitimately survive, but the decoder must never panic and
+/// anything it accepts must still be a fully valid network.
+#[test]
+fn fpgm_v1_bit_flip_sweep_never_panics_and_only_yields_valid_models() {
+    let net = repository::sprinkler();
+    let text = fpgm::to_string(&net);
+    let bytes = text.as_bytes();
+    for pos in 0..bytes.len() {
+        let mut damaged = bytes.to_vec();
+        damaged[pos] ^= 1 << (pos % 8);
+        let Ok(s) = String::from_utf8(damaged) else { continue };
+        if let Ok((back, _)) = fpgm::decode(&s) {
+            validate_network(&back).unwrap_or_else(|e| {
+                panic!("flip at byte {pos} produced an invalid accepted model: {e}")
+            });
+        }
+    }
+}
+
+/// Torn-write sweep: every prefix of both formats must decode to a typed
+/// error (or, for v1 prefixes that happen to end cleanly, a valid model)
+/// — never a panic. The v2 trailer makes any real truncation detectable.
+#[test]
+fn fpgm_truncation_sweep_never_panics() {
+    let net = repository::asia();
+    for text in [fpgm::to_string(&net), fpgm::to_string_v2(&net)] {
+        for cut in 0..text.len() {
+            match fpgm::decode(&text[..cut]) {
+                Ok((back, _)) => {
+                    validate_network(&back).expect("accepted prefix must be valid");
+                }
+                Err(e) => {
+                    // Typed, printable, no panic.
+                    let _ = e.to_string();
+                }
+            }
+        }
+        // A v2 text cut anywhere before the trailer is always an error.
+        if text.contains("crc32") {
+            let body_end = text.rfind("crc32").unwrap();
+            for cut in (1..body_end).step_by(7) {
+                assert!(
+                    fpgm::decode(&text[..cut]).is_err(),
+                    "v2 prefix of {cut} bytes lost the trailer but decoded"
+                );
+            }
+        }
+    }
+}
+
+/// CSV corruption sweep: flipped bytes may change values or break rows,
+/// but ingestion (strict and permissive) must never panic or hang, and
+/// permissive accounting must stay exact.
+#[test]
+fn csv_bit_flip_sweep_never_panics() {
+    let net = repository::sprinkler();
+    let mut rng = Pcg::seed_from(9);
+    let ds = forward_sample_dataset(&net, 60, &mut rng);
+    let text = csv::to_string(&ds);
+    let bytes = text.as_bytes();
+    for pos in 0..bytes.len() {
+        let mut damaged = bytes.to_vec();
+        damaged[pos] ^= 1 << (pos % 8);
+        let Ok(s) = String::from_utf8(damaged) else { continue };
+        let _ = csv::from_str(&s, None);
+        if let Ok((kept, report)) =
+            csv::ingest(&s, None, IngestOptions::permissive(), &None)
+        {
+            assert_eq!(
+                report.rows_kept + report.rows_quarantined,
+                report.rows_total,
+                "accounting drifted at flip {pos}"
+            );
+            assert_eq!(kept.n_rows(), report.rows_kept);
+        }
+    }
+}
+
+/// Property test: however many malformed rows are injected wherever,
+/// permissive ingestion quarantines exactly those rows and the
+/// accounting identity `total = kept + quarantined` always holds.
+#[test]
+fn csv_quarantine_accounting_property() {
+    property("csv quarantine accounting", 303, 25, |rng| {
+        let net = gen_network(rng, 6);
+        let n_rows = 40 + (rng.next_u64() % 60) as usize;
+        let mut ds_rng = Pcg::seed_from(rng.next_u64());
+        let ds = forward_sample_dataset(&net, n_rows, &mut ds_rng);
+        let clean = csv::to_string(&ds);
+        let mut lines: Vec<String> = clean.lines().map(String::from).collect();
+        let n_bad = 1 + (rng.next_u64() % 8) as usize;
+        for _ in 0..n_bad {
+            // Insert after the header, anywhere among the data rows.
+            let at = 1 + (rng.next_u64() as usize) % lines.len().max(1);
+            let at = at.min(lines.len());
+            lines.insert(at, "mangled,row".to_string());
+        }
+        let text = lines.join("\n");
+        let (kept, report) =
+            csv::ingest(&text, None, IngestOptions::permissive(), &None)
+                .expect("clean rows remain usable");
+        assert_eq!(report.rows_total, n_rows + n_bad);
+        assert_eq!(report.rows_quarantined, n_bad);
+        assert_eq!(report.rows_kept, n_rows);
+        assert_eq!(kept.n_rows(), n_rows);
+        assert_eq!(
+            report.rows_kept + report.rows_quarantined,
+            report.rows_total
+        );
+        // Strict mode refuses the same text outright.
+        assert!(csv::from_str(&text, None).is_err());
+    });
 }
 
 #[test]

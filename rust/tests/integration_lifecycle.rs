@@ -1,0 +1,196 @@
+//! Crash-safe model lifecycle, end to end (docs/ROBUSTNESS.md, "Model
+//! lifecycle"): learning-path chaos with checkpoint recovery, corrupt
+//! snapshots falling back to a relearn, and a fabric that keeps serving
+//! a validated learned model through the whole story without dropping a
+//! single query. Everything is seeded — reruns replay byte-identically.
+
+use fastpgm::core::Evidence;
+use fastpgm::inference::exact::JunctionTree;
+use fastpgm::inference::InferenceEngine;
+use fastpgm::io::csv::IngestOptions;
+use fastpgm::io::model::validate_network;
+use fastpgm::io::{csv, fpgm};
+use fastpgm::learn::{HcOptions, Pipeline};
+use fastpgm::network::{repository, BayesianNetwork};
+use fastpgm::rng::Pcg;
+use fastpgm::sampling::forward_sample_dataset;
+use fastpgm::serving::{
+    FabricConfig, FaultKind, FaultPlan, FaultSite, Frontend, ModelSpec,
+    QueryRequest, ThreadLauncher,
+};
+use std::path::PathBuf;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fastpgm_lifecycle_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn asia_dataset(rows: usize) -> fastpgm::core::Dataset {
+    let mut rng = Pcg::seed_from(4242);
+    forward_sample_dataset(&repository::asia(), rows, &mut rng)
+}
+
+fn tables_match(a: &BayesianNetwork, b: &BayesianNetwork, tol: f64) {
+    assert_eq!(a.dag().edges(), b.dag().edges(), "structures diverged");
+    for v in 0..a.n_vars() {
+        for (x, y) in a.cpt(v).table.iter().zip(&b.cpt(v).table) {
+            assert!((x - y).abs() < tol, "cpt[{v}] diverged: {x} vs {y}");
+        }
+    }
+}
+
+/// The tentpole invariant: a learn killed mid-flight leaves the
+/// last-good snapshot untouched, and recovering from that snapshot is
+/// 1e-12-identical — parameters *and* posteriors — to the uninterrupted
+/// run that produced it.
+#[test]
+fn kill_mid_learn_recovers_from_snapshot_with_parity() {
+    let dir = temp_dir("kill");
+    let ckpt = dir.join("model.fpgm");
+    let data = asia_dataset(4_000);
+
+    // Uninterrupted reference run (no checkpoint).
+    let reference = Pipeline::hc(HcOptions::default()).run(&data).unwrap();
+
+    // Clean checkpointed run: validated, snapshotted atomically.
+    let clean = Pipeline::hc(HcOptions::default())
+        .with_checkpoint(&ckpt)
+        .run(&data)
+        .unwrap();
+    let digest = clean.report.snapshot_digest.expect("checkpoint wrote a digest");
+
+    // Chaos run: learn_kill fires with probability 1 — the pipeline dies
+    // after the structure phase, before any snapshot write.
+    let plan = FaultPlan::seeded(7).with(FaultKind::Kill, 1.0, FaultSite::LearnKill);
+    let err = Pipeline::hc(HcOptions::default())
+        .with_checkpoint(&ckpt)
+        .with_faults(Some(plan.arm(None)))
+        .run(&data)
+        .expect_err("learn_kill must abort the pipeline");
+    assert!(err.to_string().contains("learn_kill"), "unexpected error: {err:#}");
+
+    // The last-good snapshot survived the crash, digest-verified.
+    let (recovered, info) = fpgm::load_snapshot(&ckpt).expect("snapshot intact");
+    assert_eq!(info.digest, digest, "crash must not touch the last-good file");
+    assert_eq!(info.version, 2);
+    validate_network(&recovered).expect("recovered model passes the gate");
+
+    // Parity: recovered == uninterrupted to 1e-12, parameters and
+    // posteriors alike.
+    tables_match(&reference.net, &recovered, 1e-12);
+    let ev = Evidence::new().with(0, 1);
+    let p_ref = JunctionTree::build(&reference.net).engine().query_all(&ev);
+    let p_rec = JunctionTree::build(&recovered).engine().query_all(&ev);
+    for (a, b) in p_ref.iter().zip(&p_rec) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-12, "posterior parity broke: {x} vs {y}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A corrupt snapshot is detected (CRC), refused with a typed error, and
+/// the lifecycle falls back to a relearn that rewrites a good snapshot.
+#[test]
+fn corrupt_snapshot_falls_back_to_relearn() {
+    let dir = temp_dir("corrupt");
+    let ckpt = dir.join("model.fpgm");
+    let data = asia_dataset(2_000);
+
+    Pipeline::hc(HcOptions::default())
+        .with_checkpoint(&ckpt)
+        .run(&data)
+        .unwrap();
+
+    // Flip one bit in the middle of the file body.
+    let mut bytes = std::fs::read(&ckpt).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&ckpt, &bytes).unwrap();
+
+    let err = fpgm::load_snapshot(&ckpt).expect_err("CRC must catch the flip");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("corrupt") || msg.contains("truncated") || msg.contains("invalid"),
+        "untyped refusal: {msg}"
+    );
+
+    // Fallback: the serve path relearns and re-snapshots atomically.
+    let relearned = Pipeline::hc(HcOptions::default())
+        .with_checkpoint(&ckpt)
+        .run(&data)
+        .unwrap();
+    let (back, info) = fpgm::load_snapshot(&ckpt).expect("rewritten snapshot loads");
+    assert_eq!(Some(info.digest), relearned.report.snapshot_digest);
+    tables_match(&relearned.net, &back, 1e-12);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The full seeded lifecycle under chaos: corrupt_row faults quarantine
+/// ingest rows (exact accounting), slow_counts delays the learn without
+/// changing its result, the validated model snapshots, and a two-shard
+/// fabric serves the recovered snapshot at zero dropped queries.
+#[test]
+fn lifecycle_chaos_ends_with_fabric_serving_at_zero_drops() {
+    let dir = temp_dir("fabric");
+    let ckpt = dir.join("model.fpgm");
+    let data = asia_dataset(1_200);
+    let text = csv::to_string(&data);
+
+    let plan = FaultPlan::seeded(42)
+        .with(FaultKind::Corrupt, 0.2, FaultSite::CorruptRow)
+        .with(FaultKind::Delay, 1.0, FaultSite::SlowCounts);
+    let faults = Some(plan.arm(None));
+
+    // Validated ingestion under corrupt_row chaos: exact accounting,
+    // quarantine equals injected faults, plenty of rows survive.
+    let (kept, report) =
+        csv::ingest(&text, None, IngestOptions::permissive(), &faults).unwrap();
+    assert_eq!(report.rows_total, 1_200);
+    assert_eq!(report.rows_kept + report.rows_quarantined, report.rows_total);
+    assert_eq!(report.rows_quarantined as u64, report.corrupt_row_faults);
+    assert!(report.corrupt_row_faults > 100, "chaos plan never fired");
+    assert!(report.rows_kept > 800, "quarantine ate the dataset");
+
+    // Learn under slow_counts chaos, checkpointing the validated result.
+    let model = Pipeline::hc(HcOptions::default())
+        .with_checkpoint(&ckpt)
+        .with_faults(faults)
+        .run(&kept)
+        .unwrap();
+    let digest = model.report.snapshot_digest.expect("snapshot written");
+
+    // Recover from the snapshot — what a shard respawn does — and serve
+    // it through a two-shard fabric.
+    let (net, info) = fpgm::load_snapshot(&ckpt).expect("snapshot loads");
+    assert_eq!(info.digest, digest);
+    tables_match(&model.net, &net, 1e-12);
+
+    let specs = vec![ModelSpec::new("learned", net.clone())];
+    let frontend = Frontend::new(
+        specs.clone(),
+        Box::new(ThreadLauncher::new(specs)),
+        FabricConfig::new().with_shards(2),
+    )
+    .expect("fabric starts");
+    let n_queries = 64;
+    for i in 0..n_queries {
+        let ev = if i % 2 == 0 {
+            Evidence::new()
+        } else {
+            Evidence::new().with((i + 1) % net.n_vars(), i % 2)
+        };
+        let reply = frontend
+            .query_routed("learned", QueryRequest::marginal(i % net.n_vars(), ev))
+            .expect("no query is ever dropped");
+        let p = reply.into_marginal().expect("marginal reply");
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+    let m = frontend.metrics();
+    assert_eq!(m.queries, n_queries, "every query accounted for");
+    assert_eq!(m.deadline_exceeded, 0);
+    frontend.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
