@@ -12,10 +12,14 @@
 //!   fused path is asserted to allocate **zero per message** (its only
 //!   steady-state allocation is the per-calibration evidence signature
 //!   clone), and the engine's arena counter is asserted not to move.
+//! * **batched calibration** — B sequential fused calibrations vs one
+//!   `calibrate_batch` stacked pass at B ∈ {4, 16, 64}, plus a
+//!   SIMD-padding on/off ablation; the B=16 alarm_like row gates CI at
+//!   ≥ 1.3× over fused-sequential.
 //!
 //! Fused and classic answers are cross-checked at 1e-12 before anything
-//! is timed. `FASTPGM_BENCH_QUICK=1` shrinks sample counts for CI smoke
-//! runs.
+//! is timed (batched lanes likewise against per-evidence fused).
+//! `FASTPGM_BENCH_QUICK=1` shrinks sample counts for CI smoke runs.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
@@ -268,6 +272,135 @@ fn main() {
             ("fused_allocs_per_message", Json::num(per_msg(per_cal[0]))),
             ("classic_allocs_per_message", Json::num(per_msg(per_cal[1]))),
         ]));
+
+        // Batched stacked-pass calibration: B sequential fused
+        // calibrations vs ONE `calibrate_batch` pass over SoA-stacked
+        // clique tables, plus the SIMD-padding on/off ablation at the
+        // engine level. Bit-level parity is asserted before timing; the
+        // B=16 alarm_like row carries the >= 1.3x CI gate.
+        let batched_ct = CompiledTree::compile(&net).with_kernel(KernelMode::Batched);
+        for batch in [4usize, 16, 64] {
+            // Distinct positive-probability evidence sets, one per lane
+            // (each drawn from its own forward sample).
+            let evs: Vec<Evidence> = (0..batch)
+                .map(|i| {
+                    let mut r = Pcg::seed_from(0xB47C + (net_idx * 1000 + i) as u64);
+                    let a = fastpgm::sampling::forward_sample(&net, &mut r);
+                    r.choose_k(net.n_vars(), 2)
+                        .into_iter()
+                        .map(|v| (v, a.get(v)))
+                        .collect()
+                })
+                .collect();
+
+            // Parity gate before timing: every batched lane vs its
+            // per-evidence fused calibration.
+            let mut bdev: f64 = 0.0;
+            for (lane, ev) in batched_ct.calibrate_batch(&evs).iter().zip(&evs) {
+                let seq = fused_ct.calibrate(ev);
+                bdev = bdev.max(
+                    (lane.evidence_probability() - seq.evidence_probability()).abs(),
+                );
+                for (a, b) in lane.posterior_all().iter().zip(&seq.posterior_all()) {
+                    for (x, y) in a.iter().zip(b) {
+                        bdev = bdev.max((x - y).abs());
+                    }
+                }
+            }
+            assert!(
+                bdev <= 1e-12,
+                "{name} B={batch}: batched deviates from fused by {bdev:.2e}"
+            );
+
+            let seq = bench(
+                format!("{name} fused x{batch} sequential"),
+                WARMUP,
+                samples,
+                || {
+                    let mut s = 0.0;
+                    for ev in &evs {
+                        s += fused_ct.calibrate(ev).evidence_probability();
+                    }
+                    s
+                },
+            );
+            let one = bench(format!("{name} batched B={batch}"), WARMUP, samples, || {
+                batched_ct
+                    .calibrate_batch(&evs)
+                    .iter()
+                    .map(|l| l.evidence_probability())
+                    .sum::<f64>()
+            });
+            report(
+                &format!("{name} batched calibration (B={batch})"),
+                &[seq.clone(), one.clone()],
+            );
+            let speedup =
+                seq.median().as_secs_f64() / one.median().as_secs_f64().max(1e-12);
+            if name == "alarm_like" && batch == 16 {
+                assert!(
+                    speedup >= 1.3,
+                    "{name} B=16: batched speedup {speedup:.2}x below the 1.3x gate"
+                );
+            }
+
+            // SIMD-padding ablation at the engine level (only B=4 is not
+            // already a multiple of the register width).
+            let mut pad_on = jt.engine();
+            pad_on.kernel = KernelMode::Batched;
+            let mut pad_off = jt.engine();
+            pad_off.kernel = KernelMode::Batched;
+            pad_off.batch_pad = false;
+            let padded = bench(
+                format!("{name} batched B={batch} padded"),
+                WARMUP,
+                samples,
+                || {
+                    pad_on
+                        .calibrate_batch(&evs)
+                        .iter()
+                        .map(|l| l.evidence_prob)
+                        .sum::<f64>()
+                },
+            );
+            let unpadded = bench(
+                format!("{name} batched B={batch} unpadded"),
+                WARMUP,
+                samples,
+                || {
+                    pad_off
+                        .calibrate_batch(&evs)
+                        .iter()
+                        .map(|l| l.evidence_prob)
+                        .sum::<f64>()
+                },
+            );
+            scenarios.push(Json::obj([
+                ("net", Json::str(name)),
+                ("mode", Json::str("batched")),
+                ("kernel", Json::str(KernelMode::Batched.as_str())),
+                ("batch", Json::num(batch as f64)),
+                ("fused_seq_median_us", Json::num(seq.median().as_secs_f64() * 1e6)),
+                ("batched_median_us", Json::num(one.median().as_secs_f64() * 1e6)),
+                ("batched_speedup", Json::num(speedup)),
+                (
+                    "padded_median_us",
+                    Json::num(padded.median().as_secs_f64() * 1e6),
+                ),
+                (
+                    "unpadded_median_us",
+                    Json::num(unpadded.median().as_secs_f64() * 1e6),
+                ),
+                (
+                    "padded_speedup_vs_unpadded",
+                    Json::num(
+                        unpadded.median().as_secs_f64()
+                            / padded.median().as_secs_f64().max(1e-12),
+                    ),
+                ),
+                ("max_abs_dev", Json::num(bdev)),
+            ]));
+        }
     }
 
     let out = Json::obj([

@@ -34,7 +34,7 @@ use crate::coordinator::{
 };
 use crate::core::Evidence;
 use crate::inference::engine::SamplerKind;
-use crate::inference::exact::QueryEngineStats;
+use crate::inference::exact::{KernelMode, QueryEngineStats};
 use crate::obs::hist::BUCKETS;
 use crate::obs::{LatencyHistogram, Stage, StageSet};
 use std::io::{Read, Write};
@@ -49,8 +49,10 @@ use std::time::Duration;
 /// prefer the approx tier; bits 1–3: approx sample-budget shrink
 /// exponent — the brownout hints). Older peers still work — requests on
 /// a v1/v2 connection simply omit the trailing fields and decode with
-/// trace id 0 and no hints.
-pub const PROTOCOL_VERSION: u16 = 3;
+/// trace id 0 and no hints. **v4** appends the batched-calibration
+/// counters to the v2 metrics body (`u64` pass count + lane-occupancy
+/// histogram); stats on a v2/v3 connection omit them and decode as zero.
+pub const PROTOCOL_VERSION: u16 = 4;
 /// Oldest protocol version this build still accepts.
 pub const MIN_SUPPORTED_VERSION: u16 = 1;
 
@@ -378,13 +380,11 @@ fn intern_engine(label: &str) -> &'static str {
         .unwrap_or("unknown")
 }
 
-/// Same closed-set interning for the serving kernel label.
+/// Same closed-set interning for the serving kernel label — the set of
+/// valid spellings is exactly [`KernelMode`]'s, so a new mode added there
+/// cannot drift out of sync here.
 fn intern_kernel(label: &str) -> &'static str {
-    match label {
-        "fused" => "fused",
-        "classic" => "classic",
-        _ => "",
-    }
+    label.parse::<KernelMode>().map(KernelMode::as_str).unwrap_or("")
 }
 
 fn put_routed_reply(buf: &mut Vec<u8>, r: &RoutedReply) {
@@ -518,6 +518,8 @@ fn get_metrics(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
         s.warm_starts,
         s.cold_misses,
         s.kernel,
+        0,
+        LatencyHistogram::new(),
         latency,
         StageSet::default(),
     ))
@@ -563,17 +565,22 @@ fn get_hist(d: &mut Dec) -> Result<LatencyHistogram, ServingError> {
 
 /// v2 metrics body: scalars + latency histogram + per-stage histograms
 /// (count-prefixed in [`Stage::ALL`] order, so a later version can add
-/// stages without breaking v2 decoders).
-fn put_metrics_v2(buf: &mut Vec<u8>, m: &ServingMetrics) {
+/// stages without breaking v2 decoders). v4 connections append the
+/// batched-calibration pass count and lane-occupancy histogram.
+fn put_metrics_v2(buf: &mut Vec<u8>, m: &ServingMetrics, version: u16) {
     put_metrics_scalars(buf, m);
     put_hist(buf, &m.latency);
     buf.push(Stage::ALL.len() as u8);
     for &stage in &Stage::ALL {
         put_hist(buf, m.stages.get(stage));
     }
+    if version >= 4 {
+        put_u64(buf, m.batched_calibrations as u64);
+        put_hist(buf, &m.batch_occupancy);
+    }
 }
 
-fn get_metrics_v2(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
+fn get_metrics_v2(d: &mut Dec, version: u16) -> Result<ServingMetrics, ServingError> {
     let s = get_metrics_scalars(d)?;
     let latency = get_hist(d)?;
     let n_stages = d.u8("metrics stage count")? as usize;
@@ -586,6 +593,14 @@ fn get_metrics_v2(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
             *stages.get_mut(stage) = h;
         }
     }
+    let (batched_calibrations, batch_occupancy) = if version >= 4 {
+        (
+            d.u64("metrics batched calibrations")? as usize,
+            get_hist(d)?,
+        )
+    } else {
+        (0, LatencyHistogram::new())
+    };
     Ok(ServingMetrics::from_wire_parts(
         s.requests,
         s.batches,
@@ -595,6 +610,8 @@ fn get_metrics_v2(d: &mut Dec) -> Result<ServingMetrics, ServingError> {
         s.warm_starts,
         s.cold_misses,
         s.kernel,
+        batched_calibrations,
+        batch_occupancy,
         latency,
         stages,
     ))
@@ -674,7 +691,7 @@ pub fn encode_payload(version: u16, msg: &Message) -> Vec<u8> {
             put_u32(&mut buf, per_model.len() as u32);
             for (name, stats) in per_model {
                 put_str(&mut buf, name);
-                put_metrics_v2(&mut buf, &stats.serving);
+                put_metrics_v2(&mut buf, &stats.serving, version);
                 put_cache_stats(&mut buf, &stats.cache);
             }
         }
@@ -755,7 +772,7 @@ pub fn decode_payload(
             let mut per_model = Vec::with_capacity(n);
             for _ in 0..n {
                 let name = d.str("statsreplyv2 model name")?;
-                let serving = get_metrics_v2(&mut d)?;
+                let serving = get_metrics_v2(&mut d, version)?;
                 let cache = get_cache_stats(&mut d)?;
                 per_model.push((name, QueryModelStats { serving, cache }));
             }
@@ -968,6 +985,8 @@ mod tests {
         serving.warm_starts = 2;
         serving.cold_misses = 1;
         serving.kernel = "fused";
+        serving.record_batched_calibration(4);
+        serving.record_batched_calibration(16);
         serving.stages.record_us(crate::obs::Stage::Queue, 40);
         serving.stages.record_us(crate::obs::Stage::Kernel, 180);
         let cache = QueryEngineStats {
@@ -1034,6 +1053,30 @@ mod tests {
                 assert_eq!(stats.serving.latency.max(), 999);
                 assert!(stats.serving.stages.is_empty());
                 assert_eq!(stats.cache, cache);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// A StatsReplyV2 encoded on a v3 connection (no batched-calibration
+    /// tail) decodes on a v4 build with those fields zeroed — the frame
+    /// must still drain cleanly.
+    #[test]
+    fn v3_stats_decode_without_batched_fields() {
+        let (serving, cache) = sample_stats();
+        let msg = Message::StatsReplyV2 {
+            shard_id: 1,
+            per_model: vec![("m".into(), QueryModelStats { serving, cache })],
+        };
+        let frame = encode_frame(3, &msg);
+        let (version, back) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(version, 3);
+        match back {
+            Message::StatsReplyV2 { per_model, .. } => {
+                let s = &per_model[0].1.serving;
+                assert_eq!(s.requests, 5);
+                assert_eq!(s.batched_calibrations, 0);
+                assert!(s.batch_occupancy.is_empty());
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -1269,6 +1312,8 @@ mod tests {
         assert_eq!(intern_engine("ais-bn"), "ais-bn");
         assert_eq!(intern_engine("from-the-future"), "unknown");
         assert_eq!(intern_kernel("fused"), "fused");
+        assert_eq!(intern_kernel("classic"), "classic");
+        assert_eq!(intern_kernel("batched"), "batched");
         assert_eq!(intern_kernel(""), "");
         assert_eq!(intern_kernel("simd"), "");
     }

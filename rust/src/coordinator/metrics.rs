@@ -32,10 +32,19 @@ pub struct ServingMetrics {
     /// Calibration-cache misses paying a prior-based or fully cold
     /// calibration (same accounting as `warm_starts`).
     pub cold_misses: usize,
-    /// Message-kernel label of the serving engine (`"fused"`/`"classic"`)
-    /// — populated at read time by `QueryRouter::stats()` like the
-    /// warm-start counters; empty outside the router.
+    /// Message-kernel label of the serving engine
+    /// ([`KernelMode::as_str`](crate::potential::kernel::KernelMode::as_str):
+    /// `"fused"`/`"classic"`/`"batched"`) — populated at read time by
+    /// `QueryRouter::stats()` like the warm-start counters; empty outside
+    /// the router.
     pub kernel: &'static str,
+    /// Stacked batched calibration passes run by the flush handler (query
+    /// path with [`KernelMode::Batched`](crate::potential::kernel::KernelMode)
+    /// only; zero elsewhere).
+    pub batched_calibrations: usize,
+    /// Lanes per stacked batched calibration (cold evidence groups that
+    /// shared one pass) — one sample per entry in `batched_calibrations`.
+    pub batch_occupancy: LatencyHistogram,
     /// End-to-end (enqueue → reply) latency distribution.
     pub latency: LatencyHistogram,
     /// Per-stage latency distributions (queue/route/cache/calibration/
@@ -61,6 +70,12 @@ impl ServingMetrics {
         self.latency.record(us);
     }
 
+    /// Record one stacked batched calibration pass and its lane count.
+    pub fn record_batched_calibration(&mut self, lanes: usize) {
+        self.batched_calibrations += 1;
+        self.batch_occupancy.record(lanes as u64);
+    }
+
     /// Rebuild a snapshot from its wire-decoded parts (fabric use only).
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn from_wire_parts(
@@ -72,6 +87,8 @@ impl ServingMetrics {
         warm_starts: usize,
         cold_misses: usize,
         kernel: &'static str,
+        batched_calibrations: usize,
+        batch_occupancy: LatencyHistogram,
         latency: LatencyHistogram,
         stages: StageSet,
     ) -> ServingMetrics {
@@ -84,6 +101,8 @@ impl ServingMetrics {
             warm_starts,
             cold_misses,
             kernel,
+            batched_calibrations,
+            batch_occupancy,
             latency,
             stages,
         }
@@ -101,6 +120,8 @@ impl ServingMetrics {
         self.approx_requests += other.approx_requests;
         self.warm_starts += other.warm_starts;
         self.cold_misses += other.cold_misses;
+        self.batched_calibrations += other.batched_calibrations;
+        self.batch_occupancy.merge(&other.batch_occupancy);
         self.latency.merge(&other.latency);
         self.stages.merge(&other.stages);
         if self.kernel != other.kernel {
@@ -163,6 +184,13 @@ impl ServingMetrics {
         }
         if !self.kernel.is_empty() {
             s.push_str(&format!(" kernel={}", self.kernel));
+        }
+        if self.batched_calibrations > 0 {
+            s.push_str(&format!(
+                " batch[passes={} mean_lanes={:.1}]",
+                self.batched_calibrations,
+                self.batch_occupancy.mean(),
+            ));
         }
         s
     }
@@ -256,6 +284,24 @@ mod tests {
         c.kernel = "classic";
         a.merge_from(&c);
         assert_eq!(a.kernel, "");
+    }
+
+    #[test]
+    fn batched_calibration_counters_record_and_merge() {
+        let mut a = ServingMetrics::default();
+        assert!(!a.summary().contains("batch["));
+        a.record_batched_calibration(4);
+        a.record_batched_calibration(16);
+        assert_eq!(a.batched_calibrations, 2);
+        assert_eq!(a.batch_occupancy.count(), 2);
+        assert_eq!(a.batch_occupancy.min(), 4);
+        assert_eq!(a.batch_occupancy.max(), 16);
+        assert!(a.summary().contains("batch[passes=2 mean_lanes=10.0]"));
+        let mut b = ServingMetrics::default();
+        b.record_batched_calibration(8);
+        a.merge_from(&b);
+        assert_eq!(a.batched_calibrations, 3);
+        assert_eq!(a.batch_occupancy.count(), 3);
     }
 
     #[test]

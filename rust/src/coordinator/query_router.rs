@@ -29,7 +29,9 @@
 use crate::core::{Evidence, VarId};
 use crate::inference::approx::ApproxOptions;
 use crate::inference::engine::{ApproxEngine, EngineChoice, SamplerKind};
-use crate::inference::exact::{QueryEngine, QueryEngineConfig, QueryEngineStats};
+use crate::inference::exact::{
+    KernelMode, QueryEngine, QueryEngineConfig, QueryEngineStats,
+};
 use crate::inference::Posterior;
 use crate::network::BayesianNetwork;
 use crate::obs::{Collector, ObsConfig, Sample, SpanRecord, Stage};
@@ -632,6 +634,103 @@ impl ServiceCore {
             });
             if let Some(t0) = route_t0 {
                 self.metrics.lock().unwrap().stages.record(Stage::Route, t0.elapsed());
+            }
+
+            // Batched kernel: a multi-group flush runs its whole exact
+            // tier as ONE pool job — hit/warm lanes resolve individually
+            // while every cold evidence group calibrates in a single
+            // stacked pass (`QueryEngine::calibrated_batch`), instead of
+            // one pool job (and one sweep) per group. A single group
+            // gains nothing from stacking and keeps the per-group path
+            // below, which also carries the per-group cache/calibration
+            // stage timing the stacked pass cannot attribute.
+            if self.engine.kernel_mode() == KernelMode::Batched && exact_groups.len() >= 2
+            {
+                let groups = std::mem::take(&mut exact_groups);
+                let engine = Arc::clone(&self.engine);
+                let metrics = Arc::clone(&self.metrics);
+                let obs = self.obs.clone();
+                let model = Arc::clone(&self.model);
+                self.pool.execute(move || {
+                    let t0 = Instant::now();
+                    let evidences: Vec<Evidence> =
+                        groups.iter().map(|(ev, _)| ev.clone()).collect();
+                    let batch = engine.calibrated_batch(&evidences);
+                    let mut replies: Vec<(PendingQuery, QueryReply)> = Vec::new();
+                    for ((_, members), (calibrated, _)) in
+                        groups.into_iter().zip(&batch.lanes)
+                    {
+                        let mut shared_all: Option<Vec<Posterior>> = None;
+                        for p in members {
+                            let reply = match p.request.target {
+                                QueryTarget::Marginal(v) => {
+                                    QueryReply::Marginal(calibrated.posterior(v))
+                                }
+                                QueryTarget::All => QueryReply::All(
+                                    shared_all
+                                        .get_or_insert_with(|| calibrated.posterior_all())
+                                        .clone(),
+                                ),
+                                QueryTarget::EvidenceProbability => {
+                                    QueryReply::EvidenceProbability(
+                                        calibrated.evidence_probability(),
+                                    )
+                                }
+                            };
+                            replies.push((p, reply));
+                        }
+                    }
+                    let exec = t0.elapsed();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.record_batch(replies.len(), exec);
+                        m.exact_requests += replies.len();
+                        if batch.batched_lanes > 0 {
+                            m.record_batched_calibration(batch.batched_lanes);
+                        }
+                        for (p, _) in &replies {
+                            m.record_latency(p.enqueued.elapsed());
+                        }
+                        if obs.stages() {
+                            // Queue stage per member; the per-group
+                            // cache/calibration split is not observable on
+                            // the stacked path (one pass serves many
+                            // groups), so those stages go unsampled here.
+                            for (p, _) in &replies {
+                                m.stages.record_us(
+                                    Stage::Queue,
+                                    t0.saturating_duration_since(p.enqueued).as_micros()
+                                        as u64,
+                                );
+                            }
+                        }
+                    }
+                    if obs.traces() {
+                        if let Some(trace) = obs.trace.as_ref() {
+                            for (p, _) in &replies {
+                                trace.offer(&SpanRecord {
+                                    model: model.as_ref().to_string(),
+                                    tier: "exact",
+                                    trace_id: p.request.trace_id,
+                                    total_us: p.enqueued.elapsed().as_micros() as u64,
+                                    stages: vec![(
+                                        Stage::Queue,
+                                        t0.saturating_duration_since(p.enqueued)
+                                            .as_micros()
+                                            as u64,
+                                    )],
+                                });
+                            }
+                        }
+                    }
+                    for (p, reply) in replies {
+                        let _ = p.reply.send(Ok(RoutedReply {
+                            reply,
+                            tier: AnswerTier::Exact,
+                            engine: "exact",
+                        }));
+                    }
+                });
             }
             for (evidence, members) in exact_groups {
                 let engine = Arc::clone(&self.engine);
@@ -1254,6 +1353,26 @@ pub(crate) fn stats_to_samples(
             out.push(
                 Sample::gauge("fastpgm_kernel_info", l, 1.0)
                     .with_help("Message-kernel implementation in use"),
+            );
+        }
+        if m.batched_calibrations > 0 {
+            out.push(
+                Sample::counter(
+                    "fastpgm_batched_calibrations_total",
+                    labels(model),
+                    m.batched_calibrations as u64,
+                )
+                .with_help("Stacked batched calibration passes"),
+            );
+        }
+        if !m.batch_occupancy.is_empty() {
+            out.push(
+                Sample::hist(
+                    "fastpgm_batch_occupancy",
+                    labels(model),
+                    m.batch_occupancy.clone(),
+                )
+                .with_help("Cold lanes per stacked batched calibration"),
             );
         }
     }

@@ -185,6 +185,49 @@ impl CompiledTree {
         snapshot(&self.tree, engine, &self.scratch)
     }
 
+    /// Calibrate a whole flush group of evidence sets in one batched pass
+    /// ([`JtEngine::calibrate_batch`]): one blocked scan per message edge
+    /// over SIMD-width-padded stacked clique tables, amortizing the plan
+    /// drive and the schedule across every lane. Each returned snapshot is
+    /// bit-equal to what a per-evidence [`CompiledTree::calibrate`] on the
+    /// fused path would produce. A [`KernelMode::Classic`] tree falls back
+    /// to per-evidence classic calibration (the oracle has no batched
+    /// form); the pooled engine scratch — including the stacked batch
+    /// arena — is recycled, so repeated batches of similar width hit the
+    /// zero-allocation arena steady state.
+    pub fn calibrate_batch(&self, evidences: &[Evidence]) -> Vec<CalibratedTree> {
+        if evidences.is_empty() {
+            return Vec::new();
+        }
+        if self.kernel == KernelMode::Classic {
+            return evidences.iter().map(|e| self.calibrate(e)).collect();
+        }
+        let mut engine = self.tree.parallel_engine(self.mode, self.threads);
+        engine.kernel = self.kernel;
+        if let Some(s) = self.scratch.lock().unwrap().pop() {
+            engine.install_scratch(s);
+        }
+        let lanes = engine.calibrate_batch(evidences);
+        let scratch = engine.take_scratch();
+        {
+            let mut pooled = self.scratch.lock().unwrap();
+            if pooled.len() < MAX_POOLED_SCRATCH {
+                pooled.push(scratch);
+            }
+        }
+        lanes
+            .into_iter()
+            .zip(evidences)
+            .map(|(lane, ev)| CalibratedTree {
+                tree: Arc::clone(&self.tree),
+                potentials: lane.potentials,
+                sep_potentials: lane.sep_potentials,
+                evidence: ev.clone(),
+                evidence_prob: lane.evidence_prob,
+            })
+            .collect()
+    }
+
     /// Recycled scratch entries currently parked in the pool
     /// (diagnostics).
     pub fn pooled_scratch(&self) -> usize {

@@ -37,7 +37,9 @@ use crate::core::{Evidence, VarId};
 use crate::inference::{normalize_in_place, point_mass, InferenceEngine, Posterior};
 use crate::network::BayesianNetwork;
 use crate::parallel::{parallel_for_dynamic, parallel_map, SyncPtr};
-use crate::potential::kernel::{self, ArenaLayout, KernelMode, KernelPlans, TableArena};
+use crate::potential::kernel::{
+    self, ArenaLayout, BatchLayout, KernelMode, KernelPlans, TableArena,
+};
 use crate::potential::ops::IndexMode;
 use crate::potential::PotentialTable;
 use super::triangulation::{
@@ -255,6 +257,10 @@ impl JunctionTree {
             kernel_layout: ArenaLayout::default(),
             edge_digits: Vec::new(),
             intra_spans: 0,
+            batch_arena: TableArena::new(),
+            batch_layout: BatchLayout::default(),
+            batch_digits: Vec::new(),
+            batch_pad: true,
             calibrated_for: None,
             evidence_prob: 1.0,
         }
@@ -316,8 +322,32 @@ pub struct JtEngine<'t> {
     edge_digits: Vec<Vec<usize>>,
     /// Span count of intra-clique fused kernels (0 = sequential scans).
     intra_spans: usize,
+    /// Working buffers of the batched (stacked-lane) path: every clique,
+    /// sepset and per-edge msg/ratio buffer widened by the lane stride.
+    /// Separate from `arena` so scalar and batched calibrations can
+    /// interleave without invalidating each other's steady state.
+    batch_arena: TableArena,
+    batch_layout: BatchLayout,
+    /// Odometer scratch of the batched pass (sequential over messages, so
+    /// one buffer sized to the widest edge serves every message).
+    batch_digits: Vec<usize>,
+    /// Pad the batched lane stride to [`kernel::SIMD_WIDTH`] (`true`
+    /// outside of ablation benches).
+    pub batch_pad: bool,
     calibrated_for: Option<Evidence>,
     evidence_prob: f64,
+}
+
+/// One evidence lane's result from [`JtEngine::calibrate_batch`]: the raw
+/// material of a [`super::CalibratedTree`] snapshot, identical in meaning
+/// to [`JtEngine::into_calibrated`].
+pub struct BatchLane {
+    /// Calibrated, normalized clique potentials.
+    pub potentials: Vec<PotentialTable>,
+    /// Retained sepset messages on the same normalized scale.
+    pub sep_potentials: Vec<PotentialTable>,
+    /// P(evidence) of this lane.
+    pub evidence_prob: f64,
 }
 
 impl JtEngine<'_> {
@@ -480,6 +510,250 @@ impl JtEngine<'_> {
         self.finish_calibration(ev, base_prob);
     }
 
+    /// Calibrate a whole batch of evidence lanes in one blocked pass per
+    /// message edge over *stacked* clique tables (index-major SoA: entry
+    /// `t` of lane `b` at `t * lanes + b`, `lanes` padded to
+    /// [`kernel::SIMD_WIDTH`] unless [`JtEngine::batch_pad`] is off). One
+    /// [`kernel::ScanPlan`] drive per edge serves every lane; the per-lane
+    /// arithmetic sequence is identical to the scalar fused path, so each
+    /// lane's result is bit-equal to a per-evidence [`JtEngine::calibrate`].
+    /// The engine's scalar calibrated state is left untouched.
+    pub fn calibrate_batch(&mut self, evs: &[Evidence]) -> Vec<BatchLane> {
+        if evs.is_empty() {
+            return Vec::new();
+        }
+        let b = evs.len();
+        let lanes = if self.batch_pad { kernel::padded_lanes(b) } else { b };
+        self.ensure_batch_state(lanes);
+        let jt = self.jt;
+        let k = jt.cliques.len();
+
+        // Reset: broadcast every initial clique value across all lanes
+        // (padding lanes run the prior — finite, ignored at read-out) and
+        // every retained sepset to 1.
+        for c in 0..k {
+            let init = &jt.initial[c];
+            let buf = self
+                .batch_arena
+                .region_mut(self.batch_layout.clique[c], init.len() * lanes);
+            for (t, &v) in init.data().iter().enumerate() {
+                buf[t * lanes..(t + 1) * lanes].fill(v);
+            }
+        }
+        for c in 0..k {
+            if c == jt.root {
+                continue;
+            }
+            let sl = jt.plans.msg(c).sep_len * lanes;
+            self.batch_arena.region_mut(self.batch_layout.sep[c], sl).fill(1.0);
+        }
+
+        // Per-lane evidence reduction on the stacked buffers — the same
+        // periodic keep-run pattern as `reduce_observation`, restricted to
+        // one lane's column.
+        for (lane, ev) in evs.iter().enumerate() {
+            for (v, s) in ev.iter() {
+                let home = jt.home_clique[v];
+                let init = &jt.initial[home];
+                let Some(pos) = init.var_position(v) else { continue };
+                let card = init.cards()[pos];
+                let stride = init.strides()[pos];
+                let len = init.len();
+                let buf = self
+                    .batch_arena
+                    .region_mut(self.batch_layout.clique[home], len * lanes);
+                for t in 0..len {
+                    if s >= card || (t / stride) % card != s {
+                        buf[t * lanes + lane] = 0.0;
+                    }
+                }
+            }
+        }
+
+        // One blocked pass per message edge, same schedule as the scalar
+        // sweeps (collect bottom-up, distribute top-down).
+        {
+            let _sweep = crate::obs::span::KernelSweepTimer::start();
+            let n_levels = jt.levels.len();
+            for d in (0..n_levels.saturating_sub(1)).rev() {
+                for &p in &jt.plans.schedule.active_parents[d] {
+                    for &c in &jt.children[p] {
+                        self.batched_message(p, c, true);
+                    }
+                }
+            }
+            for d in 0..n_levels.saturating_sub(1) {
+                for &p in &jt.plans.schedule.active_parents[d] {
+                    for &c in &jt.children[p] {
+                        self.batched_message(p, c, false);
+                    }
+                }
+            }
+        }
+
+        // Finish, mirroring `finish_calibration` arithmetic per lane:
+        // P(e) off the root, normalize every clique by its own mass
+        // (multiply by the reciprocal, as `PotentialTable::normalize`
+        // does), rescale sepsets by the root mass's reciprocal.
+        let root_len = jt.initial[jt.root].len();
+        let root_buf = self.batch_arena.region(self.batch_layout.clique[jt.root], root_len * lanes);
+        let mut lane_prob = vec![0.0f64; b];
+        for (lane, p) in lane_prob.iter_mut().enumerate() {
+            let mut mass = 0.0;
+            for t in 0..root_len {
+                mass += root_buf[t * lanes + lane];
+            }
+            *p = mass;
+        }
+        for c in 0..k {
+            let len = jt.initial[c].len();
+            let buf = self.batch_arena.region_mut(self.batch_layout.clique[c], len * lanes);
+            for lane in 0..b {
+                let mut s = 0.0;
+                for t in 0..len {
+                    s += buf[t * lanes + lane];
+                }
+                if s > 0.0 {
+                    let inv = 1.0 / s;
+                    for t in 0..len {
+                        buf[t * lanes + lane] *= inv;
+                    }
+                }
+            }
+        }
+        for c in 0..k {
+            if c == jt.root {
+                continue;
+            }
+            let sl = jt.plans.msg(c).sep_len;
+            let buf = self.batch_arena.region_mut(self.batch_layout.sep[c], sl * lanes);
+            for (lane, &mass) in lane_prob.iter().enumerate() {
+                if mass > 0.0 {
+                    let inv = 1.0 / mass;
+                    for t in 0..sl {
+                        buf[t * lanes + lane] *= inv;
+                    }
+                }
+            }
+        }
+
+        // De-interleave each lane into snapshot-shaped tables.
+        (0..b)
+            .map(|lane| {
+                let potentials: Vec<PotentialTable> = (0..k)
+                    .map(|c| {
+                        let mut t = jt.initial[c].clone();
+                        let buf = self
+                            .batch_arena
+                            .region(self.batch_layout.clique[c], t.len() * lanes);
+                        for (i, x) in t.data_mut().iter_mut().enumerate() {
+                            *x = buf[i * lanes + lane];
+                        }
+                        t
+                    })
+                    .collect();
+                let sep_potentials: Vec<PotentialTable> = (0..k)
+                    .map(|c| {
+                        let scope = jt.separators[c].clone();
+                        let cards: Vec<usize> =
+                            scope.iter().map(|&v| jt.cards[v]).collect();
+                        let mut t = PotentialTable::unit(scope, cards);
+                        if c != jt.root {
+                            let buf = self
+                                .batch_arena
+                                .region(self.batch_layout.sep[c], t.len() * lanes);
+                            for (i, x) in t.data_mut().iter_mut().enumerate() {
+                                *x = buf[i * lanes + lane];
+                            }
+                        }
+                        t
+                    })
+                    .collect();
+                BatchLane { potentials, sep_potentials, evidence_prob: lane_prob[lane] }
+            })
+            .collect()
+    }
+
+    /// One blocked Hugin message over the stacked buffers: the three fused
+    /// kernel steps of [`JtEngine::fused_message`], each widened by the
+    /// lane stride. Region order (cliques < sepsets < msg/ratio) supports
+    /// the split borrows.
+    fn batched_message(&mut self, p: usize, c: usize, collect: bool) {
+        let jt = self.jt;
+        let plan = jt.plans.msg(c);
+        let lanes = self.batch_layout.lanes;
+        let sep_len = plan.sep_len * lanes;
+        let (src, dst) = if collect { (c, p) } else { (p, c) };
+        let (src_scan, dst_scan) = if collect {
+            (&plan.child, &plan.parent)
+        } else {
+            (&plan.parent, &plan.child)
+        };
+        let Self { batch_arena, batch_layout, batch_digits, .. } = self;
+        let slot = batch_layout.slots[c];
+
+        // 1. New stacked sepset message: one blocked scan of the source.
+        {
+            let (src_buf, msg) = batch_arena.two_regions_mut(
+                (batch_layout.clique[src], src_scan.len() * lanes),
+                (slot.msg, sep_len),
+            );
+            kernel::marginalize_batch_into(src_scan, src_buf, msg, lanes, batch_digits);
+        }
+
+        // 2. Hugin ratio against the retained stacked message + retention.
+        {
+            let (retained, msg, ratio) = batch_arena.three_regions_mut(
+                (batch_layout.sep[c], sep_len),
+                (slot.msg, sep_len),
+                (slot.ratio, sep_len),
+            );
+            kernel::ratio_and_store_batch(msg, retained, ratio);
+        }
+
+        // 3. Absorb the stacked ratio into the destination clique.
+        {
+            let (dst_buf, ratio) = batch_arena.two_regions_mut(
+                (batch_layout.clique[dst], dst_scan.len() * lanes),
+                (slot.ratio, sep_len),
+            );
+            kernel::absorb_batch_into(dst_scan, ratio, dst_buf, lanes, batch_digits);
+        }
+    }
+
+    /// Build the stacked-lane working set once per lane stride. The guard
+    /// keys on the stride, so repeated batches of the same (padded) width
+    /// find everything in place and [`TableArena::ensure`] is a no-op —
+    /// the counter-asserted zero-allocation steady state of the batched
+    /// path. (Lane padding also serves this: any batch size in one
+    /// [`kernel::SIMD_WIDTH`] bucket shares one layout.)
+    fn ensure_batch_state(&mut self, lanes: usize) {
+        let k = self.jt.cliques.len();
+        if self.batch_layout.clique.len() == k && self.batch_layout.lanes == lanes {
+            return;
+        }
+        let clique_lens: Vec<usize> = self.jt.initial.iter().map(|t| t.len()).collect();
+        self.batch_layout = BatchLayout::build(&self.jt.plans, &clique_lens, lanes);
+        self.batch_arena.ensure(self.batch_layout.total);
+        let max_arity = (0..k)
+            .filter(|&c| c != self.jt.root)
+            .map(|c| {
+                let plan = self.jt.plans.msg(c);
+                plan.child.arity().max(plan.parent.arity())
+            })
+            .max()
+            .unwrap_or(0);
+        if self.batch_digits.len() < max_arity {
+            self.batch_digits = vec![0usize; max_arity];
+        }
+    }
+
+    /// Backing allocations of the batched-path arena — the batched twin of
+    /// [`JtEngine::arena_allocations`].
+    pub fn batch_arena_allocations(&self) -> u64 {
+        self.batch_arena.allocations()
+    }
+
     /// Build the per-engine fused-kernel state (arena layout + backing
     /// buffer + per-edge odometer scratch) once. Subsequent calibrations
     /// find the layout in place and the [`TableArena::ensure`] call is a
@@ -521,9 +795,12 @@ impl JtEngine<'_> {
     }
 
     /// Are messages going through the fused kernel plans? (Naive decoding
-    /// only exists on the classic path, so `index_mode` overrides.)
+    /// only exists on the classic path, so `index_mode` overrides. A
+    /// [`KernelMode::Batched`] engine runs its *single*-evidence
+    /// calibrations — e.g. warm-start lanes — on the fused scalar path.)
     fn fused_active(&self) -> bool {
-        self.kernel == KernelMode::Fused && self.index_mode == IndexMode::Odometer
+        matches!(self.kernel, KernelMode::Fused | KernelMode::Batched)
+            && self.index_mode == IndexMode::Odometer
     }
 
     /// Backing allocations of the fused-kernel arena: 0 before the first
@@ -647,8 +924,11 @@ impl JtEngine<'_> {
         let digits = &mut edge_digits[c];
         let (src_pot, dst_pot) = clique_pair_mut(potentials, src, dst);
 
-        // 1. New sepset message: one scan of the source clique.
-        if spans > 0 && slot.scratch_len > 0 && src_scan.len() >= kernel::INTRA_MIN_LEN {
+        // 1. New sepset message: one scan of the source clique. Intra
+        // eligibility keys on the edge's microcalibrated threshold — the
+        // same value `ArenaLayout::build` used, so scratch presence and
+        // dispatch always agree.
+        if spans > 0 && slot.scratch_len > 0 && src_scan.len() >= plan.intra_min_len {
             let (msg, scratch) = arena
                 .two_regions_mut((slot.msg, sep_len), (slot.scratch, slot.scratch_len));
             kernel::marginalize_into_intra(
@@ -674,7 +954,7 @@ impl JtEngine<'_> {
 
         // 3. Absorb the ratio into the destination clique.
         let ratio = arena.region(slot.ratio, sep_len);
-        if spans > 0 && dst_scan.len() >= kernel::INTRA_MIN_LEN {
+        if spans > 0 && dst_scan.len() >= plan.intra_min_len {
             kernel::absorb_into_intra(dst_scan, ratio, dst_pot.data_mut(), spans, threads);
         } else {
             kernel::absorb_into(dst_scan, ratio, dst_pot.data_mut(), digits);
@@ -890,6 +1170,9 @@ pub(crate) struct EngineScratch {
     edge_digits: Vec<Vec<usize>>,
     intra_spans: usize,
     changed: Vec<bool>,
+    batch_arena: TableArena,
+    batch_layout: BatchLayout,
+    batch_digits: Vec<usize>,
 }
 
 impl EngineScratch {
@@ -897,6 +1180,11 @@ impl EngineScratch {
     /// counter must stop moving once the scratch is warm).
     pub(crate) fn arena_allocations(&self) -> u64 {
         self.arena.allocations()
+    }
+
+    /// Backing allocations of the pooled batched-path arena.
+    pub(crate) fn batch_arena_allocations(&self) -> u64 {
+        self.batch_arena.allocations()
     }
 }
 
@@ -913,6 +1201,9 @@ impl JtEngine<'_> {
         self.edge_digits = scratch.edge_digits;
         self.intra_spans = scratch.intra_spans;
         self.changed = scratch.changed;
+        self.batch_arena = scratch.batch_arena;
+        self.batch_layout = scratch.batch_layout;
+        self.batch_digits = scratch.batch_digits;
     }
 
     /// Extract the recyclable kernel state (the engine keeps the
@@ -924,6 +1215,9 @@ impl JtEngine<'_> {
             edge_digits: std::mem::take(&mut self.edge_digits),
             intra_spans: std::mem::take(&mut self.intra_spans),
             changed: std::mem::take(&mut self.changed),
+            batch_arena: std::mem::take(&mut self.batch_arena),
+            batch_layout: std::mem::take(&mut self.batch_layout),
+            batch_digits: std::mem::take(&mut self.batch_digits),
         }
     }
 }
@@ -1137,6 +1431,117 @@ mod tests {
             after_first,
             "steady-state calibration must not touch the allocator"
         );
+    }
+
+    #[test]
+    fn calibrate_batch_lanes_match_scalar_fused() {
+        let net = crate::network::synthetic::SyntheticSpec::alarm_like().generate(4);
+        let jt = JunctionTree::build(&net);
+        // Mixed lanes: empty evidence, singletons, a pair, a duplicate.
+        let evs = vec![
+            Evidence::new(),
+            Evidence::new().with(3, 0),
+            Evidence::new().with(3, 0).with(11, 1),
+            Evidence::new().with(7, 1),
+            Evidence::new().with(3, 0),
+        ];
+        let mut batch_eng = jt.engine();
+        batch_eng.kernel = KernelMode::Batched;
+        let lanes = batch_eng.calibrate_batch(&evs);
+        assert_eq!(lanes.len(), evs.len());
+        for (lane, ev) in lanes.iter().zip(&evs) {
+            let mut scalar = jt.engine();
+            scalar.calibrate(ev);
+            assert_eq!(
+                lane.evidence_prob,
+                scalar.evidence_probability(),
+                "P(e) must be bit-equal to the scalar fused path"
+            );
+            let (pots, seps, _) = scalar.into_calibrated();
+            for (a, b) in lane.potentials.iter().zip(&pots) {
+                assert_eq!(a.data(), b.data(), "clique potentials bit-equal");
+            }
+            for (a, b) in lane.sep_potentials.iter().zip(&seps) {
+                assert_eq!(a.data(), b.data(), "sepset potentials bit-equal");
+            }
+        }
+    }
+
+    #[test]
+    fn calibrate_batch_zero_probability_lane() {
+        // sprinkler: P(sprinkler=no, rain=no, wet=yes) = 0 exactly — the
+        // zero lane must come out all-zero with P(e) = 0 while its
+        // neighbours calibrate normally.
+        let net = repository::sprinkler();
+        let jt = JunctionTree::build(&net);
+        let zero = Evidence::new().with(1, 0).with(2, 0).with(3, 1);
+        let evs = vec![Evidence::new().with(0, 1), zero.clone(), Evidence::new()];
+        let mut eng = jt.engine();
+        eng.kernel = KernelMode::Batched;
+        let lanes = eng.calibrate_batch(&evs);
+        assert_eq!(lanes[1].evidence_prob, 0.0);
+        assert!(lanes[1].potentials.iter().all(|p| p.data().iter().all(|&x| x == 0.0)));
+        for (lane, ev) in lanes.iter().zip(&evs) {
+            let mut scalar = jt.engine();
+            scalar.calibrate(ev);
+            assert_eq!(lane.evidence_prob, scalar.evidence_probability());
+            let (pots, _, _) = scalar.into_calibrated();
+            for (a, b) in lane.potentials.iter().zip(&pots) {
+                assert_eq!(a.data(), b.data());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_arena_steady_state_zero_allocations() {
+        let net = repository::asia();
+        let jt = JunctionTree::build(&net);
+        let mut eng = jt.engine();
+        eng.kernel = KernelMode::Batched;
+        assert_eq!(eng.batch_arena_allocations(), 0, "batch arena is built lazily");
+        let evs: Vec<Evidence> =
+            (0..5).map(|i| Evidence::new().with(i % net.n_vars(), 0)).collect();
+        eng.calibrate_batch(&evs);
+        let after_first = eng.batch_arena_allocations();
+        assert!(after_first >= 1, "batched calibration must build its arena");
+        for _ in 0..3 {
+            // Any batch size within one SIMD_WIDTH padding bucket shares
+            // the stacked layout — steady state.
+            eng.calibrate_batch(&evs);
+            eng.calibrate_batch(&evs[..3]);
+        }
+        assert_eq!(
+            eng.batch_arena_allocations(),
+            after_first,
+            "steady-state batched calibration must not touch the allocator"
+        );
+        // Scalar path on the same engine keeps its own arena untouched by
+        // batching.
+        eng.calibrate(&evs[0]);
+        let scalar_allocs = eng.arena_allocations();
+        eng.calibrate_batch(&evs);
+        assert_eq!(eng.arena_allocations(), scalar_allocs);
+    }
+
+    #[test]
+    fn calibrate_batch_unpadded_matches_padded() {
+        let net = repository::asia();
+        let jt = JunctionTree::build(&net);
+        let evs: Vec<Evidence> =
+            (0..3).map(|i| Evidence::new().with(i, 0)).collect();
+        let mut padded = jt.engine();
+        padded.kernel = KernelMode::Batched;
+        let mut raw = jt.engine();
+        raw.kernel = KernelMode::Batched;
+        raw.batch_pad = false;
+        let a = padded.calibrate_batch(&evs);
+        let b = raw.calibrate_batch(&evs);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.evidence_prob, y.evidence_prob);
+            for (p, q) in x.potentials.iter().zip(&y.potentials) {
+                assert_eq!(p.data(), q.data(), "padding must not change results");
+            }
+        }
     }
 
     #[test]

@@ -13,11 +13,11 @@ pub mod triangulation;
 
 pub use compiled::{CalibratedTree, CompiledTree};
 pub use elimination::{EliminationOrderHeuristic, VariableElimination};
-pub use junction_tree::{CalibrationMode, JtEngine, JunctionTree};
+pub use junction_tree::{BatchLane, CalibrationMode, JtEngine, JunctionTree};
 pub use map_query::{most_probable_explanation, MapResult};
 pub use query_engine::{
-    CalibrationOutcome, CalibrationTiming, QueryEngine, QueryEngineConfig,
-    QueryEngineStats,
+    BatchCalibration, CalibrationOutcome, CalibrationTiming, QueryEngine,
+    QueryEngineConfig, QueryEngineStats,
 };
 // The kernel knob lives with the potential-table layer but is configured
 // through the exact-inference stack, so re-export it here for callers.

@@ -449,6 +449,19 @@ pub struct CalibrationTiming {
     pub outcome: CalibrationOutcome,
 }
 
+/// Result of [`QueryEngine::calibrated_batch`]: one snapshot + outcome per
+/// input lane (same order), plus how many cold lanes actually ran through
+/// the stacked batched pass (the router's `batch_occupancy` sample).
+pub struct BatchCalibration {
+    /// Per-lane snapshot and how it was obtained, aligned with the input
+    /// evidence slice.
+    pub lanes: Vec<(Arc<CalibratedTree>, CalibrationOutcome)>,
+    /// Cold lanes calibrated together in one stacked pass. `0` when every
+    /// lane was a hit/warm start, or when a lone cold lane took the
+    /// scalar fused fallback.
+    pub batched_lanes: usize,
+}
+
 /// One in-flight calibration: the leader publishes the snapshot and flips
 /// `done`; followers wait on the condvar instead of duplicating the work.
 #[derive(Default)]
@@ -702,6 +715,108 @@ impl QueryEngine {
         (value, timing)
     }
 
+    /// Calibrate a whole flush group in one call: lanes that hit the cache
+    /// (or repeat an earlier lane's signature) are served immediately,
+    /// warm-startable lanes extend their cached subset via
+    /// [`CompiledTree::recalibrate_from`], and the remaining cold lanes are
+    /// calibrated together in a single stacked pass
+    /// ([`CompiledTree::calibrate_batch`]). This is the
+    /// [`KernelMode::Batched`] serving entry the router's flush handler
+    /// uses; a lone cold lane falls back to the scalar fused path (padding
+    /// a one-lane batch to the SIMD width would waste most of the sweep).
+    ///
+    /// Unlike [`Self::calibrated`], this path registers no
+    /// leader/follower flights: a concurrent single-evidence miss on one of
+    /// the batch's signatures may duplicate that calibration, which is
+    /// correctness-safe (cache insertion keeps the newer snapshot) and rare
+    /// — flush groups already deduplicate the signatures the batcher saw.
+    pub fn calibrated_batch(&self, evidences: &[Evidence]) -> BatchCalibration {
+        enum Lane {
+            Ready(Arc<CalibratedTree>),
+            Warm(Arc<CalibratedTree>),
+            Cold(usize, CalibrationOutcome),
+        }
+        let mut cold: Vec<Evidence> = Vec::new();
+        let mut cold_ix: HashMap<&Evidence, usize> = HashMap::new();
+        let lanes: Vec<Lane> = {
+            let mut cache = self.cache.lock().unwrap();
+            evidences
+                .iter()
+                .map(|ev| {
+                    if let Some(value) = cache.lookup_touch(ev) {
+                        cache.hits += 1;
+                        return Lane::Ready(value);
+                    }
+                    if let Some(&i) = cold_ix.get(ev) {
+                        // A duplicate signature inside the group joins the
+                        // earlier lane's calibration — a hit, like a
+                        // flight follower.
+                        cache.hits += 1;
+                        return Lane::Cold(i, CalibrationOutcome::Joined);
+                    }
+                    if self.warm_start {
+                        if let Some(base) = cache.best_subset_base(ev) {
+                            cache.warm_starts += 1;
+                            return Lane::Warm(base);
+                        }
+                    }
+                    cache.cold_misses += 1;
+                    let i = cold.len();
+                    cold.push(ev.clone());
+                    cold_ix.insert(ev, i);
+                    Lane::Cold(i, CalibrationOutcome::Cold)
+                })
+                .collect()
+        };
+
+        // Cold lanes: one stacked pass for 2+, the scalar fused path for a
+        // lone straggler.
+        let batched_lanes = if cold.len() >= 2 { cold.len() } else { 0 };
+        let cold_snapshots: Vec<Arc<CalibratedTree>> = if cold.len() == 1 {
+            let ev = &cold[0];
+            let snapshot = if self.warm_start {
+                self.compiled.recalibrate_from(self.compiled.prior(), ev)
+            } else {
+                self.compiled.calibrate(ev)
+            };
+            vec![Arc::new(snapshot)]
+        } else {
+            self.compiled
+                .calibrate_batch(&cold)
+                .into_iter()
+                .map(Arc::new)
+                .collect()
+        };
+
+        let mut fresh: Vec<(&Evidence, Arc<CalibratedTree>)> = Vec::new();
+        let out: Vec<(Arc<CalibratedTree>, CalibrationOutcome)> = lanes
+            .into_iter()
+            .zip(evidences)
+            .map(|(lane, ev)| match lane {
+                Lane::Ready(v) => (v, CalibrationOutcome::Hit),
+                Lane::Warm(base) => {
+                    let v = Arc::new(self.compiled.recalibrate_from(&base, ev));
+                    fresh.push((ev, Arc::clone(&v)));
+                    (v, CalibrationOutcome::Warm)
+                }
+                Lane::Cold(i, o) => {
+                    let v = Arc::clone(&cold_snapshots[i]);
+                    if o == CalibrationOutcome::Cold {
+                        fresh.push((ev, Arc::clone(&v)));
+                    }
+                    (v, o)
+                }
+            })
+            .collect();
+        if !fresh.is_empty() {
+            let mut cache = self.cache.lock().unwrap();
+            for (ev, v) in fresh {
+                cache.insert(ev, v);
+            }
+        }
+        BatchCalibration { lanes: out, batched_lanes }
+    }
+
     /// Posterior P(var | evidence).
     pub fn posterior(&self, var: VarId, evidence: &Evidence) -> Posterior {
         self.calibrated(evidence).posterior(var)
@@ -943,6 +1058,58 @@ mod tests {
         assert_eq!(stats.cold_misses, 2, "{stats:?}");
         assert_eq!(stats.warm_starts, 0, "{stats:?}");
         assert_eq!(stats.entries, 1);
+    }
+
+    #[test]
+    fn batched_flush_group_matches_serial_paths() {
+        let net = repository::asia();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig::new().with_kernel(KernelMode::Batched),
+        );
+        // Prime a warm-start base.
+        let base = Evidence::new().with(0, 1);
+        engine.calibrated(&base);
+        let group = vec![
+            base.clone(),                          // hit
+            base.clone().with(4, 1),               // warm from base
+            Evidence::new().with(2, 1),            // cold (batched)
+            Evidence::new().with(5, 0).with(6, 1), // cold (batched)
+            Evidence::new().with(2, 1),            // duplicate → joined
+        ];
+        let batch = engine.calibrated_batch(&group);
+        assert_eq!(batch.batched_lanes, 2);
+        use CalibrationOutcome::*;
+        let outcomes: Vec<_> = batch.lanes.iter().map(|(_, o)| *o).collect();
+        assert_eq!(outcomes, vec![Hit, Warm, Cold, Cold, Joined]);
+        // Duplicate lanes share one snapshot.
+        assert!(Arc::ptr_eq(&batch.lanes[2].0, &batch.lanes[4].0));
+        // Every lane's posteriors match a fresh scalar engine.
+        let jt = JunctionTree::build(&net);
+        let mut fresh = jt.engine();
+        for (lane, (ev, (snap, _))) in group.iter().zip(&batch.lanes).enumerate() {
+            let expect = fresh.query_all(ev);
+            for (v, (g, e)) in snap.posterior_all().iter().zip(&expect).enumerate() {
+                assert_close_dist(g, e, 1e-12, &format!("lane {lane} var {v}"));
+            }
+        }
+        // Every signature is now cached: a rerun is all hits, no batch.
+        let rerun = engine.calibrated_batch(&group);
+        assert_eq!(rerun.batched_lanes, 0);
+        assert!(rerun.lanes.iter().all(|(_, o)| *o == Hit));
+    }
+
+    #[test]
+    fn batched_single_cold_falls_back_to_scalar() {
+        let net = repository::sprinkler();
+        let engine = QueryEngine::with_config(
+            &net,
+            QueryEngineConfig::new().with_kernel(KernelMode::Batched),
+        );
+        let group = vec![Evidence::new().with(0, 1)];
+        let batch = engine.calibrated_batch(&group);
+        assert_eq!(batch.batched_lanes, 0);
+        assert_eq!(batch.lanes[0].1, CalibrationOutcome::Cold);
     }
 
     #[test]

@@ -89,9 +89,11 @@ USAGE: fastpgm <subcommand> [flags]
            [--prefix-pool] draw evidence as nested chains (prefix-heavy
            traffic: cache misses warm-start from cached subsets)
            [--no-warm-start] force fully cold calibrations on every miss
-           [--kernel fused|classic] message-kernel implementation: fused
-           precompiled arena-backed plans (default) or the classic
-           three-op oracle path (ablation baseline)
+           [--kernel fused|classic|batched] message-kernel implementation:
+           fused precompiled arena-backed plans (default), the classic
+           three-op oracle path (ablation baseline), or batched stacked
+           flush-group calibration (SIMD-width-padded lanes; warm-start
+           lanes stay on the fused path)
            [--learn-from data.csv] learn a model from a CSV (structure +
            MLE + compile) and register it for serving directly — no
            .fpgm round-trip; [--learn-algo pc|hc] [--learn-alpha A]
@@ -697,8 +699,9 @@ fn cmd_serve_query(args: &Args) -> anyhow::Result<()> {
     let warm_start = !args.switch("no-warm-start");
     let prefix_pool = args.switch("prefix-pool");
     let kernel_spec = args.flag_or("kernel", "fused").to_string();
-    let kernel = KernelMode::parse(&kernel_spec)
-        .ok_or_else(|| anyhow::anyhow!("unknown --kernel {kernel_spec:?} (fused|classic)"))?;
+    let kernel = KernelMode::parse(&kernel_spec).ok_or_else(|| {
+        anyhow::anyhow!("unknown --kernel {kernel_spec:?} ({})", KernelMode::SPELLINGS)
+    })?;
     let engine_cfg = QueryEngineConfig::new()
         .with_cache_capacity(cache)
         .with_warm_start(warm_start)

@@ -38,6 +38,8 @@
 
 use crate::core::VarId;
 use crate::parallel::{parallel_for_dynamic, SyncPtr};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Which message-passing implementation a calibration engine uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -48,30 +50,126 @@ pub enum KernelMode {
     /// The original three-op path over generic table operations — the
     /// correctness oracle and ablation baseline.
     Classic,
+    /// Fused kernels over *stacked* clique tables: one blocked pass per
+    /// message edge calibrates a whole flush group of evidence lanes at
+    /// once (single-evidence calls fall back to the fused scalar path).
+    Batched,
 }
 
 impl KernelMode {
-    /// Parse a CLI spelling.
-    pub fn parse(s: &str) -> Option<KernelMode> {
-        match s {
-            "fused" => Some(KernelMode::Fused),
-            "classic" => Some(KernelMode::Classic),
-            _ => None,
-        }
-    }
+    /// Every mode, in CLI-spelling order.
+    pub const ALL: [KernelMode; 3] =
+        [KernelMode::Fused, KernelMode::Classic, KernelMode::Batched];
 
-    /// Stable label for metrics and bench JSON.
-    pub fn label(self) -> &'static str {
+    /// The accepted CLI spellings, `|`-joined — the one string usage text
+    /// and parse errors quote, so a new mode cannot drift out of sync.
+    pub const SPELLINGS: &'static str = "fused|classic|batched";
+
+    /// The canonical spelling: CLI flag value, metrics label, bench JSON
+    /// field, wire label — one string for all of them.
+    pub fn as_str(self) -> &'static str {
         match self {
             KernelMode::Fused => "fused",
             KernelMode::Classic => "classic",
+            KernelMode::Batched => "batched",
         }
+    }
+
+    /// Parse a CLI spelling (the `Option` twin of the [`std::str::FromStr`]
+    /// impl).
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        KernelMode::ALL.into_iter().find(|m| m.as_str() == s)
+    }
+
+    /// Stable label for metrics and bench JSON (alias of
+    /// [`KernelMode::as_str`]).
+    pub fn label(self) -> &'static str {
+        self.as_str()
     }
 }
 
-/// Tables at least this large are eligible for intra-clique (span-split)
-/// kernel execution — same threshold as the classic hybrid path.
+impl std::str::FromStr for KernelMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<KernelMode, String> {
+        KernelMode::parse(s)
+            .ok_or_else(|| format!("unknown kernel mode {s:?} ({})", KernelMode::SPELLINGS))
+    }
+}
+
+/// SIMD register width in `f64` lanes that batched kernels pad the lane
+/// dimension to (8 × f64 = one 512-bit register, two 256-bit AVX2
+/// registers, four 128-bit NEON registers — every per-entry lane loop is a
+/// whole number of vector operations with no scalar tail).
+pub const SIMD_WIDTH: usize = 8;
+
+/// Round a batch size up to a whole number of SIMD registers — the lane
+/// stride of the stacked (SoA) clique layout. Zero stays zero.
+pub fn padded_lanes(batch: usize) -> usize {
+    batch.div_ceil(SIMD_WIDTH) * SIMD_WIDTH
+}
+
+/// The legacy fixed intra-clique parallelism threshold, retained as the
+/// reference point of the per-edge microcalibrated thresholds: a machine
+/// scanning ~1 entry/ns reproduces it. See [`edge_intra_min_len`].
 pub const INTRA_MIN_LEN: usize = 1 << 12;
+
+/// Clamp range of the microcalibrated per-edge threshold — the derivation
+/// below never strays more than 8× either side of the legacy constant,
+/// whatever the timer says.
+const INTRA_LEN_CLAMP: (usize, usize) = (INTRA_MIN_LEN >> 3, INTRA_MIN_LEN << 3);
+
+/// Odometer bookkeeping per run, expressed in table-entry scan
+/// equivalents: short inner runs pay this much extra per entry, which
+/// lowers the length at which span-splitting pays off.
+const RUN_OVERHEAD_ENTRIES: f64 = 4.0;
+
+/// One-time microcalibration: sequential scan cost in ns per table entry,
+/// measured once per process over a cache-resident buffer (best of a few
+/// reps, so scheduler noise only ever *raises* the sample we discard).
+fn scan_ns_per_entry() -> f64 {
+    static CELL: OnceLock<f64> = OnceLock::new();
+    *CELL.get_or_init(|| {
+        const N: usize = 1 << 16;
+        let buf: Vec<f64> = (0..N).map(|i| (i % 97) as f64 * 0.125 + 0.5).collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let mut acc = 0.0f64;
+            for &x in &buf {
+                acc += x;
+            }
+            std::hint::black_box(acc);
+            best = best.min(t0.elapsed().as_nanos() as f64 / N as f64);
+        }
+        best.max(0.01)
+    })
+}
+
+/// Test-determinism override of every per-edge threshold:
+/// `FASTPGM_INTRA_MIN_LEN=<n>` pins the microcalibrated value.
+fn intra_len_override() -> Option<usize> {
+    static CELL: OnceLock<Option<usize>> = OnceLock::new();
+    *CELL.get_or_init(|| {
+        std::env::var("FASTPGM_INTRA_MIN_LEN").ok().and_then(|s| s.parse().ok())
+    })
+}
+
+/// Per-edge intra-clique parallelism threshold, derived from measured scan
+/// cost at plan-compile time: span-splitting a scan is worth a fixed
+/// dispatch budget (≈ [`INTRA_MIN_LEN`] ns), so the eligible table length
+/// is that budget divided by the edge's effective per-entry cost — which
+/// rises for short inner runs, where odometer bookkeeping amortizes badly.
+/// `FASTPGM_INTRA_MIN_LEN` overrides the measurement for deterministic
+/// tests.
+pub fn edge_intra_min_len(inner_run_len: usize) -> usize {
+    if let Some(v) = intra_len_override() {
+        return v;
+    }
+    let per_entry = scan_ns_per_entry()
+        * (1.0 + RUN_OVERHEAD_ENTRIES / inner_run_len.max(1) as f64);
+    ((INTRA_MIN_LEN as f64 / per_entry) as usize).clamp(INTRA_LEN_CLAMP.0, INTRA_LEN_CLAMP.1)
+}
 
 /// Precomputed mapping of one clique-table scan onto a separator scope.
 ///
@@ -392,6 +490,110 @@ pub fn absorb_into_intra(
     });
 }
 
+// ---------------------------------------------------------------------------
+// Batched (stacked-lane) kernel variants.
+//
+// The stacked layout is index-major SoA: a clique table of `len` entries
+// carrying `lanes` evidence lanes is a buffer of `len * lanes` f64s with
+// entry `t` of lane `b` at `t * lanes + b`. One ScanPlan drive then serves
+// every lane at once, and each scalar operation of the fused kernels
+// becomes a contiguous `lanes`-length loop — `lanes` is padded to
+// [`SIMD_WIDTH`], so those loops are whole vector registers and the
+// compiler autovectorizes them with no scalar tail. Per lane, the
+// arithmetic sequence is identical to the scalar fused kernels, so results
+// are bit-equal lane by lane.
+// ---------------------------------------------------------------------------
+
+/// Batched [`marginalize_into`]: `src` and `out` are stacked buffers of
+/// `plan.len() * lanes` and `plan.sep_len() * lanes` entries.
+pub fn marginalize_batch_into(
+    plan: &ScanPlan,
+    src: &[f64],
+    out: &mut [f64],
+    lanes: usize,
+    digits: &mut [usize],
+) {
+    debug_assert_eq!(src.len(), plan.len * lanes);
+    debug_assert_eq!(out.len(), plan.sep_len * lanes);
+    out.fill(0.0);
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    plan.for_runs(digits, |i, is| {
+        if step == 0 {
+            // Run collapses into one separator cell. Mirror the scalar
+            // kernel's order *per lane* — a run-local accumulator summed
+            // over the run, then added into the cell once — so every lane
+            // is bit-equal to `marginalize_into`. Lanes are processed in
+            // SIMD_WIDTH-sized register blocks with a fixed-size stack
+            // accumulator (no heap, fully unrollable).
+            let cell = &mut out[is * lanes..(is + 1) * lanes];
+            let mut l = 0;
+            while l < lanes {
+                let w = SIMD_WIDTH.min(lanes - l);
+                let mut acc = [0.0f64; SIMD_WIDTH];
+                for r in 0..inner {
+                    let row = &src[(i + r) * lanes + l..][..w];
+                    for (a, &x) in acc[..w].iter_mut().zip(row) {
+                        *a += x;
+                    }
+                }
+                for (o, &a) in cell[l..l + w].iter_mut().zip(&acc[..w]) {
+                    *o += a;
+                }
+                l += w;
+            }
+        } else {
+            // Strided case: the scalar kernel adds entry by entry, so the
+            // direct lane-vector accumulation is already bit-equal.
+            let mut is = is;
+            for r in 0..inner {
+                let row = &src[(i + r) * lanes..(i + r + 1) * lanes];
+                let acc = &mut out[is * lanes..(is + 1) * lanes];
+                for (a, &x) in acc.iter_mut().zip(row) {
+                    *a += x;
+                }
+                is += step;
+            }
+        }
+    });
+}
+
+/// Batched [`ratio_and_store`]: elementwise over stacked separator
+/// buffers, so no plan is needed — the scalar convention (`x/0 = 0`)
+/// applies per lane.
+pub fn ratio_and_store_batch(new_msg: &[f64], retained: &mut [f64], ratio: &mut [f64]) {
+    // Identical elementwise kernel; the stacked layout changes nothing.
+    ratio_and_store(new_msg, retained, ratio);
+}
+
+/// Batched [`absorb_into`]: multiply the stacked separator-scoped `ratio`
+/// into the stacked destination clique `dst`, lane by lane.
+pub fn absorb_batch_into(
+    plan: &ScanPlan,
+    ratio: &[f64],
+    dst: &mut [f64],
+    lanes: usize,
+    digits: &mut [usize],
+) {
+    debug_assert_eq!(dst.len(), plan.len * lanes);
+    debug_assert_eq!(ratio.len(), plan.sep_len * lanes);
+    let inner = plan.inner;
+    let step = plan.sep_step;
+    plan.for_runs(digits, |i, is| {
+        let mut is = is;
+        for r in 0..inner {
+            let row = &mut dst[(i + r) * lanes..(i + r + 1) * lanes];
+            let k = &ratio[is * lanes..(is + 1) * lanes];
+            for (x, &v) in row.iter_mut().zip(k) {
+                *x *= v;
+            }
+            if step != 0 {
+                is += step;
+            }
+        }
+    });
+}
+
 /// The plan pair of one tree edge: child↔separator and parent↔separator.
 /// Collect (child → parent) marginalizes with `child` and absorbs with
 /// `parent`; distribute reverses the roles. One separator serves both.
@@ -403,6 +605,11 @@ pub struct MsgPlan {
     pub child: ScanPlan,
     /// Scan of the parent clique mapped onto the separator.
     pub parent: ScanPlan,
+    /// This edge's intra-clique parallelism threshold (table length at
+    /// which span-splitting pays off), microcalibrated at plan-compile
+    /// time — see [`edge_intra_min_len`]. Stored on the plan so the arena
+    /// layout and the message dispatch always agree on eligibility.
+    pub intra_min_len: usize,
 }
 
 /// Topological message schedule: for each tree depth, the cliques that
@@ -452,7 +659,17 @@ impl KernelPlans {
                     ScanPlan::new(&cliques[c], &scope_cards(&cliques[c]), sep, &sep_cards);
                 let par =
                     ScanPlan::new(&cliques[p], &scope_cards(&cliques[p]), sep, &sep_cards);
-                Some(MsgPlan { sep_len: child.sep_len(), child, parent: par })
+                // Threshold from the dominant (larger) scan of the edge —
+                // the one whose cost decides whether splitting pays.
+                let big_inner =
+                    if child.len() >= par.len() { child.inner } else { par.inner };
+                let intra_min_len = edge_intra_min_len(big_inner);
+                Some(MsgPlan {
+                    sep_len: child.sep_len(),
+                    child,
+                    parent: par,
+                    intra_min_len,
+                })
             })
             .collect();
         let active_parents: Vec<Vec<usize>> = levels
@@ -504,7 +721,8 @@ pub struct ArenaLayout {
 impl ArenaLayout {
     /// Lay out the arena for `plans`. `intra_spans > 0` reserves
     /// span-private marginalization scratch for edges whose clique tables
-    /// reach [`INTRA_MIN_LEN`] (0 = sequential engine, no scratch).
+    /// reach the edge's microcalibrated [`MsgPlan::intra_min_len`]
+    /// threshold (0 = sequential engine, no scratch).
     pub fn build(plans: &KernelPlans, intra_spans: usize) -> ArenaLayout {
         let mut slots = vec![EdgeSlots::default(); plans.n_cliques()];
         let mut off = 0usize;
@@ -516,7 +734,7 @@ impl ArenaLayout {
             slot.ratio = off;
             off += plan.sep_len;
             let intra_eligible = intra_spans > 0
-                && plan.child.len().max(plan.parent.len()) >= INTRA_MIN_LEN;
+                && plan.child.len().max(plan.parent.len()) >= plan.intra_min_len;
             if intra_eligible {
                 slot.scratch = off;
                 slot.scratch_len = intra_spans * plan.sep_len;
@@ -524,6 +742,63 @@ impl ArenaLayout {
             }
         }
         ArenaLayout { slots, total: off }
+    }
+}
+
+/// Batch-strided arena layout for one stacked calibration pass: every
+/// buffer of the scalar fused path — clique tables, retained sepset
+/// messages, per-edge new-message and ratio scratch — widened by `lanes`
+/// and laid out in ascending, disjoint regions of one [`TableArena`].
+/// Region order (cliques, then sepsets, then per-edge msg+ratio) is what
+/// lets the three kernel steps borrow their operand pairs/triples via
+/// [`TableArena::two_regions_mut`] / [`TableArena::three_regions_mut`].
+#[derive(Clone, Debug, Default)]
+pub struct BatchLayout {
+    /// Stacked clique-table offset, per clique.
+    pub clique: Vec<usize>,
+    /// Stacked retained-sepset offset, per non-root clique (root entry
+    /// unused).
+    pub sep: Vec<usize>,
+    /// Per-edge msg/ratio offsets (scratch fields unused — the batched
+    /// pass is lane-parallel, not span-parallel).
+    pub slots: Vec<EdgeSlots>,
+    /// Lane stride the layout was built for.
+    pub lanes: usize,
+    /// Total arena length in `f64` entries.
+    pub total: usize,
+}
+
+impl BatchLayout {
+    /// Lay out the stacked working set: `clique_lens[c]` is clique `c`'s
+    /// table length (the root has no [`MsgPlan`], so lengths cannot come
+    /// from `plans` alone), `lanes` the — typically [`padded_lanes`]-padded
+    /// — lane stride.
+    pub fn build(plans: &KernelPlans, clique_lens: &[usize], lanes: usize) -> BatchLayout {
+        debug_assert_eq!(clique_lens.len(), plans.n_cliques());
+        let mut off = 0usize;
+        let clique: Vec<usize> = clique_lens
+            .iter()
+            .map(|&len| {
+                let o = off;
+                off += len * lanes;
+                o
+            })
+            .collect();
+        let mut sep = vec![0usize; plans.n_cliques()];
+        for (c, plan) in plans.msgs.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            sep[c] = off;
+            off += plan.sep_len * lanes;
+        }
+        let mut slots = vec![EdgeSlots::default(); plans.n_cliques()];
+        for (c, plan) in plans.msgs.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            slots[c].msg = off;
+            off += plan.sep_len * lanes;
+            slots[c].ratio = off;
+            off += plan.sep_len * lanes;
+        }
+        BatchLayout { clique, sep, slots, lanes, total: off }
     }
 }
 
@@ -580,6 +855,22 @@ impl TableArena {
         debug_assert!(a.0 + a.1 <= b.0, "arena regions overlap");
         let (lo, hi) = self.buf.split_at_mut(b.0);
         (&mut lo[a.0..a.0 + a.1], &mut hi[..b.1])
+    }
+
+    /// Three disjoint regions at once, in ascending offset order — the
+    /// batched ratio step borrows retained sepset, new message, and ratio
+    /// together.
+    pub fn three_regions_mut(
+        &mut self,
+        a: (usize, usize),
+        b: (usize, usize),
+        c: (usize, usize),
+    ) -> (&mut [f64], &mut [f64], &mut [f64]) {
+        debug_assert!(a.0 + a.1 <= b.0, "arena regions overlap");
+        debug_assert!(b.0 + b.1 <= c.0, "arena regions overlap");
+        let (lo, hi) = self.buf.split_at_mut(c.0);
+        let (lo, mid) = lo.split_at_mut(b.0);
+        (&mut lo[a.0..a.0 + a.1], &mut mid[..b.1], &mut hi[..c.1])
     }
 }
 
@@ -738,8 +1029,140 @@ mod tests {
     fn kernel_mode_parse_roundtrip() {
         assert_eq!(KernelMode::parse("fused"), Some(KernelMode::Fused));
         assert_eq!(KernelMode::parse("classic"), Some(KernelMode::Classic));
+        assert_eq!(KernelMode::parse("batched"), Some(KernelMode::Batched));
         assert_eq!(KernelMode::parse("nope"), None);
         assert_eq!(KernelMode::Fused.label(), "fused");
         assert_eq!(KernelMode::default(), KernelMode::Fused);
+        // FromStr and parse agree on every spelling, and the SPELLINGS
+        // string enumerates exactly ALL — the consolidation contract.
+        for m in KernelMode::ALL {
+            assert_eq!(m.as_str().parse::<KernelMode>(), Ok(m));
+            assert_eq!(m.label(), m.as_str());
+            assert!(KernelMode::SPELLINGS.split('|').any(|s| s == m.as_str()));
+        }
+        assert_eq!(KernelMode::SPELLINGS.split('|').count(), KernelMode::ALL.len());
+        assert!("simd".parse::<KernelMode>().is_err());
+    }
+
+    #[test]
+    fn padded_lanes_rounds_to_simd_width() {
+        assert_eq!(padded_lanes(0), 0);
+        assert_eq!(padded_lanes(1), SIMD_WIDTH);
+        assert_eq!(padded_lanes(SIMD_WIDTH), SIMD_WIDTH);
+        assert_eq!(padded_lanes(SIMD_WIDTH + 1), 2 * SIMD_WIDTH);
+        assert_eq!(padded_lanes(33), 40);
+    }
+
+    #[test]
+    fn edge_intra_threshold_env_override_and_clamp() {
+        // Without the env override the derived threshold stays inside the
+        // clamp band whatever the machine's timer says.
+        if intra_len_override().is_none() {
+            let t = edge_intra_min_len(4);
+            assert!((INTRA_LEN_CLAMP.0..=INTRA_LEN_CLAMP.1).contains(&t));
+            // Shorter inner runs cost more per entry → threshold can only
+            // drop (or hit the same clamp edge).
+            assert!(edge_intra_min_len(1) <= edge_intra_min_len(1 << 20));
+        } else {
+            // Override pinned (e.g. CI sets FASTPGM_INTRA_MIN_LEN):
+            // every edge sees the pinned value.
+            assert_eq!(edge_intra_min_len(1), edge_intra_min_len(1 << 20));
+        }
+    }
+
+    /// Stack B randomized lane copies of a table (index-major SoA).
+    fn stack(tables: &[PotentialTable], lanes: usize) -> Vec<f64> {
+        let len = tables[0].len();
+        let mut buf = vec![0.0; len * lanes];
+        for (b, t) in tables.iter().enumerate() {
+            for (i, &x) in t.data().iter().enumerate() {
+                buf[i * lanes + b] = x;
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn batched_kernels_match_scalar_per_lane() {
+        let b = 5;
+        let lanes = padded_lanes(b);
+        let cliques: Vec<PotentialTable> =
+            (0..b as u64).map(|s| table(vec![0, 2, 5, 6], vec![2, 3, 2, 4], 10 + s)).collect();
+        for keep in [vec![], vec![2, 6], vec![6], vec![0, 2, 5, 6]] {
+            let sep = cliques[0].marginalize_keep(&keep, IndexMode::Odometer);
+            let plan = plan_for(&cliques[0], &sep);
+            let src = stack(&cliques, lanes);
+            let mut out = vec![0.0; sep.len() * lanes];
+            let mut digits = vec![0usize; plan.arity()];
+            marginalize_batch_into(&plan, &src, &mut out, lanes, &mut digits);
+            for (lane, t) in cliques.iter().enumerate() {
+                let mut scalar = vec![0.0; sep.len()];
+                marginalize_into(&plan, t.data(), &mut scalar, &mut digits);
+                for (i, &e) in scalar.iter().enumerate() {
+                    assert_eq!(out[i * lanes + lane], e, "keep {keep:?} lane {lane}");
+                }
+            }
+            // Absorb: multiply a stacked ratio back into the cliques.
+            let ratios: Vec<PotentialTable> =
+                (0..b as u64).map(|s| table(sep.vars().to_vec(), sep.cards().to_vec(), 30 + s)).collect();
+            let ratio = stack(&ratios, lanes);
+            let mut dst = stack(&cliques, lanes);
+            absorb_batch_into(&plan, &ratio, &mut dst, lanes, &mut digits);
+            for lane in 0..b {
+                let mut scalar = cliques[lane].data().to_vec();
+                absorb_into(&plan, ratios[lane].data(), &mut scalar, &mut digits);
+                for (i, &e) in scalar.iter().enumerate() {
+                    assert_eq!(dst[i * lanes + lane], e, "keep {keep:?} lane {lane}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_layout_regions_disjoint_and_steady_state() {
+        let cliques = vec![vec![0, 1], vec![1, 2], vec![2, 3]];
+        let separators = vec![vec![], vec![1], vec![2]];
+        let parent = vec![0, 0, 1];
+        let children = vec![vec![1], vec![2], vec![]];
+        let levels = vec![vec![0], vec![1], vec![2]];
+        let cards = vec![2usize, 3, 2, 2];
+        let plans =
+            KernelPlans::build(&cliques, &separators, &parent, &children, &levels, 0, &cards);
+        let clique_lens = vec![2 * 3, 3 * 2, 2 * 2];
+        let lanes = padded_lanes(3);
+        let layout = BatchLayout::build(&plans, &clique_lens, lanes);
+        // Cliques, then seps, then msg+ratio — all ascending and disjoint.
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        for (c, &off) in layout.clique.iter().enumerate() {
+            spans.push((off, clique_lens[c] * lanes));
+        }
+        for c in [1usize, 2] {
+            let sl = plans.msg(c).sep_len * lanes;
+            spans.push((layout.sep[c], sl));
+            spans.push((layout.slots[c].msg, sl));
+            spans.push((layout.slots[c].ratio, sl));
+        }
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "batch regions overlap: {spans:?}");
+        }
+        assert_eq!(layout.total, spans.last().map(|&(o, l)| o + l).unwrap());
+        let mut arena = TableArena::new();
+        arena.ensure(layout.total);
+        arena.ensure(layout.total);
+        assert_eq!(arena.allocations(), 1, "steady state must not allocate");
+        // Three-way borrow of sep/msg/ratio works on the batched triple.
+        let sl = plans.msg(1).sep_len * lanes;
+        let (a, b, c) = arena.three_regions_mut(
+            (layout.sep[1], sl),
+            (layout.slots[1].msg, sl),
+            (layout.slots[1].ratio, sl),
+        );
+        a[0] = 1.0;
+        b[0] = 2.0;
+        c[0] = 3.0;
+        assert_eq!(arena.region(layout.sep[1], 1)[0], 1.0);
+        assert_eq!(arena.region(layout.slots[1].msg, 1)[0], 2.0);
+        assert_eq!(arena.region(layout.slots[1].ratio, 1)[0], 3.0);
     }
 }

@@ -263,12 +263,12 @@ fn no_warm_start_router_serves_identically() {
 
 #[test]
 fn served_kernel_modes_agree_and_report_label() {
-    // A fused-kernel router and a classic-kernel router must serve
-    // identical answers over a mixed hit/warm/cold trace, and the stats
-    // row must carry the kernel label.
+    // Routers on every kernel mode must serve identical answers over a
+    // mixed hit/warm/cold trace, and each stats row must carry its
+    // kernel label.
     let net = repository::asia();
     let mut routers = Vec::new();
-    for kernel in [KernelMode::Fused, KernelMode::Classic] {
+    for kernel in KernelMode::ALL {
         let mut r = QueryRouter::new(2);
         r.register(
             "asia",
@@ -290,21 +290,93 @@ fn served_kernel_modes_agree_and_report_label() {
             .collect();
         let var = rng.below(net.n_vars());
         let a = routers[0].posterior("asia", var, ev.clone()).unwrap();
-        let b = routers[1].posterior("asia", var, ev.clone()).unwrap();
-        for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() <= 1e-12, "var {var} ev {ev:?}");
+        for other in &routers[1..] {
+            let b = other.posterior("asia", var, ev.clone()).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() <= 1e-12, "var {var} ev {ev:?}");
+            }
         }
     }
-    let fused_stats = routers[0].stats();
-    let classic_stats = routers[1].stats();
-    assert_eq!(fused_stats[0].1.serving.kernel, "fused");
-    assert_eq!(classic_stats[0].1.serving.kernel, "classic");
-    assert!(fused_stats[0].1.serving.summary().contains("kernel=fused"));
-    // Identical traffic → identical cache behaviour on both kernels.
-    assert_eq!(
-        fused_stats[0].1.cache.misses(),
-        classic_stats[0].1.cache.misses()
+    let all_stats: Vec<_> = routers.iter().map(|r| r.stats()).collect();
+    for (stats, kernel) in all_stats.iter().zip(KernelMode::ALL) {
+        assert_eq!(stats[0].1.serving.kernel, kernel.as_str());
+        assert!(stats[0]
+            .1
+            .serving
+            .summary()
+            .contains(&format!("kernel={}", kernel.as_str())));
+        // Identical traffic → identical cache behaviour on every kernel.
+        assert_eq!(
+            stats[0].1.cache.misses(),
+            all_stats[0][0].1.cache.misses()
+        );
+    }
+}
+
+#[test]
+fn batched_kernel_mixed_flush_groups_match_fresh_engine() {
+    // A Batched-kernel router over a mixed warm/cold burst: one signature
+    // is primed (cache-hit lane), a superset of it warm-starts, and the
+    // rest are cold and calibrate in ONE stacked pass. Every answer must
+    // match a fresh scalar engine to 1e-12, and the stats must record the
+    // stacked pass and its lane occupancy.
+    let net = repository::asia();
+    let mut r = QueryRouter::new(2);
+    r.register(
+        "asia",
+        &net,
+        QueryEngineConfig::new()
+            .with_cache_capacity(32)
+            .with_kernel(KernelMode::Batched),
+        BatcherConfig::new()
+            .with_max_batch(64)
+            .with_max_wait(Duration::from_millis(100)),
     );
+    let router = Arc::new(r);
+    // Prime one signature so the burst carries a cached lane.
+    let primed = Evidence::new().with(0, 1);
+    router.posterior("asia", 3, primed.clone()).unwrap();
+    // Burst inside one flush window: the primed signature, a superset
+    // (warm-start lane), and six distinct cold signatures.
+    let mut group = vec![primed.clone(), primed.clone().with(4, 1)];
+    for v in 1..7 {
+        group.push(Evidence::new().with(v, 0).with(7, 1));
+    }
+    let receivers: Vec<_> = group
+        .iter()
+        .map(|ev| {
+            router.query_async("asia", QueryRequest::all(ev.clone())).unwrap()
+        })
+        .collect();
+    let jt = JunctionTree::build(&net);
+    let mut fresh = jt.engine();
+    for (ev, rx) in group.iter().zip(receivers) {
+        let reply = rx.recv().unwrap().expect("batched query failed");
+        let QueryReply::All(got) = reply.reply else {
+            panic!("unexpected reply shape")
+        };
+        let expect = fresh.query_all(ev);
+        for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+            for (a, b) in g.iter().zip(e) {
+                assert!((a - b).abs() <= 1e-12, "var {v} ev {ev:?}");
+            }
+        }
+    }
+    let stats = router.stats();
+    let m = &stats[0].1.serving;
+    assert_eq!(m.kernel, "batched");
+    assert!(
+        m.batched_calibrations >= 1,
+        "no stacked pass recorded: {}",
+        m.summary()
+    );
+    assert!(m.batch_occupancy.count() as usize >= 1);
+    assert!(
+        m.batch_occupancy.max() >= 2,
+        "stacked pass should cover >= 2 cold lanes: {}",
+        m.summary()
+    );
+    assert!(m.summary().contains("batch[passes="));
 }
 
 #[test]

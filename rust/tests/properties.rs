@@ -529,6 +529,107 @@ fn prop_warm_fused_equals_cold_classic_on_chains() {
     });
 }
 
+/// Batched stacked-lane calibration must match BOTH per-evidence fused
+/// and classic calibration to 1e-12 at every batch width — below, at,
+/// and across the SIMD padding boundary (B ∈ {1, 2, 7, 33}).
+#[test]
+fn prop_batched_equals_fused_and_classic() {
+    property("batched B lanes == fused == classic", 153, 6, |rng| {
+        let net = gen_network(rng, 8);
+        let batched = CompiledTree::compile(&net).with_kernel(KernelMode::Batched);
+        let fused = CompiledTree::compile(&net);
+        let classic = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        for b in [1usize, 2, 7, 33] {
+            let evs: Vec<Evidence> =
+                (0..b).map(|_| gen_evidence(rng, &net, rng.below(4))).collect();
+            let lanes = batched.calibrate_batch(&evs);
+            assert_eq!(lanes.len(), b);
+            for (lane, ev) in lanes.iter().zip(&evs) {
+                let f = fused.calibrate(ev);
+                let c = classic.calibrate(ev);
+                assert!(
+                    (lane.evidence_probability() - f.evidence_probability()).abs()
+                        <= 1e-12,
+                    "B={b} P(e): batched {} vs fused {}",
+                    lane.evidence_probability(),
+                    f.evidence_probability()
+                );
+                assert!(
+                    (lane.evidence_probability() - c.evidence_probability()).abs()
+                        <= 1e-12
+                );
+                if lane.evidence_probability() <= 0.0 {
+                    continue; // dead lanes carry no posteriors to compare
+                }
+                for (v, ((l, fp), cp)) in lane
+                    .posterior_all()
+                    .iter()
+                    .zip(&f.posterior_all())
+                    .zip(&c.posterior_all())
+                    .enumerate()
+                {
+                    for ((a, x), y) in l.iter().zip(fp).zip(cp) {
+                        assert!((a - x).abs() <= 1e-12, "B={b} var {v} vs fused");
+                        assert!((a - y).abs() <= 1e-12, "B={b} var {v} vs classic");
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// A zero-probability lane inside a batch must not contaminate its
+/// neighbours: the dead lane reports P(e) = 0 on all three paths, and
+/// every other lane still matches per-evidence fused and classic
+/// calibration to 1e-12. (Random CPTs are strictly positive, so the
+/// impossible lane comes from the sprinkler net's deterministic zero.)
+#[test]
+fn prop_batched_zero_probability_lane_is_isolated() {
+    property("batched zero-prob lane isolated", 154, 20, |rng| {
+        let net = fastpgm::network::repository::sprinkler();
+        let batched = CompiledTree::compile(&net).with_kernel(KernelMode::Batched);
+        let fused = CompiledTree::compile(&net);
+        let classic = CompiledTree::compile(&net).with_kernel(KernelMode::Classic);
+        // wet=1 with sprinkler=0 and rain=0 is impossible.
+        let dead = Evidence::new().with(1, 0).with(2, 0).with(3, 1);
+        let mut evs: Vec<Evidence> = (0..1 + rng.below(6))
+            .map(|_| gen_evidence(rng, &net, rng.below(3)))
+            .collect();
+        let slot = rng.below(evs.len() + 1);
+        evs.insert(slot, dead.clone());
+        let lanes = batched.calibrate_batch(&evs);
+        for (lane, ev) in lanes.iter().zip(&evs) {
+            let f = fused.calibrate(ev);
+            let c = classic.calibrate(ev);
+            assert!(
+                (lane.evidence_probability() - f.evidence_probability()).abs()
+                    <= 1e-12
+            );
+            assert!(
+                (lane.evidence_probability() - c.evidence_probability()).abs()
+                    <= 1e-12
+            );
+            if ev == &dead {
+                assert_eq!(lane.evidence_probability(), 0.0);
+            }
+            if lane.evidence_probability() <= 0.0 {
+                continue;
+            }
+            for ((l, fp), cp) in lane
+                .posterior_all()
+                .iter()
+                .zip(&f.posterior_all())
+                .zip(&c.posterior_all())
+            {
+                for ((a, x), y) in l.iter().zip(fp).zip(cp) {
+                    assert!((a - x).abs() <= 1e-12);
+                    assert!((a - y).abs() <= 1e-12);
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_evidence_api() {
     property("evidence set/get/remove", 111, 100, |rng| {
